@@ -1,0 +1,162 @@
+//! Quickstart: the minimal DSEE loop **through the AOT artifacts**.
+//!
+//! Loads `artifacts/` (built once by `make artifacts`), constructs a
+//! pre-trained SimBert at the artifact's shape, attaches the DSEE
+//! parametrization (U, V, S₂ on every attention projection), then drives
+//! the *fused PJRT train-step executable* — forward + backward + AdamW
+//! on the trainable group, all inside one XLA module — for 200 steps on
+//! the synthetic SST-2 task, logging the loss curve and evaluating with
+//! the AOT forward executable. Python never runs here.
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use dsee::config::{DseeCfg, ModelCfg, TrainCfg};
+use dsee::data::batch::Batcher;
+use dsee::data::glue::{make_dataset, GlueTask, Label};
+use dsee::dsee::attach_dsee;
+use dsee::runtime::bridge::{export_params, split_param_specs};
+use dsee::runtime::{default_artifact_dir, Input, Runtime};
+use dsee::tensor::Tensor;
+use dsee::train::pretrain::cached_encoder;
+use dsee::train::trainer::Trainer;
+use dsee::util::Rng;
+
+fn main() -> anyhow::Result<()> {
+    dsee::util::logging::init();
+    let dir = default_artifact_dir();
+    println!("loading artifacts from {} …", dir.display());
+    let rt = Runtime::load_dir(&dir)?;
+    println!("artifacts: {:?}", rt.names());
+
+    // ---- model at the artifact's architecture --------------------------
+    let step_art = rt.artifact("encoder_train_step")?;
+    let fwd_art = rt.artifact("encoder_fwd")?;
+    let arch = ModelCfg::sim_bert_s(); // matches aot.py's Cfg()
+    let mut model = cached_encoder(&arch, 0xBA5E);
+    let mut rng = Rng::new(7);
+    Trainer::set_task_head(&mut model, false, 2, &mut rng);
+    let dsee_cfg = DseeCfg {
+        rank: 8,
+        n_sparse: 64,
+        ..DseeCfg::default()
+    };
+    let trainable_count = attach_dsee(&mut model, &dsee_cfg, &mut rng);
+    println!(
+        "DSEE attached: {} trainable / {} total parameters",
+        dsee::train::fmt_params(trainable_count),
+        dsee::train::fmt_params(model.count_total()),
+    );
+
+    // ---- split the artifact signature ----------------------------------
+    let (param_specs, _rest) = split_param_specs(&step_art.inputs);
+    let trainable_start = param_specs
+        .iter()
+        .position(|s| s.name.ends_with(".u"))
+        .expect("first trainable");
+    // Manifest order: frozen block then trainable block; find the split
+    // by locating the first trainable name.
+    let frozen_specs = &param_specs[..trainable_start];
+    let trainable_specs = &param_specs[trainable_start..];
+    let frozen: Vec<Tensor> = export_params(&model, frozen_specs)?;
+    let mut trainable: Vec<Tensor> = export_params(&model, trainable_specs)?;
+    let mut m_state: Vec<Tensor> = trainable.iter().map(|t| Tensor::zeros(&t.shape)).collect();
+    let mut v_state: Vec<Tensor> = trainable.iter().map(|t| Tensor::zeros(&t.shape)).collect();
+
+    // ---- data -----------------------------------------------------------
+    let train = make_dataset(GlueTask::Sst2, 512, 11);
+    let eval = make_dataset(GlueTask::Sst2, 256, 12);
+    let cfg = TrainCfg::default();
+    let (batch_sz, seq) = (16usize, arch.max_seq);
+    let ids_shape = [batch_sz, seq];
+    let labels_shape = [batch_sz];
+
+    // ---- AOT training loop ----------------------------------------------
+    // §Perf: the frozen group (the bulk of the parameter bytes) is
+    // uploaded to the device ONCE; each step only uploads the trainable
+    // group + optimizer state + the data batch (see EXPERIMENTS.md §Perf
+    // for the literal-path vs buffer-path comparison).
+    let frozen_bufs: Vec<xla::PjRtBuffer> = frozen
+        .iter()
+        .map(|t| rt.upload_f32(t))
+        .collect::<anyhow::Result<_>>()?;
+    println!("\nstep  loss        (fused PJRT train-step, resident frozen weights)");
+    let t_train = std::time::Instant::now();
+    let mut step_i: i32 = 0;
+    let mut losses = Vec::new();
+    'outer: for _epoch in 0..20 {
+        let mut shuffle = Rng::new(100 + step_i as u64);
+        for b in Batcher::new(&train, batch_sz, Some(&mut shuffle)) {
+            let ids_i32: Vec<i32> = b.ids.iter().map(|&x| x as i32).collect();
+            let labels: Vec<i32> = b.class_targets.iter().map(|&c| c as i32).collect();
+            let mut step_bufs: Vec<xla::PjRtBuffer> =
+                Vec::with_capacity(3 * trainable.len() + 3);
+            for t in trainable.iter().chain(&m_state).chain(&v_state) {
+                step_bufs.push(rt.upload_f32(t)?);
+            }
+            step_bufs.push(rt.upload_i32_scalar(step_i)?);
+            step_bufs.push(rt.upload_i32(&ids_i32, &ids_shape)?);
+            step_bufs.push(rt.upload_i32(&labels, &labels_shape)?);
+            let args: Vec<&xla::PjRtBuffer> =
+                frozen_bufs.iter().chain(step_bufs.iter()).collect();
+
+            let outputs = rt.execute_buffers("encoder_train_step", &args)?;
+            let n_t = trainable.len();
+            let mut it = outputs.into_iter();
+            trainable = (0..n_t).map(|_| it.next().unwrap().into_tensor()).collect();
+            m_state = (0..n_t).map(|_| it.next().unwrap().into_tensor()).collect();
+            v_state = (0..n_t).map(|_| it.next().unwrap().into_tensor()).collect();
+            let loss = it.next().unwrap().into_tensor().data[0];
+            losses.push(loss);
+            if step_i % 20 == 0 {
+                println!("{step_i:>4}  {loss:.4}");
+            }
+            step_i += 1;
+            if step_i >= 200 {
+                break 'outer;
+            }
+        }
+    }
+    let steps_per_s = losses.len() as f64 / t_train.elapsed().as_secs_f64();
+    println!("train-step throughput: {steps_per_s:.1} steps/s (batch {batch_sz})");
+    println!(
+        "loss: {:.4} → {:.4} over {} steps",
+        losses.first().unwrap(),
+        losses.last().unwrap(),
+        losses.len()
+    );
+
+    // ---- AOT evaluation ---------------------------------------------------
+    let (fwd_param_specs, _) = split_param_specs(&fwd_art.inputs);
+    let fwd_frozen = &fwd_param_specs[..trainable_start];
+    let _check = export_params(&model, fwd_frozen)?; // same frozen block
+    let mut correct = 0usize;
+    let mut total = 0usize;
+    for b in Batcher::new(&eval, batch_sz, None) {
+        let ids_i32: Vec<i32> = b.ids.iter().map(|&x| x as i32).collect();
+        let mut inputs: Vec<Input<'_>> = Vec::new();
+        for t in &frozen {
+            inputs.push(Input::F32(t));
+        }
+        for t in &trainable {
+            inputs.push(Input::F32(t));
+        }
+        inputs.push(Input::I32(&ids_i32, &ids_shape));
+        let out = rt.execute("encoder_fwd", &inputs)?;
+        let logits = out[0].as_tensor();
+        for (i, pred) in logits.argmax_rows().into_iter().enumerate() {
+            let want = match eval.examples[total + i].label {
+                Label::Class(c) => c,
+                _ => unreachable!(),
+            };
+            if pred == want {
+                correct += 1;
+            }
+        }
+        total += batch_sz;
+    }
+    let acc = correct as f64 / total as f64;
+    println!("\nAOT eval accuracy on sst2-sim: {acc:.4} ({correct}/{total})");
+    anyhow::ensure!(acc > 0.7, "quickstart accuracy too low: {acc}");
+    println!("quickstart OK");
+    Ok(())
+}

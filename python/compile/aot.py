@@ -1,0 +1,193 @@
+"""AOT lowering: JAX → HLO **text** artifacts for the Rust runtime.
+
+Run once by ``make artifacts`` (no-op when inputs are unchanged); never
+on the request path. Three artifacts:
+
+* ``dsee_linear.hlo.txt``     — the L1 kernel alone (runtime microbench
+                                + Rust↔HLO parity at the kernel level);
+* ``encoder_fwd.hlo.txt``     — full DSEE forward (serving path);
+* ``encoder_train_step.hlo.txt`` — fused fwd+bwd+AdamW on the trainable
+                                group (the fine-tuning path driven from
+                                Rust in examples/quickstart.rs).
+
+HLO *text* is the interchange format, not ``.serialize()``: jax ≥ 0.5
+emits HloModuleProto with 64-bit instruction ids which the image's
+xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the text parser
+reassigns ids. See /opt/xla-example/README.md.
+
+``manifest.json`` records every artifact's input signature (names,
+shapes, dtypes, grouping) so the Rust side constructs inputs in the
+right order without guessing.
+"""
+
+import argparse
+import hashlib
+import json
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from .model import AdamHp, Cfg, make_fns, param_spec
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_dsee_linear(cfg: Cfg):
+    from .kernels.dsee_linear import dsee_linear
+
+    m, k, n, r = cfg.batch * cfg.max_seq, cfg.d_model, cfg.d_model, cfg.rank
+    sds = jax.ShapeDtypeStruct
+    args = (
+        sds((m, k), jnp.float32),  # x
+        sds((k, n), jnp.float32),  # w
+        sds((k, n), jnp.float32),  # mask
+        sds((k, n), jnp.float32),  # s2
+        sds((k, r), jnp.float32),  # u
+        sds((r, n), jnp.float32),  # v
+        sds((n,), jnp.float32),  # b
+    )
+    lowered = jax.jit(lambda *a: (dsee_linear(*a),)).lower(*args)
+    sig = [
+        {"name": nm, "shape": list(a.shape), "dtype": "f32"}
+        for nm, a in zip(["x", "w", "mask", "s2", "u", "v", "b"], args)
+    ]
+    outs = [{"name": "y", "shape": [m, n], "dtype": "f32"}]
+    return to_hlo_text(lowered), sig, outs
+
+
+def group_sig(cfg: Cfg, group: str):
+    return [
+        {"name": n, "shape": list(s), "dtype": "f32"}
+        for n, s, g in param_spec(cfg)
+        if g == group
+    ]
+
+
+def lower_encoder_fwd(cfg: Cfg):
+    fwd, _ = make_fns(cfg)
+    sds = jax.ShapeDtypeStruct
+    frozen = [sds(tuple(e["shape"]), jnp.float32) for e in group_sig(cfg, "frozen")]
+    trainable = [
+        sds(tuple(e["shape"]), jnp.float32) for e in group_sig(cfg, "trainable")
+    ]
+    ids = sds((cfg.batch, cfg.max_seq), jnp.int32)
+    lowered = jax.jit(fwd).lower(frozen, trainable, ids)
+    sig = (
+        group_sig(cfg, "frozen")
+        + group_sig(cfg, "trainable")
+        + [{"name": "ids", "shape": [cfg.batch, cfg.max_seq], "dtype": "s32"}]
+    )
+    outs = [{"name": "logits", "shape": [cfg.batch, cfg.n_classes], "dtype": "f32"}]
+    return to_hlo_text(lowered), sig, outs
+
+
+def lower_train_step(cfg: Cfg, hp: AdamHp):
+    _, step_fn = make_fns(cfg, hp)
+    sds = jax.ShapeDtypeStruct
+    frozen = [sds(tuple(e["shape"]), jnp.float32) for e in group_sig(cfg, "frozen")]
+    tshapes = group_sig(cfg, "trainable")
+    trainable = [sds(tuple(e["shape"]), jnp.float32) for e in tshapes]
+    m = list(trainable)
+    v = list(trainable)
+    step = sds((), jnp.int32)
+    ids = sds((cfg.batch, cfg.max_seq), jnp.int32)
+    labels = sds((cfg.batch,), jnp.int32)
+    lowered = jax.jit(step_fn).lower(frozen, trainable, m, v, step, ids, labels)
+    sig = (
+        group_sig(cfg, "frozen")
+        + tshapes
+        + [dict(e, name=f"m.{e['name']}") for e in tshapes]
+        + [dict(e, name=f"v.{e['name']}") for e in tshapes]
+        + [
+            {"name": "step", "shape": [], "dtype": "s32"},
+            {"name": "ids", "shape": [cfg.batch, cfg.max_seq], "dtype": "s32"},
+            {"name": "labels", "shape": [cfg.batch], "dtype": "s32"},
+        ]
+    )
+    outs = (
+        [dict(e, name=f"new.{e['name']}") for e in tshapes]
+        + [dict(e, name=f"new_m.{e['name']}") for e in tshapes]
+        + [dict(e, name=f"new_v.{e['name']}") for e in tshapes]
+        + [{"name": "loss", "shape": [], "dtype": "f32"}]
+    )
+    return to_hlo_text(lowered), sig, outs
+
+
+def input_fingerprint() -> str:
+    """Hash of the compile-path sources — artifact staleness check."""
+    here = os.path.dirname(__file__)
+    h = hashlib.sha256()
+    for root, _dirs, files in sorted(os.walk(here)):
+        for fn in sorted(files):
+            if fn.endswith(".py"):
+                with open(os.path.join(root, fn), "rb") as f:
+                    h.update(f.read())
+    return h.hexdigest()[:16]
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+    manifest_path = os.path.join(args.out_dir, "manifest.json")
+    fp = input_fingerprint()
+    if not args.force and os.path.exists(manifest_path):
+        with open(manifest_path) as f:
+            old = json.load(f)
+        if old.get("fingerprint") == fp:
+            print(f"artifacts up to date (fingerprint {fp})")
+            return
+
+    cfg = Cfg()
+    hp = AdamHp(lr=1e-3)
+    manifest = {
+        "fingerprint": fp,
+        "config": {
+            "vocab": cfg.vocab,
+            "max_seq": cfg.max_seq,
+            "d_model": cfg.d_model,
+            "n_layers": cfg.n_layers,
+            "n_heads": cfg.n_heads,
+            "d_ffn": cfg.d_ffn,
+            "n_classes": cfg.n_classes,
+            "rank": cfg.rank,
+            "causal": cfg.causal,
+            "batch": cfg.batch,
+        },
+        "adam": {"lr": hp.lr, "beta1": hp.beta1, "beta2": hp.beta2, "eps": hp.eps},
+        "artifacts": {},
+    }
+    for name, builder in [
+        ("dsee_linear", lambda: lower_dsee_linear(cfg)),
+        ("encoder_fwd", lambda: lower_encoder_fwd(cfg)),
+        ("encoder_train_step", lambda: lower_train_step(cfg, hp)),
+    ]:
+        print(f"lowering {name} …", flush=True)
+        hlo, sig, outs = builder()
+        fn = f"{name}.hlo.txt"
+        with open(os.path.join(args.out_dir, fn), "w") as f:
+            f.write(hlo)
+        manifest["artifacts"][name] = {
+            "file": fn,
+            "inputs": sig,
+            "outputs": outs,
+        }
+        print(f"  wrote {fn} ({len(hlo)} chars, {len(sig)} inputs)")
+    with open(manifest_path, "w") as f:
+        json.dump(manifest, f, indent=1, sort_keys=True)
+    print(f"wrote manifest.json (fingerprint {fp})")
+
+
+if __name__ == "__main__":
+    sys.exit(main())

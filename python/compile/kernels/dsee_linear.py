@@ -1,0 +1,126 @@
+"""L1 Pallas kernel: the fused DSEE inference linear.
+
+Computes, in one pass over the weight tiles,
+
+    y = x @ (W ⊙ S1) + b + ((x @ U) @ V) + x @ S2
+
+which is the paper's Figure-1 inference form (§3.3): masked pre-trained
+weight + low-rank update + sparse residual.
+
+TPU-shaped design (DESIGN.md §4 Hardware-Adaptation):
+
+* the output is tiled on a (bm × bn) grid via ``BlockSpec`` — each grid
+  step holds one (bm, K) stripe of ``x`` and one (K, bn) tile of the
+  weight in VMEM and drives the MXU with a single dense contraction;
+* the sparse residual ``S2`` is carried as a dense-but-mostly-zero tile
+  and *added to the weight tile in VMEM* before the contraction —
+  irregular gather is hostile to the TPU memory system, and with N ≤ 64
+  non-zeros per matrix the extra density is free;
+* the low-rank chain re-uses the same stripe of ``x``: ``xu = x @ U``
+  (r ≪ n keeps U and xu entirely in VMEM), then accumulates ``xu @ V``
+  into the same output tile, so HBM sees each operand exactly once.
+
+``interpret=True`` everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls, so the kernel is lowered to plain HLO. Correctness is
+pinned to ``ref.dsee_linear_ref`` by ``python/tests/test_kernels.py``.
+
+VMEM footprint per grid step (f32, bm=bn=128, K=d_model, rank r):
+    x-stripe  bm·K·4  +  W/S1/S2 tiles  3·K·bn·4  +  U  K·r·4
+  + xu  bm·r·4  +  V  r·bn·4  +  acc  bm·bn·4
+which for d=768, r=16 is ≈ 1.6 MiB — comfortably inside the ~16 MiB
+VMEM of a TPU core, leaving room for double-buffering the W tiles.
+"""
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(x_ref, w_ref, mask_ref, s2_ref, u_ref, v_ref, b_ref, o_ref):
+    """One (bm, bn) output tile."""
+    x = x_ref[...]  # (bm, K)
+    # Compose the effective weight tile in VMEM: (W ⊙ S1) + S2.
+    w_eff = w_ref[...] * mask_ref[...] + s2_ref[...]  # (K, bn)
+    acc = jnp.dot(x, w_eff, preferred_element_type=jnp.float32)
+    # Low-rank chain: (x @ U) @ V, r ≪ n so both stay in VMEM.
+    xu = jnp.dot(x, u_ref[...], preferred_element_type=jnp.float32)  # (bm, r)
+    acc = acc + jnp.dot(xu, v_ref[...], preferred_element_type=jnp.float32)
+    o_ref[...] = acc + b_ref[...][None, :]
+
+
+def _pick_block(dim: int, want: int) -> int:
+    """Largest divisor of ``dim`` not exceeding ``want`` (grids must tile
+    exactly; our simulation shapes are small and highly composite)."""
+    b = min(dim, want)
+    while dim % b != 0:
+        b -= 1
+    return b
+
+
+@partial(jax.jit, static_argnames=("bm", "bn"))
+def dsee_linear(x, w, mask, s2, u, v, b, *, bm: int = 128, bn: int = 128):
+    """Fused DSEE linear. Shapes: x (M,K), w/mask/s2 (K,N), u (K,r),
+    v (r,N), b (N,) → (M,N)."""
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2, f"x {x.shape} vs w {w.shape}"
+    assert mask.shape == w.shape and s2.shape == w.shape
+    assert u.shape[0] == k and v.shape[1] == n and u.shape[1] == v.shape[0]
+    assert b.shape == (n,)
+    bm = _pick_block(m, bm)
+    bn = _pick_block(n, bn)
+    r = u.shape[1]
+    grid = (m // bm, n // bn)
+    return pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, k), lambda i, j: (i, 0)),  # x stripe
+            pl.BlockSpec((k, bn), lambda i, j: (0, j)),  # W tile
+            pl.BlockSpec((k, bn), lambda i, j: (0, j)),  # S1 tile
+            pl.BlockSpec((k, bn), lambda i, j: (0, j)),  # S2 tile
+            pl.BlockSpec((k, r), lambda i, j: (0, 0)),  # U (resident)
+            pl.BlockSpec((r, bn), lambda i, j: (0, j)),  # V tile
+            pl.BlockSpec((bn,), lambda i, j: (j,)),  # bias tile
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls
+    )(x, w, mask, s2, u, v, b)
+
+
+# --------------------------------------------------------------- autodiff
+#
+# interpret-mode pallas_call has no reverse-mode rule, so the train-step
+# artifact differentiates through an explicit custom_vjp whose backward
+# is the same math the Rust engine implements (nn/linear.rs::backward).
+# ``omega`` is the fixed S2 support: dS2 is masked to it, which is what
+# keeps the sparse residual sparse inside the fused AOT train step.
+
+
+@jax.custom_vjp
+def dsee_linear_op(x, w, mask, s2, omega, u, v, b):
+    """Differentiable DSEE linear; forward runs the Pallas kernel."""
+    return dsee_linear(x, w, mask, s2 * omega, u, v, b)
+
+
+def _op_fwd(x, w, mask, s2, omega, u, v, b):
+    out = dsee_linear(x, w, mask, s2 * omega, u, v, b)
+    return out, (x, w, mask, s2, omega, u, v)
+
+
+def _op_bwd(res, dy):
+    x, w, mask, s2, omega, u, v = res
+    w_eff = w * mask + s2 * omega
+    dx = dy @ w_eff.T + (dy @ v.T) @ u.T
+    du = x.T @ (dy @ v.T)
+    dv = (x @ u).T @ dy
+    ds2 = (x.T @ dy) * omega
+    db = dy.sum(axis=0)
+    zeros = (jnp.zeros_like(w), jnp.zeros_like(mask))
+    return (dx, *zeros, ds2, jnp.zeros_like(omega), du, dv, db)
+
+
+dsee_linear_op.defvjp(_op_fwd, _op_bwd)

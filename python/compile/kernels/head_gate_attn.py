@@ -1,0 +1,106 @@
+"""L1 Pallas kernel: multi-head self-attention with per-head gates.
+
+The gate coefficients ``c`` are the paper's structured-sparsity device
+(§3.3): each head's context is scaled by its gate so that an ℓ₁ penalty
+can drive useless heads to zero before they are physically pruned.
+
+Grid: one step per (batch, head). Each step holds that head's (S, hd)
+Q/K/V panels in VMEM, computes the (S, S) score matrix on the MXU,
+applies the (optional) causal mask and a numerically-stabilized softmax,
+contracts with V, and scales by the head's gate. For the simulation
+sizes (S ≤ 64, hd ≤ 64) one head's working set is ≤ 100 KiB — on a real
+TPU several heads would be fused per step; the BlockSpec layout below
+keeps that extension mechanical (grow the head axis of the blocks).
+
+``interpret=True`` — see dsee_linear.py.
+"""
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(q_ref, k_ref, v_ref, gate_ref, o_ref, *, causal: bool):
+    q = q_ref[0]  # (S, hd)
+    k = k_ref[0]
+    v = v_ref[0]
+    s, hd = q.shape
+    scale = 1.0 / (hd**0.5)
+    scores = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+    if causal:
+        row = jax.lax.broadcasted_iota(jnp.int32, (s, s), 0)
+        col = jax.lax.broadcasted_iota(jnp.int32, (s, s), 1)
+        scores = jnp.where(col > row, -1e30, scores)
+    scores = scores - jnp.max(scores, axis=-1, keepdims=True)
+    e = jnp.exp(scores)
+    attn = e / jnp.sum(e, axis=-1, keepdims=True)
+    ctx = jnp.dot(attn, v, preferred_element_type=jnp.float32)
+    o_ref[0] = ctx * gate_ref[0]
+
+
+@partial(jax.jit, static_argnames=("causal",))
+def head_gate_attention(q, k, v, gates, *, causal: bool = False):
+    """Gated attention. q/k/v: (BH, S, hd); gates: (BH,) → (BH, S, hd)."""
+    bh, s, hd = q.shape
+    assert k.shape == q.shape and v.shape == q.shape
+    assert gates.shape == (bh,)
+    return pl.pallas_call(
+        partial(_kernel, causal=causal),
+        grid=(bh,),
+        in_specs=[
+            pl.BlockSpec((1, s, hd), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, s, hd), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, s, hd), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((1, s, hd), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, s, hd), jnp.float32),
+        interpret=True,
+    )(q, k, v, gates)
+
+
+# --------------------------------------------------------------- autodiff
+#
+# Manual VJP (interpret-mode pallas_call is not differentiable); the
+# backward mirrors rust/src/nn/attention.rs::backward exactly.
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(4,))
+def head_gate_attention_op(q, k, v, gates, causal=False):
+    return head_gate_attention(q, k, v, gates, causal=causal)
+
+
+def _attn_pieces(q, k, v, causal):
+    s, hd = q.shape[1], q.shape[2]
+    scale = 1.0 / (hd**0.5)
+    scores = jnp.einsum("bqd,bkd->bqk", q, k) * scale
+    if causal:
+        m = jnp.triu(jnp.ones((s, s), dtype=bool), 1)
+        scores = jnp.where(m[None], -1e30, scores)
+    attn = jax.nn.softmax(scores, axis=-1)
+    return attn, scale
+
+
+def _op_fwd(q, k, v, gates, causal):
+    out = head_gate_attention(q, k, v, gates, causal=causal)
+    return out, (q, k, v, gates)
+
+
+def _op_bwd(causal, res, dy):
+    q, k, v, gates = res
+    attn, scale = _attn_pieces(q, k, v, causal)
+    ctx_pre = jnp.einsum("bqk,bkd->bqd", attn, v)
+    dgates = jnp.einsum("bqd,bqd->b", dy, ctx_pre)
+    dctx = dy * gates[:, None, None]
+    dattn = jnp.einsum("bqd,bkd->bqk", dctx, v)
+    dv = jnp.einsum("bqk,bqd->bkd", attn, dctx)
+    rowdot = jnp.sum(dattn * attn, axis=-1, keepdims=True)
+    ds = attn * (dattn - rowdot)
+    dq = jnp.einsum("bqk,bkd->bqd", ds, k) * scale
+    dk = jnp.einsum("bqk,bqd->bkd", ds, q) * scale
+    return dq, dk, dv, dgates
+
+
+head_gate_attention_op.defvjp(_op_fwd, _op_bwd)

@@ -1,0 +1,27 @@
+"""Pure-jnp correctness oracles for the Pallas kernels.
+
+These are the ground truth the kernels are tested against (pytest +
+hypothesis shape sweeps in python/tests/test_kernels.py) and the
+specification the Rust native engine mirrors.
+"""
+
+import jax
+import jax.numpy as jnp
+
+
+def dsee_linear_ref(x, w, mask, s2, u, v, b):
+    """y = x(W⊙S1) + b + (xU)V + xS2 — the DSEE inference linear."""
+    return x @ (w * mask) + b + (x @ u) @ v + x @ s2
+
+
+def head_gate_attention_ref(q, k, v, gates, *, causal: bool = False):
+    """Per-(batch·head) gated attention, (BH, S, hd) panels."""
+    bh, s, hd = q.shape
+    scale = 1.0 / (hd**0.5)
+    scores = jnp.einsum("bqd,bkd->bqk", q, k) * scale
+    if causal:
+        mask = jnp.triu(jnp.ones((s, s), dtype=bool), 1)
+        scores = jnp.where(mask[None], -1e30, scores)
+    attn = jax.nn.softmax(scores, axis=-1)
+    ctx = jnp.einsum("bqk,bkd->bqd", attn, v)
+    return ctx * gates[:, None, None]

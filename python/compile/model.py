@@ -1,0 +1,255 @@
+"""L2: the DSEE-parametrized transformer in JAX.
+
+Architecturally identical to the Rust native engine
+(rust/src/nn/mod.rs): token+position embeddings → pre-LN blocks
+(head-gated attention + GELU FFN) → final LN → mean-pool classifier (or
+per-token LM head). The attention projections are DSEE linears — frozen
+W with mask S1, trainable U/V/S2 — computed by the L1 Pallas kernels so
+everything lowers into one HLO module.
+
+The parity contract with Rust: weights enter as *runtime inputs* on both
+paths (no constants baked into HLO), so the Rust integration test
+(rust/tests/hlo_parity.rs) feeds identical weights to this module's AOT
+artifact and to the native engine and compares outputs numerically.
+
+``param_spec`` fixes the flat parameter ordering used by the artifacts'
+input signature; the same order is serialized to artifacts/manifest.json
+for the Rust runtime.
+"""
+
+from dataclasses import dataclass, field
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.dsee_linear import dsee_linear_op
+from .kernels.head_gate_attn import head_gate_attention_op
+
+
+@dataclass(frozen=True)
+class Cfg:
+    """Mirror of the Rust ModelCfg (SimBert-S by default)."""
+
+    vocab: int = 256
+    max_seq: int = 24
+    d_model: int = 64
+    n_layers: int = 2
+    n_heads: int = 4
+    d_ffn: int = 128
+    n_classes: int = 2
+    rank: int = 8
+    causal: bool = False
+    batch: int = 16
+
+    @property
+    def head_dim(self):
+        return self.d_model // self.n_heads
+
+
+# ----------------------------------------------------------------- params
+
+
+def param_spec(cfg: Cfg):
+    """Ordered (name, shape, group) list; group ∈ {frozen, trainable}.
+
+    The AOT artifacts take inputs in exactly this order (frozen block
+    first, trainable block second) after the data inputs.
+    """
+    d, f, r, v = cfg.d_model, cfg.d_ffn, cfg.rank, cfg.vocab
+    frozen, trainable = [], []
+    frozen.append(("embed.tok", (v, d)))
+    frozen.append(("embed.pos", (cfg.max_seq, d)))
+    for i in range(cfg.n_layers):
+        p = f"block{i}"
+        for ln in ("ln1", "ln2"):
+            frozen.append((f"{p}.{ln}.gamma", (d,)))
+            frozen.append((f"{p}.{ln}.beta", (d,)))
+        for proj in ("wq", "wk", "wv", "wo"):
+            frozen.append((f"{p}.attn.{proj}.w", (d, d)))
+            frozen.append((f"{p}.attn.{proj}.b", (d,)))
+            frozen.append((f"{p}.attn.{proj}.mask", (d, d)))
+            frozen.append((f"{p}.attn.{proj}.omega", (d, d)))
+            trainable.append((f"{p}.attn.{proj}.u", (d, r)))
+            trainable.append((f"{p}.attn.{proj}.v", (r, d)))
+            trainable.append((f"{p}.attn.{proj}.s2", (d, d)))
+        trainable.append((f"{p}.attn.gates", (cfg.n_heads,)))
+        frozen.append((f"{p}.ffn.fc1.w", (d, f)))
+        frozen.append((f"{p}.ffn.fc1.b", (f,)))
+        frozen.append((f"{p}.ffn.fc2.w", (f, d)))
+        frozen.append((f"{p}.ffn.fc2.b", (d,)))
+    frozen.append(("ln_f.gamma", (d,)))
+    frozen.append(("ln_f.beta", (d,)))
+    trainable.append(("head.w", (d, cfg.n_classes)))
+    trainable.append(("head.b", (cfg.n_classes,)))
+    return [(n, s, "frozen") for n, s in frozen] + [
+        (n, s, "trainable") for n, s in trainable
+    ]
+
+
+def init_params(cfg: Cfg, key):
+    """Random init following the Rust conventions (U=0, V~N(0,0.02),
+    S2=0, mask=1, gates=1)."""
+    params = {}
+    for name, shape, _group in param_spec(cfg):
+        key, sub = jax.random.split(key)
+        if name.endswith((".u", ".s2", ".beta")) or name.endswith(".b"):
+            params[name] = jnp.zeros(shape, jnp.float32)
+        elif name.endswith((".gamma", ".mask", ".omega", ".gates")):
+            params[name] = jnp.ones(shape, jnp.float32)
+        elif name.endswith(".v"):
+            params[name] = 0.02 * jax.random.normal(sub, shape, jnp.float32)
+        elif name.startswith("embed."):
+            params[name] = 0.02 * jax.random.normal(sub, shape, jnp.float32)
+        else:
+            std = (2.0 / (shape[0] + shape[-1])) ** 0.5
+            params[name] = std * jax.random.normal(sub, shape, jnp.float32)
+    return params
+
+
+def split_groups(cfg: Cfg, params):
+    spec = param_spec(cfg)
+    frozen = [params[n] for n, _s, g in spec if g == "frozen"]
+    trainable = [params[n] for n, _s, g in spec if g == "trainable"]
+    return frozen, trainable
+
+
+def join_groups(cfg: Cfg, frozen, trainable):
+    spec = param_spec(cfg)
+    out = {}
+    fi = ti = 0
+    for n, _s, g in spec:
+        if g == "frozen":
+            out[n] = frozen[fi]
+            fi += 1
+        else:
+            out[n] = trainable[ti]
+            ti += 1
+    return out
+
+
+# ---------------------------------------------------------------- forward
+
+
+def layer_norm(x, gamma, beta, eps=1e-5):
+    mean = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean((x - mean) ** 2, axis=-1, keepdims=True)
+    return (x - mean) / jnp.sqrt(var + eps) * gamma + beta
+
+
+def attention(cfg: Cfg, p, prefix, x, bsz, seq):
+    """Head-gated attention over a flat (B·S, d) activation."""
+    d, h, hd = cfg.d_model, cfg.n_heads, cfg.head_dim
+
+    def proj(name):
+        return dsee_linear_op(
+            x,
+            p[f"{prefix}.{name}.w"],
+            p[f"{prefix}.{name}.mask"],
+            p[f"{prefix}.{name}.s2"],
+            p[f"{prefix}.{name}.omega"],
+            p[f"{prefix}.{name}.u"],
+            p[f"{prefix}.{name}.v"],
+            p[f"{prefix}.{name}.b"],
+        )
+
+    q, k, v = proj("wq"), proj("wk"), proj("wv")
+    # (B·S, d) → (B·H, S, hd)
+    def heads(t):
+        t = t.reshape(bsz, seq, h, hd)
+        return t.transpose(0, 2, 1, 3).reshape(bsz * h, seq, hd)
+
+    gates = jnp.tile(p[f"{prefix}.gates"], bsz)  # (B·H,)
+    ctx = head_gate_attention_op(heads(q), heads(k), heads(v), gates, cfg.causal)
+    ctx = ctx.reshape(bsz, h, seq, hd).transpose(0, 2, 1, 3).reshape(bsz * seq, d)
+    return dsee_linear_op(
+        ctx,
+        p[f"{prefix}.wo.w"],
+        p[f"{prefix}.wo.mask"],
+        p[f"{prefix}.wo.s2"],
+        p[f"{prefix}.wo.omega"],
+        p[f"{prefix}.wo.u"],
+        p[f"{prefix}.wo.v"],
+        p[f"{prefix}.wo.b"],
+    )
+
+
+def forward(cfg: Cfg, params, ids):
+    """ids: (B, S) int32 → logits (B, n_classes) [or (B·S, vocab) LM]."""
+    bsz, seq = ids.shape
+    d = cfg.d_model
+    flat = ids.reshape(-1)
+    x = params["embed.tok"][flat] + jnp.tile(
+        params["embed.pos"][:seq], (bsz, 1)
+    )
+    for i in range(cfg.n_layers):
+        p = f"block{i}"
+        a_in = layer_norm(x, params[f"{p}.ln1.gamma"], params[f"{p}.ln1.beta"])
+        x = x + attention(cfg, params, f"{p}.attn", a_in, bsz, seq)
+        f_in = layer_norm(x, params[f"{p}.ln2.gamma"], params[f"{p}.ln2.beta"])
+        h1 = jax.nn.gelu(f_in @ params[f"{p}.ffn.fc1.w"] + params[f"{p}.ffn.fc1.b"])
+        x = x + h1 @ params[f"{p}.ffn.fc2.w"] + params[f"{p}.ffn.fc2.b"]
+    x = layer_norm(x, params["ln_f.gamma"], params["ln_f.beta"])
+    pooled = x.reshape(bsz, seq, d).mean(axis=1)
+    return pooled @ params["head.w"] + params["head.b"]
+
+
+def loss_fn(cfg: Cfg, params, ids, labels):
+    logits = forward(cfg, params, ids)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    return -jnp.take_along_axis(logp, labels[:, None], axis=1).mean()
+
+
+# ------------------------------------------------------------- train step
+
+
+@dataclass(frozen=True)
+class AdamHp:
+    lr: float = 1e-3
+    beta1: float = 0.9
+    beta2: float = 0.999
+    eps: float = 1e-8
+
+
+def train_step(cfg: Cfg, hp: AdamHp, frozen, trainable, m, v, step, ids, labels):
+    """One fused fwd+bwd+AdamW step on the *trainable group only*.
+
+    Returns (new_trainable, new_m, new_v, loss). Frozen weights flow
+    through untouched — they are inputs, never outputs, which is what
+    makes the artifact cheap to call repeatedly from Rust (donate the
+    trainable buffers, keep the frozen ones resident).
+    """
+
+    def loss_of(trainable_group):
+        params = join_groups(cfg, frozen, trainable_group)
+        return loss_fn(cfg, params, ids, labels)
+
+    loss, grads = jax.value_and_grad(loss_of)(trainable)
+    t = step.astype(jnp.float32) + 1.0
+    bc1 = 1.0 - hp.beta1**t
+    bc2 = 1.0 - hp.beta2**t
+    new_t, new_m, new_v = [], [], []
+    for p, g, mi, vi in zip(trainable, grads, m, v):
+        mi = hp.beta1 * mi + (1.0 - hp.beta1) * g
+        vi = hp.beta2 * vi + (1.0 - hp.beta2) * g * g
+        upd = (mi / bc1) / (jnp.sqrt(vi / bc2) + hp.eps)
+        new_t.append(p - hp.lr * upd)
+        new_m.append(mi)
+        new_v.append(vi)
+    return new_t, new_m, new_v, loss
+
+
+def make_fns(cfg: Cfg, hp: AdamHp = AdamHp()):
+    """(jit) forward over groups + train_step, as lowering targets."""
+
+    def fwd(frozen, trainable, ids):
+        params = join_groups(cfg, frozen, trainable)
+        return (forward(cfg, params, ids),)
+
+    def step_fn(frozen, trainable, m, v, step, ids, labels):
+        new_t, new_m, new_v, loss = train_step(
+            cfg, hp, frozen, trainable, m, v, step, ids, labels
+        )
+        return tuple(new_t) + tuple(new_m) + tuple(new_v) + (loss,)
+
+    return fwd, step_fn

@@ -1,0 +1,98 @@
+"""AOT artifact tests: lowering works, HLO text parses, manifest is
+consistent, and the staleness fingerprint behaves."""
+
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+HERE = os.path.dirname(__file__)
+PY_DIR = os.path.dirname(HERE)
+REPO = os.path.dirname(PY_DIR)
+ART = os.path.join(REPO, "artifacts")
+
+
+@pytest.fixture(scope="module")
+def artifacts():
+    """Build artifacts once (no-op if current)."""
+    subprocess.run(
+        [sys.executable, "-m", "compile.aot", "--out-dir", ART],
+        cwd=PY_DIR,
+        check=True,
+    )
+    with open(os.path.join(ART, "manifest.json")) as f:
+        return json.load(f)
+
+
+def test_manifest_lists_three_artifacts(artifacts):
+    assert set(artifacts["artifacts"]) == {
+        "dsee_linear",
+        "encoder_fwd",
+        "encoder_train_step",
+    }
+    for name, entry in artifacts["artifacts"].items():
+        path = os.path.join(ART, entry["file"])
+        assert os.path.exists(path), name
+        assert entry["inputs"], name
+        assert entry["outputs"], name
+
+
+def test_hlo_is_text_not_proto(artifacts):
+    for entry in artifacts["artifacts"].values():
+        with open(os.path.join(ART, entry["file"])) as f:
+            head = f.read(4096)
+        assert "HloModule" in head, entry["file"]
+        # Text, not binary proto.
+        assert head.isprintable() or "\n" in head
+
+
+def test_train_step_signature_shape(artifacts):
+    entry = artifacts["artifacts"]["encoder_train_step"]
+    names = [e["name"] for e in entry["inputs"]]
+    # frozen..., trainable..., m.*, v.*, step, ids, labels
+    assert names[-3:] == ["step", "ids", "labels"]
+    n_m = sum(1 for n in names if n.startswith("m."))
+    n_v = sum(1 for n in names if n.startswith("v."))
+    assert n_m == n_v > 0
+    outs = [e["name"] for e in entry["outputs"]]
+    assert outs[-1] == "loss"
+    assert sum(1 for n in outs if n.startswith("new.")) == n_m
+
+
+def test_fingerprint_skips_rebuild(artifacts):
+    # Second run must detect freshness (prints "up to date").
+    out = subprocess.run(
+        [sys.executable, "-m", "compile.aot", "--out-dir", ART],
+        cwd=PY_DIR,
+        check=True,
+        capture_output=True,
+        text=True,
+    )
+    assert "up to date" in out.stdout
+
+
+def test_encoder_fwd_runs_under_jax(artifacts):
+    """Execute the lowered fwd via jax itself as a sanity oracle
+    (the Rust runtime execution is covered by rust/tests)."""
+    import numpy as np
+    import jax
+    import jax.numpy as jnp
+
+    sys.path.insert(0, PY_DIR)
+    from compile.model import Cfg, forward, init_params
+
+    c = artifacts["config"]
+    cfg = Cfg(**{k: c[k] for k in (
+        "vocab", "max_seq", "d_model", "n_layers", "n_heads", "d_ffn",
+        "n_classes", "rank", "causal", "batch")})
+    params = init_params(cfg, jax.random.PRNGKey(1))
+    ids = jnp.zeros((cfg.batch, cfg.max_seq), jnp.int32)
+    logits = forward(cfg, params, ids)
+    assert logits.shape == (cfg.batch, cfg.n_classes)
+    assert np.isfinite(np.asarray(logits)).all()
+
+
+if __name__ == "__main__":
+    pytest.main([__file__, "-q"])

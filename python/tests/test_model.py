@@ -1,0 +1,118 @@
+"""L2 model tests: shapes, gradient masking (frozen group untouched),
+loss decrease under the fused train step, and architectural invariants
+shared with the Rust engine."""
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from compile.model import (
+    AdamHp,
+    Cfg,
+    forward,
+    init_params,
+    join_groups,
+    loss_fn,
+    param_spec,
+    split_groups,
+    train_step,
+)
+
+CFG = Cfg(vocab=64, max_seq=8, d_model=16, n_layers=2, n_heads=2, d_ffn=32,
+          n_classes=2, rank=4, batch=4)
+
+
+@pytest.fixture(scope="module")
+def params():
+    return init_params(CFG, jax.random.PRNGKey(0))
+
+
+def data(seed=0):
+    rng = np.random.default_rng(seed)
+    ids = jnp.asarray(rng.integers(0, CFG.vocab, (CFG.batch, CFG.max_seq)), jnp.int32)
+    labels = jnp.asarray(rng.integers(0, CFG.n_classes, (CFG.batch,)), jnp.int32)
+    return ids, labels
+
+
+def test_spec_round_trip(params):
+    frozen, trainable = split_groups(CFG, params)
+    back = join_groups(CFG, frozen, trainable)
+    assert set(back) == set(params)
+    for k in params:
+        np.testing.assert_array_equal(back[k], params[k])
+
+
+def test_forward_shapes(params):
+    ids, _ = data()
+    logits = forward(CFG, params, ids)
+    assert logits.shape == (CFG.batch, CFG.n_classes)
+    assert np.isfinite(np.asarray(logits)).all()
+
+
+def test_adapter_zero_init_is_transparent(params):
+    # U = 0 and S2 = 0 at init ⇒ removing them changes nothing.
+    ids, _ = data(1)
+    base = forward(CFG, params, ids)
+    stripped = dict(params)
+    for n, _s, _g in param_spec(CFG):
+        if n.endswith(".v"):
+            stripped[n] = jnp.zeros_like(params[n])
+    got = forward(CFG, stripped, ids)
+    np.testing.assert_allclose(base, got, rtol=1e-5, atol=1e-6)
+
+
+def test_train_step_reduces_loss_and_freezes_base(params):
+    ids, labels = data(2)
+    frozen, trainable = split_groups(CFG, params)
+    m = [jnp.zeros_like(t) for t in trainable]
+    v = [jnp.zeros_like(t) for t in trainable]
+    hp = AdamHp(lr=5e-3)
+    first = float(loss_fn(CFG, params, ids, labels))
+    frozen_before = [np.asarray(f).copy() for f in frozen]
+    loss = None
+    for step in range(20):
+        trainable, m, v, loss = train_step(
+            CFG, hp, frozen, trainable, m, v, jnp.int32(step), ids, labels
+        )
+    assert float(loss) < first * 0.7, (first, float(loss))
+    # Frozen weights are inputs only — bitwise unchanged.
+    for before, after in zip(frozen_before, frozen):
+        np.testing.assert_array_equal(before, np.asarray(after))
+
+
+def test_gate_zero_silences_head(params):
+    ids, _ = data(3)
+    p2 = dict(params)
+    p2["block0.attn.gates"] = params["block0.attn.gates"].at[0].set(0.0)
+    a = forward(CFG, params, ids)
+    b = forward(CFG, p2, ids)
+    assert np.abs(np.asarray(a) - np.asarray(b)).max() > 1e-6
+
+
+def test_mask_prunes_weights(params):
+    ids, _ = data(4)
+    p2 = dict(params)
+    p2["block0.attn.wq.mask"] = jnp.zeros_like(params["block0.attn.wq.mask"])
+    a = forward(CFG, params, ids)
+    b = forward(CFG, p2, ids)
+    assert np.abs(np.asarray(a) - np.asarray(b)).max() > 1e-6
+    assert np.isfinite(np.asarray(b)).all()
+
+
+def test_param_spec_grouping():
+    spec = param_spec(CFG)
+    names = [n for n, _s, _g in spec]
+    assert len(names) == len(set(names)), "duplicate param names"
+    frozen = [n for n, _s, g in spec if g == "frozen"]
+    trainable = [n for n, _s, g in spec if g == "trainable"]
+    # Trainable = U/V/S2 + gates + head only (the DSEE setup).
+    for n in trainable:
+        assert n.endswith((".u", ".v", ".s2", ".gates")) or n.startswith("head."), n
+    for n in frozen:
+        assert not n.endswith((".u", ".v", ".s2", ".gates")), n
+
+
+if __name__ == "__main__":
+    pytest.main([__file__, "-q"])

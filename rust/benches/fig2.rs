@@ -1,0 +1,113 @@
+//! **Figure 2** — how Ω (the support of S₂) is generated, and how many
+//! non-zeros it holds. Left panel: Empty vs Decompose vs Magnitude vs
+//! Random at N=64 on SST-2. Right panel: N sweep for the Decompose
+//! method (and Empty as the reference line).
+//!
+//! Expected shape (paper): Decompose ≥ Magnitude ≥ Random overall;
+//! N=64 is the stable sweet spot; bigger N does not guarantee better.
+
+use dsee::config::{DseeCfg, ModelCfg, TrainCfg};
+use dsee::coordinator::{jobs_from, run_grid, JobOutcome};
+use dsee::data::glue::GlueTask;
+use dsee::report::Series;
+use dsee::train::baselines::{run_glue, Method};
+use dsee::train::RunResult;
+
+fn dsee_with(omega: &str, n: usize) -> Method {
+    Method::Dsee(DseeCfg {
+        rank: 4,
+        n_sparse: n,
+        omega_method: omega.into(),
+        ..DseeCfg::default()
+    })
+}
+
+fn main() {
+    dsee::util::logging::init();
+    let arch = ModelCfg::sim_bert_s();
+    let cfg = TrainCfg::default();
+    let seeds = [11u64, 12, 13];
+
+    // Panel 1: Ω method at N=64 (multiple seeds → mean).
+    let omega_methods = ["empty", "decompose", "magnitude", "random"];
+    type BoxedJob = Box<dyn FnOnce() -> RunResult + Send>;
+    let mut jobs: Vec<(String, BoxedJob)> = Vec::new();
+    for om in omega_methods {
+        for &seed in &seeds {
+            let m = dsee_with(om, 64);
+            let (arch, cfg) = (arch.clone(), cfg.clone());
+            jobs.push((
+                format!("{om}/seed{seed}"),
+                Box::new(move || run_glue(&m, GlueTask::Sst2, &arch, &cfg, seed)) as BoxedJob,
+            ));
+        }
+    }
+    // Panel 2: N sweep with decompose.
+    let n_sweep = [4usize, 16, 64, 256];
+    for &n in &n_sweep {
+        for &seed in &seeds {
+            let m = dsee_with("decompose", n);
+            let (arch, cfg) = (arch.clone(), cfg.clone());
+            jobs.push((
+                format!("N{n}/seed{seed}"),
+                Box::new(move || run_glue(&m, GlueTask::Sst2, &arch, &cfg, seed)) as BoxedJob,
+            ));
+        }
+    }
+    let workers = std::thread::available_parallelism().map(|x| x.get()).unwrap_or(4);
+    let outcomes = run_grid(jobs_from(jobs), workers);
+    let mut results: Vec<(String, RunResult)> = Vec::new();
+    let mut names: Vec<String> = omega_methods
+        .iter()
+        .flat_map(|om| seeds.iter().map(move |s| format!("{om}/seed{s}")))
+        .collect();
+    names.extend(
+        n_sweep
+            .iter()
+            .flat_map(|n| seeds.iter().map(move |s| format!("N{n}/seed{s}"))),
+    );
+    for (name, o) in names.into_iter().zip(outcomes) {
+        match o {
+            JobOutcome::Done(r) => results.push((name, r)),
+            JobOutcome::Failed { name, error } => eprintln!("FAILED {name}: {error}"),
+        }
+    }
+    let mean_of = |prefix: &str| -> f64 {
+        let xs: Vec<f64> = results
+            .iter()
+            .filter(|(n, _)| n.starts_with(prefix))
+            .map(|(_, r)| r.metric("acc"))
+            .collect();
+        xs.iter().sum::<f64>() / xs.len().max(1) as f64
+    };
+
+    let mut left = Series::new(
+        "Figure 2 (left) — Ω generation method, SST-2 acc at N=64",
+        "method_idx(empty,decompose,magnitude,random)",
+        &["acc"],
+    );
+    println!("Ω method → mean acc over {} seeds:", seeds.len());
+    for (i, om) in omega_methods.iter().enumerate() {
+        let acc = mean_of(&format!("{om}/"));
+        println!("  {om:<10} {acc:.4}");
+        left.point(i as f64, vec![acc]);
+    }
+    left.emit("fig2_left");
+
+    let mut right = Series::new(
+        "Figure 2 (right) — #non-zeros in S₂ vs SST-2 acc (decompose)",
+        "N",
+        &["acc"],
+    );
+    println!("N sweep (decompose):");
+    for &n in &n_sweep {
+        let acc = mean_of(&format!("N{n}/"));
+        println!("  N={n:<4} {acc:.4}");
+        right.point(n as f64, vec![acc]);
+    }
+    right.emit("fig2_right");
+
+    let dec = mean_of("decompose/");
+    let rnd = mean_of("random/");
+    println!("\ndecompose vs random: {dec:.4} vs {rnd:.4} (paper: decompose highest overall)");
+}

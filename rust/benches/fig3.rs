@@ -1,0 +1,97 @@
+//! **Figure 3** — rank sweep: ΔW = UV vs ΔW = UV + S₂ across
+//! r ∈ {1, 2, 4, 8, 16} on SST-2 / MNLI / CoLA / STS-B, with the
+//! paper's quadratic trend-line fits over log10(#trainable params).
+//!
+//! Expected shape (paper): quality rises with r then saturates/dips;
+//! the +S₂ curve sits on or above the UV curve across the range.
+
+use dsee::config::{DseeCfg, ModelCfg, TrainCfg};
+use dsee::coordinator::{jobs_from, run_grid, JobOutcome};
+use dsee::data::glue::GlueTask;
+use dsee::report::Series;
+use dsee::train::baselines::{run_glue, Method};
+use dsee::train::RunResult;
+use dsee::util::stats::polyfit2;
+
+fn main() {
+    dsee::util::logging::init();
+    let arch = ModelCfg::sim_bert_s();
+    let cfg = TrainCfg::default();
+    let ranks = [1usize, 2, 4, 8, 16];
+    let tasks = [GlueTask::Sst2, GlueTask::Mnli, GlueTask::Cola, GlueTask::Stsb];
+
+    let mut jobs = Vec::new();
+    let mut labels = Vec::new();
+    for t in tasks {
+        for &r in &ranks {
+            for with_s2 in [false, true] {
+                let m = if with_s2 {
+                    Method::Dsee(DseeCfg {
+                        rank: r,
+                        n_sparse: 16,
+                        ..DseeCfg::default()
+                    })
+                } else {
+                    Method::Lora { rank: r }
+                };
+                let (arch, cfg) = (arch.clone(), cfg.clone());
+                let label = format!("{}/r{}/{}", t.name(), r, if with_s2 { "uvs2" } else { "uv" });
+                labels.push(label.clone());
+                jobs.push((label, move || run_glue(&m, t, &arch, &cfg, 8)));
+            }
+        }
+    }
+    let workers = std::thread::available_parallelism().map(|x| x.get()).unwrap_or(4);
+    let outcomes = run_grid(jobs_from(jobs), workers);
+    let mut results: Vec<(String, RunResult)> = Vec::new();
+    for (label, o) in labels.into_iter().zip(outcomes) {
+        match o {
+            JobOutcome::Done(r) => results.push((label, r)),
+            JobOutcome::Failed { name, error } => eprintln!("FAILED {name}: {error}"),
+        }
+    }
+
+    for t in tasks {
+        let mut series = Series::new(
+            &format!("Figure 3 — rank sweep on {} ({})", t.name(), t.metric()),
+            "rank",
+            &["uv", "uv+s2", "log10_params_uv", "log10_params_uvs2"],
+        );
+        let mut xs_uv = Vec::new();
+        let mut ys_uv = Vec::new();
+        let mut xs_s2 = Vec::new();
+        let mut ys_s2 = Vec::new();
+        for &r in &ranks {
+            let find = |suffix: &str| {
+                results
+                    .iter()
+                    .find(|(l, _)| l == &format!("{}/r{}/{}", t.name(), r, suffix))
+                    .map(|(_, res)| res)
+            };
+            let (Some(uv), Some(s2)) = (find("uv"), find("uvs2")) else { continue };
+            let m_uv = uv.metric(t.metric());
+            let m_s2 = s2.metric(t.metric());
+            let lp_uv = (uv.trainable_params as f64).log10();
+            let lp_s2 = (s2.trainable_params as f64).log10();
+            series.point(r as f64, vec![m_uv, m_s2, lp_uv, lp_s2]);
+            xs_uv.push(lp_uv);
+            ys_uv.push(m_uv);
+            xs_s2.push(lp_s2);
+            ys_s2.push(m_s2);
+        }
+        series.emit(&format!("fig3_{}", t.name()));
+        // The paper overlays quadratic trend lines over log-params.
+        let (a1, b1, c1) = polyfit2(&xs_uv, &ys_uv);
+        let (a2, b2, c2) = polyfit2(&xs_s2, &ys_s2);
+        println!(
+            "{}: UV trend {a1:.3}{b1:+.3}x{c1:+.3}x² | UV+S2 trend {a2:.3}{b2:+.3}x{c2:+.3}x²",
+            t.name()
+        );
+        let mean_uv: f64 = ys_uv.iter().sum::<f64>() / ys_uv.len().max(1) as f64;
+        let mean_s2: f64 = ys_s2.iter().sum::<f64>() / ys_s2.len().max(1) as f64;
+        println!(
+            "  mean over ranks: UV {mean_uv:.4} vs UV+S2 {mean_s2:.4} \
+             (paper: +S₂ on or above the UV curve)"
+        );
+    }
+}

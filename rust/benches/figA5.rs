@@ -1,0 +1,88 @@
+//! **Figure A5** — DSEE vs vanilla magnitude pruning across sparsity
+//! 10%…60% on SST-2 / MNLI / CoLA / STS-B.
+//!
+//! Expected shape (paper): DSEE out-performs magnitude pruning at low
+//! sparsity (<50%) while training ~200× fewer parameters; curves
+//! converge/cross around 50–60%.
+
+use dsee::config::{DseeCfg, ModelCfg, TrainCfg};
+use dsee::coordinator::{jobs_from, run_grid, JobOutcome};
+use dsee::data::glue::GlueTask;
+use dsee::report::Series;
+use dsee::train::baselines::{run_glue, Method};
+use dsee::train::RunResult;
+
+fn main() {
+    dsee::util::logging::init();
+    let arch = ModelCfg::sim_bert_s();
+    let cfg = TrainCfg::default();
+    let tasks = [GlueTask::Sst2, GlueTask::Mnli, GlueTask::Cola, GlueTask::Stsb];
+    let sparsities = [0.1, 0.2, 0.3, 0.4, 0.5, 0.6];
+
+    let mut jobs = Vec::new();
+    let mut labels = Vec::new();
+    for t in tasks {
+        for &s in &sparsities {
+            for dsee in [true, false] {
+                let m = if dsee {
+                    Method::Dsee(DseeCfg {
+                        rank: 8,
+                        n_sparse: 64,
+                        unstructured_sparsity: s,
+                        ..DseeCfg::default()
+                    })
+                } else {
+                    // Vanilla magnitude pruning: full FT → prune → recover
+                    // (tunes W directly, all parameters trainable).
+                    Method::Omp { sparsity: s }
+                };
+                let label = format!("{}/{}/{}", t.name(), s, if dsee { "dsee" } else { "mag" });
+                labels.push(label.clone());
+                let (arch, cfg) = (arch.clone(), cfg.clone());
+                jobs.push((label, move || run_glue(&m, t, &arch, &cfg, 9)));
+            }
+        }
+    }
+    let workers = std::thread::available_parallelism().map(|x| x.get()).unwrap_or(4);
+    let outcomes = run_grid(jobs_from(jobs), workers);
+    let mut results: Vec<(String, RunResult)> = Vec::new();
+    for (label, o) in labels.into_iter().zip(outcomes) {
+        match o {
+            JobOutcome::Done(r) => results.push((label, r)),
+            JobOutcome::Failed { name, error } => eprintln!("FAILED {name}: {error}"),
+        }
+    }
+
+    let mut low_sparsity_wins = 0usize;
+    let mut low_sparsity_cells = 0usize;
+    for t in tasks {
+        let mut series = Series::new(
+            &format!("Figure A5 — sparsity sweep on {} ({})", t.name(), t.metric()),
+            "sparsity",
+            &["dsee", "magnitude_pruning"],
+        );
+        for &s in &sparsities {
+            let find = |kind: &str| {
+                results
+                    .iter()
+                    .find(|(l, _)| l == &format!("{}/{}/{}", t.name(), s, kind))
+                    .map(|(_, r)| r.metric(t.metric()))
+                    .unwrap_or(f64::NAN)
+            };
+            let d = find("dsee");
+            let m = find("mag");
+            series.point(s, vec![d, m]);
+            if s < 0.5 {
+                low_sparsity_cells += 1;
+                if d >= m - 1e-9 {
+                    low_sparsity_wins += 1;
+                }
+            }
+        }
+        series.emit(&format!("figA5_{}", t.name()));
+    }
+    println!(
+        "DSEE ≥ magnitude pruning at sparsity<50% in {low_sparsity_wins}/{low_sparsity_cells} \
+         cells (paper: DSEE wins the low-sparsity regime at ~200× fewer trainables)"
+    );
+}

@@ -1,0 +1,192 @@
+//! Performance micro/meso benches for the §Perf pass: every hot path in
+//! the stack, measured with the in-crate harness (criterion is
+//! unavailable offline).
+//!
+//! * L3 native engine: matmul kernels (serial + threaded), DseeLinear
+//!   forward/backward, a full training step, GreBsmo, global pruning;
+//! * Serving: dynamic-batcher round-trip on a null backend (queue
+//!   overhead) and on the native model;
+//! * Runtime: PJRT execute latency for the kernel/forward/train-step
+//!   artifacts (skipped gracefully when artifacts are absent).
+
+use dsee::bench_harness::{bench, black_box};
+use dsee::config::{DseeCfg, ModelCfg, TrainCfg};
+use dsee::coordinator::serve::{start, EchoBackend, ServeCfg};
+use dsee::data::glue::{make_dataset, GlueTask};
+use dsee::dsee::grebsmo::grebsmo;
+use dsee::dsee::magnitude_prune::magnitude_prune_global;
+use dsee::dsee::attach_dsee;
+use dsee::nn::Transformer;
+use dsee::runtime::bridge::{export_params, split_param_specs};
+use dsee::runtime::{default_artifact_dir, Input, Runtime};
+use dsee::tensor::linalg::{matmul, matmul_at, matmul_bt, par_matmul};
+use dsee::tensor::Tensor;
+use dsee::train::trainer::Trainer;
+use dsee::util::Rng;
+use std::time::Duration;
+
+fn main() {
+    dsee::util::logging::init();
+    let mut rng = Rng::new(0xBE7C);
+    println!("== L3 tensor kernels ==");
+    let a = Tensor::randn(&[256, 256], 1.0, &mut rng);
+    let b = Tensor::randn(&[256, 256], 1.0, &mut rng);
+    let flops = 2.0 * 256f64.powi(3);
+    let s = bench("matmul 256^3", 3, 20, || {
+        black_box(matmul(&a, &b));
+    });
+    println!("    → {:.2} GFLOP/s", s.throughput(flops) / 1e9);
+    let s = bench("matmul_bt 256^3", 3, 20, || {
+        black_box(matmul_bt(&a, &b));
+    });
+    println!("    → {:.2} GFLOP/s", s.throughput(flops) / 1e9);
+    let s = bench("matmul_at 256^3", 3, 20, || {
+        black_box(matmul_at(&a, &b));
+    });
+    println!("    → {:.2} GFLOP/s", s.throughput(flops) / 1e9);
+    let threads = std::thread::available_parallelism().map(|x| x.get()).unwrap_or(4);
+    let big_a = Tensor::randn(&[512, 512], 1.0, &mut rng);
+    let big_b = Tensor::randn(&[512, 512], 1.0, &mut rng);
+    let big_flops = 2.0 * 512f64.powi(3);
+    let s = bench("matmul 512^3 serial", 2, 10, || {
+        black_box(matmul(&big_a, &big_b));
+    });
+    println!("    → {:.2} GFLOP/s", s.throughput(big_flops) / 1e9);
+    let s = bench(&format!("par_matmul 512^3 ({threads}T)"), 2, 10, || {
+        black_box(par_matmul(&big_a, &big_b, threads));
+    });
+    println!("    → {:.2} GFLOP/s", s.throughput(big_flops) / 1e9);
+
+    println!("\n== DSEE layer ==");
+    let mut lin = dsee::nn::linear::Linear::new(256, 256, &mut rng);
+    lin.add_adapter(16, &mut rng);
+    lin.add_residual((0..64).map(|i| (i * 3 % 256, i * 7 % 256)).collect());
+    let mut mask = Tensor::full(&[256, 256], 1.0);
+    for i in 0..mask.numel() / 2 {
+        mask.data[i * 2] = 0.0;
+    }
+    lin.mask = Some(mask);
+    let x = Tensor::randn(&[64, 256], 1.0, &mut rng);
+    bench("DseeLinear fwd 64x256x256 (masked+UV+S2)", 3, 30, || {
+        black_box(lin.forward(&x));
+    });
+    let y = lin.forward(&x);
+    bench("DseeLinear bwd 64x256x256", 3, 30, || {
+        lin.zero_grad();
+        black_box(lin.backward(&x, &y));
+    });
+
+    println!("\n== training step (SimBert-S, batch 32) ==");
+    let arch = ModelCfg::sim_bert_s();
+    let mut model = Transformer::new(&arch, &mut rng);
+    attach_dsee(
+        &mut model,
+        &DseeCfg {
+            rank: 8,
+            n_sparse: 64,
+            ..DseeCfg::default()
+        },
+        &mut rng,
+    );
+    let ds = make_dataset(GlueTask::Sst2, 64, 1);
+    let mut trainer = Trainer::new(model, TrainCfg {
+        batch: 32,
+        ..TrainCfg::default()
+    });
+    let s = bench("native DSEE train epoch (2 steps of 32)", 1, 10, || {
+        black_box(trainer.train_classification(&ds, 1));
+    });
+    println!(
+        "    → {:.0} examples/s",
+        s.throughput(64.0)
+    );
+
+    println!("\n== DSEE algorithms ==");
+    let w = Tensor::randn(&[256, 256], 1.0, &mut rng);
+    bench("GreBsmo r=16 c=256 iters=8 on 256²", 1, 8, || {
+        let mut r2 = Rng::new(1);
+        black_box(grebsmo(&w, 16, 256, 8, &mut r2));
+    });
+    let mut prune_model = Transformer::new(&arch, &mut rng);
+    bench("global magnitude prune (SimBert-S, 50%)", 1, 10, || {
+        let mut lins = prune_model.all_linears_mut();
+        black_box(magnitude_prune_global(&mut lins, 0.5));
+    });
+
+    println!("\n== serving coordinator ==");
+    let (client, server) = start(
+        Box::new(EchoBackend {
+            seq: 24,
+            delay: Duration::ZERO,
+        }),
+        ServeCfg {
+            max_batch: 16,
+            max_wait: Duration::from_micros(100),
+            queue_depth: 4096,
+        },
+    );
+    let s = bench("serve round-trip (null backend)", 10, 2000, || {
+        black_box(client.infer(vec![1; 24]).unwrap());
+    });
+    println!(
+        "    → queue+dispatch overhead ≈ {:.1} µs/req",
+        s.mean_s * 1e6
+    );
+    drop(client);
+    server.join();
+
+    println!("\n== PJRT runtime ==");
+    let dir = default_artifact_dir();
+    match Runtime::load_dir(&dir) {
+        Err(e) => println!("(artifacts not built — skipping PJRT benches: {e})"),
+        Ok(rt) => {
+            // dsee_linear kernel artifact.
+            let art = rt.artifact("dsee_linear").unwrap();
+            let inputs_t: Vec<Tensor> = art
+                .inputs
+                .iter()
+                .map(|s| Tensor::randn(&s.shape, 0.5, &mut rng))
+                .collect();
+            let inputs: Vec<Input<'_>> = inputs_t.iter().map(Input::F32).collect();
+            bench("PJRT dsee_linear (384x64x64 r8)", 5, 50, || {
+                black_box(rt.execute("dsee_linear", &inputs).unwrap());
+            });
+
+            // encoder_fwd artifact with a real model's weights.
+            let mut model = dsee::train::pretrain::pretrain_encoder(&arch, 1, 10);
+            Trainer::set_task_head(&mut model, false, 2, &mut Rng::new(2));
+            attach_dsee(
+                &mut model,
+                &DseeCfg {
+                    rank: 8,
+                    n_sparse: 64,
+                    ..DseeCfg::default()
+                },
+                &mut Rng::new(3),
+            );
+            let fwd = rt.artifact("encoder_fwd").unwrap();
+            let (param_specs, _) = split_param_specs(&fwd.inputs);
+            let params = export_params(&model, &param_specs).unwrap();
+            let ids: Vec<i32> = (0..16 * 24).map(|i| (i % 256) as i32).collect();
+            let ids_shape = [16usize, 24];
+            let mut inputs: Vec<Input<'_>> = params.iter().map(Input::F32).collect();
+            inputs.push(Input::I32(&ids, &ids_shape));
+            let s = bench("PJRT encoder_fwd literal-path (batch 16)", 3, 30, || {
+                black_box(rt.execute("encoder_fwd", &inputs).unwrap());
+            });
+            println!("    → {:.0} examples/s", s.throughput(16.0));
+
+            // §Perf A/B: resident-parameter buffers vs per-call literals.
+            let param_bufs: Vec<xla::PjRtBuffer> =
+                params.iter().map(|t| rt.upload_f32(t).unwrap()).collect();
+            let s = bench("PJRT encoder_fwd buffer-path (batch 16)", 3, 30, || {
+                let ids_buf = rt.upload_i32(&ids, &ids_shape).unwrap();
+                let args: Vec<&xla::PjRtBuffer> =
+                    param_bufs.iter().chain(std::iter::once(&ids_buf)).collect();
+                black_box(rt.execute_buffers("encoder_fwd", &args).unwrap());
+            });
+            println!("    → {:.0} examples/s", s.throughput(16.0));
+        }
+    }
+    println!("\nperf_hotpath done");
+}

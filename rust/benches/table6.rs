@@ -1,0 +1,123 @@
+//! **Table 6** — where the sparsity masks sit (§4.2): one-shot magnitude
+//! pruning (W⊙S₁, then full fine-tune), W⊙S₁+UV, W+UV+S₂ (no pruning),
+//! and the full DSEE W⊙S₁+UV+S₂, against the fine-tune reference, on
+//! SST-2 / MNLI / CoLA / STS-B.
+//!
+//! Expected shape (paper): ① no embedded sparsity (W+UV+S₂) is best
+//! overall; ② embedding S₁ costs little; ③ full DSEE keeps quality
+//! with parameter efficiency.
+
+use dsee::config::{DseeCfg, ModelCfg, TrainCfg};
+use dsee::coordinator::{jobs_from, run_grid, JobOutcome};
+use dsee::data::glue::GlueTask;
+use dsee::report::{write_results_json, Table};
+use dsee::train::baselines::{run_glue, Method};
+use dsee::train::{fmt_params, RunResult};
+
+fn main() {
+    dsee::util::logging::init();
+    let arch = ModelCfg::sim_bert_s();
+    let cfg = TrainCfg::default();
+    let tasks = [GlueTask::Sst2, GlueTask::Mnli, GlueTask::Cola, GlueTask::Stsb];
+
+    let variants: Vec<(&str, Method)> = vec![
+        ("Fine-tune", Method::FullFinetune),
+        (
+            "W⊙S1",
+            Method::PruneThenFt {
+                sparsity: 0.5,
+                global: true,
+            },
+        ),
+        (
+            "W⊙S1 + UV",
+            Method::Dsee(DseeCfg {
+                rank: 8,
+                n_sparse: 0,
+                omega_method: "empty".into(),
+                unstructured_sparsity: 0.5,
+                ..DseeCfg::default()
+            }),
+        ),
+        (
+            "W + UV + S2",
+            Method::Dsee(DseeCfg {
+                rank: 8,
+                n_sparse: 64,
+                ..DseeCfg::default()
+            }),
+        ),
+        (
+            "W⊙S1 + UV + S2",
+            Method::Dsee(DseeCfg {
+                rank: 8,
+                n_sparse: 64,
+                unstructured_sparsity: 0.5,
+                ..DseeCfg::default()
+            }),
+        ),
+    ];
+
+    let mut jobs = Vec::new();
+    for (_, m) in &variants {
+        for t in tasks {
+            let (m, arch, cfg) = (m.clone(), arch.clone(), cfg.clone());
+            jobs.push((
+                format!("{}/{}", m.name(), t.name()),
+                move || run_glue(&m, t, &arch, &cfg, 6),
+            ));
+        }
+    }
+    let workers = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4);
+    let outcomes = run_grid(jobs_from(jobs), workers);
+    let mut results: Vec<RunResult> = Vec::new();
+    for o in outcomes {
+        match o {
+            JobOutcome::Done(r) => results.push(r),
+            JobOutcome::Failed { name, error } => eprintln!("FAILED {name}: {error}"),
+        }
+    }
+
+    let mut table = Table::new(
+        "Table 6 — mask-position ablation (paper §4.2)",
+        &["variant", "trainable", "sparsity", "sst2 acc", "mnli acc", "cola mcc", "stsb pearson"],
+    );
+    for (label, m) in &variants {
+        let first = results.iter().find(|r| r.method == m.name()).expect("row");
+        let mut row = vec![
+            label.to_string(),
+            fmt_params(first.trainable_params),
+            m.sparsity_desc(),
+        ];
+        for t in tasks {
+            let r = results
+                .iter()
+                .find(|r| r.method == m.name() && r.task == t.name())
+                .expect("cell");
+            row.push(format!("{:.4}", r.metric(t.metric())));
+        }
+        table.row(row);
+    }
+    table.emit("table6");
+    write_results_json("table6", &results.iter().collect::<Vec<_>>());
+
+    // Shape check ①: the unpruned DSEE should be the best DSEE variant.
+    let mean = |mname: &str| -> f64 {
+        tasks
+            .iter()
+            .filter_map(|t| {
+                results
+                    .iter()
+                    .find(|r| r.method == mname && r.task == t.name())
+                    .map(|r| r.metric(t.metric()))
+            })
+            .sum::<f64>()
+            / 4.0
+    };
+    let unpruned = mean(&variants[3].1.name());
+    let pruned = mean(&variants[4].1.name());
+    println!(
+        "mean metric W+UV+S2 {unpruned:.4} vs W⊙S1+UV+S2 {pruned:.4} \
+         (paper: unpruned best, pruning costs little)"
+    );
+}

@@ -1,0 +1,105 @@
+//! Bench harness (criterion is unavailable offline): warmup + timed
+//! iterations with mean/std/percentile reporting, plus a throughput
+//! helper. Used by every `benches/*.rs` target (`harness = false`).
+
+use crate::util::stats;
+use std::time::Instant;
+
+/// Result of one benchmark case.
+#[derive(Clone, Debug)]
+pub struct BenchStats {
+    pub name: String,
+    pub iters: usize,
+    pub mean_s: f64,
+    pub std_s: f64,
+    pub p50_s: f64,
+    pub p95_s: f64,
+}
+
+impl BenchStats {
+    pub fn report(&self) {
+        println!(
+            "{:<44} {:>10.3} ms ± {:>8.3}  (p50 {:.3}, p95 {:.3}, n={})",
+            self.name,
+            self.mean_s * 1e3,
+            self.std_s * 1e3,
+            self.p50_s * 1e3,
+            self.p95_s * 1e3,
+            self.iters
+        );
+    }
+
+    /// Items/second given a per-iteration item count.
+    pub fn throughput(&self, items_per_iter: f64) -> f64 {
+        if self.mean_s == 0.0 {
+            0.0
+        } else {
+            items_per_iter / self.mean_s
+        }
+    }
+}
+
+/// Time `f` for `iters` iterations after `warmup` runs.
+pub fn bench<F: FnMut()>(name: &str, warmup: usize, iters: usize, mut f: F) -> BenchStats {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_secs_f64());
+    }
+    let stats_out = BenchStats {
+        name: name.to_string(),
+        iters,
+        mean_s: stats::mean(&samples),
+        std_s: stats::std(&samples),
+        p50_s: stats::percentile(&samples, 50.0),
+        p95_s: stats::percentile(&samples, 95.0),
+    };
+    stats_out.report();
+    stats_out
+}
+
+/// Time a single long-running closure (table-regeneration benches).
+pub fn time_once<T>(name: &str, f: impl FnOnce() -> T) -> (T, f64) {
+    let t0 = Instant::now();
+    let out = f();
+    let secs = t0.elapsed().as_secs_f64();
+    println!("{name}: {secs:.2}s");
+    (out, secs)
+}
+
+/// Prevent the optimizer from discarding a value.
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_sleep() {
+        let s = bench("sleep-1ms", 1, 5, || {
+            std::thread::sleep(std::time::Duration::from_millis(1))
+        });
+        assert!(s.mean_s >= 0.001);
+        assert!(s.mean_s < 0.05);
+        assert_eq!(s.iters, 5);
+    }
+
+    #[test]
+    fn throughput_math() {
+        let s = BenchStats {
+            name: "t".into(),
+            iters: 1,
+            mean_s: 0.5,
+            std_s: 0.0,
+            p50_s: 0.5,
+            p95_s: 0.5,
+        };
+        assert_eq!(s.throughput(100.0), 200.0);
+    }
+}

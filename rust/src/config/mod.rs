@@ -1,0 +1,258 @@
+//! Typed configuration with JSON round-trip.
+//!
+//! Three config families: model architecture ([`ModelCfg`]), fine-tuning
+//! run ([`TrainCfg`]), and the DSEE method itself ([`DseeCfg`]). Preset
+//! constructors mirror the paper's backbones at simulation scale (see
+//! DESIGN.md §3 for the substitution rationale) — plus the analytic
+//! BERT_BASE-sized config used by the FLOPs benches.
+
+use crate::util::Json;
+
+/// Transformer architecture.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ModelCfg {
+    pub name: String,
+    pub vocab: usize,
+    pub max_seq: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub d_ffn: usize,
+    pub causal: bool,
+    pub n_classes: usize,
+    /// "classifier" | "regressor" | "lm"
+    pub head: String,
+    /// Reserved rows for prefix tuning (0 unless the Prefix baseline).
+    pub n_prefix: usize,
+}
+
+impl ModelCfg {
+    /// SimBert-S: the experiment-grid encoder (each table cell trains in
+    /// seconds on CPU).
+    pub fn sim_bert_s() -> ModelCfg {
+        ModelCfg {
+            name: "SimBert-S".into(),
+            vocab: 256,
+            max_seq: 24,
+            d_model: 64,
+            n_layers: 2,
+            n_heads: 4,
+            d_ffn: 128,
+            causal: false,
+            n_classes: 2,
+            head: "classifier".into(),
+            n_prefix: 0,
+        }
+    }
+
+    /// SimBert-M: the end-to-end driver backbone (~7M params at d=256).
+    pub fn sim_bert_m() -> ModelCfg {
+        ModelCfg {
+            name: "SimBert-M".into(),
+            vocab: 2048,
+            max_seq: 64,
+            d_model: 256,
+            n_layers: 4,
+            n_heads: 8,
+            d_ffn: 1024,
+            causal: false,
+            n_classes: 2,
+            head: "classifier".into(),
+            n_prefix: 0,
+        }
+    }
+
+    /// SimGpt-S: decoder-only for the generation tables.
+    pub fn sim_gpt_s() -> ModelCfg {
+        ModelCfg {
+            name: "SimGpt-S".into(),
+            vocab: 256,
+            max_seq: 32,
+            d_model: 64,
+            n_layers: 2,
+            n_heads: 4,
+            d_ffn: 128,
+            causal: true,
+            n_classes: 0,
+            head: "lm".into(),
+            n_prefix: 0,
+        }
+    }
+
+    /// SimDeberta: a deeper/wider encoder standing in for DeBERTa-large
+    /// relative to SimBert (larger in every dimension, as the paper's
+    /// DeBERTa is relative to BERT).
+    pub fn sim_deberta() -> ModelCfg {
+        ModelCfg {
+            name: "SimDeberta".into(),
+            vocab: 256,
+            max_seq: 24,
+            d_model: 96,
+            n_layers: 3,
+            n_heads: 6,
+            d_ffn: 192,
+            causal: false,
+            n_classes: 2,
+            head: "classifier".into(),
+            n_prefix: 0,
+        }
+    }
+
+    /// The real BERT_BASE dimensions — used *analytically* by the FLOPs
+    /// model (never instantiated as tensors in benches).
+    pub fn bert_base_analytic() -> ModelCfg {
+        ModelCfg {
+            name: "BERT-base".into(),
+            vocab: 30522,
+            max_seq: 128,
+            d_model: 768,
+            n_layers: 12,
+            n_heads: 12,
+            d_ffn: 3072,
+            causal: false,
+            n_classes: 2,
+            head: "classifier".into(),
+            n_prefix: 0,
+        }
+    }
+
+    pub fn head_dim(&self) -> usize {
+        self.d_model / self.n_heads
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("name", Json::str(self.name.clone())),
+            ("vocab", Json::num(self.vocab as f64)),
+            ("max_seq", Json::num(self.max_seq as f64)),
+            ("d_model", Json::num(self.d_model as f64)),
+            ("n_layers", Json::num(self.n_layers as f64)),
+            ("n_heads", Json::num(self.n_heads as f64)),
+            ("d_ffn", Json::num(self.d_ffn as f64)),
+            ("causal", Json::Bool(self.causal)),
+            ("n_classes", Json::num(self.n_classes as f64)),
+            ("head", Json::str(self.head.clone())),
+            ("n_prefix", Json::num(self.n_prefix as f64)),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> crate::Result<ModelCfg> {
+        Ok(ModelCfg {
+            name: j.req_str("name")?.to_string(),
+            vocab: j.req_usize("vocab")?,
+            max_seq: j.req_usize("max_seq")?,
+            d_model: j.req_usize("d_model")?,
+            n_layers: j.req_usize("n_layers")?,
+            n_heads: j.req_usize("n_heads")?,
+            d_ffn: j.req_usize("d_ffn")?,
+            causal: j.get("causal").as_bool().unwrap_or(false),
+            n_classes: j.req_usize("n_classes")?,
+            head: j.req_str("head")?.to_string(),
+            n_prefix: j.get("n_prefix").as_usize().unwrap_or(0),
+        })
+    }
+}
+
+/// Fine-tuning hyperparameters (paper §4 "Training and evaluation
+/// details" + Table A7).
+#[derive(Clone, Debug)]
+pub struct TrainCfg {
+    pub lr: f32,
+    pub lr_after_prune: f32,
+    pub weight_decay: f32,
+    pub batch: usize,
+    /// Epochs of phase-I training before mask search (paper: 3 for BERT,
+    /// 5 for GPT-2).
+    pub epochs_before: usize,
+    /// Recovery epochs after pruning (paper: 3 / 2).
+    pub epochs_after: usize,
+    pub grad_clip: f32,
+    pub seed: u64,
+    /// λ of the ℓ₁ head-gate penalty (paper: 1e-4).
+    pub l1_lambda: f32,
+}
+
+impl Default for TrainCfg {
+    fn default() -> Self {
+        TrainCfg {
+            lr: 1e-3,
+            lr_after_prune: 5e-4,
+            weight_decay: 0.01,
+            batch: 32,
+            epochs_before: 3,
+            epochs_after: 3,
+            grad_clip: 1.0,
+            seed: 0xD5EE,
+            l1_lambda: 1e-4,
+        }
+    }
+}
+
+/// DSEE method hyperparameters (paper §4: r=16 / N=64 on BERT; r=2 on
+/// GPT-2; unstructured 50%; structured 25%/33% + 40% FFN).
+#[derive(Clone, Debug)]
+pub struct DseeCfg {
+    /// Low-rank dimension r.
+    pub rank: usize,
+    /// Non-zeros per projection matrix in S₂ (the paper's N).
+    pub n_sparse: usize,
+    /// Unstructured sparsity in pre-trained weights (0 = dense).
+    pub unstructured_sparsity: f64,
+    /// Fraction of attention heads pruned per layer (0 = none).
+    pub structured_head_frac: f64,
+    /// Fraction of FFN intermediate units pruned (paper: 0.40).
+    pub structured_ffn_frac: f64,
+    /// Ω selection: "decompose" | "magnitude" | "random" | "empty".
+    pub omega_method: String,
+    /// GreBsmo iterations for the decomposition.
+    pub grebsmo_iters: usize,
+}
+
+impl Default for DseeCfg {
+    fn default() -> Self {
+        DseeCfg {
+            rank: 8,
+            n_sparse: 64,
+            unstructured_sparsity: 0.0,
+            structured_head_frac: 0.0,
+            structured_ffn_frac: 0.0,
+            omega_method: "decompose".into(),
+            grebsmo_iters: 12,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn model_cfg_json_round_trip() {
+        let cfg = ModelCfg::sim_bert_m();
+        let j = cfg.to_json();
+        let back = ModelCfg::from_json(&j).unwrap();
+        assert_eq!(cfg, back);
+    }
+
+    #[test]
+    fn presets_are_consistent() {
+        for cfg in [
+            ModelCfg::sim_bert_s(),
+            ModelCfg::sim_bert_m(),
+            ModelCfg::sim_gpt_s(),
+            ModelCfg::sim_deberta(),
+            ModelCfg::bert_base_analytic(),
+        ] {
+            assert_eq!(cfg.d_model % cfg.n_heads, 0, "{}", cfg.name);
+            assert!(cfg.vocab > 0 && cfg.max_seq > 0);
+        }
+        assert!(ModelCfg::sim_gpt_s().causal);
+        assert!(!ModelCfg::sim_bert_s().causal);
+    }
+
+    #[test]
+    fn missing_field_errors() {
+        let j = Json::parse(r#"{"name":"x"}"#).unwrap();
+        assert!(ModelCfg::from_json(&j).is_err());
+    }
+}

@@ -1,0 +1,174 @@
+//! Layer-3 coordination: a worker-pool experiment scheduler (drives the
+//! table/figure benches across threads) and a dynamic-batching serving
+//! loop over either the native engine or a PJRT artifact.
+//!
+//! No tokio offline — the event loop is `std::thread` + channels, which
+//! at this request scale (CPU inference, μs-scale queue ops) is not the
+//! bottleneck (see EXPERIMENTS.md §Perf).
+
+pub mod serve;
+
+use crate::train::RunResult;
+use std::panic::AssertUnwindSafe;
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+
+/// One experiment job: a named closure producing a RunResult.
+pub struct Job {
+    pub id: usize,
+    pub name: String,
+    pub run: Box<dyn FnOnce() -> RunResult + Send>,
+}
+
+/// Outcome of a job (panics are contained and reported as failures —
+/// one bad cell must not take down a whole table).
+pub enum JobOutcome {
+    Done(RunResult),
+    Failed { name: String, error: String },
+}
+
+/// Run `jobs` on `workers` OS threads; results return in job order.
+pub fn run_grid(jobs: Vec<Job>, workers: usize) -> Vec<JobOutcome> {
+    let n = jobs.len();
+    let queue = Arc::new(Mutex::new(jobs));
+    let (tx, rx) = mpsc::channel::<(usize, JobOutcome)>();
+    let workers = workers.max(1).min(n.max(1));
+    std::thread::scope(|scope| {
+        for _ in 0..workers {
+            let queue = Arc::clone(&queue);
+            let tx = tx.clone();
+            scope.spawn(move || loop {
+                let job = {
+                    let mut q = queue.lock().unwrap();
+                    q.pop()
+                };
+                let Some(job) = job else { break };
+                let Job { id, name, run } = job;
+                let outcome = match std::panic::catch_unwind(AssertUnwindSafe(run)) {
+                    Ok(result) => JobOutcome::Done(result),
+                    Err(panic) => {
+                        let error = panic
+                            .downcast_ref::<String>()
+                            .cloned()
+                            .or_else(|| panic.downcast_ref::<&str>().map(|s| s.to_string()))
+                            .unwrap_or_else(|| "unknown panic".into());
+                        JobOutcome::Failed { name, error }
+                    }
+                };
+                let _ = tx.send((id, outcome));
+            });
+        }
+        drop(tx);
+        let mut slots: Vec<Option<JobOutcome>> = (0..n).map(|_| None).collect();
+        for (id, outcome) in rx {
+            slots[id] = Some(outcome);
+        }
+        slots.into_iter().map(|s| s.expect("job lost")).collect()
+    })
+}
+
+/// Convenience: build jobs from (name, closure) pairs.
+pub fn jobs_from<F>(items: Vec<(String, F)>) -> Vec<Job>
+where
+    F: FnOnce() -> RunResult + Send + 'static,
+{
+    items
+        .into_iter()
+        .enumerate()
+        .map(|(id, (name, run))| Job {
+            id,
+            name,
+            run: Box::new(run),
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::collections::BTreeMap;
+
+    fn dummy_result(tag: &str) -> RunResult {
+        let mut metrics = BTreeMap::new();
+        metrics.insert("acc".to_string(), tag.len() as f64);
+        RunResult {
+            method: tag.to_string(),
+            task: "t".into(),
+            trainable_params: 0,
+            total_params: 0,
+            sparsity: "0%".into(),
+            metrics,
+            losses: vec![],
+            seconds: 0.0,
+        }
+    }
+
+    #[test]
+    fn grid_preserves_order_across_workers() {
+        let jobs: Vec<Job> = (0..16)
+            .map(|i| Job {
+                id: i,
+                name: format!("job{i}"),
+                run: Box::new(move || {
+                    // Deliberately uneven runtimes.
+                    std::thread::sleep(std::time::Duration::from_millis(
+                        ((16 - i) % 5) as u64,
+                    ));
+                    dummy_result(&format!("m{i}"))
+                }),
+            })
+            .collect();
+        let out = run_grid(jobs, 4);
+        assert_eq!(out.len(), 16);
+        for (i, o) in out.iter().enumerate() {
+            match o {
+                JobOutcome::Done(r) => assert_eq!(r.method, format!("m{i}")),
+                JobOutcome::Failed { .. } => panic!("job {i} failed"),
+            }
+        }
+    }
+
+    #[test]
+    fn worker_panic_is_contained() {
+        let jobs: Vec<Job> = vec![
+            Job {
+                id: 0,
+                name: "ok".into(),
+                run: Box::new(|| dummy_result("fine")),
+            },
+            Job {
+                id: 1,
+                name: "boom".into(),
+                run: Box::new(|| panic!("injected failure")),
+            },
+            Job {
+                id: 2,
+                name: "ok2".into(),
+                run: Box::new(|| dummy_result("fine2")),
+            },
+        ];
+        let out = run_grid(jobs, 2);
+        assert!(matches!(out[0], JobOutcome::Done(_)));
+        match &out[1] {
+            JobOutcome::Failed { name, error } => {
+                assert_eq!(name, "boom");
+                assert!(error.contains("injected"));
+            }
+            _ => panic!("expected failure"),
+        }
+        assert!(matches!(out[2], JobOutcome::Done(_)));
+    }
+
+    #[test]
+    fn single_worker_serial() {
+        let jobs: Vec<Job> = (0..3)
+            .map(|i| Job {
+                id: i,
+                name: format!("j{i}"),
+                run: Box::new(move || dummy_result(&format!("s{i}"))),
+            })
+            .collect();
+        let out = run_grid(jobs, 1);
+        assert_eq!(out.len(), 3);
+    }
+}

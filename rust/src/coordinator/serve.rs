@@ -1,0 +1,304 @@
+//! Dynamic-batching inference server.
+//!
+//! Requests enter a bounded queue; a batcher thread drains up to
+//! `max_batch` requests (waiting at most `max_wait` for stragglers),
+//! runs one forward on the backend, and answers each request through
+//! its own channel. This is the paper's "resource-efficient inference"
+//! story operationalized: the same loop runs the dense model, the
+//! unstructured-pruned model, and the structurally-pruned model, and the
+//! serve example reports the latency/throughput difference.
+
+use crate::nn::Transformer;
+use std::sync::mpsc::{self, Receiver, RecvTimeoutError, Sender, SyncSender};
+use std::time::{Duration, Instant};
+
+/// Inference backend abstraction: native engine or PJRT artifact.
+pub trait Backend: Send {
+    /// Classify a flat batch; returns per-example logits rows.
+    fn infer(&self, ids: &[u32], batch: usize, seq: usize) -> Vec<Vec<f32>>;
+    fn seq_len(&self) -> usize;
+}
+
+/// Native-engine backend.
+pub struct NativeBackend {
+    pub model: Transformer,
+}
+
+impl Backend for NativeBackend {
+    fn infer(&self, ids: &[u32], batch: usize, seq: usize) -> Vec<Vec<f32>> {
+        let (logits, _) = self.model.forward(ids, batch, seq);
+        (0..batch).map(|i| logits.row(i).to_vec()).collect()
+    }
+
+    fn seq_len(&self) -> usize {
+        self.model.cfg.max_seq
+    }
+}
+
+/// One request: token ids + reply channel.
+pub struct Request {
+    pub ids: Vec<u32>,
+    pub reply: Sender<Response>,
+    pub enqueued: Instant,
+}
+
+/// Reply: logits + queueing/compute latency breakdown.
+#[derive(Clone, Debug)]
+pub struct Response {
+    pub logits: Vec<f32>,
+    pub queue_us: u64,
+    pub batch_size: usize,
+}
+
+/// Server configuration.
+#[derive(Clone, Debug)]
+pub struct ServeCfg {
+    pub max_batch: usize,
+    pub max_wait: Duration,
+    pub queue_depth: usize,
+}
+
+impl Default for ServeCfg {
+    fn default() -> Self {
+        ServeCfg {
+            max_batch: 16,
+            max_wait: Duration::from_millis(2),
+            queue_depth: 1024,
+        }
+    }
+}
+
+/// Handle for submitting requests.
+#[derive(Clone)]
+pub struct Client {
+    tx: SyncSender<Request>,
+}
+
+impl Client {
+    /// Submit and wait for the reply.
+    pub fn infer(&self, ids: Vec<u32>) -> crate::Result<Response> {
+        let (reply_tx, reply_rx) = mpsc::channel();
+        self.tx
+            .send(Request {
+                ids,
+                reply: reply_tx,
+                enqueued: Instant::now(),
+            })
+            .map_err(|_| anyhow::anyhow!("server stopped"))?;
+        reply_rx
+            .recv()
+            .map_err(|_| anyhow::anyhow!("server dropped request"))
+    }
+}
+
+/// The running server; dropping `Client`s then calling `join` shuts down.
+pub struct Server {
+    handle: Option<std::thread::JoinHandle<ServeStats>>,
+}
+
+/// Aggregate statistics from the batcher loop.
+#[derive(Clone, Debug, Default)]
+pub struct ServeStats {
+    pub requests: usize,
+    pub batches: usize,
+    pub total_batch_fill: usize,
+}
+
+impl ServeStats {
+    pub fn mean_batch(&self) -> f64 {
+        if self.batches == 0 {
+            0.0
+        } else {
+            self.total_batch_fill as f64 / self.batches as f64
+        }
+    }
+}
+
+/// Start the server; returns (client handle, server).
+pub fn start(backend: Box<dyn Backend>, cfg: ServeCfg) -> (Client, Server) {
+    let (tx, rx) = mpsc::sync_channel::<Request>(cfg.queue_depth);
+    let handle = std::thread::spawn(move || batcher_loop(backend, cfg, rx));
+    (
+        Client { tx },
+        Server {
+            handle: Some(handle),
+        },
+    )
+}
+
+impl Server {
+    /// Wait for shutdown (all clients dropped) and return stats.
+    pub fn join(mut self) -> ServeStats {
+        self.handle.take().unwrap().join().unwrap_or_default()
+    }
+}
+
+fn batcher_loop(backend: Box<dyn Backend>, cfg: ServeCfg, rx: Receiver<Request>) -> ServeStats {
+    let seq = backend.seq_len();
+    let mut stats = ServeStats::default();
+    loop {
+        // Block for the first request of a batch.
+        let first = match rx.recv() {
+            Ok(r) => r,
+            Err(_) => return stats, // all senders gone
+        };
+        let mut batch = vec![first];
+        let deadline = Instant::now() + cfg.max_wait;
+        // Fill up to max_batch or until the wait budget expires.
+        while batch.len() < cfg.max_batch {
+            let now = Instant::now();
+            if now >= deadline {
+                break;
+            }
+            match rx.recv_timeout(deadline - now) {
+                Ok(r) => batch.push(r),
+                Err(RecvTimeoutError::Timeout) => break,
+                Err(RecvTimeoutError::Disconnected) => break,
+            }
+        }
+        // Assemble, validating sequence lengths.
+        let bsz = batch.len();
+        let mut ids = Vec::with_capacity(bsz * seq);
+        for r in &batch {
+            assert_eq!(r.ids.len(), seq, "request seq mismatch");
+            ids.extend_from_slice(&r.ids);
+        }
+        let logits = backend.infer(&ids, bsz, seq);
+        let now = Instant::now();
+        stats.requests += bsz;
+        stats.batches += 1;
+        stats.total_batch_fill += bsz;
+        for (r, row) in batch.into_iter().zip(logits) {
+            let queue_us = now.duration_since(r.enqueued).as_micros() as u64;
+            let _ = r.reply.send(Response {
+                logits: row,
+                queue_us,
+                batch_size: bsz,
+            });
+        }
+    }
+}
+
+/// A trivially checkable backend for tests: logits = [sum(ids), batch].
+pub struct EchoBackend {
+    pub seq: usize,
+    pub delay: Duration,
+}
+
+impl Backend for EchoBackend {
+    fn infer(&self, ids: &[u32], batch: usize, seq: usize) -> Vec<Vec<f32>> {
+        if !self.delay.is_zero() {
+            std::thread::sleep(self.delay);
+        }
+        (0..batch)
+            .map(|i| {
+                let row = &ids[i * seq..(i + 1) * seq];
+                vec![row.iter().sum::<u32>() as f32, batch as f32]
+            })
+            .collect()
+    }
+
+    fn seq_len(&self) -> usize {
+        self.seq
+    }
+}
+
+/// Latency summary helper used by the serve example and benches.
+pub fn latency_summary(mut micros: Vec<f64>) -> (f64, f64, f64) {
+    use crate::util::stats::percentile;
+    if micros.is_empty() {
+        return (0.0, 0.0, 0.0);
+    }
+    micros.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    (
+        percentile(&micros, 50.0),
+        percentile(&micros, 95.0),
+        percentile(&micros, 99.0),
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn responses_match_requests() {
+        let (client, server) = start(
+            Box::new(EchoBackend {
+                seq: 4,
+                delay: Duration::ZERO,
+            }),
+            ServeCfg::default(),
+        );
+        let mut expected = Vec::new();
+        let mut got = Vec::new();
+        for i in 0..20u32 {
+            let ids = vec![i, i + 1, i + 2, i + 3];
+            expected.push(ids.iter().sum::<u32>() as f32);
+            got.push(client.infer(ids).unwrap().logits[0]);
+        }
+        assert_eq!(expected, got);
+        drop(client);
+        let stats = server.join();
+        assert_eq!(stats.requests, 20);
+    }
+
+    #[test]
+    fn concurrent_clients_all_served_with_batching() {
+        let (client, server) = start(
+            Box::new(EchoBackend {
+                seq: 2,
+                delay: Duration::from_millis(3),
+            }),
+            ServeCfg {
+                max_batch: 8,
+                max_wait: Duration::from_millis(5),
+                queue_depth: 256,
+            },
+        );
+        let mut handles = Vec::new();
+        for t in 0..6 {
+            let c = client.clone();
+            handles.push(std::thread::spawn(move || {
+                let mut out = Vec::new();
+                for i in 0..10u32 {
+                    let ids = vec![t, i];
+                    let resp = c.infer(ids).unwrap();
+                    out.push((t + i, resp.logits[0] as u32, resp.batch_size));
+                }
+                out
+            }));
+        }
+        drop(client);
+        let mut max_batch_seen = 0;
+        for h in handles {
+            for (want, got, bsz) in h.join().unwrap() {
+                assert_eq!(want, got);
+                max_batch_seen = max_batch_seen.max(bsz);
+            }
+        }
+        let stats = server.join();
+        assert_eq!(stats.requests, 60);
+        // With 6 concurrent clients and a slow backend, batches form.
+        assert!(max_batch_seen > 1, "no dynamic batching observed");
+        assert!(stats.mean_batch() > 1.0);
+    }
+
+    #[test]
+    fn native_backend_serves_model() {
+        use crate::config::ModelCfg;
+        use crate::util::Rng;
+        let mut rng = Rng::new(500);
+        let model = Transformer::new(&ModelCfg::sim_bert_s(), &mut rng);
+        let seq = model.cfg.max_seq;
+        let (client, server) = start(
+            Box::new(NativeBackend { model }),
+            ServeCfg::default(),
+        );
+        let resp = client.infer(vec![1; seq]).unwrap();
+        assert_eq!(resp.logits.len(), 2);
+        assert!(resp.logits.iter().all(|x| x.is_finite()));
+        drop(client);
+        server.join();
+    }
+}

@@ -1,0 +1,146 @@
+//! Synthetic pre-training corpus.
+//!
+//! Sequences are emitted by a first-order Markov chain over concept
+//! groups (with intra-group token choice and noise injection), so the
+//! statistics a pre-trained model must internalize — group co-occurrence,
+//! token↔group identity, positional regularities — are exactly the
+//! statistics every downstream task (glue.rs, datatotext.rs) is built
+//! from. "Pre-training" on this corpus therefore plays the role BERT/GPT
+//! pre-training plays for GLUE/E2E in the paper.
+
+use super::vocab::*;
+use crate::util::Rng;
+
+/// Group-transition matrix of the corpus grammar (row-stochastic).
+/// Deterministic function of the seed so pre-train and analysis agree.
+fn transition_matrix(rng: &mut Rng) -> Vec<Vec<f64>> {
+    let mut m = vec![vec![0.0f64; N_GROUPS]; N_GROUPS];
+    for (i, row) in m.iter_mut().enumerate() {
+        let mut total = 0.0;
+        for (j, v) in row.iter_mut().enumerate() {
+            // Sparse-ish transitions with a strong self-loop: groups
+            // persist locally (what gives sequences "topic" structure).
+            let base = if rng.coin(0.35) { rng.uniform() + 0.2 } else { 0.02 };
+            *v = if i == j { base + 1.2 } else { base };
+            total += *v;
+        }
+        for v in row.iter_mut() {
+            *v /= total;
+        }
+    }
+    m
+}
+
+fn sample_row(row: &[f64], rng: &mut Rng) -> usize {
+    let x = rng.uniform();
+    let mut acc = 0.0;
+    for (i, &p) in row.iter().enumerate() {
+        acc += p;
+        if x < acc {
+            return i;
+        }
+    }
+    row.len() - 1
+}
+
+/// One corpus sequence of length `len` + the dominant group (the
+/// pre-training classification target).
+pub fn gen_sequence(trans: &[Vec<f64>], len: usize, rng: &mut Rng) -> (Vec<u32>, usize) {
+    let mut g = rng.below(N_GROUPS);
+    let mut counts = vec![0usize; N_GROUPS];
+    let mut ids = Vec::with_capacity(len);
+    for _ in 0..len {
+        if rng.coin(0.1) {
+            ids.push(noise_token(rng.below(N_NOISE)));
+        } else {
+            ids.push(group_token(g, rng.below(GROUP_SIZE)));
+            counts[g] += 1;
+            g = sample_row(&trans[g], rng);
+        }
+    }
+    let dominant = counts
+        .iter()
+        .enumerate()
+        .max_by_key(|&(_, c)| *c)
+        .map(|(i, _)| i)
+        .unwrap();
+    (ids, dominant)
+}
+
+/// Pre-training dataset: sequences + dominant-group labels (encoder
+/// pre-training) — the same sequences serve as LM data (decoder
+/// pre-training predicts the next token).
+pub struct Corpus {
+    pub sequences: Vec<Vec<u32>>,
+    pub labels: Vec<usize>,
+    pub seq_len: usize,
+}
+
+pub fn make_corpus(n: usize, seq_len: usize, seed: u64) -> Corpus {
+    let mut rng = Rng::new(seed ^ 0xC0_4915);
+    let trans = transition_matrix(&mut rng);
+    let mut sequences = Vec::with_capacity(n);
+    let mut labels = Vec::with_capacity(n);
+    for _ in 0..n {
+        let (ids, dom) = gen_sequence(&trans, seq_len, &mut rng);
+        sequences.push(ids);
+        labels.push(dom);
+    }
+    Corpus {
+        sequences,
+        labels,
+        seq_len,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn corpus_shapes_and_labels() {
+        let c = make_corpus(100, 24, 9);
+        assert_eq!(c.sequences.len(), 100);
+        for (s, &l) in c.sequences.iter().zip(&c.labels) {
+            assert_eq!(s.len(), 24);
+            assert!(l < N_GROUPS);
+            assert!(s.iter().all(|&t| (t as usize) < VOCAB_SIZE));
+        }
+    }
+
+    #[test]
+    fn labels_match_dominant_group() {
+        let c = make_corpus(50, 24, 10);
+        for (s, &l) in c.sequences.iter().zip(&c.labels) {
+            let mut counts = vec![0usize; N_GROUPS];
+            for &t in s {
+                if let Some(g) = token_group(t) {
+                    counts[g] += 1;
+                }
+            }
+            assert_eq!(counts[l], *counts.iter().max().unwrap());
+        }
+    }
+
+    #[test]
+    fn markov_structure_is_present() {
+        // Adjacent concept tokens should repeat groups more often than
+        // uniform chance would predict (the chain has strong self/few
+        // edges), giving pre-training something to learn.
+        let c = make_corpus(200, 24, 11);
+        let mut same = 0usize;
+        let mut total = 0usize;
+        for s in &c.sequences {
+            for w in s.windows(2) {
+                if let (Some(a), Some(b)) = (token_group(w[0]), token_group(w[1])) {
+                    total += 1;
+                    if a == b {
+                        same += 1;
+                    }
+                }
+            }
+        }
+        let frac = same as f64 / total as f64;
+        assert!(frac > 1.5 / N_GROUPS as f64, "group persistence {frac}");
+    }
+}

@@ -1,0 +1,262 @@
+//! Synthetic data-to-text generation tasks standing in for E2E, WebNLG
+//! and DART (DESIGN.md §3).
+//!
+//! A *record* is a list of (attribute, value) pairs. The model input is
+//! the linearized record; the target is a "verbalization" produced by a
+//! stochastic template grammar: each pair maps to a short token phrase,
+//! phrases are joined by connectives, and a reference set is produced by
+//! enumerating connective/order variants — so BLEU/NIST/METEOR/TER all
+//! behave as on real data-to-text corpora (imperfect references,
+//! multiple acceptable outputs).
+//!
+//! Task flavours:
+//! * **E2E-like** — few attributes (restaurant domain shape), short text;
+//! * **WebNLG-like** — mid-size records, 2 reference variants;
+//! * **DART-like** — larger open-domain records, longest outputs.
+
+use super::vocab::*;
+use crate::util::Rng;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum GenTask {
+    E2e,
+    Webnlg,
+    Dart,
+}
+
+pub const ALL_GEN_TASKS: [GenTask; 3] = [GenTask::E2e, GenTask::Webnlg, GenTask::Dart];
+
+impl GenTask {
+    pub fn name(&self) -> &'static str {
+        match self {
+            GenTask::E2e => "e2e",
+            GenTask::Webnlg => "webnlg",
+            GenTask::Dart => "dart",
+        }
+    }
+
+    pub fn parse(s: &str) -> crate::Result<GenTask> {
+        ALL_GEN_TASKS
+            .iter()
+            .find(|t| t.name() == s)
+            .copied()
+            .ok_or_else(|| anyhow::anyhow!("unknown generation task '{s}'"))
+    }
+
+    /// (min, max) attributes per record.
+    fn attr_range(&self) -> (usize, usize) {
+        match self {
+            GenTask::E2e => (3, 5),
+            GenTask::Webnlg => (2, 5),
+            GenTask::Dart => (3, 7),
+        }
+    }
+
+    /// Which slice of attribute ids the task uses (domains differ).
+    fn attr_domain(&self) -> std::ops::Range<usize> {
+        match self {
+            GenTask::E2e => 0..6,
+            GenTask::Webnlg => 4..12,
+            GenTask::Dart => 0..N_ATTRS,
+        }
+    }
+
+    pub fn n_references(&self) -> usize {
+        match self {
+            GenTask::E2e => 2,
+            GenTask::Webnlg => 2,
+            GenTask::Dart => 1,
+        }
+    }
+
+    pub fn train_size(&self) -> usize {
+        match self {
+            GenTask::E2e => 768,
+            GenTask::Webnlg => 512,
+            GenTask::Dart => 512,
+        }
+    }
+
+    pub fn eval_size(&self) -> usize {
+        128
+    }
+}
+
+/// One record: (attribute id, value id) pairs.
+#[derive(Clone, Debug)]
+pub struct Record {
+    pub pairs: Vec<(usize, usize)>,
+}
+
+/// One data-to-text example.
+#[derive(Clone, Debug)]
+pub struct GenExample {
+    /// Linearized record: BOS a₀ v₀ FLD a₁ v₁ … SEP.
+    pub input: Vec<u32>,
+    /// Target verbalization (primary reference) ending in EOS.
+    pub target: Vec<u32>,
+    /// All acceptable references (includes `target`'s token body).
+    pub references: Vec<Vec<u32>>,
+}
+
+#[derive(Clone, Debug)]
+pub struct GenDataset {
+    pub task: GenTask,
+    pub examples: Vec<GenExample>,
+    /// Fixed total sequence length for LM training (input + target).
+    pub seq_len: usize,
+}
+
+fn sample_record(task: GenTask, rng: &mut Rng) -> Record {
+    let (lo, hi) = task.attr_range();
+    let n = lo + rng.below(hi - lo + 1);
+    let dom: Vec<usize> = task.attr_domain().collect();
+    let mut attrs = dom;
+    rng.shuffle(&mut attrs);
+    attrs.truncate(n);
+    attrs.sort_unstable();
+    Record {
+        pairs: attrs
+            .into_iter()
+            .map(|a| (a, rng.below(N_VALUES / 4) + (a % 4) * (N_VALUES / 4)))
+            .collect(),
+    }
+}
+
+pub fn linearize(rec: &Record) -> Vec<u32> {
+    let mut out = vec![BOS];
+    for (k, &(a, v)) in rec.pairs.iter().enumerate() {
+        if k > 0 {
+            out.push(FLD);
+        }
+        out.push(attr_token(a));
+        out.push(value_token(v));
+    }
+    out.push(SEP);
+    out
+}
+
+/// Verbalization grammar: each (a,v) pair renders as
+/// `phrase_tok(a) value_tok(v) [elaboration]`, joined by a connective
+/// chosen by `style`. Deterministic given (rec, style).
+pub fn render(rec: &Record, style: usize) -> Vec<u32> {
+    let mut out = Vec::new();
+    // Connectives are noise-region tokens (they play the role of filler
+    // words — metric-relevant but not record-relevant).
+    let connective = noise_token(style * 3 + 1);
+    for (k, &(a, v)) in rec.pairs.iter().enumerate() {
+        if k > 0 {
+            out.push(connective);
+        }
+        // "Phrase" for attribute a: a fixed concept-group token pair.
+        out.push(group_token(a % N_GROUPS, (a * 2) % GROUP_SIZE));
+        out.push(value_token(v));
+        if style % 2 == 1 && k == 0 {
+            // Style-dependent elaboration token.
+            out.push(group_token((a + 1) % N_GROUPS, (a * 3) % GROUP_SIZE));
+        }
+    }
+    out
+}
+
+/// Generate one example (input + primary target + reference set).
+pub fn gen_example(task: GenTask, rng: &mut Rng) -> GenExample {
+    let rec = sample_record(task, rng);
+    let input = linearize(&rec);
+    let n_refs = task.n_references();
+    let style0 = rng.below(2);
+    let mut references: Vec<Vec<u32>> = (0..n_refs)
+        .map(|k| render(&rec, (style0 + k) % 2))
+        .collect();
+    references.dedup();
+    let mut target = references[0].clone();
+    target.push(EOS);
+    GenExample {
+        input,
+        target,
+        references,
+    }
+}
+
+pub fn make_dataset(task: GenTask, n: usize, seed: u64) -> GenDataset {
+    let mut rng = Rng::new(seed ^ 0xE2E ^ (task as u64) << 13);
+    let examples: Vec<GenExample> = (0..n).map(|_| gen_example(task, &mut rng)).collect();
+    let seq_len = examples
+        .iter()
+        .map(|e| e.input.len() + e.target.len())
+        .max()
+        .unwrap_or(32);
+    GenDataset {
+        task,
+        examples,
+        seq_len,
+    }
+}
+
+pub fn train_eval(task: GenTask, seed: u64) -> (GenDataset, GenDataset) {
+    (
+        make_dataset(task, task.train_size(), seed),
+        make_dataset(task, task.eval_size(), seed.wrapping_add(0x51AB)),
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn examples_are_well_formed() {
+        let mut rng = Rng::new(210);
+        for task in ALL_GEN_TASKS {
+            for _ in 0..40 {
+                let ex = gen_example(task, &mut rng);
+                assert_eq!(ex.input[0], BOS);
+                assert_eq!(*ex.input.last().unwrap(), SEP);
+                assert_eq!(*ex.target.last().unwrap(), EOS);
+                assert!(!ex.references.is_empty());
+                assert!(ex.references.len() <= task.n_references());
+                // Every value token in the input must appear in the target
+                // (faithfulness of the verbalization).
+                for &t in &ex.input {
+                    if (VALUE_START..VALUE_START + N_VALUES as u32).contains(&t) {
+                        assert!(
+                            ex.target.contains(&t),
+                            "{task:?}: value {t} missing from target"
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn rendering_is_deterministic_per_style() {
+        let mut rng = Rng::new(211);
+        let rec = sample_record(GenTask::E2e, &mut rng);
+        assert_eq!(render(&rec, 0), render(&rec, 0));
+        assert_eq!(render(&rec, 1), render(&rec, 1));
+        assert_ne!(render(&rec, 0), render(&rec, 1));
+    }
+
+    #[test]
+    fn dataset_fits_seq_budget() {
+        for task in ALL_GEN_TASKS {
+            let ds = make_dataset(task, 100, 5);
+            assert!(ds.seq_len <= 64, "{task:?} seq {}", ds.seq_len);
+            for e in &ds.examples {
+                assert!(e.input.len() + e.target.len() <= ds.seq_len);
+            }
+        }
+    }
+
+    #[test]
+    fn dart_is_longer_than_e2e() {
+        let e2e = make_dataset(GenTask::E2e, 200, 6);
+        let dart = make_dataset(GenTask::Dart, 200, 6);
+        let avg = |d: &GenDataset| {
+            d.examples.iter().map(|e| e.target.len()).sum::<usize>() as f64
+                / d.examples.len() as f64
+        };
+        assert!(avg(&dart) > avg(&e2e));
+    }
+}

@@ -1,0 +1,470 @@
+//! Synthetic GLUE-like task suite (substitute for the real GLUE — see
+//! DESIGN.md §3).
+//!
+//! Eight tasks mirror the structure and metric of their GLUE namesakes:
+//!
+//! | Task  | Structure | Metric |
+//! |-------|-----------|--------|
+//! | SST-2 | dominant-concept polarity | accuracy |
+//! | CoLA  | token-order "grammaticality" rule | Matthews corr. |
+//! | STS-B | concept overlap of two halves | Pearson r |
+//! | MNLI  | entail / neutral / contradict via set relations | accuracy |
+//! | QQP   | paraphrase detection (large) | accuracy |
+//! | QNLI  | query-token answerability | accuracy |
+//! | MRPC  | paraphrase detection (small) | accuracy |
+//! | RTE   | binary entailment (small) | accuracy |
+//!
+//! Every task is solvable well above chance by a trained encoder but not
+//! by a random one, and dataset sizes mirror GLUE's relative scales so
+//! "small-data" effects (CoLA/RTE being hard, MNLI/QQP being stable)
+//! carry over.
+
+use super::vocab::*;
+use crate::util::Rng;
+
+/// The eight tasks.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum GlueTask {
+    Sst2,
+    Cola,
+    Stsb,
+    Mnli,
+    Qqp,
+    Qnli,
+    Mrpc,
+    Rte,
+}
+
+pub const ALL_TASKS: [GlueTask; 8] = [
+    GlueTask::Cola,
+    GlueTask::Stsb,
+    GlueTask::Mnli,
+    GlueTask::Qqp,
+    GlueTask::Qnli,
+    GlueTask::Mrpc,
+    GlueTask::Rte,
+    GlueTask::Sst2,
+];
+
+/// Classification target or regression score.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Label {
+    Class(usize),
+    Score(f32),
+}
+
+/// One example: fixed-length token ids + label.
+#[derive(Clone, Debug)]
+pub struct Example {
+    pub ids: Vec<u32>,
+    pub label: Label,
+}
+
+/// A generated dataset split.
+#[derive(Clone, Debug)]
+pub struct Dataset {
+    pub task: GlueTask,
+    pub examples: Vec<Example>,
+    pub seq_len: usize,
+}
+
+impl GlueTask {
+    pub fn name(&self) -> &'static str {
+        match self {
+            GlueTask::Sst2 => "sst2",
+            GlueTask::Cola => "cola",
+            GlueTask::Stsb => "stsb",
+            GlueTask::Mnli => "mnli",
+            GlueTask::Qqp => "qqp",
+            GlueTask::Qnli => "qnli",
+            GlueTask::Mrpc => "mrpc",
+            GlueTask::Rte => "rte",
+        }
+    }
+
+    pub fn parse(s: &str) -> crate::Result<GlueTask> {
+        ALL_TASKS
+            .iter()
+            .find(|t| t.name() == s)
+            .copied()
+            .ok_or_else(|| anyhow::anyhow!("unknown glue task '{s}'"))
+    }
+
+    pub fn n_classes(&self) -> usize {
+        match self {
+            GlueTask::Mnli => 3,
+            GlueTask::Stsb => 0, // regression
+            _ => 2,
+        }
+    }
+
+    pub fn is_regression(&self) -> bool {
+        matches!(self, GlueTask::Stsb)
+    }
+
+    /// Metric name (matches the paper's Table headers).
+    pub fn metric(&self) -> &'static str {
+        match self {
+            GlueTask::Cola => "mcc",
+            GlueTask::Stsb => "pearson",
+            _ => "acc",
+        }
+    }
+
+    /// Train-split size (GLUE-relative scale, shrunk for CPU).
+    pub fn train_size(&self) -> usize {
+        match self {
+            GlueTask::Mnli | GlueTask::Qqp | GlueTask::Qnli => 1536,
+            GlueTask::Sst2 | GlueTask::Stsb => 1024,
+            GlueTask::Cola => 640,
+            GlueTask::Mrpc | GlueTask::Rte => 448,
+        }
+    }
+
+    pub fn eval_size(&self) -> usize {
+        (self.train_size() / 4).max(128)
+    }
+
+    pub fn seq_len(&self) -> usize {
+        24
+    }
+}
+
+/// Fill `out` with `n` random tokens drawn from the given concept groups
+/// (plus occasional noise tokens).
+fn fill_random(out: &mut Vec<u32>, n: usize, groups: &[usize], rng: &mut Rng) {
+    for _ in 0..n {
+        if rng.coin(0.15) {
+            out.push(noise_token(rng.below(N_NOISE)));
+        } else {
+            let g = *rng.choose(groups);
+            out.push(group_token(g, rng.below(GROUP_SIZE)));
+        }
+    }
+}
+
+fn pad_to(ids: &mut Vec<u32>, len: usize) {
+    while ids.len() < len {
+        ids.push(PAD);
+    }
+    ids.truncate(len);
+}
+
+/// Generate one example for `task`. `noise` is the label-flip
+/// probability (task difficulty knob; the defaults in `make_dataset`
+/// mirror the paper's relative task difficulties).
+pub fn gen_example(task: GlueTask, noise: f64, rng: &mut Rng) -> Example {
+    let seq = task.seq_len();
+    let mut ids = vec![CLS];
+    let flip = rng.coin(noise);
+    let label = match task {
+        GlueTask::Sst2 => {
+            // Polarity: more group-0 than group-1 tokens → positive.
+            let pos = rng.coin(0.5);
+            let (major, minor) = if pos { (0usize, 1usize) } else { (1, 0) };
+            let n_major = 8 + rng.below(5);
+            let n_minor = 2 + rng.below(3);
+            let mut body = Vec::new();
+            fill_random(&mut body, n_major, &[major], rng);
+            fill_random(&mut body, n_minor, &[minor], rng);
+            fill_random(&mut body, 4, &[2, 3, 4, 5], rng);
+            rng.shuffle(&mut body);
+            ids.extend(body);
+            Label::Class((pos as usize) ^ (flip as usize))
+        }
+        GlueTask::Cola => {
+            // "Grammar": tokens must alternate even-group / odd-group.
+            let ok = rng.coin(0.5);
+            let len = 14 + rng.below(6);
+            let mut body = Vec::with_capacity(len);
+            for i in 0..len {
+                let g = if i % 2 == 0 {
+                    2 * rng.below(N_GROUPS / 2)
+                } else {
+                    2 * rng.below(N_GROUPS / 2) + 1
+                };
+                body.push(group_token(g, rng.below(GROUP_SIZE)));
+            }
+            if !ok {
+                // Violate the rule at ~1/3 of positions (a detectable
+                // violation density — real CoLA is likewise the noisiest
+                // GLUE task but learnable above chance).
+                for _ in 0..len / 3 + rng.below(3) {
+                    let p = rng.below(len);
+                    let g = if p % 2 == 0 {
+                        2 * rng.below(N_GROUPS / 2) + 1
+                    } else {
+                        2 * rng.below(N_GROUPS / 2)
+                    };
+                    body[p] = group_token(g, rng.below(GROUP_SIZE));
+                }
+            }
+            ids.extend(body);
+            Label::Class((ok as usize) ^ (flip as usize))
+        }
+        GlueTask::Stsb => {
+            // Similarity = fraction of concept tokens whose group occurs
+            // on the *other* side of the SEP. Cross-attention marks
+            // matched tokens; mean-pooling counts them — so the target
+            // is exactly representable by the architecture (as real
+            // STS-B similarity is for a real encoder).
+            let n_shared = rng.below(6); // 0..=5 shared groups
+            let all: Vec<usize> = (0..N_GROUPS).collect();
+            let shared: Vec<usize> = all[..n_shared].to_vec();
+            let mut a_groups = shared.clone();
+            let mut b_groups = shared;
+            for g in n_shared..N_GROUPS {
+                if rng.coin(0.5) {
+                    a_groups.push(g);
+                } else {
+                    b_groups.push(g);
+                }
+            }
+            if a_groups.is_empty() {
+                a_groups.push(6);
+            }
+            if b_groups.is_empty() {
+                b_groups.push(7);
+            }
+            let start_a = ids.len();
+            fill_random(&mut ids, 9, &a_groups, rng);
+            let sep_at = ids.len();
+            ids.push(SEP);
+            fill_random(&mut ids, 9, &b_groups, rng);
+            // Matched-token fraction, computed from the actual tokens.
+            let ga: std::collections::HashSet<usize> = ids[start_a..sep_at]
+                .iter()
+                .filter_map(|&t| token_group(t))
+                .collect();
+            let gb: std::collections::HashSet<usize> = ids[sep_at + 1..]
+                .iter()
+                .filter_map(|&t| token_group(t))
+                .collect();
+            let mut matched = 0usize;
+            let mut concept = 0usize;
+            for (k, &t) in ids.iter().enumerate() {
+                if let Some(g) = token_group(t) {
+                    concept += 1;
+                    let other = if k < sep_at { &gb } else { &ga };
+                    if other.contains(&g) {
+                        matched += 1;
+                    }
+                }
+            }
+            let score = if concept > 0 {
+                matched as f32 / concept as f32
+            } else {
+                0.0
+            };
+            Label::Score(score)
+        }
+        GlueTask::Mnli | GlueTask::Rte => {
+            // Premise concepts P; hypothesis: subset (entail), disjoint
+            // (contradict, with NEG marker), or mixed (neutral).
+            let binary = matches!(task, GlueTask::Rte);
+            let class = if binary { rng.below(2) } else { rng.below(3) };
+            let p_groups: Vec<usize> = rng.sample_indices(N_GROUPS, 4);
+            let rest: Vec<usize> = (0..N_GROUPS).filter(|g| !p_groups.contains(g)).collect();
+            fill_random(&mut ids, 9, &p_groups, rng);
+            ids.push(SEP);
+            match class {
+                0 => fill_random(&mut ids, 8, &p_groups[..2].to_vec(), rng), // entail
+                1 => {
+                    // contradict: disjoint groups + negation marker
+                    ids.push(NEG);
+                    fill_random(&mut ids, 7, &rest, rng);
+                }
+                _ => {
+                    // neutral: half overlap
+                    fill_random(&mut ids, 4, &p_groups[..1].to_vec(), rng);
+                    fill_random(&mut ids, 4, &rest, rng);
+                }
+            }
+            let c = if flip { (class + 1) % task.n_classes() } else { class };
+            Label::Class(c)
+        }
+        GlueTask::Qqp | GlueTask::Mrpc => {
+            // Paraphrase: positive = shuffled copy with light edits.
+            let pos = rng.coin(0.5);
+            let mut a = Vec::new();
+            fill_random(&mut a, 9, &(0..N_GROUPS).collect::<Vec<_>>(), rng);
+            let b = if pos {
+                let mut b = a.clone();
+                rng.shuffle(&mut b);
+                // One-token substitution within the same group.
+                let p = rng.below(b.len());
+                if let Some(g) = token_group(b[p]) {
+                    b[p] = group_token(g, rng.below(GROUP_SIZE));
+                }
+                b
+            } else {
+                let mut b = Vec::new();
+                fill_random(&mut b, 9, &(0..N_GROUPS).collect::<Vec<_>>(), rng);
+                b
+            };
+            ids.extend(a);
+            ids.push(SEP);
+            ids.extend(b);
+            Label::Class((pos as usize) ^ (flip as usize))
+        }
+        GlueTask::Qnli => {
+            // "Question" names a concept group via one probe token; the
+            // "passage" answers it iff it contains ≥2 tokens of that group.
+            let answerable = rng.coin(0.5);
+            let qg = rng.below(N_GROUPS);
+            ids.push(group_token(qg, 0)); // canonical probe token
+            ids.push(SEP);
+            let rest: Vec<usize> = (0..N_GROUPS).filter(|&g| g != qg).collect();
+            if answerable {
+                fill_random(&mut ids, 3, &[qg], rng);
+                fill_random(&mut ids, 12, &rest, rng);
+            } else {
+                fill_random(&mut ids, 15, &rest, rng);
+            }
+            // Shuffle the passage part only (after probe+SEP).
+            let body_start = 3;
+            let mut body: Vec<u32> = ids[body_start..].to_vec();
+            rng.shuffle(&mut body);
+            ids.truncate(body_start);
+            ids.extend(body);
+            Label::Class((answerable as usize) ^ (flip as usize))
+        }
+    };
+    pad_to(&mut ids, seq);
+    Example { ids, label }
+}
+
+/// Default label noise per task (harder tasks = noisier, mirroring the
+/// paper's metric spreads: CoLA/RTE are the weak spots, MNLI/QQP stable).
+pub fn default_noise(task: GlueTask) -> f64 {
+    match task {
+        GlueTask::Cola => 0.08,
+        GlueTask::Rte => 0.10,
+        GlueTask::Mrpc => 0.06,
+        GlueTask::Stsb => 0.0, // noise already in the score
+        _ => 0.03,
+    }
+}
+
+/// Deterministic dataset for (task, split-seed).
+pub fn make_dataset(task: GlueTask, n: usize, seed: u64) -> Dataset {
+    let mut rng = Rng::new(seed ^ (task.name().len() as u64) << 17 ^ task as u64);
+    let noise = default_noise(task);
+    let examples = (0..n).map(|_| gen_example(task, noise, &mut rng)).collect();
+    Dataset {
+        task,
+        examples,
+        seq_len: task.seq_len(),
+    }
+}
+
+/// (train, eval) pair with disjoint seeds.
+pub fn train_eval(task: GlueTask, seed: u64) -> (Dataset, Dataset) {
+    (
+        make_dataset(task, task.train_size(), seed),
+        make_dataset(task, task.eval_size(), seed.wrapping_add(0x9E37_79B9)),
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_tasks_generate_valid_examples() {
+        let mut rng = Rng::new(200);
+        for task in ALL_TASKS {
+            for _ in 0..50 {
+                let ex = gen_example(task, 0.0, &mut rng);
+                assert_eq!(ex.ids.len(), task.seq_len(), "{task:?}");
+                assert!(ex.ids.iter().all(|&t| (t as usize) < VOCAB_SIZE));
+                match ex.label {
+                    Label::Class(c) => {
+                        assert!(!task.is_regression());
+                        assert!(c < task.n_classes(), "{task:?} class {c}");
+                    }
+                    Label::Score(s) => {
+                        assert!(task.is_regression());
+                        assert!((0.0..=1.0).contains(&s));
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn datasets_are_deterministic() {
+        let a = make_dataset(GlueTask::Sst2, 20, 7);
+        let b = make_dataset(GlueTask::Sst2, 20, 7);
+        for (x, y) in a.examples.iter().zip(&b.examples) {
+            assert_eq!(x.ids, y.ids);
+            assert_eq!(x.label, y.label);
+        }
+        let c = make_dataset(GlueTask::Sst2, 20, 8);
+        assert!(a.examples.iter().zip(&c.examples).any(|(x, y)| x.ids != y.ids));
+    }
+
+    #[test]
+    fn labels_are_roughly_balanced() {
+        for task in [GlueTask::Sst2, GlueTask::Qqp, GlueTask::Qnli, GlueTask::Cola] {
+            let ds = make_dataset(task, 600, 42);
+            let ones = ds
+                .examples
+                .iter()
+                .filter(|e| matches!(e.label, Label::Class(1)))
+                .count();
+            assert!(
+                (150..450).contains(&ones),
+                "{task:?}: {ones}/600 positives"
+            );
+        }
+    }
+
+    #[test]
+    fn sst2_signal_is_learnable_by_counting() {
+        // The label must be recoverable from token counts (the bayes
+        // decision rule a trained model approximates).
+        let ds = make_dataset(GlueTask::Sst2, 400, 3);
+        let mut correct = 0;
+        for e in &ds.examples {
+            let c0 = e.ids.iter().filter(|&&t| token_group(t) == Some(0)).count();
+            let c1 = e.ids.iter().filter(|&&t| token_group(t) == Some(1)).count();
+            let pred = (c0 > c1) as usize;
+            if Label::Class(pred) == e.label {
+                correct += 1;
+            }
+        }
+        let acc = correct as f64 / 400.0;
+        assert!(acc > 0.9, "bayes-rule acc only {acc}");
+    }
+
+    #[test]
+    fn stsb_scores_correlate_with_overlap() {
+        let ds = make_dataset(GlueTask::Stsb, 300, 4);
+        // Compute overlap of concept groups across SEP and compare.
+        let mut xs = Vec::new();
+        let mut ys = Vec::new();
+        for e in &ds.examples {
+            let sep = e.ids.iter().position(|&t| t == SEP).unwrap();
+            let ga: std::collections::HashSet<_> =
+                e.ids[..sep].iter().filter_map(|&t| token_group(t)).collect();
+            let gb: std::collections::HashSet<_> =
+                e.ids[sep..].iter().filter_map(|&t| token_group(t)).collect();
+            let inter = ga.intersection(&gb).count() as f64;
+            xs.push(inter);
+            if let Label::Score(s) = e.label {
+                ys.push(s as f64);
+            }
+        }
+        let r = crate::util::stats::pearson(&xs, &ys);
+        assert!(r > 0.6, "overlap-score correlation only {r}");
+    }
+
+    #[test]
+    fn task_parse_round_trip() {
+        for t in ALL_TASKS {
+            assert_eq!(GlueTask::parse(t.name()).unwrap(), t);
+        }
+        assert!(GlueTask::parse("nope").is_err());
+    }
+}

@@ -1,0 +1,10 @@
+//! Synthetic data substrates: the shared vocabulary, the GLUE-like task
+//! suite, the data-to-text generation tasks, the pre-training corpus,
+//! and batching. See DESIGN.md §3 for the substitution rationale
+//! (repro band 0 → no real GLUE/E2E/pre-trained checkpoints here).
+
+pub mod batch;
+pub mod corpus;
+pub mod datatotext;
+pub mod glue;
+pub mod vocab;

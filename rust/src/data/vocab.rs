@@ -1,0 +1,91 @@
+//! The synthetic vocabulary shared by every task generator.
+//!
+//! 256 token ids laid out in semantic regions so that pre-training and
+//! every downstream task share latent structure (the transfer-learning
+//! premise DSEE relies on — see DESIGN.md §3):
+//!
+//! ```text
+//!   0..16    special tokens (PAD, CLS, SEP, FLD, EOS, BOS, NEG, …)
+//!  16..144   8 concept groups × 16 tokens
+//! 144..160   attribute-name tokens (data-to-text)
+//! 160..224   attribute-value tokens (data-to-text)
+//! 224..256   filler / noise tokens
+//! ```
+
+pub const VOCAB_SIZE: usize = 256;
+
+pub const PAD: u32 = 0;
+pub const CLS: u32 = 1;
+pub const SEP: u32 = 2;
+pub const FLD: u32 = 3;
+pub const EOS: u32 = 4;
+pub const BOS: u32 = 5;
+/// Explicit negation marker used by the NLI-style tasks.
+pub const NEG: u32 = 6;
+
+pub const N_GROUPS: usize = 8;
+pub const GROUP_SIZE: usize = 16;
+pub const GROUPS_START: u32 = 16;
+
+pub const ATTR_START: u32 = 144;
+pub const N_ATTRS: usize = 16;
+pub const VALUE_START: u32 = 160;
+pub const N_VALUES: usize = 64;
+pub const NOISE_START: u32 = 224;
+pub const N_NOISE: usize = 32;
+
+/// The `i`-th token of concept group `g`.
+pub fn group_token(g: usize, i: usize) -> u32 {
+    assert!(g < N_GROUPS && i < GROUP_SIZE);
+    GROUPS_START + (g * GROUP_SIZE + i) as u32
+}
+
+/// Which concept group a token belongs to (None for non-concept tokens).
+pub fn token_group(tok: u32) -> Option<usize> {
+    let lo = GROUPS_START;
+    let hi = GROUPS_START + (N_GROUPS * GROUP_SIZE) as u32;
+    if (lo..hi).contains(&tok) {
+        Some(((tok - lo) as usize) / GROUP_SIZE)
+    } else {
+        None
+    }
+}
+
+pub fn attr_token(a: usize) -> u32 {
+    assert!(a < N_ATTRS);
+    ATTR_START + a as u32
+}
+
+pub fn value_token(v: usize) -> u32 {
+    assert!(v < N_VALUES);
+    VALUE_START + v as u32
+}
+
+pub fn noise_token(i: usize) -> u32 {
+    NOISE_START + (i % N_NOISE) as u32
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn regions_do_not_overlap() {
+        assert!(GROUPS_START as usize >= 16);
+        assert_eq!(GROUPS_START as usize + N_GROUPS * GROUP_SIZE, ATTR_START as usize);
+        assert_eq!(ATTR_START as usize + N_ATTRS, VALUE_START as usize);
+        assert_eq!(VALUE_START as usize + N_VALUES, NOISE_START as usize);
+        assert_eq!(NOISE_START as usize + N_NOISE, VOCAB_SIZE);
+    }
+
+    #[test]
+    fn group_round_trip() {
+        for g in 0..N_GROUPS {
+            for i in 0..GROUP_SIZE {
+                assert_eq!(token_group(group_token(g, i)), Some(g));
+            }
+        }
+        assert_eq!(token_group(PAD), None);
+        assert_eq!(token_group(attr_token(0)), None);
+    }
+}

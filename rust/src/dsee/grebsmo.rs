@@ -1,0 +1,226 @@
+//! GreBsmo-style greedy bilateral decomposition (Zhou & Tao, 2013).
+//!
+//! Solves the paper's Eqn. 1:
+//!
+//! ```text
+//! min_{U,V,S} ½‖W − UV − S‖²_F   s.t. rank(U)≤r, rank(V)≤r, card(S)≤c
+//! ```
+//!
+//! via alternating (a) a randomized range-finder + projection for the
+//! low-rank part (the "bilateral sketch": L = Q·(QᵀW̃) with Q an
+//! orthonormal basis of (W̃·G) for a Gaussian sketch G — the same
+//! random-projection idea GreBsmo uses to avoid full SVDs) and (b) hard
+//! thresholding keeping the top-c magnitudes of the residual for the
+//! sparse part. Converges in a handful of iterations on transformer
+//! weight matrices (see the `reconstruction_error_decreases` test and
+//! `benches/perf_hotpath.rs` for timing).
+
+use crate::tensor::linalg::{matmul, matmul_at};
+use crate::tensor::Tensor;
+use crate::util::Rng;
+
+/// Result of a decomposition W ≈ U·V + S.
+pub struct Decomposition {
+    pub u: Tensor, // [m, r]
+    pub v: Tensor, // [r, n]
+    /// Sparse component as (row, col, value), |support| ≤ c.
+    pub sparse: Vec<(usize, usize, f32)>,
+    /// Final reconstruction error ‖W − UV − S‖_F / ‖W‖_F.
+    pub rel_err: f32,
+}
+
+/// Orthonormalize the columns of `y` [m, r] in place (modified
+/// Gram–Schmidt with re-orthogonalization for numerical robustness).
+fn orthonormalize_cols(y: &mut Tensor) {
+    let (m, r) = (y.rows(), y.cols());
+    for j in 0..r {
+        // Two passes of projection-removal (classic MGS fix).
+        for _pass in 0..2 {
+            for k in 0..j {
+                let mut dot = 0.0f32;
+                for i in 0..m {
+                    dot += y.data[i * r + j] * y.data[i * r + k];
+                }
+                for i in 0..m {
+                    y.data[i * r + j] -= dot * y.data[i * r + k];
+                }
+            }
+        }
+        let mut norm = 0.0f32;
+        for i in 0..m {
+            norm += y.data[i * r + j] * y.data[i * r + j];
+        }
+        let norm = norm.sqrt();
+        if norm > 1e-12 {
+            for i in 0..m {
+                y.data[i * r + j] /= norm;
+            }
+        } else {
+            // Degenerate direction: re-seed with a unit basis vector.
+            for i in 0..m {
+                y.data[i * r + j] = if i == j % m { 1.0 } else { 0.0 };
+            }
+        }
+    }
+}
+
+/// Keep the `c` largest-magnitude entries of `resid`, return them as COO.
+fn hard_threshold(resid: &Tensor, c: usize) -> Vec<(usize, usize, f32)> {
+    let n = resid.cols();
+    let mut entries: Vec<(f32, usize)> = resid
+        .data
+        .iter()
+        .enumerate()
+        .map(|(i, &v)| (v.abs(), i))
+        .collect();
+    let c = c.min(entries.len());
+    if c == 0 {
+        return Vec::new();
+    }
+    // Partial selection: nth_element-style.
+    entries.select_nth_unstable_by(c - 1, |a, b| b.0.partial_cmp(&a.0).unwrap());
+    entries[..c]
+        .iter()
+        .map(|&(_, flat)| (flat / n, flat % n, resid.data[flat]))
+        .collect()
+}
+
+/// Decompose `w` into rank-`r` + `c`-sparse parts with `iters` rounds.
+pub fn grebsmo(w: &Tensor, r: usize, c: usize, iters: usize, rng: &mut Rng) -> Decomposition {
+    let (m, n) = (w.rows(), w.cols());
+    let r = r.min(m).min(n).max(1);
+    let w_norm = w.frob_norm().max(1e-12);
+
+    // S starts empty; L starts at 0.
+    let mut sparse: Vec<(usize, usize, f32)> = Vec::new();
+    let mut u = Tensor::zeros(&[m, r]);
+    let mut v = Tensor::zeros(&[r, n]);
+
+    for _it in 0..iters.max(1) {
+        // W̃ = W − S.
+        let mut wt = w.clone();
+        for &(i, j, val) in &sparse {
+            wt.data[i * n + j] -= val;
+        }
+        // Randomized range finder: Q = orth(W̃ G), G ~ N(0,1) [n, r].
+        let g = Tensor::randn(&[n, r], 1.0, rng);
+        let mut q = matmul(&wt, &g); // [m, r]
+        orthonormalize_cols(&mut q);
+        // One power iteration improves the subspace estimate cheaply:
+        // Q ← orth(W̃ (W̃ᵀ Q)).
+        let wtq = matmul_at(&wt, &q); // [n, r]
+        q = matmul(&wt, &wtq);
+        orthonormalize_cols(&mut q);
+        // Projection: B = Qᵀ W̃  → L = Q B.
+        let b = matmul_at(&q, &wt); // [r, n]
+        u = q;
+        v = b;
+        // Residual and sparse refresh.
+        let l = matmul(&u, &v);
+        let resid = w.sub(&l);
+        sparse = hard_threshold(&resid, c);
+    }
+
+    // Final relative error.
+    let l = matmul(&u, &v);
+    let mut resid = w.sub(&l);
+    for &(i, j, val) in &sparse {
+        resid.data[i * n + j] -= val;
+    }
+    Decomposition {
+        u,
+        v,
+        sparse,
+        rel_err: resid.frob_norm() / w_norm,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Construct a ground-truth low-rank + sparse matrix.
+    fn synthetic(m: usize, n: usize, r: usize, c: usize, rng: &mut Rng) -> (Tensor, Vec<usize>) {
+        let u = Tensor::randn(&[m, r], 1.0, rng);
+        let v = Tensor::randn(&[r, n], 1.0, rng);
+        let mut w = matmul(&u, &v);
+        let idx = rng.sample_indices(m * n, c);
+        for &flat in &idx {
+            // Large sparse spikes, well above the low-rank magnitudes.
+            w.data[flat] += if rng.coin(0.5) { 25.0 } else { -25.0 };
+        }
+        (w, idx)
+    }
+
+    #[test]
+    fn reconstruction_error_decreases_with_iters() {
+        let mut rng = Rng::new(100);
+        let (w, _) = synthetic(40, 30, 4, 20, &mut rng);
+        let e1 = grebsmo(&w, 4, 20, 1, &mut Rng::new(1)).rel_err;
+        let e5 = grebsmo(&w, 4, 20, 6, &mut Rng::new(1)).rel_err;
+        assert!(e5 <= e1 + 1e-6, "e1={e1} e5={e5}");
+        assert!(e5 < 0.05, "e5={e5}");
+    }
+
+    #[test]
+    fn recovers_planted_sparse_support() {
+        let mut rng = Rng::new(101);
+        let (w, planted) = synthetic(30, 30, 3, 12, &mut rng);
+        let dec = grebsmo(&w, 3, 12, 8, &mut rng);
+        let found: std::collections::HashSet<usize> =
+            dec.sparse.iter().map(|&(i, j, _)| i * 30 + j).collect();
+        let hits = planted.iter().filter(|p| found.contains(p)).count();
+        assert!(
+            hits >= planted.len() * 3 / 4,
+            "recovered only {hits}/{} planted spikes",
+            planted.len()
+        );
+    }
+
+    #[test]
+    fn exact_lowrank_gives_tiny_error() {
+        let mut rng = Rng::new(102);
+        let u = Tensor::randn(&[20, 2], 1.0, &mut rng);
+        let v = Tensor::randn(&[2, 25], 1.0, &mut rng);
+        let w = matmul(&u, &v);
+        let dec = grebsmo(&w, 2, 0, 4, &mut rng);
+        assert!(dec.rel_err < 1e-4, "err={}", dec.rel_err);
+        assert!(dec.sparse.is_empty());
+    }
+
+    #[test]
+    fn cardinality_bound_respected() {
+        let mut rng = Rng::new(103);
+        let w = Tensor::randn(&[16, 16], 1.0, &mut rng);
+        for c in [0, 5, 64] {
+            let dec = grebsmo(&w, 2, c, 3, &mut rng);
+            assert!(dec.sparse.len() <= c, "card {} > {c}", dec.sparse.len());
+        }
+    }
+
+    #[test]
+    fn rank_clamped_to_matrix_size() {
+        let mut rng = Rng::new(104);
+        let w = Tensor::randn(&[3, 5], 1.0, &mut rng);
+        let dec = grebsmo(&w, 100, 2, 3, &mut rng);
+        assert_eq!(dec.u.cols(), 3); // clamped to min(m, n)
+        assert!(dec.rel_err < 1e-3); // full-rank fit is near exact
+    }
+
+    #[test]
+    fn orthonormalization_produces_orthonormal_cols() {
+        let mut rng = Rng::new(105);
+        let mut y = Tensor::randn(&[20, 5], 3.0, &mut rng);
+        orthonormalize_cols(&mut y);
+        for a in 0..5 {
+            for b in 0..5 {
+                let mut dot = 0.0f32;
+                for i in 0..20 {
+                    dot += y.data[i * 5 + a] * y.data[i * 5 + b];
+                }
+                let expect = if a == b { 1.0 } else { 0.0 };
+                assert!((dot - expect).abs() < 1e-4, "({a},{b}) dot={dot}");
+            }
+        }
+    }
+}

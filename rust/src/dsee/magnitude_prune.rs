@@ -1,0 +1,171 @@
+//! One-shot magnitude pruning (Alg. 2, step II).
+//!
+//! Sorts the magnitudes of `W + UV + S₂` **globally across all given
+//! matrices** and masks the bottom fraction of each `W`. The mask S₁
+//! applies to the pre-trained weights only — the update path `UV + S₂`
+//! stays dense, exactly as in §3.3: `y = (W⊙S₁)x + UVx + S₂x`.
+
+use crate::nn::linear::Linear;
+use crate::tensor::Tensor;
+
+/// Compute the global magnitude threshold that zeroes `sparsity` of all
+/// entries across `mats`.
+fn global_threshold(mags: &mut Vec<f32>, sparsity: f64) -> f32 {
+    assert!((0.0..1.0).contains(&sparsity), "sparsity {sparsity}");
+    if sparsity == 0.0 || mags.is_empty() {
+        return -1.0; // nothing pruned (all magnitudes ≥ 0 > -1)
+    }
+    let k = ((mags.len() as f64) * sparsity).floor() as usize;
+    if k == 0 {
+        return -1.0;
+    }
+    let idx = k - 1;
+    mags.select_nth_unstable_by(idx, |a, b| a.partial_cmp(b).unwrap());
+    mags[idx]
+}
+
+/// Prune `sparsity` (fraction in [0,1)) of the weights across all
+/// `linears`, ranking by |W + UV + S₂|. Returns the achieved sparsity
+/// over the pruned matrices.
+pub fn magnitude_prune_global(linears: &mut [&mut Linear], sparsity: f64) -> f64 {
+    // Gather magnitudes of the *effective total* weight (the paper sorts
+    // W + UV + S, Alg. 2 step II).
+    let mut mags: Vec<f32> = Vec::new();
+    let totals: Vec<Tensor> = linears.iter().map(|l| l.effective_total()).collect();
+    for t in &totals {
+        mags.extend(t.data.iter().map(|v| v.abs()));
+    }
+    let thr = global_threshold(&mut mags, sparsity);
+
+    let mut zeros = 0usize;
+    let mut total = 0usize;
+    for (lin, t) in linears.iter_mut().zip(&totals) {
+        let mut mask = Tensor::full(&[lin.in_dim(), lin.out_dim()], 1.0);
+        for (m, &v) in mask.data.iter_mut().zip(&t.data) {
+            if v.abs() <= thr {
+                *m = 0.0;
+                zeros += 1;
+            }
+            total += 1;
+        }
+        lin.mask = Some(mask);
+    }
+    if total == 0 {
+        0.0
+    } else {
+        zeros as f64 / total as f64
+    }
+}
+
+/// Layer-wise variant: prune the same fraction within each matrix
+/// independently (used by the BERT-Tickets-style baseline which reports
+/// per-layer sparsities).
+pub fn magnitude_prune_layerwise(linears: &mut [&mut Linear], sparsity: f64) -> f64 {
+    let mut zeros = 0usize;
+    let mut total = 0usize;
+    for lin in linears.iter_mut() {
+        let t = lin.effective_total();
+        let mut mags: Vec<f32> = t.data.iter().map(|v| v.abs()).collect();
+        let thr = global_threshold(&mut mags, sparsity);
+        let mut mask = Tensor::full(&[lin.in_dim(), lin.out_dim()], 1.0);
+        for (m, &v) in mask.data.iter_mut().zip(&t.data) {
+            if v.abs() <= thr {
+                *m = 0.0;
+                zeros += 1;
+            }
+            total += 1;
+        }
+        lin.mask = Some(mask);
+    }
+    if total == 0 {
+        0.0
+    } else {
+        zeros as f64 / total as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn achieves_requested_sparsity() {
+        let mut rng = Rng::new(120);
+        let mut l1 = Linear::new(20, 20, &mut rng);
+        let mut l2 = Linear::new(20, 20, &mut rng);
+        {
+            let mut lins = [&mut l1, &mut l2];
+            let got = magnitude_prune_global(&mut lins, 0.5);
+            assert!((got - 0.5).abs() < 0.02, "got {got}");
+        }
+        assert!((l1.sparsity() + l2.sparsity()) / 2.0 > 0.4);
+    }
+
+    #[test]
+    fn global_pruning_is_global() {
+        // One matrix with tiny weights, one with huge: global pruning at
+        // 50% should wipe (almost all of) the tiny matrix only.
+        let mut rng = Rng::new(121);
+        let mut small = Linear::new(10, 10, &mut rng);
+        small.w = Tensor::full(&[10, 10], 1e-4);
+        let mut big = Linear::new(10, 10, &mut rng);
+        big.w = Tensor::full(&[10, 10], 10.0);
+        {
+            let mut lins = [&mut small, &mut big];
+            magnitude_prune_global(&mut lins, 0.5);
+        }
+        assert!(small.sparsity() > 0.99, "small sp={}", small.sparsity());
+        assert!(big.sparsity() < 0.01, "big sp={}", big.sparsity());
+    }
+
+    #[test]
+    fn layerwise_pruning_is_per_matrix() {
+        let mut rng = Rng::new(122);
+        let mut small = Linear::new(10, 10, &mut rng);
+        small.w = Tensor::randn(&[10, 10], 1e-4, &mut rng);
+        let mut big = Linear::new(10, 10, &mut rng);
+        big.w = Tensor::randn(&[10, 10], 10.0, &mut rng);
+        {
+            let mut lins = [&mut small, &mut big];
+            magnitude_prune_layerwise(&mut lins, 0.3);
+        }
+        assert!((small.sparsity() - 0.3).abs() < 0.05);
+        assert!((big.sparsity() - 0.3).abs() < 0.05);
+    }
+
+    #[test]
+    fn ranking_includes_the_update() {
+        // W entry is tiny but UV makes the total large → should be kept.
+        let mut rng = Rng::new(123);
+        let mut lin = Linear::new(4, 4, &mut rng);
+        lin.w = Tensor::full(&[4, 4], 0.01);
+        lin.w.data[0] = 0.001; // smallest base weight
+        lin.add_adapter(1, &mut rng);
+        if let Some(a) = &mut lin.adapter {
+            // UV contributes +5 to entry (0,0) only.
+            a.u = Tensor::zeros(&[4, 1]);
+            a.u.data[0] = 5.0;
+            a.v = Tensor::zeros(&[1, 4]);
+            a.v.data[0] = 1.0;
+        }
+        {
+            let mut lins = [&mut lin];
+            magnitude_prune_global(&mut lins, 0.5);
+        }
+        // Entry (0,0) survived because |W+UV| is large there.
+        assert_eq!(lin.mask.as_ref().unwrap().data[0], 1.0);
+    }
+
+    #[test]
+    fn zero_sparsity_is_identity() {
+        let mut rng = Rng::new(124);
+        let mut lin = Linear::new(6, 6, &mut rng);
+        {
+            let mut lins = [&mut lin];
+            let got = magnitude_prune_global(&mut lins, 0.0);
+            assert_eq!(got, 0.0);
+        }
+        assert_eq!(lin.sparsity(), 0.0);
+    }
+}

@@ -1,0 +1,132 @@
+//! The paper's core algorithms.
+//!
+//! * [`grebsmo`] — greedy bilateral decomposition solving Eqn. 1;
+//! * [`omega`] — Ω-support selection for S₂ (Alg. 1);
+//! * [`magnitude_prune`] — one-shot global magnitude masks S₁ (Alg. 2-II);
+//! * [`structured`] — ℓ₁-gated head pruning + FFN pruning (§3.3);
+//! * [`flops`] — the analytic efficiency model.
+//!
+//! [`attach_dsee`] / [`attach_lora`] wire the parametrizations onto a
+//! [`Transformer`]'s attention projections, matching the paper's setup
+//! ("for each self-attention projection weights wᵢ in W", Alg. 1).
+
+pub mod flops;
+pub mod grebsmo;
+pub mod magnitude_prune;
+pub mod omega;
+pub mod structured;
+
+use crate::config::DseeCfg;
+use crate::nn::Transformer;
+use crate::util::Rng;
+use omega::OmegaMethod;
+
+/// Attach LoRA-style adapters (ΔW = UV) to every attention projection
+/// and freeze the base. Returns the number of trainable parameters.
+pub fn attach_lora(model: &mut Transformer, rank: usize, rng: &mut Rng) -> usize {
+    for lin in model.attn_projections_mut() {
+        lin.add_adapter(rank, rng);
+    }
+    model.freeze_base();
+    model.count_trainable()
+}
+
+/// Attach the full DSEE parametrization (ΔW = UV + S₂ with Ω chosen per
+/// `cfg.omega_method`) to every attention projection; freeze the base.
+/// Returns the number of trainable parameters.
+pub fn attach_dsee(model: &mut Transformer, cfg: &DseeCfg, rng: &mut Rng) -> usize {
+    let method = OmegaMethod::parse(&cfg.omega_method).expect("omega method");
+    for lin in model.attn_projections_mut() {
+        // Ω from the *pre-trained* W (prior-training decomposition —
+        // we cannot access ΔW before fine-tuning, §3.2).
+        let om = omega::select_omega(
+            &lin.w,
+            method,
+            cfg.n_sparse,
+            cfg.rank,
+            cfg.grebsmo_iters,
+            rng,
+        );
+        lin.add_adapter(cfg.rank, rng);
+        if !om.is_empty() {
+            lin.add_residual(om);
+        }
+    }
+    model.freeze_base();
+    model.count_trainable()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ModelCfg;
+
+    fn model() -> Transformer {
+        let mut rng = Rng::new(140);
+        Transformer::new(&ModelCfg::sim_bert_s(), &mut rng)
+    }
+
+    #[test]
+    fn lora_trainable_count_matches_formula() {
+        let mut m = model();
+        let mut rng = Rng::new(141);
+        let n = attach_lora(&mut m, 4, &mut rng);
+        let d = m.cfg.d_model;
+        let layers = m.cfg.n_layers;
+        // 4 projections/layer × (d·r + r·d) + classifier head (+its bias).
+        let expect = layers * 4 * (d * 4 + 4 * d)
+            + m.head_proj().w.numel()
+            + m.head_proj().b.numel();
+        assert_eq!(n, expect);
+    }
+
+    #[test]
+    fn dsee_adds_exactly_n_sparse_per_projection() {
+        let mut m = model();
+        let mut rng = Rng::new(142);
+        let cfg = DseeCfg {
+            rank: 4,
+            n_sparse: 16,
+            ..DseeCfg::default()
+        };
+        let n_dsee = attach_dsee(&mut m, &cfg, &mut rng);
+        let mut m2 = model();
+        let n_lora = attach_lora(&mut m2, 4, &mut rng);
+        let layers = m.cfg.n_layers;
+        assert_eq!(n_dsee, n_lora + layers * 4 * 16);
+    }
+
+    #[test]
+    fn empty_omega_degrades_to_lora() {
+        let mut m = model();
+        let mut rng = Rng::new(143);
+        let cfg = DseeCfg {
+            rank: 4,
+            n_sparse: 16,
+            omega_method: "empty".into(),
+            ..DseeCfg::default()
+        };
+        let n = attach_dsee(&mut m, &cfg, &mut rng);
+        let mut m2 = model();
+        assert_eq!(n, attach_lora(&mut m2, 4, &mut rng));
+        assert!(m.attn_projections_mut()[0].residual.is_none());
+    }
+
+    #[test]
+    fn trainable_fraction_is_small() {
+        // The paper's headline: <1% trainable parameters.
+        let mut m = model();
+        let mut rng = Rng::new(144);
+        let total = m.count_total();
+        let cfg = DseeCfg {
+            rank: 2,
+            n_sparse: 8,
+            ..DseeCfg::default()
+        };
+        let trainable = attach_dsee(&mut m, &cfg, &mut rng);
+        assert!(
+            (trainable as f64) < 0.05 * total as f64,
+            "trainable {trainable} vs total {total}"
+        );
+    }
+}

@@ -1,0 +1,158 @@
+//! Ω selection — where the sparse residual S₂ lives (Alg. 1 + Fig. 2).
+//!
+//! The paper's key finding (Figure 2) is that the *decomposition* method
+//! beats picking Ω by weight magnitude or at random. All three are
+//! implemented here, plus "empty" (pure LoRA, the ΔW = UV rows of
+//! Tables 1–2).
+
+use super::grebsmo::grebsmo;
+use crate::tensor::Tensor;
+use crate::util::Rng;
+
+/// How to choose the support Ω of S₂.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum OmegaMethod {
+    /// GreBsmo decomposition of the pre-trained W; keep the indices of
+    /// the top-N magnitude entries of the sparse component (Alg. 1).
+    Decompose,
+    /// Indices of the N largest |W| entries.
+    Magnitude,
+    /// N uniformly random indices.
+    Random,
+    /// No sparse residual (pure low-rank update).
+    Empty,
+}
+
+impl OmegaMethod {
+    pub fn parse(s: &str) -> crate::Result<OmegaMethod> {
+        Ok(match s {
+            "decompose" => OmegaMethod::Decompose,
+            "magnitude" => OmegaMethod::Magnitude,
+            "random" => OmegaMethod::Random,
+            "empty" => OmegaMethod::Empty,
+            other => anyhow::bail!("unknown omega method '{other}'"),
+        })
+    }
+}
+
+/// Select the support Ω (|Ω| = n_sparse) for the weight matrix `w`.
+///
+/// `rank` and `iters` only matter for [`OmegaMethod::Decompose`].
+pub fn select_omega(
+    w: &Tensor,
+    method: OmegaMethod,
+    n_sparse: usize,
+    rank: usize,
+    iters: usize,
+    rng: &mut Rng,
+) -> Vec<(usize, usize)> {
+    let (m, n) = (w.rows(), w.cols());
+    let n_sparse = n_sparse.min(m * n);
+    match method {
+        OmegaMethod::Empty => Vec::new(),
+        OmegaMethod::Random => rng
+            .sample_indices(m * n, n_sparse)
+            .into_iter()
+            .map(|flat| (flat / n, flat % n))
+            .collect(),
+        OmegaMethod::Magnitude => {
+            let mut entries: Vec<(f32, usize)> = w
+                .data
+                .iter()
+                .enumerate()
+                .map(|(i, &v)| (v.abs(), i))
+                .collect();
+            if n_sparse == 0 {
+                return Vec::new();
+            }
+            entries.select_nth_unstable_by(n_sparse - 1, |a, b| b.0.partial_cmp(&a.0).unwrap());
+            entries[..n_sparse]
+                .iter()
+                .map(|&(_, flat)| (flat / n, flat % n))
+                .collect()
+        }
+        OmegaMethod::Decompose => {
+            // Alg. 1: decompose W ≈ UV + S', threshold S' to its top-N
+            // magnitudes, collect their indices — *values are discarded*,
+            // only the support is kept (S₂ restarts from zero).
+            let dec = grebsmo(w, rank, n_sparse.max(1) * 4, iters, rng);
+            let mut entries = dec.sparse;
+            entries.sort_by(|a, b| b.2.abs().partial_cmp(&a.2.abs()).unwrap());
+            entries.truncate(n_sparse);
+            entries.into_iter().map(|(i, j, _)| (i, j)).collect()
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::linalg::matmul;
+
+    #[test]
+    fn sizes_respected() {
+        let mut rng = Rng::new(110);
+        let w = Tensor::randn(&[12, 10], 1.0, &mut rng);
+        for m in [
+            OmegaMethod::Decompose,
+            OmegaMethod::Magnitude,
+            OmegaMethod::Random,
+        ] {
+            let om = select_omega(&w, m, 16, 2, 4, &mut rng);
+            assert_eq!(om.len(), 16, "{m:?}");
+            // No duplicates.
+            let mut set = std::collections::HashSet::new();
+            for &p in &om {
+                assert!(set.insert(p), "{m:?} produced duplicate {p:?}");
+                assert!(p.0 < 12 && p.1 < 10);
+            }
+        }
+        assert!(select_omega(&w, OmegaMethod::Empty, 16, 2, 4, &mut rng).is_empty());
+    }
+
+    #[test]
+    fn magnitude_picks_largest() {
+        let mut w = Tensor::zeros(&[4, 4]);
+        w.data[5] = 9.0;
+        w.data[10] = -8.0;
+        w.data[0] = 0.1;
+        let mut rng = Rng::new(111);
+        let om = select_omega(&w, OmegaMethod::Magnitude, 2, 1, 1, &mut rng);
+        let set: std::collections::HashSet<_> = om.into_iter().collect();
+        assert!(set.contains(&(1, 1))); // flat 5
+        assert!(set.contains(&(2, 2))); // flat 10
+    }
+
+    #[test]
+    fn decompose_finds_residual_spikes_not_lowrank_mass() {
+        // W = low-rank + spikes; Magnitude would pick big low-rank
+        // entries, Decompose should pick the spikes.
+        let mut rng = Rng::new(112);
+        let u = Tensor::randn(&[16, 2], 1.0, &mut rng);
+        let v = Tensor::randn(&[2, 16], 1.0, &mut rng);
+        let mut w = matmul(&u, &v).scale(3.0); // large low-rank magnitudes
+        let spikes = [(0usize, 7usize), (9, 3), (15, 15), (4, 12)];
+        for &(i, j) in &spikes {
+            w.data[i * 16 + j] += 20.0;
+        }
+        let om = select_omega(&w, OmegaMethod::Decompose, 4, 2, 8, &mut rng);
+        let set: std::collections::HashSet<_> = om.into_iter().collect();
+        let hits = spikes.iter().filter(|s| set.contains(s)).count();
+        assert!(hits >= 3, "decompose found {hits}/4 spikes: {set:?}");
+    }
+
+    #[test]
+    fn parse_round_trip() {
+        assert_eq!(OmegaMethod::parse("decompose").unwrap(), OmegaMethod::Decompose);
+        assert_eq!(OmegaMethod::parse("empty").unwrap(), OmegaMethod::Empty);
+        assert!(OmegaMethod::parse("bogus").is_err());
+    }
+
+    #[test]
+    fn n_sparse_clamped_to_matrix() {
+        let mut rng = Rng::new(113);
+        let w = Tensor::randn(&[3, 3], 1.0, &mut rng);
+        let om = select_omega(&w, OmegaMethod::Random, 1000, 1, 1, &mut rng);
+        assert_eq!(om.len(), 9);
+    }
+}

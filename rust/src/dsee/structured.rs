@@ -1,0 +1,365 @@
+//! Structured pruning (§3.3, "Pruning with structured sparse masks").
+//!
+//! Attention heads carry learnable gate coefficients `c` (see
+//! [`crate::nn::attention::Attention::gates`]); after the ℓ₁-regularized
+//! search phase, the lowest-|c| heads are pruned **layer-wise** (the same
+//! fraction per layer, as in the paper), physically shrinking the Q/K/V
+//! output dimensions and the output projection's input dimension — plus
+//! the LoRA `V` factors and `S₂` supports, "the size of U and V change
+//! after structured pruning". FFN intermediate units are pruned by
+//! column-norm at a fixed ratio (the paper uses 40%).
+
+use crate::nn::attention::Attention;
+use crate::nn::linear::Linear;
+use crate::nn::Transformer;
+use crate::tensor::Tensor;
+
+/// Keep only the given output columns of a linear (w: [in, out]).
+/// Shrinks the bias, mask, LoRA `V`, and remaps `S₂` columns.
+pub fn select_out_cols(lin: &mut Linear, keep: &[usize]) {
+    let (in_dim, out_dim) = (lin.in_dim(), lin.out_dim());
+    let new_out = keep.len();
+    let mut remap = vec![usize::MAX; out_dim];
+    for (new_j, &old_j) in keep.iter().enumerate() {
+        assert!(old_j < out_dim, "col {old_j} out of range");
+        remap[old_j] = new_j;
+    }
+    let pick = |t: &Tensor| -> Tensor {
+        let mut out = Tensor::zeros(&[in_dim, new_out]);
+        for i in 0..in_dim {
+            for (new_j, &old_j) in keep.iter().enumerate() {
+                out.data[i * new_out + new_j] = t.data[i * out_dim + old_j];
+            }
+        }
+        out
+    };
+    lin.w = pick(&lin.w);
+    lin.gw = Tensor::zeros(&[in_dim, new_out]);
+    let mut nb = Tensor::zeros(&[new_out]);
+    for (new_j, &old_j) in keep.iter().enumerate() {
+        nb.data[new_j] = lin.b.data[old_j];
+    }
+    lin.b = nb;
+    lin.gb = Tensor::zeros(&[new_out]);
+    if let Some(m) = &lin.mask {
+        lin.mask = Some(pick(m));
+    }
+    if let Some(a) = &mut lin.adapter {
+        // V: [r, out] → select columns.
+        let r = a.v.rows();
+        let mut nv = Tensor::zeros(&[r, new_out]);
+        for rr in 0..r {
+            for (new_j, &old_j) in keep.iter().enumerate() {
+                nv.data[rr * new_out + new_j] = a.v.data[rr * out_dim + old_j];
+            }
+        }
+        a.v = nv;
+        a.gv = Tensor::zeros(&[r, new_out]);
+        a.gu = Tensor::zeros(&[in_dim, r]);
+    }
+    if let Some(res) = &mut lin.residual {
+        let mut idx = Vec::new();
+        let mut vals = Vec::new();
+        for (e, &(i, j)) in res.idx.iter().enumerate() {
+            if remap[j] != usize::MAX {
+                idx.push((i, remap[j]));
+                vals.push(res.values.data[e]);
+            }
+        }
+        res.idx = idx;
+        res.values = Tensor::from_vec(&[vals.len()], vals);
+        res.grad = Tensor::zeros(&[res.idx.len()]);
+    }
+}
+
+/// Keep only the given input rows of a linear (w: [in, out]).
+/// Shrinks the mask, LoRA `U`, and remaps `S₂` rows.
+pub fn select_in_rows(lin: &mut Linear, keep: &[usize]) {
+    let (in_dim, out_dim) = (lin.in_dim(), lin.out_dim());
+    let new_in = keep.len();
+    let mut remap = vec![usize::MAX; in_dim];
+    for (new_i, &old_i) in keep.iter().enumerate() {
+        assert!(old_i < in_dim, "row {old_i} out of range");
+        remap[old_i] = new_i;
+    }
+    let pick = |t: &Tensor| -> Tensor {
+        let mut out = Tensor::zeros(&[new_in, out_dim]);
+        for (new_i, &old_i) in keep.iter().enumerate() {
+            out.data[new_i * out_dim..(new_i + 1) * out_dim]
+                .copy_from_slice(&t.data[old_i * out_dim..(old_i + 1) * out_dim]);
+        }
+        out
+    };
+    lin.w = pick(&lin.w);
+    lin.gw = Tensor::zeros(&[new_in, out_dim]);
+    if let Some(m) = &lin.mask {
+        lin.mask = Some(pick(m));
+    }
+    if let Some(a) = &mut lin.adapter {
+        let r = a.u.cols();
+        let mut nu = Tensor::zeros(&[new_in, r]);
+        for (new_i, &old_i) in keep.iter().enumerate() {
+            nu.data[new_i * r..(new_i + 1) * r]
+                .copy_from_slice(&a.u.data[old_i * r..(old_i + 1) * r]);
+        }
+        a.u = nu;
+        a.gu = Tensor::zeros(&[new_in, r]);
+        a.gv = Tensor::zeros(&[r, out_dim]);
+    }
+    if let Some(res) = &mut lin.residual {
+        let mut idx = Vec::new();
+        let mut vals = Vec::new();
+        for (e, &(i, j)) in res.idx.iter().enumerate() {
+            if remap[i] != usize::MAX {
+                idx.push((remap[i], j));
+                vals.push(res.values.data[e]);
+            }
+        }
+        res.idx = idx;
+        res.values = Tensor::from_vec(&[vals.len()], vals);
+        res.grad = Tensor::zeros(&[res.idx.len()]);
+    }
+}
+
+/// Turn gate training on for every attention layer (phase I of the
+/// structured scheme; the ℓ₁ penalty is added by the trainer).
+pub fn enable_gate_training(model: &mut Transformer) {
+    for blk in &mut model.blocks {
+        blk.attn.gates_trainable = true;
+    }
+}
+
+/// Prune `frac` of the heads in each attention layer, keeping the heads
+/// with the largest |gate|. Returns the number of heads removed.
+pub fn prune_heads(model: &mut Transformer, frac: f64) -> usize {
+    assert!((0.0..1.0).contains(&frac), "head frac {frac}");
+    let mut removed = 0usize;
+    for blk in &mut model.blocks {
+        let att = &mut blk.attn;
+        let h = att.n_heads;
+        let drop = ((h as f64) * frac).floor() as usize;
+        if drop == 0 {
+            continue;
+        }
+        let keep_n = h - drop;
+        // Rank heads by |gate| descending, keep the top keep_n, preserve
+        // original head order for determinism.
+        let mut order: Vec<usize> = (0..h).collect();
+        order.sort_by(|&a, &b| {
+            att.gates.data[b]
+                .abs()
+                .partial_cmp(&att.gates.data[a].abs())
+                .unwrap()
+        });
+        let mut kept: Vec<usize> = order[..keep_n].to_vec();
+        kept.sort_unstable();
+        removed += drop;
+
+        let hd = att.head_dim;
+        let col_keep: Vec<usize> = kept
+            .iter()
+            .flat_map(|&head| (head * hd..(head + 1) * hd))
+            .collect();
+        select_out_cols(&mut att.wq, &col_keep);
+        select_out_cols(&mut att.wk, &col_keep);
+        select_out_cols(&mut att.wv, &col_keep);
+        select_in_rows(&mut att.wo, &col_keep);
+        // Shrink the gate vector.
+        let mut ng = Tensor::zeros(&[keep_n]);
+        for (new_h, &old_h) in kept.iter().enumerate() {
+            ng.data[new_h] = att.gates.data[old_h];
+        }
+        att.gates = ng;
+        att.ggates = Tensor::zeros(&[keep_n]);
+        att.gates_trainable = false;
+        att.n_heads = keep_n;
+    }
+    removed
+}
+
+/// Prune `frac` of each FFN's intermediate units, scored by the ℓ₂ norm
+/// of the unit's fan-in column in `fc1`'s effective weight. Returns
+/// units removed.
+pub fn prune_ffn(model: &mut Transformer, frac: f64) -> usize {
+    assert!((0.0..1.0).contains(&frac), "ffn frac {frac}");
+    let mut removed = 0usize;
+    for blk in &mut model.blocks {
+        let f = blk.ffn.fc1.out_dim();
+        let drop = ((f as f64) * frac).floor() as usize;
+        if drop == 0 {
+            continue;
+        }
+        let keep_n = f - drop;
+        let w = blk.ffn.fc1.effective_total();
+        let in_dim = w.rows();
+        let mut scores: Vec<(f32, usize)> = (0..f)
+            .map(|j| {
+                let mut s = 0.0f32;
+                for i in 0..in_dim {
+                    let v = w.data[i * f + j];
+                    s += v * v;
+                }
+                (s, j)
+            })
+            .collect();
+        scores.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap());
+        let mut kept: Vec<usize> = scores[..keep_n].iter().map(|&(_, j)| j).collect();
+        kept.sort_unstable();
+        select_out_cols(&mut blk.ffn.fc1, &kept);
+        select_in_rows(&mut blk.ffn.fc2, &kept);
+        removed += drop;
+    }
+    removed
+}
+
+/// Per-layer kept-head fractions (for reports).
+pub fn head_fractions(model: &Transformer, original_heads: usize) -> Vec<f64> {
+    model
+        .blocks
+        .iter()
+        .map(|b| b.attn.n_heads as f64 / original_heads as f64)
+        .collect()
+}
+
+/// Attention helper: total context width currently alive.
+pub fn attn_width(att: &Attention) -> usize {
+    att.n_heads * att.head_dim
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ModelCfg;
+    use crate::util::Rng;
+
+    fn model() -> Transformer {
+        let mut rng = Rng::new(130);
+        let cfg = ModelCfg {
+            name: "t".into(),
+            vocab: 40,
+            max_seq: 6,
+            d_model: 16,
+            n_layers: 2,
+            n_heads: 4,
+            d_ffn: 20,
+            causal: false,
+            n_classes: 2,
+            head: "classifier".into(),
+            n_prefix: 0,
+        };
+        Transformer::new(&cfg, &mut rng)
+    }
+
+    #[test]
+    fn head_pruning_shrinks_shapes_and_keeps_function() {
+        let mut m = model();
+        let mut rng = Rng::new(131);
+        // Attach adapters+residuals so reshaping paths are exercised.
+        for lin in m.attn_projections_mut() {
+            lin.add_adapter(2, &mut rng);
+            lin.add_residual(vec![(0, 0), (5, 9), (15, 15)]);
+        }
+        // Distinct gate magnitudes: heads 0,1 weakest.
+        for blk in &mut m.blocks {
+            blk.attn.gates = Tensor::from_vec(&[4], vec![0.01, 0.02, 0.9, 1.1]);
+        }
+        let removed = prune_heads(&mut m, 0.25);
+        assert_eq!(removed, 2); // 1 per layer
+        for blk in &m.blocks {
+            assert_eq!(blk.attn.n_heads, 3);
+            assert_eq!(blk.attn.wq.out_dim(), 12);
+            assert_eq!(blk.attn.wo.in_dim(), 12);
+            assert_eq!(blk.attn.gates.numel(), 3);
+            // Weakest head (gate 0.01) was dropped.
+            assert!(blk.attn.gates.data.iter().all(|&g| g > 0.015));
+            // Adapter shapes follow.
+            assert_eq!(blk.attn.wq.adapter.as_ref().unwrap().v.cols(), 12);
+            assert_eq!(blk.attn.wo.adapter.as_ref().unwrap().u.rows(), 12);
+        }
+        // Forward still works at the new shape.
+        let ids: Vec<u32> = (0..12).map(|i| (i % 40) as u32).collect();
+        let (logits, _) = m.forward(&ids, 2, 6);
+        assert_eq!(logits.shape, vec![2, 2]);
+        assert!(logits.data.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn pruned_head_outputs_match_gated_model() {
+        // Numerical equivalence: pruning a head whose gate is 0 must not
+        // change the output at all.
+        let mut m = model();
+        for blk in &mut m.blocks {
+            blk.attn.gates = Tensor::from_vec(&[4], vec![0.0, 1.0, 1.0, 1.0]);
+        }
+        let ids: Vec<u32> = (0..6).map(|i| (i % 40) as u32).collect();
+        let (y_gated, _) = m.forward(&ids, 1, 6);
+        prune_heads(&mut m, 0.25);
+        let (y_pruned, _) = m.forward(&ids, 1, 6);
+        for (a, b) in y_gated.data.iter().zip(&y_pruned.data) {
+            assert!((a - b).abs() < 1e-5, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn ffn_pruning_shrinks_and_runs() {
+        let mut m = model();
+        let removed = prune_ffn(&mut m, 0.4);
+        assert_eq!(removed, 2 * 8); // floor(20*0.4)=8 per layer
+        for blk in &m.blocks {
+            assert_eq!(blk.ffn.fc1.out_dim(), 12);
+            assert_eq!(blk.ffn.fc2.in_dim(), 12);
+        }
+        let ids: Vec<u32> = (0..6).map(|i| (i % 40) as u32).collect();
+        let (logits, _) = m.forward(&ids, 1, 6);
+        assert!(logits.data.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn training_still_works_after_structured_prune() {
+        use crate::nn::loss::cross_entropy;
+        use crate::optim::AdamW;
+        let mut m = model();
+        let mut rng = Rng::new(132);
+        for lin in m.attn_projections_mut() {
+            lin.add_adapter(2, &mut rng);
+        }
+        m.freeze_base();
+        prune_heads(&mut m, 0.25);
+        prune_ffn(&mut m, 0.4);
+        let ids: Vec<u32> = (0..4 * 6).map(|i| (i % 40) as u32).collect();
+        let targets = [0usize, 1, 0, 1];
+        let mut opt = AdamW::new(3e-3, 0.0);
+        let mut first = 0.0;
+        let mut last = 0.0;
+        for step in 0..25 {
+            m.zero_grad();
+            let (logits, cache) = m.forward(&ids, 4, 6);
+            let (loss, dl) = cross_entropy(&logits, &targets);
+            if step == 0 {
+                first = loss;
+            }
+            last = loss;
+            m.backward(&cache, &dl);
+            opt.step(&mut m, 1.0);
+        }
+        assert!(
+            last < first,
+            "recovery training failed: first={first} last={last}"
+        );
+    }
+
+    #[test]
+    fn residual_remap_preserves_surviving_values() {
+        let mut rng = Rng::new(133);
+        let mut lin = Linear::new(4, 8, &mut rng);
+        lin.add_residual(vec![(0, 1), (2, 5), (3, 7)]);
+        if let Some(r) = &mut lin.residual {
+            r.values = Tensor::from_vec(&[3], vec![1.0, 2.0, 3.0]);
+        }
+        // Keep output cols {1, 5} → entries (0,1)→(0,0), (2,5)→(2,1).
+        select_out_cols(&mut lin, &[1, 5]);
+        let r = lin.residual.as_ref().unwrap();
+        assert_eq!(r.idx, vec![(0, 0), (2, 1)]);
+        assert_eq!(r.values.data, vec![1.0, 2.0]);
+    }
+}

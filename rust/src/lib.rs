@@ -1,0 +1,38 @@
+//! # DSEE — Dually Sparsity-Embedded Efficient Tuning
+//!
+//! A Rust + JAX + Pallas reproduction of *"DSEE: Dually Sparsity-embedded
+//! Efficient Tuning of Pre-trained Language Models"* (ACL 2023).
+//!
+//! The crate is the Layer-3 coordinator of a three-layer stack:
+//!
+//! * **L1** — Pallas kernels (`python/compile/kernels/`): the fused DSEE
+//!   linear `y = x(W⊙S₁) + (xU)V + xS₂` and head-gated attention.
+//! * **L2** — a JAX transformer with the DSEE parametrization, AOT-lowered
+//!   to HLO text artifacts (`python/compile/aot.py`).
+//! * **L3** — this crate: a native tensor/transformer/autodiff engine for
+//!   shape-flexible experiment sweeps, the DSEE algorithms themselves
+//!   (GreBsmo decomposition, Ω selection, magnitude & structured pruning),
+//!   every baseline the paper compares against, synthetic data and metric
+//!   substrates, a PJRT runtime that executes the L2 artifacts, and a
+//!   coordinator that schedules experiment grids and serves batched
+//!   inference. Python never runs on the request path.
+//!
+//! See `DESIGN.md` for the full inventory and `EXPERIMENTS.md` for the
+//! paper-vs-measured record.
+
+pub mod util;
+pub mod tensor;
+pub mod nn;
+pub mod optim;
+pub mod dsee;
+pub mod data;
+pub mod metrics;
+pub mod train;
+pub mod runtime;
+pub mod coordinator;
+pub mod report;
+pub mod config;
+pub mod bench_harness;
+
+/// Crate-wide result type.
+pub type Result<T> = anyhow::Result<T>;

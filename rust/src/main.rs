@@ -1,0 +1,102 @@
+//! DSEE command-line entry point.
+//!
+//! Thin multiplexer over the library; the heavy lifting lives in
+//! `examples/` (quickstart, e2e_pipeline, generation, serve) and
+//! `benches/` (one target per paper table/figure).
+
+use dsee::config::{DseeCfg, ModelCfg, TrainCfg};
+use dsee::data::glue::GlueTask;
+use dsee::runtime::{default_artifact_dir, Runtime};
+use dsee::train::baselines::{run_glue, Method};
+use dsee::util::cli::Spec;
+
+fn main() {
+    dsee::util::logging::init();
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let cmd = args.first().map(|s| s.as_str()).unwrap_or("help");
+    let rest = if args.is_empty() { &[] } else { &args[1..] };
+    let code = match cmd {
+        "info" => info(),
+        "finetune" => finetune(rest),
+        "help" | "--help" | "-h" => {
+            usage();
+            Ok(())
+        }
+        other => {
+            usage();
+            Err(anyhow::anyhow!("unknown command '{other}'"))
+        }
+    };
+    if let Err(e) = code {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn usage() {
+    println!(
+        "dsee — Dually Sparsity-Embedded Efficient Tuning (ACL 2023 reproduction)\n\n\
+         Commands:\n\
+         \x20 info                 show loaded artifacts + platform\n\
+         \x20 finetune [opts]      run one DSEE fine-tuning cell on a GLUE-like task\n\n\
+         Examples (cargo run --release --example …): quickstart,\n\
+         e2e_pipeline, generation, serve.  Benches: cargo bench."
+    );
+}
+
+fn info() -> anyhow::Result<()> {
+    let dir = default_artifact_dir();
+    println!("artifacts dir: {}", dir.display());
+    let rt = Runtime::load_dir(&dir)?;
+    println!("platform: {}", rt.client.platform_name());
+    for name in rt.names() {
+        let a = rt.artifact(name)?;
+        println!(
+            "  {name}: {} inputs, {} outputs",
+            a.inputs.len(),
+            a.outputs.len()
+        );
+    }
+    Ok(())
+}
+
+fn finetune(argv: &[String]) -> anyhow::Result<()> {
+    let spec = Spec::new("dsee finetune", "run one DSEE cell")
+        .opt("task", "glue task (sst2|mnli|cola|stsb|qqp|qnli|mrpc|rte)", "sst2")
+        .opt("rank", "low-rank dimension r", "8")
+        .opt("n-sparse", "non-zeros of S2 per projection", "64")
+        .opt("sparsity", "unstructured sparsity (0..1)", "0.0")
+        .opt("head-frac", "structured head pruning fraction", "0.0")
+        .opt("seed", "experiment seed", "1");
+    let a = spec.parse(argv)?;
+    let task = GlueTask::parse(a.get("task").unwrap())?;
+    let dsee = DseeCfg {
+        rank: a.get_usize("rank")?,
+        n_sparse: a.get_usize("n-sparse")?,
+        unstructured_sparsity: a.get_f64("sparsity")?,
+        structured_head_frac: a.get_f64("head-frac")?,
+        structured_ffn_frac: if a.get_f64("head-frac")? > 0.0 { 0.4 } else { 0.0 },
+        ..DseeCfg::default()
+    };
+    let arch = ModelCfg::sim_bert_s();
+    let cfg = TrainCfg::default();
+    let r = run_glue(
+        &Method::Dsee(dsee),
+        task,
+        &arch,
+        &cfg,
+        a.get_usize("seed")? as u64,
+    );
+    println!(
+        "{} on {}: {} = {:.4}  (trainable {} / total {}, sparsity {}, {:.1}s)",
+        r.method,
+        r.task,
+        task.metric(),
+        r.metric(task.metric()),
+        dsee::train::fmt_params(r.trainable_params),
+        dsee::train::fmt_params(r.total_params),
+        r.sparsity,
+        r.seconds
+    );
+    Ok(())
+}

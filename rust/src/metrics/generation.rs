@@ -1,0 +1,348 @@
+//! Generation metrics: corpus BLEU (Papineni et al. 2002), NIST
+//! (Doddington 2002), a METEOR-style unigram F-with-fragmentation score
+//! (Denkowski & Lavie 2014, simplified: exact matches only — the
+//! synthetic vocabulary has no stems/synonyms), and TER (Snover et al.
+//! 2006, computed without phrase shifts: plain word-level edit distance
+//! over reference length, the standard lower-bound approximation).
+//!
+//! All metrics are multi-reference and operate on token-id sequences.
+
+use std::collections::HashMap;
+
+type Ngram = Vec<u32>;
+
+fn ngram_counts(seq: &[u32], n: usize) -> HashMap<Ngram, usize> {
+    let mut m = HashMap::new();
+    if seq.len() >= n {
+        for w in seq.windows(n) {
+            *m.entry(w.to_vec()).or_insert(0) += 1;
+        }
+    }
+    m
+}
+
+/// Corpus-level BLEU-4 with brevity penalty and multi-reference clipped
+/// counts. Returns 0..=100 (paper convention).
+pub fn bleu(hyps: &[Vec<u32>], refs: &[Vec<Vec<u32>>]) -> f64 {
+    assert_eq!(hyps.len(), refs.len());
+    const N: usize = 4;
+    let mut matched = [0usize; N];
+    let mut total = [0usize; N];
+    let mut hyp_len = 0usize;
+    let mut ref_len = 0usize;
+    for (h, rs) in hyps.iter().zip(refs) {
+        hyp_len += h.len();
+        // Closest reference length (standard BLEU).
+        ref_len += rs
+            .iter()
+            .map(|r| r.len())
+            .min_by_key(|&l| ((l as isize - h.len() as isize).abs(), l))
+            .unwrap_or(0);
+        for n in 1..=N {
+            let hc = ngram_counts(h, n);
+            // Max reference count per n-gram (clipping).
+            let mut rc: HashMap<Ngram, usize> = HashMap::new();
+            for r in rs {
+                for (g, c) in ngram_counts(r, n) {
+                    let e = rc.entry(g).or_insert(0);
+                    *e = (*e).max(c);
+                }
+            }
+            for (g, c) in hc {
+                total[n - 1] += c;
+                if let Some(&m) = rc.get(&g) {
+                    matched[n - 1] += c.min(m);
+                }
+            }
+        }
+    }
+    // Geometric mean of clipped precisions. Zero unigram overlap means
+    // BLEU 0; higher orders with zero matches get +ε smoothing
+    // (Lin & Och) so short corpora stay finite.
+    if total[0] == 0 || matched[0] == 0 {
+        return 0.0;
+    }
+    let mut log_sum = 0.0f64;
+    for n in 0..N {
+        let p = if total[n] == 0 || matched[n] == 0 {
+            1.0 / (2.0 * total[n].max(1) as f64)
+        } else {
+            matched[n] as f64 / total[n] as f64
+        };
+        log_sum += p.ln() / N as f64;
+    }
+    let bp = if hyp_len >= ref_len || hyp_len == 0 {
+        1.0
+    } else {
+        (1.0 - ref_len as f64 / hyp_len as f64).exp()
+    };
+    100.0 * bp * log_sum.exp()
+}
+
+/// NIST-5: information-weighted n-gram precision. Info weights come from
+/// reference-corpus n-gram statistics: info(w₁..wₙ) = log₂(#(w₁..wₙ₋₁)/#(w₁..wₙ)).
+pub fn nist(hyps: &[Vec<u32>], refs: &[Vec<Vec<u32>>]) -> f64 {
+    assert_eq!(hyps.len(), refs.len());
+    const N: usize = 5;
+    // Corpus statistics over all references.
+    let mut corpus: Vec<HashMap<Ngram, usize>> = vec![HashMap::new(); N + 1];
+    let mut total_unigrams = 0usize;
+    for rs in refs {
+        for r in rs {
+            total_unigrams += r.len();
+            for n in 1..=N {
+                for (g, c) in ngram_counts(r, n) {
+                    *corpus[n].entry(g).or_insert(0) += c;
+                }
+            }
+        }
+    }
+    let info = |g: &[u32]| -> f64 {
+        let n = g.len();
+        let num = if n == 1 {
+            total_unigrams as f64
+        } else {
+            *corpus[n - 1].get(&g[..n - 1].to_vec()).unwrap_or(&0) as f64
+        };
+        let den = *corpus[n].get(&g.to_vec()).unwrap_or(&0) as f64;
+        if num > 0.0 && den > 0.0 {
+            (num / den).log2()
+        } else {
+            0.0
+        }
+    };
+
+    let mut score = 0.0f64;
+    let mut hyp_len = 0usize;
+    let mut ref_len_avg = 0.0f64;
+    let mut denom = [0usize; N];
+    let mut numer = [0.0f64; N];
+    for (h, rs) in hyps.iter().zip(refs) {
+        hyp_len += h.len();
+        ref_len_avg += rs.iter().map(|r| r.len()).sum::<usize>() as f64 / rs.len() as f64;
+        for n in 1..=N {
+            let hc = ngram_counts(h, n);
+            let mut rc: HashMap<Ngram, usize> = HashMap::new();
+            for r in rs {
+                for (g, c) in ngram_counts(r, n) {
+                    let e = rc.entry(g).or_insert(0);
+                    *e = (*e).max(c);
+                }
+            }
+            for (g, c) in hc {
+                denom[n - 1] += c;
+                if let Some(&m) = rc.get(&g) {
+                    numer[n - 1] += (c.min(m) as f64) * info(&g);
+                }
+            }
+        }
+    }
+    for n in 0..N {
+        if denom[n] > 0 {
+            score += numer[n] / denom[n] as f64;
+        }
+    }
+    // NIST brevity penalty: exp(β·log²(min(Lhyp/L̄ref, 1))) with β chosen
+    // so penalty = 0.5 at ratio 2/3.
+    let beta = (0.5f64).ln() / (1.5f64).ln().powi(2);
+    let ratio = if ref_len_avg > 0.0 {
+        (hyp_len as f64 / ref_len_avg).min(1.0)
+    } else {
+        1.0
+    };
+    let bp = (beta * ratio.ln().powi(2)).exp();
+    score * bp
+}
+
+/// METEOR-style score: unigram precision/recall harmonic mean (recall-
+/// weighted 9:1) times a fragmentation penalty from contiguous-match
+/// chunks. Best reference taken per sentence; returns 0..=1.
+pub fn meteor(hyps: &[Vec<u32>], refs: &[Vec<Vec<u32>>]) -> f64 {
+    assert_eq!(hyps.len(), refs.len());
+    if hyps.is_empty() {
+        return 0.0;
+    }
+    let mut sum = 0.0f64;
+    for (h, rs) in hyps.iter().zip(refs) {
+        let best = rs
+            .iter()
+            .map(|r| meteor_sentence(h, r))
+            .fold(0.0f64, f64::max);
+        sum += best;
+    }
+    sum / hyps.len() as f64
+}
+
+fn meteor_sentence(h: &[u32], r: &[u32]) -> f64 {
+    if h.is_empty() || r.is_empty() {
+        return 0.0;
+    }
+    // Greedy left-to-right alignment on exact matches.
+    let mut used = vec![false; r.len()];
+    let mut align: Vec<Option<usize>> = Vec::with_capacity(h.len());
+    for &tok in h {
+        let mut found = None;
+        for (j, &rt) in r.iter().enumerate() {
+            if !used[j] && rt == tok {
+                found = Some(j);
+                break;
+            }
+        }
+        if let Some(j) = found {
+            used[j] = true;
+        }
+        align.push(found);
+    }
+    let m = align.iter().filter(|a| a.is_some()).count() as f64;
+    if m == 0.0 {
+        return 0.0;
+    }
+    let p = m / h.len() as f64;
+    let rcl = m / r.len() as f64;
+    let fmean = 10.0 * p * rcl / (rcl + 9.0 * p);
+    // Chunks: maximal runs of matches that are adjacent in both h and r.
+    let mut chunks = 0usize;
+    let mut prev: Option<usize> = None;
+    for a in &align {
+        match (a, prev) {
+            (Some(j), Some(pj)) if *j == pj + 1 => {}
+            (Some(_), _) => chunks += 1,
+            (None, _) => {}
+        }
+        prev = *a;
+    }
+    let frag = chunks as f64 / m;
+    let penalty = 0.5 * frag.powi(3);
+    fmean * (1.0 - penalty)
+}
+
+/// TER: word-level edit distance (ins/del/sub, no shifts) divided by the
+/// average reference length; best (lowest) over references. Lower is
+/// better; returns ≥ 0 (can exceed 1).
+pub fn ter(hyps: &[Vec<u32>], refs: &[Vec<Vec<u32>>]) -> f64 {
+    assert_eq!(hyps.len(), refs.len());
+    let mut edits = 0.0f64;
+    let mut ref_len = 0.0f64;
+    for (h, rs) in hyps.iter().zip(refs) {
+        let best = rs
+            .iter()
+            .map(|r| edit_distance(h, r) as f64)
+            .fold(f64::INFINITY, f64::min);
+        edits += best;
+        ref_len += rs.iter().map(|r| r.len()).sum::<usize>() as f64 / rs.len() as f64;
+    }
+    if ref_len == 0.0 {
+        0.0
+    } else {
+        edits / ref_len
+    }
+}
+
+fn edit_distance(a: &[u32], b: &[u32]) -> usize {
+    let (n, m) = (a.len(), b.len());
+    let mut prev: Vec<usize> = (0..=m).collect();
+    let mut cur = vec![0usize; m + 1];
+    for i in 1..=n {
+        cur[0] = i;
+        for j in 1..=m {
+            let cost = if a[i - 1] == b[j - 1] { 0 } else { 1 };
+            cur[j] = (prev[j] + 1).min(cur[j - 1] + 1).min(prev[j - 1] + cost);
+        }
+        std::mem::swap(&mut prev, &mut cur);
+    }
+    prev[m]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn one_ref(r: Vec<u32>) -> Vec<Vec<u32>> {
+        vec![r]
+    }
+
+    #[test]
+    fn bleu_perfect_is_100() {
+        let h = vec![vec![1, 2, 3, 4, 5, 6]];
+        let r = vec![one_ref(vec![1, 2, 3, 4, 5, 6])];
+        assert!((bleu(&h, &r) - 100.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn bleu_disjoint_is_near_zero() {
+        let h = vec![vec![1, 2, 3, 4, 5, 6]];
+        let r = vec![one_ref(vec![10, 11, 12, 13, 14, 15])];
+        assert!(bleu(&h, &r) < 2.0);
+    }
+
+    #[test]
+    fn bleu_orders_partial_matches() {
+        let r = vec![one_ref(vec![1, 2, 3, 4, 5, 6, 7, 8])];
+        let close = vec![vec![1, 2, 3, 4, 5, 6, 9, 10]];
+        let far = vec![vec![1, 9, 3, 10, 5, 11, 7, 12]];
+        assert!(bleu(&close, &r) > bleu(&far, &r));
+    }
+
+    #[test]
+    fn bleu_brevity_penalty_fires() {
+        let r = vec![one_ref(vec![1, 2, 3, 4, 5, 6, 7, 8])];
+        let full = vec![vec![1, 2, 3, 4, 5, 6, 7, 8]];
+        let brief = vec![vec![1, 2, 3, 4]];
+        assert!(bleu(&brief, &r) < bleu(&full, &r) * 0.8);
+    }
+
+    #[test]
+    fn bleu_multi_reference_helps() {
+        let h = vec![vec![1, 2, 3, 9, 5, 6]];
+        let r1 = vec![vec![vec![1, 2, 3, 4, 5, 6]]];
+        let r2 = vec![vec![vec![1, 2, 3, 4, 5, 6], vec![1, 2, 3, 9, 5, 6]]];
+        assert!(bleu(&h, &r2) > bleu(&h, &r1));
+    }
+
+    #[test]
+    fn nist_weights_informative_ngrams() {
+        // Hypothesis A matches a rare reference n-gram, B matches a
+        // common one; A should score higher.
+        let refs: Vec<Vec<Vec<u32>>> = vec![
+            vec![vec![1, 1, 1, 1, 7, 8]], // 7,8 rare; 1 common
+            vec![vec![1, 1, 1, 1, 1, 1]],
+        ];
+        let a = vec![vec![7, 8, 2, 3, 4, 5], vec![9, 9, 9, 9, 9, 9]];
+        let b = vec![vec![1, 1, 2, 3, 4, 5], vec![9, 9, 9, 9, 9, 9]];
+        assert!(nist(&a, &refs) > nist(&b, &refs));
+    }
+
+    #[test]
+    fn meteor_perfect_and_fragmented() {
+        let r = vec![1, 2, 3, 4, 5, 6];
+        let perfect = meteor(&[r.clone()], &[one_ref(r.clone())]);
+        assert!(perfect > 0.99, "{perfect}");
+        // Same tokens, scrambled: recall/precision 1 but fragmented.
+        let scrambled = meteor(&[vec![6, 4, 2, 1, 3, 5]], &[one_ref(r)]);
+        assert!(scrambled < perfect);
+        assert!(scrambled > 0.3);
+    }
+
+    #[test]
+    fn ter_zero_for_exact_and_counts_edits() {
+        let r = vec![1, 2, 3, 4];
+        assert_eq!(ter(&[r.clone()], &[one_ref(r.clone())]), 0.0);
+        // One substitution in 4 tokens → 0.25.
+        let t = ter(&[vec![1, 9, 3, 4]], &[one_ref(r)]);
+        assert!((t - 0.25).abs() < 1e-9, "{t}");
+    }
+
+    #[test]
+    fn edit_distance_classic() {
+        assert_eq!(edit_distance(&[1, 2, 3], &[1, 2, 3]), 0);
+        assert_eq!(edit_distance(&[1, 2, 3], &[1, 3]), 1);
+        assert_eq!(edit_distance(&[], &[1, 2]), 2);
+        assert_eq!(edit_distance(&[5, 6], &[]), 2);
+    }
+
+    #[test]
+    fn empty_corpus_edge_cases() {
+        assert_eq!(bleu(&[vec![]], &[one_ref(vec![1])]), 0.0);
+        assert_eq!(meteor(&[], &[]), 0.0);
+    }
+}

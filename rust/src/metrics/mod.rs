@@ -1,0 +1,77 @@
+//! Evaluation metrics matching the paper's Tables: accuracy, Matthews
+//! correlation, Pearson r (classification/regression), and the
+//! generation quartet BLEU / NIST / METEOR / TER.
+
+pub mod generation;
+
+pub use generation::{bleu, meteor, nist, ter};
+
+/// Classification accuracy.
+pub fn accuracy(preds: &[usize], targets: &[usize]) -> f64 {
+    assert_eq!(preds.len(), targets.len());
+    if preds.is_empty() {
+        return 0.0;
+    }
+    let hit = preds.iter().zip(targets).filter(|(p, t)| p == t).count();
+    hit as f64 / preds.len() as f64
+}
+
+/// Matthews correlation coefficient for binary classification
+/// (CoLA's metric). Returns 0.0 for degenerate confusion matrices.
+pub fn matthews_corr(preds: &[usize], targets: &[usize]) -> f64 {
+    assert_eq!(preds.len(), targets.len());
+    let (mut tp, mut tn, mut fp, mut fn_) = (0f64, 0f64, 0f64, 0f64);
+    for (&p, &t) in preds.iter().zip(targets) {
+        match (p, t) {
+            (1, 1) => tp += 1.0,
+            (0, 0) => tn += 1.0,
+            (1, 0) => fp += 1.0,
+            (0, 1) => fn_ += 1.0,
+            _ => panic!("matthews_corr is binary; got ({p},{t})"),
+        }
+    }
+    let denom = ((tp + fp) * (tp + fn_) * (tn + fp) * (tn + fn_)).sqrt();
+    if denom == 0.0 {
+        0.0
+    } else {
+        (tp * tn - fp * fn_) / denom
+    }
+}
+
+/// Pearson correlation (STS-B's metric), re-exported from stats.
+pub fn pearson_r(preds: &[f64], targets: &[f64]) -> f64 {
+    crate::util::stats::pearson(preds, targets)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accuracy_basics() {
+        assert_eq!(accuracy(&[1, 0, 1], &[1, 0, 0]), 2.0 / 3.0);
+        assert_eq!(accuracy(&[], &[]), 0.0);
+    }
+
+    #[test]
+    fn mcc_perfect_and_inverse() {
+        let t = [1, 0, 1, 0, 1, 0];
+        assert!((matthews_corr(&t, &t) - 1.0).abs() < 1e-12);
+        let inv: Vec<usize> = t.iter().map(|&x| 1 - x).collect();
+        assert!((matthews_corr(&inv, &t) + 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn mcc_degenerate_is_zero() {
+        // All-one predictions → undefined denominator → 0 by convention.
+        assert_eq!(matthews_corr(&[1, 1, 1], &[1, 0, 1]), 0.0);
+    }
+
+    #[test]
+    fn mcc_random_near_zero() {
+        let mut rng = crate::util::Rng::new(77);
+        let preds: Vec<usize> = (0..2000).map(|_| rng.below(2)).collect();
+        let targets: Vec<usize> = (0..2000).map(|_| rng.below(2)).collect();
+        assert!(matthews_corr(&preds, &targets).abs() < 0.1);
+    }
+}

@@ -1,0 +1,108 @@
+//! Houlsby-style bottleneck adapter (baseline in Table 4).
+//!
+//! `y = x + up(gelu(down(x)))` with a small bottleneck width; inserted
+//! after the attention and FFN sublayers when the Adapters baseline is
+//! selected. Only adapter parameters train.
+
+use super::linear::Linear;
+use crate::tensor::Tensor;
+use crate::util::Rng;
+
+#[derive(Clone, Debug)]
+pub struct Adapter {
+    pub down: Linear,
+    pub up: Linear,
+}
+
+pub struct AdapterCache {
+    pub h_pre: Tensor,
+    pub h_post: Tensor,
+}
+
+impl Adapter {
+    pub fn new(d_model: usize, bottleneck: usize, rng: &mut Rng) -> Self {
+        let mut up = Linear::new(bottleneck, d_model, rng);
+        // Near-identity init: up ≈ 0 so the adapter starts as a no-op.
+        up.w = Tensor::randn(&[bottleneck, d_model], 1e-3, rng);
+        Adapter {
+            down: Linear::new(d_model, bottleneck, rng),
+            up,
+        }
+    }
+
+    pub fn forward(&self, x: &Tensor) -> (Tensor, AdapterCache) {
+        let h_pre = self.down.forward(x);
+        let h_post = h_pre.gelu();
+        let delta = self.up.forward(&h_post);
+        (x.add(&delta), AdapterCache { h_pre, h_post })
+    }
+
+    pub fn backward(&mut self, x: &Tensor, cache: &AdapterCache, dy: &Tensor) -> Tensor {
+        let dh_post = self.up.backward(&cache.h_post, dy);
+        let dh_pre = dh_post.mul(&cache.h_pre.gelu_grad());
+        let mut dx = self.down.backward(x, &dh_pre);
+        dx.axpy(1.0, dy); // residual path
+        dx
+    }
+
+    pub fn zero_grad(&mut self) {
+        self.down.zero_grad();
+        self.up.zero_grad();
+    }
+
+    pub fn trainable_params(&self) -> usize {
+        self.down.trainable_params() + self.up.trainable_params()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn starts_near_identity() {
+        let mut rng = Rng::new(70);
+        let a = Adapter::new(8, 2, &mut rng);
+        let x = Tensor::randn(&[3, 8], 1.0, &mut rng);
+        let (y, _) = a.forward(&x);
+        for (xi, yi) in x.data.iter().zip(&y.data) {
+            assert!((xi - yi).abs() < 0.05, "{xi} vs {yi}");
+        }
+    }
+
+    #[test]
+    fn grad_check() {
+        let mut rng = Rng::new(71);
+        let mut a = Adapter::new(6, 3, &mut rng);
+        // Make "up" non-trivial so gradients flow.
+        a.up.w = Tensor::randn(&[3, 6], 0.3, &mut rng);
+        let x = Tensor::randn(&[2, 6], 0.5, &mut rng);
+
+        let loss = |a: &Adapter, x: &Tensor| {
+            let (y, _) = a.forward(x);
+            0.5 * y.data.iter().map(|v| v * v).sum::<f32>()
+        };
+
+        a.zero_grad();
+        let (y, cache) = a.forward(&x);
+        let dx = a.backward(&x, &cache, &y);
+
+        let eps = 1e-2f32;
+        let tol = 2e-2f32;
+        let mut x2 = x.clone();
+        for &pos in &[0usize, 5, 11] {
+            let o = x2.data[pos];
+            x2.data[pos] = o + eps;
+            let lp = loss(&a, &x2);
+            x2.data[pos] = o - eps;
+            let lm = loss(&a, &x2);
+            x2.data[pos] = o;
+            let fd = (lp - lm) / (2.0 * eps);
+            assert!(
+                (fd - dx.data[pos]).abs() < tol * (1.0 + fd.abs()),
+                "dx[{pos}] fd={fd} an={}",
+                dx.data[pos]
+            );
+        }
+    }
+}

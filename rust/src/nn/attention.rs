@@ -1,0 +1,358 @@
+//! Multi-head self-attention with per-head gate coefficients.
+//!
+//! The gates `c ∈ R^H` implement the paper's structured-sparsity device
+//! (§3.3): each head's context output is scaled by its gate, an `λ‖c‖₁`
+//! penalty is added to the loss during the search phase, and heads with
+//! the smallest |c| are pruned layer-wise afterwards. Backward is manual
+//! and finite-difference checked.
+
+use super::linear::Linear;
+use crate::tensor::linalg::{matmul, matmul_at, matmul_bt};
+use crate::tensor::Tensor;
+use crate::util::Rng;
+
+/// Multi-head self-attention module.
+#[derive(Clone, Debug)]
+pub struct Attention {
+    pub wq: Linear,
+    pub wk: Linear,
+    pub wv: Linear,
+    pub wo: Linear,
+    /// Per-head gate coefficients `c` (init 1.0).
+    pub gates: Tensor,
+    pub ggates: Tensor,
+    pub gates_trainable: bool,
+    pub n_heads: usize,
+    pub head_dim: usize,
+    pub causal: bool,
+}
+
+/// Forward cache for backward.
+pub struct AttnCache {
+    pub q2: Tensor,               // [BS, H*hd]
+    pub k2: Tensor,               // [BS, H*hd]
+    pub v2: Tensor,               // [BS, H*hd]
+    pub attn: Vec<Tensor>,        // B*H entries of [S, S]
+    pub ctx_pre: Tensor,          // [BS, H*hd] pre-gate context
+    pub ctx: Tensor,              // [BS, H*hd] post-gate context (input to wo)
+    pub batch: usize,
+    pub seq: usize,
+}
+
+impl Attention {
+    pub fn new(d_model: usize, n_heads: usize, causal: bool, rng: &mut Rng) -> Self {
+        assert_eq!(d_model % n_heads, 0, "d_model must divide n_heads");
+        let head_dim = d_model / n_heads;
+        Attention {
+            wq: Linear::new(d_model, d_model, rng),
+            wk: Linear::new(d_model, d_model, rng),
+            wv: Linear::new(d_model, d_model, rng),
+            wo: Linear::new(d_model, d_model, rng),
+            gates: Tensor::full(&[n_heads], 1.0),
+            ggates: Tensor::zeros(&[n_heads]),
+            gates_trainable: false,
+            n_heads,
+            head_dim,
+            causal,
+        }
+    }
+
+    /// Attention width after any structured pruning (= wq.out_dim()).
+    pub fn attn_dim(&self) -> usize {
+        self.n_heads * self.head_dim
+    }
+
+    /// Copy head slice (b, h) of a [BS, H*hd] tensor into [S, hd].
+    fn gather_head(&self, t: &Tensor, b: usize, h: usize, seq: usize) -> Tensor {
+        let width = self.attn_dim();
+        let hd = self.head_dim;
+        let mut out = Tensor::zeros(&[seq, hd]);
+        for s in 0..seq {
+            let src = (b * seq + s) * width + h * hd;
+            out.data[s * hd..(s + 1) * hd].copy_from_slice(&t.data[src..src + hd]);
+        }
+        out
+    }
+
+    /// Add a [S, hd] head slice back into a [BS, H*hd] tensor.
+    fn scatter_head(&self, t: &mut Tensor, src: &Tensor, b: usize, h: usize, seq: usize) {
+        let width = self.attn_dim();
+        let hd = self.head_dim;
+        for s in 0..seq {
+            let dst = (b * seq + s) * width + h * hd;
+            for j in 0..hd {
+                t.data[dst + j] += src.data[s * hd + j];
+            }
+        }
+    }
+
+    /// x: [B*S, d_model] → (y: [B*S, d_model], cache).
+    pub fn forward(&self, x: &Tensor, batch: usize, seq: usize) -> (Tensor, AttnCache) {
+        let h_total = self.n_heads;
+        let width = self.attn_dim();
+        let q2 = self.wq.forward(x);
+        let k2 = self.wk.forward(x);
+        let v2 = self.wv.forward(x);
+        let rscale = 1.0 / (self.head_dim as f32).sqrt();
+
+        let mut attn_maps = Vec::with_capacity(batch * h_total);
+        let mut ctx_pre = Tensor::zeros(&[batch * seq, width]);
+        for b in 0..batch {
+            for h in 0..h_total {
+                let qh = self.gather_head(&q2, b, h, seq);
+                let kh = self.gather_head(&k2, b, h, seq);
+                let vh = self.gather_head(&v2, b, h, seq);
+                let mut scores = matmul_bt(&qh, &kh).scale(rscale); // [S, S]
+                if self.causal {
+                    for i in 0..seq {
+                        for j in i + 1..seq {
+                            scores.data[i * seq + j] = -1e30;
+                        }
+                    }
+                }
+                let attn = scores.softmax_rows();
+                let ctx_h = matmul(&attn, &vh); // [S, hd]
+                self.scatter_head(&mut ctx_pre, &ctx_h, b, h, seq);
+                attn_maps.push(attn);
+            }
+        }
+        // Apply gates per head.
+        let mut ctx = ctx_pre.clone();
+        for row in 0..batch * seq {
+            for h in 0..h_total {
+                let g = self.gates.data[h];
+                if g != 1.0 {
+                    for j in 0..self.head_dim {
+                        ctx.data[row * width + h * self.head_dim + j] *= g;
+                    }
+                }
+            }
+        }
+        let y = self.wo.forward(&ctx);
+        (
+            y,
+            AttnCache {
+                q2,
+                k2,
+                v2,
+                attn: attn_maps,
+                ctx_pre,
+                ctx,
+                batch,
+                seq,
+            },
+        )
+    }
+
+    /// Backward: returns dx given the forward input x and upstream dy.
+    pub fn backward(&mut self, x: &Tensor, cache: &AttnCache, dy: &Tensor) -> Tensor {
+        let (batch, seq) = (cache.batch, cache.seq);
+        let h_total = self.n_heads;
+        let width = self.attn_dim();
+        let hd = self.head_dim;
+        let rscale = 1.0 / (hd as f32).sqrt();
+
+        // Through the output projection.
+        let dctx = self.wo.backward(&cache.ctx, dy); // [BS, width]
+
+        // Gate backward: ggates[h] += Σ dctx⊙ctx_pre ; dctx_pre = dctx*g.
+        let mut dctx_pre = dctx.clone();
+        for row in 0..batch * seq {
+            for h in 0..h_total {
+                let g = self.gates.data[h];
+                let mut acc = 0.0;
+                for j in 0..hd {
+                    let o = row * width + h * hd + j;
+                    acc += dctx.data[o] * cache.ctx_pre.data[o];
+                    dctx_pre.data[o] = dctx.data[o] * g;
+                }
+                if self.gates_trainable {
+                    self.ggates.data[h] += acc;
+                }
+            }
+        }
+
+        let mut dq2 = Tensor::zeros(&[batch * seq, width]);
+        let mut dk2 = Tensor::zeros(&[batch * seq, width]);
+        let mut dv2 = Tensor::zeros(&[batch * seq, width]);
+
+        for b in 0..batch {
+            for h in 0..h_total {
+                let attn = &cache.attn[b * h_total + h]; // [S, S]
+                let qh = self.gather_head(&cache.q2, b, h, seq);
+                let kh = self.gather_head(&cache.k2, b, h, seq);
+                let vh = self.gather_head(&cache.v2, b, h, seq);
+                let dctx_h = self.gather_head(&dctx_pre, b, h, seq); // [S, hd]
+
+                let dattn = matmul_bt(&dctx_h, &vh); // [S, S]
+                let dvh = matmul_at(attn, &dctx_h); // [S, hd]
+
+                // Softmax backward: ds = attn ⊙ (dattn - rowdot broadcast).
+                let mut ds = Tensor::zeros(&[seq, seq]);
+                for i in 0..seq {
+                    let arow = &attn.data[i * seq..(i + 1) * seq];
+                    let drow = &dattn.data[i * seq..(i + 1) * seq];
+                    let rowdot: f32 = arow.iter().zip(drow).map(|(a, d)| a * d).sum();
+                    for j in 0..seq {
+                        ds.data[i * seq + j] = arow[j] * (drow[j] - rowdot);
+                    }
+                }
+                let dqh = matmul(&ds, &kh).scale(rscale); // [S, hd]
+                let dkh = matmul_at(&ds, &qh).scale(rscale); // dk = ds^T q
+
+                self.scatter_head(&mut dq2, &dqh, b, h, seq);
+                self.scatter_head(&mut dk2, &dkh, b, h, seq);
+                self.scatter_head(&mut dv2, &dvh, b, h, seq);
+            }
+        }
+
+        let mut dx = self.wq.backward(x, &dq2);
+        dx.axpy(1.0, &self.wk.backward(x, &dk2));
+        dx.axpy(1.0, &self.wv.backward(x, &dv2));
+        dx
+    }
+
+    pub fn zero_grad(&mut self) {
+        self.wq.zero_grad();
+        self.wk.zero_grad();
+        self.wv.zero_grad();
+        self.wo.zero_grad();
+        self.ggates.data.fill(0.0);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn loss(att: &Attention, x: &Tensor, b: usize, s: usize) -> f32 {
+        let (y, _) = att.forward(x, b, s);
+        0.5 * y.data.iter().map(|v| v * v).sum::<f32>()
+    }
+
+    #[test]
+    fn shapes_and_softmax_rows() {
+        let mut rng = Rng::new(30);
+        let att = Attention::new(16, 4, false, &mut rng);
+        let x = Tensor::randn(&[2 * 5, 16], 0.5, &mut rng);
+        let (y, cache) = att.forward(&x, 2, 5);
+        assert_eq!(y.shape, vec![10, 16]);
+        assert_eq!(cache.attn.len(), 2 * 4);
+        for a in &cache.attn {
+            for i in 0..5 {
+                let s: f32 = a.row(i).iter().sum();
+                assert!((s - 1.0).abs() < 1e-5);
+            }
+        }
+    }
+
+    #[test]
+    fn causal_mask_blocks_future() {
+        let mut rng = Rng::new(31);
+        let att = Attention::new(8, 2, true, &mut rng);
+        let x = Tensor::randn(&[6, 8], 0.5, &mut rng);
+        let (_, cache) = att.forward(&x, 1, 6);
+        for a in &cache.attn {
+            for i in 0..6 {
+                for j in i + 1..6 {
+                    assert!(a.at2(i, j).abs() < 1e-10, "future leak at ({i},{j})");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn causality_is_functional() {
+        // Changing a future token must not change earlier outputs.
+        let mut rng = Rng::new(32);
+        let att = Attention::new(8, 2, true, &mut rng);
+        let mut x = Tensor::randn(&[4, 8], 0.5, &mut rng);
+        let (y1, _) = att.forward(&x, 1, 4);
+        for j in 0..8 {
+            x.data[3 * 8 + j] += 1.0; // perturb last position
+        }
+        let (y2, _) = att.forward(&x, 1, 4);
+        for s in 0..3 {
+            for j in 0..8 {
+                assert!((y1.at2(s, j) - y2.at2(s, j)).abs() < 1e-6);
+            }
+        }
+    }
+
+    #[test]
+    fn zero_gate_silences_head() {
+        let mut rng = Rng::new(33);
+        let mut att = Attention::new(8, 2, false, &mut rng);
+        // Gate head 0 off: output should equal using only head 1's context.
+        att.gates.data[0] = 0.0;
+        let x = Tensor::randn(&[3, 8], 0.5, &mut rng);
+        let (_, cache) = att.forward(&x, 1, 3);
+        // ctx (post-gate) must be zero in head 0's columns.
+        for row in 0..3 {
+            for j in 0..4 {
+                assert_eq!(cache.ctx.data[row * 8 + j], 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn grad_check_input_and_gates() {
+        let mut rng = Rng::new(34);
+        let mut att = Attention::new(8, 2, true, &mut rng);
+        att.gates_trainable = true;
+        att.gates = Tensor::from_vec(&[2], vec![0.8, 1.2]);
+        let x = Tensor::randn(&[4, 8], 0.5, &mut rng);
+
+        att.zero_grad();
+        let (y, cache) = att.forward(&x, 1, 4);
+        let dx = att.backward(&x, &cache, &y);
+
+        let eps = 1e-2f32;
+        let tol = 3e-2f32;
+        // dx.
+        let mut x2 = x.clone();
+        for &pos in &[0usize, 13, 31] {
+            let o = x2.data[pos];
+            x2.data[pos] = o + eps;
+            let lp = loss(&att, &x2, 1, 4);
+            x2.data[pos] = o - eps;
+            let lm = loss(&att, &x2, 1, 4);
+            x2.data[pos] = o;
+            let fd = (lp - lm) / (2.0 * eps);
+            assert!(
+                (fd - dx.data[pos]).abs() < tol * (1.0 + fd.abs()),
+                "dx[{pos}] fd={fd} an={}",
+                dx.data[pos]
+            );
+        }
+        // dgates.
+        for h in 0..2 {
+            let o = att.gates.data[h];
+            att.gates.data[h] = o + eps;
+            let lp = loss(&att, &x, 1, 4);
+            att.gates.data[h] = o - eps;
+            let lm = loss(&att, &x, 1, 4);
+            att.gates.data[h] = o;
+            let fd = (lp - lm) / (2.0 * eps);
+            assert!(
+                (fd - att.ggates.data[h]).abs() < tol * (1.0 + fd.abs()),
+                "dgate[{h}] fd={fd} an={}",
+                att.ggates.data[h]
+            );
+        }
+        // One weight of wq.
+        let pos = 5;
+        let o = att.wq.w.data[pos];
+        att.wq.w.data[pos] = o + eps;
+        let lp = loss(&att, &x, 1, 4);
+        att.wq.w.data[pos] = o - eps;
+        let lm = loss(&att, &x, 1, 4);
+        att.wq.w.data[pos] = o;
+        let fd = (lp - lm) / (2.0 * eps);
+        assert!(
+            (fd - att.wq.gw.data[pos]).abs() < tol * (1.0 + fd.abs()),
+            "dwq[{pos}] fd={fd} an={}",
+            att.wq.gw.data[pos]
+        );
+    }
+}

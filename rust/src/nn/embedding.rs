@@ -1,0 +1,108 @@
+//! Token + learned positional embeddings with scatter-add backward.
+
+use crate::tensor::Tensor;
+use crate::util::Rng;
+
+#[derive(Clone, Debug)]
+pub struct Embedding {
+    pub tok: Tensor, // [vocab, d]
+    pub pos: Tensor, // [max_seq, d]
+    pub gtok: Tensor,
+    pub gpos: Tensor,
+    pub trainable: bool,
+}
+
+impl Embedding {
+    pub fn new(vocab: usize, max_seq: usize, d: usize, rng: &mut Rng) -> Self {
+        Embedding {
+            tok: Tensor::randn(&[vocab, d], 0.02, rng),
+            pos: Tensor::randn(&[max_seq, d], 0.02, rng),
+            gtok: Tensor::zeros(&[vocab, d]),
+            gpos: Tensor::zeros(&[max_seq, d]),
+            trainable: true,
+        }
+    }
+
+    pub fn dim(&self) -> usize {
+        self.tok.cols()
+    }
+
+    pub fn vocab(&self) -> usize {
+        self.tok.rows()
+    }
+
+    /// ids: [B*S] → [B*S, d] = tok[id] + pos[s].
+    pub fn forward(&self, ids: &[u32], seq: usize) -> Tensor {
+        let d = self.dim();
+        assert_eq!(ids.len() % seq, 0, "ids not a multiple of seq");
+        let mut out = Tensor::zeros(&[ids.len(), d]);
+        for (row, &id) in ids.iter().enumerate() {
+            let s = row % seq;
+            let t = id as usize;
+            assert!(t < self.vocab(), "token id {t} out of vocab");
+            let dst = &mut out.data[row * d..(row + 1) * d];
+            let tsrc = &self.tok.data[t * d..(t + 1) * d];
+            let psrc = &self.pos.data[s * d..(s + 1) * d];
+            for j in 0..d {
+                dst[j] = tsrc[j] + psrc[j];
+            }
+        }
+        out
+    }
+
+    pub fn backward(&mut self, ids: &[u32], seq: usize, dy: &Tensor) {
+        if !self.trainable {
+            return;
+        }
+        let d = self.dim();
+        for (row, &id) in ids.iter().enumerate() {
+            let s = row % seq;
+            let t = id as usize;
+            let src = &dy.data[row * d..(row + 1) * d];
+            for j in 0..d {
+                self.gtok.data[t * d + j] += src[j];
+                self.gpos.data[s * d + j] += src[j];
+            }
+        }
+    }
+
+    pub fn zero_grad(&mut self) {
+        self.gtok.data.fill(0.0);
+        self.gpos.data.fill(0.0);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lookup_adds_positions() {
+        let mut rng = Rng::new(50);
+        let emb = Embedding::new(10, 4, 3, &mut rng);
+        let ids = vec![2u32, 2, 2, 2]; // same token at 4 positions
+        let x = emb.forward(&ids, 4);
+        for s in 0..4 {
+            for j in 0..3 {
+                let expect = emb.tok.at2(2, j) + emb.pos.at2(s, j);
+                assert!((x.at2(s, j) - expect).abs() < 1e-6);
+            }
+        }
+    }
+
+    #[test]
+    fn backward_scatters() {
+        let mut rng = Rng::new(51);
+        let mut emb = Embedding::new(5, 2, 2, &mut rng);
+        let ids = vec![1u32, 1, 3, 1]; // B=2, S=2
+        let dy = Tensor::full(&[4, 2], 1.0);
+        emb.backward(&ids, 2, &dy);
+        // Token 1 appears 3 times, token 3 once.
+        assert_eq!(emb.gtok.at2(1, 0), 3.0);
+        assert_eq!(emb.gtok.at2(3, 0), 1.0);
+        assert_eq!(emb.gtok.at2(0, 0), 0.0);
+        // Each position appears twice (B=2).
+        assert_eq!(emb.gpos.at2(0, 0), 2.0);
+        assert_eq!(emb.gpos.at2(1, 0), 2.0);
+    }
+}

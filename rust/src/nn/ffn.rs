@@ -1,0 +1,109 @@
+//! Position-wise feed-forward network (Linear → GELU → Linear) with
+//! manual backward. Structured FFN pruning (the paper prunes 40% of each
+//! intermediate layer) shrinks `fc1.out_dim`/`fc2.in_dim`.
+
+use super::linear::Linear;
+use crate::tensor::Tensor;
+use crate::util::Rng;
+
+#[derive(Clone, Debug)]
+pub struct Ffn {
+    pub fc1: Linear,
+    pub fc2: Linear,
+}
+
+pub struct FfnCache {
+    pub h_pre: Tensor,  // pre-GELU activations
+    pub h_post: Tensor, // post-GELU activations (input to fc2)
+}
+
+impl Ffn {
+    pub fn new(d_model: usize, d_ffn: usize, rng: &mut Rng) -> Self {
+        Ffn {
+            fc1: Linear::new(d_model, d_ffn, rng),
+            fc2: Linear::new(d_ffn, d_model, rng),
+        }
+    }
+
+    pub fn forward(&self, x: &Tensor) -> (Tensor, FfnCache) {
+        let h_pre = self.fc1.forward(x);
+        let h_post = h_pre.gelu();
+        let y = self.fc2.forward(&h_post);
+        (y, FfnCache { h_pre, h_post })
+    }
+
+    pub fn backward(&mut self, x: &Tensor, cache: &FfnCache, dy: &Tensor) -> Tensor {
+        let dh_post = self.fc2.backward(&cache.h_post, dy);
+        let dh_pre = dh_post.mul(&cache.h_pre.gelu_grad());
+        self.fc1.backward(x, &dh_pre)
+    }
+
+    pub fn zero_grad(&mut self) {
+        self.fc1.zero_grad();
+        self.fc2.zero_grad();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn grad_check() {
+        let mut rng = Rng::new(40);
+        let mut ffn = Ffn::new(6, 12, &mut rng);
+        let x = Tensor::randn(&[3, 6], 0.5, &mut rng);
+
+        let loss = |f: &Ffn, x: &Tensor| -> f32 {
+            let (y, _) = f.forward(x);
+            0.5 * y.data.iter().map(|v| v * v).sum::<f32>()
+        };
+
+        ffn.zero_grad();
+        let (y, cache) = ffn.forward(&x);
+        let dx = ffn.backward(&x, &cache, &y);
+
+        let eps = 1e-2f32;
+        let tol = 2e-2f32;
+        let mut x2 = x.clone();
+        for &pos in &[0usize, 9, 17] {
+            let o = x2.data[pos];
+            x2.data[pos] = o + eps;
+            let lp = loss(&ffn, &x2);
+            x2.data[pos] = o - eps;
+            let lm = loss(&ffn, &x2);
+            x2.data[pos] = o;
+            let fd = (lp - lm) / (2.0 * eps);
+            assert!(
+                (fd - dx.data[pos]).abs() < tol * (1.0 + fd.abs()),
+                "dx[{pos}] fd={fd} an={}",
+                dx.data[pos]
+            );
+        }
+        // Spot-check fc1 weight gradient.
+        for &pos in &[0usize, 35] {
+            let o = ffn.fc1.w.data[pos];
+            ffn.fc1.w.data[pos] = o + eps;
+            let lp = loss(&ffn, &x);
+            ffn.fc1.w.data[pos] = o - eps;
+            let lm = loss(&ffn, &x);
+            ffn.fc1.w.data[pos] = o;
+            let fd = (lp - lm) / (2.0 * eps);
+            assert!(
+                (fd - ffn.fc1.gw.data[pos]).abs() < tol * (1.0 + fd.abs()),
+                "dfc1[{pos}] fd={fd} an={}",
+                ffn.fc1.gw.data[pos]
+            );
+        }
+    }
+
+    #[test]
+    fn shapes() {
+        let mut rng = Rng::new(41);
+        let ffn = Ffn::new(8, 32, &mut rng);
+        let x = Tensor::randn(&[5, 8], 1.0, &mut rng);
+        let (y, cache) = ffn.forward(&x);
+        assert_eq!(y.shape, vec![5, 8]);
+        assert_eq!(cache.h_pre.shape, vec![5, 32]);
+    }
+}

@@ -1,0 +1,179 @@
+//! Layer normalization with manual backward.
+
+use crate::tensor::Tensor;
+
+/// LayerNorm over the last dimension with learnable gain/bias.
+#[derive(Clone, Debug)]
+pub struct LayerNorm {
+    pub gamma: Tensor, // [d]
+    pub beta: Tensor,  // [d]
+    pub ggamma: Tensor,
+    pub gbeta: Tensor,
+    pub eps: f32,
+    /// LayerNorm params stay trainable in all schemes (they are a
+    /// negligible fraction of parameters; the paper's LoRA setup also
+    /// leaves them trainable).
+    pub trainable: bool,
+}
+
+/// Cache for backward: normalized activations + inverse std per row.
+pub struct LnCache {
+    pub xhat: Tensor,
+    pub inv_std: Vec<f32>,
+}
+
+impl LayerNorm {
+    pub fn new(d: usize) -> Self {
+        LayerNorm {
+            gamma: Tensor::full(&[d], 1.0),
+            beta: Tensor::zeros(&[d]),
+            ggamma: Tensor::zeros(&[d]),
+            gbeta: Tensor::zeros(&[d]),
+            eps: 1e-5,
+            trainable: true,
+        }
+    }
+
+    pub fn forward(&self, x: &Tensor) -> (Tensor, LnCache) {
+        let d = *x.shape.last().unwrap();
+        let rows = x.numel() / d;
+        let mut out = x.clone();
+        let mut xhat = x.clone();
+        let mut inv_std = Vec::with_capacity(rows);
+        for r in 0..rows {
+            let seg = &x.data[r * d..(r + 1) * d];
+            let mean: f32 = seg.iter().sum::<f32>() / d as f32;
+            let var: f32 = seg.iter().map(|v| (v - mean) * (v - mean)).sum::<f32>() / d as f32;
+            let istd = 1.0 / (var + self.eps).sqrt();
+            inv_std.push(istd);
+            for j in 0..d {
+                let xh = (seg[j] - mean) * istd;
+                xhat.data[r * d + j] = xh;
+                out.data[r * d + j] = xh * self.gamma.data[j] + self.beta.data[j];
+            }
+        }
+        (out, LnCache { xhat, inv_std })
+    }
+
+    /// Backward: returns dx; accumulates dgamma/dbeta.
+    pub fn backward(&mut self, cache: &LnCache, dy: &Tensor) -> Tensor {
+        let d = *dy.shape.last().unwrap();
+        let rows = dy.numel() / d;
+        let mut dx = dy.clone();
+        for r in 0..rows {
+            let xh = &cache.xhat.data[r * d..(r + 1) * d];
+            let dyr = &dy.data[r * d..(r + 1) * d];
+            // dxhat = dy * gamma
+            // dx = istd/d * (d*dxhat - sum(dxhat) - xhat*sum(dxhat*xhat))
+            let mut sum_dxh = 0.0f32;
+            let mut sum_dxh_xh = 0.0f32;
+            for j in 0..d {
+                let dxh = dyr[j] * self.gamma.data[j];
+                sum_dxh += dxh;
+                sum_dxh_xh += dxh * xh[j];
+                if self.trainable {
+                    self.ggamma.data[j] += dyr[j] * xh[j];
+                    self.gbeta.data[j] += dyr[j];
+                }
+            }
+            let istd = cache.inv_std[r];
+            for j in 0..d {
+                let dxh = dyr[j] * self.gamma.data[j];
+                dx.data[r * d + j] =
+                    istd / d as f32 * (d as f32 * dxh - sum_dxh - xh[j] * sum_dxh_xh);
+            }
+        }
+        dx
+    }
+
+    pub fn zero_grad(&mut self) {
+        self.ggamma.data.fill(0.0);
+        self.gbeta.data.fill(0.0);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn normalizes_rows() {
+        let mut rng = Rng::new(20);
+        let ln = LayerNorm::new(16);
+        let x = Tensor::randn(&[5, 16], 3.0, &mut rng);
+        let (y, _) = ln.forward(&x);
+        for r in 0..5 {
+            let seg = y.row(r);
+            let mean: f32 = seg.iter().sum::<f32>() / 16.0;
+            let var: f32 = seg.iter().map(|v| (v - mean) * (v - mean)).sum::<f32>() / 16.0;
+            assert!(mean.abs() < 1e-5, "mean={mean}");
+            assert!((var - 1.0).abs() < 1e-3, "var={var}");
+        }
+    }
+
+    #[test]
+    fn grad_check() {
+        let mut rng = Rng::new(21);
+        let mut ln = LayerNorm::new(8);
+        ln.gamma = Tensor::randn(&[8], 0.5, &mut rng);
+        ln.beta = Tensor::randn(&[8], 0.5, &mut rng);
+        let x = Tensor::randn(&[3, 8], 1.0, &mut rng);
+
+        let loss = |ln: &LayerNorm, x: &Tensor| -> f32 {
+            let (y, _) = ln.forward(x);
+            0.5 * y.data.iter().map(|v| v * v).sum::<f32>()
+        };
+
+        ln.zero_grad();
+        let (y, cache) = ln.forward(&x);
+        let dx = ln.backward(&cache, &y);
+
+        let eps = 1e-2f32;
+        let tol = 2e-2f32;
+        // dx check.
+        let mut x2 = x.clone();
+        for &pos in &[0usize, 11, 23] {
+            let o = x2.data[pos];
+            x2.data[pos] = o + eps;
+            let lp = loss(&ln, &x2);
+            x2.data[pos] = o - eps;
+            let lm = loss(&ln, &x2);
+            x2.data[pos] = o;
+            let fd = (lp - lm) / (2.0 * eps);
+            assert!(
+                (fd - dx.data[pos]).abs() < tol * (1.0 + fd.abs()),
+                "dx[{pos}] fd={fd} an={}",
+                dx.data[pos]
+            );
+        }
+        // dgamma / dbeta checks.
+        for &pos in &[0usize, 7] {
+            let o = ln.gamma.data[pos];
+            ln.gamma.data[pos] = o + eps;
+            let lp = loss(&ln, &x);
+            ln.gamma.data[pos] = o - eps;
+            let lm = loss(&ln, &x);
+            ln.gamma.data[pos] = o;
+            let fd = (lp - lm) / (2.0 * eps);
+            assert!(
+                (fd - ln.ggamma.data[pos]).abs() < tol * (1.0 + fd.abs()),
+                "dgamma[{pos}] fd={fd} an={}",
+                ln.ggamma.data[pos]
+            );
+
+            let o = ln.beta.data[pos];
+            ln.beta.data[pos] = o + eps;
+            let lp = loss(&ln, &x);
+            ln.beta.data[pos] = o - eps;
+            let lm = loss(&ln, &x);
+            ln.beta.data[pos] = o;
+            let fd = (lp - lm) / (2.0 * eps);
+            assert!(
+                (fd - ln.gbeta.data[pos]).abs() < tol * (1.0 + fd.abs()),
+                "dbeta[{pos}] fd={fd} an={}",
+                ln.gbeta.data[pos]
+            );
+        }
+    }
+}

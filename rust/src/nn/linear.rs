@@ -1,0 +1,522 @@
+//! DSEE-aware linear layer.
+//!
+//! Computes `y = x·(W⊙S₁) + b + ((x·U)·V)·scale + x·S₂`, the paper's
+//! Figure-1 parametrization, with independent trainability of each part:
+//!
+//! * `W, b` — the (pre-trained) base weight; frozen during DSEE/LoRA
+//!   fine-tuning, trainable for the Fine-tune/OMP baselines;
+//! * `S₁`   — optional binary mask on `W` (unstructured pruning, §3.3);
+//! * `U, V` — low-rank factors (LoRA-style; init U=0, V~N(0,0.02));
+//! * `S₂`   — sparse residual in COO form over the fixed support Ω
+//!   found by GreBsmo decomposition of `W` (Alg. 1).
+//!
+//! All gradients are computed manually; `grad_check` tests in this module
+//! verify every path against central finite differences.
+
+use crate::tensor::linalg::{matmul, matmul_at, matmul_bt};
+use crate::tensor::Tensor;
+use crate::util::Rng;
+
+/// Sparse residual S₂: fixed support Ω (COO indices into the [in,out]
+/// weight), trainable values.
+#[derive(Clone, Debug)]
+pub struct SparseResidual {
+    /// (row in `in_dim`, col in `out_dim`) pairs — the support Ω.
+    pub idx: Vec<(usize, usize)>,
+    /// Trainable values, one per support entry (shape [N]).
+    pub values: Tensor,
+    /// Gradient buffer aligned with `values`.
+    pub grad: Tensor,
+}
+
+impl SparseResidual {
+    pub fn new(idx: Vec<(usize, usize)>) -> Self {
+        let n = idx.len();
+        SparseResidual {
+            idx,
+            values: Tensor::zeros(&[n]),
+            grad: Tensor::zeros(&[n]),
+        }
+    }
+
+    pub fn nnz(&self) -> usize {
+        self.idx.len()
+    }
+
+    /// y += x · S₂  (x: [B,in], y: [B,out]).
+    pub fn apply(&self, x: &Tensor, y: &mut Tensor) {
+        let (bsz, out) = (x.rows(), y.cols());
+        for (e, &(i, j)) in self.idx.iter().enumerate() {
+            let v = self.values.data[e];
+            if v == 0.0 {
+                continue;
+            }
+            for b in 0..bsz {
+                y.data[b * out + j] += x.at2(b, i) * v;
+            }
+        }
+    }
+
+    /// Backward: accumulate dS₂ values and add S₂'s contribution to dx.
+    pub fn backward(&mut self, x: &Tensor, dy: &Tensor, dx: &mut Tensor) {
+        let bsz = x.rows();
+        let (in_dim, out) = (x.cols(), dy.cols());
+        let _ = in_dim;
+        for (e, &(i, j)) in self.idx.iter().enumerate() {
+            let v = self.values.data[e];
+            let mut g = 0.0;
+            for b in 0..bsz {
+                let d = dy.data[b * out + j];
+                g += x.at2(b, i) * d;
+                dx.data[b * x.cols() + i] += v * d;
+            }
+            self.grad.data[e] += g;
+        }
+    }
+
+    /// Densify into an [in,out] matrix (used by pruning which ranks
+    /// `W + UV + S₂`, and by parity tests).
+    pub fn to_dense(&self, in_dim: usize, out_dim: usize) -> Tensor {
+        let mut t = Tensor::zeros(&[in_dim, out_dim]);
+        for (e, &(i, j)) in self.idx.iter().enumerate() {
+            t.data[i * out_dim + j] = self.values.data[e];
+        }
+        t
+    }
+}
+
+/// Low-rank adapter ΔW ≈ U·V.
+#[derive(Clone, Debug)]
+pub struct LowRank {
+    pub u: Tensor, // [in, r]
+    pub v: Tensor, // [r, out]
+    pub gu: Tensor,
+    pub gv: Tensor,
+    pub scale: f32,
+}
+
+impl LowRank {
+    /// Paper init: U = 0, V ~ N(0, 0.02) — so ΔW starts at exactly 0.
+    pub fn new(in_dim: usize, out_dim: usize, rank: usize, rng: &mut Rng) -> Self {
+        LowRank {
+            u: Tensor::zeros(&[in_dim, rank]),
+            v: Tensor::randn(&[rank, out_dim], 0.02, rng),
+            gu: Tensor::zeros(&[in_dim, rank]),
+            gv: Tensor::zeros(&[rank, out_dim]),
+            scale: 1.0,
+        }
+    }
+
+    pub fn rank(&self) -> usize {
+        self.u.cols()
+    }
+
+    /// Dense ΔW = U·V·scale.
+    pub fn to_dense(&self) -> Tensor {
+        matmul(&self.u, &self.v).scale(self.scale)
+    }
+}
+
+/// The DSEE-aware linear layer. See module docs for the math.
+#[derive(Clone, Debug)]
+pub struct Linear {
+    pub w: Tensor, // [in, out]
+    pub b: Tensor, // [out]
+    pub gw: Tensor,
+    pub gb: Tensor,
+    /// S₁ unstructured mask over `w` (1 = keep). `None` = dense.
+    pub mask: Option<Tensor>,
+    /// LoRA-style low-rank update.
+    pub adapter: Option<LowRank>,
+    /// Sparse residual on the fixed support Ω.
+    pub residual: Option<SparseResidual>,
+    /// Whether `w`/`b` receive gradients (false once "pre-trained" weights
+    /// are frozen for parameter-efficient fine-tuning).
+    pub train_base: bool,
+}
+
+impl Linear {
+    pub fn new(in_dim: usize, out_dim: usize, rng: &mut Rng) -> Self {
+        // He-ish init typical for transformer projections.
+        let std = (2.0 / (in_dim + out_dim) as f32).sqrt();
+        Linear {
+            w: Tensor::randn(&[in_dim, out_dim], std, rng),
+            b: Tensor::zeros(&[out_dim]),
+            gw: Tensor::zeros(&[in_dim, out_dim]),
+            gb: Tensor::zeros(&[out_dim]),
+            mask: None,
+            adapter: None,
+            residual: None,
+            train_base: true,
+        }
+    }
+
+    pub fn in_dim(&self) -> usize {
+        self.w.rows()
+    }
+
+    pub fn out_dim(&self) -> usize {
+        self.w.cols()
+    }
+
+    /// Effective base weight (W⊙S₁ if masked).
+    pub fn effective_w(&self) -> Tensor {
+        match &self.mask {
+            Some(m) => self.w.mul(m),
+            None => self.w.clone(),
+        }
+    }
+
+    /// Effective *total* weight W⊙S₁ + UV + S₂ (for parity tests, pruning
+    /// criteria, and the Figure-4 ΔW histogram).
+    pub fn effective_total(&self) -> Tensor {
+        let mut t = self.effective_w();
+        if let Some(a) = &self.adapter {
+            t = t.add(&a.to_dense());
+        }
+        if let Some(r) = &self.residual {
+            t = t.add(&r.to_dense(self.in_dim(), self.out_dim()));
+        }
+        t
+    }
+
+    /// Forward: y = x·Weff + b (+ adapter + residual). x: [B, in].
+    pub fn forward(&self, x: &Tensor) -> Tensor {
+        let mut y = match &self.mask {
+            Some(_) => matmul(x, &self.effective_w()),
+            None => matmul(x, &self.w),
+        };
+        y = y.add_bias(&self.b.data);
+        if let Some(a) = &self.adapter {
+            let xu = matmul(x, &a.u); // [B, r]
+            let lowrank = matmul(&xu, &a.v); // [B, out]
+            y.axpy(a.scale, &lowrank);
+        }
+        if let Some(r) = &self.residual {
+            r.apply(x, &mut y);
+        }
+        y
+    }
+
+    /// Backward: given input x and upstream dy, accumulate parameter
+    /// gradients and return dx.
+    pub fn backward(&mut self, x: &Tensor, dy: &Tensor) -> Tensor {
+        // dx through the base weight.
+        let weff = self.effective_w();
+        let mut dx = matmul_bt(dy, &weff); // dy [B,out] · W^T [out,in]
+
+        if self.train_base {
+            let mut gw = matmul_at(x, dy); // x^T dy : [in, out]
+            if let Some(m) = &self.mask {
+                gw = gw.mul(m); // masked entries stay exactly zero
+            }
+            self.gw.axpy(1.0, &gw);
+            let gb = dy.sum_rows();
+            for (g, v) in self.gb.data.iter_mut().zip(gb) {
+                *g += v;
+            }
+        }
+
+        if let Some(a) = &mut self.adapter {
+            // Recompute xu (r is tiny; cheaper than caching).
+            let xu = matmul(x, &a.u); // [B, r]
+            let dy_scaled = dy.scale(a.scale);
+            // gV += (xU)^T dy
+            a.gv.axpy(1.0, &matmul_at(&xu, &dy_scaled));
+            // gU += x^T (dy V^T)
+            let dyvt = matmul_bt(&dy_scaled, &a.v); // [B, r]
+            a.gu.axpy(1.0, &matmul_at(x, &dyvt));
+            // dx += (dy V^T) U^T
+            dx.axpy(1.0, &matmul_bt(&dyvt, &a.u));
+        }
+
+        if let Some(r) = &mut self.residual {
+            r.backward(x, dy, &mut dx);
+        }
+        dx
+    }
+
+    /// Attach a fresh LoRA adapter and freeze the base.
+    pub fn add_adapter(&mut self, rank: usize, rng: &mut Rng) {
+        let (i, o) = (self.in_dim(), self.out_dim());
+        self.adapter = Some(LowRank::new(i, o, rank, rng));
+        self.train_base = false;
+    }
+
+    /// Attach a sparse residual on support `omega` and freeze the base.
+    pub fn add_residual(&mut self, omega: Vec<(usize, usize)>) {
+        self.residual = Some(SparseResidual::new(omega));
+        self.train_base = false;
+    }
+
+    /// Number of *trainable* parameters in this layer.
+    pub fn trainable_params(&self) -> usize {
+        let mut n = 0;
+        if self.train_base {
+            n += self.w.numel() + self.b.numel();
+        }
+        if let Some(a) = &self.adapter {
+            n += a.u.numel() + a.v.numel();
+        }
+        if let Some(r) = &self.residual {
+            n += r.nnz();
+        }
+        n
+    }
+
+    /// Fraction of base weights zeroed by S₁ (0.0 when dense).
+    pub fn sparsity(&self) -> f64 {
+        match &self.mask {
+            None => 0.0,
+            Some(m) => {
+                let zeros = m.data.iter().filter(|&&x| x == 0.0).count();
+                zeros as f64 / m.numel() as f64
+            }
+        }
+    }
+
+    /// Zero all gradient buffers.
+    pub fn zero_grad(&mut self) {
+        self.gw.data.fill(0.0);
+        self.gb.data.fill(0.0);
+        if let Some(a) = &mut self.adapter {
+            a.gu.data.fill(0.0);
+            a.gv.data.fill(0.0);
+        }
+        if let Some(r) = &mut self.residual {
+            r.grad.data.fill(0.0);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Central finite-difference check of every gradient path.
+    fn fd_check(lin: &mut Linear, x: &Tensor) {
+        let loss = |l: &Linear, x: &Tensor| -> f32 {
+            // Simple scalar loss: sum of squares of output.
+            let y = l.forward(x);
+            0.5 * y.data.iter().map(|v| v * v).sum::<f32>()
+        };
+        // Analytic gradients.
+        lin.zero_grad();
+        let y = lin.forward(x);
+        let dy = y.clone(); // dL/dy = y for 0.5*||y||^2
+        let dx = lin.backward(x, &dy);
+
+        let eps = 1e-3f32;
+        let tol = 2e-2f32;
+        // Check dW (if trainable).
+        if lin.train_base {
+            for &pos in &[0usize, lin.w.numel() / 2, lin.w.numel() - 1] {
+                if lin.mask.as_ref().is_some_and(|m| m.data[pos] == 0.0) {
+                    assert_eq!(lin.gw.data[pos], 0.0, "masked grad must be 0");
+                    continue;
+                }
+                let orig = lin.w.data[pos];
+                lin.w.data[pos] = orig + eps;
+                let lp = loss(lin, x);
+                lin.w.data[pos] = orig - eps;
+                let lm = loss(lin, x);
+                lin.w.data[pos] = orig;
+                let fd = (lp - lm) / (2.0 * eps);
+                let an = lin.gw.data[pos];
+                assert!(
+                    (fd - an).abs() < tol * (1.0 + fd.abs()),
+                    "dW[{pos}]: fd={fd} an={an}"
+                );
+            }
+        }
+        // Check dU, dV.
+        if lin.adapter.is_some() {
+            for which in ["u", "v"] {
+                let n = {
+                    let a = lin.adapter.as_ref().unwrap();
+                    if which == "u" { a.u.numel() } else { a.v.numel() }
+                };
+                for &pos in &[0usize, n / 2, n - 1] {
+                    let orig = {
+                        let a = lin.adapter.as_mut().unwrap();
+                        let t = if which == "u" { &mut a.u } else { &mut a.v };
+                        let o = t.data[pos];
+                        t.data[pos] = o + eps;
+                        o
+                    };
+                    let lp = loss(lin, x);
+                    {
+                        let a = lin.adapter.as_mut().unwrap();
+                        let t = if which == "u" { &mut a.u } else { &mut a.v };
+                        t.data[pos] = orig - eps;
+                    }
+                    let lm = loss(lin, x);
+                    {
+                        let a = lin.adapter.as_mut().unwrap();
+                        let t = if which == "u" { &mut a.u } else { &mut a.v };
+                        t.data[pos] = orig;
+                    }
+                    let fd = (lp - lm) / (2.0 * eps);
+                    let a = lin.adapter.as_ref().unwrap();
+                    let an = if which == "u" { a.gu.data[pos] } else { a.gv.data[pos] };
+                    assert!(
+                        (fd - an).abs() < tol * (1.0 + fd.abs()),
+                        "d{which}[{pos}]: fd={fd} an={an}"
+                    );
+                }
+            }
+        }
+        // Check dS2 values.
+        if lin.residual.is_some() {
+            let n = lin.residual.as_ref().unwrap().nnz();
+            for &pos in &[0usize, n - 1] {
+                let orig = {
+                    let r = lin.residual.as_mut().unwrap();
+                    let o = r.values.data[pos];
+                    r.values.data[pos] = o + eps;
+                    o
+                };
+                let lp = loss(lin, x);
+                lin.residual.as_mut().unwrap().values.data[pos] = orig - eps;
+                let lm = loss(lin, x);
+                lin.residual.as_mut().unwrap().values.data[pos] = orig;
+                let fd = (lp - lm) / (2.0 * eps);
+                let an = lin.residual.as_ref().unwrap().grad.data[pos];
+                assert!(
+                    (fd - an).abs() < tol * (1.0 + fd.abs()),
+                    "dS2[{pos}]: fd={fd} an={an}"
+                );
+            }
+        }
+        // Check dx.
+        let mut x2 = x.clone();
+        for &pos in &[0usize, x.numel() / 2, x.numel() - 1] {
+            let orig = x2.data[pos];
+            x2.data[pos] = orig + eps;
+            let lp = loss(lin, &x2);
+            x2.data[pos] = orig - eps;
+            let lm = loss(lin, &x2);
+            x2.data[pos] = orig;
+            let fd = (lp - lm) / (2.0 * eps);
+            let an = dx.data[pos];
+            assert!(
+                (fd - an).abs() < tol * (1.0 + fd.abs()),
+                "dx[{pos}]: fd={fd} an={an}"
+            );
+        }
+    }
+
+    #[test]
+    fn grad_check_plain() {
+        let mut rng = Rng::new(10);
+        let mut lin = Linear::new(6, 5, &mut rng);
+        let x = Tensor::randn(&[4, 6], 0.5, &mut rng);
+        fd_check(&mut lin, &x);
+    }
+
+    #[test]
+    fn grad_check_full_dsee() {
+        let mut rng = Rng::new(11);
+        let mut lin = Linear::new(8, 7, &mut rng);
+        // Mask half the weights.
+        let mut mask = Tensor::full(&[8, 7], 1.0);
+        for i in 0..mask.numel() {
+            if i % 2 == 0 {
+                mask.data[i] = 0.0;
+            }
+        }
+        lin.mask = Some(mask);
+        lin.add_adapter(3, &mut rng);
+        lin.add_residual(vec![(0, 0), (3, 4), (7, 6), (2, 2)]);
+        // Make the adapter + residual non-trivial so grads flow.
+        if let Some(a) = &mut lin.adapter {
+            a.u = Tensor::randn(&[8, 3], 0.3, &mut rng);
+        }
+        if let Some(r) = &mut lin.residual {
+            r.values = Tensor::randn(&[4], 0.3, &mut rng);
+        }
+        let x = Tensor::randn(&[3, 8], 0.5, &mut rng);
+        fd_check(&mut lin, &x);
+    }
+
+    #[test]
+    fn grad_check_frozen_base_with_adapter() {
+        let mut rng = Rng::new(12);
+        let mut lin = Linear::new(5, 9, &mut rng);
+        lin.add_adapter(2, &mut rng);
+        if let Some(a) = &mut lin.adapter {
+            a.u = Tensor::randn(&[5, 2], 0.3, &mut rng);
+        }
+        assert!(!lin.train_base);
+        let x = Tensor::randn(&[4, 5], 0.5, &mut rng);
+        fd_check(&mut lin, &x);
+        // Frozen base: no gradient accumulated.
+        assert!(lin.gw.data.iter().all(|&g| g == 0.0));
+    }
+
+    #[test]
+    fn adapter_starts_as_identity_update() {
+        // U=0 at init ⇒ forward must equal the base-only forward.
+        let mut rng = Rng::new(13);
+        let base = Linear::new(6, 6, &mut rng);
+        let mut with = base.clone();
+        with.add_adapter(4, &mut rng);
+        let x = Tensor::randn(&[3, 6], 1.0, &mut rng);
+        let y0 = base.forward(&x);
+        let y1 = with.forward(&x);
+        for (a, b) in y0.data.iter().zip(&y1.data) {
+            assert!((a - b).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn mask_zeroes_contributions() {
+        let mut rng = Rng::new(14);
+        let mut lin = Linear::new(4, 4, &mut rng);
+        lin.mask = Some(Tensor::zeros(&[4, 4])); // everything pruned
+        lin.b = Tensor::zeros(&[4]);
+        let x = Tensor::randn(&[2, 4], 1.0, &mut rng);
+        let y = lin.forward(&x);
+        assert!(y.data.iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn trainable_param_counts() {
+        let mut rng = Rng::new(15);
+        let mut lin = Linear::new(10, 20, &mut rng);
+        assert_eq!(lin.trainable_params(), 10 * 20 + 20);
+        lin.add_adapter(4, &mut rng);
+        assert_eq!(lin.trainable_params(), 10 * 4 + 4 * 20);
+        lin.add_residual(vec![(0, 0); 7]);
+        assert_eq!(lin.trainable_params(), 10 * 4 + 4 * 20 + 7);
+    }
+
+    #[test]
+    fn sparsity_reporting() {
+        let mut rng = Rng::new(16);
+        let mut lin = Linear::new(4, 5, &mut rng);
+        assert_eq!(lin.sparsity(), 0.0);
+        let mut m = Tensor::full(&[4, 5], 1.0);
+        for i in 0..10 {
+            m.data[i] = 0.0;
+        }
+        lin.mask = Some(m);
+        assert!((lin.sparsity() - 0.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn effective_total_composes() {
+        let mut rng = Rng::new(17);
+        let mut lin = Linear::new(3, 3, &mut rng);
+        lin.add_adapter(1, &mut rng);
+        if let Some(a) = &mut lin.adapter {
+            a.u = Tensor::full(&[3, 1], 1.0);
+            a.v = Tensor::full(&[1, 3], 2.0);
+        }
+        lin.add_residual(vec![(1, 1)]);
+        lin.residual.as_mut().unwrap().values.data[0] = 5.0;
+        let total = lin.effective_total();
+        assert!((total.at2(0, 0) - (lin.w.at2(0, 0) + 2.0)).abs() < 1e-6);
+        assert!((total.at2(1, 1) - (lin.w.at2(1, 1) + 2.0 + 5.0)).abs() < 1e-6);
+    }
+}

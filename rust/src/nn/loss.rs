@@ -1,0 +1,122 @@
+//! Loss functions returning (scalar loss, dlogits) pairs.
+
+use crate::tensor::Tensor;
+
+/// Mean softmax cross-entropy over rows. `targets[i]` is the class index
+/// for row i. Returns (loss, dlogits).
+pub fn cross_entropy(logits: &Tensor, targets: &[usize]) -> (f32, Tensor) {
+    let (n, c) = (logits.rows(), logits.cols());
+    assert_eq!(n, targets.len(), "cross_entropy target count");
+    let probs = logits.softmax_rows();
+    let mut loss = 0.0f32;
+    let mut dl = probs.clone();
+    for (i, &t) in targets.iter().enumerate() {
+        assert!(t < c, "target {t} out of range {c}");
+        let p = probs.at2(i, t).max(1e-12);
+        loss -= p.ln();
+        dl.data[i * c + t] -= 1.0;
+    }
+    let scale = 1.0 / n as f32;
+    (loss * scale, dl.scale(scale))
+}
+
+/// Mean squared error for regression heads: predictions [N,1] vs targets.
+pub fn mse(pred: &Tensor, targets: &[f32]) -> (f32, Tensor) {
+    let n = pred.rows();
+    assert_eq!(n, targets.len(), "mse target count");
+    let mut loss = 0.0f32;
+    let mut dp = Tensor::zeros(&pred.shape);
+    for i in 0..n {
+        let diff = pred.data[i] - targets[i];
+        loss += diff * diff;
+        dp.data[i] = 2.0 * diff / n as f32;
+    }
+    (loss / n as f32, dp)
+}
+
+/// Token-level LM cross-entropy, ignoring positions where target == ignore.
+pub fn lm_cross_entropy(logits: &Tensor, targets: &[u32], ignore: u32) -> (f32, Tensor) {
+    let (n, v) = (logits.rows(), logits.cols());
+    assert_eq!(n, targets.len());
+    let probs = logits.softmax_rows();
+    let mut dl = probs.clone();
+    let mut loss = 0.0f32;
+    let mut count = 0usize;
+    for (i, &t) in targets.iter().enumerate() {
+        if t == ignore {
+            for j in 0..v {
+                dl.data[i * v + j] = 0.0;
+            }
+            continue;
+        }
+        let t = t as usize;
+        let p = probs.at2(i, t).max(1e-12);
+        loss -= p.ln();
+        dl.data[i * v + t] -= 1.0;
+        count += 1;
+    }
+    let scale = if count > 0 { 1.0 / count as f32 } else { 0.0 };
+    // Zero the gradient rows of ignored targets were already zeroed above;
+    // scale the rest.
+    (loss * scale, dl.scale(scale))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn ce_perfect_prediction_near_zero() {
+        let logits = Tensor::from_vec(&[2, 3], vec![20.0, 0.0, 0.0, 0.0, 20.0, 0.0]);
+        let (loss, _) = cross_entropy(&logits, &[0, 1]);
+        assert!(loss < 1e-6, "loss={loss}");
+    }
+
+    #[test]
+    fn ce_uniform_is_log_c() {
+        let logits = Tensor::zeros(&[1, 4]);
+        let (loss, _) = cross_entropy(&logits, &[2]);
+        assert!((loss - (4.0f32).ln()).abs() < 1e-5);
+    }
+
+    #[test]
+    fn ce_grad_finite_difference() {
+        let mut rng = Rng::new(60);
+        let mut logits = Tensor::randn(&[3, 5], 1.0, &mut rng);
+        let targets = [1usize, 4, 0];
+        let (_, dl) = cross_entropy(&logits, &targets);
+        let eps = 1e-2f32;
+        for &pos in &[0usize, 7, 14] {
+            let o = logits.data[pos];
+            logits.data[pos] = o + eps;
+            let (lp, _) = cross_entropy(&logits, &targets);
+            logits.data[pos] = o - eps;
+            let (lm, _) = cross_entropy(&logits, &targets);
+            logits.data[pos] = o;
+            let fd = (lp - lm) / (2.0 * eps);
+            assert!((fd - dl.data[pos]).abs() < 1e-3, "fd={fd} an={}", dl.data[pos]);
+        }
+    }
+
+    #[test]
+    fn mse_basics() {
+        let pred = Tensor::from_vec(&[2, 1], vec![1.0, 3.0]);
+        let (loss, dp) = mse(&pred, &[0.0, 3.0]);
+        assert!((loss - 0.5).abs() < 1e-6);
+        assert!((dp.data[0] - 1.0).abs() < 1e-6);
+        assert_eq!(dp.data[1], 0.0);
+    }
+
+    #[test]
+    fn lm_ce_ignores_padding() {
+        let logits = Tensor::zeros(&[3, 4]);
+        let ignore = u32::MAX;
+        let (loss, dl) = lm_cross_entropy(&logits, &[1, ignore, 2], ignore);
+        assert!((loss - (4.0f32).ln()).abs() < 1e-5);
+        // Ignored row has zero grad.
+        for j in 0..4 {
+            assert_eq!(dl.at2(1, j), 0.0);
+        }
+    }
+}

@@ -1,0 +1,764 @@
+//! The native Layer-3 transformer: embeddings → pre-LN blocks (attention
+//! with head gates + FFN, optional Houlsby adapters) → final LN → task
+//! head. Full manual backprop; every module is finite-difference tested.
+//!
+//! The same model class plays BERT-style encoder (bidirectional,
+//! classification/regression head) and GPT-style decoder (causal, LM
+//! head) depending on [`crate::config::ModelCfg::causal`].
+
+pub mod adapter;
+pub mod attention;
+pub mod embedding;
+pub mod ffn;
+pub mod layernorm;
+pub mod linear;
+pub mod loss;
+pub mod serialize;
+
+use crate::config::ModelCfg;
+use crate::tensor::Tensor;
+use crate::util::Rng;
+use adapter::{Adapter, AdapterCache};
+use attention::{AttnCache, Attention};
+use embedding::Embedding;
+use ffn::{Ffn, FfnCache};
+use layernorm::{LayerNorm, LnCache};
+use linear::Linear;
+
+/// Metadata passed to parameter visitors.
+pub struct ParamInfo<'a> {
+    pub name: String,
+    pub param: &'a mut Tensor,
+    pub grad: &'a mut Tensor,
+    /// Apply weight decay?
+    pub decay: bool,
+    /// Receives updates this phase?
+    pub trainable: bool,
+}
+
+type Visitor<'v> = dyn FnMut(ParamInfo<'_>) + 'v;
+
+impl Linear {
+    fn visit(&mut self, name: &str, f: &mut Visitor) {
+        f(ParamInfo {
+            name: format!("{name}.w"),
+            param: &mut self.w,
+            grad: &mut self.gw,
+            decay: true,
+            trainable: self.train_base,
+        });
+        f(ParamInfo {
+            name: format!("{name}.b"),
+            param: &mut self.b,
+            grad: &mut self.gb,
+            decay: false,
+            trainable: self.train_base,
+        });
+        if let Some(a) = &mut self.adapter {
+            f(ParamInfo {
+                name: format!("{name}.lora_u"),
+                param: &mut a.u,
+                grad: &mut a.gu,
+                decay: false,
+                trainable: true,
+            });
+            f(ParamInfo {
+                name: format!("{name}.lora_v"),
+                param: &mut a.v,
+                grad: &mut a.gv,
+                decay: false,
+                trainable: true,
+            });
+        }
+        if let Some(r) = &mut self.residual {
+            f(ParamInfo {
+                name: format!("{name}.s2"),
+                param: &mut r.values,
+                grad: &mut r.grad,
+                decay: false,
+                trainable: true,
+            });
+        }
+    }
+}
+
+impl LayerNorm {
+    fn visit(&mut self, name: &str, f: &mut Visitor) {
+        f(ParamInfo {
+            name: format!("{name}.gamma"),
+            param: &mut self.gamma,
+            grad: &mut self.ggamma,
+            decay: false,
+            trainable: self.trainable,
+        });
+        f(ParamInfo {
+            name: format!("{name}.beta"),
+            param: &mut self.beta,
+            grad: &mut self.gbeta,
+            decay: false,
+            trainable: self.trainable,
+        });
+    }
+}
+
+/// One pre-LN transformer block, optionally with Houlsby adapters.
+#[derive(Clone, Debug)]
+pub struct Block {
+    pub ln1: LayerNorm,
+    pub attn: Attention,
+    pub ln2: LayerNorm,
+    pub ffn: Ffn,
+    pub adapter1: Option<Adapter>,
+    pub adapter2: Option<Adapter>,
+}
+
+pub struct BlockCache {
+    x: Tensor, // block input
+    ln1: LnCache,
+    a_in: Tensor,
+    attn: AttnCache,
+    ad1_in: Option<Tensor>,
+    ad1: Option<AdapterCache>,
+    x2: Tensor, // after attention residual
+    ln2: LnCache,
+    f_in: Tensor,
+    ffn: FfnCache,
+    ad2_in: Option<Tensor>,
+    ad2: Option<AdapterCache>,
+}
+
+impl Block {
+    pub fn new(cfg: &ModelCfg, rng: &mut Rng) -> Self {
+        Block {
+            ln1: LayerNorm::new(cfg.d_model),
+            attn: Attention::new(cfg.d_model, cfg.n_heads, cfg.causal, rng),
+            ln2: LayerNorm::new(cfg.d_model),
+            ffn: Ffn::new(cfg.d_model, cfg.d_ffn, rng),
+            adapter1: None,
+            adapter2: None,
+        }
+    }
+
+    pub fn forward(&self, x: &Tensor, batch: usize, seq: usize) -> (Tensor, BlockCache) {
+        let (a_in, ln1c) = self.ln1.forward(x);
+        let (mut a_out, attnc) = self.attn.forward(&a_in, batch, seq);
+        let (ad1_in, ad1c) = match &self.adapter1 {
+            Some(ad) => {
+                let inp = a_out.clone();
+                let (o, c) = ad.forward(&a_out);
+                a_out = o;
+                (Some(inp), Some(c))
+            }
+            None => (None, None),
+        };
+        let x2 = x.add(&a_out);
+        let (f_in, ln2c) = self.ln2.forward(&x2);
+        let (mut f_out, ffnc) = self.ffn.forward(&f_in);
+        let (ad2_in, ad2c) = match &self.adapter2 {
+            Some(ad) => {
+                let inp = f_out.clone();
+                let (o, c) = ad.forward(&f_out);
+                f_out = o;
+                (Some(inp), Some(c))
+            }
+            None => (None, None),
+        };
+        let y = x2.add(&f_out);
+        (
+            y,
+            BlockCache {
+                x: x.clone(),
+                ln1: ln1c,
+                a_in,
+                attn: attnc,
+                ad1_in,
+                ad1: ad1c,
+                x2,
+                ln2: ln2c,
+                f_in,
+                ffn: ffnc,
+                ad2_in,
+                ad2: ad2c,
+            },
+        )
+    }
+
+    pub fn backward(&mut self, cache: &BlockCache, dy: &Tensor) -> Tensor {
+        // y = x2 + f_out(ad2(ffn(ln2(x2))))
+        let mut df_out = dy.clone();
+        if let (Some(ad), Some(adc), Some(ad_in)) =
+            (&mut self.adapter2, &cache.ad2, &cache.ad2_in)
+        {
+            df_out = ad.backward(ad_in, adc, &df_out);
+        }
+        let df_in = self.ffn.backward(&cache.f_in, &cache.ffn, &df_out);
+        let mut dx2 = self.ln2.backward(&cache.ln2, &df_in);
+        dx2.axpy(1.0, dy); // residual
+
+        // x2 = x + a_out(ad1(attn(ln1(x))))
+        let mut da_out = dx2.clone();
+        if let (Some(ad), Some(adc), Some(ad_in)) =
+            (&mut self.adapter1, &cache.ad1, &cache.ad1_in)
+        {
+            da_out = ad.backward(ad_in, adc, &da_out);
+        }
+        let da_in = self.attn.backward(&cache.a_in, &cache.attn, &da_out);
+        let mut dx = self.ln1.backward(&cache.ln1, &da_in);
+        dx.axpy(1.0, &dx2); // residual
+        dx
+    }
+
+    pub fn zero_grad(&mut self) {
+        self.ln1.zero_grad();
+        self.attn.zero_grad();
+        self.ln2.zero_grad();
+        self.ffn.zero_grad();
+        if let Some(a) = &mut self.adapter1 {
+            a.zero_grad();
+        }
+        if let Some(a) = &mut self.adapter2 {
+            a.zero_grad();
+        }
+    }
+
+    fn visit(&mut self, name: &str, f: &mut Visitor) {
+        self.ln1.visit(&format!("{name}.ln1"), f);
+        self.attn.wq.visit(&format!("{name}.attn.wq"), f);
+        self.attn.wk.visit(&format!("{name}.attn.wk"), f);
+        self.attn.wv.visit(&format!("{name}.attn.wv"), f);
+        self.attn.wo.visit(&format!("{name}.attn.wo"), f);
+        f(ParamInfo {
+            name: format!("{name}.attn.gates"),
+            param: &mut self.attn.gates,
+            grad: &mut self.attn.ggates,
+            decay: false,
+            trainable: self.attn.gates_trainable,
+        });
+        self.ln2.visit(&format!("{name}.ln2"), f);
+        self.ffn.fc1.visit(&format!("{name}.ffn.fc1"), f);
+        self.ffn.fc2.visit(&format!("{name}.ffn.fc2"), f);
+        for (tag, ad) in [("ad1", &mut self.adapter1), ("ad2", &mut self.adapter2)] {
+            if let Some(ad) = ad {
+                ad.down.visit(&format!("{name}.{tag}.down"), f);
+                ad.up.visit(&format!("{name}.{tag}.up"), f);
+            }
+        }
+    }
+}
+
+/// Task head.
+#[derive(Clone, Debug)]
+pub enum Head {
+    /// Mean-pool over sequence → linear → class logits.
+    Classifier(Linear),
+    /// Mean-pool → linear → scalar.
+    Regressor(Linear),
+    /// Per-token linear → vocab logits.
+    Lm(Linear),
+}
+
+impl Head {
+    fn proj_mut(&mut self) -> &mut Linear {
+        match self {
+            Head::Classifier(l) | Head::Regressor(l) | Head::Lm(l) => l,
+        }
+    }
+
+    fn proj(&self) -> &Linear {
+        match self {
+            Head::Classifier(l) | Head::Regressor(l) | Head::Lm(l) => l,
+        }
+    }
+}
+
+/// Trainable prefix vectors (Prefix baseline): `n_prefix` learned rows
+/// prepended to the embedded sequence.
+#[derive(Clone, Debug)]
+pub struct Prefix {
+    pub vecs: Tensor, // [P, d]
+    pub grad: Tensor,
+}
+
+pub struct ModelCache {
+    ids: Vec<u32>,
+    seq: usize,     // token sequence length (without prefix)
+    eff_seq: usize, // seq + n_prefix
+    batch: usize,
+    blocks: Vec<BlockCache>,
+    ln_f: LnCache,
+    h_final: Tensor,
+    pooled: Option<Tensor>,
+}
+
+/// The full model.
+#[derive(Clone, Debug)]
+pub struct Transformer {
+    pub cfg: ModelCfg,
+    pub embed: Embedding,
+    pub prefix: Option<Prefix>,
+    pub blocks: Vec<Block>,
+    pub ln_f: LayerNorm,
+    pub head: Head,
+}
+
+impl Transformer {
+    pub fn new(cfg: &ModelCfg, rng: &mut Rng) -> Self {
+        let embed = Embedding::new(cfg.vocab, cfg.max_seq + cfg.n_prefix, cfg.d_model, rng);
+        let blocks = (0..cfg.n_layers).map(|_| Block::new(cfg, rng)).collect();
+        let head_proj = match cfg.head.as_str() {
+            "classifier" => Head::Classifier(Linear::new(cfg.d_model, cfg.n_classes, rng)),
+            "regressor" => Head::Regressor(Linear::new(cfg.d_model, 1, rng)),
+            "lm" => Head::Lm(Linear::new(cfg.d_model, cfg.vocab, rng)),
+            other => panic!("unknown head kind '{other}'"),
+        };
+        Transformer {
+            cfg: cfg.clone(),
+            embed,
+            prefix: None,
+            blocks: blocks,
+            ln_f: LayerNorm::new(cfg.d_model),
+            head: head_proj,
+        }
+    }
+
+    pub fn n_prefix(&self) -> usize {
+        self.prefix.as_ref().map_or(0, |p| p.vecs.rows())
+    }
+
+    /// ids: [B*S]. Returns logits:
+    /// * Classifier → [B, n_classes]
+    /// * Regressor  → [B, 1]
+    /// * Lm         → [B*(P+S), vocab]
+    pub fn forward(&self, ids: &[u32], batch: usize, seq: usize) -> (Tensor, ModelCache) {
+        assert_eq!(ids.len(), batch * seq, "ids vs batch*seq");
+        let d = self.cfg.d_model;
+        let x_tok = self.embed.forward(ids, seq);
+        // Prepend prefix rows per batch element.
+        let p = self.n_prefix();
+        let eff_seq = seq + p;
+        let mut x = if p > 0 {
+            let pref = &self.prefix.as_ref().unwrap().vecs;
+            let mut xx = Tensor::zeros(&[batch * eff_seq, d]);
+            for b in 0..batch {
+                for s in 0..p {
+                    let dst = (b * eff_seq + s) * d;
+                    xx.data[dst..dst + d].copy_from_slice(&pref.data[s * d..(s + 1) * d]);
+                }
+                for s in 0..seq {
+                    let src = (b * seq + s) * d;
+                    let dst = (b * eff_seq + p + s) * d;
+                    xx.data[dst..dst + d].copy_from_slice(&x_tok.data[src..src + d]);
+                }
+            }
+            xx
+        } else {
+            x_tok
+        };
+
+        let mut caches = Vec::with_capacity(self.blocks.len());
+        for blk in &self.blocks {
+            let (y, c) = blk.forward(&x, batch, eff_seq);
+            caches.push(c);
+            x = y;
+        }
+        let (h_final, lnc) = self.ln_f.forward(&x);
+
+        let (logits, pooled) = match &self.head {
+            Head::Classifier(lin) | Head::Regressor(lin) => {
+                // Mean-pool token positions (incl. prefix — uniform).
+                let mut pooled = Tensor::zeros(&[batch, d]);
+                for b in 0..batch {
+                    for s in 0..eff_seq {
+                        let src = (b * eff_seq + s) * d;
+                        for j in 0..d {
+                            pooled.data[b * d + j] += h_final.data[src + j];
+                        }
+                    }
+                }
+                let pooled = pooled.scale(1.0 / eff_seq as f32);
+                (lin.forward(&pooled), Some(pooled))
+            }
+            Head::Lm(lin) => (lin.forward(&h_final), None),
+        };
+
+        (
+            logits,
+            ModelCache {
+                ids: ids.to_vec(),
+                seq,
+                eff_seq,
+                batch,
+                blocks: caches,
+                ln_f: lnc,
+                h_final,
+                pooled,
+            },
+        )
+    }
+
+    /// Backward from dlogits; accumulates all parameter gradients.
+    pub fn backward(&mut self, cache: &ModelCache, dlogits: &Tensor) {
+        let d = self.cfg.d_model;
+        let (batch, eff_seq) = (cache.batch, cache.eff_seq);
+        let dh_final = match &mut self.head {
+            Head::Classifier(lin) | Head::Regressor(lin) => {
+                let pooled = cache.pooled.as_ref().expect("pooled cache");
+                let dpooled = lin.backward(pooled, dlogits); // [B, d]
+                // Un-pool: spread evenly.
+                let mut dh = Tensor::zeros(&[batch * eff_seq, d]);
+                let inv = 1.0 / eff_seq as f32;
+                for b in 0..batch {
+                    for s in 0..eff_seq {
+                        let dst = (b * eff_seq + s) * d;
+                        for j in 0..d {
+                            dh.data[dst + j] = dpooled.data[b * d + j] * inv;
+                        }
+                    }
+                }
+                dh
+            }
+            Head::Lm(lin) => lin.backward(&cache.h_final, dlogits),
+        };
+
+        // Wait: ln_f was applied to the *last block output*, and h_final is
+        // its output which fed the head. Backprop through ln_f:
+        let mut dx = self.ln_f.backward(&cache.ln_f, &dh_final);
+        for (blk, c) in self.blocks.iter_mut().zip(&cache.blocks).rev() {
+            dx = blk.backward(c, &dx);
+        }
+
+        // Split gradient between prefix and token embeddings.
+        let p = self.n_prefix();
+        if p > 0 {
+            let seq = cache.seq;
+            let pref = self.prefix.as_mut().unwrap();
+            let mut dtok = Tensor::zeros(&[batch * seq, d]);
+            for b in 0..batch {
+                for s in 0..p {
+                    let src = (b * eff_seq + s) * d;
+                    for j in 0..d {
+                        pref.grad.data[s * d + j] += dx.data[src + j];
+                    }
+                }
+                for s in 0..seq {
+                    let src = (b * eff_seq + p + s) * d;
+                    let dst = (b * seq + s) * d;
+                    dtok.data[dst..dst + d].copy_from_slice(&dx.data[src..src + d]);
+                }
+            }
+            self.embed.backward(&cache.ids, seq, &dtok);
+        } else {
+            self.embed.backward(&cache.ids, cache.seq, &dx);
+        }
+    }
+
+    pub fn zero_grad(&mut self) {
+        self.embed.zero_grad();
+        for b in &mut self.blocks {
+            b.zero_grad();
+        }
+        self.ln_f.zero_grad();
+        self.head.proj_mut().zero_grad();
+        if let Some(p) = &mut self.prefix {
+            p.grad.data.fill(0.0);
+        }
+    }
+
+    /// Walk every (param, grad) pair in a stable order.
+    pub fn visit_params(&mut self, f: &mut Visitor) {
+        f(ParamInfo {
+            name: "embed.tok".into(),
+            param: &mut self.embed.tok,
+            grad: &mut self.embed.gtok,
+            decay: false,
+            trainable: self.embed.trainable,
+        });
+        f(ParamInfo {
+            name: "embed.pos".into(),
+            param: &mut self.embed.pos,
+            grad: &mut self.embed.gpos,
+            decay: false,
+            trainable: self.embed.trainable,
+        });
+        if let Some(p) = &mut self.prefix {
+            f(ParamInfo {
+                name: "prefix".into(),
+                param: &mut p.vecs,
+                grad: &mut p.grad,
+                decay: false,
+                trainable: true,
+            });
+        }
+        for (i, blk) in self.blocks.iter_mut().enumerate() {
+            blk.visit(&format!("block{i}"), f);
+        }
+        self.ln_f.visit("ln_f", f);
+        self.head.proj_mut().visit("head", f);
+    }
+
+    /// Number of currently trainable parameters.
+    pub fn count_trainable(&mut self) -> usize {
+        let mut n = 0usize;
+        self.visit_params(&mut |p| {
+            if p.trainable {
+                n += p.param.numel();
+            }
+        });
+        n
+    }
+
+    /// Total parameter count (the "model size" denominator).
+    pub fn count_total(&mut self) -> usize {
+        let mut n = 0usize;
+        self.visit_params(&mut |p| {
+            n += p.param.numel();
+        });
+        n
+    }
+
+    /// Freeze everything except LoRA adapters / sparse residuals / head
+    /// gates / the task head — the parameter-efficient fine-tuning setup.
+    pub fn freeze_base(&mut self) {
+        self.embed.trainable = false;
+        self.ln_f.trainable = false;
+        for blk in &mut self.blocks {
+            blk.ln1.trainable = false;
+            blk.ln2.trainable = false;
+            for lin in [
+                &mut blk.attn.wq,
+                &mut blk.attn.wk,
+                &mut blk.attn.wv,
+                &mut blk.attn.wo,
+                &mut blk.ffn.fc1,
+                &mut blk.ffn.fc2,
+            ] {
+                lin.train_base = false;
+            }
+        }
+        self.head.proj_mut().train_base = true;
+    }
+
+    /// All attention projection linears (the paper attaches U,V,S₂ to the
+    /// self-attention projections), mutable.
+    pub fn attn_projections_mut(&mut self) -> Vec<&mut Linear> {
+        let mut v = Vec::new();
+        for blk in &mut self.blocks {
+            v.push(&mut blk.attn.wq);
+            v.push(&mut blk.attn.wk);
+            v.push(&mut blk.attn.wv);
+            v.push(&mut blk.attn.wo);
+        }
+        v
+    }
+
+    /// Every weight-bearing linear in encoder blocks (for OMP / magnitude
+    /// pruning which prunes globally).
+    pub fn all_linears_mut(&mut self) -> Vec<&mut Linear> {
+        let mut v = Vec::new();
+        for blk in &mut self.blocks {
+            v.push(&mut blk.attn.wq);
+            v.push(&mut blk.attn.wk);
+            v.push(&mut blk.attn.wv);
+            v.push(&mut blk.attn.wo);
+            v.push(&mut blk.ffn.fc1);
+            v.push(&mut blk.ffn.fc2);
+        }
+        v
+    }
+
+    pub fn head_proj(&self) -> &Linear {
+        self.head.proj()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ModelCfg;
+
+    fn tiny_cfg(head: &str, causal: bool) -> ModelCfg {
+        ModelCfg {
+            name: "tiny".into(),
+            vocab: 50,
+            max_seq: 8,
+            d_model: 16,
+            n_layers: 2,
+            n_heads: 2,
+            d_ffn: 32,
+            causal,
+            n_classes: 3,
+            head: head.into(),
+            n_prefix: 0,
+        }
+    }
+
+    #[test]
+    fn classifier_shapes() {
+        let mut rng = Rng::new(80);
+        let cfg = tiny_cfg("classifier", false);
+        let m = Transformer::new(&cfg, &mut rng);
+        let ids: Vec<u32> = (0..2 * 8).map(|i| (i % 50) as u32).collect();
+        let (logits, _) = m.forward(&ids, 2, 8);
+        assert_eq!(logits.shape, vec![2, 3]);
+    }
+
+    #[test]
+    fn lm_shapes() {
+        let mut rng = Rng::new(81);
+        let cfg = tiny_cfg("lm", true);
+        let m = Transformer::new(&cfg, &mut rng);
+        let ids: Vec<u32> = (0..2 * 8).map(|i| (i % 50) as u32).collect();
+        let (logits, _) = m.forward(&ids, 2, 8);
+        assert_eq!(logits.shape, vec![16, 50]);
+    }
+
+    #[test]
+    fn end_to_end_grad_check_classifier() {
+        let mut rng = Rng::new(82);
+        let cfg = tiny_cfg("classifier", false);
+        let mut m = Transformer::new(&cfg, &mut rng);
+        let ids: Vec<u32> = (0..8).map(|i| (i * 3 % 50) as u32).collect();
+        let targets = [1usize];
+
+        let loss_of = |m: &Transformer| -> f32 {
+            let (logits, _) = m.forward(&ids, 1, 8);
+            loss::cross_entropy(&logits, &targets).0
+        };
+
+        m.zero_grad();
+        let (logits, cache) = m.forward(&ids, 1, 8);
+        let (_, dl) = loss::cross_entropy(&logits, &targets);
+        m.backward(&cache, &dl);
+
+        // Spot-check several parameters spread across the net.
+        let eps = 1e-2f32;
+        let tol = 5e-2f32;
+        let mut checks: Vec<(String, f32, f32)> = Vec::new();
+        {
+            // Collect (name, analytic grad, fd grad) for a few params.
+            let spots = [
+                ("block0.attn.wq.w", 3usize),
+                ("block1.ffn.fc1.w", 10),
+                ("head.w", 5),
+                ("embed.tok", 30),
+                ("ln_f.gamma", 2),
+            ];
+            for (want, pos) in spots {
+                // Analytic.
+                let mut an = None;
+                m.visit_params(&mut |p| {
+                    if p.name == want {
+                        an = Some(p.grad.data[pos]);
+                    }
+                });
+                let an = an.unwrap_or_else(|| panic!("param {want} not found"));
+                // FD: nudge via visit.
+                let mut orig = 0.0;
+                m.visit_params(&mut |p| {
+                    if p.name == want {
+                        orig = p.param.data[pos];
+                        p.param.data[pos] = orig + eps;
+                    }
+                });
+                let lp = loss_of(&m);
+                m.visit_params(&mut |p| {
+                    if p.name == want {
+                        p.param.data[pos] = orig - eps;
+                    }
+                });
+                let lm = loss_of(&m);
+                m.visit_params(&mut |p| {
+                    if p.name == want {
+                        p.param.data[pos] = orig;
+                    }
+                });
+                let fd = (lp - lm) / (2.0 * eps);
+                checks.push((want.to_string(), an, fd));
+                assert!(
+                    (fd - an).abs() < tol * (1.0 + fd.abs()),
+                    "{want}[{pos}]: fd={fd} an={an} (all={checks:?})"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn freeze_base_shrinks_trainables() {
+        let mut rng = Rng::new(83);
+        let cfg = tiny_cfg("classifier", false);
+        let mut m = Transformer::new(&cfg, &mut rng);
+        let full = m.count_trainable();
+        m.freeze_base();
+        let frozen = m.count_trainable();
+        // Only the head should remain.
+        assert_eq!(frozen, m.head_proj().w.numel() + m.head_proj().b.numel());
+        assert!(frozen < full / 10);
+    }
+
+    #[test]
+    fn prefix_changes_output_and_has_grads() {
+        let mut rng = Rng::new(84);
+        let cfg = tiny_cfg("classifier", false);
+        let mut m = Transformer::new(&cfg, &mut rng);
+        let ids: Vec<u32> = (0..8).map(|i| (i % 50) as u32).collect();
+        let (y0, _) = m.forward(&ids, 1, 8);
+        m.prefix = Some(Prefix {
+            vecs: Tensor::randn(&[2, 16], 0.5, &mut rng),
+            grad: Tensor::zeros(&[2, 16]),
+        });
+        let (y1, cache) = m.forward(&ids, 1, 8);
+        assert_eq!(y1.shape, vec![1, 3]);
+        assert!(y0.data.iter().zip(&y1.data).any(|(a, b)| (a - b).abs() > 1e-5));
+        // Gradient flows to prefix.
+        m.zero_grad();
+        let (_, dl) = loss::cross_entropy(&y1, &[0]);
+        m.backward(&cache, &dl);
+        let g = &m.prefix.as_ref().unwrap().grad;
+        assert!(g.data.iter().any(|&x| x != 0.0));
+    }
+
+    #[test]
+    fn lm_grad_check_with_causal() {
+        let mut rng = Rng::new(85);
+        let cfg = tiny_cfg("lm", true);
+        let mut m = Transformer::new(&cfg, &mut rng);
+        let ids: Vec<u32> = (0..8).map(|i| (i * 7 % 50) as u32).collect();
+        let targets: Vec<u32> = ids.iter().skip(1).copied().chain([0]).collect();
+
+        m.zero_grad();
+        let (logits, cache) = m.forward(&ids, 1, 8);
+        let (_, dl) = loss::lm_cross_entropy(&logits, &targets, u32::MAX);
+        m.backward(&cache, &dl);
+
+        let eps = 1e-2f32;
+        let mut orig = 0.0;
+        let mut an = 0.0;
+        m.visit_params(&mut |p| {
+            if p.name == "block0.attn.wv.w" {
+                an = p.grad.data[7];
+                orig = p.param.data[7];
+                p.param.data[7] = orig + eps;
+            }
+        });
+        let lp = {
+            let (lg, _) = m.forward(&ids, 1, 8);
+            loss::lm_cross_entropy(&lg, &targets, u32::MAX).0
+        };
+        m.visit_params(&mut |p| {
+            if p.name == "block0.attn.wv.w" {
+                p.param.data[7] = orig - eps;
+            }
+        });
+        let lm_ = {
+            let (lg, _) = m.forward(&ids, 1, 8);
+            loss::lm_cross_entropy(&lg, &targets, u32::MAX).0
+        };
+        m.visit_params(&mut |p| {
+            if p.name == "block0.attn.wv.w" {
+                p.param.data[7] = orig;
+            }
+        });
+        let fd = (lp - lm_) / (2.0 * eps);
+        assert!((fd - an).abs() < 5e-2 * (1.0 + fd.abs()), "fd={fd} an={an}");
+    }
+}

@@ -1,0 +1,206 @@
+//! Model checkpointing: save/load every parameter (by visit name) in a
+//! simple self-describing binary format, plus the architecture config as
+//! a JSON sidecar. Used to persist pre-trained/fine-tuned models across
+//! runs (`dsee finetune --save/--load`).
+//!
+//! Format (little-endian):
+//! ```text
+//! magic "DSEE\x01"  | u32 param count |
+//! per param: u32 name len | name bytes | u32 ndim | u64 dims… | f32 data…
+//! ```
+//! Loading is strict: every parameter in the file must exist in the
+//! model with the same shape, and every model parameter must be present
+//! in the file — silent partial loads are a classic checkpoint bug.
+
+use super::Transformer;
+use crate::config::ModelCfg;
+use crate::tensor::Tensor;
+use std::collections::HashMap;
+use std::io::{Read, Write};
+use std::path::Path;
+
+const MAGIC: &[u8; 5] = b"DSEE\x01";
+
+/// Save model params + config. Writes `<path>` (binary) and
+/// `<path>.json` (architecture).
+pub fn save(model: &mut Transformer, path: &Path) -> crate::Result<()> {
+    let mut entries: Vec<(String, Vec<usize>, Vec<f32>)> = Vec::new();
+    model.visit_params(&mut |p| {
+        entries.push((p.name.clone(), p.param.shape.clone(), p.param.data.clone()));
+    });
+    let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+    f.write_all(MAGIC)?;
+    f.write_all(&(entries.len() as u32).to_le_bytes())?;
+    for (name, shape, data) in &entries {
+        f.write_all(&(name.len() as u32).to_le_bytes())?;
+        f.write_all(name.as_bytes())?;
+        f.write_all(&(shape.len() as u32).to_le_bytes())?;
+        for &d in shape {
+            f.write_all(&(d as u64).to_le_bytes())?;
+        }
+        // Bulk-write the f32 payload.
+        let bytes: Vec<u8> = data.iter().flat_map(|x| x.to_le_bytes()).collect();
+        f.write_all(&bytes)?;
+    }
+    f.flush()?;
+    std::fs::write(
+        path.with_extension("json"),
+        model.cfg.to_json().pretty(),
+    )?;
+    Ok(())
+}
+
+fn read_u32(r: &mut impl Read) -> crate::Result<u32> {
+    let mut b = [0u8; 4];
+    r.read_exact(&mut b)?;
+    Ok(u32::from_le_bytes(b))
+}
+
+fn read_u64(r: &mut impl Read) -> crate::Result<u64> {
+    let mut b = [0u8; 8];
+    r.read_exact(&mut b)?;
+    Ok(u64::from_le_bytes(b))
+}
+
+/// Read the raw (name → tensor) map from a checkpoint file.
+pub fn read_params(path: &Path) -> crate::Result<HashMap<String, Tensor>> {
+    let mut f = std::io::BufReader::new(std::fs::File::open(path)?);
+    let mut magic = [0u8; 5];
+    f.read_exact(&mut magic)?;
+    anyhow::ensure!(&magic == MAGIC, "{}: not a DSEE checkpoint", path.display());
+    let count = read_u32(&mut f)? as usize;
+    anyhow::ensure!(count < 1_000_000, "implausible param count {count}");
+    let mut map = HashMap::with_capacity(count);
+    for _ in 0..count {
+        let name_len = read_u32(&mut f)? as usize;
+        anyhow::ensure!(name_len < 4096, "implausible name length {name_len}");
+        let mut name = vec![0u8; name_len];
+        f.read_exact(&mut name)?;
+        let name = String::from_utf8(name)?;
+        let ndim = read_u32(&mut f)? as usize;
+        anyhow::ensure!(ndim <= 8, "implausible rank {ndim}");
+        let mut shape = Vec::with_capacity(ndim);
+        for _ in 0..ndim {
+            shape.push(read_u64(&mut f)? as usize);
+        }
+        let numel: usize = shape.iter().product();
+        let mut bytes = vec![0u8; numel * 4];
+        f.read_exact(&mut bytes)?;
+        let data: Vec<f32> = bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect();
+        map.insert(name, Tensor::from_vec(&shape, data));
+    }
+    Ok(map)
+}
+
+/// Load a checkpoint into an existing model (strict name/shape match).
+pub fn load_into(model: &mut Transformer, path: &Path) -> crate::Result<()> {
+    let mut map = read_params(path)?;
+    let mut missing = Vec::new();
+    model.visit_params(&mut |p| {
+        match map.remove(&p.name) {
+            Some(t) if t.shape == p.param.shape => {
+                p.param.data.copy_from_slice(&t.data);
+            }
+            Some(t) => missing.push(format!(
+                "{}: shape {:?} vs checkpoint {:?}",
+                p.name, p.param.shape, t.shape
+            )),
+            None => missing.push(format!("{}: absent from checkpoint", p.name)),
+        }
+    });
+    anyhow::ensure!(
+        missing.is_empty(),
+        "checkpoint mismatch:\n  {}",
+        missing.join("\n  ")
+    );
+    anyhow::ensure!(
+        map.is_empty(),
+        "checkpoint has {} extra parameters (e.g. {:?})",
+        map.len(),
+        map.keys().next()
+    );
+    Ok(())
+}
+
+/// Load the architecture sidecar.
+pub fn read_cfg(path: &Path) -> crate::Result<ModelCfg> {
+    let j = crate::util::Json::parse_file(&path.with_extension("json"))?;
+    ModelCfg::from_json(&j)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{DseeCfg, ModelCfg};
+    use crate::dsee::attach_dsee;
+    use crate::util::Rng;
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        std::env::temp_dir().join(format!("dsee-ckpt-{}-{name}", std::process::id()))
+    }
+
+    #[test]
+    fn round_trip_preserves_forward() {
+        let mut rng = Rng::new(900);
+        let cfg = ModelCfg::sim_bert_s();
+        let mut model = Transformer::new(&cfg, &mut rng);
+        attach_dsee(
+            &mut model,
+            &DseeCfg {
+                rank: 4,
+                n_sparse: 8,
+                ..DseeCfg::default()
+            },
+            &mut rng,
+        );
+        let ids: Vec<u32> = (0..24).map(|i| (i * 3 % 256) as u32).collect();
+        let (y0, _) = model.forward(&ids, 1, 24);
+
+        let path = tmp("rt.bin");
+        save(&mut model, &path).unwrap();
+        // Perturb, then load back.
+        let mut other = model.clone();
+        other.visit_params(&mut |p| {
+            for x in p.param.data.iter_mut() {
+                *x += 1.0;
+            }
+        });
+        let (y_pert, _) = other.forward(&ids, 1, 24);
+        assert!(y0.data.iter().zip(&y_pert.data).any(|(a, b)| (a - b).abs() > 1e-3));
+        load_into(&mut other, &path).unwrap();
+        let (y1, _) = other.forward(&ids, 1, 24);
+        assert_eq!(y0.data, y1.data);
+        // Config sidecar round-trips.
+        assert_eq!(read_cfg(&path).unwrap(), cfg);
+        let _ = std::fs::remove_file(&path);
+        let _ = std::fs::remove_file(path.with_extension("json"));
+    }
+
+    #[test]
+    fn shape_mismatch_is_rejected() {
+        let mut rng = Rng::new(901);
+        let cfg = ModelCfg::sim_bert_s();
+        let mut model = Transformer::new(&cfg, &mut rng);
+        let path = tmp("mismatch.bin");
+        save(&mut model, &path).unwrap();
+        // A structurally different model must refuse the checkpoint.
+        let mut cfg2 = cfg.clone();
+        cfg2.d_ffn *= 2;
+        let mut other = Transformer::new(&cfg2, &mut rng);
+        let err = load_into(&mut other, &path).unwrap_err();
+        assert!(format!("{err}").contains("mismatch"));
+        let _ = std::fs::remove_file(&path);
+        let _ = std::fs::remove_file(path.with_extension("json"));
+    }
+
+    #[test]
+    fn garbage_file_is_rejected() {
+        let path = tmp("garbage.bin");
+        std::fs::write(&path, b"not a checkpoint at all").unwrap();
+        assert!(read_params(&path).is_err());
+        let _ = std::fs::remove_file(&path);
+    }
+}

@@ -1,0 +1,278 @@
+//! Optimizers and schedules: AdamW (decoupled weight decay, the paper's
+//! optimizer), plain SGD for ablations, linear-decay LR schedule, global
+//! gradient clipping, and the ℓ₁ sub-gradient helper for head gates.
+
+use crate::nn::Transformer;
+use crate::tensor::Tensor;
+
+/// Per-parameter AdamW state.
+struct Slot {
+    m: Vec<f32>,
+    v: Vec<f32>,
+}
+
+/// AdamW with decoupled weight decay (Loshchilov & Hutter 2017).
+///
+/// State slots are keyed by visit order, which is stable for a fixed
+/// model structure; reconstruct the optimizer whenever the structure
+/// changes (e.g. after structured pruning reshapes U/V — matching the
+/// paper's separate "tuning after pruning" phase with its own LR).
+pub struct AdamW {
+    pub lr: f32,
+    pub beta1: f32,
+    pub beta2: f32,
+    pub eps: f32,
+    pub weight_decay: f32,
+    pub step_count: usize,
+    slots: Vec<Option<Slot>>,
+}
+
+impl AdamW {
+    pub fn new(lr: f32, weight_decay: f32) -> Self {
+        AdamW {
+            lr,
+            beta1: 0.9,
+            beta2: 0.999,
+            eps: 1e-8,
+            weight_decay,
+            step_count: 0,
+            slots: Vec::new(),
+        }
+    }
+
+    /// Apply one update over all trainable params of `model`.
+    pub fn step(&mut self, model: &mut Transformer, lr_scale: f32) {
+        self.step_count += 1;
+        let t = self.step_count as f32;
+        let bc1 = 1.0 - self.beta1.powf(t);
+        let bc2 = 1.0 - self.beta2.powf(t);
+        let lr = self.lr * lr_scale;
+        let (b1, b2, eps, wd) = (self.beta1, self.beta2, self.eps, self.weight_decay);
+
+        let mut idx = 0usize;
+        let slots = &mut self.slots;
+        model.visit_params(&mut |p| {
+            if slots.len() <= idx {
+                slots.push(None);
+            }
+            if p.trainable {
+                let n = p.param.numel();
+                let slot = slots[idx].get_or_insert_with(|| Slot {
+                    m: vec![0.0; n],
+                    v: vec![0.0; n],
+                });
+                if slot.m.len() != n {
+                    // Shape changed (e.g. structured pruning): reset state.
+                    *slot = Slot {
+                        m: vec![0.0; n],
+                        v: vec![0.0; n],
+                    };
+                }
+                for i in 0..n {
+                    let g = p.grad.data[i];
+                    slot.m[i] = b1 * slot.m[i] + (1.0 - b1) * g;
+                    slot.v[i] = b2 * slot.v[i] + (1.0 - b2) * g * g;
+                    let mhat = slot.m[i] / bc1;
+                    let vhat = slot.v[i] / bc2;
+                    let mut upd = mhat / (vhat.sqrt() + eps);
+                    if p.decay {
+                        upd += wd * p.param.data[i];
+                    }
+                    p.param.data[i] -= lr * upd;
+                }
+            }
+            idx += 1;
+        });
+    }
+}
+
+/// Plain SGD (ablation / sanity baseline).
+pub struct Sgd {
+    pub lr: f32,
+}
+
+impl Sgd {
+    pub fn step(&self, model: &mut Transformer, lr_scale: f32) {
+        let lr = self.lr * lr_scale;
+        model.visit_params(&mut |p| {
+            if p.trainable {
+                for i in 0..p.param.numel() {
+                    p.param.data[i] -= lr * p.grad.data[i];
+                }
+            }
+        });
+    }
+}
+
+/// Linear decay from 1.0 to 0.0 over `total` steps (the paper linearly
+/// decays all learning rates).
+pub fn linear_decay(step: usize, total: usize) -> f32 {
+    if total == 0 {
+        return 1.0;
+    }
+    let remain = total.saturating_sub(step) as f32 / total as f32;
+    remain.max(0.0)
+}
+
+/// Global-norm gradient clipping; returns the pre-clip norm.
+pub fn clip_grads(model: &mut Transformer, max_norm: f32) -> f32 {
+    let mut sq = 0.0f64;
+    model.visit_params(&mut |p| {
+        if p.trainable {
+            sq += p.grad.data.iter().map(|&g| (g as f64) * (g as f64)).sum::<f64>();
+        }
+    });
+    let norm = sq.sqrt() as f32;
+    if norm > max_norm && norm > 0.0 {
+        let scale = max_norm / norm;
+        model.visit_params(&mut |p| {
+            if p.trainable {
+                for g in p.grad.data.iter_mut() {
+                    *g *= scale;
+                }
+            }
+        });
+    }
+    norm
+}
+
+/// Add the ℓ₁ sub-gradient λ·sign(c) to a gate gradient buffer and
+/// return the penalty value λ·Σ|c| (added to the reported loss).
+pub fn l1_penalty(gates: &Tensor, ggates: &mut Tensor, lambda: f32) -> f32 {
+    let mut pen = 0.0;
+    for (g, &c) in ggates.data.iter_mut().zip(&gates.data) {
+        pen += c.abs();
+        // f32::signum(0.0) is 1.0; the ℓ₁ sub-gradient at 0 is 0.
+        let sign = if c > 0.0 {
+            1.0
+        } else if c < 0.0 {
+            -1.0
+        } else {
+            0.0
+        };
+        *g += lambda * sign;
+    }
+    lambda * pen
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ModelCfg;
+    use crate::nn::loss::cross_entropy;
+    use crate::util::Rng;
+
+    fn tiny() -> (Transformer, Vec<u32>) {
+        let mut rng = Rng::new(90);
+        let cfg = ModelCfg {
+            name: "t".into(),
+            vocab: 30,
+            max_seq: 6,
+            d_model: 16,
+            n_layers: 1,
+            n_heads: 2,
+            d_ffn: 32,
+            causal: false,
+            n_classes: 2,
+            head: "classifier".into(),
+            n_prefix: 0,
+        };
+        let m = Transformer::new(&cfg, &mut rng);
+        let ids: Vec<u32> = (0..4 * 6).map(|i| (i % 30) as u32).collect();
+        (m, ids)
+    }
+
+    #[test]
+    fn adamw_reduces_loss() {
+        let (mut m, ids) = tiny();
+        let targets = [0usize, 1, 0, 1];
+        let mut opt = AdamW::new(3e-3, 0.0);
+        let mut first = 0.0;
+        let mut last = 0.0;
+        for step in 0..30 {
+            m.zero_grad();
+            let (logits, cache) = m.forward(&ids, 4, 6);
+            let (loss, dl) = cross_entropy(&logits, &targets);
+            if step == 0 {
+                first = loss;
+            }
+            last = loss;
+            m.backward(&cache, &dl);
+            opt.step(&mut m, 1.0);
+        }
+        assert!(last < first * 0.7, "first={first} last={last}");
+    }
+
+    #[test]
+    fn frozen_params_do_not_move() {
+        let (mut m, ids) = tiny();
+        m.freeze_base();
+        let before: Vec<f32> = {
+            let mut v = Vec::new();
+            m.visit_params(&mut |p| {
+                if !p.trainable {
+                    v.extend_from_slice(&p.param.data);
+                }
+            });
+            v
+        };
+        let mut opt = AdamW::new(1e-2, 0.1);
+        for _ in 0..5 {
+            m.zero_grad();
+            let (logits, cache) = m.forward(&ids, 4, 6);
+            let (_, dl) = cross_entropy(&logits, &[0, 1, 0, 1]);
+            m.backward(&cache, &dl);
+            opt.step(&mut m, 1.0);
+        }
+        let after: Vec<f32> = {
+            let mut v = Vec::new();
+            m.visit_params(&mut |p| {
+                if !p.trainable {
+                    v.extend_from_slice(&p.param.data);
+                }
+            });
+            v
+        };
+        assert_eq!(before, after);
+    }
+
+    #[test]
+    fn linear_decay_schedule() {
+        assert_eq!(linear_decay(0, 100), 1.0);
+        assert!((linear_decay(50, 100) - 0.5).abs() < 1e-6);
+        assert_eq!(linear_decay(100, 100), 0.0);
+        assert_eq!(linear_decay(150, 100), 0.0);
+        assert_eq!(linear_decay(0, 0), 1.0);
+    }
+
+    #[test]
+    fn clipping_bounds_norm() {
+        let (mut m, ids) = tiny();
+        m.zero_grad();
+        let (logits, cache) = m.forward(&ids, 4, 6);
+        let (_, dl) = cross_entropy(&logits, &[0, 1, 0, 1]);
+        // Inflate gradients.
+        m.backward(&cache, &dl.scale(1000.0));
+        let pre = clip_grads(&mut m, 1.0);
+        assert!(pre > 1.0);
+        // Re-measure.
+        let mut sq = 0.0f64;
+        m.visit_params(&mut |p| {
+            if p.trainable {
+                sq += p.grad.data.iter().map(|&g| (g as f64) * (g as f64)).sum::<f64>();
+            }
+        });
+        assert!((sq.sqrt() - 1.0).abs() < 1e-3);
+    }
+
+    #[test]
+    fn l1_penalty_subgradient() {
+        let gates = Tensor::from_vec(&[3], vec![0.5, -2.0, 0.0]);
+        let mut gg = Tensor::zeros(&[3]);
+        let pen = l1_penalty(&gates, &mut gg, 0.1);
+        assert!((pen - 0.25).abs() < 1e-6);
+        assert!((gg.data[0] - 0.1).abs() < 1e-6);
+        assert!((gg.data[1] + 0.1).abs() < 1e-6);
+        assert_eq!(gg.data[2], 0.0);
+    }
+}

@@ -1,0 +1,219 @@
+//! Table/series emitters: every bench prints a paper-style markdown
+//! table to stdout and writes machine-readable CSV + JSON into
+//! `results/` for EXPERIMENTS.md.
+
+use crate::train::RunResult;
+use crate::util::Json;
+use std::fmt::Write as _;
+use std::path::Path;
+
+/// A simple column-aligned markdown table.
+pub struct Table {
+    pub title: String,
+    pub headers: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, headers: &[&str]) -> Table {
+        Table {
+            title: title.to_string(),
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.headers.len(), "row arity");
+        self.rows.push(cells);
+    }
+
+    pub fn to_markdown(&self) -> String {
+        let ncol = self.headers.len();
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.chars().count()).collect();
+        for r in &self.rows {
+            for (i, c) in r.iter().enumerate() {
+                widths[i] = widths[i].max(c.chars().count());
+            }
+        }
+        let mut out = String::new();
+        let _ = writeln!(out, "### {}\n", self.title);
+        let line = |cells: &[String], widths: &[usize]| -> String {
+            let mut s = String::from("|");
+            for (c, w) in cells.iter().zip(widths) {
+                let pad = w - c.chars().count();
+                s += &format!(" {}{} |", c, " ".repeat(pad));
+            }
+            s
+        };
+        let _ = writeln!(out, "{}", line(&self.headers, &widths));
+        let mut sep = String::from("|");
+        for w in &widths {
+            sep += &format!("{}|", "-".repeat(w + 2));
+        }
+        let _ = writeln!(out, "{sep}");
+        for r in &self.rows {
+            let _ = writeln!(out, "{}", line(r, &widths));
+        }
+        let _ = out;
+        out.push('\n');
+        let _ = ncol;
+        out
+    }
+
+    pub fn to_csv(&self) -> String {
+        let esc = |c: &str| {
+            if c.contains(',') || c.contains('"') {
+                format!("\"{}\"", c.replace('"', "\"\""))
+            } else {
+                c.to_string()
+            }
+        };
+        let mut out = self
+            .headers
+            .iter()
+            .map(|h| esc(h))
+            .collect::<Vec<_>>()
+            .join(",");
+        out.push('\n');
+        for r in &self.rows {
+            out += &r.iter().map(|c| esc(c)).collect::<Vec<_>>().join(",");
+            out.push('\n');
+        }
+        out
+    }
+
+    /// Print markdown + persist CSV under results/<name>.csv.
+    pub fn emit(&self, name: &str) {
+        println!("{}", self.to_markdown());
+        let dir = results_dir();
+        let _ = std::fs::create_dir_all(&dir);
+        let _ = std::fs::write(dir.join(format!("{name}.csv")), self.to_csv());
+    }
+}
+
+/// Write a set of RunResults as JSON (per-bench raw record).
+pub fn write_results_json(name: &str, results: &[&RunResult]) {
+    let arr = Json::Arr(results.iter().map(|r| r.to_json()).collect());
+    let dir = results_dir();
+    let _ = std::fs::create_dir_all(&dir);
+    let _ = std::fs::write(dir.join(format!("{name}.json")), arr.pretty());
+}
+
+/// An (x, series...) CSV for figure reproductions.
+pub struct Series {
+    pub title: String,
+    pub x_label: String,
+    pub columns: Vec<String>,
+    pub points: Vec<(f64, Vec<f64>)>,
+}
+
+impl Series {
+    pub fn new(title: &str, x_label: &str, columns: &[&str]) -> Series {
+        Series {
+            title: title.to_string(),
+            x_label: x_label.to_string(),
+            columns: columns.iter().map(|s| s.to_string()).collect(),
+        points: Vec::new(),
+        }
+    }
+
+    pub fn point(&mut self, x: f64, ys: Vec<f64>) {
+        assert_eq!(ys.len(), self.columns.len(), "series arity");
+        self.points.push((x, ys));
+    }
+
+    pub fn emit(&self, name: &str) {
+        println!("### {} (series → results/{name}.csv)\n", self.title);
+        let mut header = vec![self.x_label.clone()];
+        header.extend(self.columns.clone());
+        println!("{}", header.join(", "));
+        let mut csv = header.join(",");
+        csv.push('\n');
+        for (x, ys) in &self.points {
+            let mut cells = vec![format!("{x}")];
+            cells.extend(ys.iter().map(|y| format!("{y:.6}")));
+            println!("{}", cells.join(", "));
+            csv += &cells.join(",");
+            csv.push('\n');
+        }
+        println!();
+        let dir = results_dir();
+        let _ = std::fs::create_dir_all(&dir);
+        let _ = std::fs::write(dir.join(format!("{name}.csv")), csv);
+    }
+}
+
+/// results/ directory at the repo root (next to artifacts/).
+pub fn results_dir() -> std::path::PathBuf {
+    let mut cur = std::env::current_dir().unwrap_or_else(|_| Path::new(".").to_path_buf());
+    for _ in 0..4 {
+        if cur.join("Cargo.toml").exists() {
+            return cur.join("results");
+        }
+        if !cur.pop() {
+            break;
+        }
+    }
+    Path::new("results").to_path_buf()
+}
+
+/// Format a RunResult as a paper-style row: method, params, sparsity,
+/// then the given metric columns.
+pub fn result_row(r: &RunResult, metric_names: &[&str]) -> Vec<String> {
+    let mut row = vec![
+        r.method.clone(),
+        crate::train::fmt_params(r.trainable_params),
+        r.sparsity.clone(),
+    ];
+    for m in metric_names {
+        let v = r.metric(m);
+        row.push(if v.is_nan() {
+            "-".to_string()
+        } else if *m == "nist" {
+            format!("{v:.2}")
+        } else if *m == "bleu" {
+            format!("{v:.2}")
+        } else {
+            format!("{v:.4}")
+        });
+    }
+    row
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn markdown_is_aligned() {
+        let mut t = Table::new("T", &["a", "metric"]);
+        t.row(vec!["x".into(), "1.0".into()]);
+        t.row(vec!["longer".into(), "2.0".into()]);
+        let md = t.to_markdown();
+        assert!(md.contains("| a      | metric |"), "{md}");
+        assert!(md.contains("| longer | 2.0    |"), "{md}");
+    }
+
+    #[test]
+    fn csv_escapes_commas() {
+        let mut t = Table::new("T", &["a"]);
+        t.row(vec!["x,y".into()]);
+        assert!(t.to_csv().contains("\"x,y\""));
+    }
+
+    #[test]
+    #[should_panic(expected = "row arity")]
+    fn arity_checked() {
+        let mut t = Table::new("T", &["a", "b"]);
+        t.row(vec!["only-one".into()]);
+    }
+
+    #[test]
+    fn series_points() {
+        let mut s = Series::new("fig", "rank", &["lora", "dsee"]);
+        s.point(2.0, vec![0.8, 0.85]);
+        s.point(4.0, vec![0.82, 0.86]);
+        assert_eq!(s.points.len(), 2);
+    }
+}

@@ -1,0 +1,235 @@
+//! Native-model ↔ artifact parameter bridge.
+//!
+//! The AOT artifacts take every weight as a runtime input, ordered by
+//! the manifest. [`export_params`] walks that order and materializes
+//! each tensor from a native [`Transformer`] — masks/Ω/S₂ become their
+//! dense carriers, missing adapters become zeros. This is what lets the
+//! parity integration test feed *identical* weights to both engines,
+//! and what the quickstart example uses to drive the AOT train step
+//! from Rust-held state.
+
+use super::IoSpec;
+use crate::nn::Transformer;
+use crate::tensor::Tensor;
+
+/// Materialize the tensor for one manifest parameter name.
+fn param_tensor(model: &Transformer, name: &str, spec: &IoSpec) -> crate::Result<Tensor> {
+    let parts: Vec<&str> = name.split('.').collect();
+    let t = match parts.as_slice() {
+        ["embed", "tok"] => model.embed.tok.clone(),
+        ["embed", "pos"] => {
+            // Artifact may use fewer positions than the native table.
+            let d = model.embed.dim();
+            let rows = spec.shape[0];
+            anyhow::ensure!(
+                rows <= model.embed.pos.rows(),
+                "artifact wants {rows} positions, model has {}",
+                model.embed.pos.rows()
+            );
+            Tensor::from_vec(&[rows, d], model.embed.pos.data[..rows * d].to_vec())
+        }
+        ["ln_f", field] => ln_field(&model.ln_f, field)?,
+        ["head", "w"] => model.head_proj().w.clone(),
+        ["head", "b"] => model.head_proj().b.clone(),
+        [blk, rest @ ..] if blk.starts_with("block") => {
+            let idx: usize = blk[5..]
+                .parse()
+                .map_err(|_| anyhow::anyhow!("bad block name {blk}"))?;
+            let block = model
+                .blocks
+                .get(idx)
+                .ok_or_else(|| anyhow::anyhow!("block {idx} out of range"))?;
+            match rest {
+                ["ln1", field] => ln_field(&block.ln1, field)?,
+                ["ln2", field] => ln_field(&block.ln2, field)?,
+                ["attn", "gates"] => block.attn.gates.clone(),
+                ["attn", proj, field] => {
+                    let lin = match *proj {
+                        "wq" => &block.attn.wq,
+                        "wk" => &block.attn.wk,
+                        "wv" => &block.attn.wv,
+                        "wo" => &block.attn.wo,
+                        other => anyhow::bail!("unknown projection {other}"),
+                    };
+                    linear_field(lin, field, spec)?
+                }
+                ["ffn", fc, field] => {
+                    let lin = match *fc {
+                        "fc1" => &block.ffn.fc1,
+                        "fc2" => &block.ffn.fc2,
+                        other => anyhow::bail!("unknown ffn part {other}"),
+                    };
+                    linear_field(lin, field, spec)?
+                }
+                other => anyhow::bail!("unknown block field {other:?}"),
+            }
+        }
+        _ => anyhow::bail!("unknown parameter '{name}'"),
+    };
+    anyhow::ensure!(
+        t.shape == spec.shape,
+        "param '{name}': model shape {:?} vs artifact {:?}",
+        t.shape,
+        spec.shape
+    );
+    Ok(t)
+}
+
+fn ln_field(ln: &crate::nn::layernorm::LayerNorm, field: &str) -> crate::Result<Tensor> {
+    Ok(match field {
+        "gamma" => ln.gamma.clone(),
+        "beta" => ln.beta.clone(),
+        other => anyhow::bail!("unknown ln field {other}"),
+    })
+}
+
+fn linear_field(
+    lin: &crate::nn::linear::Linear,
+    field: &str,
+    spec: &IoSpec,
+) -> crate::Result<Tensor> {
+    let (i, o) = (lin.in_dim(), lin.out_dim());
+    Ok(match field {
+        "w" => lin.w.clone(),
+        "b" => lin.b.clone(),
+        "mask" => lin
+            .mask
+            .clone()
+            .unwrap_or_else(|| Tensor::full(&[i, o], 1.0)),
+        "omega" => {
+            let mut t = Tensor::zeros(&[i, o]);
+            if let Some(r) = &lin.residual {
+                for &(ri, rj) in &r.idx {
+                    t.data[ri * o + rj] = 1.0;
+                }
+            }
+            t
+        }
+        "s2" => match &lin.residual {
+            Some(r) => r.to_dense(i, o),
+            None => Tensor::zeros(&[i, o]),
+        },
+        "u" => match &lin.adapter {
+            Some(a) => {
+                anyhow::ensure!(
+                    a.u.shape == spec.shape,
+                    "adapter rank mismatch: model {:?} vs artifact {:?}",
+                    a.u.shape,
+                    spec.shape
+                );
+                a.u.clone()
+            }
+            None => Tensor::zeros(&spec.shape),
+        },
+        "v" => match &lin.adapter {
+            Some(a) => a.v.clone(),
+            None => Tensor::zeros(&spec.shape),
+        },
+        other => anyhow::bail!("unknown linear field {other}"),
+    })
+}
+
+/// Export every *parameter* input of an artifact (everything whose name
+/// is a model path — callers append data inputs like ids/labels/step
+/// and optimizer state themselves).
+pub fn export_params(model: &Transformer, specs: &[IoSpec]) -> crate::Result<Vec<Tensor>> {
+    specs
+        .iter()
+        .map(|s| param_tensor(model, &s.name, s))
+        .collect()
+}
+
+/// Split an artifact's input specs into (model params, the rest) —
+/// the rest being m.* / v.* optimizer state and data inputs.
+pub fn split_param_specs(specs: &[IoSpec]) -> (Vec<IoSpec>, Vec<IoSpec>) {
+    let is_param = |n: &str| {
+        !(n.starts_with("m.")
+            || n.starts_with("v.")
+            || n == "step"
+            || n == "ids"
+            || n == "labels")
+    };
+    let params = specs.iter().filter(|s| is_param(&s.name)).cloned().collect();
+    let rest = specs.iter().filter(|s| !is_param(&s.name)).cloned().collect();
+    (params, rest)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ModelCfg;
+    use crate::util::Rng;
+
+    fn model_with_dsee() -> Transformer {
+        let mut rng = Rng::new(600);
+        let mut m = Transformer::new(&ModelCfg::sim_bert_s(), &mut rng);
+        for lin in m.attn_projections_mut() {
+            lin.add_adapter(8, &mut rng);
+            lin.add_residual(vec![(0, 0), (3, 5)]);
+        }
+        m
+    }
+
+    fn spec(name: &str, shape: &[usize]) -> IoSpec {
+        IoSpec {
+            name: name.into(),
+            shape: shape.to_vec(),
+            dtype: "f32".into(),
+        }
+    }
+
+    #[test]
+    fn exports_core_params() {
+        let m = model_with_dsee();
+        let d = m.cfg.d_model;
+        let specs = vec![
+            spec("embed.tok", &[m.cfg.vocab, d]),
+            spec("block0.attn.wq.w", &[d, d]),
+            spec("block0.attn.wq.u", &[d, 8]),
+            spec("block0.attn.wq.omega", &[d, d]),
+            spec("block0.attn.wq.s2", &[d, d]),
+            spec("block1.ffn.fc1.w", &[d, m.cfg.d_ffn]),
+            spec("ln_f.gamma", &[d]),
+            spec("head.w", &[d, 2]),
+            spec("block0.attn.gates", &[m.cfg.n_heads]),
+        ];
+        let out = export_params(&m, &specs).unwrap();
+        assert_eq!(out.len(), specs.len());
+        // Omega has exactly the residual support set.
+        let omega = &out[3];
+        assert_eq!(omega.data.iter().filter(|&&x| x == 1.0).count(), 2);
+        assert_eq!(omega.data[0], 1.0);
+        assert_eq!(omega.at2(3, 5), 1.0);
+    }
+
+    #[test]
+    fn shape_mismatch_is_loud() {
+        let m = model_with_dsee();
+        let bad = vec![spec("embed.tok", &[7, 7])];
+        assert!(export_params(&m, &bad).is_err());
+    }
+
+    #[test]
+    fn unknown_param_is_loud() {
+        let m = model_with_dsee();
+        let bad = vec![spec("block9.attn.wq.w", &[64, 64])];
+        assert!(export_params(&m, &bad).is_err());
+        let bad2 = vec![spec("not.a.param", &[1])];
+        assert!(export_params(&m, &bad2).is_err());
+    }
+
+    #[test]
+    fn split_param_specs_partitions() {
+        let specs = vec![
+            spec("embed.tok", &[4, 4]),
+            spec("m.head.w", &[4, 2]),
+            spec("v.head.w", &[4, 2]),
+            spec("step", &[]),
+            spec("ids", &[2, 3]),
+            spec("labels", &[2]),
+        ];
+        let (params, rest) = split_param_specs(&specs);
+        assert_eq!(params.len(), 1);
+        assert_eq!(rest.len(), 5);
+    }
+}

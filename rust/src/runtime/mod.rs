@@ -1,0 +1,383 @@
+//! PJRT runtime: loads the HLO-text artifacts produced by
+//! `python/compile/aot.py` and executes them on the CPU PJRT client.
+//!
+//! This is the request-path bridge of the three-layer architecture —
+//! after `make artifacts`, the Rust binary is self-contained: HLO text →
+//! `HloModuleProto::from_text_file` → `client.compile` → `execute`.
+//! (Text, not serialized proto: the image's xla_extension 0.5.1 rejects
+//! jax≥0.5's 64-bit-id protos; the text parser reassigns ids.)
+//!
+//! The artifact *manifest* (`artifacts/manifest.json`) fixes each
+//! executable's input order, shapes, and dtypes; [`Runtime::execute`]
+//! validates inputs against it so shape bugs fail loudly at the boundary
+//! instead of deep inside XLA.
+
+pub mod bridge;
+
+use crate::tensor::Tensor;
+use crate::util::Json;
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+/// One input/output slot of an artifact.
+#[derive(Clone, Debug, PartialEq)]
+pub struct IoSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    /// "f32" | "s32"
+    pub dtype: String,
+}
+
+impl IoSpec {
+    fn from_json(j: &Json) -> crate::Result<IoSpec> {
+        let shape = j
+            .get("shape")
+            .as_arr()
+            .ok_or_else(|| anyhow::anyhow!("io spec missing shape"))?
+            .iter()
+            .map(|v| v.as_usize().ok_or_else(|| anyhow::anyhow!("bad dim")))
+            .collect::<crate::Result<Vec<usize>>>()?;
+        Ok(IoSpec {
+            name: j.req_str("name")?.to_string(),
+            shape,
+            dtype: j.req_str("dtype")?.to_string(),
+        })
+    }
+
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// Manifest entry + compiled executable.
+pub struct Artifact {
+    pub name: String,
+    pub inputs: Vec<IoSpec>,
+    pub outputs: Vec<IoSpec>,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+/// A runtime input value.
+pub enum Input<'a> {
+    F32(&'a Tensor),
+    I32(&'a [i32], &'a [usize]),
+    I32Scalar(i32),
+}
+
+impl<'a> Input<'a> {
+    fn to_literal(&self, spec: &IoSpec) -> crate::Result<xla::Literal> {
+        match self {
+            Input::F32(t) => {
+                anyhow::ensure!(
+                    spec.dtype == "f32",
+                    "input '{}' expects {} got f32",
+                    spec.name,
+                    spec.dtype
+                );
+                anyhow::ensure!(
+                    t.shape == spec.shape,
+                    "input '{}' expects shape {:?} got {:?}",
+                    spec.name,
+                    spec.shape,
+                    t.shape
+                );
+                let dims: Vec<i64> = spec.shape.iter().map(|&d| d as i64).collect();
+                Ok(xla::Literal::vec1(&t.data).reshape(&dims)?)
+            }
+            Input::I32(v, shape) => {
+                anyhow::ensure!(
+                    spec.dtype == "s32",
+                    "input '{}' expects {} got s32",
+                    spec.name,
+                    spec.dtype
+                );
+                anyhow::ensure!(
+                    *shape == spec.shape.as_slice(),
+                    "input '{}' expects shape {:?} got {:?}",
+                    spec.name,
+                    spec.shape,
+                    shape
+                );
+                let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+                Ok(xla::Literal::vec1(v).reshape(&dims)?)
+            }
+            Input::I32Scalar(x) => {
+                anyhow::ensure!(
+                    spec.shape.is_empty(),
+                    "input '{}' is not scalar",
+                    spec.name
+                );
+                Ok(xla::Literal::scalar(*x))
+            }
+        }
+    }
+}
+
+/// A runtime output value.
+#[derive(Debug)]
+pub enum Output {
+    F32(Tensor),
+    I32(Vec<i32>, Vec<usize>),
+}
+
+impl Output {
+    pub fn as_tensor(&self) -> &Tensor {
+        match self {
+            Output::F32(t) => t,
+            Output::I32(..) => panic!("output is i32, not f32"),
+        }
+    }
+
+    pub fn into_tensor(self) -> Tensor {
+        match self {
+            Output::F32(t) => t,
+            Output::I32(..) => panic!("output is i32, not f32"),
+        }
+    }
+}
+
+/// The loaded artifact registry.
+pub struct Runtime {
+    pub client: xla::PjRtClient,
+    artifacts: HashMap<String, Artifact>,
+    pub dir: PathBuf,
+}
+
+impl Runtime {
+    /// Load + compile every artifact listed in `<dir>/manifest.json`.
+    pub fn load_dir(dir: &Path) -> crate::Result<Runtime> {
+        let client = xla::PjRtClient::cpu()?;
+        let manifest = Json::parse_file(&dir.join("manifest.json"))?;
+        let mut artifacts = HashMap::new();
+        let arts = manifest
+            .get("artifacts")
+            .as_obj()
+            .ok_or_else(|| anyhow::anyhow!("manifest missing 'artifacts'"))?;
+        for (name, entry) in arts {
+            let file = dir.join(entry.req_str("file")?);
+            let inputs = entry
+                .get("inputs")
+                .as_arr()
+                .ok_or_else(|| anyhow::anyhow!("artifact {name}: no inputs"))?
+                .iter()
+                .map(IoSpec::from_json)
+                .collect::<crate::Result<Vec<_>>>()?;
+            let outputs = entry
+                .get("outputs")
+                .as_arr()
+                .ok_or_else(|| anyhow::anyhow!("artifact {name}: no outputs"))?
+                .iter()
+                .map(IoSpec::from_json)
+                .collect::<crate::Result<Vec<_>>>()?;
+            let proto = xla::HloModuleProto::from_text_file(
+                file.to_str().ok_or_else(|| anyhow::anyhow!("bad path"))?,
+            )
+            .map_err(|e| anyhow::anyhow!("parsing {}: {e}", file.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client
+                .compile(&comp)
+                .map_err(|e| anyhow::anyhow!("compiling {name}: {e}"))?;
+            artifacts.insert(
+                name.clone(),
+                Artifact {
+                    name: name.clone(),
+                    inputs,
+                    outputs,
+                    exe,
+                },
+            );
+        }
+        Ok(Runtime {
+            client,
+            artifacts,
+            dir: dir.to_path_buf(),
+        })
+    }
+
+    pub fn artifact(&self, name: &str) -> crate::Result<&Artifact> {
+        self.artifacts
+            .get(name)
+            .ok_or_else(|| anyhow::anyhow!("unknown artifact '{name}'"))
+    }
+
+    pub fn names(&self) -> Vec<&str> {
+        let mut v: Vec<&str> = self.artifacts.keys().map(|s| s.as_str()).collect();
+        v.sort_unstable();
+        v
+    }
+
+    /// Execute an artifact with validated inputs; returns outputs in the
+    /// manifest's order.
+    pub fn execute(&self, name: &str, inputs: &[Input<'_>]) -> crate::Result<Vec<Output>> {
+        let art = self.artifact(name)?;
+        anyhow::ensure!(
+            inputs.len() == art.inputs.len(),
+            "artifact '{name}': expected {} inputs, got {}",
+            art.inputs.len(),
+            inputs.len()
+        );
+        let literals: Vec<xla::Literal> = inputs
+            .iter()
+            .zip(&art.inputs)
+            .map(|(inp, spec)| inp.to_literal(spec))
+            .collect::<crate::Result<Vec<_>>>()?;
+        let result = art.exe.execute::<xla::Literal>(&literals)?[0][0].to_literal_sync()?;
+        // Artifacts are lowered with return_tuple=True.
+        let parts = result.to_tuple()?;
+        anyhow::ensure!(
+            parts.len() == art.outputs.len(),
+            "artifact '{name}': got {} outputs, manifest says {}",
+            parts.len(),
+            art.outputs.len()
+        );
+        parts
+            .into_iter()
+            .zip(&art.outputs)
+            .map(|(lit, spec)| {
+                let out = match spec.dtype.as_str() {
+                    "s32" => Output::I32(lit.to_vec::<i32>()?, spec.shape.clone()),
+                    _ => {
+                        let data = lit.to_vec::<f32>()?;
+                        anyhow::ensure!(
+                            data.len() == spec.numel(),
+                            "output '{}' size mismatch",
+                            spec.name
+                        );
+                        Output::F32(Tensor::from_vec(&spec.shape, data))
+                    }
+                };
+                Ok(out)
+            })
+            .collect()
+    }
+}
+
+impl Runtime {
+    /// Upload an f32 tensor to the device once; the returned buffer can
+    /// be passed to [`Runtime::execute_buffers`] across many calls. This
+    /// is the §Perf optimization for the fused train-step loop: the
+    /// frozen weight group (the bulk of the bytes) is uploaded a single
+    /// time instead of once per step.
+    pub fn upload_f32(&self, t: &Tensor) -> crate::Result<xla::PjRtBuffer> {
+        Ok(self
+            .client
+            .buffer_from_host_buffer::<f32>(&t.data, &t.shape, None)?)
+    }
+
+    /// Upload an i32 tensor.
+    pub fn upload_i32(&self, v: &[i32], shape: &[usize]) -> crate::Result<xla::PjRtBuffer> {
+        Ok(self.client.buffer_from_host_buffer::<i32>(v, shape, None)?)
+    }
+
+    /// Upload an i32 scalar.
+    pub fn upload_i32_scalar(&self, v: i32) -> crate::Result<xla::PjRtBuffer> {
+        Ok(self.client.buffer_from_host_buffer::<i32>(&[v], &[], None)?)
+    }
+
+    /// Execute from device-resident buffers (shape checking already done
+    /// at upload; order must match the manifest).
+    pub fn execute_buffers(
+        &self,
+        name: &str,
+        args: &[&xla::PjRtBuffer],
+    ) -> crate::Result<Vec<Output>> {
+        let art = self.artifact(name)?;
+        anyhow::ensure!(
+            args.len() == art.inputs.len(),
+            "artifact '{name}': expected {} inputs, got {}",
+            art.inputs.len(),
+            args.len()
+        );
+        let result = art.exe.execute_b(args)?[0][0].to_literal_sync()?;
+        let parts = result.to_tuple()?;
+        anyhow::ensure!(
+            parts.len() == art.outputs.len(),
+            "artifact '{name}': got {} outputs, manifest says {}",
+            parts.len(),
+            art.outputs.len()
+        );
+        parts
+            .into_iter()
+            .zip(&art.outputs)
+            .map(|(lit, spec)| {
+                let out = match spec.dtype.as_str() {
+                    "s32" => Output::I32(lit.to_vec::<i32>()?, spec.shape.clone()),
+                    _ => Output::F32(Tensor::from_vec(&spec.shape, lit.to_vec::<f32>()?)),
+                };
+                Ok(out)
+            })
+            .collect()
+    }
+}
+
+/// Default artifacts directory (repo-root/artifacts), overridable with
+/// `DSEE_ARTIFACTS`.
+pub fn default_artifact_dir() -> PathBuf {
+    if let Ok(p) = std::env::var("DSEE_ARTIFACTS") {
+        return PathBuf::from(p);
+    }
+    // Walk up from the cwd looking for artifacts/manifest.json.
+    let mut cur = std::env::current_dir().unwrap_or_else(|_| PathBuf::from("."));
+    for _ in 0..4 {
+        let cand = cur.join("artifacts");
+        if cand.join("manifest.json").exists() {
+            return cand;
+        }
+        if !cur.pop() {
+            break;
+        }
+    }
+    PathBuf::from("artifacts")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn iospec_parses() {
+        let j = Json::parse(r#"{"name":"x","shape":[2,3],"dtype":"f32"}"#).unwrap();
+        let s = IoSpec::from_json(&j).unwrap();
+        assert_eq!(s.shape, vec![2, 3]);
+        assert_eq!(s.numel(), 6);
+    }
+
+    #[test]
+    fn missing_artifact_dir_errors_cleanly() {
+        let err = match Runtime::load_dir(Path::new("/nonexistent-dsee")) {
+            Err(e) => e,
+            Ok(_) => panic!("expected error"),
+        };
+        let msg = format!("{err:#}");
+        assert!(msg.contains("manifest.json"), "{msg}");
+    }
+
+    #[test]
+    fn input_validation_rejects_bad_shape() {
+        let spec = IoSpec {
+            name: "x".into(),
+            shape: vec![2, 2],
+            dtype: "f32".into(),
+        };
+        let t = Tensor::zeros(&[3, 3]);
+        let err = match Input::F32(&t).to_literal(&spec) {
+            Err(e) => e,
+            Ok(_) => panic!("expected error"),
+        };
+        assert!(format!("{err}").contains("expects shape"));
+        let tok = Tensor::zeros(&[2, 2]);
+        assert!(Input::F32(&tok).to_literal(&spec).is_ok());
+    }
+
+    #[test]
+    fn input_validation_rejects_bad_dtype() {
+        let spec = IoSpec {
+            name: "ids".into(),
+            shape: vec![4],
+            dtype: "s32".into(),
+        };
+        let t = Tensor::zeros(&[4]);
+        assert!(Input::F32(&t).to_literal(&spec).is_err());
+        assert!(Input::I32(&[1, 2, 3, 4], &[4]).to_literal(&spec).is_ok());
+    }
+}

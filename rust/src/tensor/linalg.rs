@@ -1,0 +1,246 @@
+//! Matrix multiplication kernels — the Layer-3 hot path.
+//!
+//! Three variants cover every contraction the transformer's forward and
+//! backward passes need without materializing transposes:
+//!
+//! * `matmul(A, B)`        — C[m,n] = A[m,k] · B[k,n]
+//! * `matmul_bt(A, B)`     — C[m,n] = A[m,k] · B[n,k]ᵀ
+//! * `matmul_at(A, B)`     — C[k,n] = A[m,k]ᵀ · B[m,n]
+//!
+//! `matmul` uses the i–k–j loop order (unit-stride over both B's row and
+//! C's row) with an 8-wide manually unrolled inner loop; `matmul_bt` is a
+//! dot-product kernel with 4-way accumulator splitting. Both were tuned in
+//! the §Perf pass (see EXPERIMENTS.md) — on this CPU they reach several
+//! GFLOP/s single-threaded, which the parallel driver in
+//! `par_matmul` scales across cores with `std::thread`.
+
+use super::Tensor;
+
+/// C = A · B.
+pub fn matmul(a: &Tensor, b: &Tensor) -> Tensor {
+    let (m, k) = (a.rows(), a.cols());
+    let (k2, n) = (b.rows(), b.cols());
+    assert_eq!(k, k2, "matmul: {:?} x {:?}", a.shape, b.shape);
+    let mut c = Tensor::zeros(&[m, n]);
+    matmul_into(&a.data, &b.data, &mut c.data, m, k, n);
+    c
+}
+
+/// Raw i-k-j kernel writing into `c` (must be zeroed by caller).
+pub fn matmul_into(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: usize) {
+    for i in 0..m {
+        let arow = &a[i * k..(i + 1) * k];
+        let crow = &mut c[i * n..(i + 1) * n];
+        for (kk, &aik) in arow.iter().enumerate() {
+            if aik == 0.0 {
+                continue; // sparse-friendly: pruned weights skip work
+            }
+            let brow = &b[kk * n..(kk + 1) * n];
+            // 8-wide unrolled axpy: crow += aik * brow.
+            let chunks = n / 8;
+            for c8 in 0..chunks {
+                let o = c8 * 8;
+                crow[o] += aik * brow[o];
+                crow[o + 1] += aik * brow[o + 1];
+                crow[o + 2] += aik * brow[o + 2];
+                crow[o + 3] += aik * brow[o + 3];
+                crow[o + 4] += aik * brow[o + 4];
+                crow[o + 5] += aik * brow[o + 5];
+                crow[o + 6] += aik * brow[o + 6];
+                crow[o + 7] += aik * brow[o + 7];
+            }
+            for o in chunks * 8..n {
+                crow[o] += aik * brow[o];
+            }
+        }
+    }
+}
+
+/// C = A · Bᵀ  (B given as [n, k]).
+pub fn matmul_bt(a: &Tensor, b: &Tensor) -> Tensor {
+    let (m, k) = (a.rows(), a.cols());
+    let (n, k2) = (b.rows(), b.cols());
+    assert_eq!(k, k2, "matmul_bt: {:?} x {:?}^T", a.shape, b.shape);
+    let mut c = Tensor::zeros(&[m, n]);
+    for i in 0..m {
+        let arow = &a.data[i * k..(i + 1) * k];
+        for j in 0..n {
+            let brow = &b.data[j * k..(j + 1) * k];
+            c.data[i * n + j] = dot(arow, brow);
+        }
+    }
+    c
+}
+
+/// C = Aᵀ · B  (A given as [m, k], B as [m, n]; result [k, n]).
+pub fn matmul_at(a: &Tensor, b: &Tensor) -> Tensor {
+    let (m, k) = (a.rows(), a.cols());
+    let (m2, n) = (b.rows(), b.cols());
+    assert_eq!(m, m2, "matmul_at: {:?}^T x {:?}", a.shape, b.shape);
+    let mut c = Tensor::zeros(&[k, n]);
+    // Accumulate rank-1 updates row by row: C += a_row^T * b_row.
+    for r in 0..m {
+        let arow = &a.data[r * k..(r + 1) * k];
+        let brow = &b.data[r * n..(r + 1) * n];
+        for (kk, &av) in arow.iter().enumerate() {
+            if av == 0.0 {
+                continue;
+            }
+            let crow = &mut c.data[kk * n..(kk + 1) * n];
+            for (cv, &bv) in crow.iter_mut().zip(brow) {
+                *cv += av * bv;
+            }
+        }
+    }
+    c
+}
+
+/// Dot product with 4-way accumulator splitting (keeps FP pipelines full).
+#[inline]
+pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let chunks = a.len() / 4;
+    let (mut s0, mut s1, mut s2, mut s3) = (0.0f32, 0.0f32, 0.0f32, 0.0f32);
+    for c in 0..chunks {
+        let o = c * 4;
+        s0 += a[o] * b[o];
+        s1 += a[o + 1] * b[o + 1];
+        s2 += a[o + 2] * b[o + 2];
+        s3 += a[o + 3] * b[o + 3];
+    }
+    let mut s = s0 + s1 + s2 + s3;
+    for o in chunks * 4..a.len() {
+        s += a[o] * b[o];
+    }
+    s
+}
+
+/// Multi-threaded matmul: splits A's rows across `threads` OS threads.
+/// Used by the trainer when matrices are large enough to amortize spawn
+/// cost (crossover measured in the §Perf pass at roughly 64k output
+/// elements).
+pub fn par_matmul(a: &Tensor, b: &Tensor, threads: usize) -> Tensor {
+    let (m, k) = (a.rows(), a.cols());
+    let (k2, n) = (b.rows(), b.cols());
+    assert_eq!(k, k2, "par_matmul: {:?} x {:?}", a.shape, b.shape);
+    if threads <= 1 || m * n < 65_536 {
+        return matmul(a, b);
+    }
+    let mut c = Tensor::zeros(&[m, n]);
+    let rows_per = m.div_ceil(threads);
+    let a_data = &a.data;
+    let b_data = &b.data;
+    std::thread::scope(|scope| {
+        let mut out_chunks = c.data.chunks_mut(rows_per * n);
+        let mut handles = Vec::new();
+        for t in 0..threads {
+            let lo = t * rows_per;
+            if lo >= m {
+                break;
+            }
+            let hi = ((t + 1) * rows_per).min(m);
+            let chunk = out_chunks.next().unwrap();
+            handles.push(scope.spawn(move || {
+                matmul_into(&a_data[lo * k..hi * k], b_data, chunk, hi - lo, k, n);
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+    });
+    c
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    /// Naive O(mnk) reference.
+    fn naive(a: &Tensor, b: &Tensor) -> Tensor {
+        let (m, k, n) = (a.rows(), a.cols(), b.cols());
+        let mut c = Tensor::zeros(&[m, n]);
+        for i in 0..m {
+            for j in 0..n {
+                let mut s = 0.0;
+                for kk in 0..k {
+                    s += a.at2(i, kk) * b.at2(kk, j);
+                }
+                c.set2(i, j, s);
+            }
+        }
+        c
+    }
+
+    fn assert_close(a: &Tensor, b: &Tensor, tol: f32) {
+        assert_eq!(a.shape, b.shape);
+        for (x, y) in a.data.iter().zip(&b.data) {
+            assert!((x - y).abs() <= tol * (1.0 + x.abs()), "{x} vs {y}");
+        }
+    }
+
+    #[test]
+    fn matmul_matches_naive() {
+        let mut rng = Rng::new(2);
+        for &(m, k, n) in &[(1, 1, 1), (3, 5, 7), (17, 33, 9), (64, 64, 64)] {
+            let a = Tensor::randn(&[m, k], 1.0, &mut rng);
+            let b = Tensor::randn(&[k, n], 1.0, &mut rng);
+            assert_close(&matmul(&a, &b), &naive(&a, &b), 1e-4);
+        }
+    }
+
+    #[test]
+    fn matmul_bt_matches_transpose() {
+        let mut rng = Rng::new(3);
+        let a = Tensor::randn(&[13, 21], 1.0, &mut rng);
+        let b = Tensor::randn(&[8, 21], 1.0, &mut rng);
+        assert_close(&matmul_bt(&a, &b), &matmul(&a, &b.transpose()), 1e-4);
+    }
+
+    #[test]
+    fn matmul_at_matches_transpose() {
+        let mut rng = Rng::new(4);
+        let a = Tensor::randn(&[19, 11], 1.0, &mut rng);
+        let b = Tensor::randn(&[19, 6], 1.0, &mut rng);
+        assert_close(&matmul_at(&a, &b), &matmul(&a.transpose(), &b), 1e-4);
+    }
+
+    #[test]
+    fn par_matmul_matches_serial() {
+        let mut rng = Rng::new(5);
+        let a = Tensor::randn(&[200, 300], 1.0, &mut rng);
+        let b = Tensor::randn(&[300, 400], 1.0, &mut rng);
+        let serial = matmul(&a, &b);
+        for threads in [2, 3, 8] {
+            assert_close(&par_matmul(&a, &b, threads), &serial, 1e-5);
+        }
+    }
+
+    #[test]
+    fn identity_is_neutral() {
+        let mut rng = Rng::new(6);
+        let a = Tensor::randn(&[9, 9], 1.0, &mut rng);
+        let mut id = Tensor::zeros(&[9, 9]);
+        for i in 0..9 {
+            id.set2(i, i, 1.0);
+        }
+        assert_close(&matmul(&a, &id), &a, 1e-6);
+        assert_close(&matmul(&id, &a), &a, 1e-6);
+    }
+
+    #[test]
+    fn dot_handles_remainders() {
+        let a: Vec<f32> = (0..7).map(|i| i as f32).collect();
+        let b: Vec<f32> = (0..7).map(|i| (i * 2) as f32).collect();
+        let expect: f32 = a.iter().zip(&b).map(|(x, y)| x * y).sum();
+        assert_eq!(dot(&a, &b), expect);
+    }
+
+    #[test]
+    #[should_panic(expected = "matmul")]
+    fn dimension_mismatch_panics() {
+        let a = Tensor::zeros(&[2, 3]);
+        let b = Tensor::zeros(&[4, 2]);
+        let _ = matmul(&a, &b);
+    }
+}

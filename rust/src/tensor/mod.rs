@@ -1,0 +1,406 @@
+//! A compact f32 tensor library: the numeric substrate of the native
+//! Layer-3 training engine.
+//!
+//! Row-major, owned storage, explicit shapes. The matmul family is the
+//! trainer's hot path — see `matmul` for the blocked kernel and
+//! `benches/perf_hotpath.rs` for its measured throughput. Everything else
+//! is straightforward loops the compiler autovectorizes.
+
+pub mod linalg;
+
+use crate::util::Rng;
+use std::fmt;
+
+/// Dense f32 tensor, row-major.
+#[derive(Clone, PartialEq)]
+pub struct Tensor {
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl fmt::Debug for Tensor {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "Tensor{:?} [{} elems, first={:?}]",
+            self.shape,
+            self.data.len(),
+            &self.data[..self.data.len().min(4)]
+        )
+    }
+}
+
+impl Tensor {
+    // ------------------------------------------------------- constructors
+
+    pub fn zeros(shape: &[usize]) -> Tensor {
+        let n: usize = shape.iter().product();
+        Tensor {
+            shape: shape.to_vec(),
+            data: vec![0.0; n],
+        }
+    }
+
+    pub fn full(shape: &[usize], v: f32) -> Tensor {
+        let n: usize = shape.iter().product();
+        Tensor {
+            shape: shape.to_vec(),
+            data: vec![v; n],
+        }
+    }
+
+    pub fn from_vec(shape: &[usize], data: Vec<f32>) -> Tensor {
+        assert_eq!(
+            shape.iter().product::<usize>(),
+            data.len(),
+            "from_vec: shape {shape:?} != data len {}",
+            data.len()
+        );
+        Tensor {
+            shape: shape.to_vec(),
+            data,
+        }
+    }
+
+    /// Standard-normal init scaled by `std`.
+    pub fn randn(shape: &[usize], std: f32, rng: &mut Rng) -> Tensor {
+        let n: usize = shape.iter().product();
+        let data = (0..n).map(|_| rng.normal_f32(0.0, std)).collect();
+        Tensor {
+            shape: shape.to_vec(),
+            data,
+        }
+    }
+
+    /// Uniform init in [lo, hi).
+    pub fn rand_uniform(shape: &[usize], lo: f32, hi: f32, rng: &mut Rng) -> Tensor {
+        let n: usize = shape.iter().product();
+        let data = (0..n).map(|_| rng.uniform_in(lo, hi)).collect();
+        Tensor {
+            shape: shape.to_vec(),
+            data,
+        }
+    }
+
+    // ------------------------------------------------------------- shape
+
+    pub fn numel(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn rows(&self) -> usize {
+        assert_eq!(self.shape.len(), 2, "rows() on non-2D {:?}", self.shape);
+        self.shape[0]
+    }
+
+    pub fn cols(&self) -> usize {
+        assert_eq!(self.shape.len(), 2, "cols() on non-2D {:?}", self.shape);
+        self.shape[1]
+    }
+
+    pub fn reshape(mut self, shape: &[usize]) -> Tensor {
+        assert_eq!(
+            shape.iter().product::<usize>(),
+            self.data.len(),
+            "reshape {:?} -> {shape:?}",
+            self.shape
+        );
+        self.shape = shape.to_vec();
+        self
+    }
+
+    pub fn at2(&self, i: usize, j: usize) -> f32 {
+        self.data[i * self.shape[1] + j]
+    }
+
+    pub fn set2(&mut self, i: usize, j: usize, v: f32) {
+        self.data[i * self.shape[1] + j] = v;
+    }
+
+    /// Row slice of a 2D tensor.
+    pub fn row(&self, i: usize) -> &[f32] {
+        let c = self.cols();
+        &self.data[i * c..(i + 1) * c]
+    }
+
+    pub fn row_mut(&mut self, i: usize) -> &mut [f32] {
+        let c = self.cols();
+        &mut self.data[i * c..(i + 1) * c]
+    }
+
+    /// 2D transpose (copies).
+    pub fn transpose(&self) -> Tensor {
+        let (m, n) = (self.rows(), self.cols());
+        let mut out = Tensor::zeros(&[n, m]);
+        // Blocked transpose for cache friendliness on large matrices.
+        const B: usize = 32;
+        for ib in (0..m).step_by(B) {
+            for jb in (0..n).step_by(B) {
+                for i in ib..(ib + B).min(m) {
+                    for j in jb..(jb + B).min(n) {
+                        out.data[j * m + i] = self.data[i * n + j];
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    // ------------------------------------------------- elementwise ops
+
+    pub fn add(&self, other: &Tensor) -> Tensor {
+        assert_eq!(self.shape, other.shape, "add shape mismatch");
+        let data = self
+            .data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| a + b)
+            .collect();
+        Tensor {
+            shape: self.shape.clone(),
+            data,
+        }
+    }
+
+    pub fn sub(&self, other: &Tensor) -> Tensor {
+        assert_eq!(self.shape, other.shape, "sub shape mismatch");
+        let data = self
+            .data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| a - b)
+            .collect();
+        Tensor {
+            shape: self.shape.clone(),
+            data,
+        }
+    }
+
+    pub fn mul(&self, other: &Tensor) -> Tensor {
+        assert_eq!(self.shape, other.shape, "mul shape mismatch");
+        let data = self
+            .data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| a * b)
+            .collect();
+        Tensor {
+            shape: self.shape.clone(),
+            data,
+        }
+    }
+
+    pub fn scale(&self, s: f32) -> Tensor {
+        Tensor {
+            shape: self.shape.clone(),
+            data: self.data.iter().map(|a| a * s).collect(),
+        }
+    }
+
+    /// In-place `self += alpha * other`.
+    pub fn axpy(&mut self, alpha: f32, other: &Tensor) {
+        assert_eq!(self.shape, other.shape, "axpy shape mismatch");
+        for (a, b) in self.data.iter_mut().zip(&other.data) {
+            *a += alpha * b;
+        }
+    }
+
+    /// Broadcast-add a vector along the last dimension.
+    pub fn add_bias(&self, bias: &[f32]) -> Tensor {
+        let d = *self.shape.last().unwrap();
+        assert_eq!(bias.len(), d, "bias len mismatch");
+        let mut out = self.clone();
+        for chunk in out.data.chunks_mut(d) {
+            for (x, b) in chunk.iter_mut().zip(bias) {
+                *x += b;
+            }
+        }
+        out
+    }
+
+    pub fn sum(&self) -> f32 {
+        self.data.iter().sum()
+    }
+
+    /// Sum over rows → vector of length cols (for bias gradients).
+    pub fn sum_rows(&self) -> Vec<f32> {
+        let d = *self.shape.last().unwrap();
+        let mut out = vec![0.0; d];
+        for chunk in self.data.chunks(d) {
+            for (o, x) in out.iter_mut().zip(chunk) {
+                *o += x;
+            }
+        }
+        out
+    }
+
+    pub fn frob_norm(&self) -> f32 {
+        self.data.iter().map(|x| x * x).sum::<f32>().sqrt()
+    }
+
+    /// Max |x|.
+    pub fn max_abs(&self) -> f32 {
+        self.data.iter().fold(0.0f32, |m, &x| m.max(x.abs()))
+    }
+
+    // ------------------------------------------------------- activations
+
+    /// GELU (tanh approximation — matches the python side's jax.nn.gelu
+    /// default closely enough for parity tests at 1e-4).
+    pub fn gelu(&self) -> Tensor {
+        let data = self.data.iter().map(|&x| gelu_scalar(x)).collect();
+        Tensor {
+            shape: self.shape.clone(),
+            data,
+        }
+    }
+
+    /// d/dx GELU(x), evaluated pointwise; used by backprop.
+    pub fn gelu_grad(&self) -> Tensor {
+        let data = self.data.iter().map(|&x| gelu_grad_scalar(x)).collect();
+        Tensor {
+            shape: self.shape.clone(),
+            data,
+        }
+    }
+
+    /// Row-wise (last-dim) softmax, numerically stabilized.
+    pub fn softmax_rows(&self) -> Tensor {
+        let d = *self.shape.last().unwrap();
+        let mut out = self.clone();
+        for chunk in out.data.chunks_mut(d) {
+            let mx = chunk.iter().fold(f32::NEG_INFINITY, |m, &x| m.max(x));
+            let mut denom = 0.0;
+            for x in chunk.iter_mut() {
+                *x = (*x - mx).exp();
+                denom += *x;
+            }
+            for x in chunk.iter_mut() {
+                *x /= denom;
+            }
+        }
+        out
+    }
+
+    /// Row-wise argmax of a 2D tensor.
+    pub fn argmax_rows(&self) -> Vec<usize> {
+        (0..self.rows())
+            .map(|i| {
+                let r = self.row(i);
+                let mut best = 0;
+                for (j, &x) in r.iter().enumerate() {
+                    if x > r[best] {
+                        best = j;
+                    }
+                }
+                best
+            })
+            .collect()
+    }
+}
+
+pub fn gelu_scalar(x: f32) -> f32 {
+    const C: f32 = 0.7978845608; // sqrt(2/pi)
+    0.5 * x * (1.0 + (C * (x + 0.044715 * x * x * x)).tanh())
+}
+
+pub fn gelu_grad_scalar(x: f32) -> f32 {
+    const C: f32 = 0.7978845608;
+    let x3 = x * x * x;
+    let inner = C * (x + 0.044715 * x3);
+    let t = inner.tanh();
+    let sech2 = 1.0 - t * t;
+    0.5 * (1.0 + t) + 0.5 * x * sech2 * C * (1.0 + 3.0 * 0.044715 * x * x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn construct_and_index() {
+        let t = Tensor::from_vec(&[2, 3], vec![1., 2., 3., 4., 5., 6.]);
+        assert_eq!(t.at2(0, 2), 3.0);
+        assert_eq!(t.at2(1, 0), 4.0);
+        assert_eq!(t.row(1), &[4., 5., 6.]);
+    }
+
+    #[test]
+    fn transpose_round_trip() {
+        let mut rng = Rng::new(1);
+        let t = Tensor::randn(&[37, 53], 1.0, &mut rng);
+        let tt = t.transpose().transpose();
+        assert_eq!(t, tt);
+        let tr = t.transpose();
+        assert_eq!(tr.at2(5, 7), t.at2(7, 5));
+    }
+
+    #[test]
+    fn elementwise_algebra() {
+        let a = Tensor::from_vec(&[2, 2], vec![1., 2., 3., 4.]);
+        let b = Tensor::from_vec(&[2, 2], vec![4., 3., 2., 1.]);
+        assert_eq!(a.add(&b).data, vec![5., 5., 5., 5.]);
+        assert_eq!(a.sub(&b).data, vec![-3., -1., 1., 3.]);
+        assert_eq!(a.mul(&b).data, vec![4., 6., 6., 4.]);
+        assert_eq!(a.scale(2.0).data, vec![2., 4., 6., 8.]);
+        let mut c = a.clone();
+        c.axpy(0.5, &b);
+        assert_eq!(c.data, vec![3., 3.5, 4., 4.5]);
+    }
+
+    #[test]
+    fn bias_and_sums() {
+        let a = Tensor::from_vec(&[2, 3], vec![1., 2., 3., 4., 5., 6.]);
+        let ab = a.add_bias(&[10., 20., 30.]);
+        assert_eq!(ab.data, vec![11., 22., 33., 14., 25., 36.]);
+        assert_eq!(a.sum_rows(), vec![5., 7., 9.]);
+        assert_eq!(a.sum(), 21.0);
+    }
+
+    #[test]
+    fn softmax_rows_sums_to_one() {
+        let a = Tensor::from_vec(&[2, 3], vec![1., 2., 3., 1000., 1000., 1000.]);
+        let s = a.softmax_rows();
+        for i in 0..2 {
+            let rowsum: f32 = s.row(i).iter().sum();
+            assert!((rowsum - 1.0).abs() < 1e-6);
+        }
+        // Large inputs don't overflow (stabilized).
+        assert!((s.at2(1, 0) - 1.0 / 3.0).abs() < 1e-6);
+        // Monotone in the logits.
+        assert!(s.at2(0, 2) > s.at2(0, 1) && s.at2(0, 1) > s.at2(0, 0));
+    }
+
+    #[test]
+    fn gelu_matches_reference_points() {
+        // Reference values from jax.nn.gelu (approximate=True).
+        assert!((gelu_scalar(0.0) - 0.0).abs() < 1e-6);
+        assert!((gelu_scalar(1.0) - 0.841192).abs() < 1e-4);
+        assert!((gelu_scalar(-1.0) + 0.158808).abs() < 1e-4);
+        assert!((gelu_scalar(3.0) - 2.996363).abs() < 1e-4);
+    }
+
+    #[test]
+    fn gelu_grad_finite_difference() {
+        for &x in &[-2.0f32, -0.5, 0.0, 0.3, 1.7] {
+            let eps = 1e-3;
+            let fd = (gelu_scalar(x + eps) - gelu_scalar(x - eps)) / (2.0 * eps);
+            let an = gelu_grad_scalar(x);
+            assert!((fd - an).abs() < 1e-3, "x={x} fd={fd} an={an}");
+        }
+    }
+
+    #[test]
+    fn argmax_rows_picks_max() {
+        let a = Tensor::from_vec(&[2, 3], vec![0.1, 0.9, 0.2, 5.0, -1.0, 4.9]);
+        assert_eq!(a.argmax_rows(), vec![1, 0]);
+    }
+
+    #[test]
+    #[should_panic(expected = "shape mismatch")]
+    fn mismatched_add_panics() {
+        let a = Tensor::zeros(&[2, 3]);
+        let b = Tensor::zeros(&[3, 2]);
+        let _ = a.add(&b);
+    }
+}

@@ -1,0 +1,493 @@
+//! Every method the paper's tables compare, behind one dispatcher.
+//!
+//! | Paper row | [`Method`] variant |
+//! |---|---|
+//! | Fine-tune | `FullFinetune` |
+//! | LoRA (Hu et al. 2021) | `Lora { rank }` |
+//! | DSEE (all variants: UV+S₂, 50%, 25%*, 33%*) | `Dsee(DseeCfg)` |
+//! | OMP | `Omp { sparsity }` |
+//! | BERT Tickets / W⊙S₁ (Table 6) | `PruneThenFt { sparsity, global }` |
+//! | EarlyBERT (Chen et al. 2021) | `EarlyBert { head_frac, ffn_frac }` |
+//! | Adapters (Houlsby et al. 2019) | `Adapters { bottleneck }` |
+//! | FT-Top2 | `FtTop2` |
+//! | Prefix (Li & Liang 2021) | `Prefix { n }` |
+//!
+//! `run_glue` / `run_generation` execute the full pipeline for one
+//! (method, task) cell: pre-trained weights → setup → phase-I training →
+//! (optional) pruning → recovery tuning → evaluation, i.e. Alg. 2.
+
+use super::pretrain::{cached_encoder, cached_lm};
+use super::trainer::Trainer;
+use super::RunResult;
+use crate::config::{DseeCfg, ModelCfg, TrainCfg};
+use crate::data::datatotext::{self, GenTask};
+use crate::data::glue::{self, GlueTask};
+use crate::dsee::magnitude_prune::{magnitude_prune_global, magnitude_prune_layerwise};
+use crate::dsee::structured::{enable_gate_training, prune_ffn, prune_heads};
+use crate::dsee::{attach_dsee, attach_lora};
+use crate::nn::adapter::Adapter;
+use crate::nn::{Prefix as PrefixVecs, Transformer};
+use crate::tensor::Tensor;
+use crate::util::Rng;
+use std::collections::BTreeMap;
+use std::time::Instant;
+
+/// Fine-tuning method (see module docs for the paper mapping).
+#[derive(Clone, Debug)]
+pub enum Method {
+    FullFinetune,
+    Lora { rank: usize },
+    Dsee(DseeCfg),
+    Omp { sparsity: f64 },
+    PruneThenFt { sparsity: f64, global: bool },
+    Adapters { bottleneck: usize },
+    FtTop2,
+    Prefix { n: usize },
+    EarlyBert { head_frac: f64, ffn_frac: f64 },
+}
+
+impl Method {
+    pub fn name(&self) -> String {
+        match self {
+            Method::FullFinetune => "Fine-tune".into(),
+            Method::Lora { rank } => format!("LoRA(r={rank})"),
+            Method::Dsee(cfg) => {
+                let mut s = format!("DSEE(r={},N={}", cfg.rank, cfg.n_sparse);
+                if cfg.unstructured_sparsity > 0.0 {
+                    s += &format!(",s={:.0}%", cfg.unstructured_sparsity * 100.0);
+                }
+                if cfg.structured_head_frac > 0.0 {
+                    s += &format!(",h={:.0}%*", cfg.structured_head_frac * 100.0);
+                }
+                if cfg.omega_method != "decompose" {
+                    s += &format!(",Ω={}", cfg.omega_method);
+                }
+                s + ")"
+            }
+            Method::Omp { sparsity } => format!("OMP({:.0}%)", sparsity * 100.0),
+            Method::PruneThenFt { sparsity, global } => {
+                format!(
+                    "{}({:.0}%)",
+                    if *global { "W⊙S1" } else { "Tickets" },
+                    sparsity * 100.0
+                )
+            }
+            Method::Adapters { bottleneck } => format!("Adapters(b={bottleneck})"),
+            Method::FtTop2 => "FT-Top2".into(),
+            Method::Prefix { n } => format!("Prefix(n={n})"),
+            Method::EarlyBert { head_frac, .. } => {
+                format!("EarlyBERT({:.0}%*)", head_frac * 100.0)
+            }
+        }
+    }
+
+    /// "Sparsity in Pretrained Weights" column (paper convention:
+    /// `*` marks structured).
+    pub fn sparsity_desc(&self) -> String {
+        match self {
+            Method::Dsee(cfg) if cfg.structured_head_frac > 0.0 => {
+                format!("{:.0}%*", cfg.structured_head_frac * 100.0)
+            }
+            Method::Dsee(cfg) if cfg.unstructured_sparsity > 0.0 => {
+                format!("{:.0}%", cfg.unstructured_sparsity * 100.0)
+            }
+            Method::Omp { sparsity } | Method::PruneThenFt { sparsity, .. } => {
+                format!("{:.0}%", sparsity * 100.0)
+            }
+            Method::EarlyBert { head_frac, .. } => format!("{:.0}%*", head_frac * 100.0),
+            _ => "0%".into(),
+        }
+    }
+}
+
+impl Method {
+    /// Learning-rate scale relative to `TrainCfg::lr` — the paper's
+    /// Table A7 uses ~20× smaller LRs for methods that update the full
+    /// pre-trained weights (5e-5) than for adapter-style methods (1e-3).
+    pub fn lr_scale(&self) -> f32 {
+        match self {
+            Method::FullFinetune
+            | Method::Omp { .. }
+            | Method::PruneThenFt { .. }
+            | Method::FtTop2
+            | Method::EarlyBert { .. } => 0.3,
+            _ => 1.0,
+        }
+    }
+}
+
+/// Freeze everything except the top-2 blocks + head (FT-Top2).
+fn freeze_except_top2(model: &mut Transformer) {
+    let n = model.blocks.len();
+    model.freeze_base();
+    for (i, blk) in model.blocks.iter_mut().enumerate() {
+        if i + 2 >= n {
+            blk.ln1.trainable = true;
+            blk.ln2.trainable = true;
+            for lin in [
+                &mut blk.attn.wq,
+                &mut blk.attn.wk,
+                &mut blk.attn.wv,
+                &mut blk.attn.wo,
+                &mut blk.ffn.fc1,
+                &mut blk.ffn.fc2,
+            ] {
+                lin.train_base = true;
+            }
+        }
+    }
+}
+
+/// Insert Houlsby adapters into every block and freeze the base.
+fn insert_adapters(model: &mut Transformer, bottleneck: usize, rng: &mut Rng) {
+    let d = model.cfg.d_model;
+    for blk in &mut model.blocks {
+        blk.adapter1 = Some(Adapter::new(d, bottleneck, rng));
+        blk.adapter2 = Some(Adapter::new(d, bottleneck, rng));
+    }
+    model.freeze_base();
+}
+
+/// Attach trainable prefix vectors and freeze the base.
+fn attach_prefix(model: &mut Transformer, n: usize, rng: &mut Rng) {
+    let d = model.cfg.d_model;
+    model.prefix = Some(PrefixVecs {
+        vecs: Tensor::randn(&[n, d], 0.1, rng),
+        grad: Tensor::zeros(&[n, d]),
+    });
+    model.freeze_base();
+}
+
+/// Per-method setup. Returns whether a pruning step runs after phase I,
+/// as (unstructured sparsity, structured head frac, structured ffn frac).
+fn setup(
+    method: &Method,
+    model: &mut Transformer,
+    trainer_gate_l1: &mut bool,
+    rng: &mut Rng,
+) -> (f64, f64, f64) {
+    match method {
+        Method::FullFinetune => (0.0, 0.0, 0.0),
+        Method::Lora { rank } => {
+            attach_lora(model, *rank, rng);
+            (0.0, 0.0, 0.0)
+        }
+        Method::Dsee(cfg) => {
+            attach_dsee(model, cfg, rng);
+            if cfg.structured_head_frac > 0.0 {
+                enable_gate_training(model);
+                *trainer_gate_l1 = true;
+            }
+            (
+                cfg.unstructured_sparsity,
+                cfg.structured_head_frac,
+                cfg.structured_ffn_frac,
+            )
+        }
+        Method::Omp { sparsity } => (*sparsity, 0.0, 0.0),
+        Method::PruneThenFt { sparsity, global } => {
+            // Prune the *pre-trained* weights up front, then fine-tune.
+            let mut lins = model.all_linears_mut();
+            if *global {
+                magnitude_prune_global(&mut lins, *sparsity);
+            } else {
+                magnitude_prune_layerwise(&mut lins, *sparsity);
+            }
+            (0.0, 0.0, 0.0)
+        }
+        Method::Adapters { bottleneck } => {
+            insert_adapters(model, *bottleneck, rng);
+            (0.0, 0.0, 0.0)
+        }
+        Method::FtTop2 => {
+            freeze_except_top2(model);
+            (0.0, 0.0, 0.0)
+        }
+        Method::Prefix { n } => {
+            attach_prefix(model, *n, rng);
+            (0.0, 0.0, 0.0)
+        }
+        Method::EarlyBert { head_frac, ffn_frac } => {
+            enable_gate_training(model);
+            *trainer_gate_l1 = true;
+            (0.0, *head_frac, *ffn_frac)
+        }
+    }
+}
+
+/// Prune according to the setup result; returns the sparsity label.
+fn prune_phase(
+    trainer: &mut Trainer,
+    unstructured: f64,
+    head_frac: f64,
+    ffn_frac: f64,
+) -> bool {
+    let mut pruned = false;
+    if unstructured > 0.0 {
+        let mut lins = trainer.model.all_linears_mut();
+        magnitude_prune_global(&mut lins, unstructured);
+        pruned = true;
+    }
+    if head_frac > 0.0 {
+        prune_heads(&mut trainer.model, head_frac);
+        if ffn_frac > 0.0 {
+            prune_ffn(&mut trainer.model, ffn_frac);
+        }
+        trainer.gate_l1 = false;
+        pruned = true;
+    }
+    pruned
+}
+
+/// Run one (method, GLUE task) cell end to end.
+pub fn run_glue(
+    method: &Method,
+    task: GlueTask,
+    arch: &ModelCfg,
+    cfg: &TrainCfg,
+    seed: u64,
+) -> RunResult {
+    let t0 = Instant::now();
+    let mut rng = Rng::new(seed ^ 0x61_u64);
+    let mut model = cached_encoder(arch, 0xBA5E);
+    Trainer::set_task_head(&mut model, task.is_regression(), task.n_classes().max(1), &mut rng);
+    let mut gate_l1 = false;
+    let (unstr, hfrac, ffrac) = setup(method, &mut model, &mut gate_l1, &mut rng);
+
+    let trainable = model.count_trainable();
+    let total = model.count_total();
+
+    let mut cfg = cfg.clone();
+    cfg.lr *= method.lr_scale();
+    cfg.lr_after_prune *= method.lr_scale();
+    let mut trainer = Trainer::new(model, cfg.clone());
+    trainer.gate_l1 = gate_l1;
+    let (train_ds, eval_ds) = glue::train_eval(task, seed);
+
+    let mut losses = trainer.train_classification(&train_ds, cfg.epochs_before);
+    let pruned = prune_phase(&mut trainer, unstr, hfrac, ffrac);
+    if pruned {
+        trainer.reset_optimizer(cfg.lr_after_prune);
+        losses.extend(trainer.train_classification(&train_ds, cfg.epochs_after));
+    }
+
+    let score = trainer.evaluate_classification(&eval_ds);
+    let mut metrics = BTreeMap::new();
+    metrics.insert(task.metric().to_string(), score);
+    RunResult {
+        method: method.name(),
+        task: task.name().to_string(),
+        trainable_params: trainable,
+        total_params: total,
+        sparsity: method.sparsity_desc(),
+        metrics,
+        losses,
+        seconds: t0.elapsed().as_secs_f64(),
+    }
+}
+
+/// Run one (method, generation task) cell end to end.
+pub fn run_generation(
+    method: &Method,
+    task: GenTask,
+    arch: &ModelCfg,
+    cfg: &TrainCfg,
+    seed: u64,
+) -> RunResult {
+    let t0 = Instant::now();
+    let mut rng = Rng::new(seed ^ 0x6E6);
+    let (train_ds, eval_ds) = datatotext::train_eval(task, seed);
+    let mut arch = arch.clone();
+    arch.max_seq = arch.max_seq.max(train_ds.seq_len).max(eval_ds.seq_len);
+    let mut model = cached_lm(&arch, 0xBA5E);
+    let mut gate_l1 = false;
+    let (unstr, hfrac, ffrac) = setup(method, &mut model, &mut gate_l1, &mut rng);
+    let trainable = model.count_trainable();
+    let total = model.count_total();
+
+    let mut cfg = cfg.clone();
+    cfg.lr *= method.lr_scale();
+    cfg.lr_after_prune *= method.lr_scale();
+    let mut trainer = Trainer::new(model, cfg.clone());
+    trainer.gate_l1 = gate_l1;
+
+    let mut losses = trainer.train_lm(&train_ds, cfg.epochs_before);
+    let pruned = prune_phase(&mut trainer, unstr, hfrac, ffrac);
+    if pruned {
+        trainer.reset_optimizer(cfg.lr_after_prune);
+        losses.extend(trainer.train_lm(&train_ds, cfg.epochs_after));
+    }
+
+    let metrics = trainer.evaluate_generation(&eval_ds);
+    RunResult {
+        method: method.name(),
+        task: task.name().to_string(),
+        trainable_params: trainable,
+        total_params: total,
+        sparsity: method.sparsity_desc(),
+        metrics,
+        losses,
+        seconds: t0.elapsed().as_secs_f64(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn quick_cfg() -> TrainCfg {
+        TrainCfg {
+            batch: 16,
+            epochs_before: 2,
+            epochs_after: 1,
+            ..TrainCfg::default()
+        }
+    }
+
+    #[test]
+    fn dsee_beats_chance_and_freezes_base() {
+        let arch = ModelCfg::sim_bert_s();
+        let m = Method::Dsee(DseeCfg {
+            rank: 4,
+            n_sparse: 16,
+            ..DseeCfg::default()
+        });
+        let r = run_glue(&m, GlueTask::Sst2, &arch, &quick_cfg(), 1);
+        assert!(r.metric("acc") > 0.65, "acc {}", r.metric("acc"));
+        assert!(r.trainable_params < r.total_params / 10);
+        assert_eq!(r.sparsity, "0%");
+    }
+
+    #[test]
+    fn unstructured_dsee_reports_sparsity() {
+        let arch = ModelCfg::sim_bert_s();
+        let m = Method::Dsee(DseeCfg {
+            rank: 4,
+            n_sparse: 16,
+            unstructured_sparsity: 0.5,
+            ..DseeCfg::default()
+        });
+        let r = run_glue(&m, GlueTask::Sst2, &arch, &quick_cfg(), 2);
+        assert_eq!(r.sparsity, "50%");
+        assert!(r.metric("acc") > 0.6, "acc {}", r.metric("acc"));
+    }
+
+    #[test]
+    fn structured_dsee_prunes_and_recovers() {
+        let arch = ModelCfg::sim_bert_s();
+        let m = Method::Dsee(DseeCfg {
+            rank: 4,
+            n_sparse: 16,
+            structured_head_frac: 0.25,
+            structured_ffn_frac: 0.4,
+            ..DseeCfg::default()
+        });
+        let r = run_glue(&m, GlueTask::Sst2, &arch, &quick_cfg(), 3);
+        assert_eq!(r.sparsity, "25%*");
+        assert!(r.metric("acc") > 0.6, "acc {}", r.metric("acc"));
+    }
+
+    #[test]
+    fn all_baselines_run_on_sst2() {
+        let arch = ModelCfg::sim_bert_s();
+        let cfg = TrainCfg {
+            batch: 16,
+            epochs_before: 1,
+            epochs_after: 1,
+            ..TrainCfg::default()
+        };
+        let methods = [
+            Method::FullFinetune,
+            Method::Lora { rank: 4 },
+            Method::Omp { sparsity: 0.5 },
+            Method::PruneThenFt {
+                sparsity: 0.5,
+                global: false,
+            },
+            Method::Adapters { bottleneck: 8 },
+            Method::FtTop2,
+            Method::Prefix { n: 4 },
+            Method::EarlyBert {
+                head_frac: 0.25,
+                ffn_frac: 0.4,
+            },
+        ];
+        for m in methods {
+            let r = run_glue(&m, GlueTask::Sst2, &arch, &cfg, 4);
+            assert!(
+                r.metric("acc") > 0.45,
+                "{}: acc {} (near-chance)",
+                r.method,
+                r.metric("acc")
+            );
+            assert!(r.metrics["acc"].is_finite());
+        }
+    }
+
+    #[test]
+    fn parameter_ordering_matches_paper() {
+        // Fine-tune >> FT-Top2 > Adapters > LoRA ≥ DSEE ≈ LoRA > Prefix.
+        let arch = ModelCfg::sim_bert_s();
+        let count = |m: &Method| {
+            let mut rng = Rng::new(0);
+            let mut model = cached_encoder(&arch, 0xBA5E);
+            Trainer::set_task_head(&mut model, false, 2, &mut rng);
+            let mut g = false;
+            setup(m, &mut model, &mut g, &mut rng);
+            model.count_trainable()
+        };
+        let full = count(&Method::FullFinetune);
+        let top2 = count(&Method::FtTop2);
+        let adapters = count(&Method::Adapters { bottleneck: 32 });
+        let lora8 = count(&Method::Lora { rank: 8 });
+        let lora4 = count(&Method::Lora { rank: 4 });
+        let dsee4 = count(&Method::Dsee(DseeCfg {
+            rank: 4,
+            n_sparse: 16,
+            ..DseeCfg::default()
+        }));
+        let prefix = count(&Method::Prefix { n: 4 });
+        assert!(full > top2, "{full} vs {top2}");
+        assert!(top2 > adapters);
+        assert!(adapters > lora8, "{adapters} vs {lora8}");
+        assert!(lora8 > lora4);
+        assert_eq!(dsee4, lora4 + arch.n_layers * 4 * 16);
+        assert!(lora4 > prefix);
+    }
+
+    #[test]
+    fn generation_pipeline_runs_for_dsee() {
+        let arch = ModelCfg::sim_gpt_s();
+        let cfg = TrainCfg {
+            batch: 16,
+            epochs_before: 2,
+            epochs_after: 0,
+            ..TrainCfg::default()
+        };
+        let m = Method::Dsee(DseeCfg {
+            rank: 2,
+            n_sparse: 16,
+            ..DseeCfg::default()
+        });
+        let r = run_generation(&m, GenTask::E2e, &arch, &cfg, 5);
+        assert!(r.metric("bleu") > 3.0, "bleu {}", r.metric("bleu"));
+        assert!(r.metric("ter").is_finite());
+        assert!(r.trainable_params < r.total_params / 5);
+    }
+
+    #[test]
+    fn method_names_and_sparsity_labels() {
+        assert_eq!(Method::FullFinetune.name(), "Fine-tune");
+        assert_eq!(Method::FullFinetune.sparsity_desc(), "0%");
+        let d = Method::Dsee(DseeCfg {
+            rank: 16,
+            n_sparse: 64,
+            structured_head_frac: 0.25,
+            structured_ffn_frac: 0.4,
+            ..DseeCfg::default()
+        });
+        assert_eq!(d.sparsity_desc(), "25%*");
+        assert!(d.name().contains("h=25%*"));
+        assert_eq!(Method::Omp { sparsity: 0.5 }.sparsity_desc(), "50%");
+    }
+}

@@ -1,0 +1,100 @@
+//! The fine-tuning engine: classification/regression/LM training loops,
+//! greedy decoding, the DSEE three-phase schedule (Alg. 2), the
+//! pre-training substrate, and every baseline the paper compares
+//! against.
+
+pub mod baselines;
+pub mod pretrain;
+pub mod trainer;
+
+use crate::util::Json;
+use std::collections::BTreeMap;
+
+/// Outcome of one (method, task) cell — one entry of a paper table.
+#[derive(Clone, Debug)]
+pub struct RunResult {
+    pub method: String,
+    pub task: String,
+    /// Trainable parameters during fine-tuning.
+    pub trainable_params: usize,
+    /// Total model parameters (the denominator).
+    pub total_params: usize,
+    /// "0%", "50%", "25%*" — star = structured, paper convention.
+    pub sparsity: String,
+    /// metric name → value (acc/mcc/pearson or bleu/nist/meteor/ter).
+    pub metrics: BTreeMap<String, f64>,
+    /// Final-phase training losses (loss curves for the e2e driver).
+    pub losses: Vec<f32>,
+    /// Wall-clock seconds spent fine-tuning.
+    pub seconds: f64,
+}
+
+impl RunResult {
+    pub fn metric(&self, name: &str) -> f64 {
+        *self.metrics.get(name).unwrap_or(&f64::NAN)
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("method", Json::str(self.method.clone())),
+            ("task", Json::str(self.task.clone())),
+            ("trainable_params", Json::num(self.trainable_params as f64)),
+            ("total_params", Json::num(self.total_params as f64)),
+            ("sparsity", Json::str(self.sparsity.clone())),
+            (
+                "metrics",
+                Json::Obj(
+                    self.metrics
+                        .iter()
+                        .map(|(k, v)| (k.clone(), Json::num(*v)))
+                        .collect(),
+                ),
+            ),
+            ("seconds", Json::num(self.seconds)),
+        ])
+    }
+}
+
+/// Human-readable parameter count ("592.9K", "110M").
+pub fn fmt_params(n: usize) -> String {
+    if n >= 1_000_000 {
+        format!("{:.2}M", n as f64 / 1e6)
+    } else if n >= 1_000 {
+        format!("{:.1}K", n as f64 / 1e3)
+    } else {
+        format!("{n}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fmt_params_ranges() {
+        assert_eq!(fmt_params(42), "42");
+        assert_eq!(fmt_params(592_900), "592.9K");
+        assert_eq!(fmt_params(110_000_000), "110.00M");
+    }
+
+    #[test]
+    fn run_result_json() {
+        let mut metrics = BTreeMap::new();
+        metrics.insert("acc".to_string(), 0.91);
+        let r = RunResult {
+            method: "dsee".into(),
+            task: "sst2".into(),
+            trainable_params: 1000,
+            total_params: 100000,
+            sparsity: "50%".into(),
+            metrics,
+            losses: vec![],
+            seconds: 1.5,
+        };
+        let j = r.to_json();
+        assert_eq!(j.get("method").as_str(), Some("dsee"));
+        assert_eq!(j.get("metrics").get("acc").as_f64(), Some(0.91));
+        assert!((r.metric("acc") - 0.91).abs() < 1e-12);
+        assert!(r.metric("bleu").is_nan());
+    }
+}

@@ -1,0 +1,277 @@
+//! "Pre-training" substrate: produces the transferable starting weights
+//! every fine-tuning experiment begins from (the role BERT/GPT-2
+//! checkpoints play in the paper — DESIGN.md §3).
+//!
+//! Encoder: dominant-concept classification over the Markov corpus.
+//! Decoder: next-token LM over the same corpus.
+//!
+//! Pre-trained models are cached per (arch-name, seed) in a process-wide
+//! map because every table bench re-uses the same starting point — this
+//! mirrors downloading the same checkpoint once.
+
+use super::trainer::IGNORE;
+use crate::config::ModelCfg;
+use crate::data::corpus::make_corpus;
+use crate::nn::loss::{cross_entropy, lm_cross_entropy};
+use crate::nn::Transformer;
+use crate::optim::{clip_grads, linear_decay, AdamW};
+use crate::util::Rng;
+use std::collections::HashMap;
+use std::sync::Mutex;
+
+static CACHE: Mutex<Option<HashMap<String, Transformer>>> = Mutex::new(None);
+
+fn cache_key(cfg: &ModelCfg, seed: u64) -> String {
+    format!(
+        "{}-{}-{}-{}-{}",
+        cfg.name, cfg.causal, cfg.max_seq, cfg.d_model, seed
+    )
+}
+
+/// MASK token for encoder pre-training (reserved special id).
+pub const MASK_TOKEN: u32 = 7;
+
+/// Pre-train an encoder on a two-task mixture:
+///
+/// * **dominant-group classification** over the Markov corpus (global
+///   composition features), and
+/// * **pair matching**: two SEP-joined halves, label = same underlying
+///   group set or not (the cross-position matching features the
+///   paraphrase/NLI/similarity tasks need).
+///
+/// Together these play the role BERT's MLM+NSP pre-training plays in
+/// the paper: the frozen trunk already carries the features downstream
+/// tasks linearly expose, which is what makes LoRA/DSEE-style
+/// frozen-base fine-tuning competitive with full fine-tuning.
+pub fn pretrain_encoder(cfg: &ModelCfg, seed: u64, steps: usize) -> Transformer {
+    use crate::data::vocab::{group_token, token_group, GROUP_SIZE, N_GROUPS, SEP};
+    let mut arch = cfg.clone();
+    arch.head = "classifier".into();
+    arch.n_classes = crate::data::vocab::N_GROUPS;
+    let mut rng = Rng::new(seed);
+    let mut model = Transformer::new(&arch, &mut rng);
+    let seq = cfg.max_seq.min(24);
+    let corpus = make_corpus(steps * 24, seq, seed ^ 0xABCD);
+    let mut task_rng = Rng::new(seed ^ 0x9A1);
+    let mut opt = AdamW::new(2e-3, 0.01);
+    let bsz = 24usize;
+    for step in 0..steps {
+        let lo = step * bsz;
+        let mut ids = Vec::with_capacity(bsz * seq);
+        let mut targets = Vec::with_capacity(bsz);
+        let matching_batch = step % 2 == 1;
+        for k in 0..bsz {
+            if matching_batch {
+                // Pair-matching: half A from a corpus sequence, half B
+                // either a shuffled same-group rendering (label 1) or an
+                // unrelated sequence (label 0).
+                let src = &corpus.sequences[lo + k];
+                let half = (seq - 1) / 2;
+                let mut row: Vec<u32> = src[..half].to_vec();
+                row.push(SEP);
+                let matched = task_rng.coin(0.5);
+                if matched {
+                    let mut b: Vec<u32> = src[..half]
+                        .iter()
+                        .map(|&t| match token_group(t) {
+                            Some(g) => group_token(g, task_rng.below(GROUP_SIZE)),
+                            None => t,
+                        })
+                        .collect();
+                    task_rng.shuffle(&mut b);
+                    row.extend(b);
+                } else {
+                    let other = &corpus.sequences[task_rng.below(corpus.sequences.len())];
+                    row.extend_from_slice(&other[..half]);
+                }
+                while row.len() < seq {
+                    row.push(crate::data::vocab::PAD);
+                }
+                row.truncate(seq);
+                ids.extend(row);
+                targets.push(matched as usize);
+            } else {
+                ids.extend_from_slice(&corpus.sequences[lo + k]);
+                targets.push(corpus.labels[lo + k]);
+            }
+        }
+        let _ = N_GROUPS;
+        model.zero_grad();
+        let (logits, cache) = model.forward(&ids, bsz, seq);
+        let (_, dl) = cross_entropy(&logits, &targets);
+        model.backward(&cache, &dl);
+        clip_grads(&mut model, 1.0);
+        opt.step(&mut model, linear_decay(step, steps));
+    }
+    model
+}
+
+/// Pre-train a decoder-only LM (next-token) on a mixed corpus: 70%
+/// Markov "web text" + 30% record-verbalization pairs drawn from *all*
+/// generation domains. The mixture mirrors how GPT-2's pre-training
+/// already contains verbalization-shaped text — which is what makes
+/// light-weight (LoRA/DSEE) adaptation to E2E/WebNLG/DART possible in
+/// the paper.
+pub fn pretrain_lm(cfg: &ModelCfg, seed: u64, steps: usize) -> Transformer {
+    use crate::data::datatotext::{gen_example, ALL_GEN_TASKS};
+    let mut arch = cfg.clone();
+    arch.head = "lm".into();
+    arch.causal = true;
+    let mut rng = Rng::new(seed);
+    let mut model = Transformer::new(&arch, &mut rng);
+    let seq = cfg.max_seq;
+    let corpus = make_corpus(steps * 16, seq, seed ^ 0x6137);
+    let mut data_rng = Rng::new(seed ^ 0xDA7A);
+    let mut opt = AdamW::new(2e-3, 0.01);
+    let bsz = 16usize;
+    for step in 0..steps {
+        let lo = step * bsz;
+        let mut ids = Vec::with_capacity(bsz * seq);
+        let mut targets = Vec::with_capacity(bsz * seq);
+        for k in 0..bsz {
+            let mut row: Vec<u32>;
+            if data_rng.coin(0.5) {
+                // Verbalization-shaped sample from a random domain.
+                let task = *data_rng.choose(&ALL_GEN_TASKS);
+                let ex = gen_example(task, &mut data_rng);
+                row = ex.input;
+                row.extend(ex.target);
+                row.truncate(seq);
+                while row.len() < seq {
+                    row.push(crate::data::vocab::PAD);
+                }
+            } else {
+                row = corpus.sequences[lo + k].clone();
+            }
+            ids.extend_from_slice(&row);
+            for p in 0..seq {
+                let next = if p + 1 < seq { row[p + 1] } else { crate::data::vocab::PAD };
+                targets.push(if next == crate::data::vocab::PAD {
+                    IGNORE
+                } else {
+                    next
+                });
+            }
+        }
+        model.zero_grad();
+        let (logits, cache) = model.forward(&ids, bsz, seq);
+        let (_, dl) = lm_cross_entropy(&logits, &targets, IGNORE);
+        model.backward(&cache, &dl);
+        clip_grads(&mut model, 1.0);
+        opt.step(&mut model, linear_decay(step, steps));
+    }
+    model
+}
+
+/// Cached pre-trained encoder (trained once per process).
+pub fn cached_encoder(cfg: &ModelCfg, seed: u64) -> Transformer {
+    let key = cache_key(cfg, seed);
+    let mut guard = CACHE.lock().unwrap();
+    let map = guard.get_or_insert_with(HashMap::new);
+    if let Some(m) = map.get(&key) {
+        return m.clone();
+    }
+    // Hold the lock while training: concurrent grid workers block here
+    // and then hit the cache, instead of redundantly pre-training the
+    // same checkpoint 8× (measured §Perf win on every table bench).
+    let model = pretrain_encoder(cfg, seed, 400);
+    map.insert(key, model.clone());
+    model
+}
+
+/// Cached pre-trained LM.
+pub fn cached_lm(cfg: &ModelCfg, seed: u64) -> Transformer {
+    let key = cache_key(cfg, seed);
+    let mut guard = CACHE.lock().unwrap();
+    let map = guard.get_or_insert_with(HashMap::new);
+    if let Some(m) = map.get(&key) {
+        return m.clone();
+    }
+    let model = pretrain_lm(cfg, seed, 420);
+    map.insert(key, model.clone());
+    model
+}
+
+/// Drop the cache (tests / memory pressure).
+pub fn clear_cache() {
+    *CACHE.lock().unwrap() = None;
+}
+
+/// Pre-training quality probe: dominant-group accuracy on held-out
+/// corpus sequences (chance = 1/8).
+pub fn probe_encoder(model: &Transformer, seed: u64) -> f64 {
+    let seq = model.cfg.max_seq.min(24);
+    let corpus = make_corpus(256, seq, seed ^ 0xFEED);
+    let mut correct = 0usize;
+    for chunk in 0..(256 / 32) {
+        let mut ids = Vec::new();
+        for k in 0..32 {
+            ids.extend_from_slice(&corpus.sequences[chunk * 32 + k]);
+        }
+        let (logits, _) = model.forward(&ids, 32, seq);
+        for (i, p) in logits.argmax_rows().into_iter().enumerate() {
+            if p == corpus.labels[chunk * 32 + i] {
+                correct += 1;
+            }
+        }
+    }
+    correct as f64 / 256.0
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn encoder_pretraining_beats_chance() {
+        let cfg = ModelCfg::sim_bert_s();
+        let model = pretrain_encoder(&cfg, 42, 240);
+        let acc = probe_encoder(&model, 9);
+        // 8 classes → chance 0.125 (half the steps are matching batches).
+        assert!(acc > 0.4, "pretrain probe acc {acc}");
+    }
+
+    #[test]
+    fn cache_returns_identical_weights() {
+        clear_cache();
+        let cfg = ModelCfg::sim_bert_s();
+        let a = cached_encoder(&cfg, 7);
+        let b = cached_encoder(&cfg, 7);
+        assert_eq!(a.embed.tok.data, b.embed.tok.data);
+        assert_eq!(
+            a.blocks[0].attn.wq.w.data,
+            b.blocks[0].attn.wq.w.data
+        );
+        clear_cache();
+    }
+
+    #[test]
+    fn lm_pretraining_reduces_perplexity_structure() {
+        // The LM should assign higher probability to in-group
+        // continuations than a fresh model does (loss sanity via probe:
+        // compare average next-token loss on fresh corpus).
+        use crate::nn::loss::{cross_entropy, lm_cross_entropy};
+        let cfg = ModelCfg::sim_gpt_s();
+        let trained = pretrain_lm(&cfg, 11, 120);
+        let mut rng = Rng::new(11);
+        let mut arch = cfg.clone();
+        arch.head = "lm".into();
+        let fresh = Transformer::new(&arch, &mut rng);
+        let corpus = make_corpus(64, 24, 0x123);
+        let eval_loss = |m: &Transformer| -> f32 {
+            let mut ids = Vec::new();
+            let mut targets = Vec::new();
+            for s in corpus.sequences.iter().take(16) {
+                ids.extend_from_slice(s);
+                for p in 0..24 {
+                    targets.push(if p + 1 < 24 { s[p + 1] } else { IGNORE });
+                }
+            }
+            let (logits, _) = m.forward(&ids, 16, 24);
+            lm_cross_entropy(&logits, &targets, IGNORE).0
+        };
+        let lt = eval_loss(&trained);
+        let lf = eval_loss(&fresh);
+        assert!(lt < lf - 0.4, "trained {lt} vs fresh {lf}");
+    }
+}

@@ -1,0 +1,396 @@
+//! Training and evaluation loops over the native engine.
+//!
+//! `Trainer` owns a model + optimizer and exposes:
+//! * classification/regression fine-tuning with linear LR decay,
+//!   gradient clipping, and the optional ℓ₁ head-gate penalty;
+//! * LM fine-tuning over data-to-text examples (loss on the target
+//!   region only);
+//! * GLUE-style metric evaluation and batched greedy decoding with the
+//!   generation metric quartet.
+
+use crate::config::TrainCfg;
+use crate::data::batch::Batcher;
+use crate::data::datatotext::GenDataset;
+use crate::data::glue::Dataset;
+use crate::data::vocab::{EOS, PAD};
+use crate::metrics;
+use crate::nn::loss::{cross_entropy, lm_cross_entropy, mse};
+use crate::nn::{Head, Transformer};
+use crate::optim::{clip_grads, l1_penalty, linear_decay, AdamW};
+use crate::util::Rng;
+use std::collections::BTreeMap;
+
+/// Sentinel target id ignored by the LM loss.
+pub const IGNORE: u32 = u32::MAX;
+
+pub struct Trainer {
+    pub model: Transformer,
+    pub cfg: TrainCfg,
+    pub opt: AdamW,
+    pub rng: Rng,
+    /// Apply λ‖c‖₁ to attention gates each step (structured phase I).
+    pub gate_l1: bool,
+}
+
+impl Trainer {
+    pub fn new(model: Transformer, cfg: TrainCfg) -> Self {
+        let opt = AdamW::new(cfg.lr, cfg.weight_decay);
+        let rng = Rng::new(cfg.seed ^ 0x7124_11);
+        Trainer {
+            model,
+            cfg,
+            opt,
+            rng,
+            gate_l1: false,
+        }
+    }
+
+    /// Replace the optimizer (fresh state + new LR) — used between the
+    /// paper's phase-I and phase-III (recovery) stages.
+    pub fn reset_optimizer(&mut self, lr: f32) {
+        self.opt = AdamW::new(lr, self.cfg.weight_decay);
+    }
+
+    fn apply_gate_l1(&mut self) -> f32 {
+        let mut pen = 0.0;
+        if self.gate_l1 {
+            let lambda = self.cfg.l1_lambda;
+            for blk in &mut self.model.blocks {
+                if blk.attn.gates_trainable {
+                    pen += l1_penalty(&blk.attn.gates, &mut blk.attn.ggates, lambda);
+                }
+            }
+        }
+        pen
+    }
+
+    /// Fine-tune on a GLUE-like dataset for `epochs`; returns per-step
+    /// losses.
+    pub fn train_classification(&mut self, ds: &Dataset, epochs: usize) -> Vec<f32> {
+        let total_steps = epochs * (ds.examples.len() / self.cfg.batch);
+        let mut losses = Vec::with_capacity(total_steps);
+        let mut step = 0usize;
+        for _epoch in 0..epochs {
+            let mut shuffle_rng = self.rng.fork(step as u64);
+            let batches: Vec<_> =
+                Batcher::new(ds, self.cfg.batch, Some(&mut shuffle_rng)).collect();
+            for b in batches {
+                self.model.zero_grad();
+                let (logits, cache) = self.model.forward(&b.ids, b.batch, b.seq);
+                let (loss, dl) = if ds.task.is_regression() {
+                    mse(&logits, &b.score_targets)
+                } else {
+                    cross_entropy(&logits, &b.class_targets)
+                };
+                self.model.backward(&cache, &dl);
+                let pen = self.apply_gate_l1();
+                clip_grads(&mut self.model, self.cfg.grad_clip);
+                let lr_scale = linear_decay(step, total_steps);
+                self.opt.step(&mut self.model, lr_scale);
+                losses.push(loss + pen);
+                step += 1;
+            }
+        }
+        losses
+    }
+
+    /// Evaluate with the task's own metric (acc / mcc / pearson).
+    pub fn evaluate_classification(&self, ds: &Dataset) -> f64 {
+        let mut preds_c: Vec<usize> = Vec::new();
+        let mut targets_c: Vec<usize> = Vec::new();
+        let mut preds_s: Vec<f64> = Vec::new();
+        let mut targets_s: Vec<f64> = Vec::new();
+        for b in Batcher::new(ds, self.cfg.batch.min(ds.examples.len()), None) {
+            let (logits, _) = self.model.forward(&b.ids, b.batch, b.seq);
+            if ds.task.is_regression() {
+                for i in 0..b.batch {
+                    preds_s.push(logits.data[i] as f64);
+                    targets_s.push(b.score_targets[i] as f64);
+                }
+            } else {
+                preds_c.extend(logits.argmax_rows());
+                targets_c.extend_from_slice(&b.class_targets);
+            }
+        }
+        match ds.task.metric() {
+            "mcc" => metrics::matthews_corr(&preds_c, &targets_c),
+            "pearson" => metrics::pearson_r(&preds_s, &targets_s),
+            _ => metrics::accuracy(&preds_c, &targets_c),
+        }
+    }
+
+    // ------------------------------------------------------------ LM path
+
+    /// Build a fixed-length LM batch: sequence = input ++ target ++ PAD,
+    /// next-token targets only over the target region.
+    fn lm_batch(
+        examples: &[(&Vec<u32>, &Vec<u32>)],
+        seq_len: usize,
+    ) -> (Vec<u32>, Vec<u32>) {
+        let mut ids = Vec::with_capacity(examples.len() * seq_len);
+        let mut targets = Vec::with_capacity(examples.len() * seq_len);
+        for (input, target) in examples {
+            let mut row: Vec<u32> = Vec::with_capacity(seq_len);
+            row.extend_from_slice(input);
+            row.extend_from_slice(target);
+            row.truncate(seq_len);
+            while row.len() < seq_len {
+                row.push(PAD);
+            }
+            // Next-token prediction, supervised only where the *next*
+            // position lies inside the target region.
+            let tgt_start = input.len(); // first target token index
+            let tgt_end = (input.len() + target.len()).min(seq_len);
+            for p in 0..seq_len {
+                let next = p + 1;
+                if next >= tgt_start && next < tgt_end {
+                    targets.push(row[next]);
+                } else if next == tgt_start.max(1) - 0 {
+                    targets.push(IGNORE);
+                } else {
+                    targets.push(IGNORE);
+                }
+            }
+            ids.extend(row);
+        }
+        (ids, targets)
+    }
+
+    /// Fine-tune the LM on a data-to-text dataset.
+    pub fn train_lm(&mut self, ds: &GenDataset, epochs: usize) -> Vec<f32> {
+        let bsz = self.cfg.batch;
+        let n = ds.examples.len();
+        let total_steps = epochs * (n / bsz);
+        let mut losses = Vec::with_capacity(total_steps);
+        let mut step = 0usize;
+        for _epoch in 0..epochs {
+            let mut order: Vec<usize> = (0..n).collect();
+            let mut srng = self.rng.fork(1000 + step as u64);
+            srng.shuffle(&mut order);
+            for chunk in order.chunks(bsz) {
+                if chunk.len() < bsz {
+                    continue;
+                }
+                let exs: Vec<(&Vec<u32>, &Vec<u32>)> = chunk
+                    .iter()
+                    .map(|&i| (&ds.examples[i].input, &ds.examples[i].target))
+                    .collect();
+                let (ids, mut targets) = Self::lm_batch(&exs, ds.seq_len);
+                // With prefix tuning, logits cover P extra positions per
+                // row — pad the target rows with leading IGNOREs.
+                let p = self.model.n_prefix();
+                if p > 0 {
+                    let mut t2 = Vec::with_capacity(bsz * (p + ds.seq_len));
+                    for row in targets.chunks(ds.seq_len) {
+                        t2.extend(std::iter::repeat(IGNORE).take(p));
+                        t2.extend_from_slice(row);
+                    }
+                    targets = t2;
+                }
+                self.model.zero_grad();
+                let (logits, cache) = self.model.forward(&ids, bsz, ds.seq_len);
+                let (loss, dl) = lm_cross_entropy(&logits, &targets, IGNORE);
+                self.model.backward(&cache, &dl);
+                let pen = self.apply_gate_l1();
+                clip_grads(&mut self.model, self.cfg.grad_clip);
+                let lr_scale = linear_decay(step, total_steps);
+                self.opt.step(&mut self.model, lr_scale);
+                losses.push(loss + pen);
+                step += 1;
+            }
+        }
+        losses
+    }
+
+    /// Greedy-decode a continuation for each input (batched; every step
+    /// re-runs the full forward — fine at these sequence lengths).
+    pub fn greedy_decode(&self, inputs: &[Vec<u32>], max_new: usize, seq_len: usize) -> Vec<Vec<u32>> {
+        let mut outs: Vec<Vec<u32>> = Vec::with_capacity(inputs.len());
+        for chunk in inputs.chunks(16) {
+            let bsz = chunk.len();
+            let mut rows: Vec<Vec<u32>> = chunk.to_vec();
+            let mut done = vec![false; bsz];
+            for _ in 0..max_new {
+                if done.iter().all(|&d| d) {
+                    break;
+                }
+                // Pad rows to a common length.
+                let cur_len = rows.iter().map(|r| r.len()).max().unwrap().min(seq_len);
+                let mut ids = Vec::with_capacity(bsz * cur_len);
+                for r in &rows {
+                    let mut row = r.clone();
+                    row.truncate(cur_len);
+                    while row.len() < cur_len {
+                        row.push(PAD);
+                    }
+                    ids.extend(row);
+                }
+                let (logits, _) = self.model.forward(&ids, bsz, cur_len);
+                let v = self.model.cfg.vocab;
+                let p = self.model.n_prefix();
+                for (bi, row) in rows.iter_mut().enumerate() {
+                    if done[bi] || row.len() >= seq_len {
+                        done[bi] = true;
+                        continue;
+                    }
+                    // Logits at this row's last real position (shifted by
+                    // any prefix rows prepended inside the model).
+                    let pos = bi * (p + cur_len) + p + (row.len() - 1).min(cur_len - 1);
+                    let seg = &logits.data[pos * v..(pos + 1) * v];
+                    let mut best = 0usize;
+                    for (j, &x) in seg.iter().enumerate() {
+                        if x > seg[best] {
+                            best = j;
+                        }
+                    }
+                    let tok = best as u32;
+                    row.push(tok);
+                    if tok == EOS {
+                        done[bi] = true;
+                    }
+                }
+            }
+            // Strip the prompt + EOS.
+            for (bi, r) in rows.into_iter().enumerate() {
+                let mut gen: Vec<u32> = r[chunk[bi].len()..].to_vec();
+                if let Some(p) = gen.iter().position(|&t| t == EOS) {
+                    gen.truncate(p);
+                }
+                outs.push(gen);
+            }
+        }
+        outs
+    }
+
+    /// Decode the eval set and compute BLEU/NIST/METEOR/TER.
+    pub fn evaluate_generation(&self, ds: &GenDataset) -> BTreeMap<String, f64> {
+        let inputs: Vec<Vec<u32>> = ds.examples.iter().map(|e| e.input.clone()).collect();
+        let max_new = ds
+            .examples
+            .iter()
+            .map(|e| e.target.len())
+            .max()
+            .unwrap_or(16)
+            + 4;
+        let hyps = self.greedy_decode(&inputs, max_new, ds.seq_len);
+        let refs: Vec<Vec<Vec<u32>>> = ds.examples.iter().map(|e| e.references.clone()).collect();
+        let mut m = BTreeMap::new();
+        m.insert("bleu".to_string(), metrics::bleu(&hyps, &refs));
+        m.insert("nist".to_string(), metrics::nist(&hyps, &refs));
+        m.insert("meteor".to_string(), metrics::meteor(&hyps, &refs));
+        m.insert("ter".to_string(), metrics::ter(&hyps, &refs));
+        m
+    }
+
+    /// Swap in a fresh task head of the right kind (keeps body weights).
+    pub fn set_task_head(model: &mut Transformer, is_regression: bool, n_classes: usize, rng: &mut Rng) {
+        use crate::nn::linear::Linear;
+        let d = model.cfg.d_model;
+        model.head = if is_regression {
+            model.cfg.head = "regressor".into();
+            Head::Regressor(Linear::new(d, 1, rng))
+        } else {
+            model.cfg.head = "classifier".into();
+            model.cfg.n_classes = n_classes;
+            Head::Classifier(Linear::new(d, n_classes, rng))
+        };
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ModelCfg;
+    use crate::data::datatotext::{make_dataset as make_gen, GenTask};
+    use crate::data::glue::{make_dataset, GlueTask};
+
+    fn small_cfg() -> TrainCfg {
+        TrainCfg {
+            batch: 16,
+            lr: 2e-3,
+            ..TrainCfg::default()
+        }
+    }
+
+    #[test]
+    fn classification_learns_sst2() {
+        let mut rng = Rng::new(300);
+        let model = Transformer::new(&ModelCfg::sim_bert_s(), &mut rng);
+        let mut tr = Trainer::new(model, small_cfg());
+        let train = make_dataset(GlueTask::Sst2, 256, 1);
+        let eval = make_dataset(GlueTask::Sst2, 128, 2);
+        let before = tr.evaluate_classification(&eval);
+        let losses = tr.train_classification(&train, 4);
+        let after = tr.evaluate_classification(&eval);
+        assert!(
+            after > before + 0.15 && after > 0.7,
+            "before={before} after={after} (losses {:?} → {:?})",
+            losses.first(),
+            losses.last()
+        );
+    }
+
+    #[test]
+    fn regression_learns_stsb() {
+        // Regression needs the pre-trained concept geometry (a random
+        // encoder's mean-pool is uninformative) — matches the paper's
+        // setting where fine-tuning always starts from a checkpoint.
+        let mut rng = Rng::new(301);
+        let mut model = crate::train::pretrain::pretrain_encoder(&ModelCfg::sim_bert_s(), 31, 120);
+        Trainer::set_task_head(&mut model, true, 0, &mut rng);
+        let mut tr = Trainer::new(model, small_cfg());
+        let train = make_dataset(GlueTask::Stsb, 1024, 3);
+        let eval = make_dataset(GlueTask::Stsb, 128, 4);
+        tr.train_classification(&train, 6);
+        let r = tr.evaluate_classification(&eval);
+        assert!(r > 0.4, "pearson only {r}");
+    }
+
+    #[test]
+    fn lm_batch_supervises_target_region_only() {
+        let input = vec![5u32, 10, 11, 2];
+        let target = vec![20u32, 21, 4];
+        let (ids, targets) = Trainer::lm_batch(&[(&input, &target)], 10);
+        assert_eq!(ids.len(), 10);
+        assert_eq!(targets.len(), 10);
+        // Position 3 predicts row[4] = first target token (20).
+        assert_eq!(targets[3], 20);
+        assert_eq!(targets[4], 21);
+        assert_eq!(targets[5], 4); // EOS supervised
+        // Before/after the target region: ignored.
+        assert_eq!(targets[0], IGNORE);
+        assert_eq!(targets[1], IGNORE);
+        assert_eq!(targets[6], IGNORE);
+        assert_eq!(targets[9], IGNORE);
+    }
+
+    #[test]
+    fn lm_learns_to_render_records() {
+        let mut rng = Rng::new(302);
+        let mut cfg = ModelCfg::sim_gpt_s();
+        let ds = make_gen(GenTask::E2e, 256, 5);
+        cfg.max_seq = ds.seq_len;
+        let model = Transformer::new(&cfg, &mut rng);
+        let mut tr = Trainer::new(model, small_cfg());
+        let losses = tr.train_lm(&ds, 4);
+        let first = losses[..4].iter().sum::<f32>() / 4.0;
+        let last = losses[losses.len() - 4..].iter().sum::<f32>() / 4.0;
+        assert!(last < first * 0.6, "LM loss {first} → {last}");
+        // Decoding produces non-empty hypotheses and a positive BLEU.
+        let eval = make_gen(GenTask::E2e, 32, 6);
+        let m = tr.evaluate_generation(&eval);
+        assert!(m["bleu"] > 5.0, "bleu {}", m["bleu"]);
+        assert!(m["ter"] < 1.5, "ter {}", m["ter"]);
+    }
+
+    #[test]
+    fn set_task_head_swaps_kind() {
+        let mut rng = Rng::new(303);
+        let mut model = Transformer::new(&ModelCfg::sim_bert_s(), &mut rng);
+        Trainer::set_task_head(&mut model, false, 3, &mut rng);
+        assert!(matches!(model.head, Head::Classifier(_)));
+        assert_eq!(model.cfg.n_classes, 3);
+        Trainer::set_task_head(&mut model, true, 0, &mut rng);
+        assert!(matches!(model.head, Head::Regressor(_)));
+    }
+}

@@ -1,0 +1,212 @@
+//! Minimal command-line parsing (no `clap` offline).
+//!
+//! Supports `--flag value`, `--flag=value`, boolean `--flag`, positional
+//! arguments, and subcommands; produces a usage string automatically.
+
+use std::collections::BTreeMap;
+
+/// Declarative spec for one option.
+#[derive(Clone, Debug)]
+pub struct Opt {
+    pub name: &'static str,
+    pub help: &'static str,
+    pub default: Option<&'static str>,
+    pub is_flag: bool,
+}
+
+/// Parsed arguments: option map + positionals.
+#[derive(Debug, Default)]
+pub struct Args {
+    opts: BTreeMap<String, String>,
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.opts.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_usize(&self, name: &str) -> crate::Result<usize> {
+        let v = self
+            .get(name)
+            .ok_or_else(|| anyhow::anyhow!("missing --{name}"))?;
+        v.parse()
+            .map_err(|_| anyhow::anyhow!("--{name}: expected integer, got '{v}'"))
+    }
+
+    pub fn get_f64(&self, name: &str) -> crate::Result<f64> {
+        let v = self
+            .get(name)
+            .ok_or_else(|| anyhow::anyhow!("missing --{name}"))?;
+        v.parse()
+            .map_err(|_| anyhow::anyhow!("--{name}: expected number, got '{v}'"))
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.get(name) == Some("true")
+    }
+}
+
+/// A command-line spec: options + usage text.
+pub struct Spec {
+    pub program: &'static str,
+    pub about: &'static str,
+    pub opts: Vec<Opt>,
+}
+
+impl Spec {
+    pub fn new(program: &'static str, about: &'static str) -> Self {
+        Spec {
+            program,
+            about,
+            opts: Vec::new(),
+        }
+    }
+
+    pub fn opt(mut self, name: &'static str, help: &'static str, default: &'static str) -> Self {
+        self.opts.push(Opt {
+            name,
+            help,
+            default: Some(default),
+            is_flag: false,
+        });
+        self
+    }
+
+    pub fn req(mut self, name: &'static str, help: &'static str) -> Self {
+        self.opts.push(Opt {
+            name,
+            help,
+            default: None,
+            is_flag: false,
+        });
+        self
+    }
+
+    pub fn flag(mut self, name: &'static str, help: &'static str) -> Self {
+        self.opts.push(Opt {
+            name,
+            help,
+            default: None,
+            is_flag: true,
+        });
+        self
+    }
+
+    pub fn usage(&self) -> String {
+        let mut s = format!("{} — {}\n\nOptions:\n", self.program, self.about);
+        for o in &self.opts {
+            let kind = if o.is_flag { "" } else { " <value>" };
+            let def = match o.default {
+                Some(d) => format!(" [default: {d}]"),
+                None if o.is_flag => String::new(),
+                None => " [required]".to_string(),
+            };
+            s.push_str(&format!("  --{}{kind}\n      {}{def}\n", o.name, o.help));
+        }
+        s
+    }
+
+    /// Parse an argv slice (without the program name).
+    pub fn parse(&self, argv: &[String]) -> crate::Result<Args> {
+        let mut args = Args::default();
+        // Seed defaults.
+        for o in &self.opts {
+            if let Some(d) = o.default {
+                args.opts.insert(o.name.to_string(), d.to_string());
+            }
+        }
+        let mut i = 0;
+        while i < argv.len() {
+            let a = &argv[i];
+            if a == "--help" || a == "-h" {
+                anyhow::bail!("{}", self.usage());
+            }
+            if let Some(rest) = a.strip_prefix("--") {
+                let (name, inline) = match rest.split_once('=') {
+                    Some((n, v)) => (n.to_string(), Some(v.to_string())),
+                    None => (rest.to_string(), None),
+                };
+                let opt = self
+                    .opts
+                    .iter()
+                    .find(|o| o.name == name)
+                    .ok_or_else(|| anyhow::anyhow!("unknown option --{name}\n{}", self.usage()))?;
+                let value = if opt.is_flag {
+                    inline.unwrap_or_else(|| "true".to_string())
+                } else if let Some(v) = inline {
+                    v
+                } else {
+                    i += 1;
+                    argv.get(i)
+                        .cloned()
+                        .ok_or_else(|| anyhow::anyhow!("--{name} needs a value"))?
+                };
+                args.opts.insert(name, value);
+            } else {
+                args.positional.push(a.clone());
+            }
+            i += 1;
+        }
+        // Check required.
+        for o in &self.opts {
+            if o.default.is_none() && !o.is_flag && !args.opts.contains_key(o.name) {
+                anyhow::bail!("missing required --{}\n{}", o.name, self.usage());
+            }
+        }
+        Ok(args)
+    }
+
+    /// Parse from the process environment.
+    pub fn parse_env(&self) -> crate::Result<Args> {
+        let argv: Vec<String> = std::env::args().skip(1).collect();
+        self.parse(&argv)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec() -> Spec {
+        Spec::new("t", "test")
+            .opt("rank", "low-rank dim", "16")
+            .req("task", "task name")
+            .flag("verbose", "more logs")
+    }
+
+    fn sv(xs: &[&str]) -> Vec<String> {
+        xs.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn defaults_and_overrides() {
+        let a = spec().parse(&sv(&["--task", "sst2"])).unwrap();
+        assert_eq!(a.get_usize("rank").unwrap(), 16);
+        assert_eq!(a.get("task"), Some("sst2"));
+        assert!(!a.flag("verbose"));
+
+        let a = spec()
+            .parse(&sv(&["--task=cola", "--rank=8", "--verbose", "pos1"]))
+            .unwrap();
+        assert_eq!(a.get_usize("rank").unwrap(), 8);
+        assert!(a.flag("verbose"));
+        assert_eq!(a.positional, vec!["pos1"]);
+    }
+
+    #[test]
+    fn missing_required_errors() {
+        assert!(spec().parse(&sv(&["--rank", "4"])).is_err());
+    }
+
+    #[test]
+    fn unknown_option_errors() {
+        assert!(spec().parse(&sv(&["--task", "x", "--bogus", "1"])).is_err());
+    }
+
+    #[test]
+    fn bad_number_errors() {
+        let a = spec().parse(&sv(&["--task", "x", "--rank", "abc"])).unwrap();
+        assert!(a.get_usize("rank").is_err());
+    }
+}

@@ -1,0 +1,95 @@
+//! Leveled stderr logger with wall-clock timestamps relative to process
+//! start. Controlled by `DSEE_LOG` (error|warn|info|debug|trace).
+
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::sync::OnceLock;
+use std::time::Instant;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Level {
+    Error = 0,
+    Warn = 1,
+    Info = 2,
+    Debug = 3,
+    Trace = 4,
+}
+
+static LEVEL: AtomicU8 = AtomicU8::new(2); // Info
+static START: OnceLock<Instant> = OnceLock::new();
+
+/// Initialize from the environment; idempotent.
+pub fn init() {
+    START.get_or_init(Instant::now);
+    if let Ok(v) = std::env::var("DSEE_LOG") {
+        let lvl = match v.to_ascii_lowercase().as_str() {
+            "error" => Level::Error,
+            "warn" => Level::Warn,
+            "info" => Level::Info,
+            "debug" => Level::Debug,
+            "trace" => Level::Trace,
+            _ => Level::Info,
+        };
+        LEVEL.store(lvl as u8, Ordering::Relaxed);
+    }
+}
+
+pub fn set_level(lvl: Level) {
+    START.get_or_init(Instant::now);
+    LEVEL.store(lvl as u8, Ordering::Relaxed);
+}
+
+pub fn enabled(lvl: Level) -> bool {
+    lvl as u8 <= LEVEL.load(Ordering::Relaxed)
+}
+
+pub fn log(lvl: Level, module: &str, msg: &str) {
+    if !enabled(lvl) {
+        return;
+    }
+    let t = START.get_or_init(Instant::now).elapsed().as_secs_f64();
+    let tag = match lvl {
+        Level::Error => "ERROR",
+        Level::Warn => "WARN ",
+        Level::Info => "INFO ",
+        Level::Debug => "DEBUG",
+        Level::Trace => "TRACE",
+    };
+    eprintln!("[{t:9.3}s {tag} {module}] {msg}");
+}
+
+#[macro_export]
+macro_rules! info {
+    ($($arg:tt)*) => {
+        $crate::util::logging::log($crate::util::logging::Level::Info, module_path!(), &format!($($arg)*))
+    };
+}
+
+#[macro_export]
+macro_rules! warn_ {
+    ($($arg:tt)*) => {
+        $crate::util::logging::log($crate::util::logging::Level::Warn, module_path!(), &format!($($arg)*))
+    };
+}
+
+#[macro_export]
+macro_rules! debug {
+    ($($arg:tt)*) => {
+        $crate::util::logging::log($crate::util::logging::Level::Debug, module_path!(), &format!($($arg)*))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn level_gating() {
+        init();
+        set_level(Level::Warn);
+        assert!(enabled(Level::Error));
+        assert!(enabled(Level::Warn));
+        assert!(!enabled(Level::Info));
+        set_level(Level::Info);
+        assert!(enabled(Level::Info));
+    }
+}

@@ -1,0 +1,17 @@
+//! Zero-dependency substrates: PRNG, JSON, CLI parsing, logging,
+//! statistics, and a miniature property-testing harness.
+//!
+//! This build is fully offline, so the usual crates (`rand`, `serde`,
+//! `clap`, `proptest`, `criterion`) are unavailable; each submodule here is
+//! a small, tested, from-scratch replacement covering exactly what the
+//! DSEE system needs.
+
+pub mod rng;
+pub mod json;
+pub mod cli;
+pub mod logging;
+pub mod stats;
+pub mod prop;
+
+pub use rng::Rng;
+pub use json::Json;

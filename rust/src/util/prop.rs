@@ -1,0 +1,227 @@
+//! Miniature property-based testing harness (no `proptest` offline).
+//!
+//! A property is a closure over randomly generated inputs; on failure the
+//! harness *shrinks* the failing input by retrying progressively smaller
+//! cases, then panics with the minimal reproduction and its seed. Used for
+//! coordinator invariants (routing/batching/state), mask algebra, and
+//! tokenizer round-trips.
+
+use super::rng::Rng;
+
+/// Configuration for a property run.
+pub struct Config {
+    pub cases: usize,
+    pub seed: u64,
+    pub max_shrink: usize,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Config {
+            cases: 100,
+            seed: 0xD5EE,
+            max_shrink: 200,
+        }
+    }
+}
+
+/// A generator produces values from randomness + a size hint; `shrink`
+/// yields candidate simpler values.
+pub trait Gen {
+    type Value: std::fmt::Debug + Clone;
+    fn generate(&self, rng: &mut Rng, size: usize) -> Self::Value;
+    fn shrink(&self, v: &Self::Value) -> Vec<Self::Value> {
+        let _ = v;
+        Vec::new()
+    }
+}
+
+/// usize in [lo, hi].
+pub struct UsizeIn(pub usize, pub usize);
+
+impl Gen for UsizeIn {
+    type Value = usize;
+    fn generate(&self, rng: &mut Rng, _size: usize) -> usize {
+        self.0 + rng.below(self.1 - self.0 + 1)
+    }
+    fn shrink(&self, v: &usize) -> Vec<usize> {
+        let mut out = Vec::new();
+        if *v > self.0 {
+            out.push(self.0);
+            out.push(self.0 + (*v - self.0) / 2);
+            out.push(v - 1);
+        }
+        out.dedup();
+        out
+    }
+}
+
+/// f32 in [lo, hi].
+pub struct F32In(pub f32, pub f32);
+
+impl Gen for F32In {
+    type Value = f32;
+    fn generate(&self, rng: &mut Rng, _size: usize) -> f32 {
+        rng.uniform_in(self.0, self.1)
+    }
+    fn shrink(&self, v: &f32) -> Vec<f32> {
+        let mid = (self.0 + self.1) / 2.0;
+        if (*v - mid).abs() > 1e-3 {
+            vec![mid, (*v + mid) / 2.0]
+        } else {
+            vec![]
+        }
+    }
+}
+
+/// Vec<T> with length in [0, max_len], element-wise + prefix shrinking.
+pub struct VecOf<G: Gen>(pub G, pub usize);
+
+impl<G: Gen> Gen for VecOf<G> {
+    type Value = Vec<G::Value>;
+    fn generate(&self, rng: &mut Rng, size: usize) -> Vec<G::Value> {
+        let len = rng.below(self.1.min(size.max(1)) + 1);
+        (0..len).map(|_| self.0.generate(rng, size)).collect()
+    }
+    fn shrink(&self, v: &Vec<G::Value>) -> Vec<Vec<G::Value>> {
+        let mut out = Vec::new();
+        if !v.is_empty() {
+            out.push(v[..v.len() / 2].to_vec());
+            out.push(v[..v.len() - 1].to_vec());
+            // Shrink the first shrinkable element.
+            for (i, x) in v.iter().enumerate() {
+                let cands = self.0.shrink(x);
+                if let Some(c) = cands.into_iter().next() {
+                    let mut w = v.clone();
+                    w[i] = c;
+                    out.push(w);
+                    break;
+                }
+            }
+        }
+        out
+    }
+}
+
+/// Pair of generators.
+pub struct PairOf<A: Gen, B: Gen>(pub A, pub B);
+
+impl<A: Gen, B: Gen> Gen for PairOf<A, B> {
+    type Value = (A::Value, B::Value);
+    fn generate(&self, rng: &mut Rng, size: usize) -> Self::Value {
+        (self.0.generate(rng, size), self.1.generate(rng, size))
+    }
+    fn shrink(&self, v: &Self::Value) -> Vec<Self::Value> {
+        let mut out: Vec<Self::Value> = self
+            .0
+            .shrink(&v.0)
+            .into_iter()
+            .map(|a| (a, v.1.clone()))
+            .collect();
+        out.extend(self.1.shrink(&v.1).into_iter().map(|b| (v.0.clone(), b)));
+        out
+    }
+}
+
+/// Run `prop` over `cfg.cases` random inputs; panic with the shrunk
+/// counterexample on failure. `prop` returns `Err(reason)` to fail.
+pub fn check<G: Gen>(cfg: &Config, gen: &G, prop: impl Fn(&G::Value) -> Result<(), String>) {
+    let mut rng = Rng::new(cfg.seed);
+    for case in 0..cfg.cases {
+        // Grow the size hint over the run: early cases are small.
+        let size = 4 + (case * 64) / cfg.cases.max(1);
+        let input = gen.generate(&mut rng, size);
+        if let Err(first_reason) = prop(&input) {
+            // Shrink.
+            let mut best = input.clone();
+            let mut best_reason = first_reason;
+            let mut budget = cfg.max_shrink;
+            'outer: while budget > 0 {
+                for cand in gen.shrink(&best) {
+                    budget = budget.saturating_sub(1);
+                    if let Err(r) = prop(&cand) {
+                        best = cand;
+                        best_reason = r;
+                        continue 'outer;
+                    }
+                    if budget == 0 {
+                        break;
+                    }
+                }
+                break;
+            }
+            panic!(
+                "property failed (case {case}, seed {:#x})\n  minimal input: {best:?}\n  reason: {best_reason}",
+                cfg.seed
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        check(&Config::default(), &UsizeIn(0, 100), |&n| {
+            if n <= 100 {
+                Ok(())
+            } else {
+                Err(format!("{n} > 100"))
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn failing_property_panics_with_shrunk_input() {
+        check(&Config::default(), &UsizeIn(0, 1000), |&n| {
+            if n < 50 {
+                Ok(())
+            } else {
+                Err("too big".into())
+            }
+        });
+    }
+
+    #[test]
+    fn vec_generator_respects_bounds() {
+        let gen = VecOf(UsizeIn(1, 9), 17);
+        let mut rng = Rng::new(1);
+        for _ in 0..200 {
+            let v = gen.generate(&mut rng, 64);
+            assert!(v.len() <= 17);
+            assert!(v.iter().all(|&x| (1..=9).contains(&x)));
+        }
+    }
+
+    #[test]
+    fn shrinking_reaches_small_cases() {
+        // The failing set is n >= 10; shrinking should get close to 10.
+        let gen = UsizeIn(0, 10_000);
+        let result = std::panic::catch_unwind(|| {
+            check(
+                &Config {
+                    cases: 50,
+                    seed: 7,
+                    max_shrink: 500,
+                },
+                &gen,
+                |&n| if n < 10 { Ok(()) } else { Err("ge 10".into()) },
+            )
+        });
+        let msg = *result.unwrap_err().downcast::<String>().unwrap();
+        // Extract the minimal input from the panic text.
+        let min: usize = msg
+            .split("minimal input: ")
+            .nth(1)
+            .unwrap()
+            .split_whitespace()
+            .next()
+            .unwrap()
+            .parse()
+            .unwrap();
+        assert!(min < 100, "shrinking stalled at {min}: {msg}");
+    }
+}

@@ -1,0 +1,212 @@
+//! Descriptive statistics and trend fitting.
+//!
+//! Used by the bench harness (mean/std/percentiles of timings) and by the
+//! Figure-3 reproduction (the paper overlays *quadratic trend lines* on the
+//! rank-sweep scatter; `polyfit2` implements exactly that least-squares
+//! fit).
+
+/// Mean of a slice (0.0 for empty).
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    xs.iter().sum::<f64>() / xs.len() as f64
+}
+
+/// Sample standard deviation (n-1 denominator; 0.0 for n<2).
+pub fn std(xs: &[f64]) -> f64 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    let m = mean(xs);
+    (xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / (xs.len() - 1) as f64).sqrt()
+}
+
+/// Percentile via linear interpolation of the sorted data; `p` in [0,100].
+pub fn percentile(xs: &[f64], p: f64) -> f64 {
+    assert!(!xs.is_empty(), "percentile of empty slice");
+    let mut s = xs.to_vec();
+    s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let rank = (p / 100.0) * (s.len() - 1) as f64;
+    let lo = rank.floor() as usize;
+    let hi = rank.ceil() as usize;
+    if lo == hi {
+        s[lo]
+    } else {
+        let frac = rank - lo as f64;
+        s[lo] * (1.0 - frac) + s[hi] * frac
+    }
+}
+
+/// Pearson correlation coefficient.
+pub fn pearson(xs: &[f64], ys: &[f64]) -> f64 {
+    assert_eq!(xs.len(), ys.len());
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    let mx = mean(xs);
+    let my = mean(ys);
+    let (mut num, mut dx, mut dy) = (0.0, 0.0, 0.0);
+    for (x, y) in xs.iter().zip(ys) {
+        num += (x - mx) * (y - my);
+        dx += (x - mx) * (x - mx);
+        dy += (y - my) * (y - my);
+    }
+    if dx == 0.0 || dy == 0.0 {
+        return 0.0;
+    }
+    num / (dx.sqrt() * dy.sqrt())
+}
+
+/// Least-squares fit of `y = a + b·x` ; returns (a, b).
+pub fn polyfit1(xs: &[f64], ys: &[f64]) -> (f64, f64) {
+    let n = xs.len() as f64;
+    let sx: f64 = xs.iter().sum();
+    let sy: f64 = ys.iter().sum();
+    let sxx: f64 = xs.iter().map(|x| x * x).sum();
+    let sxy: f64 = xs.iter().zip(ys).map(|(x, y)| x * y).sum();
+    let denom = n * sxx - sx * sx;
+    if denom.abs() < 1e-12 {
+        return (mean(ys), 0.0);
+    }
+    let b = (n * sxy - sx * sy) / denom;
+    let a = (sy - b * sx) / n;
+    (a, b)
+}
+
+/// Least-squares fit of `y = a + b·x + c·x²` via the 3×3 normal equations;
+/// returns (a, b, c). Used for Figure 3's quadratic trend lines.
+pub fn polyfit2(xs: &[f64], ys: &[f64]) -> (f64, f64, f64) {
+    assert_eq!(xs.len(), ys.len());
+    let n = xs.len() as f64;
+    let s1: f64 = xs.iter().sum();
+    let s2: f64 = xs.iter().map(|x| x.powi(2)).sum();
+    let s3: f64 = xs.iter().map(|x| x.powi(3)).sum();
+    let s4: f64 = xs.iter().map(|x| x.powi(4)).sum();
+    let t0: f64 = ys.iter().sum();
+    let t1: f64 = xs.iter().zip(ys).map(|(x, y)| x * y).sum();
+    let t2: f64 = xs.iter().zip(ys).map(|(x, y)| x * x * y).sum();
+    // Solve [n s1 s2; s1 s2 s3; s2 s3 s4] [a b c]^T = [t0 t1 t2]^T
+    let m = [[n, s1, s2], [s1, s2, s3], [s2, s3, s4]];
+    let rhs = [t0, t1, t2];
+    match solve3(m, rhs) {
+        Some([a, b, c]) => (a, b, c),
+        None => {
+            let (a, b) = polyfit1(xs, ys);
+            (a, b, 0.0)
+        }
+    }
+}
+
+/// Gaussian elimination with partial pivoting for a 3×3 system.
+fn solve3(mut m: [[f64; 3]; 3], mut b: [f64; 3]) -> Option<[f64; 3]> {
+    for col in 0..3 {
+        // Pivot.
+        let piv = (col..3).max_by(|&i, &j| {
+            m[i][col].abs().partial_cmp(&m[j][col].abs()).unwrap()
+        })?;
+        if m[piv][col].abs() < 1e-12 {
+            return None;
+        }
+        m.swap(col, piv);
+        b.swap(col, piv);
+        for row in col + 1..3 {
+            let f = m[row][col] / m[col][col];
+            for k in col..3 {
+                m[row][k] -= f * m[col][k];
+            }
+            b[row] -= f * b[col];
+        }
+    }
+    let mut x = [0.0; 3];
+    for row in (0..3).rev() {
+        let mut acc = b[row];
+        for k in row + 1..3 {
+            acc -= m[row][k] * x[k];
+        }
+        x[row] = acc / m[row][row];
+    }
+    Some(x)
+}
+
+/// Histogram of values into `bins` equal-width buckets over [lo, hi].
+/// Returns (bin_centers, counts). Values outside the range clamp to the
+/// end bins — matches how Figure 4 renders the ΔW distribution.
+pub fn histogram(xs: &[f64], lo: f64, hi: f64, bins: usize) -> (Vec<f64>, Vec<usize>) {
+    assert!(bins > 0 && hi > lo);
+    let width = (hi - lo) / bins as f64;
+    let mut counts = vec![0usize; bins];
+    for &x in xs {
+        let mut idx = ((x - lo) / width) as isize;
+        if idx < 0 {
+            idx = 0;
+        }
+        if idx >= bins as isize {
+            idx = bins as isize - 1;
+        }
+        counts[idx as usize] += 1;
+    }
+    let centers = (0..bins)
+        .map(|i| lo + width * (i as f64 + 0.5))
+        .collect();
+    (centers, counts)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn basic_moments() {
+        let xs = [1.0, 2.0, 3.0, 4.0];
+        assert!((mean(&xs) - 2.5).abs() < 1e-12);
+        assert!((std(&xs) - 1.2909944487).abs() < 1e-6);
+    }
+
+    #[test]
+    fn percentiles() {
+        let xs = [1.0, 2.0, 3.0, 4.0, 5.0];
+        assert_eq!(percentile(&xs, 0.0), 1.0);
+        assert_eq!(percentile(&xs, 50.0), 3.0);
+        assert_eq!(percentile(&xs, 100.0), 5.0);
+        assert!((percentile(&xs, 25.0) - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn pearson_perfect() {
+        let xs = [1.0, 2.0, 3.0];
+        let ys = [2.0, 4.0, 6.0];
+        assert!((pearson(&xs, &ys) - 1.0).abs() < 1e-12);
+        let neg = [6.0, 4.0, 2.0];
+        assert!((pearson(&xs, &neg) + 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn quadratic_fit_recovers_coeffs() {
+        let xs: Vec<f64> = (0..20).map(|i| i as f64 * 0.3).collect();
+        let ys: Vec<f64> = xs.iter().map(|x| 1.5 - 0.7 * x + 0.2 * x * x).collect();
+        let (a, b, c) = polyfit2(&xs, &ys);
+        assert!((a - 1.5).abs() < 1e-8, "a={a}");
+        assert!((b + 0.7).abs() < 1e-8, "b={b}");
+        assert!((c - 0.2).abs() < 1e-8, "c={c}");
+    }
+
+    #[test]
+    fn linear_fit() {
+        let xs = [0.0, 1.0, 2.0, 3.0];
+        let ys = [1.0, 3.0, 5.0, 7.0];
+        let (a, b) = polyfit1(&xs, &ys);
+        assert!((a - 1.0).abs() < 1e-10);
+        assert!((b - 2.0).abs() < 1e-10);
+    }
+
+    #[test]
+    fn histogram_counts() {
+        let xs = [-10.0, 0.1, 0.2, 0.9, 10.0];
+        let (centers, counts) = histogram(&xs, 0.0, 1.0, 2);
+        assert_eq!(centers.len(), 2);
+        assert_eq!(counts.iter().sum::<usize>(), xs.len());
+        assert_eq!(counts[0], 3); // -10 clamps into bin 0, plus 0.1, 0.2
+        assert_eq!(counts[1], 2); // 0.9 and clamped 10.0
+    }
+}

@@ -1,0 +1,269 @@
+//! Property-based tests (mini-harness in `dsee::util::prop`) over
+//! coordinator invariants, mask algebra, and data invariants.
+
+use dsee::config::ModelCfg;
+use dsee::coordinator::serve::{start, EchoBackend, ServeCfg};
+use dsee::data::glue::{gen_example, GlueTask, Label};
+use dsee::dsee::magnitude_prune::magnitude_prune_global;
+use dsee::dsee::omega::{select_omega, OmegaMethod};
+use dsee::nn::linear::Linear;
+use dsee::tensor::Tensor;
+use dsee::util::prop::{check, Config, PairOf, UsizeIn, VecOf};
+use dsee::util::Rng;
+use std::time::Duration;
+
+#[test]
+fn prop_serve_no_request_lost_or_duplicated() {
+    // For any (client count, per-client request count), every request is
+    // answered exactly once with its own payload.
+    check(
+        &Config {
+            cases: 12,
+            seed: 0x5E12,
+            max_shrink: 30,
+        },
+        &PairOf(UsizeIn(1, 6), UsizeIn(1, 25)),
+        |&(clients, per_client)| {
+            let (client, server) = start(
+                Box::new(EchoBackend {
+                    seq: 3,
+                    delay: Duration::from_micros(200),
+                }),
+                ServeCfg {
+                    max_batch: 4,
+                    max_wait: Duration::from_micros(300),
+                    queue_depth: 512,
+                },
+            );
+            let mut handles = Vec::new();
+            for c in 0..clients {
+                let cl = client.clone();
+                handles.push(std::thread::spawn(move || {
+                    let mut ok = true;
+                    for i in 0..per_client {
+                        let payload = vec![c as u32 * 1000 + i as u32, 1, 2];
+                        let want: u32 = payload.iter().sum();
+                        let resp = cl.infer(payload).unwrap();
+                        ok &= resp.logits[0] as u32 == want;
+                    }
+                    ok
+                }));
+            }
+            drop(client);
+            let all_ok = handles.into_iter().all(|h| h.join().unwrap());
+            let stats = server.join();
+            if !all_ok {
+                return Err("response payload mismatch".into());
+            }
+            if stats.requests != clients * per_client {
+                return Err(format!(
+                    "served {} != submitted {}",
+                    stats.requests,
+                    clients * per_client
+                ));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_serve_batch_bound_respected() {
+    check(
+        &Config {
+            cases: 8,
+            seed: 0x5E13,
+            max_shrink: 20,
+        },
+        &UsizeIn(1, 8),
+        |&max_batch| {
+            let (client, server) = start(
+                Box::new(EchoBackend {
+                    seq: 2,
+                    delay: Duration::from_millis(1),
+                }),
+                ServeCfg {
+                    max_batch,
+                    max_wait: Duration::from_millis(2),
+                    queue_depth: 256,
+                },
+            );
+            let mut handles = Vec::new();
+            for t in 0..6u32 {
+                let cl = client.clone();
+                handles.push(std::thread::spawn(move || {
+                    (0..8u32)
+                        .map(|i| cl.infer(vec![t, i]).unwrap().batch_size)
+                        .max()
+                        .unwrap()
+                }));
+            }
+            drop(client);
+            let observed_max = handles
+                .into_iter()
+                .map(|h| h.join().unwrap())
+                .max()
+                .unwrap();
+            server.join();
+            if observed_max > max_batch {
+                return Err(format!("batch {observed_max} > bound {max_batch}"));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_magnitude_prune_hits_requested_sparsity() {
+    // For any sparsity in [0, 0.9] and any matrix size, the achieved
+    // sparsity is within 2% of the request and masked grads stay zero.
+    check(
+        &Config {
+            cases: 30,
+            seed: 0x5E14,
+            max_shrink: 40,
+        },
+        &PairOf(UsizeIn(4, 40), UsizeIn(0, 9)),
+        |&(dim, tenth)| {
+            let sparsity = tenth as f64 / 10.0;
+            let mut rng = Rng::new(dim as u64 * 10 + tenth as u64);
+            let mut lin = Linear::new(dim, dim + 3, &mut rng);
+            {
+                let mut lins = [&mut lin];
+                let got = magnitude_prune_global(&mut lins, sparsity);
+                if (got - sparsity).abs() > 0.02 {
+                    return Err(format!("requested {sparsity} got {got}"));
+                }
+            }
+            // Gradients under the mask must be exactly zero.
+            let x = Tensor::randn(&[5, dim], 1.0, &mut rng);
+            let y = lin.forward(&x);
+            lin.zero_grad();
+            lin.backward(&x, &y);
+            if let Some(m) = &lin.mask {
+                for (g, mk) in lin.gw.data.iter().zip(&m.data) {
+                    if *mk == 0.0 && *g != 0.0 {
+                        return Err("gradient leaked through mask".into());
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_omega_supports_are_valid_and_distinct() {
+    check(
+        &Config {
+            cases: 25,
+            seed: 0x5E15,
+            max_shrink: 40,
+        },
+        &PairOf(UsizeIn(2, 24), UsizeIn(0, 60)),
+        |&(dim, n)| {
+            let mut rng = Rng::new(dim as u64 ^ (n as u64) << 8);
+            let w = Tensor::randn(&[dim, dim + 1], 1.0, &mut rng);
+            for method in [OmegaMethod::Decompose, OmegaMethod::Magnitude, OmegaMethod::Random] {
+                let om = select_omega(&w, method, n, 2, 3, &mut rng);
+                let expect = n.min(dim * (dim + 1));
+                if om.len() != expect {
+                    return Err(format!("{method:?}: {} != {expect}", om.len()));
+                }
+                let mut set = std::collections::HashSet::new();
+                for &(i, j) in &om {
+                    if i >= dim || j >= dim + 1 {
+                        return Err(format!("{method:?}: ({i},{j}) out of range"));
+                    }
+                    if !set.insert((i, j)) {
+                        return Err(format!("{method:?}: duplicate ({i},{j})"));
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_glue_examples_always_well_formed() {
+    use dsee::data::glue::ALL_TASKS;
+    check(
+        &Config {
+            cases: 40,
+            seed: 0x5E16,
+            max_shrink: 10,
+        },
+        &PairOf(UsizeIn(0, 7), UsizeIn(0, 10_000)),
+        |&(task_idx, seed)| {
+            let task = ALL_TASKS[task_idx];
+            let mut rng = Rng::new(seed as u64);
+            for _ in 0..20 {
+                let ex = gen_example(task, 0.05, &mut rng);
+                if ex.ids.len() != task.seq_len() {
+                    return Err("wrong length".into());
+                }
+                if ex.ids.iter().any(|&t| t as usize >= ModelCfg::sim_bert_s().vocab) {
+                    return Err("token out of vocab".into());
+                }
+                match ex.label {
+                    Label::Class(c) if task != GlueTask::Stsb => {
+                        if c >= task.n_classes() {
+                            return Err(format!("class {c} out of range"));
+                        }
+                    }
+                    Label::Score(s) if task == GlueTask::Stsb => {
+                        if !(0.0..=1.0).contains(&s) {
+                            return Err(format!("score {s} out of range"));
+                        }
+                    }
+                    _ => return Err("label kind mismatch".into()),
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_grid_scheduler_returns_every_job_in_order() {
+    use dsee::coordinator::{run_grid, Job, JobOutcome};
+    use std::collections::BTreeMap;
+    check(
+        &Config {
+            cases: 15,
+            seed: 0x5E17,
+            max_shrink: 20,
+        },
+        &PairOf(UsizeIn(0, 40), UsizeIn(1, 8)),
+        |&(n_jobs, workers)| {
+            let jobs: Vec<Job> = (0..n_jobs)
+                .map(|i| Job {
+                    id: i,
+                    name: format!("j{i}"),
+                    run: Box::new(move || dsee::train::RunResult {
+                        method: format!("m{i}"),
+                        task: "t".into(),
+                        trainable_params: i,
+                        total_params: 0,
+                        sparsity: "0%".into(),
+                        metrics: BTreeMap::new(),
+                        losses: vec![],
+                        seconds: 0.0,
+                    }),
+                })
+                .collect();
+            let out = run_grid(jobs, workers);
+            if out.len() != n_jobs {
+                return Err(format!("{} outcomes for {n_jobs} jobs", out.len()));
+            }
+            for (i, o) in out.iter().enumerate() {
+                match o {
+                    JobOutcome::Done(r) if r.method == format!("m{i}") => {}
+                    _ => return Err(format!("slot {i} holds wrong result")),
+                }
+            }
+            Ok(())
+        },
+    );
+}
