@@ -52,7 +52,7 @@ fn main() -> anyhow::Result<()> {
     let t_all = Instant::now();
 
     // ---- 1. pre-train ----------------------------------------------------
-    println!("[1/6] pre-training {} on the synthetic corpus …", arch.name);
+    println!("[1/7] pre-training {} on the synthetic corpus …", arch.name);
     let t0 = Instant::now();
     let mut model = pretrain_encoder(&arch, 0xBA5E, 220);
     let probe = dsee::train::pretrain::probe_encoder(&model, 99);
@@ -63,7 +63,7 @@ fn main() -> anyhow::Result<()> {
     let total_params = model.count_total();
 
     // ---- 2. GreBsmo Ω ------------------------------------------------------
-    println!("[2/6] GreBsmo decomposition of attention projections (Eqn. 1) …");
+    println!("[2/7] GreBsmo decomposition of attention projections (Eqn. 1) …");
     let mut rng = Rng::new(42);
     let mut errs = Vec::new();
     for lin in model.attn_projections_mut().into_iter().take(4) {
@@ -85,7 +85,7 @@ fn main() -> anyhow::Result<()> {
     };
     let trainable = attach_dsee(&mut model, &dsee_cfg, &mut rng);
     println!(
-        "[3/6] DSEE fine-tune: {} trainable of {} total ({:.2}%)",
+        "[3/7] DSEE fine-tune: {} trainable of {} total ({:.2}%)",
         dsee::train::fmt_params(trainable),
         dsee::train::fmt_params(total_params),
         100.0 * trainable as f64 / total_params as f64
@@ -118,7 +118,7 @@ fn main() -> anyhow::Result<()> {
     println!("      loss curve → results/e2e_loss_curve.csv");
 
     // ---- 4. unstructured prune + recovery ----------------------------------
-    println!("[4/6] one-shot global magnitude pruning at 50% (S₁) + recovery …");
+    println!("[4/7] one-shot global magnitude pruning at 50% (S₁) + recovery …");
     let mut unstructured_model = trainer.model.clone();
     {
         let mut lins = unstructured_model.all_linears_mut();
@@ -136,7 +136,7 @@ fn main() -> anyhow::Result<()> {
     );
 
     // ---- 5. structured prune + recovery ------------------------------------
-    println!("[5/6] structured: ℓ₁ gates → prune 25% heads + 40% FFN + recovery …");
+    println!("[5/7] structured: ℓ₁ gates → prune 25% heads + 40% FFN + recovery …");
     let mut structured_model = trainer.model.clone();
     enable_gate_training(&mut structured_model);
     let mut st = Trainer::new(structured_model, cfg.clone());
@@ -153,7 +153,7 @@ fn main() -> anyhow::Result<()> {
     );
 
     // ---- 6. report -----------------------------------------------------------
-    println!("[6/6] stage summary:");
+    println!("[6/7] stage summary:");
     let seq = arch.max_seq;
     let f_dense = count_flops(&arch, seq, &FlopsOpts::lora(8)).total();
     let f_struct = count_flops(
@@ -188,6 +188,70 @@ fn main() -> anyhow::Result<()> {
         format!("{:.2}", f_struct / f_dense),
     ]);
     table.emit("e2e_pipeline");
+
+    // ---- 7. compile for inference ------------------------------------------
+    // The train/infer split: freeze each stage's model into an
+    // InferenceModel, check logits parity against the training-path
+    // forward, and measure the per-batch win of the merged/CSR kernels.
+    println!("[7/7] compile-then-serve: parity + latency of the frozen models …");
+    let eval_batch: Vec<u32> = eval_ds
+        .examples
+        .iter()
+        .take(16)
+        .flat_map(|e| e.ids.iter().copied())
+        .collect();
+    let seq_len = eval_ds.seq_len;
+    let mut compile_table = Table::new(
+        "Compiled inference (batch 16, training-path forward = 1.00)",
+        &["model", "policy", "max |Δlogit|", "nnz frac", "rel. time"],
+    );
+    for (tag, model) in [
+        ("DSEE dense", &trainer.model),
+        ("DSEE + S₁ 50%", &rec.model),
+        ("DSEE + structured", &st.model),
+    ] {
+        let (want, _) = model.forward(&eval_batch, 16, seq_len);
+        let time_of = |f: &mut dyn FnMut()| {
+            f(); // warmup
+            let t0 = Instant::now();
+            for _ in 0..10 {
+                f();
+            }
+            t0.elapsed().as_secs_f64() / 10.0
+        };
+        let t_train = time_of(&mut || {
+            let _ = model.forward(&eval_batch, 16, seq_len);
+        });
+        for policy in [
+            dsee::infer::MergePolicy::Merged,
+            dsee::infer::MergePolicy::Csr,
+            dsee::infer::MergePolicy::Compact,
+        ] {
+            let compiled = model.compile(policy);
+            let got = compiled.forward(&eval_batch, 16, seq_len);
+            let mut worst = 0.0f32;
+            for (a, b) in want.data.iter().zip(&got.data) {
+                worst = worst.max((a - b).abs());
+            }
+            anyhow::ensure!(
+                worst < 1e-3,
+                "{tag}/{}: compiled logits diverged ({worst})",
+                policy.label()
+            );
+            let t_inf = time_of(&mut || {
+                let _ = compiled.forward(&eval_batch, 16, seq_len);
+            });
+            let stats = compiled.stats();
+            compile_table.row(vec![
+                tag.into(),
+                policy.label().into(),
+                format!("{worst:.1e}"),
+                format!("{:.2}", 1.0 - stats.sparsity()),
+                format!("{:.2}", t_inf / t_train),
+            ]);
+        }
+    }
+    compile_table.emit("e2e_compiled_inference");
     println!("total wall-clock: {:.1}s", t_all.elapsed().as_secs_f64());
 
     anyhow::ensure!(acc_dense > 0.7, "dense DSEE accuracy too low");

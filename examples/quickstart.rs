@@ -11,15 +11,19 @@
 //! Run: `cargo run --release --example quickstart`
 
 use dsee::config::{DseeCfg, ModelCfg, TrainCfg};
+use dsee::coordinator::serve::{start, ServeCfg};
 use dsee::data::batch::Batcher;
 use dsee::data::glue::{make_dataset, GlueTask, Label};
 use dsee::dsee::attach_dsee;
-use dsee::runtime::bridge::{export_params, split_param_specs};
+use dsee::infer::MergePolicy;
+use dsee::runtime::bridge::{export_params, import_params, split_param_specs};
 use dsee::runtime::{default_artifact_dir, Input, Runtime};
 use dsee::tensor::Tensor;
 use dsee::train::pretrain::cached_encoder;
 use dsee::train::trainer::Trainer;
 use dsee::util::Rng;
+use std::sync::Arc;
+use std::time::Duration;
 
 fn main() -> anyhow::Result<()> {
     dsee::util::logging::init();
@@ -157,6 +161,69 @@ fn main() -> anyhow::Result<()> {
     let acc = correct as f64 / total as f64;
     println!("\nAOT eval accuracy on sst2-sim: {acc:.4} ({correct}/{total})");
     anyhow::ensure!(acc > 0.7, "quickstart accuracy too low: {acc}");
+
+    // ---- compile-then-serve finale ----------------------------------------
+    // Close the loop: import the PJRT-trained trainable group back into
+    // the native model, compile it into a frozen InferenceModel, and
+    // serve the eval set through the multi-worker batching coordinator.
+    import_params(&mut model, trainable_specs, &trainable)?;
+    let compiled = Arc::new(model.compile(MergePolicy::Merged));
+    println!("\ncompiled for serving: policy=merged, seq={}", arch.max_seq);
+    let (client, server) = start(
+        compiled,
+        ServeCfg {
+            max_batch: batch_sz,
+            max_wait: Duration::from_micros(300),
+            queue_depth: 256,
+            workers: 2,
+        },
+    );
+    let t_serve = std::time::Instant::now();
+    let mut serve_correct = 0usize;
+    let mut serve_handles = Vec::new();
+    for t in 0..4usize {
+        let client = client.clone();
+        let work: Vec<(Vec<u32>, usize)> = eval
+            .examples
+            .iter()
+            .skip(t)
+            .step_by(4)
+            .map(|e| {
+                let want = match e.label {
+                    Label::Class(c) => c,
+                    _ => unreachable!(),
+                };
+                (e.ids.clone(), want)
+            })
+            .collect();
+        serve_handles.push(std::thread::spawn(move || {
+            let mut ok = 0usize;
+            for (ids, want) in work {
+                let resp = client.infer(ids).unwrap();
+                let pred = if resp.logits[1] > resp.logits[0] { 1 } else { 0 };
+                if pred == want {
+                    ok += 1;
+                }
+            }
+            ok
+        }));
+    }
+    drop(client);
+    for h in serve_handles {
+        serve_correct += h.join().unwrap();
+    }
+    let stats = server.join();
+    let serve_acc = serve_correct as f64 / eval.examples.len() as f64;
+    println!(
+        "served {} requests at {:.0} req/s (mean batch {:.1}): accuracy {serve_acc:.4}",
+        stats.requests,
+        stats.requests as f64 / t_serve.elapsed().as_secs_f64(),
+        stats.mean_batch(),
+    );
+    anyhow::ensure!(
+        (serve_acc - acc).abs() < 0.05,
+        "compiled serving accuracy {serve_acc} diverged from AOT eval {acc}"
+    );
     println!("quickstart OK");
     Ok(())
 }

@@ -2,10 +2,14 @@
 //! the stack, measured with the in-crate harness (criterion is
 //! unavailable offline).
 //!
-//! * L3 native engine: matmul kernels (serial + threaded), DseeLinear
-//!   forward/backward, a full training step, GreBsmo, global pruning;
+//! * L3 native engine: matmul kernels (serial + threaded + fused-mask),
+//!   DseeLinear forward/backward, a full training step, GreBsmo, global
+//!   pruning;
+//! * Compiled inference: training-path forward vs `compile(Merged)` vs
+//!   `compile(Csr)` at 50%/80% unstructured sparsity — the tentpole's
+//!   headline numbers;
 //! * Serving: dynamic-batcher round-trip on a null backend (queue
-//!   overhead) and on the native model;
+//!   overhead), single- vs multi-worker;
 //! * Runtime: PJRT execute latency for the kernel/forward/train-step
 //!   artifacts (skipped gracefully when artifacts are absent).
 
@@ -16,6 +20,7 @@ use dsee::data::glue::{make_dataset, GlueTask};
 use dsee::dsee::grebsmo::grebsmo;
 use dsee::dsee::magnitude_prune::magnitude_prune_global;
 use dsee::dsee::attach_dsee;
+use dsee::infer::MergePolicy;
 use dsee::nn::Transformer;
 use dsee::runtime::bridge::{export_params, split_param_specs};
 use dsee::runtime::{default_artifact_dir, Input, Runtime};
@@ -23,6 +28,7 @@ use dsee::tensor::linalg::{matmul, matmul_at, matmul_bt, par_matmul};
 use dsee::tensor::Tensor;
 use dsee::train::trainer::Trainer;
 use dsee::util::Rng;
+use std::sync::Arc;
 use std::time::Duration;
 
 fn main() {
@@ -113,17 +119,66 @@ fn main() {
         black_box(magnitude_prune_global(&mut lins, 0.5));
     });
 
+    println!("\n== compiled inference (train/infer split) ==");
+    // A DSEE model with non-trivial carriers at two S₁ sparsities: the
+    // acceptance bench — Merged/Csr must beat the unmerged masked
+    // forward at ≥50% unstructured sparsity.
+    for sparsity in [0.5, 0.8] {
+        let mut m = Transformer::new(&arch, &mut rng);
+        attach_dsee(
+            &mut m,
+            &DseeCfg {
+                rank: 8,
+                n_sparse: 64,
+                ..DseeCfg::default()
+            },
+            &mut rng,
+        );
+        for lin in m.attn_projections_mut() {
+            if let Some(a) = &mut lin.adapter {
+                a.u = Tensor::randn(&[a.u.rows(), a.u.cols()], 0.1, &mut rng);
+            }
+        }
+        {
+            let mut lins = m.all_linears_mut();
+            magnitude_prune_global(&mut lins, sparsity);
+        }
+        let seq = arch.max_seq;
+        let ids: Vec<u32> = (0..16 * seq).map(|i| (i % 200) as u32).collect();
+        let pct = (sparsity * 100.0) as u32;
+        let t_train = bench(&format!("training-path fwd b16 (S₁ {pct}%)"), 3, 20, || {
+            black_box(m.forward(&ids, 16, seq));
+        });
+        let merged = m.compile(MergePolicy::Merged);
+        let t_merged = bench(&format!("compiled merged fwd b16 (S₁ {pct}%)"), 3, 20, || {
+            black_box(merged.forward(&ids, 16, seq));
+        });
+        let csr = m.compile(MergePolicy::Csr);
+        let t_csr = bench(&format!("compiled csr    fwd b16 (S₁ {pct}%)"), 3, 20, || {
+            black_box(csr.forward(&ids, 16, seq));
+        });
+        println!(
+            "    → speedup vs training-path: merged {:.2}×, csr {:.2}× \
+             (csr skips {:.0}% of matmul weights)",
+            t_train.mean_s / t_merged.mean_s,
+            t_train.mean_s / t_csr.mean_s,
+            csr.stats().sparsity() * 100.0
+        );
+    }
+
     println!("\n== serving coordinator ==");
+    let serve_cfg = ServeCfg {
+        max_batch: 16,
+        max_wait: Duration::from_micros(100),
+        queue_depth: 4096,
+        workers: 1,
+    };
     let (client, server) = start(
-        Box::new(EchoBackend {
+        Arc::new(EchoBackend {
             seq: 24,
             delay: Duration::ZERO,
         }),
-        ServeCfg {
-            max_batch: 16,
-            max_wait: Duration::from_micros(100),
-            queue_depth: 4096,
-        },
+        serve_cfg.clone(),
     );
     let s = bench("serve round-trip (null backend)", 10, 2000, || {
         black_box(client.infer(vec![1; 24]).unwrap());
@@ -134,6 +189,37 @@ fn main() {
     );
     drop(client);
     server.join();
+
+    // Multi-worker scaling on a compute-bound backend: 4 workers share
+    // the queue and overlap their batches.
+    for workers in [1usize, 4] {
+        let (client, server) = start(
+            Arc::new(EchoBackend {
+                seq: 24,
+                delay: Duration::from_micros(500),
+            }),
+            ServeCfg {
+                max_batch: 1,
+                workers,
+                ..serve_cfg.clone()
+            },
+        );
+        let s = bench(&format!("serve 8-client burst ({workers} worker)"), 2, 20, || {
+            let mut handles = Vec::new();
+            for _ in 0..8 {
+                let c = client.clone();
+                handles.push(std::thread::spawn(move || {
+                    c.infer(vec![1; 24]).unwrap();
+                }));
+            }
+            for h in handles {
+                h.join().unwrap();
+            }
+        });
+        println!("    → {:.0} req/s", s.throughput(8.0));
+        drop(client);
+        server.join();
+    }
 
     println!("\n== PJRT runtime ==");
     let dir = default_artifact_dir();

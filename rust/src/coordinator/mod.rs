@@ -1,6 +1,7 @@
 //! Layer-3 coordination: a worker-pool experiment scheduler (drives the
-//! table/figure benches across threads) and a dynamic-batching serving
-//! loop over either the native engine or a PJRT artifact.
+//! table/figure benches across threads) and the compile-then-serve
+//! inference server ([`serve`]) — N worker threads batching requests
+//! against one shared, frozen [`crate::infer::InferenceModel`].
 //!
 //! No tokio offline — the event loop is `std::thread` + channels, which
 //! at this request scale (CPU inference, μs-scale queue ops) is not the

@@ -1,25 +1,60 @@
-//! Dynamic-batching inference server.
+//! Dynamic-batching inference server over **compiled models**.
 //!
-//! Requests enter a bounded queue; a batcher thread drains up to
-//! `max_batch` requests (waiting at most `max_wait` for stragglers),
-//! runs one forward on the backend, and answers each request through
-//! its own channel. This is the paper's "resource-efficient inference"
-//! story operationalized: the same loop runs the dense model, the
-//! unstructured-pruned model, and the structurally-pruned model, and the
-//! serve example reports the latency/throughput difference.
+//! The serving flow is *compile-then-serve*: train a
+//! [`crate::nn::Transformer`], call
+//! [`crate::nn::Transformer::compile`] with a
+//! [`crate::infer::MergePolicy`] to get a frozen
+//! [`InferenceModel`], wrap it in an `Arc`, and hand it to [`start`].
+//! The server shares that one read-only model across
+//! [`ServeCfg::workers`] worker threads — there is no per-worker copy
+//! and no lock around inference, because the compiled model is
+//! immutable (`Sync` by construction).
+//!
+//! Each worker drains up to [`ServeCfg::max_batch`] requests from the
+//! shared bounded queue (waiting at most [`ServeCfg::max_wait`] for
+//! stragglers), runs one forward, and answers every request through its
+//! own channel. Malformed requests (wrong sequence length) and backend
+//! panics become per-request error [`Response`]s — they never take a
+//! worker down. The queue is a `sync_channel` of depth
+//! [`ServeCfg::queue_depth`], so overload applies backpressure to
+//! clients (submit blocks) instead of growing memory without bound.
+//!
+//! [`Backend`] stays open for non-compiled engines: [`EchoBackend`]
+//! (tests/queue benchmarks) and [`NativeBackend`] (the mutable
+//! training-path model, kept as the unmerged baseline the serve example
+//! measures the compiled representations against).
 
+use crate::infer::InferenceModel;
 use crate::nn::Transformer;
+use std::panic::AssertUnwindSafe;
 use std::sync::mpsc::{self, Receiver, RecvTimeoutError, Sender, SyncSender};
+use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
-/// Inference backend abstraction: native engine or PJRT artifact.
-pub trait Backend: Send {
+/// Inference backend abstraction. `Send + Sync` because one instance is
+/// shared (via `Arc`) by every worker thread.
+pub trait Backend: Send + Sync {
     /// Classify a flat batch; returns per-example logits rows.
     fn infer(&self, ids: &[u32], batch: usize, seq: usize) -> Vec<Vec<f32>>;
     fn seq_len(&self) -> usize;
 }
 
-/// Native-engine backend.
+/// The compiled model *is* a backend — the intended production path.
+impl Backend for InferenceModel {
+    fn infer(&self, ids: &[u32], batch: usize, seq: usize) -> Vec<Vec<f32>> {
+        let logits = self.forward(ids, batch, seq);
+        (0..batch).map(|i| logits.row(i).to_vec()).collect()
+    }
+
+    fn seq_len(&self) -> usize {
+        self.cfg.max_seq
+    }
+}
+
+/// Training-path backend: serves the mutable [`Transformer`] directly
+/// (masked weights re-applied every forward). Kept as the unmerged
+/// baseline for latency comparisons and parity debugging; production
+/// serving should compile first.
 pub struct NativeBackend {
     pub model: Transformer,
 }
@@ -42,12 +77,26 @@ pub struct Request {
     pub enqueued: Instant,
 }
 
-/// Reply: logits + queueing/compute latency breakdown.
+/// Reply: logits + queueing/compute latency breakdown. `error` is set
+/// (and `logits` empty) when the request was rejected or the backend
+/// failed on its batch.
 #[derive(Clone, Debug)]
 pub struct Response {
     pub logits: Vec<f32>,
     pub queue_us: u64,
     pub batch_size: usize,
+    pub error: Option<String>,
+}
+
+impl Response {
+    fn failure(msg: String) -> Response {
+        Response {
+            logits: Vec::new(),
+            queue_us: 0,
+            batch_size: 0,
+            error: Some(msg),
+        }
+    }
 }
 
 /// Server configuration.
@@ -56,6 +105,9 @@ pub struct ServeCfg {
     pub max_batch: usize,
     pub max_wait: Duration,
     pub queue_depth: usize,
+    /// Worker threads sharing the backend. Each worker forms and runs
+    /// its own batches; 1 reproduces the single-threaded batcher.
+    pub workers: usize,
 }
 
 impl Default for ServeCfg {
@@ -64,6 +116,7 @@ impl Default for ServeCfg {
             max_batch: 16,
             max_wait: Duration::from_millis(2),
             queue_depth: 1024,
+            workers: 1,
         }
     }
 }
@@ -75,7 +128,8 @@ pub struct Client {
 }
 
 impl Client {
-    /// Submit and wait for the reply.
+    /// Submit and wait for the reply. Blocks while the queue is full
+    /// (backpressure). Rejected/failed requests surface as `Err`.
     pub fn infer(&self, ids: Vec<u32>) -> crate::Result<Response> {
         let (reply_tx, reply_rx) = mpsc::channel();
         self.tx
@@ -85,21 +139,31 @@ impl Client {
                 enqueued: Instant::now(),
             })
             .map_err(|_| anyhow::anyhow!("server stopped"))?;
-        reply_rx
+        let resp = reply_rx
             .recv()
-            .map_err(|_| anyhow::anyhow!("server dropped request"))
+            .map_err(|_| anyhow::anyhow!("server dropped request"))?;
+        if let Some(e) = &resp.error {
+            anyhow::bail!("request failed: {e}");
+        }
+        Ok(resp)
     }
 }
 
-/// The running server; dropping `Client`s then calling `join` shuts down.
+/// The running server; dropping all `Client`s then calling `join` shuts
+/// down every worker.
 pub struct Server {
-    handle: Option<std::thread::JoinHandle<ServeStats>>,
+    handles: Vec<std::thread::JoinHandle<ServeStats>>,
 }
 
-/// Aggregate statistics from the batcher loop.
+/// Aggregate statistics, merged across workers on `join`.
 #[derive(Clone, Debug, Default)]
 pub struct ServeStats {
+    /// Successfully answered requests.
     pub requests: usize,
+    /// Requests rejected before batching (e.g. bad sequence length).
+    pub rejected: usize,
+    /// Requests answered with an error because the backend panicked.
+    pub failed: usize,
     pub batches: usize,
     pub total_batch_fill: usize,
 }
@@ -112,69 +176,138 @@ impl ServeStats {
             self.total_batch_fill as f64 / self.batches as f64
         }
     }
-}
 
-/// Start the server; returns (client handle, server).
-pub fn start(backend: Box<dyn Backend>, cfg: ServeCfg) -> (Client, Server) {
-    let (tx, rx) = mpsc::sync_channel::<Request>(cfg.queue_depth);
-    let handle = std::thread::spawn(move || batcher_loop(backend, cfg, rx));
-    (
-        Client { tx },
-        Server {
-            handle: Some(handle),
-        },
-    )
-}
-
-impl Server {
-    /// Wait for shutdown (all clients dropped) and return stats.
-    pub fn join(mut self) -> ServeStats {
-        self.handle.take().unwrap().join().unwrap_or_default()
+    fn absorb(&mut self, other: &ServeStats) {
+        self.requests += other.requests;
+        self.rejected += other.rejected;
+        self.failed += other.failed;
+        self.batches += other.batches;
+        self.total_batch_fill += other.total_batch_fill;
     }
 }
 
-fn batcher_loop(backend: Box<dyn Backend>, cfg: ServeCfg, rx: Receiver<Request>) -> ServeStats {
+/// Start the server; returns (client handle, server). The backend is
+/// shared read-only across `cfg.workers` threads.
+pub fn start(backend: Arc<dyn Backend>, cfg: ServeCfg) -> (Client, Server) {
+    let (tx, rx) = mpsc::sync_channel::<Request>(cfg.queue_depth.max(1));
+    let rx = Arc::new(Mutex::new(rx));
+    let workers = cfg.workers.max(1);
+    let handles = (0..workers)
+        .map(|_| {
+            let backend = Arc::clone(&backend);
+            let cfg = cfg.clone();
+            let rx = Arc::clone(&rx);
+            std::thread::spawn(move || worker_loop(backend, cfg, rx))
+        })
+        .collect();
+    (Client { tx }, Server { handles })
+}
+
+impl Server {
+    /// Wait for shutdown (all clients dropped) and return merged stats.
+    pub fn join(self) -> ServeStats {
+        let mut stats = ServeStats::default();
+        for h in self.handles {
+            stats.absorb(&h.join().unwrap_or_default());
+        }
+        stats
+    }
+}
+
+fn panic_message(panic: Box<dyn std::any::Any + Send>) -> String {
+    panic
+        .downcast_ref::<String>()
+        .cloned()
+        .or_else(|| panic.downcast_ref::<&str>().map(|s| s.to_string()))
+        .unwrap_or_else(|| "backend panicked".into())
+}
+
+fn worker_loop(
+    backend: Arc<dyn Backend>,
+    cfg: ServeCfg,
+    rx: Arc<Mutex<Receiver<Request>>>,
+) -> ServeStats {
     let seq = backend.seq_len();
     let mut stats = ServeStats::default();
     loop {
-        // Block for the first request of a batch.
-        let first = match rx.recv() {
-            Ok(r) => r,
-            Err(_) => return stats, // all senders gone
-        };
-        let mut batch = vec![first];
-        let deadline = Instant::now() + cfg.max_wait;
-        // Fill up to max_batch or until the wait budget expires.
-        while batch.len() < cfg.max_batch {
-            let now = Instant::now();
-            if now >= deadline {
-                break;
-            }
-            match rx.recv_timeout(deadline - now) {
+        // Form a batch while holding the receiver; peers wait on the
+        // lock (there is nothing else for an idle worker to do) and
+        // compute in parallel once their batch is formed.
+        let mut batch = Vec::new();
+        {
+            let rx = match rx.lock() {
+                Ok(g) => g,
+                Err(_) => return stats, // a peer panicked while batching
+            };
+            match rx.recv() {
                 Ok(r) => batch.push(r),
-                Err(RecvTimeoutError::Timeout) => break,
-                Err(RecvTimeoutError::Disconnected) => break,
+                Err(_) => return stats, // all senders gone
+            }
+            let deadline = Instant::now() + cfg.max_wait;
+            while batch.len() < cfg.max_batch {
+                let now = Instant::now();
+                if now >= deadline {
+                    break;
+                }
+                match rx.recv_timeout(deadline - now) {
+                    Ok(r) => batch.push(r),
+                    Err(RecvTimeoutError::Timeout) => break,
+                    Err(RecvTimeoutError::Disconnected) => break,
+                }
             }
         }
-        // Assemble, validating sequence lengths.
-        let bsz = batch.len();
+        // Validate per request: one malformed request must not poison
+        // the batch, let alone the worker (the old loop asserted here).
+        let mut valid = Vec::with_capacity(batch.len());
+        for r in batch {
+            if r.ids.len() == seq {
+                valid.push(r);
+            } else {
+                stats.rejected += 1;
+                let _ = r.reply.send(Response::failure(format!(
+                    "bad request: got {} token ids, model expects {seq}",
+                    r.ids.len()
+                )));
+            }
+        }
+        if valid.is_empty() {
+            continue;
+        }
+        let bsz = valid.len();
         let mut ids = Vec::with_capacity(bsz * seq);
-        for r in &batch {
-            assert_eq!(r.ids.len(), seq, "request seq mismatch");
+        for r in &valid {
             ids.extend_from_slice(&r.ids);
         }
-        let logits = backend.infer(&ids, bsz, seq);
+        // Contain backend panics: answer the batch with errors and keep
+        // serving. The backend is read-only (`&self`), so observing it
+        // after a panic is benign.
+        let result =
+            std::panic::catch_unwind(AssertUnwindSafe(|| backend.infer(&ids, bsz, seq)));
         let now = Instant::now();
-        stats.requests += bsz;
-        stats.batches += 1;
-        stats.total_batch_fill += bsz;
-        for (r, row) in batch.into_iter().zip(logits) {
-            let queue_us = now.duration_since(r.enqueued).as_micros() as u64;
-            let _ = r.reply.send(Response {
-                logits: row,
-                queue_us,
-                batch_size: bsz,
-            });
+        match result {
+            Ok(logits) => {
+                // batches/total_batch_fill count *served* batches only,
+                // so mean_batch() stays requests-per-successful-batch.
+                stats.batches += 1;
+                stats.total_batch_fill += bsz;
+                stats.requests += bsz;
+                for (r, row) in valid.into_iter().zip(logits) {
+                    let queue_us = now.duration_since(r.enqueued).as_micros() as u64;
+                    let _ = r.reply.send(Response {
+                        logits: row,
+                        queue_us,
+                        batch_size: bsz,
+                        error: None,
+                    });
+                }
+            }
+            Err(panic) => {
+                stats.failed += bsz;
+                let msg = format!("backend error: {}", panic_message(panic));
+                for r in valid {
+                    let _ = r.reply.send(Response::failure(msg.clone()));
+                }
+            }
         }
     }
 }
@@ -220,16 +353,15 @@ pub fn latency_summary(mut micros: Vec<f64>) -> (f64, f64, f64) {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::infer::MergePolicy;
+
+    fn echo(seq: usize, delay: Duration) -> Arc<dyn Backend> {
+        Arc::new(EchoBackend { seq, delay })
+    }
 
     #[test]
     fn responses_match_requests() {
-        let (client, server) = start(
-            Box::new(EchoBackend {
-                seq: 4,
-                delay: Duration::ZERO,
-            }),
-            ServeCfg::default(),
-        );
+        let (client, server) = start(echo(4, Duration::ZERO), ServeCfg::default());
         let mut expected = Vec::new();
         let mut got = Vec::new();
         for i in 0..20u32 {
@@ -241,19 +373,18 @@ mod tests {
         drop(client);
         let stats = server.join();
         assert_eq!(stats.requests, 20);
+        assert_eq!(stats.rejected, 0);
     }
 
     #[test]
     fn concurrent_clients_all_served_with_batching() {
         let (client, server) = start(
-            Box::new(EchoBackend {
-                seq: 2,
-                delay: Duration::from_millis(3),
-            }),
+            echo(2, Duration::from_millis(3)),
             ServeCfg {
                 max_batch: 8,
                 max_wait: Duration::from_millis(5),
                 queue_depth: 256,
+                workers: 1,
             },
         );
         let mut handles = Vec::new();
@@ -285,16 +416,186 @@ mod tests {
     }
 
     #[test]
-    fn native_backend_serves_model() {
+    fn compiled_model_serves_across_workers() {
         use crate::config::ModelCfg;
         use crate::util::Rng;
         let mut rng = Rng::new(500);
         let model = Transformer::new(&ModelCfg::sim_bert_s(), &mut rng);
         let seq = model.cfg.max_seq;
+        let compiled = Arc::new(model.compile(MergePolicy::Merged));
         let (client, server) = start(
-            Box::new(NativeBackend { model }),
-            ServeCfg::default(),
+            compiled,
+            ServeCfg {
+                workers: 4,
+                ..ServeCfg::default()
+            },
         );
+        let mut handles = Vec::new();
+        for t in 0..4u32 {
+            let c = client.clone();
+            handles.push(std::thread::spawn(move || {
+                for i in 0..8u32 {
+                    let resp = c.infer(vec![(t + i) % 200; seq]).unwrap();
+                    assert_eq!(resp.logits.len(), 2);
+                    assert!(resp.logits.iter().all(|x| x.is_finite()));
+                }
+            }));
+        }
+        drop(client);
+        for h in handles {
+            h.join().unwrap();
+        }
+        let stats = server.join();
+        assert_eq!(stats.requests, 32);
+    }
+
+    #[test]
+    fn malformed_request_errors_without_killing_server() {
+        let (client, server) = start(echo(4, Duration::ZERO), ServeCfg::default());
+        // Wrong length → per-request error, not a worker panic.
+        let err = client.infer(vec![1, 2]).unwrap_err();
+        assert!(format!("{err}").contains("expects 4"), "{err}");
+        // The server still answers well-formed requests afterwards.
+        let resp = client.infer(vec![1, 2, 3, 4]).unwrap();
+        assert_eq!(resp.logits[0], 10.0);
+        drop(client);
+        let stats = server.join();
+        assert_eq!(stats.rejected, 1);
+        assert_eq!(stats.requests, 1);
+    }
+
+    #[test]
+    fn backend_panic_becomes_error_response() {
+        struct Bomb;
+        impl Backend for Bomb {
+            fn infer(&self, ids: &[u32], batch: usize, _seq: usize) -> Vec<Vec<f32>> {
+                if ids.contains(&13) {
+                    panic!("unlucky token");
+                }
+                vec![vec![1.0]; batch]
+            }
+            fn seq_len(&self) -> usize {
+                1
+            }
+        }
+        let (client, server) = start(Arc::new(Bomb), ServeCfg::default());
+        let err = client.infer(vec![13]).unwrap_err();
+        assert!(format!("{err}").contains("unlucky"), "{err}");
+        // Worker survived the panic.
+        assert_eq!(client.infer(vec![7]).unwrap().logits, vec![1.0]);
+        drop(client);
+        let stats = server.join();
+        assert_eq!(stats.failed, 1);
+        assert_eq!(stats.requests, 1);
+    }
+
+    #[test]
+    fn backpressure_full_queue_all_requests_complete() {
+        // queue_depth 2 + a slow backend: senders must block on the
+        // bounded queue, and every request must still be answered.
+        let (client, server) = start(
+            echo(1, Duration::from_millis(2)),
+            ServeCfg {
+                max_batch: 2,
+                max_wait: Duration::from_micros(200),
+                queue_depth: 2,
+                workers: 1,
+            },
+        );
+        let mut handles = Vec::new();
+        for t in 0..4u32 {
+            let c = client.clone();
+            handles.push(std::thread::spawn(move || {
+                let mut sum = 0u32;
+                for i in 0..12u32 {
+                    let resp = c.infer(vec![t * 100 + i]).unwrap();
+                    sum += resp.logits[0] as u32;
+                }
+                sum
+            }));
+        }
+        drop(client);
+        let mut total = 0u32;
+        for h in handles {
+            total += h.join().unwrap();
+        }
+        let want: u32 = (0..4u32)
+            .map(|t| (0..12u32).map(|i| t * 100 + i).sum::<u32>())
+            .sum();
+        assert_eq!(total, want);
+        let stats = server.join();
+        assert_eq!(stats.requests, 48);
+        assert_eq!(stats.rejected + stats.failed, 0);
+    }
+
+    #[test]
+    fn multi_worker_overlaps_slow_batches() {
+        // Structural overlap check (wall-clock comparisons live in
+        // benches/perf_hotpath.rs — CI machines are noisy): a backend
+        // that records its own concurrency must observe >1 in-flight
+        // batch when 4 workers drain 8 parallel clients.
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        struct ConcurrencyProbe {
+            live: AtomicUsize,
+            peak: AtomicUsize,
+        }
+        impl Backend for ConcurrencyProbe {
+            fn infer(&self, _ids: &[u32], batch: usize, _seq: usize) -> Vec<Vec<f32>> {
+                let now = self.live.fetch_add(1, Ordering::SeqCst) + 1;
+                self.peak.fetch_max(now, Ordering::SeqCst);
+                std::thread::sleep(Duration::from_millis(5));
+                self.live.fetch_sub(1, Ordering::SeqCst);
+                vec![vec![0.0]; batch]
+            }
+            fn seq_len(&self) -> usize {
+                1
+            }
+        }
+        let probe = Arc::new(ConcurrencyProbe {
+            live: AtomicUsize::new(0),
+            peak: AtomicUsize::new(0),
+        });
+        let backend = Arc::clone(&probe);
+        let (client, server) = start(
+            backend,
+            ServeCfg {
+                max_batch: 1,
+                max_wait: Duration::from_micros(50),
+                queue_depth: 64,
+                workers: 4,
+            },
+        );
+        let mut handles = Vec::new();
+        for t in 0..8u32 {
+            let c = client.clone();
+            handles.push(std::thread::spawn(move || {
+                for i in 0..2u32 {
+                    c.infer(vec![t + i]).unwrap();
+                }
+            }));
+        }
+        drop(client);
+        for h in handles {
+            h.join().unwrap();
+        }
+        let stats = server.join();
+        assert_eq!(stats.requests, 16);
+        assert!(
+            probe.peak.load(Ordering::SeqCst) > 1,
+            "4 workers never overlapped a 5 ms batch"
+        );
+    }
+
+    #[test]
+    fn native_backend_serves_training_model() {
+        // The training-path backend stays supported (it is the unmerged
+        // baseline the serve example measures against).
+        use crate::config::ModelCfg;
+        use crate::util::Rng;
+        let mut rng = Rng::new(501);
+        let model = Transformer::new(&ModelCfg::sim_bert_s(), &mut rng);
+        let seq = model.cfg.max_seq;
+        let (client, server) = start(Arc::new(NativeBackend { model }), ServeCfg::default());
         let resp = client.infer(vec![1; seq]).unwrap();
         assert_eq!(resp.logits.len(), 2);
         assert!(resp.logits.iter().all(|x| x.is_finite()));

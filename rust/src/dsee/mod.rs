@@ -1,14 +1,25 @@
-//! The paper's core algorithms.
+//! The paper's core algorithms — the **training side** of the
+//! train/infer API split.
 //!
 //! * [`grebsmo`] — greedy bilateral decomposition solving Eqn. 1;
 //! * [`omega`] — Ω-support selection for S₂ (Alg. 1);
 //! * [`magnitude_prune`] — one-shot global magnitude masks S₁ (Alg. 2-II);
 //! * [`structured`] — ℓ₁-gated head pruning + FFN pruning (§3.3);
-//! * [`flops`] — the analytic efficiency model.
+//! * [`flops`] — the analytic efficiency model (its measured
+//!   counterpart is [`crate::infer::ModelStats`]).
 //!
 //! [`attach_dsee`] / [`attach_lora`] wire the parametrizations onto a
 //! [`Transformer`]'s attention projections, matching the paper's setup
 //! ("for each self-attention projection weights wᵢ in W", Alg. 1).
+//!
+//! Everything here mutates the trainable [`Transformer`]: carriers stay
+//! separate (W, S₁, U/V, S₂, gates) because gradients need them
+//! separate. When tuning is done, hand the model to
+//! [`Transformer::compile`](crate::infer) — the dual-sparsity carriers
+//! are folded into frozen, sparsity-exploiting kernels
+//! ([`crate::infer::MergePolicy`]) and served through
+//! [`crate::coordinator::serve`]. The flow is one line per stage:
+//! `attach_dsee → train → prune → compile(policy) → serve`.
 
 pub mod flops;
 pub mod grebsmo;

@@ -1,0 +1,879 @@
+//! The **inference subsystem**: compile a trained [`Transformer`] into a
+//! frozen, grad-free [`InferenceModel`] whose per-layer representation
+//! is chosen once, at compile time, by a [`MergePolicy`].
+//!
+//! This is the train/infer API split. The training model keeps W, S₁,
+//! U/V, and S₂ as *separate* trainable carriers because gradients need
+//! them separate; the serving path does not, so `compile` folds
+//! `W⊙S₁ + U·V·scale + S₂` into a single per-layer weight and bakes the
+//! structured head gates into the value projection:
+//!
+//! * [`MergePolicy::Merged`] — one dense matrix per linear: no per-call
+//!   mask clone, no adapter matmuls, no COO scatter on the hot path;
+//! * [`MergePolicy::Csr`] — the sparse base `W⊙S₁ + S₂` stored
+//!   compressed (row-sparse, see [`kernels::CsrMatrix`]) when its
+//!   sparsity clears [`CSR_MIN_SPARSITY`], with the *dense* low-rank UV
+//!   update kept as a separate O(d·r) side-path — merging UV into the
+//!   base would densify it and destroy exactly the sparsity this
+//!   policy exploits. S₁-pruned weights are *skipped*, not multiplied
+//!   as zeros — the paper's "resource-efficient inference" realized in
+//!   wall-clock rather than analytically;
+//! * [`MergePolicy::Compact`] — structurally dead units are physically
+//!   removed: zero-gated attention heads and FFN units whose fan-in is
+//!   identically zero vanish from the matmul shapes.
+//!
+//! All three produce bit-identical *semantics* (logits match the
+//! training-path forward to float rounding; see the parity tests here
+//! and in `tests/infer_parity.rs`). The serving coordinator
+//! (`crate::coordinator::serve`) shares one `Arc<InferenceModel>`
+//! across its worker pool — the model is immutable and `Sync` by
+//! construction.
+
+pub mod kernels;
+
+use crate::config::ModelCfg;
+use crate::nn::{Head, Transformer};
+use crate::tensor::linalg::{matmul, matmul_bt};
+use crate::tensor::Tensor;
+use kernels::CsrMatrix;
+
+/// Minimum merged-matrix sparsity for the `Csr` policy to actually pick
+/// the compressed representation; below this the index overhead loses
+/// to the dense kernel, so the compiler falls back to `Merged` for that
+/// layer (recorded per layer in [`ModelStats`]).
+pub const CSR_MIN_SPARSITY: f64 = 0.25;
+
+/// How `compile` represents each linear layer.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum MergePolicy {
+    /// Fold W⊙S₁ + UV + S₂ into one dense matrix per layer.
+    Merged,
+    /// Like `Merged`, but store layers compressed-sparse-row when the
+    /// merged matrix is sparse enough to win.
+    Csr,
+    /// Like `Merged`, plus physically remove zero-gated heads and dead
+    /// FFN units, shrinking the matmul shapes.
+    Compact,
+}
+
+impl MergePolicy {
+    pub fn label(&self) -> &'static str {
+        match self {
+            MergePolicy::Merged => "merged",
+            MergePolicy::Csr => "csr",
+            MergePolicy::Compact => "compact",
+        }
+    }
+}
+
+/// Compile-time carriers of one linear before representation choice:
+/// the sparse-able base `W⊙S₁ + S₂`, the optional dense low-rank update
+/// (U, V·-to-be-scaled, scale), and the bias. Gate folding and column
+/// surgery operate on this form; [`InferLinear::finalize`] then picks
+/// the stored representation.
+struct LinParts {
+    w: Tensor,
+    low: Option<(Tensor, Tensor, f32)>, // (u [in,r], v [r,out], scale)
+    bias: Vec<f32>,
+}
+
+impl LinParts {
+    fn from_linear(lin: &crate::nn::linear::Linear, policy: MergePolicy) -> LinParts {
+        // Only the Csr policy benefits from keeping UV apart; everything
+        // else folds it into the dense merged weight up front.
+        if policy == MergePolicy::Csr {
+            if let Some(a) = &lin.adapter {
+                let mut w = lin.effective_w();
+                if let Some(r) = &lin.residual {
+                    w = w.add(&r.to_dense(lin.in_dim(), lin.out_dim()));
+                }
+                return LinParts {
+                    w,
+                    low: Some((a.u.clone(), a.v.clone(), a.scale)),
+                    bias: lin.b.data.clone(),
+                };
+            }
+        }
+        LinParts {
+            w: lin.effective_total(),
+            low: None,
+            bias: lin.b.data.clone(),
+        }
+    }
+
+    /// Scale output columns `lo..hi` by `g` across every carrier — the
+    /// gate-folding primitive (weights, V factor, and bias all feed the
+    /// same output column).
+    fn scale_out_cols(&mut self, lo: usize, hi: usize, g: f32) {
+        let cols = self.w.cols();
+        for row in 0..self.w.rows() {
+            for j in lo..hi {
+                self.w.data[row * cols + j] *= g;
+            }
+        }
+        if let Some((_, v, _)) = &mut self.low {
+            let vc = v.cols();
+            for row in 0..v.rows() {
+                for j in lo..hi {
+                    v.data[row * vc + j] *= g;
+                }
+            }
+        }
+        for b in self.bias.iter_mut().take(hi).skip(lo) {
+            *b *= g;
+        }
+    }
+}
+
+/// A frozen linear: merged base weight (dense or CSR), an optional
+/// low-rank side-path (Csr policy only), and the bias. No gradient
+/// buffers, no mutable carriers — everything was folded at compile
+/// time.
+#[derive(Clone, Debug)]
+pub struct InferLinear {
+    repr: Repr,
+    /// (U, V, scale): adds `(x·U)·V·scale` — kept separate under the
+    /// Csr policy so the dense UV update cannot densify the base.
+    low: Option<(Tensor, Tensor, f32)>,
+    bias: Vec<f32>,
+}
+
+#[derive(Clone, Debug)]
+enum Repr {
+    Dense(Tensor),
+    Csr(CsrMatrix),
+}
+
+impl InferLinear {
+    fn finalize(parts: LinParts, policy: MergePolicy) -> InferLinear {
+        let LinParts { mut w, mut low, bias } = parts;
+        let repr = match policy {
+            MergePolicy::Csr => {
+                let csr = CsrMatrix::from_dense(&w);
+                if csr.sparsity() >= CSR_MIN_SPARSITY {
+                    Repr::Csr(csr)
+                } else {
+                    // Not sparse enough to win: fold UV back in and
+                    // store dense.
+                    if let Some((u, v, scale)) = low.take() {
+                        w = w.add(&matmul(&u, &v).scale(scale));
+                    }
+                    Repr::Dense(w)
+                }
+            }
+            MergePolicy::Merged | MergePolicy::Compact => {
+                debug_assert!(low.is_none(), "UV must be pre-folded outside Csr");
+                Repr::Dense(w)
+            }
+        };
+        InferLinear { repr, low, bias }
+    }
+
+    pub fn in_dim(&self) -> usize {
+        match &self.repr {
+            Repr::Dense(w) => w.rows(),
+            Repr::Csr(c) => c.rows,
+        }
+    }
+
+    pub fn out_dim(&self) -> usize {
+        match &self.repr {
+            Repr::Dense(w) => w.cols(),
+            Repr::Csr(c) => c.cols,
+        }
+    }
+
+    /// Stored multiply count per input row (2·nnz FLOPs each),
+    /// including the low-rank side-path factors when present.
+    pub fn nnz(&self) -> usize {
+        let base = match &self.repr {
+            Repr::Dense(w) => w.numel(),
+            Repr::Csr(c) => c.nnz(),
+        };
+        let low = self
+            .low
+            .as_ref()
+            .map_or(0, |(u, v, _)| u.numel() + v.numel());
+        base + low
+    }
+
+    pub fn is_csr(&self) -> bool {
+        matches!(self.repr, Repr::Csr(_))
+    }
+
+    /// y = x·W + b (+ (x·U)·V·scale when the side-path is live).
+    pub fn forward(&self, x: &Tensor) -> Tensor {
+        let mut y = match &self.repr {
+            Repr::Dense(w) => matmul(x, w),
+            Repr::Csr(c) => c.matmul(x),
+        };
+        if let Some((u, v, scale)) = &self.low {
+            let xu = matmul(x, u);
+            y.axpy(*scale, &matmul(&xu, v));
+        }
+        y.add_bias(&self.bias)
+    }
+}
+
+/// Frozen layer norm (γ, β only).
+#[derive(Clone, Debug)]
+pub struct InferNorm {
+    gamma: Vec<f32>,
+    beta: Vec<f32>,
+    eps: f32,
+}
+
+impl InferNorm {
+    fn from_train(ln: &crate::nn::layernorm::LayerNorm) -> InferNorm {
+        InferNorm {
+            gamma: ln.gamma.data.clone(),
+            beta: ln.beta.data.clone(),
+            eps: ln.eps,
+        }
+    }
+
+    /// Row-wise layer norm; same arithmetic order as the training
+    /// implementation so parity holds to float rounding.
+    fn apply(&self, x: &Tensor) -> Tensor {
+        let d = *x.shape.last().unwrap();
+        let rows = x.numel() / d;
+        let mut out = x.clone();
+        for r in 0..rows {
+            let seg = &x.data[r * d..(r + 1) * d];
+            let mean: f32 = seg.iter().sum::<f32>() / d as f32;
+            let var: f32 = seg.iter().map(|v| (v - mean) * (v - mean)).sum::<f32>() / d as f32;
+            let istd = 1.0 / (var + self.eps).sqrt();
+            for j in 0..d {
+                out.data[r * d + j] = (seg[j] - mean) * istd * self.gamma[j] + self.beta[j];
+            }
+        }
+        out
+    }
+}
+
+/// Frozen multi-head attention with gates folded into `wv`.
+#[derive(Clone, Debug)]
+pub struct InferAttention {
+    wq: InferLinear,
+    wk: InferLinear,
+    wv: InferLinear,
+    wo: InferLinear,
+    n_heads: usize,
+    head_dim: usize,
+    causal: bool,
+}
+
+// Head slice layout helpers are shared with the training attention —
+// one source of truth for the [B·S, width] memory layout.
+use crate::nn::attention::{gather_head_slice, scatter_head_slice};
+
+impl InferAttention {
+    fn forward(&self, x: &Tensor, batch: usize, seq: usize) -> Tensor {
+        let width = self.n_heads * self.head_dim;
+        let hd = self.head_dim;
+        let q2 = self.wq.forward(x);
+        let k2 = self.wk.forward(x);
+        let v2 = self.wv.forward(x); // gates pre-folded into wv
+        let rscale = 1.0 / (hd as f32).sqrt();
+        let mut ctx = Tensor::zeros(&[batch * seq, width]);
+        for b in 0..batch {
+            for h in 0..self.n_heads {
+                let qh = gather_head_slice(&q2, b, h, seq, width, hd);
+                let kh = gather_head_slice(&k2, b, h, seq, width, hd);
+                let vh = gather_head_slice(&v2, b, h, seq, width, hd);
+                let mut scores = matmul_bt(&qh, &kh).scale(rscale);
+                if self.causal {
+                    for i in 0..seq {
+                        for j in i + 1..seq {
+                            scores.data[i * seq + j] = -1e30;
+                        }
+                    }
+                }
+                let attn = scores.softmax_rows();
+                let ctx_h = matmul(&attn, &vh);
+                scatter_head_slice(&mut ctx, &ctx_h, b, h, seq, width, hd);
+            }
+        }
+        self.wo.forward(&ctx)
+    }
+}
+
+/// Frozen Houlsby adapter (baseline models only).
+#[derive(Clone, Debug)]
+pub struct InferAdapter {
+    down: InferLinear,
+    up: InferLinear,
+}
+
+impl InferAdapter {
+    fn forward(&self, x: &Tensor) -> Tensor {
+        let h = self.down.forward(x).gelu();
+        x.add(&self.up.forward(&h))
+    }
+}
+
+/// One frozen pre-LN block.
+#[derive(Clone, Debug)]
+pub struct InferBlock {
+    ln1: InferNorm,
+    attn: InferAttention,
+    ln2: InferNorm,
+    fc1: InferLinear,
+    fc2: InferLinear,
+    adapter1: Option<InferAdapter>,
+    adapter2: Option<InferAdapter>,
+}
+
+impl InferBlock {
+    fn forward(&self, x: &Tensor, batch: usize, seq: usize) -> Tensor {
+        let mut a_out = self.attn.forward(&self.ln1.apply(x), batch, seq);
+        if let Some(ad) = &self.adapter1 {
+            a_out = ad.forward(&a_out);
+        }
+        let x2 = x.add(&a_out);
+        let h = self.fc1.forward(&self.ln2.apply(&x2)).gelu();
+        let mut f_out = self.fc2.forward(&h);
+        if let Some(ad) = &self.adapter2 {
+            f_out = ad.forward(&f_out);
+        }
+        x2.add(&f_out)
+    }
+}
+
+/// Frozen task head.
+#[derive(Clone, Debug)]
+enum InferHead {
+    Classifier(InferLinear),
+    Regressor(InferLinear),
+    Lm(InferLinear),
+}
+
+/// Per-layer compile record (representation + stored weight count).
+#[derive(Clone, Debug)]
+pub struct LayerStat {
+    pub name: String,
+    pub rows: usize,
+    pub cols: usize,
+    pub nnz: usize,
+    pub csr: bool,
+}
+
+/// Aggregate compile statistics (the measured counterpart of the
+/// analytic `dsee::flops` model: `nnz` is what the kernels actually
+/// multiply, `dense_elems` what an unmerged dense model would).
+#[derive(Clone, Debug, Default)]
+pub struct ModelStats {
+    pub layers: Vec<LayerStat>,
+    pub nnz: usize,
+    pub dense_elems: usize,
+}
+
+impl ModelStats {
+    /// Fraction of matmul weights the compiled model skips.
+    pub fn sparsity(&self) -> f64 {
+        if self.dense_elems == 0 {
+            0.0
+        } else {
+            1.0 - self.nnz as f64 / self.dense_elems as f64
+        }
+    }
+
+    /// Projection/FFN matmul FLOPs per token (2·nnz), the component the
+    /// merge policies actually change. Attention score/context FLOPs
+    /// are shape-dependent and identical across policies at equal head
+    /// counts.
+    pub fn matmul_flops_per_token(&self) -> f64 {
+        2.0 * self.nnz as f64
+    }
+}
+
+/// The compiled, immutable serving model. `Send + Sync` by construction
+/// (owned data, no interior mutability): the serving worker pool shares
+/// one instance behind `Arc`.
+#[derive(Clone, Debug)]
+pub struct InferenceModel {
+    pub cfg: ModelCfg,
+    policy: MergePolicy,
+    tok: Tensor,
+    pos: Tensor,
+    prefix: Option<Tensor>,
+    blocks: Vec<InferBlock>,
+    ln_f: InferNorm,
+    head: InferHead,
+}
+
+/// Select `keep` columns of a `[rows, cols]` matrix.
+fn select_cols(w: &Tensor, keep: &[usize]) -> Tensor {
+    let (rows, cols) = (w.rows(), w.cols());
+    let mut out = Tensor::zeros(&[rows, keep.len()]);
+    for i in 0..rows {
+        for (nj, &j) in keep.iter().enumerate() {
+            debug_assert!(j < cols);
+            out.data[i * keep.len() + nj] = w.data[i * cols + j];
+        }
+    }
+    out
+}
+
+/// Select `keep` rows of a `[rows, cols]` matrix.
+fn select_rows(w: &Tensor, keep: &[usize]) -> Tensor {
+    let cols = w.cols();
+    let mut out = Tensor::zeros(&[keep.len(), cols]);
+    for (ni, &i) in keep.iter().enumerate() {
+        out.data[ni * cols..(ni + 1) * cols].copy_from_slice(&w.data[i * cols..(i + 1) * cols]);
+    }
+    out
+}
+
+impl InferenceModel {
+    /// Compile a training model. The source is read-only; the result
+    /// shares nothing with it.
+    pub fn compile(model: &Transformer, policy: MergePolicy) -> InferenceModel {
+        let blocks = model
+            .blocks
+            .iter()
+            .map(|blk| compile_block(blk, policy))
+            .collect();
+        let head = {
+            let merged = compile_linear(model.head_proj(), policy);
+            match &model.head {
+                Head::Classifier(_) => InferHead::Classifier(merged),
+                Head::Regressor(_) => InferHead::Regressor(merged),
+                Head::Lm(_) => InferHead::Lm(merged),
+            }
+        };
+        InferenceModel {
+            cfg: model.cfg.clone(),
+            policy,
+            tok: model.embed.tok.clone(),
+            pos: model.embed.pos.clone(),
+            prefix: model.prefix.as_ref().map(|p| p.vecs.clone()),
+            blocks,
+            ln_f: InferNorm::from_train(&model.ln_f),
+            head,
+        }
+    }
+
+    pub fn policy(&self) -> MergePolicy {
+        self.policy
+    }
+
+    pub fn n_prefix(&self) -> usize {
+        self.prefix.as_ref().map_or(0, |p| p.rows())
+    }
+
+    /// Grad-free forward. ids: [B·S]; logits shapes match
+    /// [`Transformer::forward`]:
+    /// * Classifier → [B, n_classes], Regressor → [B, 1],
+    /// * Lm → [B·(P+S), vocab].
+    pub fn forward(&self, ids: &[u32], batch: usize, seq: usize) -> Tensor {
+        assert_eq!(ids.len(), batch * seq, "ids vs batch*seq");
+        let d = self.tok.cols();
+        let vocab = self.tok.rows();
+        // Token + position embeddings.
+        let mut x_tok = Tensor::zeros(&[ids.len(), d]);
+        for (row, &id) in ids.iter().enumerate() {
+            let s = row % seq;
+            let t = id as usize;
+            assert!(t < vocab, "token id {t} out of vocab ({vocab})");
+            let dst = &mut x_tok.data[row * d..(row + 1) * d];
+            let tsrc = &self.tok.data[t * d..(t + 1) * d];
+            let psrc = &self.pos.data[s * d..(s + 1) * d];
+            for j in 0..d {
+                dst[j] = tsrc[j] + psrc[j];
+            }
+        }
+        // Prefix rows, if compiled in.
+        let p = self.n_prefix();
+        let eff_seq = seq + p;
+        let mut x = if p > 0 {
+            let pref = self.prefix.as_ref().unwrap();
+            let mut xx = Tensor::zeros(&[batch * eff_seq, d]);
+            for b in 0..batch {
+                for s in 0..p {
+                    let dst = (b * eff_seq + s) * d;
+                    xx.data[dst..dst + d].copy_from_slice(&pref.data[s * d..(s + 1) * d]);
+                }
+                for s in 0..seq {
+                    let src = (b * seq + s) * d;
+                    let dst = (b * eff_seq + p + s) * d;
+                    xx.data[dst..dst + d].copy_from_slice(&x_tok.data[src..src + d]);
+                }
+            }
+            xx
+        } else {
+            x_tok
+        };
+
+        for blk in &self.blocks {
+            x = blk.forward(&x, batch, eff_seq);
+        }
+        let h_final = self.ln_f.apply(&x);
+
+        match &self.head {
+            InferHead::Classifier(lin) | InferHead::Regressor(lin) => {
+                let mut pooled = Tensor::zeros(&[batch, d]);
+                for b in 0..batch {
+                    for s in 0..eff_seq {
+                        let src = (b * eff_seq + s) * d;
+                        for j in 0..d {
+                            pooled.data[b * d + j] += h_final.data[src + j];
+                        }
+                    }
+                }
+                let pooled = pooled.scale(1.0 / eff_seq as f32);
+                lin.forward(&pooled)
+            }
+            InferHead::Lm(lin) => lin.forward(&h_final),
+        }
+    }
+
+    /// Compile statistics: what each layer stores and skips.
+    pub fn stats(&self) -> ModelStats {
+        let mut st = ModelStats::default();
+        let mut push = |name: String, lin: &InferLinear| {
+            st.nnz += lin.nnz();
+            st.dense_elems += lin.in_dim() * lin.out_dim();
+            st.layers.push(LayerStat {
+                name,
+                rows: lin.in_dim(),
+                cols: lin.out_dim(),
+                nnz: lin.nnz(),
+                csr: lin.is_csr(),
+            });
+        };
+        for (i, blk) in self.blocks.iter().enumerate() {
+            push(format!("block{i}.attn.wq"), &blk.attn.wq);
+            push(format!("block{i}.attn.wk"), &blk.attn.wk);
+            push(format!("block{i}.attn.wv"), &blk.attn.wv);
+            push(format!("block{i}.attn.wo"), &blk.attn.wo);
+            push(format!("block{i}.ffn.fc1"), &blk.fc1);
+            push(format!("block{i}.ffn.fc2"), &blk.fc2);
+            for (tag, ad) in [("ad1", &blk.adapter1), ("ad2", &blk.adapter2)] {
+                if let Some(ad) = ad {
+                    push(format!("block{i}.{tag}.down"), &ad.down);
+                    push(format!("block{i}.{tag}.up"), &ad.up);
+                }
+            }
+        }
+        let head = match &self.head {
+            InferHead::Classifier(l) | InferHead::Regressor(l) | InferHead::Lm(l) => l,
+        };
+        push("head".into(), head);
+        st
+    }
+}
+
+impl Transformer {
+    /// Compile this (possibly DSEE-parametrized, possibly pruned)
+    /// training model into a frozen [`InferenceModel`]. The training
+    /// model is untouched; call again after further tuning.
+    pub fn compile(&self, policy: MergePolicy) -> InferenceModel {
+        InferenceModel::compile(self, policy)
+    }
+}
+
+fn compile_linear(lin: &crate::nn::linear::Linear, policy: MergePolicy) -> InferLinear {
+    InferLinear::finalize(LinParts::from_linear(lin, policy), policy)
+}
+
+fn compile_block(blk: &crate::nn::Block, policy: MergePolicy) -> InferBlock {
+    let att = &blk.attn;
+    let hd = att.head_dim;
+    let mut wq = LinParts::from_linear(&att.wq, policy);
+    let mut wk = LinParts::from_linear(&att.wk, policy);
+    let mut wv = LinParts::from_linear(&att.wv, policy);
+    let mut wo = LinParts::from_linear(&att.wo, policy);
+    let mut n_heads = att.n_heads;
+
+    // Fold the per-head gates into the value projection:
+    // g·(attn·v) ≡ attn·(g·v), so scaling wv's head columns (weights,
+    // V factor, *and* bias) reproduces training-time gating with zero
+    // per-token cost.
+    for h in 0..att.n_heads {
+        let g = att.gates.data[h];
+        if g != 1.0 {
+            wv.scale_out_cols(h * hd, (h + 1) * hd, g);
+        }
+    }
+
+    if policy == MergePolicy::Compact {
+        // Physically drop zero-gated heads: their ctx columns are
+        // identically zero, so removing their q/k/v columns and wo's
+        // matching input rows is exact.
+        let kept: Vec<usize> = (0..att.n_heads)
+            .filter(|&h| att.gates.data[h] != 0.0)
+            .collect();
+        if kept.len() < att.n_heads {
+            let col_keep: Vec<usize> =
+                kept.iter().flat_map(|&h| h * hd..(h + 1) * hd).collect();
+            for parts in [&mut wq, &mut wk, &mut wv] {
+                parts.w = select_cols(&parts.w, &col_keep);
+                parts.bias = col_keep.iter().map(|&j| parts.bias[j]).collect();
+            }
+            wo.w = select_rows(&wo.w, &col_keep);
+            n_heads = kept.len();
+        }
+    }
+
+    let mut fc1 = LinParts::from_linear(&blk.ffn.fc1, policy);
+    let mut fc2 = LinParts::from_linear(&blk.ffn.fc2, policy);
+    if policy == MergePolicy::Compact {
+        // Drop dead FFN units: fan-in column all-zero and zero bias ⇒
+        // the unit's activation is gelu(0) = 0, so its fc2 row
+        // contributes nothing.
+        let f = fc1.w.cols();
+        let rows = fc1.w.rows();
+        let kept: Vec<usize> = (0..f)
+            .filter(|&j| {
+                fc1.bias[j] != 0.0 || (0..rows).any(|i| fc1.w.data[i * f + j] != 0.0)
+            })
+            .collect();
+        if kept.len() < f {
+            fc1.w = select_cols(&fc1.w, &kept);
+            fc1.bias = kept.iter().map(|&j| fc1.bias[j]).collect();
+            fc2.w = select_rows(&fc2.w, &kept);
+        }
+    }
+
+    InferBlock {
+        ln1: InferNorm::from_train(&blk.ln1),
+        attn: InferAttention {
+            wq: InferLinear::finalize(wq, policy),
+            wk: InferLinear::finalize(wk, policy),
+            wv: InferLinear::finalize(wv, policy),
+            wo: InferLinear::finalize(wo, policy),
+            n_heads,
+            head_dim: hd,
+            causal: att.causal,
+        },
+        ln2: InferNorm::from_train(&blk.ln2),
+        fc1: InferLinear::finalize(fc1, policy),
+        fc2: InferLinear::finalize(fc2, policy),
+        adapter1: blk.adapter1.as_ref().map(|ad| InferAdapter {
+            down: compile_linear(&ad.down, policy),
+            up: compile_linear(&ad.up, policy),
+        }),
+        adapter2: blk.adapter2.as_ref().map(|ad| InferAdapter {
+            down: compile_linear(&ad.down, policy),
+            up: compile_linear(&ad.up, policy),
+        }),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{DseeCfg, ModelCfg};
+    use crate::dsee::attach_dsee;
+    use crate::dsee::magnitude_prune::magnitude_prune_global;
+    use crate::util::Rng;
+
+    const POLICIES: [MergePolicy; 3] =
+        [MergePolicy::Merged, MergePolicy::Csr, MergePolicy::Compact];
+
+    fn tiny_cfg(head: &str, causal: bool) -> ModelCfg {
+        ModelCfg {
+            name: "tiny-infer".into(),
+            vocab: 60,
+            max_seq: 8,
+            d_model: 16,
+            n_layers: 2,
+            n_heads: 4,
+            d_ffn: 24,
+            causal,
+            n_classes: 3,
+            head: head.into(),
+            n_prefix: 0,
+        }
+    }
+
+    fn assert_close(a: &Tensor, b: &Tensor, tol: f32, what: &str) {
+        assert_eq!(a.shape, b.shape, "{what}: shape");
+        for (x, y) in a.data.iter().zip(&b.data) {
+            assert!(
+                (x - y).abs() < tol * (1.0 + x.abs()),
+                "{what}: {x} vs {y}"
+            );
+        }
+    }
+
+    /// Randomize the DSEE carriers so the merge actually has something
+    /// to fold (U starts at 0 ⇒ UV would vanish otherwise).
+    fn randomize_dsee(m: &mut Transformer, rng: &mut Rng) {
+        for lin in m.attn_projections_mut() {
+            if let Some(a) = &mut lin.adapter {
+                a.u = Tensor::randn(&[a.u.rows(), a.u.cols()], 0.2, rng);
+                a.scale = 0.7;
+            }
+            if let Some(r) = &mut lin.residual {
+                r.values = Tensor::randn(&[r.nnz()], 0.3, rng);
+            }
+        }
+    }
+
+    #[test]
+    fn plain_model_parity_all_policies() {
+        let mut rng = Rng::new(900);
+        let cfg = tiny_cfg("classifier", false);
+        let m = Transformer::new(&cfg, &mut rng);
+        let ids: Vec<u32> = (0..3 * 8).map(|i| (i * 5 % 60) as u32).collect();
+        let (want, _) = m.forward(&ids, 3, 8);
+        for policy in POLICIES {
+            let im = m.compile(policy);
+            let got = im.forward(&ids, 3, 8);
+            assert_close(&got, &want, 1e-4, policy.label());
+        }
+    }
+
+    #[test]
+    fn dsee_pruned_model_parity_all_policies() {
+        // The acceptance shape: DSEE carriers + 50% S₁ + non-unit gates.
+        let mut rng = Rng::new(901);
+        let cfg = tiny_cfg("classifier", false);
+        let mut m = Transformer::new(&cfg, &mut rng);
+        attach_dsee(
+            &mut m,
+            &DseeCfg {
+                rank: 4,
+                n_sparse: 16,
+                ..DseeCfg::default()
+            },
+            &mut rng,
+        );
+        randomize_dsee(&mut m, &mut rng);
+        {
+            let mut lins = m.all_linears_mut();
+            let got = magnitude_prune_global(&mut lins, 0.5);
+            assert!(got > 0.45, "prune did not take: {got}");
+        }
+        for blk in &mut m.blocks {
+            blk.attn.gates = Tensor::from_vec(&[4], vec![0.9, 1.1, 0.7, 1.0]);
+        }
+        let ids: Vec<u32> = (0..2 * 8).map(|i| (i * 7 % 60) as u32).collect();
+        let (want, _) = m.forward(&ids, 2, 8);
+        for policy in POLICIES {
+            let im = m.compile(policy);
+            let got = im.forward(&ids, 2, 8);
+            assert_close(&got, &want, 1e-4, policy.label());
+        }
+    }
+
+    #[test]
+    fn csr_policy_compresses_pruned_layers() {
+        let mut rng = Rng::new(902);
+        let cfg = tiny_cfg("classifier", false);
+        let mut m = Transformer::new(&cfg, &mut rng);
+        {
+            let mut lins = m.all_linears_mut();
+            magnitude_prune_global(&mut lins, 0.6);
+        }
+        let im = m.compile(MergePolicy::Csr);
+        let st = im.stats();
+        assert!(
+            st.layers.iter().any(|l| l.csr),
+            "no layer chose CSR at 60% sparsity"
+        );
+        assert!(st.sparsity() > 0.4, "stats sparsity {}", st.sparsity());
+        assert!(st.matmul_flops_per_token() < 2.0 * st.dense_elems as f64);
+        // Dense (merged) stats on the same model skip nothing.
+        let dense = m.compile(MergePolicy::Merged).stats();
+        assert_eq!(dense.sparsity(), 0.0);
+        assert!(dense.layers.iter().all(|l| !l.csr));
+    }
+
+    #[test]
+    fn compact_drops_zero_gate_heads_exactly() {
+        let mut rng = Rng::new(903);
+        let cfg = tiny_cfg("classifier", false);
+        let mut m = Transformer::new(&cfg, &mut rng);
+        for blk in &mut m.blocks {
+            blk.attn.gates = Tensor::from_vec(&[4], vec![0.0, 1.0, 0.8, 0.0]);
+        }
+        let ids: Vec<u32> = (0..8).map(|i| (i % 60) as u32).collect();
+        let (want, _) = m.forward(&ids, 1, 8);
+        let im = m.compile(MergePolicy::Compact);
+        // Shapes shrank: 2 of 4 heads survive per block.
+        let st = im.stats();
+        let wq0 = st.layers.iter().find(|l| l.name == "block0.attn.wq").unwrap();
+        assert_eq!(wq0.cols, 2 * (16 / 4));
+        let wo0 = st.layers.iter().find(|l| l.name == "block0.attn.wo").unwrap();
+        assert_eq!(wo0.rows, 2 * (16 / 4));
+        // And the function is unchanged.
+        let got = im.forward(&ids, 1, 8);
+        assert_close(&got, &want, 1e-4, "compact");
+    }
+
+    #[test]
+    fn compact_drops_dead_ffn_units() {
+        let mut rng = Rng::new(904);
+        let cfg = tiny_cfg("classifier", false);
+        let mut m = Transformer::new(&cfg, &mut rng);
+        // Kill fan-in + bias of FFN units 0..6 in block 0.
+        let f = m.cfg.d_ffn;
+        {
+            let fc1 = &mut m.blocks[0].ffn.fc1;
+            for j in 0..6 {
+                for i in 0..fc1.w.rows() {
+                    fc1.w.data[i * f + j] = 0.0;
+                }
+                fc1.b.data[j] = 0.0;
+            }
+        }
+        let ids: Vec<u32> = (0..8).map(|i| (i * 3 % 60) as u32).collect();
+        let (want, _) = m.forward(&ids, 1, 8);
+        let im = m.compile(MergePolicy::Compact);
+        let st = im.stats();
+        let fc1 = st.layers.iter().find(|l| l.name == "block0.ffn.fc1").unwrap();
+        assert_eq!(fc1.cols, f - 6);
+        let got = im.forward(&ids, 1, 8);
+        assert_close(&got, &want, 1e-4, "compact-ffn");
+    }
+
+    #[test]
+    fn lm_head_and_causal_parity() {
+        let mut rng = Rng::new(905);
+        let cfg = tiny_cfg("lm", true);
+        let m = Transformer::new(&cfg, &mut rng);
+        let ids: Vec<u32> = (0..2 * 8).map(|i| (i * 11 % 60) as u32).collect();
+        let (want, _) = m.forward(&ids, 2, 8);
+        for policy in POLICIES {
+            let got = m.compile(policy).forward(&ids, 2, 8);
+            assert_close(&got, &want, 1e-4, policy.label());
+        }
+    }
+
+    #[test]
+    fn prefix_model_parity() {
+        let mut rng = Rng::new(906);
+        let cfg = tiny_cfg("classifier", false);
+        let mut m = Transformer::new(&cfg, &mut rng);
+        m.prefix = Some(crate::nn::Prefix {
+            vecs: Tensor::randn(&[3, 16], 0.5, &mut rng),
+            grad: Tensor::zeros(&[3, 16]),
+        });
+        let ids: Vec<u32> = (0..8).map(|i| (i % 60) as u32).collect();
+        let (want, _) = m.forward(&ids, 1, 8);
+        let im = m.compile(MergePolicy::Merged);
+        assert_eq!(im.n_prefix(), 3);
+        let got = im.forward(&ids, 1, 8);
+        assert_close(&got, &want, 1e-4, "prefix");
+    }
+
+    #[test]
+    fn structurally_pruned_model_compiles() {
+        // compile() after prune_heads/prune_ffn (shrunken shapes).
+        use crate::dsee::structured::{prune_ffn, prune_heads};
+        let mut rng = Rng::new(907);
+        let cfg = tiny_cfg("classifier", false);
+        let mut m = Transformer::new(&cfg, &mut rng);
+        prune_heads(&mut m, 0.25);
+        prune_ffn(&mut m, 0.4);
+        let ids: Vec<u32> = (0..2 * 8).map(|i| (i % 60) as u32).collect();
+        let (want, _) = m.forward(&ids, 2, 8);
+        for policy in POLICIES {
+            let got = m.compile(policy).forward(&ids, 2, 8);
+            assert_close(&got, &want, 1e-4, policy.label());
+        }
+    }
+}

@@ -13,9 +13,11 @@
 //!   shape-flexible experiment sweeps, the DSEE algorithms themselves
 //!   (GreBsmo decomposition, Ω selection, magnitude & structured pruning),
 //!   every baseline the paper compares against, synthetic data and metric
-//!   substrates, a PJRT runtime that executes the L2 artifacts, and a
-//!   coordinator that schedules experiment grids and serves batched
-//!   inference. Python never runs on the request path.
+//!   substrates, a PJRT runtime that executes the L2 artifacts, an
+//!   inference compiler ([`infer`]) that freezes tuned models into
+//!   sparsity-exploiting serving kernels, and a coordinator that
+//!   schedules experiment grids and serves batched inference over the
+//!   compiled models. Python never runs on the request path.
 //!
 //! See `DESIGN.md` for the full inventory and `EXPERIMENTS.md` for the
 //! paper-vs-measured record.
@@ -25,6 +27,7 @@ pub mod tensor;
 pub mod nn;
 pub mod optim;
 pub mod dsee;
+pub mod infer;
 pub mod data;
 pub mod metrics;
 pub mod train;

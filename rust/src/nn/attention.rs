@@ -11,6 +11,44 @@ use crate::tensor::linalg::{matmul, matmul_at, matmul_bt};
 use crate::tensor::Tensor;
 use crate::util::Rng;
 
+/// Copy head slice (b, h) of a [B·S, width] tensor into [S, hd]. The
+/// single source of truth for the head memory layout — the inference
+/// compiler (`crate::infer`) shares it so train/infer parity cannot
+/// drift on layout changes.
+pub(crate) fn gather_head_slice(
+    t: &Tensor,
+    b: usize,
+    h: usize,
+    seq: usize,
+    width: usize,
+    hd: usize,
+) -> Tensor {
+    let mut out = Tensor::zeros(&[seq, hd]);
+    for s in 0..seq {
+        let src = (b * seq + s) * width + h * hd;
+        out.data[s * hd..(s + 1) * hd].copy_from_slice(&t.data[src..src + hd]);
+    }
+    out
+}
+
+/// Add a [S, hd] head slice back into a [B·S, width] tensor.
+pub(crate) fn scatter_head_slice(
+    t: &mut Tensor,
+    src: &Tensor,
+    b: usize,
+    h: usize,
+    seq: usize,
+    width: usize,
+    hd: usize,
+) {
+    for s in 0..seq {
+        let dst = (b * seq + s) * width + h * hd;
+        for j in 0..hd {
+            t.data[dst + j] += src.data[s * hd + j];
+        }
+    }
+}
+
 /// Multi-head self-attention module.
 #[derive(Clone, Debug)]
 pub struct Attention {
@@ -64,26 +102,12 @@ impl Attention {
 
     /// Copy head slice (b, h) of a [BS, H*hd] tensor into [S, hd].
     fn gather_head(&self, t: &Tensor, b: usize, h: usize, seq: usize) -> Tensor {
-        let width = self.attn_dim();
-        let hd = self.head_dim;
-        let mut out = Tensor::zeros(&[seq, hd]);
-        for s in 0..seq {
-            let src = (b * seq + s) * width + h * hd;
-            out.data[s * hd..(s + 1) * hd].copy_from_slice(&t.data[src..src + hd]);
-        }
-        out
+        gather_head_slice(t, b, h, seq, self.attn_dim(), self.head_dim)
     }
 
     /// Add a [S, hd] head slice back into a [BS, H*hd] tensor.
     fn scatter_head(&self, t: &mut Tensor, src: &Tensor, b: usize, h: usize, seq: usize) {
-        let width = self.attn_dim();
-        let hd = self.head_dim;
-        for s in 0..seq {
-            let dst = (b * seq + s) * width + h * hd;
-            for j in 0..hd {
-                t.data[dst + j] += src.data[s * hd + j];
-            }
-        }
+        scatter_head_slice(t, src, b, h, seq, self.attn_dim(), self.head_dim)
     }
 
     /// x: [B*S, d_model] → (y: [B*S, d_model], cache).

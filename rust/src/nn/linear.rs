@@ -13,7 +13,7 @@
 //! All gradients are computed manually; `grad_check` tests in this module
 //! verify every path against central finite differences.
 
-use crate::tensor::linalg::{matmul, matmul_at, matmul_bt};
+use crate::tensor::linalg::{matmul, matmul_at, matmul_bt, matmul_masked};
 use crate::tensor::Tensor;
 use crate::util::Rng;
 
@@ -181,9 +181,14 @@ impl Linear {
     }
 
     /// Forward: y = x·Weff + b (+ adapter + residual). x: [B, in].
+    ///
+    /// The S₁ mask is folded into the matmul kernel
+    /// ([`matmul_masked`]) rather than materializing `effective_w()` —
+    /// the per-call O(in·out) clone used to dominate small-batch
+    /// (serving) forwards.
     pub fn forward(&self, x: &Tensor) -> Tensor {
         let mut y = match &self.mask {
-            Some(_) => matmul(x, &self.effective_w()),
+            Some(m) => matmul_masked(x, &self.w, m),
             None => matmul(x, &self.w),
         };
         y = y.add_bias(&self.b.data);
@@ -478,6 +483,26 @@ mod tests {
         let x = Tensor::randn(&[2, 4], 1.0, &mut rng);
         let y = lin.forward(&x);
         assert!(y.data.iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn masked_forward_matches_materialized_path() {
+        // The fused-mask kernel must agree with x·effective_w() + b.
+        let mut rng = Rng::new(18);
+        let mut lin = Linear::new(12, 9, &mut rng);
+        let mut mask = Tensor::full(&[12, 9], 1.0);
+        for i in 0..mask.numel() {
+            if i % 2 == 1 {
+                mask.data[i] = 0.0;
+            }
+        }
+        lin.mask = Some(mask);
+        let x = Tensor::randn(&[5, 12], 0.8, &mut rng);
+        let y = lin.forward(&x);
+        let reference = matmul(&x, &lin.effective_w()).add_bias(&lin.b.data);
+        for (a, b) in y.data.iter().zip(&reference.data) {
+            assert!((a - b).abs() < 1e-5, "{a} vs {b}");
+        }
     }
 
     #[test]

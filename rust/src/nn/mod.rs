@@ -315,7 +315,7 @@ impl Transformer {
             cfg: cfg.clone(),
             embed,
             prefix: None,
-            blocks: blocks,
+            blocks,
             ln_f: LayerNorm::new(cfg.d_model),
             head: head_proj,
         }
@@ -568,6 +568,10 @@ impl Transformer {
 
     pub fn head_proj(&self) -> &Linear {
         self.head.proj()
+    }
+
+    pub fn head_proj_mut(&mut self) -> &mut Linear {
+        self.head.proj_mut()
     }
 }
 

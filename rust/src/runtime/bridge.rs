@@ -139,6 +139,139 @@ pub fn export_params(model: &Transformer, specs: &[IoSpec]) -> crate::Result<Vec
         .collect()
 }
 
+/// Write one artifact-named tensor back into the native model — the
+/// inverse of [`param_tensor`] for the *trainable* carriers. Dense S₂
+/// carriers are scattered back onto the fixed support Ω (values off the
+/// support are checked to be zero so silent drift fails loudly).
+fn set_param_tensor(model: &mut Transformer, name: &str, value: &Tensor) -> crate::Result<()> {
+    let parts: Vec<&str> = name.split('.').collect();
+    let slot: &mut Tensor = match parts.as_slice() {
+        ["embed", "tok"] => &mut model.embed.tok,
+        ["embed", "pos"] => &mut model.embed.pos,
+        ["ln_f", "gamma"] => &mut model.ln_f.gamma,
+        ["ln_f", "beta"] => &mut model.ln_f.beta,
+        ["head", "w"] => &mut model.head_proj_mut().w,
+        ["head", "b"] => &mut model.head_proj_mut().b,
+        [blk, rest @ ..] if blk.starts_with("block") => {
+            let idx: usize = blk[5..]
+                .parse()
+                .map_err(|_| anyhow::anyhow!("bad block name {blk}"))?;
+            let block = model
+                .blocks
+                .get_mut(idx)
+                .ok_or_else(|| anyhow::anyhow!("block {idx} out of range"))?;
+            match rest {
+                ["ln1", "gamma"] => &mut block.ln1.gamma,
+                ["ln1", "beta"] => &mut block.ln1.beta,
+                ["ln2", "gamma"] => &mut block.ln2.gamma,
+                ["ln2", "beta"] => &mut block.ln2.beta,
+                ["attn", "gates"] => &mut block.attn.gates,
+                ["attn", proj, field] => {
+                    let lin = match *proj {
+                        "wq" => &mut block.attn.wq,
+                        "wk" => &mut block.attn.wk,
+                        "wv" => &mut block.attn.wv,
+                        "wo" => &mut block.attn.wo,
+                        other => anyhow::bail!("unknown projection {other}"),
+                    };
+                    return set_linear_field(lin, name, field, value);
+                }
+                ["ffn", fc, field] => {
+                    let lin = match *fc {
+                        "fc1" => &mut block.ffn.fc1,
+                        "fc2" => &mut block.ffn.fc2,
+                        other => anyhow::bail!("unknown ffn part {other}"),
+                    };
+                    return set_linear_field(lin, name, field, value);
+                }
+                other => anyhow::bail!("unknown block field {other:?}"),
+            }
+        }
+        _ => anyhow::bail!("unknown parameter '{name}'"),
+    };
+    anyhow::ensure!(
+        slot.shape == value.shape,
+        "param '{name}': model shape {:?} vs value {:?}",
+        slot.shape,
+        value.shape
+    );
+    *slot = value.clone();
+    Ok(())
+}
+
+fn set_linear_field(
+    lin: &mut crate::nn::linear::Linear,
+    name: &str,
+    field: &str,
+    value: &Tensor,
+) -> crate::Result<()> {
+    let (i, o) = (lin.in_dim(), lin.out_dim());
+    let slot: &mut Tensor = match field {
+        "w" => &mut lin.w,
+        "b" => &mut lin.b,
+        "u" => match &mut lin.adapter {
+            Some(a) => &mut a.u,
+            None => anyhow::bail!("'{name}': model has no adapter"),
+        },
+        "v" => match &mut lin.adapter {
+            Some(a) => &mut a.v,
+            None => anyhow::bail!("'{name}': model has no adapter"),
+        },
+        "s2" => {
+            // Dense carrier → COO values on the fixed support Ω.
+            anyhow::ensure!(
+                value.shape == [i, o],
+                "'{name}': s2 carrier shape {:?} vs [{i}, {o}]",
+                value.shape
+            );
+            let res = lin
+                .residual
+                .as_mut()
+                .ok_or_else(|| anyhow::anyhow!("'{name}': model has no residual"))?;
+            let mut carrier = value.clone();
+            for (e, &(ri, rj)) in res.idx.iter().enumerate() {
+                res.values.data[e] = carrier.data[ri * o + rj];
+                carrier.data[ri * o + rj] = 0.0;
+            }
+            anyhow::ensure!(
+                carrier.data.iter().all(|&x| x == 0.0),
+                "'{name}': s2 carrier has mass outside the Ω support"
+            );
+            return Ok(());
+        }
+        other => anyhow::bail!("unknown linear field {other}"),
+    };
+    anyhow::ensure!(
+        slot.shape == value.shape,
+        "param '{name}': model shape {:?} vs value {:?}",
+        slot.shape,
+        value.shape
+    );
+    *slot = value.clone();
+    Ok(())
+}
+
+/// Import artifact-ordered tensors back into the native model — the
+/// inverse of [`export_params`]. This closes the AOT loop: train with
+/// the fused PJRT step, import the trained trainable group, then
+/// `Transformer::compile` the result for native serving.
+pub fn import_params(
+    model: &mut Transformer,
+    specs: &[IoSpec],
+    values: &[Tensor],
+) -> crate::Result<()> {
+    anyhow::ensure!(
+        specs.len() == values.len(),
+        "import_params: {} specs vs {} values",
+        specs.len(),
+        values.len()
+    );
+    for (spec, value) in specs.iter().zip(values) {
+        set_param_tensor(model, &spec.name, value)?;
+    }
+    Ok(())
+}
+
 /// Split an artifact's input specs into (model params, the rest) —
 /// the rest being m.* / v.* optimizer state and data inputs.
 pub fn split_param_specs(specs: &[IoSpec]) -> (Vec<IoSpec>, Vec<IoSpec>) {
@@ -216,6 +349,57 @@ mod tests {
         assert!(export_params(&m, &bad).is_err());
         let bad2 = vec![spec("not.a.param", &[1])];
         assert!(export_params(&m, &bad2).is_err());
+    }
+
+    #[test]
+    fn export_import_round_trip_preserves_forward() {
+        let mut rng = Rng::new(601);
+        let m = model_with_dsee();
+        let d = m.cfg.d_model;
+        // A trainable-group-shaped spec list: adapters, s2, head.
+        let mut specs = Vec::new();
+        for b in 0..m.cfg.n_layers {
+            for p in ["wq", "wk", "wv", "wo"] {
+                specs.push(spec(&format!("block{b}.attn.{p}.u"), &[d, 8]));
+                specs.push(spec(&format!("block{b}.attn.{p}.v"), &[8, d]));
+                specs.push(spec(&format!("block{b}.attn.{p}.s2"), &[d, d]));
+            }
+        }
+        specs.push(spec("head.w", &[d, 2]));
+        specs.push(spec("head.b", &[2]));
+
+        // Source: same architecture, different (randomized) carriers.
+        let mut src = model_with_dsee();
+        for lin in src.attn_projections_mut() {
+            if let Some(a) = &mut lin.adapter {
+                a.u = Tensor::randn(&[d, 8], 0.2, &mut rng);
+            }
+            if let Some(r) = &mut lin.residual {
+                r.values = Tensor::randn(&[r.nnz()], 0.3, &mut rng);
+            }
+        }
+        let values = export_params(&src, &specs).unwrap();
+        let mut dst = m;
+        import_params(&mut dst, &specs, &values).unwrap();
+        let ids: Vec<u32> = (0..2 * dst.cfg.max_seq)
+            .map(|i| (i % dst.cfg.vocab) as u32)
+            .collect();
+        let (want, _) = src.forward(&ids, 2, src.cfg.max_seq);
+        let (got, _) = dst.forward(&ids, 2, dst.cfg.max_seq);
+        for (a, b) in want.data.iter().zip(&got.data) {
+            assert!((a - b).abs() < 1e-6, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn import_rejects_off_support_s2_mass() {
+        let mut m = model_with_dsee();
+        let d = m.cfg.d_model;
+        let s = spec("block0.attn.wq.s2", &[d, d]);
+        let mut carrier = Tensor::zeros(&[d, d]);
+        carrier.data[1] = 5.0; // (0,1) is not in the {(0,0), (3,5)} support
+        let err = import_params(&mut m, &[s], &[carrier]).unwrap_err();
+        assert!(format!("{err}").contains("support"), "{err}");
     }
 
     #[test]

@@ -56,6 +56,35 @@ pub fn matmul_into(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: u
     }
 }
 
+/// C = A · (B ⊙ M), the masked-weight contraction, computed without
+/// materializing the O(k·n) masked copy of B. This is the
+/// `Linear::forward` hot path when an S₁ pruning mask is attached: the
+/// old path cloned the full weight matrix per call (dominant at serving
+/// batch sizes), whereas this kernel streams the mask row alongside the
+/// weight row in the same i–k–j order as [`matmul`].
+pub fn matmul_masked(a: &Tensor, b: &Tensor, m: &Tensor) -> Tensor {
+    let (mm, k) = (a.rows(), a.cols());
+    let (k2, n) = (b.rows(), b.cols());
+    assert_eq!(k, k2, "matmul_masked: {:?} x {:?}", a.shape, b.shape);
+    assert_eq!(b.shape, m.shape, "matmul_masked: mask {:?} vs {:?}", m.shape, b.shape);
+    let mut c = Tensor::zeros(&[mm, n]);
+    for i in 0..mm {
+        let arow = &a.data[i * k..(i + 1) * k];
+        let crow = &mut c.data[i * n..(i + 1) * n];
+        for (kk, &aik) in arow.iter().enumerate() {
+            if aik == 0.0 {
+                continue;
+            }
+            let brow = &b.data[kk * n..(kk + 1) * n];
+            let mrow = &m.data[kk * n..(kk + 1) * n];
+            for ((cv, &bv), &mv) in crow.iter_mut().zip(brow).zip(mrow) {
+                *cv += aik * bv * mv;
+            }
+        }
+    }
+    c
+}
+
 /// C = A · Bᵀ  (B given as [n, k]).
 pub fn matmul_bt(a: &Tensor, b: &Tensor) -> Tensor {
     let (m, k) = (a.rows(), a.cols());
@@ -186,6 +215,24 @@ mod tests {
             let a = Tensor::randn(&[m, k], 1.0, &mut rng);
             let b = Tensor::randn(&[k, n], 1.0, &mut rng);
             assert_close(&matmul(&a, &b), &naive(&a, &b), 1e-4);
+        }
+    }
+
+    #[test]
+    fn matmul_masked_matches_materialized() {
+        let mut rng = Rng::new(7);
+        for &(m, k, n) in &[(1, 4, 4), (5, 16, 9), (8, 33, 17)] {
+            let a = Tensor::randn(&[m, k], 1.0, &mut rng);
+            let b = Tensor::randn(&[k, n], 1.0, &mut rng);
+            let mut mask = Tensor::full(&[k, n], 1.0);
+            for i in 0..mask.numel() {
+                if i % 3 == 0 {
+                    mask.data[i] = 0.0;
+                }
+            }
+            let fused = matmul_masked(&a, &b, &mask);
+            let materialized = matmul(&a, &b.mul(&mask));
+            assert_close(&fused, &materialized, 1e-5);
         }
     }
 

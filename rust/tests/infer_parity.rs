@@ -1,0 +1,161 @@
+//! Train/infer API split — acceptance parity.
+//!
+//! For a DSEE fine-tuned + pruned model, the compiled
+//! [`InferenceModel`] must reproduce the training-path
+//! `Transformer::forward` logits within 1e-4 under **every**
+//! [`MergePolicy`], including through the multi-worker serving
+//! coordinator. Wall-clock comparisons live in
+//! `benches/perf_hotpath.rs` (never in tests — CI machines are noisy).
+
+use dsee::config::{DseeCfg, ModelCfg, TrainCfg};
+use dsee::coordinator::serve::{start, ServeCfg};
+use dsee::data::glue::{make_dataset, GlueTask};
+use dsee::dsee::attach_dsee;
+use dsee::dsee::magnitude_prune::magnitude_prune_global;
+use dsee::dsee::structured::{prune_ffn, prune_heads};
+use dsee::infer::MergePolicy;
+use dsee::train::trainer::Trainer;
+use dsee::util::Rng;
+use std::sync::Arc;
+use std::time::Duration;
+
+const POLICIES: [MergePolicy; 3] = [MergePolicy::Merged, MergePolicy::Csr, MergePolicy::Compact];
+
+/// A genuinely DSEE-*tuned* model: attach U/V/S₂, fine-tune briefly so
+/// every carrier is non-trivial, then prune S₁ at 50%.
+fn tuned_pruned_model() -> dsee::nn::Transformer {
+    let arch = ModelCfg::sim_bert_s();
+    let mut rng = Rng::new(0x1F1F);
+    let mut model = dsee::nn::Transformer::new(&arch, &mut rng);
+    Trainer::set_task_head(&mut model, false, 2, &mut rng);
+    attach_dsee(
+        &mut model,
+        &DseeCfg {
+            rank: 4,
+            n_sparse: 16,
+            ..DseeCfg::default()
+        },
+        &mut rng,
+    );
+    let ds = make_dataset(GlueTask::Sst2, 128, 9);
+    let cfg = TrainCfg {
+        batch: 16,
+        ..TrainCfg::default()
+    };
+    let mut trainer = Trainer::new(model, cfg);
+    trainer.train_classification(&ds, 1);
+    let mut model = trainer.model;
+    {
+        let mut lins = model.all_linears_mut();
+        let got = magnitude_prune_global(&mut lins, 0.5);
+        assert!(got > 0.45, "pruning did not take: {got}");
+    }
+    model
+}
+
+#[test]
+fn compiled_logits_match_training_forward_all_policies() {
+    let model = tuned_pruned_model();
+    let seq = model.cfg.max_seq;
+    let ds = make_dataset(GlueTask::Sst2, 8, 33);
+    for policy in POLICIES {
+        let compiled = model.compile(policy);
+        for ex in &ds.examples {
+            let (want, _) = model.forward(&ex.ids, 1, seq);
+            let got = compiled.forward(&ex.ids, 1, seq);
+            assert_eq!(got.shape, want.shape);
+            for (a, b) in want.data.iter().zip(&got.data) {
+                assert!(
+                    (a - b).abs() < 1e-4 * (1.0 + a.abs()),
+                    "{}: {a} vs {b}",
+                    policy.label()
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn structurally_pruned_compiled_model_keeps_parity() {
+    let mut model = tuned_pruned_model();
+    prune_heads(&mut model, 0.25);
+    prune_ffn(&mut model, 0.40);
+    let seq = model.cfg.max_seq;
+    let ds = make_dataset(GlueTask::Sst2, 4, 34);
+    for policy in POLICIES {
+        let compiled = model.compile(policy);
+        for ex in &ds.examples {
+            let (want, _) = model.forward(&ex.ids, 1, seq);
+            let got = compiled.forward(&ex.ids, 1, seq);
+            for (a, b) in want.data.iter().zip(&got.data) {
+                assert!(
+                    (a - b).abs() < 1e-4 * (1.0 + a.abs()),
+                    "{}: {a} vs {b}",
+                    policy.label()
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn csr_policy_actually_skips_pruned_weights() {
+    let model = tuned_pruned_model();
+    let stats = model.compile(MergePolicy::Csr).stats();
+    // At 50% S₁ (over block linears; head/UV/S₂ dense-ify some of it
+    // back), the compiled model must skip a large share of multiplies.
+    assert!(
+        stats.sparsity() > 0.35,
+        "CSR skipped only {:.1}%",
+        stats.sparsity() * 100.0
+    );
+    let merged = model.compile(MergePolicy::Merged).stats();
+    assert!(stats.matmul_flops_per_token() < 0.7 * merged.matmul_flops_per_token());
+}
+
+#[test]
+fn served_compiled_model_matches_direct_forward() {
+    let model = tuned_pruned_model();
+    let seq = model.cfg.max_seq;
+    let compiled = Arc::new(model.compile(MergePolicy::Csr));
+    let direct = Arc::clone(&compiled);
+    let (client, server) = start(
+        compiled,
+        ServeCfg {
+            max_batch: 8,
+            max_wait: Duration::from_micros(200),
+            queue_depth: 64,
+            workers: 3,
+        },
+    );
+    let ds = make_dataset(GlueTask::Sst2, 24, 35);
+    let mut handles = Vec::new();
+    for t in 0..3 {
+        let client = client.clone();
+        let examples: Vec<Vec<u32>> = ds
+            .examples
+            .iter()
+            .skip(t)
+            .step_by(3)
+            .map(|e| e.ids.clone())
+            .collect();
+        let direct = Arc::clone(&direct);
+        handles.push(std::thread::spawn(move || {
+            for ids in examples {
+                let want = direct.forward(&ids, 1, ids.len());
+                let resp = client.infer(ids).unwrap();
+                assert_eq!(resp.logits.len(), want.data.len());
+                for (a, b) in resp.logits.iter().zip(&want.data) {
+                    assert!((a - b).abs() < 1e-6, "served {a} vs direct {b}");
+                }
+            }
+        }));
+    }
+    drop(client);
+    for h in handles {
+        h.join().unwrap();
+    }
+    let stats = server.join();
+    assert_eq!(stats.requests, 24);
+    assert_eq!(stats.rejected + stats.failed, 0);
+}

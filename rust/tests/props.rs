@@ -10,6 +10,7 @@ use dsee::nn::linear::Linear;
 use dsee::tensor::Tensor;
 use dsee::util::prop::{check, Config, PairOf, UsizeIn, VecOf};
 use dsee::util::Rng;
+use std::sync::Arc;
 use std::time::Duration;
 
 #[test]
@@ -25,7 +26,7 @@ fn prop_serve_no_request_lost_or_duplicated() {
         &PairOf(UsizeIn(1, 6), UsizeIn(1, 25)),
         |&(clients, per_client)| {
             let (client, server) = start(
-                Box::new(EchoBackend {
+                Arc::new(EchoBackend {
                     seq: 3,
                     delay: Duration::from_micros(200),
                 }),
@@ -33,6 +34,7 @@ fn prop_serve_no_request_lost_or_duplicated() {
                     max_batch: 4,
                     max_wait: Duration::from_micros(300),
                     queue_depth: 512,
+                    workers: 2,
                 },
             );
             let mut handles = Vec::new();
@@ -78,7 +80,7 @@ fn prop_serve_batch_bound_respected() {
         &UsizeIn(1, 8),
         |&max_batch| {
             let (client, server) = start(
-                Box::new(EchoBackend {
+                Arc::new(EchoBackend {
                     seq: 2,
                     delay: Duration::from_millis(1),
                 }),
@@ -86,6 +88,7 @@ fn prop_serve_batch_bound_respected() {
                     max_batch,
                     max_wait: Duration::from_millis(2),
                     queue_depth: 256,
+                    workers: 1,
                 },
             );
             let mut handles = Vec::new();

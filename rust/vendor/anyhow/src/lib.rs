@@ -1,0 +1,141 @@
+//! Offline shim of the `anyhow` crate — the API subset this repository
+//! uses (`Error`, `Result`, `anyhow!`, `bail!`, `ensure!`), vendored as
+//! a path dependency so `cargo build` needs no network access. The
+//! semantics match real anyhow for these entry points: `Error` is an
+//! opaque message-carrying error, any `std::error::Error` converts into
+//! it via `?`, and `Error` deliberately does *not* implement
+//! `std::error::Error` itself (exactly like upstream) so the blanket
+//! `From` impl is coherent.
+
+use std::fmt;
+
+/// Opaque error: a rendered message (the shim keeps no source chain).
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    /// Construct from anything displayable (what `anyhow!` expands to).
+    pub fn msg<M: fmt::Display>(m: M) -> Error {
+        Error { msg: m.to_string() }
+    }
+
+    /// Upstream-compatible helper: wrap a std error.
+    pub fn new<E: std::error::Error + Send + Sync + 'static>(e: E) -> Error {
+        Error { msg: e.to_string() }
+    }
+
+    /// Attach context (rendered eagerly: "context: original").
+    pub fn context<C: fmt::Display>(self, c: C) -> Error {
+        Error {
+            msg: format!("{c}: {}", self.msg),
+        }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        // `{:#}` on real anyhow prints the whole chain; the shim's
+        // message is already the full rendered text either way.
+        f.write_str(&self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Error {
+        Error { msg: e.to_string() }
+    }
+}
+
+/// `anyhow::Result<T>` — `std::result::Result` with [`Error`] default.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Context extension trait (subset: eager message rendering).
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: Into<Error>> Context<T> for Result<T, E> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T> {
+        self.map_err(|e| e.into().context(c))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| e.into().context(f()))
+    }
+}
+
+/// Format an [`Error`] from a message, like `format!`.
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => {
+        $crate::Error::msg(::std::format!($($arg)*))
+    };
+}
+
+/// Early-return with a formatted [`Error`].
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return ::std::result::Result::Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Early-return with a formatted [`Error`] unless `cond` holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            return ::std::result::Result::Err($crate::Error::msg(::std::concat!(
+                "condition failed: ",
+                ::std::stringify!($cond)
+            )));
+        }
+    };
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            return ::std::result::Result::Err($crate::anyhow!($($arg)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fails(flag: bool) -> Result<u32> {
+        ensure!(flag, "flag was {flag}");
+        bail!("unreachable? no: always bails with value {}", 7)
+    }
+
+    #[test]
+    fn macros_render_messages() {
+        let e = fails(false).unwrap_err();
+        assert_eq!(format!("{e}"), "flag was false");
+        assert_eq!(format!("{e:#}"), "flag was false");
+        let e = fails(true).unwrap_err();
+        assert!(format!("{e:?}").contains("value 7"));
+    }
+
+    #[test]
+    fn std_errors_convert() {
+        fn io() -> Result<String> {
+            Ok(std::fs::read_to_string("/definitely/not/a/file")?)
+        }
+        let e = io().unwrap_err();
+        assert!(!e.to_string().is_empty());
+    }
+
+    #[test]
+    fn context_prepends() {
+        let e = Error::msg("inner").context("outer");
+        assert_eq!(e.to_string(), "outer: inner");
+    }
+}
