@@ -176,6 +176,7 @@ fn main() -> anyhow::Result<()> {
             max_wait: Duration::from_micros(300),
             queue_depth: 256,
             workers: 2,
+            ..ServeCfg::default()
         },
     );
     let t_serve = std::time::Instant::now();

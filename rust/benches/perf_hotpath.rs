@@ -9,7 +9,9 @@
 //!   `compile(Csr)` at 50%/80% unstructured sparsity — the tentpole's
 //!   headline numbers;
 //! * Serving: dynamic-batcher round-trip on a null backend (queue
-//!   overhead), single- vs multi-worker;
+//!   overhead), worker scaling on the sharded work-stealing queue
+//!   (1 vs 8 workers — the acceptance bar is ≥1.5× at 8), and the
+//!   response-cache hit path (backend skipped entirely);
 //! * Runtime: PJRT execute latency for the kernel/forward/train-step
 //!   artifacts (skipped gracefully when artifacts are absent).
 
@@ -172,6 +174,7 @@ fn main() {
         max_wait: Duration::from_micros(100),
         queue_depth: 4096,
         workers: 1,
+        cache_entries: 0,
     };
     let (client, server) = start(
         Arc::new(EchoBackend {
@@ -190,9 +193,16 @@ fn main() {
     drop(client);
     server.join();
 
-    // Multi-worker scaling on a compute-bound backend: 4 workers share
-    // the queue and overlap their batches.
-    for workers in [1usize, 4] {
+    // Worker scaling on a compute-bound backend. workers=1 is the
+    // single-queue baseline (one shard, one consumer); the acceptance
+    // bar is ≥1.5× throughput at 8 workers on the same backend. Note
+    // this measures end-to-end serving scalability (batch overlap);
+    // design-level evidence that the *sharded* queue is doing its job —
+    // stalled shards drained by peers, formation touching only
+    // per-shard locks — lives in tests/serve_coordinator.rs via the
+    // ServeStats::stolen counter.
+    let mut burst_mean = Vec::new();
+    for workers in [1usize, 8] {
         let (client, server) = start(
             Arc::new(EchoBackend {
                 seq: 24,
@@ -204,22 +214,56 @@ fn main() {
                 ..serve_cfg.clone()
             },
         );
-        let s = bench(&format!("serve 8-client burst ({workers} worker)"), 2, 20, || {
-            let mut handles = Vec::new();
-            for _ in 0..8 {
-                let c = client.clone();
-                handles.push(std::thread::spawn(move || {
-                    c.infer(vec![1; 24]).unwrap();
-                }));
-            }
-            for h in handles {
-                h.join().unwrap();
-            }
-        });
-        println!("    → {:.0} req/s", s.throughput(8.0));
+        let s = bench(
+            &format!("serve 16-client burst ({workers} workers)"),
+            2,
+            20,
+            || {
+                let mut handles = Vec::new();
+                for c in 0..16u32 {
+                    let cl = client.clone();
+                    handles.push(std::thread::spawn(move || {
+                        cl.infer(vec![c; 24]).unwrap();
+                    }));
+                }
+                for h in handles {
+                    h.join().unwrap();
+                }
+            },
+        );
+        println!("    → {:.0} req/s", s.throughput(16.0));
+        burst_mean.push(s.mean_s);
         drop(client);
         server.join();
     }
+    println!(
+        "    → 8-worker speedup over single-worker queue: {:.2}×",
+        burst_mean[0] / burst_mean[1]
+    );
+
+    // Response-cache hit path: identical token ids answered straight
+    // from the LRU — no queue, no backend, just a map lookup.
+    let (client, server) = start(
+        Arc::new(EchoBackend {
+            seq: 24,
+            delay: Duration::from_micros(500),
+        }),
+        ServeCfg {
+            cache_entries: 1024,
+            ..serve_cfg.clone()
+        },
+    );
+    client.infer(vec![7; 24]).unwrap(); // warm the cache (one miss)
+    let s = bench("serve cache-hit round-trip", 10, 2000, || {
+        black_box(client.infer(vec![7; 24]).unwrap());
+    });
+    println!("    → cache-hit path ≈ {:.1} µs/req", s.mean_s * 1e6);
+    drop(client);
+    let stats = server.join();
+    println!(
+        "    → cache counters: {} hits / {} misses (backend ran {} batch)",
+        stats.cache_hits, stats.cache_misses, stats.batches
+    );
 
     println!("\n== PJRT runtime ==");
     let dir = default_artifact_dir();

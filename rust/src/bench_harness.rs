@@ -1,9 +1,21 @@
 //! Bench harness (criterion is unavailable offline): warmup + timed
 //! iterations with mean/std/percentile reporting, plus a throughput
 //! helper. Used by every `benches/*.rs` target (`harness = false`).
+//!
+//! **Smoke mode** (`cargo bench --bench <name> -- --smoke`, or
+//! `BENCH_SMOKE=1`): every [`bench`] call collapses to zero warmup and
+//! one iteration, so CI can execute each bench end-to-end as a
+//! does-it-still-run gate without paying for statistics.
 
 use crate::util::stats;
 use std::time::Instant;
+
+/// True when the bench binary was invoked with `--smoke` (or with
+/// `BENCH_SMOKE` set to anything but `0`).
+pub fn smoke_mode() -> bool {
+    std::env::args().any(|a| a == "--smoke")
+        || std::env::var("BENCH_SMOKE").map(|v| v != "0").unwrap_or(false)
+}
 
 /// Result of one benchmark case.
 #[derive(Clone, Debug)]
@@ -39,8 +51,10 @@ impl BenchStats {
     }
 }
 
-/// Time `f` for `iters` iterations after `warmup` runs.
+/// Time `f` for `iters` iterations after `warmup` runs. In smoke mode
+/// (see [`smoke_mode`]) this clamps to zero warmup and one iteration.
 pub fn bench<F: FnMut()>(name: &str, warmup: usize, iters: usize, mut f: F) -> BenchStats {
+    let (warmup, iters) = if smoke_mode() { (0, 1) } else { (warmup, iters) };
     for _ in 0..warmup {
         f();
     }

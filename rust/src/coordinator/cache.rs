@@ -1,0 +1,234 @@
+//! Bounded LRU response cache keyed on token ids.
+//!
+//! Classification over a frozen [`crate::infer::InferenceModel`] is
+//! deterministic: the same token ids always produce the same logits. The
+//! serving client therefore consults this cache *before enqueueing* a
+//! request — a hit skips the queue and the backend entirely, which is
+//! the cheapest possible exploitation of DSEE's "compress once, serve
+//! many" premise. Hit/miss counters are surfaced through
+//! [`crate::coordinator::serve::ServeStats`] at server join.
+//!
+//! The LRU is a slab-backed doubly-linked list under one mutex: `get`
+//! and `insert` are O(1), and the critical section is a few pointer
+//! swaps — negligible next to a forward pass, and never held across one.
+
+use std::collections::HashMap;
+use std::sync::Mutex;
+
+const NIL: usize = usize::MAX;
+
+struct Node {
+    key: Vec<u32>,
+    val: Vec<f32>,
+    prev: usize,
+    next: usize,
+}
+
+struct Lru {
+    cap: usize,
+    map: HashMap<Vec<u32>, usize>,
+    nodes: Vec<Node>,
+    free: Vec<usize>,
+    head: usize,
+    tail: usize,
+    hits: u64,
+    misses: u64,
+}
+
+impl Lru {
+    fn unlink(&mut self, i: usize) {
+        let (p, n) = (self.nodes[i].prev, self.nodes[i].next);
+        if p == NIL {
+            self.head = n;
+        } else {
+            self.nodes[p].next = n;
+        }
+        if n == NIL {
+            self.tail = p;
+        } else {
+            self.nodes[n].prev = p;
+        }
+        self.nodes[i].prev = NIL;
+        self.nodes[i].next = NIL;
+    }
+
+    fn push_front(&mut self, i: usize) {
+        self.nodes[i].prev = NIL;
+        self.nodes[i].next = self.head;
+        if self.head != NIL {
+            self.nodes[self.head].prev = i;
+        }
+        self.head = i;
+        if self.tail == NIL {
+            self.tail = i;
+        }
+    }
+}
+
+/// Thread-safe bounded LRU mapping token ids → logits.
+pub struct ResponseCache {
+    inner: Mutex<Lru>,
+}
+
+impl ResponseCache {
+    /// Cache holding at most `cap` entries (clamped to ≥ 1).
+    pub fn new(cap: usize) -> Self {
+        ResponseCache {
+            inner: Mutex::new(Lru {
+                cap: cap.max(1),
+                map: HashMap::new(),
+                nodes: Vec::new(),
+                free: Vec::new(),
+                head: NIL,
+                tail: NIL,
+                hits: 0,
+                misses: 0,
+            }),
+        }
+    }
+
+    /// Look up logits for `ids`, marking the entry most-recently-used.
+    /// Every call counts as a hit or a miss.
+    pub fn get(&self, ids: &[u32]) -> Option<Vec<f32>> {
+        let mut l = self.inner.lock().unwrap();
+        match l.map.get(ids).copied() {
+            Some(i) => {
+                l.hits += 1;
+                l.unlink(i);
+                l.push_front(i);
+                Some(l.nodes[i].val.clone())
+            }
+            None => {
+                l.misses += 1;
+                None
+            }
+        }
+    }
+
+    /// Insert (or refresh) an entry, evicting the least-recently-used
+    /// one at capacity.
+    pub fn insert(&self, ids: Vec<u32>, logits: Vec<f32>) {
+        let mut l = self.inner.lock().unwrap();
+        if let Some(i) = l.map.get(ids.as_slice()).copied() {
+            l.nodes[i].val = logits;
+            l.unlink(i);
+            l.push_front(i);
+            return;
+        }
+        if l.map.len() == l.cap {
+            let victim = l.tail;
+            l.unlink(victim);
+            let old_key = std::mem::take(&mut l.nodes[victim].key);
+            l.map.remove(&old_key);
+            l.free.push(victim);
+        }
+        let slot = match l.free.pop() {
+            Some(s) => {
+                l.nodes[s].key = ids.clone();
+                l.nodes[s].val = logits;
+                s
+            }
+            None => {
+                l.nodes.push(Node {
+                    key: ids.clone(),
+                    val: logits,
+                    prev: NIL,
+                    next: NIL,
+                });
+                l.nodes.len() - 1
+            }
+        };
+        l.map.insert(ids, slot);
+        l.push_front(slot);
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// `(hits, misses)` since construction.
+    pub fn counters(&self) -> (u64, u64) {
+        let l = self.inner.lock().unwrap();
+        (l.hits, l.misses)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn k(i: u32) -> Vec<u32> {
+        vec![i, i + 1]
+    }
+
+    #[test]
+    fn get_returns_inserted_logits_and_counts() {
+        let c = ResponseCache::new(4);
+        assert_eq!(c.get(&k(1)), None);
+        c.insert(k(1), vec![0.5, -0.5]);
+        assert_eq!(c.get(&k(1)), Some(vec![0.5, -0.5]));
+        assert_eq!(c.counters(), (1, 1));
+        assert_eq!(c.len(), 1);
+    }
+
+    #[test]
+    fn evicts_least_recently_used_at_capacity() {
+        let c = ResponseCache::new(2);
+        c.insert(k(1), vec![1.0]);
+        c.insert(k(2), vec![2.0]);
+        c.insert(k(3), vec![3.0]); // evicts k(1)
+        assert_eq!(c.len(), 2);
+        assert_eq!(c.get(&k(1)), None);
+        assert_eq!(c.get(&k(2)), Some(vec![2.0]));
+        assert_eq!(c.get(&k(3)), Some(vec![3.0]));
+    }
+
+    #[test]
+    fn get_refreshes_recency() {
+        let c = ResponseCache::new(2);
+        c.insert(k(1), vec![1.0]);
+        c.insert(k(2), vec![2.0]);
+        assert!(c.get(&k(1)).is_some()); // k(1) now most-recent
+        c.insert(k(3), vec![3.0]); // evicts k(2), not k(1)
+        assert_eq!(c.get(&k(2)), None);
+        assert_eq!(c.get(&k(1)), Some(vec![1.0]));
+    }
+
+    #[test]
+    fn reinsert_updates_value_without_growing() {
+        let c = ResponseCache::new(2);
+        c.insert(k(1), vec![1.0]);
+        c.insert(k(1), vec![9.0]);
+        assert_eq!(c.len(), 1);
+        assert_eq!(c.get(&k(1)), Some(vec![9.0]));
+    }
+
+    #[test]
+    fn capacity_one_churns_correctly() {
+        let c = ResponseCache::new(1);
+        for i in 0..10u32 {
+            c.insert(k(i), vec![i as f32]);
+            assert_eq!(c.get(&k(i)), Some(vec![i as f32]));
+            if i > 0 {
+                assert_eq!(c.get(&k(i - 1)), None);
+            }
+        }
+        assert_eq!(c.len(), 1);
+    }
+
+    #[test]
+    fn eviction_reuses_slots_many_rounds() {
+        let c = ResponseCache::new(3);
+        for i in 0..50u32 {
+            c.insert(k(i), vec![i as f32]);
+        }
+        assert_eq!(c.len(), 3);
+        for i in 47..50u32 {
+            assert_eq!(c.get(&k(i)), Some(vec![i as f32]));
+        }
+    }
+}

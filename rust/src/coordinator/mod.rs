@@ -1,13 +1,18 @@
 //! Layer-3 coordination: a worker-pool experiment scheduler (drives the
 //! table/figure benches across threads) and the compile-then-serve
-//! inference server ([`serve`]) — N worker threads batching requests
-//! against one shared, frozen [`crate::infer::InferenceModel`].
+//! inference server ([`serve`]) — N work-stealing worker threads
+//! batching requests from a sharded queue ([`shard`]) against one
+//! shared, frozen [`crate::infer::InferenceModel`], behind a response
+//! cache ([`cache`]) that answers repeated token-id sequences without
+//! touching the backend.
 //!
-//! No tokio offline — the event loop is `std::thread` + channels, which
+//! No tokio offline — the event loop is `std::thread` + condvars, which
 //! at this request scale (CPU inference, μs-scale queue ops) is not the
 //! bottleneck (see EXPERIMENTS.md §Perf).
 
+pub mod cache;
 pub mod serve;
+pub mod shard;
 
 use crate::train::RunResult;
 use std::panic::AssertUnwindSafe;

@@ -1,4 +1,5 @@
-//! Dynamic-batching inference server over **compiled models**.
+//! Dynamic-batching inference server over **compiled models** — sharded
+//! queue, work-stealing workers, adaptive batching, response cache.
 //!
 //! The serving flow is *compile-then-serve*: train a
 //! [`crate::nn::Transformer`], call
@@ -6,29 +7,53 @@
 //! [`crate::infer::MergePolicy`] to get a frozen
 //! [`InferenceModel`], wrap it in an `Arc`, and hand it to [`start`].
 //! The server shares that one read-only model across
-//! [`ServeCfg::workers`] worker threads — there is no per-worker copy
-//! and no lock around inference, because the compiled model is
-//! immutable (`Sync` by construction).
+//! [`ServeCfg::workers`] worker threads — no per-worker copy, no lock
+//! around inference, because the compiled model is immutable (`Sync` by
+//! construction).
 //!
-//! Each worker drains up to [`ServeCfg::max_batch`] requests from the
-//! shared bounded queue (waiting at most [`ServeCfg::max_wait`] for
-//! stragglers), runs one forward, and answers every request through its
-//! own channel. Malformed requests (wrong sequence length) and backend
-//! panics become per-request error [`Response`]s — they never take a
-//! worker down. The queue is a `sync_channel` of depth
-//! [`ServeCfg::queue_depth`], so overload applies backpressure to
-//! clients (submit blocks) instead of growing memory without bound.
+//! Request flow, front to back:
+//!
+//! 1. **Response cache** ([`crate::coordinator::cache::ResponseCache`],
+//!    enabled by [`ServeCfg::cache_entries`] > 0): the client looks up
+//!    the token ids *before enqueueing*. Classification over a frozen
+//!    model is deterministic, so a hit returns the cached logits without
+//!    touching the queue or the backend (`Response::cached` is set; the
+//!    hit/miss counters land in [`ServeStats`] at join).
+//! 2. **Sharded queue** ([`crate::coordinator::shard::ShardedQueue`]):
+//!    one deque per worker, filled round-robin, under a global capacity
+//!    gate of [`ServeCfg::queue_depth`] (overload still blocks clients
+//!    — backpressure, not unbounded memory). Batch formation touches
+//!    only per-shard locks, so it no longer serializes workers the way
+//!    the old single `Mutex<Receiver>` did.
+//! 3. **Work-stealing workers**: each worker drains its own shard and,
+//!    when idle, steals the oldest requests from a peer's shard — a
+//!    worker stalled on a slow batch cannot strand the requests parked
+//!    behind it ([`ServeStats::stolen`] counts the moves).
+//! 4. **Adaptive batching** ([`BatchController`]): per worker, the batch
+//!    target and straggler wait adapt to observed queue depth and recent
+//!    batch compute latency, bounded above by [`ServeCfg::max_batch`] /
+//!    [`ServeCfg::max_wait`] — deep backlog grows batches to amortize,
+//!    light traffic shrinks them toward latency-optimal singles.
+//!
+//! Latency accounting: `queue_us` is stamped at **batch formation**, so
+//! it measures queueing only; backend time is reported separately as
+//! `compute_us`. Rejected requests keep their real queue time too, so
+//! clients can tell "rejected instantly" from "queued then rejected".
+//! Malformed requests (wrong sequence length) and backend panics become
+//! per-request error [`Response`]s — they never take a worker down.
 //!
 //! [`Backend`] stays open for non-compiled engines: [`EchoBackend`]
 //! (tests/queue benchmarks) and [`NativeBackend`] (the mutable
 //! training-path model, kept as the unmerged baseline the serve example
 //! measures the compiled representations against).
 
+use crate::coordinator::cache::ResponseCache;
+use crate::coordinator::shard::ShardedQueue;
 use crate::infer::InferenceModel;
 use crate::nn::Transformer;
 use std::panic::AssertUnwindSafe;
-use std::sync::mpsc::{self, Receiver, RecvTimeoutError, Sender, SyncSender};
-use std::sync::{Arc, Mutex};
+use std::sync::mpsc::{self, Sender};
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 /// Inference backend abstraction. `Send + Sync` because one instance is
@@ -79,21 +104,29 @@ pub struct Request {
 
 /// Reply: logits + queueing/compute latency breakdown. `error` is set
 /// (and `logits` empty) when the request was rejected or the backend
-/// failed on its batch.
+/// failed on its batch; `cached` is set when the response came from the
+/// response cache without touching the queue or backend.
 #[derive(Clone, Debug)]
 pub struct Response {
     pub logits: Vec<f32>,
+    /// Enqueue → batch formation. Excludes backend compute.
     pub queue_us: u64,
+    /// Backend time for the batch that carried this request.
+    pub compute_us: u64,
     pub batch_size: usize,
+    /// Answered from the response cache (queue and backend skipped).
+    pub cached: bool,
     pub error: Option<String>,
 }
 
 impl Response {
-    fn failure(msg: String) -> Response {
+    fn failure(msg: String, queue_us: u64) -> Response {
         Response {
             logits: Vec::new(),
-            queue_us: 0,
+            queue_us,
+            compute_us: 0,
             batch_size: 0,
+            cached: false,
             error: Some(msg),
         }
     }
@@ -102,12 +135,19 @@ impl Response {
 /// Server configuration.
 #[derive(Clone, Debug)]
 pub struct ServeCfg {
+    /// Upper bound on batch size; the per-worker controller adapts below
+    /// this.
     pub max_batch: usize,
+    /// Upper bound on the straggler wait; the controller adapts below
+    /// this.
     pub max_wait: Duration,
     pub queue_depth: usize,
-    /// Worker threads sharing the backend. Each worker forms and runs
-    /// its own batches; 1 reproduces the single-threaded batcher.
+    /// Worker threads sharing the backend. Each worker owns one queue
+    /// shard; 1 reproduces the single-threaded batcher.
     pub workers: usize,
+    /// Response-cache capacity in entries; 0 disables the cache. Only
+    /// enable for deterministic backends (compiled classification is).
+    pub cache_entries: usize,
 }
 
 impl Default for ServeCfg {
@@ -117,23 +157,115 @@ impl Default for ServeCfg {
             max_wait: Duration::from_millis(2),
             queue_depth: 1024,
             workers: 1,
+            cache_entries: 0,
         }
+    }
+}
+
+/// Per-worker latency-aware batch controller. Two signals drive it:
+///
+/// * **queue depth** at batch completion — a backlog at least as deep as
+///   the current target doubles the target (amortize fixed costs);
+///   an empty queue with a half-filled batch halves it (stop waiting for
+///   traffic that is not coming);
+/// * **recent compute latency** (EWMA) — the straggler wait is pinned to
+///   a quarter of a typical batch's compute time, so queue-wait overhead
+///   stays a small fraction of useful work instead of a fixed constant.
+///
+/// Bounds are invariant: `1 ≤ target_batch ≤ max_batch` and
+/// `0 ≤ wait ≤ max_wait`.
+#[derive(Clone, Debug)]
+pub struct BatchController {
+    max_batch: usize,
+    max_wait: Duration,
+    cur_batch: usize,
+    cur_wait: Duration,
+    ewma_compute_us: f64,
+}
+
+impl BatchController {
+    pub fn new(max_batch: usize, max_wait: Duration) -> BatchController {
+        let max_batch = max_batch.max(1);
+        BatchController {
+            max_batch,
+            max_wait,
+            cur_batch: max_batch,
+            cur_wait: max_wait,
+            ewma_compute_us: 0.0,
+        }
+    }
+
+    /// Current batch-size target.
+    pub fn target_batch(&self) -> usize {
+        self.cur_batch
+    }
+
+    /// Current straggler wait.
+    pub fn wait(&self) -> Duration {
+        self.cur_wait
+    }
+
+    /// Feed back one completed batch: global queue depth observed after
+    /// the batch, how full the batch was, and its backend compute time.
+    pub fn observe(&mut self, pending: usize, fill: usize, compute: Duration) {
+        let us = compute.as_micros() as f64;
+        self.ewma_compute_us = if self.ewma_compute_us == 0.0 {
+            us
+        } else {
+            0.8 * self.ewma_compute_us + 0.2 * us
+        };
+        let cap_us = self.max_wait.as_micros() as f64;
+        let wait_us = (self.ewma_compute_us / 4.0).min(cap_us);
+        self.cur_wait = Duration::from_micros(wait_us as u64);
+        if pending >= self.cur_batch {
+            self.cur_batch = self.cur_batch.saturating_mul(2).min(self.max_batch);
+        } else if pending == 0 && fill * 2 <= self.cur_batch {
+            self.cur_batch = (self.cur_batch / 2).max(1);
+        }
+    }
+}
+
+/// Closes the queue when the last client handle is dropped.
+struct CloseGuard {
+    queue: Arc<ShardedQueue<Request>>,
+}
+
+impl Drop for CloseGuard {
+    fn drop(&mut self) {
+        self.queue.close();
     }
 }
 
 /// Handle for submitting requests.
 #[derive(Clone)]
 pub struct Client {
-    tx: SyncSender<Request>,
+    queue: Arc<ShardedQueue<Request>>,
+    cache: Option<Arc<ResponseCache>>,
+    _close: Arc<CloseGuard>,
 }
 
 impl Client {
-    /// Submit and wait for the reply. Blocks while the queue is full
-    /// (backpressure). Rejected/failed requests surface as `Err`.
-    pub fn infer(&self, ids: Vec<u32>) -> crate::Result<Response> {
+    /// Submit and wait for the reply, returning the raw [`Response`]
+    /// even when it carries an error (rejection / backend failure) —
+    /// the error response still has its real queue time attached.
+    /// Blocks while the queue is full (backpressure).
+    pub fn try_infer(&self, ids: Vec<u32>) -> crate::Result<Response> {
+        if let Some(cache) = &self.cache {
+            if let Some(logits) = cache.get(&ids) {
+                return Ok(Response {
+                    logits,
+                    queue_us: 0,
+                    compute_us: 0,
+                    batch_size: 0,
+                    cached: true,
+                    error: None,
+                });
+            }
+        }
+        let key = self.cache.as_ref().map(|_| ids.clone());
         let (reply_tx, reply_rx) = mpsc::channel();
-        self.tx
-            .send(Request {
+        self.queue
+            .push(Request {
                 ids,
                 reply: reply_tx,
                 enqueued: Instant::now(),
@@ -142,6 +274,18 @@ impl Client {
         let resp = reply_rx
             .recv()
             .map_err(|_| anyhow::anyhow!("server dropped request"))?;
+        if resp.error.is_none() {
+            if let (Some(cache), Some(key)) = (&self.cache, key) {
+                cache.insert(key, resp.logits.clone());
+            }
+        }
+        Ok(resp)
+    }
+
+    /// Submit and wait for the reply. Rejected/failed requests surface
+    /// as `Err`.
+    pub fn infer(&self, ids: Vec<u32>) -> crate::Result<Response> {
+        let resp = self.try_infer(ids)?;
         if let Some(e) = &resp.error {
             anyhow::bail!("request failed: {e}");
         }
@@ -153,12 +297,14 @@ impl Client {
 /// down every worker.
 pub struct Server {
     handles: Vec<std::thread::JoinHandle<ServeStats>>,
+    cache: Option<Arc<ResponseCache>>,
 }
 
 /// Aggregate statistics, merged across workers on `join`.
 #[derive(Clone, Debug, Default)]
 pub struct ServeStats {
-    /// Successfully answered requests.
+    /// Successfully answered requests (backend-served; cache hits are
+    /// counted separately in `cache_hits`).
     pub requests: usize,
     /// Requests rejected before batching (e.g. bad sequence length).
     pub rejected: usize,
@@ -166,6 +312,12 @@ pub struct ServeStats {
     pub failed: usize,
     pub batches: usize,
     pub total_batch_fill: usize,
+    /// Requests a worker stole from a peer's shard.
+    pub stolen: usize,
+    /// Requests answered from the response cache (backend skipped).
+    pub cache_hits: usize,
+    /// Cache lookups that fell through to the queue.
+    pub cache_misses: usize,
 }
 
 impl ServeStats {
@@ -183,24 +335,37 @@ impl ServeStats {
         self.failed += other.failed;
         self.batches += other.batches;
         self.total_batch_fill += other.total_batch_fill;
+        self.stolen += other.stolen;
+        self.cache_hits += other.cache_hits;
+        self.cache_misses += other.cache_misses;
     }
 }
 
 /// Start the server; returns (client handle, server). The backend is
-/// shared read-only across `cfg.workers` threads.
+/// shared read-only across `cfg.workers` threads, each owning one queue
+/// shard.
 pub fn start(backend: Arc<dyn Backend>, cfg: ServeCfg) -> (Client, Server) {
-    let (tx, rx) = mpsc::sync_channel::<Request>(cfg.queue_depth.max(1));
-    let rx = Arc::new(Mutex::new(rx));
     let workers = cfg.workers.max(1);
+    let queue = Arc::new(ShardedQueue::new(workers, cfg.queue_depth.max(1)));
+    let cache = if cfg.cache_entries > 0 {
+        Some(Arc::new(ResponseCache::new(cfg.cache_entries)))
+    } else {
+        None
+    };
     let handles = (0..workers)
-        .map(|_| {
+        .map(|me| {
             let backend = Arc::clone(&backend);
             let cfg = cfg.clone();
-            let rx = Arc::clone(&rx);
-            std::thread::spawn(move || worker_loop(backend, cfg, rx))
+            let queue = Arc::clone(&queue);
+            std::thread::spawn(move || worker_loop(backend, cfg, queue, me))
         })
         .collect();
-    (Client { tx }, Server { handles })
+    let client = Client {
+        queue: Arc::clone(&queue),
+        cache: cache.clone(),
+        _close: Arc::new(CloseGuard { queue }),
+    };
+    (client, Server { handles, cache })
 }
 
 impl Server {
@@ -209,6 +374,11 @@ impl Server {
         let mut stats = ServeStats::default();
         for h in self.handles {
             stats.absorb(&h.join().unwrap_or_default());
+        }
+        if let Some(cache) = &self.cache {
+            let (hits, misses) = cache.counters();
+            stats.cache_hits += hits as usize;
+            stats.cache_misses += misses as usize;
         }
         stats
     }
@@ -225,49 +395,63 @@ fn panic_message(panic: Box<dyn std::any::Any + Send>) -> String {
 fn worker_loop(
     backend: Arc<dyn Backend>,
     cfg: ServeCfg,
-    rx: Arc<Mutex<Receiver<Request>>>,
+    queue: Arc<ShardedQueue<Request>>,
+    me: usize,
 ) -> ServeStats {
     let seq = backend.seq_len();
     let mut stats = ServeStats::default();
+    let mut ctrl = BatchController::new(cfg.max_batch, cfg.max_wait);
     loop {
-        // Form a batch while holding the receiver; peers wait on the
-        // lock (there is nothing else for an idle worker to do) and
-        // compute in parallel once their batch is formed.
-        let mut batch = Vec::new();
-        {
-            let rx = match rx.lock() {
-                Ok(g) => g,
-                Err(_) => return stats, // a peer panicked while batching
-            };
-            match rx.recv() {
-                Ok(r) => batch.push(r),
-                Err(_) => return stats, // all senders gone
-            }
-            let deadline = Instant::now() + cfg.max_wait;
-            while batch.len() < cfg.max_batch {
-                let now = Instant::now();
-                if now >= deadline {
-                    break;
-                }
-                match rx.recv_timeout(deadline - now) {
-                    Ok(r) => batch.push(r),
-                    Err(RecvTimeoutError::Timeout) => break,
-                    Err(RecvTimeoutError::Disconnected) => break,
-                }
-            }
+        // Blocking head-of-batch pop: own shard first, then steal.
+        let Some((first, was_stolen)) = queue.pop_first(me) else {
+            return stats; // closed and drained
+        };
+        if was_stolen {
+            stats.stolen += 1;
         }
+        let mut batch = vec![first];
+        // Fill toward the adaptive target, waiting at most the adaptive
+        // straggler budget. Only per-shard locks are touched here —
+        // peers form and run their own batches concurrently.
+        let target = ctrl.target_batch();
+        let deadline = Instant::now() + ctrl.wait();
+        while batch.len() < target {
+            let got = queue.take_local(me, target - batch.len());
+            if !got.is_empty() {
+                batch.extend(got);
+                continue;
+            }
+            let stolen = queue.steal(me, target - batch.len());
+            if !stolen.is_empty() {
+                stats.stolen += stolen.len();
+                batch.extend(stolen);
+                continue;
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                break;
+            }
+            queue.wait_ready(me, deadline - now);
+        }
+        // Queue time ends here, for every request in the batch — the
+        // backend's compute must not leak into queue_us.
+        let formed = Instant::now();
         // Validate per request: one malformed request must not poison
-        // the batch, let alone the worker (the old loop asserted here).
+        // the batch, let alone the worker.
         let mut valid = Vec::with_capacity(batch.len());
         for r in batch {
             if r.ids.len() == seq {
                 valid.push(r);
             } else {
                 stats.rejected += 1;
-                let _ = r.reply.send(Response::failure(format!(
-                    "bad request: got {} token ids, model expects {seq}",
-                    r.ids.len()
-                )));
+                let queue_us = formed.duration_since(r.enqueued).as_micros() as u64;
+                let _ = r.reply.send(Response::failure(
+                    format!(
+                        "bad request: got {} token ids, model expects {seq}",
+                        r.ids.len()
+                    ),
+                    queue_us,
+                ));
             }
         }
         if valid.is_empty() {
@@ -283,7 +467,9 @@ fn worker_loop(
         // after a panic is benign.
         let result =
             std::panic::catch_unwind(AssertUnwindSafe(|| backend.infer(&ids, bsz, seq)));
-        let now = Instant::now();
+        let done = Instant::now();
+        let compute = done.duration_since(formed);
+        let compute_us = compute.as_micros() as u64;
         match result {
             Ok(logits) => {
                 // batches/total_batch_fill count *served* batches only,
@@ -292,20 +478,31 @@ fn worker_loop(
                 stats.total_batch_fill += bsz;
                 stats.requests += bsz;
                 for (r, row) in valid.into_iter().zip(logits) {
-                    let queue_us = now.duration_since(r.enqueued).as_micros() as u64;
+                    let queue_us = formed.duration_since(r.enqueued).as_micros() as u64;
                     let _ = r.reply.send(Response {
                         logits: row,
                         queue_us,
+                        compute_us,
                         batch_size: bsz,
+                        cached: false,
                         error: None,
                     });
                 }
+                ctrl.observe(queue.pending(), bsz, compute);
             }
             Err(panic) => {
                 stats.failed += bsz;
                 let msg = format!("backend error: {}", panic_message(panic));
                 for r in valid {
-                    let _ = r.reply.send(Response::failure(msg.clone()));
+                    let queue_us = formed.duration_since(r.enqueued).as_micros() as u64;
+                    let _ = r.reply.send(Response {
+                        logits: Vec::new(),
+                        queue_us,
+                        compute_us,
+                        batch_size: bsz,
+                        cached: false,
+                        error: Some(msg.clone()),
+                    });
                 }
             }
         }
@@ -385,6 +582,7 @@ mod tests {
                 max_wait: Duration::from_millis(5),
                 queue_depth: 256,
                 workers: 1,
+                ..ServeCfg::default()
             },
         );
         let mut handles = Vec::new();
@@ -500,6 +698,7 @@ mod tests {
                 max_wait: Duration::from_micros(200),
                 queue_depth: 2,
                 workers: 1,
+                ..ServeCfg::default()
             },
         );
         let mut handles = Vec::new();
@@ -563,6 +762,7 @@ mod tests {
                 max_wait: Duration::from_micros(50),
                 queue_depth: 64,
                 workers: 4,
+                ..ServeCfg::default()
             },
         );
         let mut handles = Vec::new();
@@ -601,5 +801,55 @@ mod tests {
         assert!(resp.logits.iter().all(|x| x.is_finite()));
         drop(client);
         server.join();
+    }
+
+    #[test]
+    fn controller_never_exceeds_configured_ceilings() {
+        let max_wait = Duration::from_millis(2);
+        let mut c = BatchController::new(16, max_wait);
+        assert_eq!(c.target_batch(), 16);
+        // Deep backlog + slow batches: target pins at max_batch, wait
+        // stays within max_wait no matter how slow compute gets.
+        for _ in 0..50 {
+            c.observe(10_000, 16, Duration::from_secs(1));
+            assert_eq!(c.target_batch(), 16);
+            assert!(c.wait() <= max_wait, "wait {:?} above cap", c.wait());
+        }
+    }
+
+    #[test]
+    fn controller_shrinks_to_floor_and_regrows() {
+        let mut c = BatchController::new(16, Duration::from_millis(2));
+        // Light traffic: half-empty batches with an empty queue shrink
+        // the target to (and never below) 1.
+        for _ in 0..20 {
+            c.observe(0, 1, Duration::from_micros(100));
+            assert!(c.target_batch() >= 1);
+        }
+        assert_eq!(c.target_batch(), 1);
+        // Wait tracks a quarter of recent compute, not the fixed cap.
+        assert!(c.wait() <= Duration::from_micros(100));
+        // Backlog builds again: target doubles back up to the ceiling.
+        for _ in 0..10 {
+            let fill = c.target_batch();
+            c.observe(64, fill, Duration::from_micros(100));
+        }
+        assert_eq!(c.target_batch(), 16);
+    }
+
+    #[test]
+    fn zero_worker_config_still_serves() {
+        // workers: 0 clamps to 1 (and exercises the clamp paths).
+        let (client, server) = start(
+            echo(2, Duration::ZERO),
+            ServeCfg {
+                workers: 0,
+                queue_depth: 0,
+                ..ServeCfg::default()
+            },
+        );
+        assert_eq!(client.infer(vec![3, 4]).unwrap().logits[0], 7.0);
+        drop(client);
+        assert_eq!(server.join().requests, 1);
     }
 }

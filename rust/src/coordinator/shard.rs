@@ -1,0 +1,322 @@
+//! Sharded request queue with work-stealing — the serving coordinator's
+//! dispatch fabric.
+//!
+//! The old coordinator funneled every request through one
+//! `Arc<Mutex<Receiver>>`; batch formation held that lock for up to
+//! `max_wait`, so workers serialized exactly where they were supposed to
+//! overlap. [`ShardedQueue`] gives each worker its own deque: producers
+//! spread requests round-robin across shards (short per-shard critical
+//! sections), each worker drains its own shard first, and an idle worker
+//! **steals** from a peer's shard instead of blocking — a stalled worker
+//! can never strand the requests parked behind it.
+//!
+//! Backpressure is preserved: a global capacity gate (one counter, held
+//! only for increment/decrement — never while waiting for stragglers)
+//! blocks producers once `cap` requests are in flight, exactly like the
+//! old bounded `sync_channel`.
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Condvar, Mutex};
+use std::time::Duration;
+
+/// Sleep between steal scans while work is known to be queued somewhere
+/// (fast reaction to a stalled peer's backlog)…
+const STEAL_POLL: Duration = Duration::from_micros(500);
+
+/// …and while the whole queue is empty: nothing to steal, so park close
+/// to idle. Own-shard pushes still wake the owner immediately, and a
+/// push that starts a backlog on a shard broadcasts once to all
+/// workers, so this only bounds the wake-up for the rare first request
+/// parked behind an already-busy owner.
+const IDLE_POLL: Duration = Duration::from_millis(5);
+
+struct Gate {
+    len: usize,
+    closed: bool,
+}
+
+struct Shard<T> {
+    q: Mutex<VecDeque<T>>,
+    ready: Condvar,
+}
+
+/// N per-worker deques behind one capacity gate. `push` distributes
+/// round-robin; consumers combine [`ShardedQueue::take_local`] and
+/// [`ShardedQueue::steal`] (or the blocking [`ShardedQueue::pop_first`]).
+pub struct ShardedQueue<T> {
+    shards: Vec<Shard<T>>,
+    cap: usize,
+    gate: Mutex<Gate>,
+    not_full: Condvar,
+    rr: AtomicUsize,
+}
+
+impl<T> ShardedQueue<T> {
+    /// `shards` consumer deques sharing a total capacity of `cap` items.
+    pub fn new(shards: usize, cap: usize) -> Self {
+        let shards = shards.max(1);
+        ShardedQueue {
+            shards: (0..shards)
+                .map(|_| Shard {
+                    q: Mutex::new(VecDeque::new()),
+                    ready: Condvar::new(),
+                })
+                .collect(),
+            cap: cap.max(1),
+            gate: Mutex::new(Gate {
+                len: 0,
+                closed: false,
+            }),
+            not_full: Condvar::new(),
+            rr: AtomicUsize::new(0),
+        }
+    }
+
+    pub fn shard_count(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// Items currently queued (all shards). Committed-but-unpushed items
+    /// from a racing `push` are counted, so `pending() == 0` after
+    /// `close()` really means drained.
+    pub fn pending(&self) -> usize {
+        self.gate.lock().unwrap().len
+    }
+
+    pub fn local_len(&self, shard: usize) -> usize {
+        self.shards[shard].q.lock().unwrap().len()
+    }
+
+    /// Blocking push to the next shard round-robin. Waits while the
+    /// queue is at capacity (backpressure); returns the item back when
+    /// the queue is closed.
+    pub fn push(&self, item: T) -> Result<(), T> {
+        let idx = self.rr.fetch_add(1, Ordering::Relaxed) % self.shards.len();
+        self.push_to(idx, item)
+    }
+
+    /// Blocking push to a specific shard (tests and affinity routing).
+    pub fn push_to(&self, shard: usize, item: T) -> Result<(), T> {
+        {
+            let mut g = self.gate.lock().unwrap();
+            loop {
+                if g.closed {
+                    return Err(item);
+                }
+                if g.len < self.cap {
+                    g.len += 1;
+                    break;
+                }
+                g = self.not_full.wait(g).unwrap();
+            }
+        }
+        let s = &self.shards[shard];
+        let prev_len = {
+            let mut q = s.q.lock().unwrap();
+            let n = q.len();
+            q.push_back(item);
+            n
+        };
+        s.ready.notify_one();
+        if prev_len == 1 {
+            // First sign of backlog on this shard (the owner did not
+            // keep up with the previous push — likely stuck in a slow
+            // batch): wake everyone once so an idle peer steals without
+            // waiting out its poll. Deeper backlog stays quiet; workers
+            // that see pending work poll at STEAL_POLL anyway, so this
+            // keeps the hot path at O(1) notifications per push.
+            for p in &self.shards {
+                p.ready.notify_all();
+            }
+        }
+        Ok(())
+    }
+
+    /// Release `n` capacity slots after removing items from a shard.
+    fn release(&self, n: usize) {
+        if n == 0 {
+            return;
+        }
+        {
+            let mut g = self.gate.lock().unwrap();
+            g.len -= n;
+        }
+        self.not_full.notify_all();
+    }
+
+    /// Drain up to `max` items from the front of `me`'s own shard.
+    pub fn take_local(&self, me: usize, max: usize) -> Vec<T> {
+        let mut out = Vec::new();
+        {
+            let mut q = self.shards[me].q.lock().unwrap();
+            let n = q.len().min(max);
+            out.extend(q.drain(..n));
+        }
+        self.release(out.len());
+        out
+    }
+
+    /// Steal up to `max` items from the first non-empty peer shard
+    /// (oldest first, so stolen requests keep FIFO fairness).
+    pub fn steal(&self, me: usize, max: usize) -> Vec<T> {
+        let n = self.shards.len();
+        for off in 1..n {
+            let p = (me + off) % n;
+            let mut out = Vec::new();
+            {
+                let mut q = self.shards[p].q.lock().unwrap();
+                let take = q.len().min(max);
+                out.extend(q.drain(..take));
+            }
+            if !out.is_empty() {
+                self.release(out.len());
+                return out;
+            }
+        }
+        Vec::new()
+    }
+
+    /// Block until one item is available (own shard first, then steal).
+    /// Returns `None` once the queue is closed *and* fully drained; the
+    /// flag is true when the item was stolen from a peer.
+    pub fn pop_first(&self, me: usize) -> Option<(T, bool)> {
+        loop {
+            if let Some(item) = self.take_local(me, 1).pop() {
+                return Some((item, false));
+            }
+            if let Some(item) = self.steal(me, 1).pop() {
+                return Some((item, true));
+            }
+            let queued = {
+                let g = self.gate.lock().unwrap();
+                if g.closed && g.len == 0 {
+                    return None;
+                }
+                g.len
+            };
+            // Sleep on our own shard; arrivals at peer shards are caught
+            // by the backlog broadcast in `push_to` or by the poll
+            // timeout — short while work is in flight somewhere, long
+            // when the queue is empty and there is nothing to steal.
+            self.wait_ready(me, if queued > 0 { STEAL_POLL } else { IDLE_POLL });
+        }
+    }
+
+    /// Wait up to `timeout` for an item to land on `me`'s shard.
+    pub fn wait_ready(&self, me: usize, timeout: Duration) {
+        let s = &self.shards[me];
+        let q = s.q.lock().unwrap();
+        if q.is_empty() {
+            let _ = s.ready.wait_timeout(q, timeout).unwrap();
+        }
+    }
+
+    /// Close the queue: subsequent pushes fail, blocked pushers and
+    /// sleeping consumers wake, and consumers drain what remains.
+    pub fn close(&self) {
+        {
+            let mut g = self.gate.lock().unwrap();
+            g.closed = true;
+        }
+        self.not_full.notify_all();
+        for s in &self.shards {
+            s.ready.notify_all();
+        }
+    }
+
+    pub fn is_closed(&self) -> bool {
+        self.gate.lock().unwrap().closed
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicBool;
+    use std::sync::Arc;
+
+    #[test]
+    fn single_shard_is_fifo() {
+        let q = ShardedQueue::new(1, 16);
+        for i in 0..5u32 {
+            q.push(i).unwrap();
+        }
+        assert_eq!(q.pending(), 5);
+        assert_eq!(q.take_local(0, 3), vec![0, 1, 2]);
+        assert_eq!(q.take_local(0, 10), vec![3, 4]);
+        assert_eq!(q.pending(), 0);
+    }
+
+    #[test]
+    fn round_robin_spreads_across_shards() {
+        let q = ShardedQueue::new(4, 64);
+        for i in 0..8u32 {
+            q.push(i).unwrap();
+        }
+        for s in 0..4 {
+            assert_eq!(q.local_len(s), 2, "shard {s} unbalanced");
+        }
+    }
+
+    #[test]
+    fn steal_drains_a_peer_front_first() {
+        let q = ShardedQueue::new(2, 64);
+        for i in 0..4u32 {
+            q.push_to(0, i).unwrap();
+        }
+        let got = q.steal(1, 2);
+        assert_eq!(got, vec![0, 1]);
+        assert_eq!(q.local_len(0), 2);
+        assert_eq!(q.pending(), 2);
+        // No self-steal with a single shard.
+        let q1 = ShardedQueue::new(1, 8);
+        q1.push(7u32).unwrap();
+        assert!(q1.steal(0, 8).is_empty());
+    }
+
+    #[test]
+    fn pop_first_blocks_then_steals_and_drains_on_close() {
+        let q = Arc::new(ShardedQueue::<u32>::new(2, 8));
+        let q2 = Arc::clone(&q);
+        let h = std::thread::spawn(move || q2.pop_first(0));
+        std::thread::sleep(Duration::from_millis(5));
+        q.push_to(1, 42).unwrap();
+        assert_eq!(h.join().unwrap(), Some((42, true)));
+        q.push_to(0, 7).unwrap();
+        q.close();
+        assert_eq!(q.pop_first(0), Some((7, false)));
+        assert_eq!(q.pop_first(0), None);
+        assert!(q.push(9).is_err());
+    }
+
+    #[test]
+    fn capacity_gate_blocks_pushers_until_a_take() {
+        let q = Arc::new(ShardedQueue::new(1, 2));
+        q.push(1u32).unwrap();
+        q.push(2).unwrap();
+        let done = Arc::new(AtomicBool::new(false));
+        let (q2, d2) = (Arc::clone(&q), Arc::clone(&done));
+        let h = std::thread::spawn(move || {
+            q2.push(3).unwrap();
+            d2.store(true, Ordering::SeqCst);
+        });
+        std::thread::sleep(Duration::from_millis(20));
+        assert!(!done.load(Ordering::SeqCst), "push did not block at capacity");
+        assert_eq!(q.take_local(0, 1), vec![1]);
+        h.join().unwrap();
+        assert!(done.load(Ordering::SeqCst));
+        assert_eq!(q.pending(), 2);
+    }
+
+    #[test]
+    fn close_unblocks_a_waiting_pusher_with_an_error() {
+        let q = Arc::new(ShardedQueue::new(1, 1));
+        q.push(1u32).unwrap();
+        let q2 = Arc::clone(&q);
+        let h = std::thread::spawn(move || q2.push(2));
+        std::thread::sleep(Duration::from_millis(5));
+        q.close();
+        assert_eq!(h.join().unwrap(), Err(2));
+    }
+}

@@ -8,23 +8,59 @@
 use crate::nn::linear::Linear;
 use crate::tensor::Tensor;
 
-/// Compute the global magnitude threshold that zeroes `sparsity` of all
-/// entries across `mats`.
-fn global_threshold(mags: &mut Vec<f32>, sparsity: f64) -> f32 {
-    assert!((0.0..1.0).contains(&sparsity), "sparsity {sparsity}");
+/// What a pruning pass should remove.
+#[derive(Clone, Copy, Debug)]
+enum Cut {
+    /// Nothing falls below the threshold (sparsity 0, or k rounds to 0).
+    Nothing,
+    /// `sparsity == 1.0`: mask every weight, NaN included.
+    Everything,
+    /// Mask magnitudes at or below this value.
+    Below(f32),
+}
+
+/// Compute the global magnitude cut that zeroes `sparsity` of all
+/// entries across `mats`. `sparsity == 1.0` is a defined request
+/// ([`Cut::Everything`]) instead of an out-of-bounds select index.
+///
+/// Ordering uses `f32::total_cmp`, so NaN magnitudes (a NaN anywhere in
+/// `W + UV + S₂`) rank *above* every finite value instead of panicking
+/// the comparator: a NaN-carrying weight survives pruning at any
+/// sparsity below 1.0 — it is never silently classified as "small".
+/// When NaNs are so dense that the selected threshold is itself NaN,
+/// every finite magnitude is pruned and the NaNs still survive, capping
+/// the achievable sparsity (see `below_threshold`).
+fn global_threshold(mags: &mut [f32], sparsity: f64) -> Cut {
+    assert!((0.0..=1.0).contains(&sparsity), "sparsity {sparsity}");
     if sparsity == 0.0 || mags.is_empty() {
-        return -1.0; // nothing pruned (all magnitudes ≥ 0 > -1)
+        return Cut::Nothing;
     }
     let k = ((mags.len() as f64) * sparsity).floor() as usize;
     if k == 0 {
-        return -1.0;
+        return Cut::Nothing;
+    }
+    if k >= mags.len() {
+        return Cut::Everything;
     }
     let idx = k - 1;
-    mags.select_nth_unstable_by(idx, |a, b| a.partial_cmp(b).unwrap());
-    mags[idx]
+    mags.select_nth_unstable_by(idx, f32::total_cmp);
+    Cut::Below(mags[idx])
 }
 
-/// Prune `sparsity` (fraction in [0,1)) of the weights across all
+/// Whether a magnitude falls under the pruning cut. NaN compares
+/// greater than any threshold under `total_cmp`, so NaN weights are
+/// kept below sparsity 1.0 — including when the threshold itself is NaN
+/// (then all finite magnitudes go and only the NaNs stay).
+fn below_threshold(mag: f32, cut: Cut) -> bool {
+    match cut {
+        Cut::Nothing => false,
+        Cut::Everything => true,
+        Cut::Below(t) if t.is_nan() => !mag.is_nan(),
+        Cut::Below(t) => mag.total_cmp(&t) != std::cmp::Ordering::Greater,
+    }
+}
+
+/// Prune `sparsity` (fraction in [0,1]) of the weights across all
 /// `linears`, ranking by |W + UV + S₂|. Returns the achieved sparsity
 /// over the pruned matrices.
 pub fn magnitude_prune_global(linears: &mut [&mut Linear], sparsity: f64) -> f64 {
@@ -42,7 +78,7 @@ pub fn magnitude_prune_global(linears: &mut [&mut Linear], sparsity: f64) -> f64
     for (lin, t) in linears.iter_mut().zip(&totals) {
         let mut mask = Tensor::full(&[lin.in_dim(), lin.out_dim()], 1.0);
         for (m, &v) in mask.data.iter_mut().zip(&t.data) {
-            if v.abs() <= thr {
+            if below_threshold(v.abs(), thr) {
                 *m = 0.0;
                 zeros += 1;
             }
@@ -69,7 +105,7 @@ pub fn magnitude_prune_layerwise(linears: &mut [&mut Linear], sparsity: f64) -> 
         let thr = global_threshold(&mut mags, sparsity);
         let mut mask = Tensor::full(&[lin.in_dim(), lin.out_dim()], 1.0);
         for (m, &v) in mask.data.iter_mut().zip(&t.data) {
-            if v.abs() <= thr {
+            if below_threshold(v.abs(), thr) {
                 *m = 0.0;
                 zeros += 1;
             }
@@ -167,5 +203,84 @@ mod tests {
             assert_eq!(got, 0.0);
         }
         assert_eq!(lin.sparsity(), 0.0);
+    }
+
+    #[test]
+    fn nan_weights_do_not_panic_and_are_kept() {
+        // Regression: partial_cmp(..).unwrap() panicked on NaN. Under
+        // total_cmp a NaN magnitude ranks above every finite value, so
+        // the NaN entries survive and the rest prunes normally.
+        let mut rng = Rng::new(125);
+        let mut lin = Linear::new(8, 8, &mut rng);
+        lin.w.data[0] = f32::NAN;
+        lin.w.data[1] = -f32::NAN;
+        {
+            let mut lins = [&mut lin];
+            let got = magnitude_prune_global(&mut lins, 0.5);
+            assert!((got - 0.5).abs() < 0.1, "got {got}");
+        }
+        let mask = lin.mask.as_ref().unwrap();
+        assert_eq!(mask.data[0], 1.0, "NaN weight was pruned");
+        assert_eq!(mask.data[1], 1.0, "negative-NaN weight was pruned");
+    }
+
+    #[test]
+    fn nan_dense_matrix_keeps_nans_and_prunes_finite() {
+        // 3 of 8 entries NaN at 75% sparsity: the selected threshold
+        // falls inside the NaN tail. The NaNs must still survive; every
+        // finite weight is pruned, capping achieved sparsity at 5/8.
+        let mut rng = Rng::new(128);
+        let mut lin = Linear::new(2, 4, &mut rng);
+        for i in 0..3 {
+            lin.w.data[i] = f32::NAN;
+        }
+        {
+            let mut lins = [&mut lin];
+            let got = magnitude_prune_global(&mut lins, 0.75);
+            assert!((got - 5.0 / 8.0).abs() < 1e-9, "got {got}");
+        }
+        let mask = lin.mask.as_ref().unwrap();
+        for i in 0..3 {
+            assert_eq!(mask.data[i], 1.0, "NaN entry {i} was pruned");
+        }
+        for i in 3..8 {
+            assert_eq!(mask.data[i], 0.0, "finite entry {i} survived");
+        }
+    }
+
+    #[test]
+    fn nan_weights_do_not_panic_layerwise() {
+        let mut rng = Rng::new(127);
+        let mut lin = Linear::new(6, 6, &mut rng);
+        lin.w.data[5] = f32::NAN;
+        {
+            let mut lins = [&mut lin];
+            let got = magnitude_prune_layerwise(&mut lins, 0.3);
+            assert!((got - 0.3).abs() < 0.1, "got {got}");
+        }
+        assert_eq!(lin.mask.as_ref().unwrap().data[5], 1.0);
+    }
+
+    #[test]
+    fn full_sparsity_prunes_everything_without_overflow() {
+        // Regression: sparsity == 1.0 produced k == mags.len() and an
+        // out-of-bounds select_nth index. It is now a defined request —
+        // every weight masked, NaN included.
+        let mut rng = Rng::new(126);
+        let mut lin = Linear::new(6, 7, &mut rng);
+        lin.w.data[3] = f32::NAN;
+        {
+            let mut lins = [&mut lin];
+            let got = magnitude_prune_global(&mut lins, 1.0);
+            assert_eq!(got, 1.0);
+        }
+        assert_eq!(lin.sparsity(), 1.0);
+        let mut lin2 = Linear::new(5, 5, &mut rng);
+        {
+            let mut lins = [&mut lin2];
+            let got = magnitude_prune_layerwise(&mut lins, 1.0);
+            assert_eq!(got, 1.0);
+        }
+        assert_eq!(lin2.sparsity(), 1.0);
     }
 }

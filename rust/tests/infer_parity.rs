@@ -126,6 +126,7 @@ fn served_compiled_model_matches_direct_forward() {
             max_wait: Duration::from_micros(200),
             queue_depth: 64,
             workers: 3,
+            ..ServeCfg::default()
         },
     );
     let ds = make_dataset(GlueTask::Sst2, 24, 35);

@@ -35,6 +35,7 @@ fn prop_serve_no_request_lost_or_duplicated() {
                     max_wait: Duration::from_micros(300),
                     queue_depth: 512,
                     workers: 2,
+                    ..ServeCfg::default()
                 },
             );
             let mut handles = Vec::new();
@@ -89,6 +90,7 @@ fn prop_serve_batch_bound_respected() {
                     max_wait: Duration::from_millis(2),
                     queue_depth: 256,
                     workers: 1,
+                    ..ServeCfg::default()
                 },
             );
             let mut handles = Vec::new();

@@ -1,0 +1,239 @@
+//! Integration tests for the sharded/cached serving coordinator:
+//! response-cache semantics, work-stealing under contention, and the
+//! queueing/compute latency split.
+
+use dsee::coordinator::serve::{start, Backend, EchoBackend, ServeCfg};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// Echo-style backend that counts how many times `infer` actually ran.
+struct CountingBackend {
+    calls: AtomicUsize,
+    seq: usize,
+}
+
+impl Backend for CountingBackend {
+    fn infer(&self, ids: &[u32], batch: usize, seq: usize) -> Vec<Vec<f32>> {
+        self.calls.fetch_add(1, Ordering::SeqCst);
+        (0..batch)
+            .map(|i| {
+                let row = &ids[i * seq..(i + 1) * seq];
+                vec![row.iter().sum::<u32>() as f32]
+            })
+            .collect()
+    }
+
+    fn seq_len(&self) -> usize {
+        self.seq
+    }
+}
+
+#[test]
+fn cache_hit_skips_backend_and_matches_logits() {
+    let counting = Arc::new(CountingBackend {
+        calls: AtomicUsize::new(0),
+        seq: 3,
+    });
+    let backend = Arc::clone(&counting);
+    let (client, server) = start(
+        backend,
+        ServeCfg {
+            cache_entries: 64,
+            ..ServeCfg::default()
+        },
+    );
+    let first = client.infer(vec![1, 2, 3]).unwrap();
+    assert!(!first.cached);
+    // Same token ids again: identical logits, zero backend involvement.
+    let second = client.infer(vec![1, 2, 3]).unwrap();
+    assert!(second.cached);
+    assert_eq!(second.batch_size, 0);
+    assert_eq!(second.queue_us, 0);
+    assert_eq!(first.logits, second.logits);
+    assert_eq!(
+        counting.calls.load(Ordering::SeqCst),
+        1,
+        "cache hit reached the backend"
+    );
+    // A different sequence is a miss and does run the backend.
+    let third = client.infer(vec![4, 5, 6]).unwrap();
+    assert!(!third.cached);
+    assert_eq!(counting.calls.load(Ordering::SeqCst), 2);
+    drop(client);
+    let stats = server.join();
+    assert_eq!(stats.cache_hits, 1);
+    assert_eq!(stats.cache_misses, 2);
+    assert_eq!(stats.requests, 2);
+}
+
+#[test]
+fn cached_serving_answers_every_request_consistently() {
+    // 6 threads hammer the same 10 sequences: every reply must carry the
+    // right logits, and every request is either backend-served or a
+    // cache hit — nothing lost, nothing double-counted.
+    let (client, server) = start(
+        Arc::new(EchoBackend {
+            seq: 2,
+            delay: Duration::from_micros(200),
+        }),
+        ServeCfg {
+            max_batch: 4,
+            max_wait: Duration::from_micros(200),
+            queue_depth: 128,
+            workers: 4,
+            cache_entries: 256,
+        },
+    );
+    let mut handles = Vec::new();
+    for _ in 0..6 {
+        let c = client.clone();
+        handles.push(std::thread::spawn(move || {
+            for _rep in 0..3 {
+                for i in 0..10u32 {
+                    let resp = c.infer(vec![i, i + 1]).unwrap();
+                    assert_eq!(resp.logits[0], (2 * i + 1) as f32);
+                }
+            }
+        }));
+    }
+    drop(client);
+    for h in handles {
+        h.join().unwrap();
+    }
+    let stats = server.join();
+    assert_eq!(stats.requests + stats.cache_hits, 180);
+    // After each thread's first pass its keys are resident, so at least
+    // the latter two passes (20 requests/thread) must hit.
+    assert!(stats.cache_hits >= 120, "cache barely used: {stats:?}");
+}
+
+/// Backend that stalls for a long time on one poison token.
+struct SlowTokenBackend {
+    slow: u32,
+    seq: usize,
+}
+
+impl Backend for SlowTokenBackend {
+    fn infer(&self, ids: &[u32], batch: usize, seq: usize) -> Vec<Vec<f32>> {
+        if ids.contains(&self.slow) {
+            std::thread::sleep(Duration::from_millis(200));
+        }
+        (0..batch)
+            .map(|i| {
+                let row = &ids[i * seq..(i + 1) * seq];
+                vec![row.iter().sum::<u32>() as f32]
+            })
+            .collect()
+    }
+
+    fn seq_len(&self) -> usize {
+        self.seq
+    }
+}
+
+#[test]
+fn idle_workers_steal_from_a_stalled_shard() {
+    let (client, server) = start(
+        Arc::new(SlowTokenBackend { slow: 999, seq: 1 }),
+        ServeCfg {
+            max_batch: 1,
+            max_wait: Duration::from_micros(50),
+            queue_depth: 64,
+            workers: 2,
+            cache_entries: 0,
+        },
+    );
+    // Stall one worker on a 200 ms request...
+    let slow = {
+        let c = client.clone();
+        std::thread::spawn(move || c.infer(vec![999]).unwrap())
+    };
+    std::thread::sleep(Duration::from_millis(10));
+    // ...then push fast requests: round-robin parks half of them on the
+    // stalled worker's shard, where only the idle peer can reach them in
+    // time. With the old single-queue design these simply waited.
+    let t0 = Instant::now();
+    for i in 0..8u32 {
+        assert_eq!(client.infer(vec![i]).unwrap().logits[0], i as f32);
+    }
+    let fast_elapsed = t0.elapsed();
+    slow.join().unwrap();
+    drop(client);
+    let stats = server.join();
+    assert_eq!(stats.requests, 9);
+    assert!(stats.stolen >= 1, "no work was stolen: {stats:?}");
+    assert!(
+        fast_elapsed < Duration::from_millis(200),
+        "fast requests waited out the stalled worker: {fast_elapsed:?}"
+    );
+}
+
+#[test]
+fn queue_and_compute_latency_are_separated() {
+    // Regression: queue_us used to be stamped after backend.infer, so a
+    // 40 ms compute was booked as queueing. It must now appear in
+    // compute_us with queue_us reflecting only pre-batch waiting.
+    let (client, server) = start(
+        Arc::new(EchoBackend {
+            seq: 2,
+            delay: Duration::from_millis(40),
+        }),
+        ServeCfg {
+            max_batch: 4,
+            max_wait: Duration::from_micros(100),
+            queue_depth: 16,
+            workers: 1,
+            cache_entries: 0,
+        },
+    );
+    let resp = client.infer(vec![1, 2]).unwrap();
+    assert!(resp.compute_us >= 30_000, "compute_us {}", resp.compute_us);
+    assert!(
+        resp.queue_us < 30_000,
+        "queue_us {} still includes backend compute",
+        resp.queue_us
+    );
+    assert_eq!(resp.batch_size, 1);
+    drop(client);
+    server.join();
+}
+
+#[test]
+fn rejected_requests_carry_real_queue_time() {
+    // Regression: rejections used to report queue_us: 0, making "queued
+    // then rejected" indistinguishable from "rejected instantly".
+    let (client, server) = start(
+        Arc::new(EchoBackend {
+            seq: 2,
+            delay: Duration::from_millis(200),
+        }),
+        ServeCfg {
+            max_batch: 1,
+            max_wait: Duration::from_micros(50),
+            queue_depth: 16,
+            workers: 1,
+            cache_entries: 0,
+        },
+    );
+    // Occupy the single worker with a slow batch...
+    let busy = {
+        let c = client.clone();
+        std::thread::spawn(move || c.infer(vec![1, 2]).unwrap())
+    };
+    std::thread::sleep(Duration::from_millis(10));
+    // ...so this malformed request demonstrably waits in the queue
+    // before being rejected at batch formation.
+    let resp = client.try_infer(vec![7]).unwrap();
+    assert!(resp.error.is_some());
+    assert!(
+        resp.queue_us >= 50_000,
+        "rejection lost its queue time: {} µs",
+        resp.queue_us
+    );
+    busy.join().unwrap();
+    drop(client);
+    let stats = server.join();
+    assert_eq!(stats.rejected, 1);
+    assert_eq!(stats.requests, 1);
+}
