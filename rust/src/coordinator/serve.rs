@@ -19,26 +19,50 @@
 //!    model is deterministic, so a hit returns the cached logits without
 //!    touching the queue or the backend (`Response::cached` is set; the
 //!    hit/miss counters land in [`ServeStats`] at join).
-//! 2. **Sharded queue** ([`crate::coordinator::shard::ShardedQueue`]):
-//!    one deque per worker, filled round-robin, under a global capacity
-//!    gate of [`ServeCfg::queue_depth`] (overload still blocks clients
-//!    — backpressure, not unbounded memory). Batch formation touches
-//!    only per-shard locks, so it no longer serializes workers the way
-//!    the old single `Mutex<Receiver>` did.
+//! 2. **Sharded queue with affinity routing**
+//!    ([`crate::coordinator::shard::ShardedQueue`]): one deque per
+//!    worker under a global capacity gate of [`ServeCfg::queue_depth`]
+//!    (overload still blocks clients — backpressure, not unbounded
+//!    memory). Requests are routed by hashing their token ids
+//!    ([`crate::coordinator::shard::affinity_hash`]), so identical
+//!    sequences land on the same shard: batch contents correlate (one
+//!    worker runs the duplicates back-to-back), and requests *arriving
+//!    after* the first reply lands hit the client-side cache. (In-queue
+//!    duplicates are not deduplicated — the cache is consulted before
+//!    enqueue only, never by workers.) Batch formation
+//!    touches only per-shard locks, so it no longer serializes workers
+//!    the way the old single `Mutex<Receiver>` did.
 //! 3. **Work-stealing workers**: each worker drains its own shard and,
 //!    when idle, steals the oldest requests from a peer's shard — a
-//!    worker stalled on a slow batch cannot strand the requests parked
-//!    behind it ([`ServeStats::stolen`] counts the moves).
+//!    worker stalled on a slow batch (or a long decode session) cannot
+//!    strand the requests parked behind it ([`ServeStats::stolen`]
+//!    counts the moves, and is also the load-balancing fallback when
+//!    affinity routing skews the shards).
 //! 4. **Adaptive batching** ([`BatchController`]): per worker, the batch
 //!    target and straggler wait adapt to observed queue depth and recent
 //!    batch compute latency, bounded above by [`ServeCfg::max_batch`] /
 //!    [`ServeCfg::max_wait`] — deep backlog grows batches to amortize,
 //!    light traffic shrinks them toward latency-optimal singles.
 //!
-//! Latency accounting: `queue_us` is stamped at **batch formation**, so
-//! it measures queueing only; backend time is reported separately as
-//! `compute_us`. Rejected requests keep their real queue time too, so
-//! clients can tell "rejected instantly" from "queued then rejected".
+//! Two request kinds share the queue: [`Request::Classify`] (fixed-
+//! length batch forward) and [`Request::Generate`] (autoregressive
+//! continuation over a KV-cached
+//! [`crate::infer::decode::DecodeSession`]). Workers interleave them —
+//! each drained batch runs its classification slice through one
+//! [`Backend::infer`] call, then its generation requests through
+//! [`Backend::generate`] one session at a time, so classification
+//! traffic keeps flowing between (and, via work-stealing, during)
+//! long decodes. Generated token counts land in
+//! [`ServeStats::generated_tokens`].
+//!
+//! Latency accounting: `queue_us` is stamped at **batch formation** for
+//! classification, and at **session start** for generation (so waiting
+//! behind the batch's classification slice or an earlier decode session
+//! is booked as queueing) — either way it measures waiting only, with
+//! backend time reported separately as `compute_us`, and the two always
+//! cover the full in-server time. Rejected requests keep their real
+//! queue time too, so clients can tell "rejected instantly" from
+//! "queued then rejected".
 //! Malformed requests (wrong sequence length) and backend panics become
 //! per-request error [`Response`]s — they never take a worker down.
 //!
@@ -48,7 +72,7 @@
 //! measures the compiled representations against).
 
 use crate::coordinator::cache::ResponseCache;
-use crate::coordinator::shard::ShardedQueue;
+use crate::coordinator::shard::{affinity_hash, ShardedQueue};
 use crate::infer::InferenceModel;
 use crate::nn::Transformer;
 use std::panic::AssertUnwindSafe;
@@ -62,6 +86,13 @@ pub trait Backend: Send + Sync {
     /// Classify a flat batch; returns per-example logits rows.
     fn infer(&self, ids: &[u32], batch: usize, seq: usize) -> Vec<Vec<f32>>;
     fn seq_len(&self) -> usize;
+    /// Greedy-continue `prompt` by up to `max_new` tokens, or `None`
+    /// when this backend cannot generate (non-causal / non-LM models;
+    /// the default). Generating backends run a KV-cached
+    /// [`crate::infer::decode::DecodeSession`] per call.
+    fn generate(&self, _prompt: &[u32], _max_new: usize) -> Option<Vec<u32>> {
+        None
+    }
 }
 
 /// The compiled model *is* a backend — the intended production path.
@@ -73,6 +104,13 @@ impl Backend for InferenceModel {
 
     fn seq_len(&self) -> usize {
         self.cfg.max_seq
+    }
+
+    fn generate(&self, prompt: &[u32], max_new: usize) -> Option<Vec<u32>> {
+        if !self.supports_decode() {
+            return None;
+        }
+        Some(self.generate_greedy(prompt, max_new, self.cfg.max_seq))
     }
 }
 
@@ -95,20 +133,37 @@ impl Backend for NativeBackend {
     }
 }
 
-/// One request: token ids + reply channel.
-pub struct Request {
-    pub ids: Vec<u32>,
-    pub reply: Sender<Response>,
-    pub enqueued: Instant,
+/// One queued request: token ids + reply channel, in one of two kinds.
+/// Both kinds share the sharded queue, so a drained batch can carry a
+/// mix; the worker splits it (classification slice in one backend call,
+/// generation requests one KV-cached session each).
+pub enum Request {
+    /// Fixed-length batch forward over the backend.
+    Classify {
+        ids: Vec<u32>,
+        reply: Sender<Response>,
+        enqueued: Instant,
+    },
+    /// Autoregressive continuation: greedy-decode up to `max_new`
+    /// tokens after the prompt over a KV-cached decode session.
+    Generate {
+        ids: Vec<u32>,
+        max_new: usize,
+        reply: Sender<Response>,
+        enqueued: Instant,
+    },
 }
 
-/// Reply: logits + queueing/compute latency breakdown. `error` is set
-/// (and `logits` empty) when the request was rejected or the backend
-/// failed on its batch; `cached` is set when the response came from the
+/// Reply: logits (classification) or generated tokens (generation),
+/// plus the queueing/compute latency breakdown. `error` is set (and the
+/// payload empty) when the request was rejected or the backend failed
+/// on its batch; `cached` is set when the response came from the
 /// response cache without touching the queue or backend.
 #[derive(Clone, Debug)]
 pub struct Response {
     pub logits: Vec<f32>,
+    /// Greedy continuation for a `Generate` request (no prompt, no EOS).
+    pub tokens: Vec<u32>,
     /// Enqueue → batch formation. Excludes backend compute.
     pub queue_us: u64,
     /// Backend time for the batch that carried this request.
@@ -123,6 +178,7 @@ impl Response {
     fn failure(msg: String, queue_us: u64) -> Response {
         Response {
             logits: Vec::new(),
+            tokens: Vec::new(),
             queue_us,
             compute_us: 0,
             batch_size: 0,
@@ -254,6 +310,7 @@ impl Client {
             if let Some(logits) = cache.get(&ids) {
                 return Ok(Response {
                     logits,
+                    tokens: Vec::new(),
                     queue_us: 0,
                     compute_us: 0,
                     batch_size: 0,
@@ -263,13 +320,17 @@ impl Client {
             }
         }
         let key = self.cache.as_ref().map(|_| ids.clone());
+        let shard_key = affinity_hash(&ids);
         let (reply_tx, reply_rx) = mpsc::channel();
         self.queue
-            .push(Request {
-                ids,
-                reply: reply_tx,
-                enqueued: Instant::now(),
-            })
+            .push_affine(
+                shard_key,
+                Request::Classify {
+                    ids,
+                    reply: reply_tx,
+                    enqueued: Instant::now(),
+                },
+            )
             .map_err(|_| anyhow::anyhow!("server stopped"))?;
         let resp = reply_rx
             .recv()
@@ -286,6 +347,41 @@ impl Client {
     /// as `Err`.
     pub fn infer(&self, ids: Vec<u32>) -> crate::Result<Response> {
         let resp = self.try_infer(ids)?;
+        if let Some(e) = &resp.error {
+            anyhow::bail!("request failed: {e}");
+        }
+        Ok(resp)
+    }
+
+    /// Submit a generation request (greedy continuation of `ids` by up
+    /// to `max_new` tokens) and wait for the reply, returning the raw
+    /// [`Response`] even when it carries an error. The response cache is
+    /// not consulted: generation replies are token sequences, not the
+    /// logits rows the cache stores. Affinity-routed like
+    /// classification, so identical prompts share a shard.
+    pub fn try_generate(&self, ids: Vec<u32>, max_new: usize) -> crate::Result<Response> {
+        let shard_key = affinity_hash(&ids);
+        let (reply_tx, reply_rx) = mpsc::channel();
+        self.queue
+            .push_affine(
+                shard_key,
+                Request::Generate {
+                    ids,
+                    max_new,
+                    reply: reply_tx,
+                    enqueued: Instant::now(),
+                },
+            )
+            .map_err(|_| anyhow::anyhow!("server stopped"))?;
+        reply_rx
+            .recv()
+            .map_err(|_| anyhow::anyhow!("server dropped request"))
+    }
+
+    /// Submit a generation request and wait. Rejected/failed requests
+    /// surface as `Err`.
+    pub fn generate(&self, ids: Vec<u32>, max_new: usize) -> crate::Result<Response> {
+        let resp = self.try_generate(ids, max_new)?;
         if let Some(e) = &resp.error {
             anyhow::bail!("request failed: {e}");
         }
@@ -318,6 +414,8 @@ pub struct ServeStats {
     pub cache_hits: usize,
     /// Cache lookups that fell through to the queue.
     pub cache_misses: usize,
+    /// Tokens emitted by successful `Generate` requests.
+    pub generated_tokens: usize,
 }
 
 impl ServeStats {
@@ -338,6 +436,7 @@ impl ServeStats {
         self.stolen += other.stolen;
         self.cache_hits += other.cache_hits;
         self.cache_misses += other.cache_misses;
+        self.generated_tokens += other.generated_tokens;
     }
 }
 
@@ -346,6 +445,13 @@ impl ServeStats {
 /// shard.
 pub fn start(backend: Arc<dyn Backend>, cfg: ServeCfg) -> (Client, Server) {
     let workers = cfg.workers.max(1);
+    // Divide the machine between the workers: each worker's large dense
+    // forwards may parallelize, but N workers × all-cores matmuls would
+    // oversubscribe N-fold (process-global knob; last server wins).
+    let cores = std::thread::available_parallelism()
+        .map(|x| x.get())
+        .unwrap_or(1);
+    crate::infer::set_matmul_threads((cores / workers).max(1));
     let queue = Arc::new(ShardedQueue::new(workers, cfg.queue_depth.max(1)));
     let cache = if cfg.cache_entries > 0 {
         Some(Arc::new(ResponseCache::new(cfg.cache_entries)))
@@ -375,6 +481,11 @@ impl Server {
         for h in self.handles {
             stats.absorb(&h.join().unwrap_or_default());
         }
+        // Restore the auto matmul thread budget: the per-worker divide
+        // set in `start` must not outlive the worker pool (a joined
+        // 8-worker server would otherwise pin every later compiled
+        // forward in this process to cores/8 threads).
+        crate::infer::set_matmul_threads(0);
         if let Some(cache) = &self.cache {
             let (hits, misses) = cache.counters();
             stats.cache_hits += hits as usize;
@@ -437,74 +548,164 @@ fn worker_loop(
         // backend's compute must not leak into queue_us.
         let formed = Instant::now();
         // Validate per request: one malformed request must not poison
-        // the batch, let alone the worker.
-        let mut valid = Vec::with_capacity(batch.len());
+        // the batch, let alone the worker. Classification needs exactly
+        // `seq` ids; generation needs a non-empty prompt within `seq`.
+        let mut classify = Vec::new();
+        let mut generate = Vec::new();
         for r in batch {
-            if r.ids.len() == seq {
-                valid.push(r);
-            } else {
-                stats.rejected += 1;
-                let queue_us = formed.duration_since(r.enqueued).as_micros() as u64;
-                let _ = r.reply.send(Response::failure(
-                    format!(
-                        "bad request: got {} token ids, model expects {seq}",
-                        r.ids.len()
-                    ),
-                    queue_us,
-                ));
+            match r {
+                Request::Classify { ids, reply, enqueued } => {
+                    if ids.len() == seq {
+                        classify.push((ids, reply, enqueued));
+                    } else {
+                        stats.rejected += 1;
+                        let queue_us = formed.duration_since(enqueued).as_micros() as u64;
+                        let _ = reply.send(Response::failure(
+                            format!(
+                                "bad request: got {} token ids, model expects {seq}",
+                                ids.len()
+                            ),
+                            queue_us,
+                        ));
+                    }
+                }
+                Request::Generate { ids, max_new, reply, enqueued } => {
+                    // A prompt of exactly `seq` tokens leaves no room to
+                    // generate — reject it rather than return a silent
+                    // empty continuation indistinguishable from EOS.
+                    if !ids.is_empty() && ids.len() < seq {
+                        generate.push((ids, max_new, reply, enqueued));
+                    } else {
+                        stats.rejected += 1;
+                        let queue_us = formed.duration_since(enqueued).as_micros() as u64;
+                        let _ = reply.send(Response::failure(
+                            format!(
+                                "bad generate request: prompt of {} tokens, model \
+                                 needs 1..{seq} to leave room to generate",
+                                ids.len()
+                            ),
+                            queue_us,
+                        ));
+                    }
+                }
             }
         }
-        if valid.is_empty() {
-            continue;
-        }
-        let bsz = valid.len();
-        let mut ids = Vec::with_capacity(bsz * seq);
-        for r in &valid {
-            ids.extend_from_slice(&r.ids);
-        }
+        // Classification slice: one backend call for the whole slice.
         // Contain backend panics: answer the batch with errors and keep
         // serving. The backend is read-only (`&self`), so observing it
         // after a panic is benign.
-        let result =
-            std::panic::catch_unwind(AssertUnwindSafe(|| backend.infer(&ids, bsz, seq)));
-        let done = Instant::now();
-        let compute = done.duration_since(formed);
-        let compute_us = compute.as_micros() as u64;
-        match result {
-            Ok(logits) => {
-                // batches/total_batch_fill count *served* batches only,
-                // so mean_batch() stays requests-per-successful-batch.
-                stats.batches += 1;
-                stats.total_batch_fill += bsz;
-                stats.requests += bsz;
-                for (r, row) in valid.into_iter().zip(logits) {
-                    let queue_us = formed.duration_since(r.enqueued).as_micros() as u64;
-                    let _ = r.reply.send(Response {
-                        logits: row,
+        if !classify.is_empty() {
+            let bsz = classify.len();
+            let mut ids = Vec::with_capacity(bsz * seq);
+            for (req_ids, _, _) in &classify {
+                ids.extend_from_slice(req_ids);
+            }
+            let result =
+                std::panic::catch_unwind(AssertUnwindSafe(|| backend.infer(&ids, bsz, seq)));
+            let compute = formed.elapsed();
+            let compute_us = compute.as_micros() as u64;
+            match result {
+                Ok(logits) => {
+                    // batches/total_batch_fill count *served* batches
+                    // only, so mean_batch() stays
+                    // requests-per-successful-batch.
+                    stats.batches += 1;
+                    stats.total_batch_fill += bsz;
+                    stats.requests += bsz;
+                    for ((_, reply, enqueued), row) in classify.into_iter().zip(logits) {
+                        let queue_us = formed.duration_since(enqueued).as_micros() as u64;
+                        let _ = reply.send(Response {
+                            logits: row,
+                            tokens: Vec::new(),
+                            queue_us,
+                            compute_us,
+                            batch_size: bsz,
+                            cached: false,
+                            error: None,
+                        });
+                    }
+                    ctrl.observe(queue.pending(), bsz, compute);
+                }
+                Err(panic) => {
+                    stats.failed += bsz;
+                    let msg = format!("backend error: {}", panic_message(panic));
+                    for (_, reply, enqueued) in classify {
+                        let queue_us = formed.duration_since(enqueued).as_micros() as u64;
+                        let _ = reply.send(Response {
+                            logits: Vec::new(),
+                            tokens: Vec::new(),
+                            queue_us,
+                            compute_us,
+                            batch_size: bsz,
+                            cached: false,
+                            error: Some(msg.clone()),
+                        });
+                    }
+                }
+            }
+        }
+        // Generation slice: one KV-cached decode session per request.
+        // These run after the classification slice so fixed-length
+        // traffic is never parked behind a long decode; requests queued
+        // behind a decoding worker are drained by stealing peers.
+        let gen_count = generate.len();
+        let mut gen_compute = Duration::ZERO;
+        for (ids, max_new, reply, enqueued) in generate {
+            // A generation request's queue time runs until its *own*
+            // session starts: waiting behind the batch's classification
+            // slice and earlier decode sessions is queueing, not this
+            // request's compute — queue_us + compute_us must cover the
+            // full in-server time.
+            let started = Instant::now();
+            let queue_us = started.duration_since(enqueued).as_micros() as u64;
+            let result =
+                std::panic::catch_unwind(AssertUnwindSafe(|| backend.generate(&ids, max_new)));
+            let compute = started.elapsed();
+            gen_compute += compute;
+            let compute_us = compute.as_micros() as u64;
+            match result {
+                Ok(Some(tokens)) => {
+                    stats.requests += 1;
+                    stats.generated_tokens += tokens.len();
+                    let _ = reply.send(Response {
+                        logits: Vec::new(),
+                        tokens,
                         queue_us,
                         compute_us,
-                        batch_size: bsz,
+                        batch_size: 1,
                         cached: false,
                         error: None,
                     });
                 }
-                ctrl.observe(queue.pending(), bsz, compute);
-            }
-            Err(panic) => {
-                stats.failed += bsz;
-                let msg = format!("backend error: {}", panic_message(panic));
-                for r in valid {
-                    let queue_us = formed.duration_since(r.enqueued).as_micros() as u64;
-                    let _ = r.reply.send(Response {
+                Ok(None) => {
+                    stats.rejected += 1;
+                    let _ = reply.send(Response::failure(
+                        "backend does not support generation (needs a causal LM)".into(),
+                        queue_us,
+                    ));
+                }
+                Err(panic) => {
+                    stats.failed += 1;
+                    let msg = format!("backend error: {}", panic_message(panic));
+                    let _ = reply.send(Response {
                         logits: Vec::new(),
+                        tokens: Vec::new(),
                         queue_us,
                         compute_us,
-                        batch_size: bsz,
+                        batch_size: 1,
                         cached: false,
-                        error: Some(msg.clone()),
+                        error: Some(msg),
                     });
                 }
             }
+        }
+        // Generation feeds the controller too: a generation-only
+        // workload must still shrink the batch target under light
+        // traffic (target 1 ⇒ no straggler wait at formation) and grow
+        // it under backlog — otherwise every Generate pays the initial
+        // max_wait forever.
+        if gen_count > 0 {
+            ctrl.observe(queue.pending(), gen_count, gen_compute);
         }
     }
 }
@@ -835,6 +1036,112 @@ mod tests {
             c.observe(64, fill, Duration::from_micros(100));
         }
         assert_eq!(c.target_batch(), 16);
+    }
+
+    #[test]
+    fn generate_requests_run_decode_sessions() {
+        use crate::config::ModelCfg;
+        use crate::util::Rng;
+        let mut rng = Rng::new(502);
+        let model = Transformer::new(&ModelCfg::sim_gpt_s(), &mut rng);
+        let compiled = Arc::new(model.compile(MergePolicy::Merged));
+        let direct = Arc::clone(&compiled);
+        let (client, server) = start(
+            Arc::clone(&compiled) as Arc<dyn Backend>,
+            ServeCfg {
+                workers: 2,
+                ..ServeCfg::default()
+            },
+        );
+        let prompts: Vec<Vec<u32>> = (0..6u32)
+            .map(|t| (0..4).map(|i| (t * 31 + i * 7 + 1) % 256).collect())
+            .collect();
+        let mut total_tokens = 0usize;
+        for p in &prompts {
+            let want = direct.generate_greedy(p, 8, direct.cfg.max_seq);
+            let resp = client.generate(p.clone(), 8).unwrap();
+            assert_eq!(resp.tokens, want, "served tokens diverge from direct session");
+            assert!(resp.logits.is_empty());
+            total_tokens += want.len();
+        }
+        // Empty prompts are rejected per-request, not served.
+        let err = client.generate(Vec::new(), 4).unwrap_err();
+        assert!(format!("{err}").contains("bad generate request"), "{err}");
+        drop(client);
+        let stats = server.join();
+        assert_eq!(stats.requests, 6);
+        assert_eq!(stats.rejected, 1);
+        assert_eq!(stats.generated_tokens, total_tokens);
+    }
+
+    #[test]
+    fn generate_on_non_decoding_backend_is_an_error() {
+        // EchoBackend keeps the default generate() → unsupported.
+        let (client, server) = start(echo(4, Duration::ZERO), ServeCfg::default());
+        let err = client.generate(vec![1, 2], 4).unwrap_err();
+        assert!(
+            format!("{err}").contains("does not support generation"),
+            "{err}"
+        );
+        // Classification still flows on the same queue afterwards.
+        assert_eq!(client.infer(vec![1, 2, 3, 4]).unwrap().logits[0], 10.0);
+        drop(client);
+        let stats = server.join();
+        assert_eq!(stats.requests, 1);
+        assert_eq!(stats.rejected, 1);
+        assert_eq!(stats.generated_tokens, 0);
+    }
+
+    #[test]
+    fn mixed_classify_and_generate_share_the_queue() {
+        // A backend that supports both kinds: infer echoes sums,
+        // generate echoes the prompt reversed (capped at max_new).
+        struct Both;
+        impl Backend for Both {
+            fn infer(&self, ids: &[u32], batch: usize, seq: usize) -> Vec<Vec<f32>> {
+                (0..batch)
+                    .map(|i| vec![ids[i * seq..(i + 1) * seq].iter().sum::<u32>() as f32])
+                    .collect()
+            }
+            fn seq_len(&self) -> usize {
+                4
+            }
+            fn generate(&self, prompt: &[u32], max_new: usize) -> Option<Vec<u32>> {
+                Some(prompt.iter().rev().copied().take(max_new).collect())
+            }
+        }
+        let (client, server) = start(
+            Arc::new(Both),
+            ServeCfg {
+                workers: 2,
+                max_batch: 4,
+                ..ServeCfg::default()
+            },
+        );
+        let mut handles = Vec::new();
+        for t in 0..4u32 {
+            let c = client.clone();
+            handles.push(std::thread::spawn(move || {
+                for i in 0..6u32 {
+                    if i % 2 == 0 {
+                        let ids = vec![t, i, 1, 2];
+                        let want = ids.iter().sum::<u32>() as f32;
+                        assert_eq!(c.infer(ids).unwrap().logits[0], want);
+                    } else {
+                        let resp = c.generate(vec![t, i, 9], 2).unwrap();
+                        assert_eq!(resp.tokens, vec![9, i]);
+                    }
+                }
+            }));
+        }
+        drop(client);
+        for h in handles {
+            h.join().unwrap();
+        }
+        let stats = server.join();
+        assert_eq!(stats.requests, 24);
+        assert_eq!(stats.generated_tokens, 4 * 3 * 2);
+        assert_eq!(stats.rejected + stats.failed, 0);
     }
 
     #[test]

@@ -5,10 +5,13 @@
 //! `Arc<Mutex<Receiver>>`; batch formation held that lock for up to
 //! `max_wait`, so workers serialized exactly where they were supposed to
 //! overlap. [`ShardedQueue`] gives each worker its own deque: producers
-//! spread requests round-robin across shards (short per-shard critical
-//! sections), each worker drains its own shard first, and an idle worker
-//! **steals** from a peer's shard instead of blocking — a stalled worker
-//! can never strand the requests parked behind it.
+//! route requests by [`affinity_hash`] of their token ids (equal
+//! sequences share a shard, so cache fills and batch contents
+//! correlate) or spread round-robin ([`ShardedQueue::push`]) — short
+//! per-shard critical sections either way. Each worker drains its own
+//! shard first, and an idle worker **steals** from a peer's shard
+//! instead of blocking — a stalled worker (or one skewed onto by
+//! affinity routing) can never strand the requests parked behind it.
 //!
 //! Backpressure is preserved: a global capacity gate (one counter, held
 //! only for increment/decrement — never while waiting for stragglers)
@@ -19,6 +22,27 @@ use std::collections::VecDeque;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Condvar, Mutex};
 use std::time::Duration;
+
+/// FNV-1a over a token-id slice — the affinity key for shard routing.
+///
+/// Requests with identical ids hash to the same shard, so repeated
+/// sequences land in the same worker's deque: its batches correlate
+/// (one backend call covers the duplicates back-to-back), and once the
+/// first reply fills the client-side response cache, *later* identical
+/// requests hit it before enqueueing. (Duplicates already queued are
+/// not deduplicated — the cache is client-side only.) Work-stealing
+/// remains the fallback when affinity skews load — a hot shard's
+/// backlog is drained by idle peers exactly as under round-robin.
+pub fn affinity_hash(ids: &[u32]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &t in ids {
+        for b in t.to_le_bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x100_0000_01b3);
+        }
+    }
+    h
+}
 
 /// Sleep between steal scans while work is known to be queued somewhere
 /// (fast reaction to a stalled peer's backlog)…
@@ -94,6 +118,13 @@ impl<T> ShardedQueue<T> {
     pub fn push(&self, item: T) -> Result<(), T> {
         let idx = self.rr.fetch_add(1, Ordering::Relaxed) % self.shards.len();
         self.push_to(idx, item)
+    }
+
+    /// Blocking push to the shard `key` hashes to (affinity routing):
+    /// equal keys always land on the same shard. Same backpressure and
+    /// close semantics as [`ShardedQueue::push`].
+    pub fn push_affine(&self, key: u64, item: T) -> Result<(), T> {
+        self.push_to((key % self.shards.len() as u64) as usize, item)
     }
 
     /// Blocking push to a specific shard (tests and affinity routing).
@@ -273,6 +304,32 @@ mod tests {
         let q1 = ShardedQueue::new(1, 8);
         q1.push(7u32).unwrap();
         assert!(q1.steal(0, 8).is_empty());
+    }
+
+    #[test]
+    fn affinity_routes_equal_keys_to_one_shard() {
+        let q = ShardedQueue::new(4, 64);
+        let ids_a = [3u32, 1, 4, 1, 5];
+        let ids_b = [2u32, 7, 1, 8];
+        let (ka, kb) = (affinity_hash(&ids_a), affinity_hash(&ids_b));
+        // The hash is a pure function of the ids…
+        assert_eq!(ka, affinity_hash(&ids_a.to_vec()));
+        // …and distinguishes order (FNV-1a is sequence-sensitive).
+        assert_ne!(affinity_hash(&[1u32, 2]), affinity_hash(&[2u32, 1]));
+        for i in 0..6u32 {
+            q.push_affine(ka, i).unwrap();
+            q.push_affine(kb, 100 + i).unwrap();
+        }
+        let (sa, sb) = ((ka % 4) as usize, (kb % 4) as usize);
+        assert_eq!(q.local_len(sa) + q.local_len(sb), 12, "items strayed off-shard");
+        // Every item with the same key sits on its key's shard, FIFO.
+        let got = q.take_local(sa, 64);
+        if sa == sb {
+            assert_eq!(got.len(), 12);
+        } else {
+            assert_eq!(got, vec![0, 1, 2, 3, 4, 5]);
+            assert_eq!(q.take_local(sb, 64), vec![100, 101, 102, 103, 104, 105]);
+        }
     }
 
     #[test]

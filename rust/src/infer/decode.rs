@@ -1,0 +1,496 @@
+//! **KV-cached incremental decoding** — the autoregressive generation
+//! fast path over a compiled [`InferenceModel`].
+//!
+//! The full-forward decode loop re-runs every block over the whole
+//! sequence for each emitted token: O(S·d²·L) per token, O(S²) overall.
+//! A [`DecodeSession`] instead holds per-layer key/value caches so each
+//! new token runs every block on a **single row**: the projections go
+//! through [`InferLinear::forward_row`] (dense gemv, CSR row-gather
+//! that skips S₁-pruned weights, or the O(d·r) low-rank side-path) and
+//! attention scores are computed against the cached K/V — O(d²·L + S·d)
+//! per token, with sparsity-proportional skipping under the `Csr`
+//! policy.
+//!
+//! ## Cache layout
+//!
+//! One [`LayerKv`] per block, each holding two row-major `[cap, width]`
+//! tensors where `cap = n_prefix + max_seq` and `width` is that block's
+//! attention width (`n_heads·head_dim` — blocks can differ under
+//! [`super::MergePolicy::Compact`], which physically removes zero-gated
+//! heads). Row `j` of the cache is attention position `j`: prefix rows
+//! occupy `0..p` and token `t` lives at `p + t`, exactly the layout the
+//! batched forward materializes, so softmax over rows `0..=pos`
+//! reproduces the causal mask bit-for-bit (masked scores of `-1e30`
+//! underflow to the same 0 contribution).
+//!
+//! ## Why Csr keeps the UV side-path dense per-row
+//!
+//! Under the `Csr` policy the base `W⊙S₁ + S₂` is a row-gather, but the
+//! low-rank update stays two dense gemvs (`x·U` then `·V`): U and V are
+//! tall-skinny *dense* factors, so a compressed representation would
+//! add index overhead while skipping nothing — and folding UV into the
+//! base would densify it and destroy exactly the sparsity the policy
+//! exploits (see the module docs in [`super`]).
+//!
+//! ## Sessions are one sequence each
+//!
+//! A session owns the state of exactly one sequence. Batched ragged
+//! generation (the trainer's `greedy_decode`, the serving
+//! coordinator's `Generate` requests) runs one session per row. The
+//! old path padded short rows to the batch max with `PAD` and ran the
+//! padded positions through every block anyway — correct for a causal
+//! model (the mask keeps trailing `PAD` out of each row's own logits)
+//! but pure wasted compute, and one mask bug away from cross-row
+//! contamination. Per-row sessions have no padding at all, so row
+//! independence is structural and needs no masking machinery.
+
+use super::{InferBlock, InferHead, InferenceModel};
+use crate::data::vocab::EOS;
+use crate::tensor::linalg::dot;
+use crate::tensor::{gelu_scalar, Tensor};
+
+/// Index of the largest logit, first index winning exact ties — the
+/// greedy decode rule. One definition shared by the session API, the
+/// examples, the benches, and the parity tests, so tie-breaking (and
+/// any future NaN policy) can never silently diverge between the
+/// library and its references.
+pub fn argmax(logits: &[f32]) -> u32 {
+    let mut best = 0usize;
+    for (j, &x) in logits.iter().enumerate() {
+        if x > logits[best] {
+            best = j;
+        }
+    }
+    best as u32
+}
+
+/// Per-block K/V cache: rows are attention positions (prefix first,
+/// then tokens), columns the block's attention width.
+struct LayerKv {
+    k: Tensor,
+    v: Tensor,
+    width: usize,
+}
+
+/// One in-flight autoregressive sequence over a compiled model:
+/// created by [`InferenceModel::prefill`], advanced one token at a time
+/// by [`DecodeSession::decode_step`].
+pub struct DecodeSession<'m> {
+    model: &'m InferenceModel,
+    kv: Vec<LayerKv>,
+    /// Attention positions cached so far (prefix rows + tokens).
+    pos: usize,
+    /// Token positions consumed (excludes prefix rows).
+    tokens: usize,
+    last_logits: Vec<f32>,
+}
+
+impl InferenceModel {
+    /// Whether this compiled model can host a [`DecodeSession`]:
+    /// incremental decoding needs a causal LM (earlier positions must
+    /// not attend to later ones, and the head must emit per-position
+    /// logits). The serving coordinator consults this before accepting
+    /// `Generate` requests for a backend.
+    pub fn supports_decode(&self) -> bool {
+        self.cfg.causal && matches!(self.head, InferHead::Lm(_))
+    }
+
+    /// Run the prompt through every block once, filling the per-layer
+    /// K/V caches (prefix rows included), and return a session whose
+    /// [`DecodeSession::last_logits`] are the LM logits at the last
+    /// prompt position — identical to the corresponding row of
+    /// [`InferenceModel::forward`].
+    ///
+    /// Panics unless the model is a causal LM (incremental decoding is
+    /// meaningless when earlier positions attend to later ones) and the
+    /// prompt is non-empty and within `max_seq`.
+    pub fn prefill(&self, ids: &[u32]) -> DecodeSession<'_> {
+        assert!(
+            self.supports_decode(),
+            "prefill: incremental decoding needs a causal LM model"
+        );
+        assert!(!ids.is_empty(), "prefill: empty prompt");
+        assert!(
+            ids.len() <= self.cfg.max_seq,
+            "prefill: prompt {} exceeds max_seq {}",
+            ids.len(),
+            self.cfg.max_seq
+        );
+        let d = self.tok.cols();
+        let vocab = self.tok.rows();
+        let p = self.n_prefix();
+        let cap = p + self.cfg.max_seq;
+        let seq = ids.len();
+        let eff_seq = p + seq;
+
+        let mut kv: Vec<LayerKv> = self
+            .blocks
+            .iter()
+            .map(|blk| {
+                let width = blk.attn.n_heads * blk.attn.head_dim;
+                LayerKv {
+                    k: Tensor::zeros(&[cap, width]),
+                    v: Tensor::zeros(&[cap, width]),
+                    width,
+                }
+            })
+            .collect();
+
+        // Prefix rows + token/position embeddings, batch = 1.
+        let mut x = Tensor::zeros(&[eff_seq, d]);
+        if let Some(pref) = &self.prefix {
+            x.data[..p * d].copy_from_slice(&pref.data[..p * d]);
+        }
+        for (s, &id) in ids.iter().enumerate() {
+            let t = id as usize;
+            assert!(t < vocab, "token id {t} out of vocab ({vocab})");
+            let dst = &mut x.data[(p + s) * d..(p + s + 1) * d];
+            let tsrc = &self.tok.data[t * d..(t + 1) * d];
+            let psrc = &self.pos.data[s * d..(s + 1) * d];
+            for j in 0..d {
+                dst[j] = tsrc[j] + psrc[j];
+            }
+        }
+
+        for (blk, layer) in self.blocks.iter().zip(kv.iter_mut()) {
+            x = blk.prefill(&x, eff_seq, layer);
+        }
+
+        // Only the last position's logits are needed for decoding.
+        let h_last = self.ln_f.apply_row(&x.data[(eff_seq - 1) * d..eff_seq * d]);
+        let InferHead::Lm(lm) = &self.head else { unreachable!() };
+        let last_logits = lm.forward_row(&h_last);
+
+        DecodeSession {
+            model: self,
+            kv,
+            pos: eff_seq,
+            tokens: seq,
+            last_logits,
+        }
+    }
+
+    /// Greedy continuation of `prompt` via a KV-cached session: emit
+    /// argmax tokens until `max_new` tokens, EOS, or a total sequence
+    /// length of `min(max_len, max_seq)` (prefix rows not counted).
+    /// Returns the continuation only (no prompt, no EOS).
+    pub fn generate_greedy(&self, prompt: &[u32], max_new: usize, max_len: usize) -> Vec<u32> {
+        let cap = max_len.min(self.cfg.max_seq);
+        if prompt.is_empty() || prompt.len() >= cap || max_new == 0 {
+            return Vec::new();
+        }
+        let mut sess = self.prefill(prompt);
+        let mut out = Vec::new();
+        let mut len = prompt.len();
+        loop {
+            let tok = argmax(sess.last_logits());
+            if tok == EOS {
+                break;
+            }
+            out.push(tok);
+            len += 1;
+            if out.len() >= max_new || len >= cap {
+                break;
+            }
+            sess.decode_step(tok);
+        }
+        out
+    }
+}
+
+impl<'m> DecodeSession<'m> {
+    /// LM logits at the most recently consumed position (prompt tail
+    /// after [`InferenceModel::prefill`], the new token after each
+    /// [`Self::decode_step`]).
+    pub fn last_logits(&self) -> &[f32] {
+        &self.last_logits
+    }
+
+    /// Token positions consumed so far (prompt + decoded; excludes
+    /// prefix rows).
+    pub fn len(&self) -> usize {
+        self.tokens
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.tokens == 0
+    }
+
+    /// Remaining token capacity before the model's `max_seq` is full.
+    pub fn remaining(&self) -> usize {
+        self.model.cfg.max_seq - self.tokens
+    }
+
+    /// Advance the sequence by one token: run every block on a single
+    /// row against the cached K/V, append the new K/V rows, and return
+    /// the LM logits for the new position. O(d²·L + S·d) instead of the
+    /// full forward's O(S·d²·L).
+    pub fn decode_step(&mut self, token: u32) -> &[f32] {
+        let m = self.model;
+        let d = m.tok.cols();
+        let vocab = m.tok.rows();
+        assert!(
+            self.tokens < m.cfg.max_seq,
+            "decode_step: sequence already at max_seq {}",
+            m.cfg.max_seq
+        );
+        let t = token as usize;
+        assert!(t < vocab, "token id {t} out of vocab ({vocab})");
+
+        // Embed at token index `tokens` (position table ignores prefix).
+        let tsrc = &m.tok.data[t * d..(t + 1) * d];
+        let psrc = &m.pos.data[self.tokens * d..(self.tokens + 1) * d];
+        let mut x: Vec<f32> = tsrc.iter().zip(psrc).map(|(a, b)| a + b).collect();
+
+        for (blk, layer) in m.blocks.iter().zip(self.kv.iter_mut()) {
+            x = blk.decode_row(&x, layer, self.pos);
+        }
+        let h = m.ln_f.apply_row(&x);
+        let InferHead::Lm(lm) = &m.head else { unreachable!() };
+        self.last_logits = lm.forward_row(&h);
+        self.pos += 1;
+        self.tokens += 1;
+        &self.last_logits
+    }
+}
+
+impl InferBlock {
+    /// Batched (batch = 1) block forward that records this block's K/V
+    /// rows into the cache. This *is* the batched implementation
+    /// (`forward_capture` with a capture target) — the causal mask is
+    /// applied because decode models are causal by the
+    /// [`InferenceModel::supports_decode`] gate — so prefill parity is
+    /// the batched path's parity by construction, not by duplication.
+    fn prefill(&self, x: &Tensor, seq: usize, kv: &mut LayerKv) -> Tensor {
+        let width = kv.width;
+        self.forward_capture(
+            x,
+            1,
+            seq,
+            Some((
+                &mut kv.k.data[..seq * width],
+                &mut kv.v.data[..seq * width],
+            )),
+        )
+    }
+
+    /// Single-row block step at attention position `pos`: project the
+    /// new row, append its K/V to the cache, attend over rows
+    /// `0..=pos`, and run the FFN — all through the single-row kernels.
+    fn decode_row(&self, x: &[f32], kv: &mut LayerKv, pos: usize) -> Vec<f32> {
+        let width = kv.width;
+        let hd = self.attn.head_dim;
+        let h = self.ln1.apply_row(x);
+        let q = self.attn.wq.forward_row(&h);
+        let k = self.attn.wk.forward_row(&h);
+        let v = self.attn.wv.forward_row(&h);
+        kv.k.data[pos * width..(pos + 1) * width].copy_from_slice(&k);
+        kv.v.data[pos * width..(pos + 1) * width].copy_from_slice(&v);
+
+        let n = pos + 1; // attend over everything cached, self included
+        let rscale = 1.0 / (hd as f32).sqrt();
+        let mut ctx = vec![0.0f32; width];
+        let mut scores = vec![0.0f32; n];
+        for hh in 0..self.attn.n_heads {
+            let qh = &q[hh * hd..(hh + 1) * hd];
+            for (j, s) in scores.iter_mut().enumerate() {
+                let krow = &kv.k.data[j * width + hh * hd..j * width + hh * hd + hd];
+                *s = dot(qh, krow) * rscale;
+            }
+            let mx = scores.iter().fold(f32::NEG_INFINITY, |m, &s| m.max(s));
+            let mut denom = 0.0f32;
+            for s in scores.iter_mut() {
+                *s = (*s - mx).exp();
+                denom += *s;
+            }
+            let ctx_h = &mut ctx[hh * hd..(hh + 1) * hd];
+            for (j, &s) in scores.iter().enumerate() {
+                let a = s / denom;
+                if a == 0.0 {
+                    continue;
+                }
+                let vrow = &kv.v.data[j * width + hh * hd..j * width + hh * hd + hd];
+                for (c, &vv) in ctx_h.iter_mut().zip(vrow) {
+                    *c += a * vv;
+                }
+            }
+        }
+        let mut a_out = self.attn.wo.forward_row(&ctx);
+        if let Some(ad) = &self.adapter1 {
+            a_out = ad.forward_row(&a_out);
+        }
+        let x2: Vec<f32> = x.iter().zip(&a_out).map(|(a, b)| a + b).collect();
+        let h2 = self.ln2.apply_row(&x2);
+        let mut hmid = self.fc1.forward_row(&h2);
+        for vmid in hmid.iter_mut() {
+            *vmid = gelu_scalar(*vmid);
+        }
+        let mut f = self.fc2.forward_row(&hmid);
+        if let Some(ad) = &self.adapter2 {
+            f = ad.forward_row(&f);
+        }
+        x2.iter().zip(&f).map(|(a, b)| a + b).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use crate::config::{DseeCfg, ModelCfg};
+    use crate::dsee::attach_dsee;
+    use crate::dsee::magnitude_prune::magnitude_prune_global;
+    use crate::infer::MergePolicy;
+    use crate::nn::Transformer;
+    use crate::tensor::Tensor;
+    use crate::util::Rng;
+
+    fn lm_cfg() -> ModelCfg {
+        ModelCfg {
+            name: "tiny-decode".into(),
+            vocab: 60,
+            max_seq: 12,
+            d_model: 16,
+            n_layers: 2,
+            n_heads: 4,
+            d_ffn: 24,
+            causal: true,
+            n_classes: 0,
+            head: "lm".into(),
+            n_prefix: 0,
+        }
+    }
+
+    fn dsee_lm_model(seed: u64) -> Transformer {
+        let mut rng = Rng::new(seed);
+        let mut m = Transformer::new(&lm_cfg(), &mut rng);
+        attach_dsee(
+            &mut m,
+            &DseeCfg {
+                rank: 4,
+                n_sparse: 16,
+                ..DseeCfg::default()
+            },
+            &mut rng,
+        );
+        for lin in m.attn_projections_mut() {
+            if let Some(a) = &mut lin.adapter {
+                a.u = Tensor::randn(&[a.u.rows(), a.u.cols()], 0.2, &mut rng);
+                a.scale = 0.7;
+            }
+            if let Some(r) = &mut lin.residual {
+                r.values = Tensor::randn(&[r.nnz()], 0.3, &mut rng);
+            }
+        }
+        {
+            let mut lins = m.all_linears_mut();
+            magnitude_prune_global(&mut lins, 0.5);
+        }
+        m
+    }
+
+    #[test]
+    fn decode_steps_match_full_forward_all_policies() {
+        let m = dsee_lm_model(0xD0);
+        let ids: Vec<u32> = (0..10).map(|i| (i * 7 + 3) as u32 % 60).collect();
+        let (want, _) = m.forward(&ids, 1, ids.len());
+        let vocab = m.cfg.vocab;
+        for policy in [MergePolicy::Merged, MergePolicy::Csr, MergePolicy::Compact] {
+            let im = m.compile(policy);
+            let split = 4;
+            let mut sess = im.prefill(&ids[..split]);
+            // Prefill's last logits = full-forward row (split - 1).
+            let check = |logits: &[f32], row: usize| {
+                let seg = &want.data[row * vocab..(row + 1) * vocab];
+                for (a, b) in logits.iter().zip(seg) {
+                    assert!(
+                        (a - b).abs() < 1e-4 * (1.0 + b.abs()),
+                        "{}: row {row}: {a} vs {b}",
+                        policy.label()
+                    );
+                }
+            };
+            check(sess.last_logits(), split - 1);
+            for (i, &tok) in ids.iter().enumerate().skip(split) {
+                sess.decode_step(tok);
+                check(sess.last_logits(), i);
+            }
+            assert_eq!(sess.len(), ids.len());
+            assert_eq!(sess.remaining(), im.cfg.max_seq - ids.len());
+        }
+    }
+
+    #[test]
+    fn forward_row_matches_batched_forward() {
+        // InferLinear::forward_row against the batched path for every
+        // representation (dense, CSR + low-rank side-path).
+        let m = dsee_lm_model(0xD1);
+        for policy in [MergePolicy::Merged, MergePolicy::Csr] {
+            let im = m.compile(policy);
+            let mut rng = Rng::new(5);
+            let blk = &im.blocks[0];
+            for lin in [&blk.attn.wq, &blk.fc1, &blk.fc2] {
+                let x = Tensor::randn(&[1, lin.in_dim()], 0.8, &mut rng);
+                let want = lin.forward(&x);
+                let got = lin.forward_row(&x.data);
+                for (a, b) in got.iter().zip(&want.data) {
+                    assert!((a - b).abs() < 1e-5 * (1.0 + b.abs()), "{a} vs {b}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn greedy_generation_is_deterministic_and_capped() {
+        let m = dsee_lm_model(0xD2);
+        let im = m.compile(MergePolicy::Merged);
+        let prompt = [7u32, 21, 3];
+        let a = im.generate_greedy(&prompt, 32, im.cfg.max_seq);
+        let b = im.generate_greedy(&prompt, 32, im.cfg.max_seq);
+        assert_eq!(a, b, "greedy decode must be deterministic");
+        assert!(a.len() <= im.cfg.max_seq - prompt.len());
+        // max_new caps the continuation.
+        let c = im.generate_greedy(&prompt, 2, im.cfg.max_seq);
+        assert!(c.len() <= 2);
+        assert_eq!(c, a[..c.len().min(a.len())].to_vec());
+        // A full prompt produces no continuation.
+        let full: Vec<u32> = (0..im.cfg.max_seq as u32).collect();
+        assert!(im.generate_greedy(&full, 4, im.cfg.max_seq).is_empty());
+    }
+
+    #[test]
+    #[should_panic(expected = "causal LM")]
+    fn prefill_rejects_non_causal_models() {
+        let mut rng = Rng::new(0xD3);
+        let mut cfg = lm_cfg();
+        cfg.causal = false;
+        cfg.head = "classifier".into();
+        cfg.n_classes = 2;
+        let m = Transformer::new(&cfg, &mut rng);
+        let _ = m.compile(MergePolicy::Merged).prefill(&[1, 2, 3]);
+    }
+
+    #[test]
+    fn prefix_model_decode_matches_full_forward() {
+        let mut rng = Rng::new(0xD4);
+        let mut m = Transformer::new(&lm_cfg(), &mut rng);
+        m.prefix = Some(crate::nn::Prefix {
+            vecs: Tensor::randn(&[3, 16], 0.5, &mut rng),
+            grad: Tensor::zeros(&[3, 16]),
+        });
+        let ids: Vec<u32> = (0..8).map(|i| (i * 5 + 1) as u32 % 60).collect();
+        let (want, _) = m.forward(&ids, 1, ids.len());
+        let vocab = m.cfg.vocab;
+        let im = m.compile(MergePolicy::Merged);
+        assert_eq!(im.n_prefix(), 3);
+        let p = 3;
+        let mut sess = im.prefill(&ids[..2]);
+        for (i, &tok) in ids.iter().enumerate().skip(2) {
+            sess.decode_step(tok);
+            // LM logits rows include the prefix positions.
+            let row = p + i;
+            let seg = &want.data[row * vocab..(row + 1) * vocab];
+            for (a, b) in sess.last_logits().iter().zip(seg) {
+                assert!((a - b).abs() < 1e-4 * (1.0 + b.abs()), "row {row}: {a} vs {b}");
+            }
+        }
+    }
+}

@@ -84,6 +84,26 @@ impl CsrMatrix {
         y
     }
 
+    /// y += x · W for a single input row — the decode-path kernel.
+    ///
+    /// A row-gather over the CSR layout: for each live input dimension
+    /// the stored (column, value) pairs of that input-row are streamed
+    /// once, so pruned weights cost nothing — per-token decode work is
+    /// proportional to nnz, not rows·cols. **Accumulates** into `y`
+    /// (callers seed it with the bias).
+    pub fn matvec(&self, x: &[f32], y: &mut [f32]) {
+        assert_eq!(x.len(), self.rows, "csr matvec: x len {} vs rows {}", x.len(), self.rows);
+        assert_eq!(y.len(), self.cols, "csr matvec: y len {} vs cols {}", y.len(), self.cols);
+        for (kk, &a) in x.iter().enumerate() {
+            if a == 0.0 {
+                continue;
+            }
+            for e in self.row_ptr[kk]..self.row_ptr[kk + 1] {
+                y[self.col_idx[e] as usize] += a * self.vals[e];
+            }
+        }
+    }
+
     /// Densify (parity tests).
     pub fn to_dense(&self) -> Tensor {
         let mut t = Tensor::zeros(&[self.rows, self.cols]);
@@ -132,6 +152,24 @@ mod tests {
             let want = matmul(&x, &w);
             assert_eq!(got.shape, want.shape);
             for (a, b) in got.data.iter().zip(&want.data) {
+                assert!((a - b).abs() < 1e-5 * (1.0 + a.abs()), "{a} vs {b}");
+            }
+        }
+    }
+
+    #[test]
+    fn matvec_matches_batched_matmul_row() {
+        let mut rng = Rng::new(702);
+        for &(k, n, keep) in &[(8usize, 8usize, 2usize), (32, 16, 4), (7, 19, 3)] {
+            let w = sparse_matrix(k, n, keep, &mut rng);
+            let x = Tensor::randn(&[1, k], 0.7, &mut rng);
+            let csr = CsrMatrix::from_dense(&w);
+            let bias: Vec<f32> = (0..n).map(|i| (i as f32) * 0.01).collect();
+            let mut y = bias.clone();
+            csr.matvec(&x.data, &mut y);
+            let want = matmul(&x, &w);
+            for (j, (a, b)) in y.iter().zip(&want.data).enumerate() {
+                let b = b + bias[j];
                 assert!((a - b).abs() < 1e-5 * (1.0 + a.abs()), "{a} vs {b}");
             }
         }

@@ -29,13 +29,46 @@
 //! across its worker pool — the model is immutable and `Sync` by
 //! construction.
 
+pub mod decode;
 pub mod kernels;
 
 use crate::config::ModelCfg;
 use crate::nn::{Head, Transformer};
-use crate::tensor::linalg::{matmul, matmul_bt};
+use crate::tensor::linalg::{gemv_into, matmul, matmul_bt, par_matmul};
 use crate::tensor::Tensor;
 use kernels::CsrMatrix;
+
+/// Per-call thread budget for the batched dense hot path; 0 = auto
+/// (all of `available_parallelism`). See [`set_matmul_threads`].
+static MATMUL_THREADS: std::sync::atomic::AtomicUsize = std::sync::atomic::AtomicUsize::new(0);
+
+/// Cap how many threads one dense batched forward may spread over
+/// (0 restores the auto default of every core). The serving coordinator
+/// sets this to `cores / workers` when it starts a worker pool, so N
+/// concurrent workers each running a large matmul cannot oversubscribe
+/// the machine N-fold. Process-global; the last caller wins.
+pub fn set_matmul_threads(n: usize) {
+    MATMUL_THREADS.store(n, std::sync::atomic::Ordering::Relaxed);
+}
+
+/// Thread budget for the batched dense hot path: the
+/// [`set_matmul_threads`] cap if one is set, else all of
+/// `available_parallelism` (queried once, cached). [`par_matmul`] itself
+/// falls back to the serial kernel below its measured 64k-output-element
+/// crossover, so routing everything through it costs nothing for small
+/// batches.
+fn pool_threads() -> usize {
+    use std::sync::OnceLock;
+    static AUTO: OnceLock<usize> = OnceLock::new();
+    match MATMUL_THREADS.load(std::sync::atomic::Ordering::Relaxed) {
+        0 => *AUTO.get_or_init(|| {
+            std::thread::available_parallelism()
+                .map(|x| x.get())
+                .unwrap_or(1)
+        }),
+        n => n,
+    }
+}
 
 /// Minimum merged-matrix sparsity for the `Csr` policy to actually pick
 /// the compressed representation; below this the index overhead loses
@@ -204,7 +237,10 @@ impl InferLinear {
     /// y = x·W + b (+ (x·U)·V·scale when the side-path is live).
     pub fn forward(&self, x: &Tensor) -> Tensor {
         let mut y = match &self.repr {
-            Repr::Dense(w) => matmul(x, w),
+            // Large prefill/classification batches clear par_matmul's
+            // 64k-output crossover and spread over the thread pool;
+            // below it the call degrades to the serial kernel.
+            Repr::Dense(w) => par_matmul(x, w, pool_threads()),
             Repr::Csr(c) => c.matmul(x),
         };
         if let Some((u, v, scale)) = &self.low {
@@ -212,6 +248,32 @@ impl InferLinear {
             y.axpy(*scale, &matmul(&xu, v));
         }
         y.add_bias(&self.bias)
+    }
+
+    /// y = x·W + b for a **single row** — the incremental-decode path.
+    ///
+    /// Dispatches to the dense single-row gemv, the CSR row-gather that
+    /// skips S₁-pruned weights, or both plus the O(d·r) low-rank
+    /// side-path (`(x·U)·V·scale`), which stays dense per-row by design:
+    /// U/V are tall-skinny dense factors, so gathering them through CSR
+    /// would add index overhead without skipping anything.
+    pub fn forward_row(&self, x: &[f32]) -> Vec<f32> {
+        let mut y = self.bias.clone();
+        match &self.repr {
+            Repr::Dense(w) => gemv_into(x, &w.data, &mut y, w.rows(), w.cols()),
+            Repr::Csr(c) => c.matvec(x, &mut y),
+        }
+        if let Some((u, v, scale)) = &self.low {
+            let r = u.cols();
+            let mut xu = vec![0.0f32; r];
+            gemv_into(x, &u.data, &mut xu, u.rows(), r);
+            let mut uv = vec![0.0f32; v.cols()];
+            gemv_into(&xu, &v.data, &mut uv, v.rows(), v.cols());
+            for (yy, dv) in y.iter_mut().zip(&uv) {
+                *yy += scale * dv;
+            }
+        }
+        y
     }
 }
 
@@ -249,6 +311,18 @@ impl InferNorm {
         }
         out
     }
+
+    /// Single-row layer norm — same arithmetic order as [`Self::apply`]
+    /// so decode-path parity holds to float rounding.
+    fn apply_row(&self, x: &[f32]) -> Vec<f32> {
+        let d = x.len();
+        let mean: f32 = x.iter().sum::<f32>() / d as f32;
+        let var: f32 = x.iter().map(|v| (v - mean) * (v - mean)).sum::<f32>() / d as f32;
+        let istd = 1.0 / (var + self.eps).sqrt();
+        (0..d)
+            .map(|j| (x[j] - mean) * istd * self.gamma[j] + self.beta[j])
+            .collect()
+    }
 }
 
 /// Frozen multi-head attention with gates folded into `wv`.
@@ -269,11 +343,31 @@ use crate::nn::attention::{gather_head_slice, scatter_head_slice};
 
 impl InferAttention {
     fn forward(&self, x: &Tensor, batch: usize, seq: usize) -> Tensor {
+        self.forward_capture(x, batch, seq, None)
+    }
+
+    /// Batched attention with optional K/V capture: when `capture` is
+    /// provided (decode-path prefill, batch = 1), the raw key/value
+    /// projections are copied into the caller's cache rows before the
+    /// context is formed. Same arithmetic as the plain forward — there
+    /// is only one copy of it — so prefill parity *is* batched parity.
+    fn forward_capture(
+        &self,
+        x: &Tensor,
+        batch: usize,
+        seq: usize,
+        capture: Option<(&mut [f32], &mut [f32])>,
+    ) -> Tensor {
         let width = self.n_heads * self.head_dim;
         let hd = self.head_dim;
         let q2 = self.wq.forward(x);
         let k2 = self.wk.forward(x);
         let v2 = self.wv.forward(x); // gates pre-folded into wv
+        if let Some((kd, vd)) = capture {
+            debug_assert_eq!(batch, 1, "K/V capture is a single-sequence path");
+            kd.copy_from_slice(&k2.data);
+            vd.copy_from_slice(&v2.data);
+        }
         let rscale = 1.0 / (hd as f32).sqrt();
         let mut ctx = Tensor::zeros(&[batch * seq, width]);
         for b in 0..batch {
@@ -310,6 +404,16 @@ impl InferAdapter {
         let h = self.down.forward(x).gelu();
         x.add(&self.up.forward(&h))
     }
+
+    /// Single-row adapter pass for the decode path.
+    fn forward_row(&self, x: &[f32]) -> Vec<f32> {
+        let mut h = self.down.forward_row(x);
+        for v in h.iter_mut() {
+            *v = crate::tensor::gelu_scalar(*v);
+        }
+        let up = self.up.forward_row(&h);
+        x.iter().zip(&up).map(|(a, b)| a + b).collect()
+    }
 }
 
 /// One frozen pre-LN block.
@@ -326,7 +430,22 @@ pub struct InferBlock {
 
 impl InferBlock {
     fn forward(&self, x: &Tensor, batch: usize, seq: usize) -> Tensor {
-        let mut a_out = self.attn.forward(&self.ln1.apply(x), batch, seq);
+        self.forward_capture(x, batch, seq, None)
+    }
+
+    /// Block forward with optional K/V capture (see
+    /// [`InferAttention::forward_capture`]) — the decode-path prefill
+    /// rides the batched implementation instead of duplicating it.
+    fn forward_capture(
+        &self,
+        x: &Tensor,
+        batch: usize,
+        seq: usize,
+        capture: Option<(&mut [f32], &mut [f32])>,
+    ) -> Tensor {
+        let mut a_out = self
+            .attn
+            .forward_capture(&self.ln1.apply(x), batch, seq, capture);
         if let Some(ad) = &self.adapter1 {
             a_out = ad.forward(&a_out);
         }

@@ -56,6 +56,21 @@ pub fn matmul_into(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: u
     }
 }
 
+/// y += x · W for a single input row — the incremental-decode gemv.
+///
+/// Decode-time layers see exactly one new row per step, so the batched
+/// kernel's m-loop is pure overhead; this wrapper keeps the same i–k–j
+/// inner loop (8-wide unrolled axpy, zero-activation skip) but commits
+/// to m = 1 up front. **Accumulates** into `y`, so callers can seed `y`
+/// with the bias and save a second pass.
+#[inline]
+pub fn gemv_into(x: &[f32], w: &[f32], y: &mut [f32], k: usize, n: usize) {
+    debug_assert_eq!(x.len(), k, "gemv_into: x len vs k");
+    debug_assert_eq!(w.len(), k * n, "gemv_into: w len vs k*n");
+    debug_assert_eq!(y.len(), n, "gemv_into: y len vs n");
+    matmul_into(x, w, y, 1, k, n);
+}
+
 /// C = A · (B ⊙ M), the masked-weight contraction, computed without
 /// materializing the O(k·n) masked copy of B. This is the
 /// `Linear::forward` hot path when an S₁ pruning mask is attached: the
@@ -233,6 +248,22 @@ mod tests {
             let fused = matmul_masked(&a, &b, &mask);
             let materialized = matmul(&a, &b.mul(&mask));
             assert_close(&fused, &materialized, 1e-5);
+        }
+    }
+
+    #[test]
+    fn gemv_accumulates_on_top_of_seed() {
+        let mut rng = Rng::new(8);
+        for &(k, n) in &[(1usize, 1usize), (7, 5), (32, 17), (64, 64)] {
+            let x = Tensor::randn(&[1, k], 1.0, &mut rng);
+            let w = Tensor::randn(&[k, n], 1.0, &mut rng);
+            let bias: Vec<f32> = (0..n).map(|i| i as f32 * 0.1).collect();
+            let mut y = bias.clone();
+            gemv_into(&x.data, &w.data, &mut y, k, n);
+            let want = matmul(&x, &w).add_bias(&bias);
+            for (a, b) in y.iter().zip(&want.data) {
+                assert!((a - b).abs() < 1e-5 * (1.0 + a.abs()), "{a} vs {b}");
+            }
         }
     }
 

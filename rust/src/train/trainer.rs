@@ -12,7 +12,7 @@ use crate::config::TrainCfg;
 use crate::data::batch::Batcher;
 use crate::data::datatotext::GenDataset;
 use crate::data::glue::Dataset;
-use crate::data::vocab::{EOS, PAD};
+use crate::data::vocab::PAD;
 use crate::metrics;
 use crate::nn::loss::{cross_entropy, lm_cross_entropy, mse};
 use crate::nn::{Head, Transformer};
@@ -202,64 +202,22 @@ impl Trainer {
         losses
     }
 
-    /// Greedy-decode a continuation for each input (batched; every step
-    /// re-runs the full forward — fine at these sequence lengths).
+    /// Greedy-decode a continuation for each input over a KV-cached
+    /// [`crate::infer::decode::DecodeSession`] per row: the model is
+    /// compiled once, then each row prefills its own prompt and decodes
+    /// token-by-token against its cache — O(d²·L) per token instead of
+    /// the old full re-forward per step. Ragged rows see no padding at
+    /// all: the old path padded short rows to the batch max with `PAD`
+    /// and computed those positions anyway (wasted work, and only the
+    /// causal mask kept trailing `PAD` out of each row's logits);
+    /// per-row sessions make row independence structural rather than
+    /// mask-dependent.
     pub fn greedy_decode(&self, inputs: &[Vec<u32>], max_new: usize, seq_len: usize) -> Vec<Vec<u32>> {
-        let mut outs: Vec<Vec<u32>> = Vec::with_capacity(inputs.len());
-        for chunk in inputs.chunks(16) {
-            let bsz = chunk.len();
-            let mut rows: Vec<Vec<u32>> = chunk.to_vec();
-            let mut done = vec![false; bsz];
-            for _ in 0..max_new {
-                if done.iter().all(|&d| d) {
-                    break;
-                }
-                // Pad rows to a common length.
-                let cur_len = rows.iter().map(|r| r.len()).max().unwrap().min(seq_len);
-                let mut ids = Vec::with_capacity(bsz * cur_len);
-                for r in &rows {
-                    let mut row = r.clone();
-                    row.truncate(cur_len);
-                    while row.len() < cur_len {
-                        row.push(PAD);
-                    }
-                    ids.extend(row);
-                }
-                let (logits, _) = self.model.forward(&ids, bsz, cur_len);
-                let v = self.model.cfg.vocab;
-                let p = self.model.n_prefix();
-                for (bi, row) in rows.iter_mut().enumerate() {
-                    if done[bi] || row.len() >= seq_len {
-                        done[bi] = true;
-                        continue;
-                    }
-                    // Logits at this row's last real position (shifted by
-                    // any prefix rows prepended inside the model).
-                    let pos = bi * (p + cur_len) + p + (row.len() - 1).min(cur_len - 1);
-                    let seg = &logits.data[pos * v..(pos + 1) * v];
-                    let mut best = 0usize;
-                    for (j, &x) in seg.iter().enumerate() {
-                        if x > seg[best] {
-                            best = j;
-                        }
-                    }
-                    let tok = best as u32;
-                    row.push(tok);
-                    if tok == EOS {
-                        done[bi] = true;
-                    }
-                }
-            }
-            // Strip the prompt + EOS.
-            for (bi, r) in rows.into_iter().enumerate() {
-                let mut gen: Vec<u32> = r[chunk[bi].len()..].to_vec();
-                if let Some(p) = gen.iter().position(|&t| t == EOS) {
-                    gen.truncate(p);
-                }
-                outs.push(gen);
-            }
-        }
-        outs
+        let compiled = self.model.compile(crate::infer::MergePolicy::Merged);
+        inputs
+            .iter()
+            .map(|prompt| compiled.generate_greedy(prompt, max_new, seq_len))
+            .collect()
     }
 
     /// Decode the eval set and compute BLEU/NIST/METEOR/TER.

@@ -10,10 +10,14 @@
 use dsee::config::{DseeCfg, ModelCfg, TrainCfg};
 use dsee::coordinator::serve::{start, ServeCfg};
 use dsee::data::glue::{make_dataset, GlueTask};
+use dsee::data::vocab::EOS;
 use dsee::dsee::attach_dsee;
 use dsee::dsee::magnitude_prune::magnitude_prune_global;
 use dsee::dsee::structured::{prune_ffn, prune_heads};
+use dsee::infer::decode::argmax;
 use dsee::infer::MergePolicy;
+use dsee::nn::Transformer;
+use dsee::tensor::Tensor;
 use dsee::train::trainer::Trainer;
 use dsee::util::Rng;
 use std::sync::Arc;
@@ -51,6 +55,150 @@ fn tuned_pruned_model() -> dsee::nn::Transformer {
         assert!(got > 0.45, "pruning did not take: {got}");
     }
     model
+}
+
+/// A DSEE-tuned + pruned decoder-only LM (the paper's generation
+/// shape): attach carriers, briefly fine-tune on the synthetic
+/// data-to-text task so every carrier is non-trivial, prune S₁ at 50%,
+/// and optionally bolt on prefix rows (attached post-training — the
+/// parity target is the forward, not the tuning trajectory).
+fn tuned_pruned_lm(with_prefix: bool) -> Transformer {
+    let mut arch = ModelCfg::sim_gpt_s();
+    let mut rng = Rng::new(0x2F2F);
+    let ds = dsee::data::datatotext::make_dataset(dsee::data::datatotext::GenTask::E2e, 32, 11);
+    // LM batches are input ++ target rows — the position table must
+    // cover the dataset's fixed sequence length (run_generation does
+    // the same bump).
+    arch.max_seq = arch.max_seq.max(ds.seq_len);
+    let mut model = Transformer::new(&arch, &mut rng);
+    attach_dsee(
+        &mut model,
+        &DseeCfg {
+            rank: 4,
+            n_sparse: 16,
+            ..DseeCfg::default()
+        },
+        &mut rng,
+    );
+    let mut trainer = Trainer::new(
+        model,
+        TrainCfg {
+            batch: 8,
+            ..TrainCfg::default()
+        },
+    );
+    trainer.train_lm(&ds, 1);
+    let mut model = trainer.model;
+    {
+        let mut lins = model.all_linears_mut();
+        let got = magnitude_prune_global(&mut lins, 0.5);
+        assert!(got > 0.45, "pruning did not take: {got}");
+    }
+    if with_prefix {
+        let d = model.cfg.d_model;
+        model.prefix = Some(dsee::nn::Prefix {
+            vecs: Tensor::randn(&[3, d], 0.5, &mut rng),
+            grad: Tensor::zeros(&[3, d]),
+        });
+    }
+    model
+}
+
+/// Greedy decode by re-running the full training-path forward every
+/// step — the O(S²) reference the KV-cached session must reproduce.
+fn full_recompute_greedy(model: &Transformer, prompt: &[u32], max_new: usize, cap: usize) -> Vec<u32> {
+    let p = model.n_prefix();
+    let v = model.cfg.vocab;
+    let mut seqv = prompt.to_vec();
+    let mut out = Vec::new();
+    while out.len() < max_new && seqv.len() < cap {
+        let (logits, _) = model.forward(&seqv, 1, seqv.len());
+        let row = p + seqv.len() - 1;
+        let tok = argmax(&logits.data[row * v..(row + 1) * v]);
+        if tok == EOS {
+            break;
+        }
+        out.push(tok);
+        seqv.push(tok);
+    }
+    out
+}
+
+#[test]
+fn kv_decode_matches_full_forward_all_policies() {
+    // prefill + N×decode_step logits must match the training-path full
+    // forward at 1e-4 for every MergePolicy, with and without prefix
+    // rows — the decode-path acceptance bar.
+    for with_prefix in [false, true] {
+        let model = tuned_pruned_lm(with_prefix);
+        let seq = 16.min(model.cfg.max_seq);
+        let ids: Vec<u32> = (0..seq).map(|i| ((i * 13 + 5) % 256) as u32).collect();
+        let (want, _) = model.forward(&ids, 1, ids.len());
+        let p = model.n_prefix();
+        let v = model.cfg.vocab;
+        for policy in POLICIES {
+            let compiled = model.compile(policy);
+            let split = 5;
+            let mut sess = compiled.prefill(&ids[..split]);
+            let check = |logits: &[f32], token_idx: usize| {
+                let row = p + token_idx;
+                let seg = &want.data[row * v..(row + 1) * v];
+                for (a, b) in logits.iter().zip(seg) {
+                    assert!(
+                        (a - b).abs() < 1e-4 * (1.0 + b.abs()),
+                        "{} prefix={with_prefix} token {token_idx}: {a} vs {b}",
+                        policy.label()
+                    );
+                }
+            };
+            check(sess.last_logits(), split - 1);
+            for (i, &tok) in ids.iter().enumerate().skip(split) {
+                sess.decode_step(tok);
+                check(sess.last_logits(), i);
+            }
+        }
+    }
+}
+
+#[test]
+fn kv_generation_matches_full_recompute_greedy() {
+    // generate_greedy over the session API must emit exactly the tokens
+    // the O(S²) full-recompute loop emits, for every policy.
+    let model = tuned_pruned_lm(false);
+    let cap = model.cfg.max_seq;
+    let prompt: Vec<u32> = (0..6).map(|i| ((i * 29 + 3) % 256) as u32).collect();
+    let want = full_recompute_greedy(&model, &prompt, 12, cap);
+    for policy in POLICIES {
+        let got = model.compile(policy).generate_greedy(&prompt, 12, cap);
+        assert_eq!(got, want, "{} diverges from full recompute", policy.label());
+    }
+}
+
+#[test]
+fn ragged_batch_generation_has_no_padding_bleed() {
+    // Per-row KV sessions make row independence structural: each row
+    // of a ragged batch must decode exactly as it would alone — and
+    // exactly as the full-recompute reference. (The old padded-batch
+    // decode relied on the causal mask to keep trailing PAD out of a
+    // short row's logits; this pins the property so no future batched
+    // implementation can regress it.)
+    let model = tuned_pruned_lm(false);
+    let cap = model.cfg.max_seq;
+    let ragged: Vec<Vec<u32>> = (0..5usize)
+        .map(|r| (0..3 + r * 2).map(|i| ((r * 41 + i * 17 + 7) % 256) as u32).collect())
+        .collect();
+    let refs: Vec<Vec<u32>> = ragged
+        .iter()
+        .map(|p| full_recompute_greedy(&model, p, 8, cap))
+        .collect();
+    let trainer = Trainer::new(model, TrainCfg::default());
+    let batched = trainer.greedy_decode(&ragged, 8, cap);
+    assert_eq!(batched, refs, "ragged rows decoded differently in a batch");
+    // Each row alone reproduces its in-batch continuation.
+    for (row, want) in ragged.iter().zip(&refs) {
+        let alone = trainer.greedy_decode(&[row.clone()], 8, cap);
+        assert_eq!(&alone[0], want);
+    }
 }
 
 #[test]

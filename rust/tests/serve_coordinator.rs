@@ -150,8 +150,9 @@ fn idle_workers_steal_from_a_stalled_shard() {
         std::thread::spawn(move || c.infer(vec![999]).unwrap())
     };
     std::thread::sleep(Duration::from_millis(10));
-    // ...then push fast requests: round-robin parks half of them on the
-    // stalled worker's shard, where only the idle peer can reach them in
+    // ...then push fast requests: affinity hashing parks half of these
+    // ids on the stalled worker's shard (single-u32 FNV keys alternate
+    // shards for 0..8), where only the idle peer can reach them in
     // time. With the old single-queue design these simply waited.
     let t0 = Instant::now();
     for i in 0..8u32 {
