@@ -10,7 +10,16 @@
 //!   headline numbers;
 //! * Incremental decode: tokens/sec for full-recompute greedy decoding
 //!   vs the KV-cached `DecodeSession`, Merged vs Csr — the acceptance
-//!   bar is KV beating full recompute wall-clock at seq ≥ 32;
+//!   bar is KV beating full recompute wall-clock at seq ≥ 32 — plus a
+//!   **zero-allocation assertion** on `decode_step` (counting global
+//!   allocator; the `_into` kernels + session scratch must not touch
+//!   the heap in steady state);
+//! * Continuous-batched decode serving: tokens/s at 1/4/16 concurrent
+//!   sessions and short-behind-long time-to-first-token, continuous
+//!   session interleaving vs the serial run-to-completion baseline
+//!   (the old scheduler, reproduced via the one-shot `begin_decode`
+//!   fallback) — the acceptance bar is the short request's p50 latency
+//!   dropping under continuous batching;
 //! * Serving: dynamic-batcher round-trip on a null backend (queue
 //!   overhead), worker scaling on the sharded work-stealing queue
 //!   (1 vs 8 workers — the acceptance bar is ≥1.5× at 8), and the
@@ -18,9 +27,11 @@
 //! * Runtime: PJRT execute latency for the kernel/forward/train-step
 //!   artifacts (skipped gracefully when artifacts are absent).
 
-use dsee::bench_harness::{bench, black_box};
+use dsee::bench_harness::{bench, black_box, smoke_mode};
 use dsee::config::{DseeCfg, ModelCfg, TrainCfg};
-use dsee::coordinator::serve::{start, EchoBackend, ServeCfg};
+use dsee::coordinator::serve::{
+    latency_summary, start, Backend, DecodeStream, EchoBackend, ServeCfg,
+};
 use dsee::data::glue::{make_dataset, GlueTask};
 use dsee::dsee::grebsmo::grebsmo;
 use dsee::dsee::magnitude_prune::magnitude_prune_global;
@@ -34,8 +45,148 @@ use dsee::tensor::linalg::{matmul, matmul_at, matmul_bt, par_matmul};
 use dsee::tensor::Tensor;
 use dsee::train::trainer::Trainer;
 use dsee::util::Rng;
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
-use std::time::Duration;
+use std::time::{Duration, Instant};
+
+/// Counting allocator: the decode-step path claims zero steady-state
+/// heap allocations; this makes the claim checkable (the assertion runs
+/// under the CI `--smoke` pass too).
+struct CountingAlloc;
+
+static ALLOC_COUNT: AtomicU64 = AtomicU64::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOC_COUNT.fetch_add(1, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOC_COUNT.fetch_add(1, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+}
+
+#[global_allocator]
+static ALLOC: CountingAlloc = CountingAlloc;
+
+/// Serial scheduling baseline: delegates to the compiled model but
+/// keeps the *default* one-shot `begin_decode` (whole continuation at
+/// admission) — byte-for-byte the pre-continuous-batching scheduler.
+struct SerialDecodeBackend(Arc<dsee::infer::InferenceModel>);
+
+impl Backend for SerialDecodeBackend {
+    fn infer(&self, ids: &[u32], batch: usize, seq: usize) -> Vec<Vec<f32>> {
+        Backend::infer(self.0.as_ref(), ids, batch, seq)
+    }
+    fn seq_len(&self) -> usize {
+        self.0.cfg.max_seq
+    }
+    fn generate(&self, prompt: &[u32], max_new: usize) -> Option<Vec<u32>> {
+        Backend::generate(self.0.as_ref(), prompt, max_new)
+    }
+    // no begin_decode override: the default runs generate() to
+    // completion at admission, serializing sessions.
+}
+
+/// Deterministic paced decode backend for the TTFT comparison: one
+/// token per step at a fixed cost, no EOS, no model noise. (A sibling
+/// without the serial mode lives in tests/serve_coordinator.rs — the
+/// test pins scheduler behavior, this one benchmarks it.)
+struct PacedBackend {
+    step_cost: Duration,
+    /// true → keep the one-shot default begin_decode (serial baseline).
+    serial: bool,
+    /// Paced steps executed across all streams — lets the driver wait
+    /// until a long decode has *demonstrably started* before submitting
+    /// the short probe, instead of racing a sleep against the queue.
+    steps: Arc<AtomicU64>,
+}
+
+struct PacedStream {
+    left: usize,
+    cost: Duration,
+    tokens: Vec<u32>,
+    steps: Arc<AtomicU64>,
+}
+
+impl DecodeStream for PacedStream {
+    fn step(&mut self) -> bool {
+        if self.left == 0 {
+            return false;
+        }
+        std::thread::sleep(self.cost);
+        self.steps.fetch_add(1, Ordering::SeqCst);
+        self.tokens.push(self.tokens.len() as u32);
+        self.left -= 1;
+        self.left > 0
+    }
+    fn tokens(&self) -> &[u32] {
+        &self.tokens
+    }
+}
+
+impl Backend for PacedBackend {
+    fn infer(&self, _ids: &[u32], batch: usize, _seq: usize) -> Vec<Vec<f32>> {
+        vec![vec![0.0]; batch]
+    }
+    fn seq_len(&self) -> usize {
+        128
+    }
+    fn generate(&self, _prompt: &[u32], max_new: usize) -> Option<Vec<u32>> {
+        // Run-to-completion path (used by the default begin_decode when
+        // `serial`): same per-token pacing, one blocking call.
+        let mut t = Vec::with_capacity(max_new);
+        for i in 0..max_new {
+            std::thread::sleep(self.step_cost);
+            self.steps.fetch_add(1, Ordering::SeqCst);
+            t.push(i as u32);
+        }
+        Some(t)
+    }
+    fn begin_decode<'a>(
+        &'a self,
+        prompt: &[u32],
+        max_new: usize,
+    ) -> Option<Box<dyn DecodeStream + 'a>> {
+        if self.serial {
+            let tokens = self.generate(prompt, max_new)?;
+            struct Done(Vec<u32>);
+            impl DecodeStream for Done {
+                fn step(&mut self) -> bool {
+                    false
+                }
+                fn tokens(&self) -> &[u32] {
+                    &self.0
+                }
+            }
+            return Some(Box::new(Done(tokens)));
+        }
+        Some(Box::new(PacedStream {
+            left: max_new,
+            cost: self.step_cost,
+            tokens: Vec::new(),
+            steps: Arc::clone(&self.steps),
+        }))
+    }
+}
+
+/// Spin until the paced backend has executed at least `n` steps — the
+/// deterministic "the long decode is underway" barrier.
+fn wait_for_steps(steps: &AtomicU64, n: u64) {
+    let t0 = Instant::now();
+    while steps.load(Ordering::SeqCst) < n {
+        assert!(
+            t0.elapsed() < Duration::from_secs(5),
+            "paced backend never reached {n} steps"
+        );
+        std::thread::sleep(Duration::from_micros(200));
+    }
+}
 
 fn main() {
     dsee::util::logging::init();
@@ -240,6 +391,160 @@ fn main() {
                 gpt.max_seq
             );
         }
+
+        // Zero-allocation step path: after a short warmup (scratch and
+        // the low-rank buffer reach their steady sizes), decode_step
+        // must never touch the heap — the continuous-batching scheduler
+        // pays this path sessions × tokens times per second.
+        for policy in [MergePolicy::Merged, MergePolicy::Csr] {
+            let im = gm.compile(policy);
+            let mut sess = im.prefill(&prompt);
+            let mut tok = argmax(sess.last_logits());
+            for _ in 0..2 {
+                tok = argmax(sess.decode_step(tok));
+            }
+            let before = ALLOC_COUNT.load(Ordering::SeqCst);
+            for _ in 0..16 {
+                tok = argmax(sess.decode_step(tok));
+            }
+            let allocs = ALLOC_COUNT.load(Ordering::SeqCst) - before;
+            black_box(tok);
+            assert_eq!(
+                allocs, 0,
+                "decode_step allocated {allocs}× in steady state ({})",
+                policy.label()
+            );
+            println!(
+                "    → decode_step steady-state heap allocations: {allocs} ({})",
+                policy.label()
+            );
+        }
+
+        println!("\n== continuous-batched decode serving ==");
+        // Serial baseline vs session interleaving on ONE worker, same
+        // compiled model: total decode throughput at 1/4/16 concurrent
+        // Generate requests. The serial wrapper keeps the one-shot
+        // begin_decode fallback, i.e. the old run-to-completion
+        // scheduler.
+        let im = Arc::new(gm.compile(MergePolicy::Merged));
+        let gen_new = 16usize;
+        for &sessions in &[1usize, 4, 16] {
+            let mut mean_s = Vec::new();
+            for serial in [true, false] {
+                let backend: Arc<dyn Backend> = if serial {
+                    Arc::new(SerialDecodeBackend(Arc::clone(&im)))
+                } else {
+                    Arc::clone(&im) as Arc<dyn Backend>
+                };
+                let (client, server) = start(
+                    backend,
+                    ServeCfg {
+                        max_batch: 16,
+                        max_wait: Duration::from_micros(100),
+                        queue_depth: 256,
+                        workers: 1,
+                        cache_entries: 0,
+                    },
+                );
+                let label = if serial { "serial" } else { "continuous" };
+                let s = bench(
+                    &format!("decode serve {sessions:>2} sessions ({label})"),
+                    1,
+                    5,
+                    || {
+                        let mut handles = Vec::new();
+                        for c in 0..sessions {
+                            let cl = client.clone();
+                            let p: Vec<u32> =
+                                (0..6).map(|i| ((c * 31 + i * 13 + 7) % 256) as u32).collect();
+                            handles.push(std::thread::spawn(move || {
+                                cl.generate(p, gen_new).unwrap();
+                            }));
+                        }
+                        for h in handles {
+                            h.join().unwrap();
+                        }
+                    },
+                );
+                println!(
+                    "    → ≤{:.0} tok/s aggregate",
+                    s.throughput((sessions * gen_new) as f64)
+                );
+                mean_s.push(s.mean_s);
+                drop(client);
+                server.join();
+            }
+            println!(
+                "    → continuous vs serial at {sessions} sessions: {:.2}×",
+                mean_s[0] / mean_s[1]
+            );
+        }
+
+        // Head-of-line blocking: p50 time-to-first-token for short
+        // (2-token) requests submitted behind one long decode on a
+        // single worker. Deterministic paced backend (1 ms/step, no
+        // EOS) so the comparison is structural, not model noise: the
+        // serial scheduler must finish all 64 long steps before a short
+        // request runs; continuous batching retires it within a few
+        // interleaved sweeps. Short requests complete with their full
+        // 2-token continuation, so completion time == TTFT + one step.
+        let long_new = 64u64;
+        let mut p50 = Vec::new();
+        for serial in [true, false] {
+            let steps = Arc::new(AtomicU64::new(0));
+            let (client, server) = start(
+                Arc::new(PacedBackend {
+                    step_cost: Duration::from_millis(1),
+                    serial,
+                    steps: Arc::clone(&steps),
+                }),
+                ServeCfg {
+                    max_batch: 8,
+                    max_wait: Duration::from_micros(100),
+                    queue_depth: 64,
+                    workers: 1,
+                    cache_entries: 0,
+                },
+            );
+            let iters = if smoke_mode() { 1 } else { 5 };
+            let mut lat_us = Vec::new();
+            for it in 0..iters {
+                // One short measurement per long decode: the short
+                // request must actually be *behind* the long one —
+                // wait until the long decode has demonstrably executed
+                // a few steps before submitting the probe, so the
+                // ordering is deterministic rather than a sleep race.
+                let c = client.clone();
+                let h = std::thread::spawn(move || {
+                    c.generate(vec![1], long_new as usize).unwrap();
+                });
+                wait_for_steps(&steps, it as u64 * (long_new + 2) + 3);
+                let t0 = Instant::now();
+                client.generate(vec![2], 2).unwrap();
+                lat_us.push(t0.elapsed().as_secs_f64() * 1e6);
+                h.join().unwrap();
+            }
+            let (p, _, _) = latency_summary(lat_us);
+            println!(
+                "    → short-behind-long p50 latency ({}): {:.0} µs",
+                if serial { "serial" } else { "continuous" },
+                p
+            );
+            p50.push(p);
+            drop(client);
+            server.join();
+        }
+        assert!(
+            p50[1] < p50[0],
+            "continuous batching did not cut head-of-line latency: \
+             serial {:.0} µs vs continuous {:.0} µs",
+            p50[0],
+            p50[1]
+        );
+        println!(
+            "    → continuous batching cuts short-behind-long p50 by {:.1}×",
+            p50[0] / p50[1]
+        );
     }
 
     println!("\n== serving coordinator ==");

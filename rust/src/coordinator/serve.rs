@@ -47,21 +47,38 @@
 //! Two request kinds share the queue: [`Request::Classify`] (fixed-
 //! length batch forward) and [`Request::Generate`] (autoregressive
 //! continuation over a KV-cached
-//! [`crate::infer::decode::DecodeSession`]). Workers interleave them —
-//! each drained batch runs its classification slice through one
-//! [`Backend::infer`] call, then its generation requests through
-//! [`Backend::generate`] one session at a time, so classification
-//! traffic keeps flowing between (and, via work-stealing, during)
-//! long decodes. Generated token counts land in
-//! [`ServeStats::generated_tokens`].
+//! [`crate::infer::decode::DecodeSession`]).
+//!
+//! 5. **Continuous batching of decode sessions**: each worker keeps a
+//!    *session set* of live [`DecodeStream`]s (capacity
+//!    [`ServeCfg::max_batch`]). Every scheduler iteration sweeps the
+//!    queue for new arrivals **without waiting**, runs the batch's
+//!    classification slice, admits waiting `Generate` requests into
+//!    free session slots, then advances *every* live session by one
+//!    token. Sessions retire on EOS, token budget, or capacity.
+//!    A short request admitted behind a long decode therefore finishes
+//!    after its own few sweeps instead of waiting out the long
+//!    request's entire continuation — the old scheduler ran each
+//!    session to completion and head-of-line-blocked everything behind
+//!    it (`benches/perf_hotpath.rs` measures the TTFT difference).
+//!    Backends without an incremental session API fall back to a
+//!    one-shot [`Backend::begin_decode`] that runs
+//!    [`Backend::generate`] to completion at admission — correct, but
+//!    serial. Each decode sweep is accounted as one batch
+//!    (fill = live sessions), so [`ServeStats::mean_batch`] reflects
+//!    decode concurrency, and [`Response::batch_size`] reports the
+//!    peak number of concurrent sessions a generation ran alongside.
+//!
+//! Generated token counts land in [`ServeStats::generated_tokens`].
 //!
 //! Latency accounting: `queue_us` is stamped at **batch formation** for
-//! classification, and at **session start** for generation (so waiting
-//! behind the batch's classification slice or an earlier decode session
-//! is booked as queueing) — either way it measures waiting only, with
-//! backend time reported separately as `compute_us`, and the two always
-//! cover the full in-server time. Rejected requests keep their real
-//! queue time too, so clients can tell "rejected instantly" from
+//! classification, and at **session admission** (prefill start) for
+//! generation — so waiting behind a full session set or the batch's
+//! classification slice is booked as queueing. Either way it measures
+//! waiting only, with everything from admission to retirement (prefill
+//! + all interleaved sweeps) reported as `compute_us`, and the two
+//! always cover the full in-server time. Rejected requests keep their
+//! real queue time too, so clients can tell "rejected instantly" from
 //! "queued then rejected".
 //! Malformed requests (wrong sequence length) and backend panics become
 //! per-request error [`Response`]s — they never take a worker down.
@@ -93,6 +110,65 @@ pub trait Backend: Send + Sync {
     fn generate(&self, _prompt: &[u32], _max_new: usize) -> Option<Vec<u32>> {
         None
     }
+
+    /// Open an incrementally steppable decode stream for `prompt`, or
+    /// `None` when this backend cannot generate. The worker's
+    /// continuous-batching scheduler admits the stream into its session
+    /// set and advances it one [`DecodeStream::step`] per sweep.
+    ///
+    /// The default adapts [`Backend::generate`]: it runs the whole
+    /// continuation eagerly at admission and returns an
+    /// already-finished stream — correct, but serial (the admitting
+    /// worker blocks for the full generation, exactly the old
+    /// scheduler). Backends with a real session API (the compiled
+    /// [`InferenceModel`]) override it with a resumable stream so long
+    /// decodes interleave.
+    fn begin_decode<'a>(
+        &'a self,
+        prompt: &[u32],
+        max_new: usize,
+    ) -> Option<Box<dyn DecodeStream + 'a>> {
+        let tokens = self.generate(prompt, max_new)?;
+        Some(Box::new(FinishedStream { tokens }))
+    }
+}
+
+/// One in-flight generation advanced incrementally by a worker's
+/// continuous-batching scheduler: each [`Self::step`] emits at most one
+/// token, so a worker interleaves many live streams instead of running
+/// one request to completion while the rest queue.
+pub trait DecodeStream {
+    /// Advance by at most one token; returns `false` once the stream
+    /// has finished (EOS, token budget, or capacity). Must be a no-op
+    /// after finishing.
+    fn step(&mut self) -> bool;
+    /// Continuation emitted so far (no prompt, no EOS).
+    fn tokens(&self) -> &[u32];
+}
+
+/// Already-finished stream wrapping a one-shot [`Backend::generate`]
+/// result — the fallback for backends without an incremental session
+/// API.
+struct FinishedStream {
+    tokens: Vec<u32>,
+}
+
+impl DecodeStream for FinishedStream {
+    fn step(&mut self) -> bool {
+        false
+    }
+    fn tokens(&self) -> &[u32] {
+        &self.tokens
+    }
+}
+
+impl DecodeStream for crate::infer::decode::GreedyStream<'_> {
+    fn step(&mut self) -> bool {
+        crate::infer::decode::GreedyStream::step(self)
+    }
+    fn tokens(&self) -> &[u32] {
+        crate::infer::decode::GreedyStream::tokens(self)
+    }
 }
 
 /// The compiled model *is* a backend — the intended production path.
@@ -110,7 +186,27 @@ impl Backend for InferenceModel {
         if !self.supports_decode() {
             return None;
         }
-        Some(self.generate_greedy(prompt, max_new, self.cfg.max_seq))
+        // Prompt shape is validated by the worker before dispatch;
+        // direct misuse (empty / no-room prompts) panics, which the
+        // worker would catch as a per-request backend error.
+        Some(
+            self.generate_greedy(prompt, max_new, self.cfg.max_seq)
+                .expect("generate: prompt validated before dispatch"),
+        )
+    }
+
+    fn begin_decode<'a>(
+        &'a self,
+        prompt: &[u32],
+        max_new: usize,
+    ) -> Option<Box<dyn DecodeStream + 'a>> {
+        if !self.supports_decode() {
+            return None;
+        }
+        let stream = self
+            .greedy_stream(prompt, max_new, self.cfg.max_seq)
+            .expect("begin_decode: prompt validated before admission");
+        Some(Box::new(stream))
     }
 }
 
@@ -136,7 +232,8 @@ impl Backend for NativeBackend {
 /// One queued request: token ids + reply channel, in one of two kinds.
 /// Both kinds share the sharded queue, so a drained batch can carry a
 /// mix; the worker splits it (classification slice in one backend call,
-/// generation requests one KV-cached session each).
+/// generation requests admitted into the continuous-batching session
+/// set and stepped together).
 pub enum Request {
     /// Fixed-length batch forward over the backend.
     Classify {
@@ -164,10 +261,18 @@ pub struct Response {
     pub logits: Vec<f32>,
     /// Greedy continuation for a `Generate` request (no prompt, no EOS).
     pub tokens: Vec<u32>,
-    /// Enqueue → batch formation. Excludes backend compute.
+    /// Enqueue → batch formation (classification) or session admission
+    /// (generation). Excludes backend compute.
     pub queue_us: u64,
-    /// Backend time for the batch that carried this request.
+    /// Backend time for the batch that carried this request
+    /// (classification), or admission → retirement (generation: prefill
+    /// plus every interleaved sweep). `queue_us + compute_us` covers
+    /// the full in-server time either way.
     pub compute_us: u64,
+    /// How much company this request had: the formed batch size for
+    /// classification, or the **peak number of concurrently-stepped
+    /// decode sessions** observed while this request's session was live
+    /// for generation.
     pub batch_size: usize,
     /// Answered from the response cache (queue and backend skipped).
     pub cached: bool,
@@ -406,6 +511,9 @@ pub struct ServeStats {
     pub rejected: usize,
     /// Requests answered with an error because the backend panicked.
     pub failed: usize,
+    /// Served classification batches plus decode sweeps (one sweep =
+    /// all live sessions advanced one token), so
+    /// [`ServeStats::mean_batch`] reflects decode concurrency too.
     pub batches: usize,
     pub total_batch_fill: usize,
     /// Requests a worker stole from a peer's shard.
@@ -503,55 +611,91 @@ fn panic_message(panic: Box<dyn std::any::Any + Send>) -> String {
         .unwrap_or_else(|| "backend panicked".into())
 }
 
+/// One live, admitted decode stream plus its reply bookkeeping.
+struct LiveSession<'a> {
+    stream: Box<dyn DecodeStream + 'a>,
+    reply: Sender<Response>,
+    /// Enqueue → admission: the waiting this request actually did.
+    queue_us: u64,
+    /// Admission instant; `compute_us = started.elapsed()` at
+    /// retirement, so `queue_us + compute_us` covers the full in-server
+    /// time even though the session's steps interleave with others.
+    started: Instant,
+    /// Peak number of concurrently-stepped sessions observed while this
+    /// one was live — reported as [`Response::batch_size`].
+    peak: usize,
+}
+
 fn worker_loop(
     backend: Arc<dyn Backend>,
     cfg: ServeCfg,
     queue: Arc<ShardedQueue<Request>>,
     me: usize,
 ) -> ServeStats {
-    let seq = backend.seq_len();
+    let be: &dyn Backend = backend.as_ref();
+    let seq = be.seq_len();
     let mut stats = ServeStats::default();
     let mut ctrl = BatchController::new(cfg.max_batch, cfg.max_wait);
+    // Continuous batching state: `live` is the session set (every
+    // scheduler iteration advances each entry one decode step),
+    // `waiting` the validated Generate requests parked for a free slot.
+    // Session concurrency is capped at `max_batch`; intake from the
+    // shared queue pauses while `waiting` is full so `queue_depth`
+    // keeps bounding the requests a worker holds.
+    let max_sessions = cfg.max_batch.max(1);
+    let mut live: Vec<LiveSession> = Vec::new();
+    let mut waiting: std::collections::VecDeque<(Vec<u32>, usize, Sender<Response>, Instant)> =
+        std::collections::VecDeque::new();
     loop {
-        // Blocking head-of-batch pop: own shard first, then steal.
-        let Some((first, was_stolen)) = queue.pop_first(me) else {
-            return stats; // closed and drained
-        };
-        if was_stolen {
-            stats.stolen += 1;
+        let mut batch: Vec<Request> = Vec::new();
+        if live.is_empty() && waiting.is_empty() {
+            // Idle: block for work, exactly like the plain batcher.
+            let Some((first, was_stolen)) = queue.pop_first(me) else {
+                return stats; // closed and drained, no sessions in flight
+            };
+            if was_stolen {
+                stats.stolen += 1;
+            }
+            batch.push(first);
+            // Fill toward the adaptive target, waiting at most the
+            // adaptive straggler budget. Only per-shard locks are
+            // touched here — peers form and run their own batches
+            // concurrently.
+            let target = ctrl.target_batch();
+            let deadline = Instant::now() + ctrl.wait();
+            while batch.len() < target {
+                let got = queue.take_local(me, target - batch.len());
+                if !got.is_empty() {
+                    batch.extend(got);
+                    continue;
+                }
+                let stolen = queue.steal(me, target - batch.len());
+                if !stolen.is_empty() {
+                    stats.stolen += stolen.len();
+                    batch.extend(stolen);
+                    continue;
+                }
+                let now = Instant::now();
+                if now >= deadline {
+                    break;
+                }
+                queue.wait_ready(me, deadline - now);
+            }
+        } else if waiting.len() < max_sessions {
+            // Sessions in flight: sweep new arrivals in **without
+            // waiting** — live sessions must keep stepping, and a newly
+            // arrived short request should join the very next sweep.
+            // No stealing while busy; idle peers steal from us instead.
+            batch = queue.take_local(me, ctrl.target_batch().max(1));
         }
-        let mut batch = vec![first];
-        // Fill toward the adaptive target, waiting at most the adaptive
-        // straggler budget. Only per-shard locks are touched here —
-        // peers form and run their own batches concurrently.
-        let target = ctrl.target_batch();
-        let deadline = Instant::now() + ctrl.wait();
-        while batch.len() < target {
-            let got = queue.take_local(me, target - batch.len());
-            if !got.is_empty() {
-                batch.extend(got);
-                continue;
-            }
-            let stolen = queue.steal(me, target - batch.len());
-            if !stolen.is_empty() {
-                stats.stolen += stolen.len();
-                batch.extend(stolen);
-                continue;
-            }
-            let now = Instant::now();
-            if now >= deadline {
-                break;
-            }
-            queue.wait_ready(me, deadline - now);
-        }
-        // Queue time ends here, for every request in the batch — the
-        // backend's compute must not leak into queue_us.
+        // Queue time ends here for classification — the backend's
+        // compute must not leak into queue_us. (Generation queue time
+        // runs until admission below.)
         let formed = Instant::now();
         // Validate per request: one malformed request must not poison
         // the batch, let alone the worker. Classification needs exactly
         // `seq` ids; generation needs a non-empty prompt within `seq`.
         let mut classify = Vec::new();
-        let mut generate = Vec::new();
         for r in batch {
             match r {
                 Request::Classify { ids, reply, enqueued } => {
@@ -574,7 +718,7 @@ fn worker_loop(
                     // generate — reject it rather than return a silent
                     // empty continuation indistinguishable from EOS.
                     if !ids.is_empty() && ids.len() < seq {
-                        generate.push((ids, max_new, reply, enqueued));
+                        waiting.push_back((ids, max_new, reply, enqueued));
                     } else {
                         stats.rejected += 1;
                         let queue_us = formed.duration_since(enqueued).as_micros() as u64;
@@ -644,39 +788,27 @@ fn worker_loop(
                 }
             }
         }
-        // Generation slice: one KV-cached decode session per request.
-        // These run after the classification slice so fixed-length
-        // traffic is never parked behind a long decode; requests queued
-        // behind a decoding worker are drained by stealing peers.
-        let gen_count = generate.len();
-        let mut gen_compute = Duration::ZERO;
-        for (ids, max_new, reply, enqueued) in generate {
-            // A generation request's queue time runs until its *own*
-            // session starts: waiting behind the batch's classification
-            // slice and earlier decode sessions is queueing, not this
-            // request's compute — queue_us + compute_us must cover the
-            // full in-server time.
+        // Admission: move waiting Generate requests into free session
+        // slots. A generation request's queue time runs until its *own*
+        // admission — waiting behind the classification slice or a full
+        // session set is queueing, not this request's compute.
+        // `begin_decode` prefills the prompt (or, for one-shot fallback
+        // backends, runs the whole continuation), so it is wrapped in
+        // the same panic containment as the batched backend call.
+        while live.len() < max_sessions {
+            let Some((ids, max_new, reply, enqueued)) = waiting.pop_front() else {
+                break;
+            };
             let started = Instant::now();
             let queue_us = started.duration_since(enqueued).as_micros() as u64;
-            let result =
-                std::panic::catch_unwind(AssertUnwindSafe(|| backend.generate(&ids, max_new)));
-            let compute = started.elapsed();
-            gen_compute += compute;
-            let compute_us = compute.as_micros() as u64;
-            match result {
-                Ok(Some(tokens)) => {
-                    stats.requests += 1;
-                    stats.generated_tokens += tokens.len();
-                    let _ = reply.send(Response {
-                        logits: Vec::new(),
-                        tokens,
-                        queue_us,
-                        compute_us,
-                        batch_size: 1,
-                        cached: false,
-                        error: None,
-                    });
-                }
+            match std::panic::catch_unwind(AssertUnwindSafe(|| be.begin_decode(&ids, max_new))) {
+                Ok(Some(stream)) => live.push(LiveSession {
+                    stream,
+                    reply,
+                    queue_us,
+                    started,
+                    peak: 1,
+                }),
                 Ok(None) => {
                     stats.rejected += 1;
                     let _ = reply.send(Response::failure(
@@ -691,21 +823,70 @@ fn worker_loop(
                         logits: Vec::new(),
                         tokens: Vec::new(),
                         queue_us,
-                        compute_us,
-                        batch_size: 1,
+                        compute_us: started.elapsed().as_micros() as u64,
+                        batch_size: 0,
                         cached: false,
                         error: Some(msg),
                     });
                 }
             }
         }
-        // Generation feeds the controller too: a generation-only
-        // workload must still shrink the batch target under light
-        // traffic (target 1 ⇒ no straggler wait at formation) and grow
-        // it under backlog — otherwise every Generate pays the initial
-        // max_wait forever.
-        if gen_count > 0 {
-            ctrl.observe(queue.pending(), gen_count, gen_compute);
+        // One decode sweep: advance every live session by one token and
+        // retire the finished ones. This is the continuous-batching
+        // core — no session runs to completion while others wait.
+        if !live.is_empty() {
+            let sweep_start = Instant::now();
+            let fill = live.len();
+            let mut i = 0;
+            while i < live.len() {
+                let stepped = {
+                    let s = &mut live[i];
+                    s.peak = s.peak.max(fill);
+                    std::panic::catch_unwind(AssertUnwindSafe(|| s.stream.step()))
+                };
+                match stepped {
+                    Ok(true) => i += 1,
+                    Ok(false) => {
+                        let s = live.swap_remove(i);
+                        let tokens = s.stream.tokens().to_vec();
+                        stats.requests += 1;
+                        stats.generated_tokens += tokens.len();
+                        let _ = s.reply.send(Response {
+                            logits: Vec::new(),
+                            tokens,
+                            queue_us: s.queue_us,
+                            compute_us: s.started.elapsed().as_micros() as u64,
+                            batch_size: s.peak,
+                            cached: false,
+                            error: None,
+                        });
+                    }
+                    Err(panic) => {
+                        let s = live.swap_remove(i);
+                        stats.failed += 1;
+                        let msg = format!("backend error: {}", panic_message(panic));
+                        let _ = s.reply.send(Response {
+                            logits: Vec::new(),
+                            tokens: Vec::new(),
+                            queue_us: s.queue_us,
+                            compute_us: s.started.elapsed().as_micros() as u64,
+                            batch_size: s.peak,
+                            cached: false,
+                            error: Some(msg),
+                        });
+                    }
+                }
+            }
+            // Each sweep is one batch of `fill` concurrently-stepped
+            // sessions: folding it into the fill accounting makes
+            // mean_batch() reflect decode concurrency, and feeding the
+            // controller keeps a generation-only workload adapting its
+            // intake target/straggler wait exactly like classification
+            // (otherwise every Generate entering from idle would pay
+            // the initial max_wait forever).
+            stats.batches += 1;
+            stats.total_batch_fill += fill;
+            ctrl.observe(queue.pending(), fill, sweep_start.elapsed());
         }
     }
 }
@@ -1058,10 +1239,13 @@ mod tests {
             .collect();
         let mut total_tokens = 0usize;
         for p in &prompts {
-            let want = direct.generate_greedy(p, 8, direct.cfg.max_seq);
+            let want = direct.generate_greedy(p, 8, direct.cfg.max_seq).unwrap();
             let resp = client.generate(p.clone(), 8).unwrap();
             assert_eq!(resp.tokens, want, "served tokens diverge from direct session");
             assert!(resp.logits.is_empty());
+            // Sequential submission ⇒ each session ran alone, and its
+            // reported concurrency says so.
+            assert_eq!(resp.batch_size, 1);
             total_tokens += want.len();
         }
         // Empty prompts are rejected per-request, not served.

@@ -5,23 +5,71 @@
 //! sequence for each emitted token: O(S·d²·L) per token, O(S²) overall.
 //! A [`DecodeSession`] instead holds per-layer key/value caches so each
 //! new token runs every block on a **single row**: the projections go
-//! through [`InferLinear::forward_row`] (dense gemv, CSR row-gather
-//! that skips S₁-pruned weights, or the O(d·r) low-rank side-path) and
-//! attention scores are computed against the cached K/V — O(d²·L + S·d)
-//! per token, with sparsity-proportional skipping under the `Csr`
-//! policy.
+//! through [`InferLinear::forward_row_into`] (dense gemv, CSR
+//! row-gather that skips S₁-pruned weights, or the O(d·r) low-rank
+//! side-path) and attention scores are computed against the cached K/V
+//! — O(d²·L + S·d) per token, with sparsity-proportional skipping under
+//! the `Csr` policy.
 //!
-//! ## Cache layout
+//! ## The `_into` kernel convention (zero-allocation stepping)
+//!
+//! Every kernel on the step path has an `_into` form that writes into a
+//! caller-provided buffer instead of returning a fresh `Vec`:
+//! [`InferLinear::forward_row_into`] (seeded with the bias, then
+//! accumulated into — the same convention as
+//! [`crate::tensor::linalg::gemv_into`] and
+//! [`super::kernels::CsrMatrix::matvec`]), `InferNorm::apply_row_into`,
+//! and `InferAdapter::forward_row_into`. A session owns one
+//! [`DecodeScratch`] — a set of buffers pre-sized at creation to the
+//! model's maxima (attention width, FFN width, adapter width, low-rank
+//! rank, score rows up to the session's capacity) — plus two ping-pong
+//! row buffers and its logits buffer, so **`decode_step` performs zero
+//! heap allocations in steady state**. The serving coordinator leans on
+//! this: its continuous-batching scheduler steps every live session
+//! once per sweep, and a per-step allocation would be paid
+//! `sessions × tokens` times per second (`benches/perf_hotpath.rs`
+//! pins the zero-allocation property with a counting allocator).
+//!
+//! ## Cache layout, right-sizing, and pooling
 //!
 //! One [`LayerKv`] per block, each holding two row-major `[cap, width]`
-//! tensors where `cap = n_prefix + max_seq` and `width` is that block's
-//! attention width (`n_heads·head_dim` — blocks can differ under
-//! [`super::MergePolicy::Compact`], which physically removes zero-gated
-//! heads). Row `j` of the cache is attention position `j`: prefix rows
-//! occupy `0..p` and token `t` lives at `p + t`, exactly the layout the
-//! batched forward materializes, so softmax over rows `0..=pos`
-//! reproduces the causal mask bit-for-bit (masked scores of `-1e30`
-//! underflow to the same 0 contribution).
+//! buffers where `cap = n_prefix + capacity` and `width` is that
+//! block's attention width (`n_heads·head_dim` — blocks can differ
+//! under [`super::MergePolicy::Compact`], which physically removes
+//! zero-gated heads). The session's token `capacity` is
+//! `min(prompt + max_new, max_seq)` ([`InferenceModel::prefill_bounded`])
+//! rather than always `max_seq`, so a 4-token request against a
+//! 4096-token model does not allocate 4096 rows per layer. Row `j` of
+//! the cache is attention position `j`: prefix rows occupy `0..p` and
+//! token `t` lives at `p + t`, exactly the layout the batched forward
+//! materializes, so softmax over rows `0..=pos` reproduces the causal
+//! mask bit-for-bit (masked scores of `-1e30` underflow to the same 0
+//! contribution).
+//!
+//! Cache buffers come from a **thread-local pool**: dropping a session
+//! returns its K/V buffers to the pool, and the next `prefill` on that
+//! thread reuses them instead of allocating fresh ones
+//! ([`kv_pool_counters`] exposes reuse/fresh counts for tests). The
+//! pool covers the K/V caches only — the dominant, longest-lived
+//! session allocation; `prefill` itself still allocates its activation
+//! tensors and the session's scratch, which is fine because prefill is
+//! once per request. The zero-allocation guarantee is specifically
+//! about `decode_step`, which runs `sessions × tokens` times.
+//!
+//! ## Session-set scheduling
+//!
+//! A session owns the state of exactly one sequence, and
+//! [`DecodeSession::decode_step`] is deliberately a *single-token*
+//! primitive: a scheduler holding many live sessions advances each of
+//! them one step per sweep (continuous batching) instead of running one
+//! request to completion while the rest queue. [`GreedyStream`] wraps a
+//! session into exactly that resumable step machine — one
+//! greedy-decoded token per [`GreedyStream::step`] — and
+//! [`InferenceModel::generate_greedy`] is just "step a stream until it
+//! finishes", so interleaved and one-at-a-time scheduling are
+//! bit-identical by construction. The serving coordinator
+//! (`crate::coordinator::serve`) admits `Generate` requests into its
+//! per-worker session set through this API.
 //!
 //! ## Why Csr keeps the UV side-path dense per-row
 //!
@@ -34,30 +82,37 @@
 //!
 //! ## Sessions are one sequence each
 //!
-//! A session owns the state of exactly one sequence. Batched ragged
-//! generation (the trainer's `greedy_decode`, the serving
-//! coordinator's `Generate` requests) runs one session per row. The
-//! old path padded short rows to the batch max with `PAD` and ran the
-//! padded positions through every block anyway — correct for a causal
-//! model (the mask keeps trailing `PAD` out of each row's own logits)
-//! but pure wasted compute, and one mask bug away from cross-row
-//! contamination. Per-row sessions have no padding at all, so row
-//! independence is structural and needs no masking machinery.
+//! Batched ragged generation (the trainer's `greedy_decode`, the
+//! serving coordinator's `Generate` requests) runs one session per row.
+//! The old path padded short rows to the batch max with `PAD` and ran
+//! the padded positions through every block anyway — correct for a
+//! causal model (the mask keeps trailing `PAD` out of each row's own
+//! logits) but pure wasted compute, and one mask bug away from
+//! cross-row contamination. Per-row sessions have no padding at all, so
+//! row independence is structural and needs no masking machinery.
 
-use super::{InferBlock, InferHead, InferenceModel};
+use super::{InferBlock, InferHead, InferLinear, InferenceModel};
 use crate::data::vocab::EOS;
 use crate::tensor::linalg::dot;
 use crate::tensor::{gelu_scalar, Tensor};
+use std::cell::RefCell;
 
-/// Index of the largest logit, first index winning exact ties — the
-/// greedy decode rule. One definition shared by the session API, the
-/// examples, the benches, and the parity tests, so tie-breaking (and
-/// any future NaN policy) can never silently diverge between the
-/// library and its references.
+/// Index of the largest logit under [`f32::total_cmp`]'s total order,
+/// first index winning exact ties — the greedy decode rule. One
+/// definition shared by the session API, the examples, the benches, and
+/// the parity tests, so tie-breaking and the NaN policy can never
+/// silently diverge between the library and its references.
+///
+/// NaN policy (consistent with the NaN-safe pruning in
+/// `dsee::magnitude_prune`): `total_cmp` ranks positive NaN above every
+/// finite value, so a NaN logit is *selected*, deterministically. The
+/// old `>`-based scan compared false against NaN everywhere and
+/// silently emitted token 0 whenever any logit upstream of the maximum
+/// went NaN — indistinguishable from a legitimate argmax of 0.
 pub fn argmax(logits: &[f32]) -> u32 {
     let mut best = 0usize;
     for (j, &x) in logits.iter().enumerate() {
-        if x > logits[best] {
+        if x.total_cmp(&logits[best]) == std::cmp::Ordering::Greater {
             best = j;
         }
     }
@@ -65,16 +120,160 @@ pub fn argmax(logits: &[f32]) -> u32 {
 }
 
 /// Per-block K/V cache: rows are attention positions (prefix first,
-/// then tokens), columns the block's attention width.
+/// then tokens), columns the block's attention width. Buffers are
+/// pool-acquired at `prefill` and pool-released on session drop.
 struct LayerKv {
-    k: Tensor,
-    v: Tensor,
+    k: Vec<f32>,
+    v: Vec<f32>,
     width: usize,
 }
 
+/// Retain at most this many free buffers per thread — bounds the
+/// pool's memory at roughly `KV_POOL_MAX_BUFS` × the largest per-layer
+/// cache a thread has seen.
+const KV_POOL_MAX_BUFS: usize = 256;
+
+struct KvPool {
+    free: Vec<Vec<f32>>,
+    reused: usize,
+    fresh: usize,
+}
+
+thread_local! {
+    /// Per-thread K/V buffer free list. Thread-local so the serving
+    /// workers' session churn needs no cross-thread locking; a buffer
+    /// released on a different thread than it was acquired on simply
+    /// seeds that thread's pool.
+    static KV_POOL: RefCell<KvPool> = RefCell::new(KvPool {
+        free: Vec::new(),
+        reused: 0,
+        fresh: 0,
+    });
+}
+
+fn kv_acquire(len: usize) -> Vec<f32> {
+    KV_POOL.with(|p| {
+        let mut p = p.borrow_mut();
+        match p.free.pop() {
+            Some(mut buf) => {
+                p.reused += 1;
+                buf.clear();
+                buf.resize(len, 0.0);
+                buf
+            }
+            None => {
+                p.fresh += 1;
+                vec![0.0f32; len]
+            }
+        }
+    })
+}
+
+fn kv_release(buf: Vec<f32>) {
+    KV_POOL.with(|p| {
+        let mut p = p.borrow_mut();
+        if p.free.len() < KV_POOL_MAX_BUFS {
+            p.free.push(buf);
+        }
+    })
+}
+
+/// (buffers reused, buffers freshly allocated) by this thread's K/V
+/// pool since thread start — observability for the pooling tests and
+/// the allocation bench.
+pub fn kv_pool_counters() -> (usize, usize) {
+    KV_POOL.with(|p| {
+        let p = p.borrow();
+        (p.reused, p.fresh)
+    })
+}
+
+/// Session-owned scratch for the `_into` decode kernels: one buffer per
+/// intermediate, sized at session creation to the model's maxima and
+/// reused every block of every step. Shared across blocks (sized to the
+/// widest), not per-block — the per-block state that must persist
+/// between steps is the K/V cache, not the intermediates.
+struct DecodeScratch {
+    /// Layer-norm / adapter output rows (d_model).
+    h: Vec<f32>,
+    /// Q/K/V projection rows (max attention width).
+    q: Vec<f32>,
+    k: Vec<f32>,
+    v: Vec<f32>,
+    /// Attention context row (max attention width).
+    ctx: Vec<f32>,
+    /// Attention scores over cached rows (session capacity).
+    scores: Vec<f32>,
+    /// Attention output row (d_model).
+    attn_out: Vec<f32>,
+    /// Post-attention residual row (d_model).
+    x2: Vec<f32>,
+    /// FFN hidden row (max d_ffn).
+    hmid: Vec<f32>,
+    /// FFN output row (d_model).
+    ffn_out: Vec<f32>,
+    /// Adapter bottleneck activation (max adapter width).
+    adapter_mid: Vec<f32>,
+    /// Low-rank side-path scratch (max rank).
+    lowrank: Vec<f32>,
+}
+
+fn max_lowrank(lin: &InferLinear, cur: usize) -> usize {
+    cur.max(lin.lowrank_rank())
+}
+
+impl DecodeScratch {
+    fn for_model(m: &InferenceModel, cap_rows: usize) -> DecodeScratch {
+        let d = m.tok.cols();
+        let mut width = 0usize;
+        let mut ffn = 0usize;
+        let mut admid = 0usize;
+        let mut rank = 0usize;
+        for blk in &m.blocks {
+            width = width.max(blk.attn.n_heads * blk.attn.head_dim);
+            ffn = ffn.max(blk.fc1.out_dim());
+            for lin in [
+                &blk.attn.wq,
+                &blk.attn.wk,
+                &blk.attn.wv,
+                &blk.attn.wo,
+                &blk.fc1,
+                &blk.fc2,
+            ] {
+                rank = max_lowrank(lin, rank);
+            }
+            for ad in [&blk.adapter1, &blk.adapter2].into_iter().flatten() {
+                admid = admid.max(ad.down.out_dim());
+                rank = max_lowrank(&ad.down, rank);
+                rank = max_lowrank(&ad.up, rank);
+            }
+        }
+        let head = match &m.head {
+            InferHead::Classifier(l) | InferHead::Regressor(l) | InferHead::Lm(l) => l,
+        };
+        rank = max_lowrank(head, rank);
+        DecodeScratch {
+            h: vec![0.0; d],
+            q: vec![0.0; width],
+            k: vec![0.0; width],
+            v: vec![0.0; width],
+            ctx: vec![0.0; width],
+            scores: vec![0.0; cap_rows],
+            attn_out: vec![0.0; d],
+            x2: vec![0.0; d],
+            hmid: vec![0.0; ffn],
+            ffn_out: vec![0.0; d],
+            adapter_mid: vec![0.0; admid],
+            lowrank: Vec::with_capacity(rank),
+        }
+    }
+}
+
 /// One in-flight autoregressive sequence over a compiled model:
-/// created by [`InferenceModel::prefill`], advanced one token at a time
-/// by [`DecodeSession::decode_step`].
+/// created by [`InferenceModel::prefill`] /
+/// [`InferenceModel::prefill_bounded`], advanced one token at a time by
+/// [`DecodeSession::decode_step`]. Dropping a session returns its K/V
+/// buffers to the thread-local pool.
 pub struct DecodeSession<'m> {
     model: &'m InferenceModel,
     kv: Vec<LayerKv>,
@@ -82,7 +281,22 @@ pub struct DecodeSession<'m> {
     pos: usize,
     /// Token positions consumed (excludes prefix rows).
     tokens: usize,
+    /// Token capacity: `min(prompt + max_new, max_seq)` at creation.
+    cap_tokens: usize,
     last_logits: Vec<f32>,
+    /// Current / next row, ping-ponged through the blocks.
+    row: Vec<f32>,
+    row_next: Vec<f32>,
+    scratch: DecodeScratch,
+}
+
+impl Drop for DecodeSession<'_> {
+    fn drop(&mut self) {
+        for layer in self.kv.drain(..) {
+            kv_release(layer.k);
+            kv_release(layer.v);
+        }
+    }
 }
 
 impl InferenceModel {
@@ -95,16 +309,27 @@ impl InferenceModel {
         self.cfg.causal && matches!(self.head, InferHead::Lm(_))
     }
 
+    /// [`Self::prefill_bounded`] with the full `max_seq` decode budget —
+    /// the session can decode until the model's position table runs out.
+    pub fn prefill(&self, ids: &[u32]) -> DecodeSession<'_> {
+        self.prefill_bounded(ids, self.cfg.max_seq)
+    }
+
     /// Run the prompt through every block once, filling the per-layer
     /// K/V caches (prefix rows included), and return a session whose
     /// [`DecodeSession::last_logits`] are the LM logits at the last
     /// prompt position — identical to the corresponding row of
     /// [`InferenceModel::forward`].
     ///
+    /// The session's token capacity is right-sized to
+    /// `min(ids.len() + max_new, max_seq)`: K/V rows (pool-reused) and
+    /// score scratch are allocated for exactly the positions this
+    /// session can ever reach, not always `max_seq`.
+    ///
     /// Panics unless the model is a causal LM (incremental decoding is
     /// meaningless when earlier positions attend to later ones) and the
     /// prompt is non-empty and within `max_seq`.
-    pub fn prefill(&self, ids: &[u32]) -> DecodeSession<'_> {
+    pub fn prefill_bounded(&self, ids: &[u32], max_new: usize) -> DecodeSession<'_> {
         assert!(
             self.supports_decode(),
             "prefill: incremental decoding needs a causal LM model"
@@ -119,8 +344,9 @@ impl InferenceModel {
         let d = self.tok.cols();
         let vocab = self.tok.rows();
         let p = self.n_prefix();
-        let cap = p + self.cfg.max_seq;
         let seq = ids.len();
+        let cap_tokens = (seq + max_new).min(self.cfg.max_seq);
+        let cap = p + cap_tokens;
         let eff_seq = p + seq;
 
         let mut kv: Vec<LayerKv> = self
@@ -129,8 +355,8 @@ impl InferenceModel {
             .map(|blk| {
                 let width = blk.attn.n_heads * blk.attn.head_dim;
                 LayerKv {
-                    k: Tensor::zeros(&[cap, width]),
-                    v: Tensor::zeros(&[cap, width]),
+                    k: kv_acquire(cap * width),
+                    v: kv_acquire(cap * width),
                     width,
                 }
             })
@@ -166,7 +392,11 @@ impl InferenceModel {
             kv,
             pos: eff_seq,
             tokens: seq,
+            cap_tokens,
             last_logits,
+            row: vec![0.0; d],
+            row_next: vec![0.0; d],
+            scratch: DecodeScratch::for_model(self, cap),
         }
     }
 
@@ -174,27 +404,113 @@ impl InferenceModel {
     /// argmax tokens until `max_new` tokens, EOS, or a total sequence
     /// length of `min(max_len, max_seq)` (prefix rows not counted).
     /// Returns the continuation only (no prompt, no EOS).
-    pub fn generate_greedy(&self, prompt: &[u32], max_new: usize, max_len: usize) -> Vec<u32> {
+    ///
+    /// Errors when the request cannot produce a continuation at all —
+    /// an empty prompt, or a prompt already at `min(max_len, max_seq)`
+    /// (no room to generate) — so those are distinguishable from
+    /// `Ok(vec![])`, which now always means "the model stopped
+    /// immediately" (EOS as the first greedy token, or `max_new == 0`).
+    /// The serving coordinator rejects the same shapes before admission;
+    /// this keeps the library API consistent with it.
+    pub fn generate_greedy(
+        &self,
+        prompt: &[u32],
+        max_new: usize,
+        max_len: usize,
+    ) -> crate::Result<Vec<u32>> {
+        let mut stream = self.greedy_stream(prompt, max_new, max_len)?;
+        while stream.step() {}
+        Ok(stream.into_tokens())
+    }
+
+    /// Open a resumable greedy decoder: prefill `prompt` and return a
+    /// [`GreedyStream`] that emits one token per [`GreedyStream::step`]
+    /// until `max_new` tokens, EOS, or a total sequence length of
+    /// `min(max_len, max_seq)`. This is the continuous-batching
+    /// primitive — a scheduler steps many streams round-robin, and the
+    /// emitted tokens are bit-identical to running each stream to
+    /// completion alone ([`Self::generate_greedy`] is exactly that).
+    ///
+    /// Errors on the same no-continuation-possible shapes as
+    /// [`Self::generate_greedy`].
+    pub fn greedy_stream(
+        &self,
+        prompt: &[u32],
+        max_new: usize,
+        max_len: usize,
+    ) -> crate::Result<GreedyStream<'_>> {
         let cap = max_len.min(self.cfg.max_seq);
-        if prompt.is_empty() || prompt.len() >= cap || max_new == 0 {
-            return Vec::new();
+        anyhow::ensure!(!prompt.is_empty(), "greedy decode: empty prompt");
+        anyhow::ensure!(
+            prompt.len() < cap,
+            "greedy decode: prompt of {} tokens leaves no room to generate (capacity {cap})",
+            prompt.len()
+        );
+        let budget = max_new.min(cap - prompt.len());
+        let sess = self.prefill_bounded(prompt, budget);
+        Ok(GreedyStream {
+            out: Vec::with_capacity(budget),
+            budget,
+            done: budget == 0,
+            sess,
+        })
+    }
+}
+
+/// A step-at-a-time greedy decoder over one [`DecodeSession`]: each
+/// [`Self::step`] consumes the session's current logits, emits at most
+/// one token, and advances the session. Schedulers interleave many of
+/// these (the serving coordinator's continuous batching); stepping
+/// order across streams cannot change any stream's output because each
+/// owns its session outright.
+pub struct GreedyStream<'m> {
+    sess: DecodeSession<'m>,
+    out: Vec<u32>,
+    /// Effective token budget: `min(max_new, capacity - prompt)`.
+    budget: usize,
+    done: bool,
+}
+
+impl<'m> GreedyStream<'m> {
+    /// Advance by at most one token. Returns `false` once the stream
+    /// has finished (EOS or budget exhausted); further calls are no-ops.
+    /// Steady-state cost is exactly one `decode_step` — zero heap
+    /// allocations.
+    pub fn step(&mut self) -> bool {
+        if self.done {
+            return false;
         }
-        let mut sess = self.prefill(prompt);
-        let mut out = Vec::new();
-        let mut len = prompt.len();
-        loop {
-            let tok = argmax(sess.last_logits());
-            if tok == EOS {
-                break;
-            }
-            out.push(tok);
-            len += 1;
-            if out.len() >= max_new || len >= cap {
-                break;
-            }
-            sess.decode_step(tok);
+        let tok = argmax(self.sess.last_logits());
+        if tok == EOS {
+            self.done = true;
+            return false;
         }
-        out
+        self.out.push(tok);
+        if self.out.len() >= self.budget {
+            self.done = true;
+            return false;
+        }
+        self.sess.decode_step(tok);
+        true
+    }
+
+    /// Whether the stream has finished (EOS or budget).
+    pub fn is_done(&self) -> bool {
+        self.done
+    }
+
+    /// Continuation emitted so far (no prompt, no EOS).
+    pub fn tokens(&self) -> &[u32] {
+        &self.out
+    }
+
+    pub fn into_tokens(self) -> Vec<u32> {
+        self.out
+    }
+
+    /// The underlying session (introspection: lengths, capacity).
+    pub fn session(&self) -> &DecodeSession<'m> {
+        &self.sess
     }
 }
 
@@ -216,23 +532,30 @@ impl<'m> DecodeSession<'m> {
         self.tokens == 0
     }
 
-    /// Remaining token capacity before the model's `max_seq` is full.
+    /// Total token capacity of this session
+    /// (`min(prompt + max_new, max_seq)` at creation).
+    pub fn capacity(&self) -> usize {
+        self.cap_tokens
+    }
+
+    /// Remaining token capacity before [`Self::capacity`] is full.
     pub fn remaining(&self) -> usize {
-        self.model.cfg.max_seq - self.tokens
+        self.cap_tokens - self.tokens
     }
 
     /// Advance the sequence by one token: run every block on a single
     /// row against the cached K/V, append the new K/V rows, and return
     /// the LM logits for the new position. O(d²·L + S·d) instead of the
-    /// full forward's O(S·d²·L).
+    /// full forward's O(S·d²·L), and **allocation-free**: every
+    /// intermediate lands in the session's pre-sized scratch.
     pub fn decode_step(&mut self, token: u32) -> &[f32] {
         let m = self.model;
         let d = m.tok.cols();
         let vocab = m.tok.rows();
         assert!(
-            self.tokens < m.cfg.max_seq,
-            "decode_step: sequence already at max_seq {}",
-            m.cfg.max_seq
+            self.tokens < self.cap_tokens,
+            "decode_step: session at its token capacity {}",
+            self.cap_tokens
         );
         let t = token as usize;
         assert!(t < vocab, "token id {t} out of vocab ({vocab})");
@@ -240,14 +563,24 @@ impl<'m> DecodeSession<'m> {
         // Embed at token index `tokens` (position table ignores prefix).
         let tsrc = &m.tok.data[t * d..(t + 1) * d];
         let psrc = &m.pos.data[self.tokens * d..(self.tokens + 1) * d];
-        let mut x: Vec<f32> = tsrc.iter().zip(psrc).map(|(a, b)| a + b).collect();
+        for j in 0..d {
+            self.row[j] = tsrc[j] + psrc[j];
+        }
 
         for (blk, layer) in m.blocks.iter().zip(self.kv.iter_mut()) {
-            x = blk.decode_row(&x, layer, self.pos);
+            blk.decode_row_into(
+                &self.row,
+                &mut self.row_next,
+                layer,
+                self.pos,
+                &mut self.scratch,
+            );
+            std::mem::swap(&mut self.row, &mut self.row_next);
         }
-        let h = m.ln_f.apply_row(&x);
+        let DecodeScratch { h, lowrank, .. } = &mut self.scratch;
+        m.ln_f.apply_row_into(&self.row, &mut h[..d]);
         let InferHead::Lm(lm) = &m.head else { unreachable!() };
-        self.last_logits = lm.forward_row(&h);
+        lm.forward_row_into(&h[..d], &mut self.last_logits, lowrank);
         self.pos += 1;
         self.tokens += 1;
         &self.last_logits
@@ -267,34 +600,57 @@ impl InferBlock {
             x,
             1,
             seq,
-            Some((
-                &mut kv.k.data[..seq * width],
-                &mut kv.v.data[..seq * width],
-            )),
+            Some((&mut kv.k[..seq * width], &mut kv.v[..seq * width])),
         )
     }
 
     /// Single-row block step at attention position `pos`: project the
     /// new row, append its K/V to the cache, attend over rows
-    /// `0..=pos`, and run the FFN — all through the single-row kernels.
-    fn decode_row(&self, x: &[f32], kv: &mut LayerKv, pos: usize) -> Vec<f32> {
+    /// `0..=pos`, and run the FFN — all through the `_into` single-row
+    /// kernels against the session's scratch, so the step allocates
+    /// nothing. `x` is the incoming row, `out` (same length) receives
+    /// the block output.
+    fn decode_row_into(
+        &self,
+        x: &[f32],
+        out: &mut [f32],
+        kv: &mut LayerKv,
+        pos: usize,
+        scratch: &mut DecodeScratch,
+    ) {
+        let DecodeScratch {
+            h,
+            q,
+            k,
+            v,
+            ctx,
+            scores,
+            attn_out,
+            x2,
+            hmid,
+            ffn_out,
+            adapter_mid,
+            lowrank,
+        } = scratch;
         let width = kv.width;
         let hd = self.attn.head_dim;
-        let h = self.ln1.apply_row(x);
-        let q = self.attn.wq.forward_row(&h);
-        let k = self.attn.wk.forward_row(&h);
-        let v = self.attn.wv.forward_row(&h);
-        kv.k.data[pos * width..(pos + 1) * width].copy_from_slice(&k);
-        kv.v.data[pos * width..(pos + 1) * width].copy_from_slice(&v);
+        let d = x.len();
+
+        self.ln1.apply_row_into(x, &mut h[..d]);
+        self.attn.wq.forward_row_into(&h[..d], &mut q[..width], lowrank);
+        self.attn.wk.forward_row_into(&h[..d], &mut k[..width], lowrank);
+        self.attn.wv.forward_row_into(&h[..d], &mut v[..width], lowrank);
+        kv.k[pos * width..(pos + 1) * width].copy_from_slice(&k[..width]);
+        kv.v[pos * width..(pos + 1) * width].copy_from_slice(&v[..width]);
 
         let n = pos + 1; // attend over everything cached, self included
         let rscale = 1.0 / (hd as f32).sqrt();
-        let mut ctx = vec![0.0f32; width];
-        let mut scores = vec![0.0f32; n];
+        ctx[..width].fill(0.0);
+        let scores = &mut scores[..n];
         for hh in 0..self.attn.n_heads {
             let qh = &q[hh * hd..(hh + 1) * hd];
             for (j, s) in scores.iter_mut().enumerate() {
-                let krow = &kv.k.data[j * width + hh * hd..j * width + hh * hd + hd];
+                let krow = &kv.k[j * width + hh * hd..j * width + hh * hd + hd];
                 *s = dot(qh, krow) * rscale;
             }
             let mx = scores.iter().fold(f32::NEG_INFINITY, |m, &s| m.max(s));
@@ -309,27 +665,46 @@ impl InferBlock {
                 if a == 0.0 {
                     continue;
                 }
-                let vrow = &kv.v.data[j * width + hh * hd..j * width + hh * hd + hd];
+                let vrow = &kv.v[j * width + hh * hd..j * width + hh * hd + hd];
                 for (c, &vv) in ctx_h.iter_mut().zip(vrow) {
                     *c += a * vv;
                 }
             }
         }
-        let mut a_out = self.attn.wo.forward_row(&ctx);
-        if let Some(ad) = &self.adapter1 {
-            a_out = ad.forward_row(&a_out);
+
+        self.attn
+            .wo
+            .forward_row_into(&ctx[..width], &mut attn_out[..d], lowrank);
+        let a_out: &[f32] = if let Some(ad) = &self.adapter1 {
+            // h is dead after the q/k/v projections — reuse it for the
+            // adapter output.
+            ad.forward_row_into(&attn_out[..d], &mut h[..d], adapter_mid, lowrank);
+            &h[..d]
+        } else {
+            &attn_out[..d]
+        };
+        for j in 0..d {
+            x2[j] = x[j] + a_out[j];
         }
-        let x2: Vec<f32> = x.iter().zip(&a_out).map(|(a, b)| a + b).collect();
-        let h2 = self.ln2.apply_row(&x2);
-        let mut hmid = self.fc1.forward_row(&h2);
-        for vmid in hmid.iter_mut() {
+
+        self.ln2.apply_row_into(&x2[..d], &mut h[..d]);
+        let f_dim = self.fc1.out_dim();
+        self.fc1
+            .forward_row_into(&h[..d], &mut hmid[..f_dim], lowrank);
+        for vmid in hmid[..f_dim].iter_mut() {
             *vmid = gelu_scalar(*vmid);
         }
-        let mut f = self.fc2.forward_row(&hmid);
-        if let Some(ad) = &self.adapter2 {
-            f = ad.forward_row(&f);
+        self.fc2
+            .forward_row_into(&hmid[..f_dim], &mut ffn_out[..d], lowrank);
+        let f_out: &[f32] = if let Some(ad) = &self.adapter2 {
+            ad.forward_row_into(&ffn_out[..d], &mut h[..d], adapter_mid, lowrank);
+            &h[..d]
+        } else {
+            &ffn_out[..d]
+        };
+        for j in 0..d {
+            out[j] = x2[j] + f_out[j];
         }
-        x2.iter().zip(&f).map(|(a, b)| a + b).collect()
     }
 }
 
@@ -443,17 +818,125 @@ mod tests {
         let m = dsee_lm_model(0xD2);
         let im = m.compile(MergePolicy::Merged);
         let prompt = [7u32, 21, 3];
-        let a = im.generate_greedy(&prompt, 32, im.cfg.max_seq);
-        let b = im.generate_greedy(&prompt, 32, im.cfg.max_seq);
+        let a = im.generate_greedy(&prompt, 32, im.cfg.max_seq).unwrap();
+        let b = im.generate_greedy(&prompt, 32, im.cfg.max_seq).unwrap();
         assert_eq!(a, b, "greedy decode must be deterministic");
         assert!(a.len() <= im.cfg.max_seq - prompt.len());
         // max_new caps the continuation.
-        let c = im.generate_greedy(&prompt, 2, im.cfg.max_seq);
+        let c = im.generate_greedy(&prompt, 2, im.cfg.max_seq).unwrap();
         assert!(c.len() <= 2);
         assert_eq!(c, a[..c.len().min(a.len())].to_vec());
-        // A full prompt produces no continuation.
-        let full: Vec<u32> = (0..im.cfg.max_seq as u32).collect();
-        assert!(im.generate_greedy(&full, 4, im.cfg.max_seq).is_empty());
+    }
+
+    #[test]
+    fn generation_distinguishes_no_room_from_eos() {
+        // Regression: a prompt already at capacity used to return a
+        // silent empty Vec — indistinguishable from an immediate EOS,
+        // the exact ambiguity the serving coordinator rejects.
+        let m = dsee_lm_model(0xD5);
+        let im = m.compile(MergePolicy::Merged);
+        let max = im.cfg.max_seq;
+        let full: Vec<u32> = (0..max as u32).collect();
+        let err = im.generate_greedy(&full, 4, max).unwrap_err();
+        assert!(
+            format!("{err}").contains("no room"),
+            "full prompt should error, got: {err}"
+        );
+        // One below the boundary: room for exactly one token — Ok, and
+        // at most one token long.
+        let almost: Vec<u32> = (0..(max - 1) as u32).collect();
+        let out = im.generate_greedy(&almost, 4, max).unwrap();
+        assert!(out.len() <= 1);
+        // Empty prompts error too (the coordinator rejects them).
+        assert!(im.generate_greedy(&[], 4, max).is_err());
+        // max_new == 0 is a legitimate "nothing requested": Ok(empty).
+        assert!(im.generate_greedy(&[1, 2], 0, max).unwrap().is_empty());
+    }
+
+    #[test]
+    fn argmax_is_nan_safe_and_tie_breaks_first() {
+        use super::argmax;
+        assert_eq!(argmax(&[1.0, 3.0, 3.0, 2.0]), 1, "first index wins ties");
+        // Regression: NaN made every `>` comparison false, so the old
+        // scan emitted index 0 no matter where the true max sat.
+        assert_eq!(argmax(&[1.0, f32::NAN, 2.0]), 1, "NaN ranks largest");
+        assert_eq!(argmax(&[1.0, 2.0, f32::NAN]), 2);
+        assert_eq!(argmax(&[f32::NAN, 1.0, 2.0]), 0);
+        // Negative NaN ranks below every finite value under total_cmp.
+        assert_eq!(argmax(&[f32::NEG_INFINITY, -f32::NAN]), 0);
+        assert_eq!(argmax(&[-f32::NAN, -1.0]), 1);
+    }
+
+    #[test]
+    fn interleaved_streams_match_solo_generation() {
+        // Continuous batching's correctness core, scheduler-free: N
+        // sessions stepped round-robin emit exactly (bit-identical)
+        // what each emits alone.
+        let m = dsee_lm_model(0xD8);
+        let im = m.compile(MergePolicy::Merged);
+        let cap = im.cfg.max_seq;
+        let prompts: Vec<Vec<u32>> = (0..4usize)
+            .map(|r| (0..2 + r).map(|i| ((r * 13 + i * 7 + 1) % 60) as u32).collect())
+            .collect();
+        let solo: Vec<Vec<u32>> = prompts
+            .iter()
+            .map(|p| im.generate_greedy(p, 6, cap).unwrap())
+            .collect();
+        let mut streams: Vec<_> = prompts
+            .iter()
+            .map(|p| im.greedy_stream(p, 6, cap).unwrap())
+            .collect();
+        loop {
+            let mut advanced = false;
+            for s in streams.iter_mut() {
+                if !s.is_done() {
+                    s.step();
+                    advanced = true;
+                }
+            }
+            if !advanced {
+                break;
+            }
+        }
+        let got: Vec<Vec<u32>> = streams.into_iter().map(|s| s.into_tokens()).collect();
+        assert_eq!(got, solo, "interleaved sessions diverged from solo runs");
+    }
+
+    #[test]
+    fn kv_sessions_are_right_sized_and_pooled() {
+        let m = dsee_lm_model(0xD6);
+        let im = m.compile(MergePolicy::Merged);
+        let prompt = [1u32, 2, 3];
+        let (_, fresh0) = super::kv_pool_counters();
+        {
+            let sess = im.prefill_bounded(&prompt, 2);
+            // Right-sized: 3 prompt + 2 budget, not max_seq (12).
+            assert_eq!(sess.capacity(), 5);
+            assert_eq!(sess.remaining(), 2);
+        } // drop returns the K/V buffers to the thread-local pool
+        let (reused1, fresh1) = super::kv_pool_counters();
+        assert!(fresh1 > fresh0, "first session must allocate fresh K/V");
+        {
+            let mut sess = im.prefill_bounded(&prompt, 2);
+            sess.decode_step(7);
+            assert_eq!(sess.remaining(), 1);
+        }
+        let (reused2, fresh2) = super::kv_pool_counters();
+        assert_eq!(fresh2, fresh1, "second same-shape session allocated fresh KV");
+        assert!(reused2 > reused1, "pool was not reused");
+        // A full-budget prefill still reports the legacy capacity.
+        let sess = im.prefill(&prompt);
+        assert_eq!(sess.capacity(), im.cfg.max_seq);
+    }
+
+    #[test]
+    #[should_panic(expected = "token capacity")]
+    fn decode_step_beyond_budget_panics() {
+        let m = dsee_lm_model(0xD7);
+        let im = m.compile(MergePolicy::Merged);
+        let mut sess = im.prefill_bounded(&[1, 2], 1);
+        sess.decode_step(3);
+        sess.decode_step(4); // budget (1 new token) exhausted
     }
 
     #[test]

@@ -6,6 +6,12 @@
 //! paper's 50% unstructured sparsity this halves the multiply count the
 //! dense kernel cannot skip (the dense kernel only skips zero
 //! *activations*), and at higher sparsities the win grows linearly.
+//!
+//! The single-row kernel ([`CsrMatrix::matvec`]) follows the decode
+//! path's `_into` convention (see `crate::infer::decode`): the caller
+//! owns the output buffer, seeds it (with the bias, via
+//! `InferLinear::forward_row_into`), and the kernel *accumulates* —
+//! no allocation, no second bias pass, ever, on the per-token path.
 
 use crate::tensor::Tensor;
 
@@ -90,7 +96,9 @@ impl CsrMatrix {
     /// the stored (column, value) pairs of that input-row are streamed
     /// once, so pruned weights cost nothing — per-token decode work is
     /// proportional to nnz, not rows·cols. **Accumulates** into `y`
-    /// (callers seed it with the bias).
+    /// (callers seed it with the bias), and allocates nothing — the
+    /// zero-allocation decode step depends on that.
+    #[inline]
     pub fn matvec(&self, x: &[f32], y: &mut [f32]) {
         assert_eq!(x.len(), self.rows, "csr matvec: x len {} vs rows {}", x.len(), self.rows);
         assert_eq!(y.len(), self.cols, "csr matvec: y len {} vs cols {}", y.len(), self.cols);

@@ -252,28 +252,56 @@ impl InferLinear {
 
     /// y = x·W + b for a **single row** — the incremental-decode path.
     ///
-    /// Dispatches to the dense single-row gemv, the CSR row-gather that
-    /// skips S₁-pruned weights, or both plus the O(d·r) low-rank
-    /// side-path (`(x·U)·V·scale`), which stays dense per-row by design:
-    /// U/V are tall-skinny dense factors, so gathering them through CSR
-    /// would add index overhead without skipping anything.
+    /// Allocating convenience wrapper over [`Self::forward_row_into`];
+    /// the decode hot loop calls the `_into` form with session-owned
+    /// scratch instead, so each step touches the heap zero times.
     pub fn forward_row(&self, x: &[f32]) -> Vec<f32> {
-        let mut y = self.bias.clone();
+        let mut y = vec![0.0f32; self.out_dim()];
+        let mut lowrank = Vec::new();
+        self.forward_row_into(x, &mut y, &mut lowrank);
+        y
+    }
+
+    /// y = x·W + b for a **single row**, written into a caller-provided
+    /// buffer — the zero-allocation decode kernel.
+    ///
+    /// `y` must be exactly `out_dim` long; it is fully overwritten
+    /// (seeded with the bias, then accumulated into — the same
+    /// seed-then-accumulate convention as [`gemv_into`] and
+    /// [`CsrMatrix::matvec`]). Dispatches to the dense single-row gemv,
+    /// the CSR row-gather that skips S₁-pruned weights, or both plus
+    /// the O(d·r) low-rank side-path (`(x·U)·V·scale`), which stays
+    /// dense per-row by design: U/V are tall-skinny dense factors, so
+    /// gathering them through CSR would add index overhead without
+    /// skipping anything. `lowrank` is reusable rank-sized scratch for
+    /// that side-path: it is resized to this layer's rank, which never
+    /// allocates once its capacity has grown to the model's maximum
+    /// rank (a [`decode::DecodeSession`] pre-sizes it at creation).
+    pub fn forward_row_into(&self, x: &[f32], y: &mut [f32], lowrank: &mut Vec<f32>) {
+        debug_assert_eq!(y.len(), self.out_dim(), "forward_row_into: y len");
+        y.copy_from_slice(&self.bias);
         match &self.repr {
-            Repr::Dense(w) => gemv_into(x, &w.data, &mut y, w.rows(), w.cols()),
-            Repr::Csr(c) => c.matvec(x, &mut y),
+            Repr::Dense(w) => gemv_into(x, &w.data, y, w.rows(), w.cols()),
+            Repr::Csr(c) => c.matvec(x, y),
         }
         if let Some((u, v, scale)) = &self.low {
             let r = u.cols();
-            let mut xu = vec![0.0f32; r];
-            gemv_into(x, &u.data, &mut xu, u.rows(), r);
-            let mut uv = vec![0.0f32; v.cols()];
-            gemv_into(&xu, &v.data, &mut uv, v.rows(), v.cols());
-            for (yy, dv) in y.iter_mut().zip(&uv) {
-                *yy += scale * dv;
+            lowrank.clear();
+            lowrank.resize(r, 0.0);
+            gemv_into(x, &u.data, lowrank, u.rows(), r);
+            // Scale x·U once (r values) instead of the r·out products:
+            // (scale·xU)·V ≡ scale·(xU·V) to float rounding.
+            for z in lowrank.iter_mut() {
+                *z *= *scale;
             }
+            gemv_into(lowrank, &v.data, y, v.rows(), v.cols());
         }
-        y
+    }
+
+    /// Rank of the low-rank side-path (0 when folded/absent) — lets the
+    /// decode session size its shared `lowrank` scratch up front.
+    pub(crate) fn lowrank_rank(&self) -> usize {
+        self.low.as_ref().map_or(0, |(u, _, _)| u.cols())
     }
 }
 
@@ -312,16 +340,27 @@ impl InferNorm {
         out
     }
 
-    /// Single-row layer norm — same arithmetic order as [`Self::apply`]
-    /// so decode-path parity holds to float rounding.
+    /// Single-row layer norm — allocating wrapper over
+    /// [`Self::apply_row_into`].
     fn apply_row(&self, x: &[f32]) -> Vec<f32> {
+        let mut out = vec![0.0f32; x.len()];
+        self.apply_row_into(x, &mut out);
+        out
+    }
+
+    /// Single-row layer norm into a caller buffer (`out.len() ==
+    /// x.len()`, `out` fully overwritten) — the zero-allocation decode
+    /// kernel. Same arithmetic order as [`Self::apply`] so decode-path
+    /// parity holds to float rounding.
+    pub(crate) fn apply_row_into(&self, x: &[f32], out: &mut [f32]) {
         let d = x.len();
+        debug_assert_eq!(out.len(), d, "apply_row_into: out len");
         let mean: f32 = x.iter().sum::<f32>() / d as f32;
         let var: f32 = x.iter().map(|v| (v - mean) * (v - mean)).sum::<f32>() / d as f32;
         let istd = 1.0 / (var + self.eps).sqrt();
-        (0..d)
-            .map(|j| (x[j] - mean) * istd * self.gamma[j] + self.beta[j])
-            .collect()
+        for j in 0..d {
+            out[j] = (x[j] - mean) * istd * self.gamma[j] + self.beta[j];
+        }
     }
 }
 
@@ -405,14 +444,30 @@ impl InferAdapter {
         x.add(&self.up.forward(&h))
     }
 
-    /// Single-row adapter pass for the decode path.
-    fn forward_row(&self, x: &[f32]) -> Vec<f32> {
-        let mut h = self.down.forward_row(x);
-        for v in h.iter_mut() {
+    /// Single-row adapter pass into a caller buffer
+    /// (`out = x + up(gelu(down(x)))`, `out` fully overwritten) — the
+    /// zero-allocation decode kernel. `mid` is reusable scratch for the
+    /// bottleneck activation (resized to the adapter width; allocation-
+    /// free once its capacity covers the model's widest adapter),
+    /// `lowrank` the shared side-path scratch of
+    /// [`InferLinear::forward_row_into`].
+    pub(crate) fn forward_row_into(
+        &self,
+        x: &[f32],
+        out: &mut [f32],
+        mid: &mut Vec<f32>,
+        lowrank: &mut Vec<f32>,
+    ) {
+        mid.clear();
+        mid.resize(self.down.out_dim(), 0.0);
+        self.down.forward_row_into(x, mid, lowrank);
+        for v in mid.iter_mut() {
             *v = crate::tensor::gelu_scalar(*v);
         }
-        let up = self.up.forward_row(&h);
-        x.iter().zip(&up).map(|(a, b)| a + b).collect()
+        self.up.forward_row_into(mid, out, lowrank);
+        for (o, &xv) in out.iter_mut().zip(x) {
+            *o += xv;
+        }
     }
 }
 

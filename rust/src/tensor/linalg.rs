@@ -63,6 +63,12 @@ pub fn matmul_into(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: u
 /// inner loop (8-wide unrolled axpy, zero-activation skip) but commits
 /// to m = 1 up front. **Accumulates** into `y`, so callers can seed `y`
 /// with the bias and save a second pass.
+///
+/// This is the root of the decode path's `_into` convention (see
+/// `crate::infer::decode`): the caller owns and seeds the output
+/// buffer, the kernel accumulates, and nothing on the per-token path
+/// allocates — `InferLinear::forward_row_into` and friends are built
+/// on exactly this contract.
 #[inline]
 pub fn gemv_into(x: &[f32], w: &[f32], y: &mut [f32], k: usize, n: usize) {
     debug_assert_eq!(x.len(), k, "gemv_into: x len vs k");

@@ -216,7 +216,15 @@ impl Trainer {
         let compiled = self.model.compile(crate::infer::MergePolicy::Merged);
         inputs
             .iter()
-            .map(|prompt| compiled.generate_greedy(prompt, max_new, seq_len))
+            .map(|prompt| {
+                // Eval prompts are dataset inputs, always strictly
+                // shorter than seq_len; a prompt with no room to
+                // generate is a caller bug, surfaced loudly instead of
+                // scored as an empty hypothesis.
+                compiled
+                    .generate_greedy(prompt, max_new, seq_len)
+                    .expect("greedy_decode: prompt leaves no room to generate")
+            })
             .collect()
     }
 

@@ -169,8 +169,104 @@ fn kv_generation_matches_full_recompute_greedy() {
     let prompt: Vec<u32> = (0..6).map(|i| ((i * 29 + 3) % 256) as u32).collect();
     let want = full_recompute_greedy(&model, &prompt, 12, cap);
     for policy in POLICIES {
-        let got = model.compile(policy).generate_greedy(&prompt, 12, cap);
+        let got = model
+            .compile(policy)
+            .generate_greedy(&prompt, 12, cap)
+            .unwrap();
         assert_eq!(got, want, "{} diverges from full recompute", policy.label());
+    }
+}
+
+#[test]
+fn interleaved_sessions_match_one_at_a_time_all_policies() {
+    // Continuous-batching parity, scheduler-free and deterministic:
+    // ragged greedy streams stepped round-robin must emit exactly
+    // (assert_eq — bit-identical, not 1e-4) what each session emits
+    // running alone, for every MergePolicy. Extends the ragged
+    // no-bleed property to *interleaved* sessions: stepping order
+    // cannot leak state across sequences because each stream owns its
+    // session outright.
+    let model = tuned_pruned_lm(false);
+    let cap = model.cfg.max_seq;
+    let ragged: Vec<Vec<u32>> = (0..5usize)
+        .map(|r| (0..3 + r * 2).map(|i| ((r * 41 + i * 17 + 7) % 256) as u32).collect())
+        .collect();
+    for policy in POLICIES {
+        let im = model.compile(policy);
+        let solo: Vec<Vec<u32>> = ragged
+            .iter()
+            .map(|p| im.generate_greedy(p, 8, cap).unwrap())
+            .collect();
+        let mut streams: Vec<_> = ragged
+            .iter()
+            .map(|p| im.greedy_stream(p, 8, cap).unwrap())
+            .collect();
+        loop {
+            let mut advanced = false;
+            for s in streams.iter_mut() {
+                if !s.is_done() {
+                    s.step();
+                    advanced = true;
+                }
+            }
+            if !advanced {
+                break;
+            }
+        }
+        let got: Vec<Vec<u32>> = streams.into_iter().map(|s| s.into_tokens()).collect();
+        assert_eq!(
+            got,
+            solo,
+            "{}: interleaved sessions diverged from solo runs",
+            policy.label()
+        );
+    }
+}
+
+#[test]
+fn served_continuous_batching_matches_direct_generation() {
+    // End-to-end: concurrent Generate requests interleaving on one
+    // worker's session set must return exactly the single-session
+    // greedy continuation, for every MergePolicy.
+    let model = tuned_pruned_lm(false);
+    let cap = model.cfg.max_seq;
+    for policy in POLICIES {
+        let compiled = Arc::new(model.compile(policy));
+        let direct = Arc::clone(&compiled);
+        let (client, server) = start(
+            compiled,
+            ServeCfg {
+                max_batch: 8,
+                max_wait: Duration::from_micros(200),
+                queue_depth: 64,
+                workers: 1, // all sessions share one worker's sweep loop
+                ..ServeCfg::default()
+            },
+        );
+        let mut handles = Vec::new();
+        for t in 0..8usize {
+            let client = client.clone();
+            let direct = Arc::clone(&direct);
+            handles.push(std::thread::spawn(move || {
+                let prompt: Vec<u32> = (0..2 + t % 4)
+                    .map(|i| ((t * 37 + i * 11 + 5) % 256) as u32)
+                    .collect();
+                let want = direct.generate_greedy(&prompt, 10, cap).unwrap();
+                let resp = client.generate(prompt, 10).unwrap();
+                assert_eq!(
+                    resp.tokens, want,
+                    "continuous-batched decode diverged from direct session"
+                );
+                assert!(resp.batch_size >= 1);
+            }));
+        }
+        drop(client);
+        for h in handles {
+            h.join().unwrap();
+        }
+        let stats = server.join();
+        assert_eq!(stats.requests, 8, "{}: lost requests", policy.label());
+        assert_eq!(stats.rejected + stats.failed, 0);
     }
 }
 

@@ -1,8 +1,9 @@
 //! Integration tests for the sharded/cached serving coordinator:
-//! response-cache semantics, work-stealing under contention, and the
-//! queueing/compute latency split.
+//! response-cache semantics, work-stealing under contention, the
+//! queueing/compute latency split, and continuous batching of decode
+//! sessions.
 
-use dsee::coordinator::serve::{start, Backend, EchoBackend, ServeCfg};
+use dsee::coordinator::serve::{start, Backend, DecodeStream, EchoBackend, ServeCfg};
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
@@ -198,6 +199,137 @@ fn queue_and_compute_latency_are_separated() {
     assert_eq!(resp.batch_size, 1);
     drop(client);
     server.join();
+}
+
+/// Backend whose decode streams emit one counter token per step with a
+/// fixed per-step cost — a deterministic continuous-batching probe (no
+/// model, no EOS, no timing noise in the token stream itself). A
+/// sibling with a serial mode lives in benches/perf_hotpath.rs — this
+/// copy pins scheduler behavior, that one benchmarks it.
+struct PacedBackend {
+    step_cost: Duration,
+    /// Total paced steps across all streams: lets the test wait until a
+    /// decode has *demonstrably started* instead of racing a sleep.
+    steps: Arc<AtomicUsize>,
+}
+
+struct PacedStream {
+    left: usize,
+    cost: Duration,
+    tokens: Vec<u32>,
+    steps: Arc<AtomicUsize>,
+}
+
+impl DecodeStream for PacedStream {
+    fn step(&mut self) -> bool {
+        if self.left == 0 {
+            return false;
+        }
+        std::thread::sleep(self.cost);
+        self.steps.fetch_add(1, Ordering::SeqCst);
+        self.tokens.push(self.tokens.len() as u32);
+        self.left -= 1;
+        self.left > 0
+    }
+    fn tokens(&self) -> &[u32] {
+        &self.tokens
+    }
+}
+
+impl Backend for PacedBackend {
+    fn infer(&self, _ids: &[u32], batch: usize, _seq: usize) -> Vec<Vec<f32>> {
+        vec![vec![0.0]; batch]
+    }
+    fn seq_len(&self) -> usize {
+        64
+    }
+    fn begin_decode<'a>(
+        &'a self,
+        _prompt: &[u32],
+        max_new: usize,
+    ) -> Option<Box<dyn DecodeStream + 'a>> {
+        Some(Box::new(PacedStream {
+            left: max_new,
+            cost: self.step_cost,
+            tokens: Vec::new(),
+            steps: Arc::clone(&self.steps),
+        }))
+    }
+}
+
+#[test]
+fn short_generate_completes_while_long_decode_is_live() {
+    // The continuous-batching acceptance shape: one worker, a long
+    // decode in flight, a short request arriving behind it. The old
+    // run-to-completion scheduler made the short request wait out every
+    // one of the long decode's steps; session interleaving must retire
+    // it after its own few sweeps.
+    let steps = Arc::new(AtomicUsize::new(0));
+    let (client, server) = start(
+        Arc::new(PacedBackend {
+            step_cost: Duration::from_millis(2),
+            steps: Arc::clone(&steps),
+        }),
+        ServeCfg {
+            max_batch: 4,
+            max_wait: Duration::from_micros(100),
+            queue_depth: 16,
+            workers: 1,
+            cache_entries: 0,
+        },
+    );
+    // Long decode: 150 steps × 2 ms ≈ 300 ms of stepping.
+    let long = {
+        let c = client.clone();
+        std::thread::spawn(move || {
+            let t0 = Instant::now();
+            let resp = c.generate(vec![1], 150).unwrap();
+            (resp, t0.elapsed())
+        })
+    };
+    // Deterministic ordering: wait until the long decode has executed a
+    // few steps (so it is demonstrably live, with ~290 ms left) before
+    // submitting the short request behind it.
+    let wait_t0 = Instant::now();
+    while steps.load(Ordering::SeqCst) < 5 {
+        assert!(
+            wait_t0.elapsed() < Duration::from_secs(5),
+            "long decode never started stepping"
+        );
+        std::thread::sleep(Duration::from_millis(1));
+    }
+    let t0 = Instant::now();
+    let short = client.try_generate(vec![2], 3).unwrap();
+    let short_elapsed = t0.elapsed();
+    assert!(short.error.is_none(), "short generate failed: {short:?}");
+    assert_eq!(short.tokens, vec![0, 1, 2]);
+    // Interleaved: ~3 sweeps of 2 sessions ≈ 12 ms, nowhere near the
+    // ≈270 ms the long decode still had to run serially.
+    assert!(
+        short_elapsed < Duration::from_millis(150),
+        "short generate waited out the long decode: {short_elapsed:?}"
+    );
+    // And it demonstrably shared sweeps with the long session.
+    assert_eq!(
+        short.batch_size, 2,
+        "short session never stepped alongside the long one"
+    );
+    let (long_resp, long_elapsed) = long.join().unwrap();
+    assert_eq!(long_resp.tokens.len(), 150);
+    assert!(
+        long_elapsed > short_elapsed,
+        "long decode finished before the short one it predates"
+    );
+    drop(client);
+    let stats = server.join();
+    assert_eq!(stats.requests, 2);
+    assert_eq!(stats.generated_tokens, 153);
+    // Decode sweeps land in the batch-fill accounting: some sweeps ran
+    // both sessions, so mean fill must exceed the all-serial 1.0.
+    assert!(
+        stats.mean_batch() > 1.0,
+        "decode concurrency missing from batch accounting: {stats:?}"
+    );
 }
 
 #[test]
