@@ -14,6 +14,13 @@
 //!   **zero-allocation assertion** on `decode_step` (counting global
 //!   allocator; the `_into` kernels + session scratch must not touch
 //!   the heap in steady state);
+//! * Layer-major fused decode: tokens/s for the `DecodeEngine` (one
+//!   fused kernel per layer across all live rows) vs per-session
+//!   `GreedyStream` stepping at 1/4/16 concurrent sessions — hard
+//!   assert that fused does not lose at 16 — plus a zero-allocation
+//!   assert on steady-state engine sweeps, with the scenario's numbers
+//!   emitted as machine-readable JSON (`BENCH_decode.json`) so future
+//!   PRs have a perf trajectory to diff against;
 //! * Continuous-batched decode serving: tokens/s at 1/4/16 concurrent
 //!   sessions and short-behind-long time-to-first-token, continuous
 //!   session interleaving vs the serial run-to-completion baseline
@@ -36,8 +43,9 @@ use dsee::data::glue::{make_dataset, GlueTask};
 use dsee::dsee::grebsmo::grebsmo;
 use dsee::dsee::magnitude_prune::magnitude_prune_global;
 use dsee::dsee::attach_dsee;
-use dsee::infer::decode::argmax;
+use dsee::infer::decode::{argmax, DecodeEngine};
 use dsee::infer::MergePolicy;
+use dsee::util::json::Json;
 use dsee::nn::Transformer;
 use dsee::runtime::bridge::{export_params, split_param_specs};
 use dsee::runtime::{default_artifact_dir, Input, Runtime};
@@ -416,6 +424,147 @@ fn main() {
             );
             println!(
                 "    → decode_step steady-state heap allocations: {allocs} ({})",
+                policy.label()
+            );
+        }
+
+        println!("\n== layer-major fused decode (engine vs per-session) ==");
+        // One fused kernel per layer across all live rows (DecodeEngine)
+        // vs the per-session kernel chains (GreedyStreams stepped
+        // round-robin — exactly what a worker without an engine does).
+        // Same prompts, identical greedy tokens (pinned by the parity
+        // suite), same FLOPs: the fused path just dispatches one kernel
+        // per layer per sweep and reads each layer's weights once per
+        // sweep instead of once per session. The acceptance bar is a
+        // hard assert: fused must not lose at 16 sessions.
+        let fim = gm.compile(MergePolicy::Merged);
+        let gen_cap = fim.cfg.max_seq;
+        let fused_new = 24usize;
+        let mut decode_scenarios = Vec::new();
+        for &sessions in &[1usize, 4, 16] {
+            let prompts: Vec<Vec<u32>> = (0..sessions)
+                .map(|c| (0..6).map(|i| ((c * 31 + i * 13 + 7) % 256) as u32).collect())
+                .collect();
+            let total_tokens: usize = prompts
+                .iter()
+                .map(|p| fim.generate_greedy(p, fused_new, gen_cap).unwrap().len())
+                .sum();
+            let t_stream = bench(
+                &format!("decode {sessions:>2} sessions per-session streams"),
+                2,
+                10,
+                || {
+                    let mut streams: Vec<_> = prompts
+                        .iter()
+                        .map(|p| fim.greedy_stream(p, fused_new, gen_cap).unwrap())
+                        .collect();
+                    loop {
+                        let mut advanced = false;
+                        for s in streams.iter_mut() {
+                            if !s.is_done() {
+                                s.step();
+                                advanced = true;
+                            }
+                        }
+                        if !advanced {
+                            break;
+                        }
+                    }
+                    black_box(streams.len());
+                },
+            );
+            let t_fused = bench(
+                &format!("decode {sessions:>2} sessions fused engine     "),
+                2,
+                10,
+                || {
+                    let mut eng = DecodeEngine::new(&fim, sessions);
+                    let mut live: Vec<usize> = prompts
+                        .iter()
+                        .map(|p| eng.admit(p, fused_new, gen_cap).unwrap())
+                        .collect();
+                    while !live.is_empty() {
+                        eng.sweep();
+                        live.retain(|&slot| {
+                            if eng.is_done(slot) {
+                                black_box(eng.release(slot).len());
+                                false
+                            } else {
+                                true
+                            }
+                        });
+                    }
+                },
+            );
+            println!(
+                "    → {:.0} tok/s per-session vs {:.0} tok/s fused: {:.2}× at {sessions} sessions",
+                t_stream.throughput(total_tokens as f64),
+                t_fused.throughput(total_tokens as f64),
+                t_stream.mean_s / t_fused.mean_s,
+            );
+            if sessions == 16 {
+                assert!(
+                    t_fused.mean_s <= t_stream.mean_s,
+                    "fused layer-major decode lost to per-session stepping at 16 sessions: \
+                     {:.3} ms vs {:.3} ms",
+                    t_fused.mean_s * 1e3,
+                    t_stream.mean_s * 1e3,
+                );
+            }
+            decode_scenarios.push(Json::obj(vec![
+                ("sessions", Json::num(sessions as f64)),
+                ("new_tokens_requested", Json::num(fused_new as f64)),
+                ("tokens_emitted", Json::num(total_tokens as f64)),
+                (
+                    "per_session_tok_per_s",
+                    Json::num(t_stream.throughput(total_tokens as f64)),
+                ),
+                (
+                    "fused_tok_per_s",
+                    Json::num(t_fused.throughput(total_tokens as f64)),
+                ),
+                ("fused_speedup", Json::num(t_stream.mean_s / t_fused.mean_s)),
+            ]));
+        }
+        // Machine-readable perf trajectory: future PRs diff their
+        // numbers against this file instead of scraping stdout.
+        let doc = Json::obj(vec![
+            ("bench", Json::str("fused_vs_per_session_decode")),
+            ("model", Json::str(fim.cfg.name.clone())),
+            ("policy", Json::str("merged")),
+            ("smoke", Json::Bool(smoke_mode())),
+            ("scenarios", Json::Arr(decode_scenarios)),
+        ]);
+        std::fs::write("BENCH_decode.json", doc.pretty()).expect("write BENCH_decode.json");
+        println!("    → wrote BENCH_decode.json");
+
+        // Zero-allocation engine sweeps: the PR-4 counting-allocator
+        // assert, extended to the fused path. Admission allocates (once
+        // per request — prefill, session, slot); steady-state sweeps
+        // must not, because the coordinator pays one sweep per
+        // scheduler iteration forever.
+        for policy in [MergePolicy::Merged, MergePolicy::Csr] {
+            let em = gm.compile(policy);
+            let mut eng = DecodeEngine::new(&em, 4);
+            for c in 0..4usize {
+                let p: Vec<u32> = (0..4).map(|i| ((c * 17 + i * 5 + 3) % 256) as u32).collect();
+                eng.admit(&p, em.cfg.max_seq, em.cfg.max_seq).unwrap();
+            }
+            for _ in 0..2 {
+                eng.sweep(); // warmup: shared scratch reaches steady size
+            }
+            let before = ALLOC_COUNT.load(Ordering::SeqCst);
+            for _ in 0..8 {
+                eng.sweep();
+            }
+            let allocs = ALLOC_COUNT.load(Ordering::SeqCst) - before;
+            assert_eq!(
+                allocs, 0,
+                "engine sweep allocated {allocs}× in steady state ({})",
+                policy.label()
+            );
+            println!(
+                "    → engine sweep steady-state heap allocations: {allocs} ({})",
                 policy.label()
             );
         }

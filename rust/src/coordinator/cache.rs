@@ -33,6 +33,7 @@ struct Lru {
     tail: usize,
     hits: u64,
     misses: u64,
+    invalidations: u64,
 }
 
 impl Lru {
@@ -63,6 +64,42 @@ impl Lru {
             self.tail = i;
         }
     }
+
+    /// Insert (or refresh) an entry, evicting the least-recently-used
+    /// one at capacity. Caller holds the lock.
+    fn insert_node(&mut self, ids: Vec<u32>, logits: Vec<f32>) {
+        if let Some(i) = self.map.get(ids.as_slice()).copied() {
+            self.nodes[i].val = logits;
+            self.unlink(i);
+            self.push_front(i);
+            return;
+        }
+        if self.map.len() == self.cap {
+            let victim = self.tail;
+            self.unlink(victim);
+            let old_key = std::mem::take(&mut self.nodes[victim].key);
+            self.map.remove(&old_key);
+            self.free.push(victim);
+        }
+        let slot = match self.free.pop() {
+            Some(s) => {
+                self.nodes[s].key = ids.clone();
+                self.nodes[s].val = logits;
+                s
+            }
+            None => {
+                self.nodes.push(Node {
+                    key: ids.clone(),
+                    val: logits,
+                    prev: NIL,
+                    next: NIL,
+                });
+                self.nodes.len() - 1
+            }
+        };
+        self.map.insert(ids, slot);
+        self.push_front(slot);
+    }
 }
 
 /// Thread-safe bounded LRU mapping token ids → logits.
@@ -83,6 +120,7 @@ impl ResponseCache {
                 tail: NIL,
                 hits: 0,
                 misses: 0,
+                invalidations: 0,
             }),
         }
     }
@@ -108,38 +146,50 @@ impl ResponseCache {
     /// Insert (or refresh) an entry, evicting the least-recently-used
     /// one at capacity.
     pub fn insert(&self, ids: Vec<u32>, logits: Vec<f32>) {
+        self.inner.lock().unwrap().insert_node(ids, logits);
+    }
+
+    /// [`Self::insert`] guarded by the invalidation epoch: the entry is
+    /// **dropped** (not inserted) if the cache has been [`Self::clear`]ed
+    /// since `epoch` was captured (see [`Self::epoch`]). This closes the
+    /// hot-swap race: a response computed by the *old* model that lands
+    /// after the swap's invalidation must not repopulate the cache —
+    /// with a plain insert it would be replayed forever.
+    pub fn insert_at_epoch(&self, ids: Vec<u32>, logits: Vec<f32>, epoch: u64) {
         let mut l = self.inner.lock().unwrap();
-        if let Some(i) = l.map.get(ids.as_slice()).copied() {
-            l.nodes[i].val = logits;
-            l.unlink(i);
-            l.push_front(i);
-            return;
+        if l.invalidations == epoch {
+            l.insert_node(ids, logits);
         }
-        if l.map.len() == l.cap {
-            let victim = l.tail;
-            l.unlink(victim);
-            let old_key = std::mem::take(&mut l.nodes[victim].key);
-            l.map.remove(&old_key);
-            l.free.push(victim);
-        }
-        let slot = match l.free.pop() {
-            Some(s) => {
-                l.nodes[s].key = ids.clone();
-                l.nodes[s].val = logits;
-                s
-            }
-            None => {
-                l.nodes.push(Node {
-                    key: ids.clone(),
-                    val: logits,
-                    prev: NIL,
-                    next: NIL,
-                });
-                l.nodes.len() - 1
-            }
-        };
-        l.map.insert(ids, slot);
-        l.push_front(slot);
+    }
+
+    /// Current invalidation epoch (the number of [`Self::clear`] calls
+    /// so far). Capture it *before* computing a value destined for
+    /// [`Self::insert_at_epoch`], so values computed against stale model
+    /// state are discarded instead of cached.
+    pub fn epoch(&self) -> u64 {
+        self.inner.lock().unwrap().invalidations
+    }
+
+    /// Drop every entry at once — the **hot-swap invalidation hook**.
+    /// Cached logits are only valid for the exact compiled model that
+    /// produced them, so a server that swaps its model must clear the
+    /// cache or replay stale answers forever (deterministic backends
+    /// never age entries out on their own). Hit/miss counters survive
+    /// the clear; each call is counted (see [`Self::invalidations`],
+    /// surfaced as `ServeStats::cache_invalidations` at server join).
+    pub fn clear(&self) {
+        let mut l = self.inner.lock().unwrap();
+        l.map.clear();
+        l.nodes.clear();
+        l.free.clear();
+        l.head = NIL;
+        l.tail = NIL;
+        l.invalidations += 1;
+    }
+
+    /// Times [`Self::clear`] ran since construction.
+    pub fn invalidations(&self) -> u64 {
+        self.inner.lock().unwrap().invalidations
     }
 
     pub fn len(&self) -> usize {
@@ -218,6 +268,44 @@ mod tests {
             }
         }
         assert_eq!(c.len(), 1);
+    }
+
+    #[test]
+    fn clear_drops_entries_keeps_counters_and_counts_itself() {
+        let c = ResponseCache::new(4);
+        c.insert(k(1), vec![1.0]);
+        c.insert(k(2), vec![2.0]);
+        assert!(c.get(&k(1)).is_some()); // 1 hit
+        c.clear();
+        assert_eq!(c.len(), 0);
+        assert!(c.is_empty());
+        assert_eq!(c.get(&k(1)), None, "stale entry survived clear");
+        assert_eq!(c.invalidations(), 1);
+        // Counters carry across the clear: the pre-clear hit plus the
+        // post-clear miss.
+        assert_eq!(c.counters(), (1, 1));
+        // The cache keeps working after a clear (slab fully reset).
+        c.insert(k(3), vec![3.0]);
+        assert_eq!(c.get(&k(3)), Some(vec![3.0]));
+        c.clear();
+        assert_eq!(c.invalidations(), 2);
+    }
+
+    #[test]
+    fn insert_at_epoch_drops_results_computed_before_a_clear() {
+        // The hot-swap race: a response computed against the old model
+        // lands after invalidation. With a plain insert the stale
+        // logits would be cached (and replayed) forever; the epoch
+        // guard drops them.
+        let c = ResponseCache::new(4);
+        let epoch = c.epoch();
+        c.clear(); // hot-swap happens while the request is in flight
+        c.insert_at_epoch(k(1), vec![9.0], epoch);
+        assert_eq!(c.get(&k(1)), None, "stale insert survived the clear");
+        // Same-epoch inserts land normally.
+        let epoch = c.epoch();
+        c.insert_at_epoch(k(2), vec![2.0], epoch);
+        assert_eq!(c.get(&k(2)), Some(vec![2.0]));
     }
 
     #[test]

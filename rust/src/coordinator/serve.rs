@@ -49,25 +49,37 @@
 //! continuation over a KV-cached
 //! [`crate::infer::decode::DecodeSession`]).
 //!
-//! 5. **Continuous batching of decode sessions**: each worker keeps a
-//!    *session set* of live [`DecodeStream`]s (capacity
-//!    [`ServeCfg::max_batch`]). Every scheduler iteration sweeps the
-//!    queue for new arrivals **without waiting**, runs the batch's
-//!    classification slice, admits waiting `Generate` requests into
-//!    free session slots, then advances *every* live session by one
-//!    token. Sessions retire on EOS, token budget, or capacity.
-//!    A short request admitted behind a long decode therefore finishes
-//!    after its own few sweeps instead of waiting out the long
-//!    request's entire continuation — the old scheduler ran each
-//!    session to completion and head-of-line-blocked everything behind
-//!    it (`benches/perf_hotpath.rs` measures the TTFT difference).
-//!    Backends without an incremental session API fall back to a
-//!    one-shot [`Backend::begin_decode`] that runs
-//!    [`Backend::generate`] to completion at admission — correct, but
-//!    serial. Each decode sweep is accounted as one batch
-//!    (fill = live sessions), so [`ServeStats::mean_batch`] reflects
-//!    decode concurrency, and [`Response::batch_size`] reports the
-//!    peak number of concurrent sessions a generation ran alongside.
+//! 5. **Continuous batching of decode sessions, layer-major**: each
+//!    worker keeps a *session set* (capacity [`ServeCfg::max_batch`]).
+//!    Every scheduler iteration sweeps the queue for new arrivals
+//!    **without waiting**, runs the batch's classification slice,
+//!    admits waiting `Generate` requests into free session slots, then
+//!    advances *every* live session by one token. Sessions retire on
+//!    EOS, token budget, or capacity. A short request admitted behind
+//!    a long decode therefore finishes after its own few sweeps
+//!    instead of waiting out the long request's entire continuation —
+//!    the old scheduler ran each session to completion and
+//!    head-of-line-blocked everything behind it
+//!    (`benches/perf_hotpath.rs` measures the TTFT difference).
+//!
+//!    *How* a sweep advances the set depends on the backend. Backends
+//!    that build a [`FusedDecode`] engine ([`Backend::begin_engine`] —
+//!    the compiled [`InferenceModel`] does) get the **layer-major
+//!    fused path**: one worker-owned
+//!    [`crate::infer::decode::DecodeEngine`] packs every live
+//!    session's current row into one `[n_live, d]` matrix and one
+//!    `FusedDecode::sweep` per iteration advances all of them with one
+//!    batched kernel per layer — weights read once per layer per
+//!    sweep, not once per session. Backends without an engine fall
+//!    back to per-session [`DecodeStream`]s stepped one by one
+//!    (session-major), and backends without even an incremental
+//!    session API get the one-shot [`Backend::begin_decode`] default
+//!    that runs [`Backend::generate`] to completion at admission —
+//!    correct, but serial. On every path a decode sweep is accounted
+//!    as one batch (fill = live sessions), so
+//!    [`ServeStats::mean_batch`] reflects decode concurrency, and
+//!    [`Response::batch_size`] reports the peak number of concurrent
+//!    sessions a generation ran alongside.
 //!
 //! Generated token counts land in [`ServeStats::generated_tokens`].
 //!
@@ -123,6 +135,11 @@ pub trait Backend: Send + Sync {
     /// scheduler). Backends with a real session API (the compiled
     /// [`InferenceModel`]) override it with a resumable stream so long
     /// decodes interleave.
+    ///
+    /// This is the **fallback** decode path: backends that can build a
+    /// layer-major [`FusedDecode`] engine ([`Backend::begin_engine`])
+    /// never see per-stream stepping — the worker admits their
+    /// generations into engine slots instead.
     fn begin_decode<'a>(
         &'a self,
         prompt: &[u32],
@@ -130,6 +147,72 @@ pub trait Backend: Send + Sync {
     ) -> Option<Box<dyn DecodeStream + 'a>> {
         let tokens = self.generate(prompt, max_new)?;
         Some(Box::new(FinishedStream { tokens }))
+    }
+
+    /// Build a worker-owned **layer-major fused decode engine** with
+    /// `capacity` concurrent slots, or `None` when this backend has no
+    /// batched decode path (the worker then falls back to stepping
+    /// per-session [`DecodeStream`]s from [`Backend::begin_decode`]).
+    ///
+    /// Called once per worker at startup: the engine owns packed
+    /// scratch sized to `capacity ×` the model maxima, every scheduler
+    /// iteration drives exactly one [`FusedDecode::sweep`] (all live
+    /// sessions advance one token through one fused kernel per layer),
+    /// and sessions join/retire between sweeps — so continuous batching
+    /// semantics, admission accounting, and the zero-allocation
+    /// steady-state guarantee are identical to the per-stream path,
+    /// just `n_live ×` cheaper on kernel dispatch and weight reads.
+    fn begin_engine<'a>(&'a self, _capacity: usize) -> Option<Box<dyn FusedDecode + 'a>> {
+        None
+    }
+}
+
+/// A worker-owned layer-major fused decode engine: many live slots
+/// advanced one token per [`Self::sweep`] with one batched kernel per
+/// layer, instead of one per-row kernel chain per session. The
+/// production implementation is
+/// [`crate::infer::decode::DecodeEngine`]; this trait is the
+/// object-safe surface the worker schedules against.
+pub trait FusedDecode {
+    /// Admit a **validated** prompt (non-empty, shorter than the model
+    /// sequence) into a free slot and return its slot id. Callers check
+    /// [`Self::n_live`] against [`Self::capacity`] first; invalid
+    /// prompts may panic (the worker wraps admission in the same panic
+    /// containment as `begin_decode`).
+    fn admit(&mut self, prompt: &[u32], max_new: usize) -> usize;
+    /// Advance every live, unfinished slot by one token — one batched
+    /// kernel per layer across all of them.
+    fn sweep(&mut self);
+    /// Whether `slot` has finished (EOS or token budget).
+    fn is_done(&self, slot: usize) -> bool;
+    /// Free `slot`, returning its continuation (no prompt, no EOS).
+    fn release(&mut self, slot: usize) -> Vec<u32>;
+    /// Admitted, unreleased slot count.
+    fn n_live(&self) -> usize;
+    /// Total slot count.
+    fn capacity(&self) -> usize;
+}
+
+impl FusedDecode for crate::infer::decode::DecodeEngine<'_> {
+    fn admit(&mut self, prompt: &[u32], max_new: usize) -> usize {
+        let cap = self.model().cfg.max_seq;
+        crate::infer::decode::DecodeEngine::admit(self, prompt, max_new, cap)
+            .expect("engine admit: prompt validated before admission")
+    }
+    fn sweep(&mut self) {
+        crate::infer::decode::DecodeEngine::sweep(self)
+    }
+    fn is_done(&self, slot: usize) -> bool {
+        crate::infer::decode::DecodeEngine::is_done(self, slot)
+    }
+    fn release(&mut self, slot: usize) -> Vec<u32> {
+        crate::infer::decode::DecodeEngine::release(self, slot)
+    }
+    fn n_live(&self) -> usize {
+        crate::infer::decode::DecodeEngine::n_live(self)
+    }
+    fn capacity(&self) -> usize {
+        crate::infer::decode::DecodeEngine::capacity(self)
     }
 }
 
@@ -207,6 +290,15 @@ impl Backend for InferenceModel {
             .greedy_stream(prompt, max_new, self.cfg.max_seq)
             .expect("begin_decode: prompt validated before admission");
         Some(Box::new(stream))
+    }
+
+    fn begin_engine<'a>(&'a self, capacity: usize) -> Option<Box<dyn FusedDecode + 'a>> {
+        if !self.supports_decode() {
+            return None;
+        }
+        Some(Box::new(crate::infer::decode::DecodeEngine::new(
+            self, capacity,
+        )))
     }
 }
 
@@ -424,7 +516,11 @@ impl Client {
                 });
             }
         }
-        let key = self.cache.as_ref().map(|_| ids.clone());
+        // Capture the invalidation epoch *before* the backend computes:
+        // if the model is hot-swapped (and the cache invalidated) while
+        // this request is in flight, the old-model logits must be
+        // dropped at insert instead of repopulating the cleared cache.
+        let key = self.cache.as_ref().map(|c| (ids.clone(), c.epoch()));
         let shard_key = affinity_hash(&ids);
         let (reply_tx, reply_rx) = mpsc::channel();
         self.queue
@@ -441,8 +537,8 @@ impl Client {
             .recv()
             .map_err(|_| anyhow::anyhow!("server dropped request"))?;
         if resp.error.is_none() {
-            if let (Some(cache), Some(key)) = (&self.cache, key) {
-                cache.insert(key, resp.logits.clone());
+            if let (Some(cache), Some((key, epoch))) = (&self.cache, key) {
+                cache.insert_at_epoch(key, resp.logits.clone(), epoch);
             }
         }
         Ok(resp)
@@ -492,6 +588,19 @@ impl Client {
         }
         Ok(resp)
     }
+
+    /// Drop every cached response — the **hot-swap invalidation hook**.
+    /// A deployment that replaces the server's compiled model calls
+    /// this so logits computed by the old model are never replayed for
+    /// the new one (the cache has no other aging mechanism; compiled
+    /// classification is deterministic, so entries would otherwise be
+    /// served forever). Counted in [`ServeStats::cache_invalidations`]
+    /// at join; a no-op when the cache is disabled.
+    pub fn invalidate_cache(&self) {
+        if let Some(cache) = &self.cache {
+            cache.clear();
+        }
+    }
 }
 
 /// The running server; dropping all `Client`s then calling `join` shuts
@@ -522,6 +631,9 @@ pub struct ServeStats {
     pub cache_hits: usize,
     /// Cache lookups that fell through to the queue.
     pub cache_misses: usize,
+    /// Full-cache invalidations ([`Client::invalidate_cache`] — the
+    /// model hot-swap hook).
+    pub cache_invalidations: usize,
     /// Tokens emitted by successful `Generate` requests.
     pub generated_tokens: usize,
 }
@@ -544,6 +656,7 @@ impl ServeStats {
         self.stolen += other.stolen;
         self.cache_hits += other.cache_hits;
         self.cache_misses += other.cache_misses;
+        self.cache_invalidations += other.cache_invalidations;
         self.generated_tokens += other.generated_tokens;
     }
 }
@@ -598,6 +711,7 @@ impl Server {
             let (hits, misses) = cache.counters();
             stats.cache_hits += hits as usize;
             stats.cache_misses += misses as usize;
+            stats.cache_invalidations += cache.invalidations() as usize;
         }
         stats
     }
@@ -611,7 +725,9 @@ fn panic_message(panic: Box<dyn std::any::Any + Send>) -> String {
         .unwrap_or_else(|| "backend panicked".into())
 }
 
-/// One live, admitted decode stream plus its reply bookkeeping.
+/// One live, admitted decode stream plus its reply bookkeeping — the
+/// per-stream fallback path (backends without a [`FusedDecode`]
+/// engine).
 struct LiveSession<'a> {
     stream: Box<dyn DecodeStream + 'a>,
     reply: Sender<Response>,
@@ -623,6 +739,22 @@ struct LiveSession<'a> {
     started: Instant,
     /// Peak number of concurrently-stepped sessions observed while this
     /// one was live — reported as [`Response::batch_size`].
+    peak: usize,
+}
+
+/// Reply bookkeeping for one engine-admitted generation — the
+/// [`FusedDecode`] mirror of [`LiveSession`]: the engine owns the model
+/// state, the worker only remembers which slot answers whom and the
+/// same latency/peak accounting.
+struct EngineSession {
+    slot: usize,
+    reply: Sender<Response>,
+    /// Enqueue → admission: the waiting this request actually did.
+    queue_us: u64,
+    /// Admission instant; `compute_us = started.elapsed()` at
+    /// retirement.
+    started: Instant,
+    /// Peak concurrently-swept sessions observed while live.
     peak: usize,
 }
 
@@ -644,11 +776,22 @@ fn worker_loop(
     // keeps bounding the requests a worker holds.
     let max_sessions = cfg.max_batch.max(1);
     let mut live: Vec<LiveSession> = Vec::new();
+    // Layer-major fused path: when the backend can build an engine, all
+    // Generate requests on this worker go through engine slots and one
+    // FusedDecode::sweep per scheduler iteration advances every live
+    // session with one batched kernel per layer. `live` stays empty in
+    // that mode; backends without an engine keep the per-stream path.
+    // The engine is built lazily at the first Generate admission — its
+    // packed scratch is `max_sessions ×` the model maxima, which a
+    // classification-only workload should never pay for.
+    let mut engine: Option<Box<dyn FusedDecode + '_>> = None;
+    let mut engine_probed = false;
+    let mut elive: Vec<EngineSession> = Vec::new();
     let mut waiting: std::collections::VecDeque<(Vec<u32>, usize, Sender<Response>, Instant)> =
         std::collections::VecDeque::new();
     loop {
         let mut batch: Vec<Request> = Vec::new();
-        if live.is_empty() && waiting.is_empty() {
+        if live.is_empty() && elive.is_empty() && waiting.is_empty() {
             // Idle: block for work, exactly like the plain batcher.
             let Some((first, was_stolen)) = queue.pop_first(me) else {
                 return stats; // closed and drained, no sessions in flight
@@ -795,12 +938,46 @@ fn worker_loop(
         // `begin_decode` prefills the prompt (or, for one-shot fallback
         // backends, runs the whole continuation), so it is wrapped in
         // the same panic containment as the batched backend call.
-        while live.len() < max_sessions {
+        while live.len() + elive.len() < max_sessions {
             let Some((ids, max_new, reply, enqueued)) = waiting.pop_front() else {
                 break;
             };
+            if !engine_probed {
+                engine_probed = true;
+                engine = be.begin_engine(max_sessions);
+            }
             let started = Instant::now();
             let queue_us = started.duration_since(enqueued).as_micros() as u64;
+            if let Some(eng) = engine.as_mut() {
+                // Engine admission prefills the prompt, so it gets the
+                // same panic containment as the fallback begin_decode.
+                // A panicking admission (e.g. a token id outside the
+                // vocabulary) aborts before the slot is occupied, so
+                // the engine stays consistent for its other sessions.
+                match std::panic::catch_unwind(AssertUnwindSafe(|| eng.admit(&ids, max_new))) {
+                    Ok(slot) => elive.push(EngineSession {
+                        slot,
+                        reply,
+                        queue_us,
+                        started,
+                        peak: 1,
+                    }),
+                    Err(panic) => {
+                        stats.failed += 1;
+                        let msg = format!("backend error: {}", panic_message(panic));
+                        let _ = reply.send(Response {
+                            logits: Vec::new(),
+                            tokens: Vec::new(),
+                            queue_us,
+                            compute_us: started.elapsed().as_micros() as u64,
+                            batch_size: 0,
+                            cached: false,
+                            error: Some(msg),
+                        });
+                    }
+                }
+                continue;
+            }
             match std::panic::catch_unwind(AssertUnwindSafe(|| be.begin_decode(&ids, max_new))) {
                 Ok(Some(stream)) => live.push(LiveSession {
                     stream,
@@ -828,6 +1005,79 @@ fn worker_loop(
                         cached: false,
                         error: Some(msg),
                     });
+                }
+            }
+        }
+        // One fused decode sweep: every live engine slot advances one
+        // token through one batched kernel per layer, then finished
+        // slots retire. Same continuous-batching semantics as the
+        // per-stream sweep below, inverted to layer-major.
+        if !elive.is_empty() {
+            let sweep_start = Instant::now();
+            let fill = elive.len();
+            let panic_msg: Option<String>;
+            {
+                let eng = engine
+                    .as_mut()
+                    .expect("engine sessions live without an engine");
+                match std::panic::catch_unwind(AssertUnwindSafe(|| eng.sweep())) {
+                    Ok(()) => {
+                        panic_msg = None;
+                        let mut i = 0;
+                        while i < elive.len() {
+                            elive[i].peak = elive[i].peak.max(fill);
+                            if eng.is_done(elive[i].slot) {
+                                let s = elive.swap_remove(i);
+                                let tokens = eng.release(s.slot);
+                                stats.requests += 1;
+                                stats.generated_tokens += tokens.len();
+                                let _ = s.reply.send(Response {
+                                    logits: Vec::new(),
+                                    tokens,
+                                    queue_us: s.queue_us,
+                                    compute_us: s.started.elapsed().as_micros() as u64,
+                                    batch_size: s.peak,
+                                    cached: false,
+                                    error: None,
+                                });
+                            } else {
+                                i += 1;
+                            }
+                        }
+                    }
+                    Err(panic) => panic_msg = Some(panic_message(panic)),
+                }
+            }
+            match panic_msg {
+                None => {
+                    // A sweep is one batch of `fill` concurrently-
+                    // stepped sessions — same accounting as the
+                    // per-stream path, so mean_batch() and the
+                    // controller see decode concurrency identically.
+                    stats.batches += 1;
+                    stats.total_batch_fill += fill;
+                    ctrl.observe(queue.pending(), fill, sweep_start.elapsed());
+                }
+                Some(msg) => {
+                    // A panic mid-sweep can leave the shared packed
+                    // state torn across *every* live slot, so
+                    // containment here fails all in-flight generations
+                    // and rebuilds a fresh engine — the worker (and its
+                    // classification traffic) survives.
+                    stats.failed += elive.len();
+                    let msg = format!("backend error: {msg}");
+                    for s in elive.drain(..) {
+                        let _ = s.reply.send(Response {
+                            logits: Vec::new(),
+                            tokens: Vec::new(),
+                            queue_us: s.queue_us,
+                            compute_us: s.started.elapsed().as_micros() as u64,
+                            batch_size: s.peak,
+                            cached: false,
+                            error: Some(msg.clone()),
+                        });
+                    }
+                    engine = be.begin_engine(max_sessions);
                 }
             }
         }
@@ -916,16 +1166,24 @@ impl Backend for EchoBackend {
 }
 
 /// Latency summary helper used by the serve example and benches.
+///
+/// NaN-safe, like the PR-2/4 fixes to pruning and argmax: samples are
+/// ordered with [`f64::total_cmp`] (NaN ranks above every finite value,
+/// so it lands in the tail percentiles instead of panicking the whole
+/// summary). The old `partial_cmp(..).unwrap()` sort brought a server
+/// down over a single corrupt timing sample.
 pub fn latency_summary(mut micros: Vec<f64>) -> (f64, f64, f64) {
-    use crate::util::stats::percentile;
+    use crate::util::stats::percentile_sorted;
     if micros.is_empty() {
         return (0.0, 0.0, 0.0);
     }
-    micros.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    // Sort once and read all three percentiles off the sorted data —
+    // `percentile()` would clone + re-sort per call.
+    micros.sort_by(|a, b| a.total_cmp(b));
     (
-        percentile(&micros, 50.0),
-        percentile(&micros, 95.0),
-        percentile(&micros, 99.0),
+        percentile_sorted(&micros, 50.0),
+        percentile_sorted(&micros, 95.0),
+        percentile_sorted(&micros, 99.0),
     )
 }
 
@@ -1326,6 +1584,203 @@ mod tests {
         assert_eq!(stats.requests, 24);
         assert_eq!(stats.generated_tokens, 4 * 3 * 2);
         assert_eq!(stats.rejected + stats.failed, 0);
+    }
+
+    #[test]
+    fn latency_summary_is_nan_safe() {
+        // Regression: the summary sorted with partial_cmp(..).unwrap()
+        // and panicked on the first NaN timing sample — one corrupt
+        // measurement killed the whole report. NaN now ranks above
+        // every finite value (total_cmp), surfacing in the tail.
+        let (p50, _p95, p99) = latency_summary(vec![3.0, f64::NAN, 1.0, 2.0]);
+        assert_eq!(p50, 2.5, "finite samples shifted by the NaN");
+        assert!(p99.is_nan(), "NaN should surface in the tail percentile");
+        // All-finite behavior is unchanged.
+        let (p50, p95, p99) = latency_summary(vec![4.0, 2.0, 1.0, 3.0]);
+        assert_eq!(p50, 2.5);
+        assert!(p95 <= p99 && p99 <= 4.0);
+        // Empty stays defined.
+        assert_eq!(latency_summary(Vec::new()), (0.0, 0.0, 0.0));
+    }
+
+    #[test]
+    fn invalidate_cache_drops_stale_responses_and_is_counted() {
+        // Use the real server path: warm the cache, invalidate through
+        // the client, observe the re-miss and the stat at join.
+        let (client, server) = start(
+            echo(2, Duration::ZERO),
+            ServeCfg {
+                cache_entries: 64,
+                ..ServeCfg::default()
+            },
+        );
+        let first = client.infer(vec![1, 2]).unwrap();
+        assert!(!first.cached);
+        assert!(client.infer(vec![1, 2]).unwrap().cached);
+        // Hot-swap hook: stale entries must not survive.
+        client.invalidate_cache();
+        let after = client.infer(vec![1, 2]).unwrap();
+        assert!(!after.cached, "stale cached response served after invalidation");
+        drop(client);
+        let stats = server.join();
+        assert_eq!(stats.cache_invalidations, 1);
+        assert_eq!(stats.cache_hits, 1);
+        assert_eq!(stats.cache_misses, 2);
+        // Disabled-cache clients treat it as a no-op.
+        let (client, server) = start(echo(2, Duration::ZERO), ServeCfg::default());
+        client.invalidate_cache();
+        drop(client);
+        assert_eq!(server.join().cache_invalidations, 0);
+    }
+
+    #[test]
+    fn fused_engine_admission_panic_is_contained_per_request() {
+        // Engine path: an out-of-vocab prompt panics inside admit's
+        // prefill. That must become a per-request error — the worker,
+        // its engine, and later requests keep working.
+        use crate::config::ModelCfg;
+        use crate::util::Rng;
+        let mut rng = Rng::new(503);
+        let model = Transformer::new(&ModelCfg::sim_gpt_s(), &mut rng);
+        let compiled = Arc::new(model.compile(MergePolicy::Merged));
+        let direct = Arc::clone(&compiled);
+        let (client, server) = start(compiled, ServeCfg::default());
+        let err = client.generate(vec![65_000], 4).unwrap_err();
+        assert!(format!("{err}").contains("backend error"), "{err}");
+        // The engine still serves valid prompts afterwards.
+        let prompt = vec![5u32, 9, 2];
+        let want = direct.generate_greedy(&prompt, 6, direct.cfg.max_seq).unwrap();
+        let resp = client.generate(prompt, 6).unwrap();
+        assert_eq!(resp.tokens, want);
+        drop(client);
+        let stats = server.join();
+        assert_eq!(stats.failed, 1);
+        assert_eq!(stats.requests, 1);
+    }
+
+    /// Deterministic paced fused-decode engine: one counter token per
+    /// live slot per sweep, fixed sweep cost, a sweep counter to order
+    /// the test against — the engine-path sibling of the paced stream
+    /// backend in tests/serve_coordinator.rs.
+    struct PacedEngineBackend {
+        sweep_cost: Duration,
+        sweeps: Arc<std::sync::atomic::AtomicUsize>,
+    }
+
+    struct PacedEngine {
+        cost: Duration,
+        sweeps: Arc<std::sync::atomic::AtomicUsize>,
+        /// (tokens left, tokens emitted) per occupied slot.
+        slots: Vec<Option<(usize, Vec<u32>)>>,
+    }
+
+    impl FusedDecode for PacedEngine {
+        fn admit(&mut self, _prompt: &[u32], max_new: usize) -> usize {
+            let i = self
+                .slots
+                .iter()
+                .position(|s| s.is_none())
+                .expect("paced engine full");
+            self.slots[i] = Some((max_new, Vec::new()));
+            i
+        }
+        fn sweep(&mut self) {
+            std::thread::sleep(self.cost);
+            self.sweeps
+                .fetch_add(1, std::sync::atomic::Ordering::SeqCst);
+            for s in self.slots.iter_mut().flatten() {
+                if s.0 > 0 {
+                    s.1.push(s.1.len() as u32);
+                    s.0 -= 1;
+                }
+            }
+        }
+        fn is_done(&self, slot: usize) -> bool {
+            self.slots[slot].as_ref().map_or(true, |s| s.0 == 0)
+        }
+        fn release(&mut self, slot: usize) -> Vec<u32> {
+            self.slots[slot].take().expect("release of vacant slot").1
+        }
+        fn n_live(&self) -> usize {
+            self.slots.iter().flatten().count()
+        }
+        fn capacity(&self) -> usize {
+            self.slots.len()
+        }
+    }
+
+    impl Backend for PacedEngineBackend {
+        fn infer(&self, _ids: &[u32], batch: usize, _seq: usize) -> Vec<Vec<f32>> {
+            vec![vec![0.0]; batch]
+        }
+        fn seq_len(&self) -> usize {
+            64
+        }
+        fn begin_engine<'a>(&'a self, capacity: usize) -> Option<Box<dyn FusedDecode + 'a>> {
+            Some(Box::new(PacedEngine {
+                cost: self.sweep_cost,
+                sweeps: Arc::clone(&self.sweeps),
+                slots: (0..capacity).map(|_| None).collect(),
+            }))
+        }
+    }
+
+    #[test]
+    fn short_generate_joins_engine_sweeps_behind_long_decode() {
+        // The engine-path continuous-batching shape, made deterministic
+        // by the paced engine: a long decode is demonstrably mid-sweep
+        // when a short request arrives; the short one must join the
+        // very next sweeps, observe shared concurrency, and retire
+        // long before the long decode ends.
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        let sweeps = Arc::new(AtomicUsize::new(0));
+        let (client, server) = start(
+            Arc::new(PacedEngineBackend {
+                sweep_cost: Duration::from_millis(2),
+                sweeps: Arc::clone(&sweeps),
+            }),
+            ServeCfg {
+                max_batch: 4,
+                max_wait: Duration::from_micros(100),
+                queue_depth: 16,
+                workers: 1,
+                cache_entries: 0,
+            },
+        );
+        let long = {
+            let c = client.clone();
+            std::thread::spawn(move || c.generate(vec![1], 100).unwrap())
+        };
+        let t0 = Instant::now();
+        while sweeps.load(Ordering::SeqCst) < 5 {
+            assert!(
+                t0.elapsed() < Duration::from_secs(5),
+                "long decode never started sweeping"
+            );
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        let t0 = Instant::now();
+        let short = client.generate(vec![2], 3).unwrap();
+        let short_elapsed = t0.elapsed();
+        assert_eq!(short.tokens, vec![0, 1, 2]);
+        assert_eq!(
+            short.batch_size, 2,
+            "short generation never shared an engine sweep with the long one"
+        );
+        assert!(
+            short_elapsed < Duration::from_millis(100),
+            "short generation waited out the long decode: {short_elapsed:?}"
+        );
+        let long_resp = long.join().unwrap();
+        assert_eq!(long_resp.tokens.len(), 100);
+        drop(client);
+        let stats = server.join();
+        assert_eq!(stats.requests, 2);
+        assert_eq!(stats.generated_tokens, 103);
+        assert!(
+            stats.mean_batch() > 1.0,
+            "engine sweeps missing from batch accounting: {stats:?}"
+        );
     }
 
     #[test]

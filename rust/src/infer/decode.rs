@@ -20,15 +20,18 @@
 //! [`crate::tensor::linalg::gemv_into`] and
 //! [`super::kernels::CsrMatrix::matvec`]), `InferNorm::apply_row_into`,
 //! and `InferAdapter::forward_row_into`. A session owns one
-//! [`DecodeScratch`] — a set of buffers pre-sized at creation to the
-//! model's maxima (attention width, FFN width, adapter width, low-rank
-//! rank, score rows up to the session's capacity) — plus two ping-pong
-//! row buffers and its logits buffer, so **`decode_step` performs zero
-//! heap allocations in steady state**. The serving coordinator leans on
-//! this: its continuous-batching scheduler steps every live session
-//! once per sweep, and a per-step allocation would be paid
-//! `sessions × tokens` times per second (`benches/perf_hotpath.rs`
-//! pins the zero-allocation property with a counting allocator).
+//! [`DecodeScratch`] — a set of buffers sized to the model's maxima
+//! (attention width, FFN width, adapter width, low-rank rank, score
+//! rows up to the session's capacity), created **lazily on the first
+//! `decode_step`** so engine-driven sessions (which never step
+//! themselves) never build one — plus two ping-pong row buffers and
+//! its logits buffer, so **`decode_step` performs zero heap
+//! allocations in steady state** (the first step is the one-time
+//! materialization). The serving coordinator leans on this: its
+//! continuous-batching scheduler steps every live session once per
+//! sweep, and a per-step allocation would be paid `sessions × tokens`
+//! times per second (`benches/perf_hotpath.rs` pins the
+//! zero-allocation property with a counting allocator).
 //!
 //! ## Cache layout, right-sizing, and pooling
 //!
@@ -90,6 +93,48 @@
 //! logits) but pure wasted compute, and one mask bug away from
 //! cross-row contamination. Per-row sessions have no padding at all, so
 //! row independence is structural and needs no masking machinery.
+//!
+//! ## Layer-major fused decode ([`DecodeEngine`])
+//!
+//! Per-session stepping is **session-major**: each live session runs
+//! its own chain of per-row kernels through every block, so `n`
+//! concurrent sessions stream every layer's weights from memory `n`
+//! times per sweep — exactly the regime where structured sparsity
+//! stops paying, because the matmuls are bandwidth-bound on *weights*
+//! that nothing amortizes. A [`DecodeEngine`] inverts the loop to
+//! **layer-major**: every live session's current token row is packed
+//! into one `[n_live, d]` activation matrix and *all* sessions advance
+//! through each block with one fused kernel per layer —
+//! [`InferLinear::forward_rows_into`] (dense rows contracted against a
+//! single read of W via the serial `matmul_into`, keeping the sweep
+//! allocation-free at any model size; CSR through the entry-major
+//! [`super::kernels::CsrMatrix::matvec_batch`] gather that reads each
+//! surviving weight once per sweep; the low-rank UV side-path as two
+//! skinny gemms `[n,d]×[d,r]` then `[n,r]×[r,out]`). Attention is the
+//! one per-session inner loop left: each session attends over its own
+//! private, right-sized K/V cache (ragged positions, pooled buffers —
+//! the per-session layout above is unchanged; the engine merely owns
+//! *when* rows are appended).
+//!
+//! Ownership mirrors the session design one level up: the engine owns
+//! one [`EngineScratch`] — every packed intermediate pre-sized at
+//! creation to `capacity ×` the model maxima plus one `[capacity,
+//! vocab]` logits matrix — while each admitted slot keeps its own
+//! [`DecodeSession`] (K/V, position, logits row). Sessions **join**
+//! ([`DecodeEngine::admit`], a normal prefill — admission may allocate,
+//! it runs once per request) and **retire**
+//! ([`DecodeEngine::release`]) between sweeps, so continuous batching
+//! composes with the fusion, and a half-empty engine simply packs
+//! fewer rows. [`DecodeEngine::sweep`] itself performs **zero heap
+//! allocations in steady state** (asserted alongside the `decode_step`
+//! check in `benches/perf_hotpath.rs`). Every packed kernel is
+//! row-for-row bit-identical to its per-row form, so each slot's
+//! tokens match a solo [`GreedyStream`] exactly — `DecodeSession` /
+//! `GreedyStream` survive as the `n_live = 1` view of the same
+//! arithmetic (the trainer's `greedy_decode` and the examples still
+//! use them directly), and the parity suite pins fused-vs-solo
+//! equality for all three merge policies, including sessions joining
+//! and retiring mid-flight.
 
 use super::{InferBlock, InferHead, InferLinear, InferenceModel};
 use crate::data::vocab::EOS;
@@ -222,36 +267,75 @@ fn max_lowrank(lin: &InferLinear, cur: usize) -> usize {
     cur.max(lin.lowrank_rank())
 }
 
+/// Model-wide kernel maxima: one source of truth for pre-sizing both
+/// the per-session [`DecodeScratch`] and the engine-owned
+/// [`EngineScratch`], so the two paths can never disagree about what
+/// "big enough to never reallocate" means.
+struct ModelDims {
+    /// Model width (`d_model`).
+    d: usize,
+    /// Widest attention projection (`n_heads · head_dim`; blocks can
+    /// differ under `Compact`).
+    width: usize,
+    /// Widest FFN hidden layer.
+    ffn: usize,
+    /// Widest adapter bottleneck (0 without adapters).
+    admid: usize,
+    /// Largest low-rank side-path rank across every linear (0 when all
+    /// folded).
+    rank: usize,
+    /// Vocabulary size (LM logits row width).
+    vocab: usize,
+}
+
+fn model_dims(m: &InferenceModel) -> ModelDims {
+    let mut width = 0usize;
+    let mut ffn = 0usize;
+    let mut admid = 0usize;
+    let mut rank = 0usize;
+    for blk in &m.blocks {
+        width = width.max(blk.attn.n_heads * blk.attn.head_dim);
+        ffn = ffn.max(blk.fc1.out_dim());
+        for lin in [
+            &blk.attn.wq,
+            &blk.attn.wk,
+            &blk.attn.wv,
+            &blk.attn.wo,
+            &blk.fc1,
+            &blk.fc2,
+        ] {
+            rank = max_lowrank(lin, rank);
+        }
+        for ad in [&blk.adapter1, &blk.adapter2].into_iter().flatten() {
+            admid = admid.max(ad.down.out_dim());
+            rank = max_lowrank(&ad.down, rank);
+            rank = max_lowrank(&ad.up, rank);
+        }
+    }
+    let head = match &m.head {
+        InferHead::Classifier(l) | InferHead::Regressor(l) | InferHead::Lm(l) => l,
+    };
+    rank = max_lowrank(head, rank);
+    ModelDims {
+        d: m.tok.cols(),
+        width,
+        ffn,
+        admid,
+        rank,
+        vocab: m.tok.rows(),
+    }
+}
+
 impl DecodeScratch {
     fn for_model(m: &InferenceModel, cap_rows: usize) -> DecodeScratch {
-        let d = m.tok.cols();
-        let mut width = 0usize;
-        let mut ffn = 0usize;
-        let mut admid = 0usize;
-        let mut rank = 0usize;
-        for blk in &m.blocks {
-            width = width.max(blk.attn.n_heads * blk.attn.head_dim);
-            ffn = ffn.max(blk.fc1.out_dim());
-            for lin in [
-                &blk.attn.wq,
-                &blk.attn.wk,
-                &blk.attn.wv,
-                &blk.attn.wo,
-                &blk.fc1,
-                &blk.fc2,
-            ] {
-                rank = max_lowrank(lin, rank);
-            }
-            for ad in [&blk.adapter1, &blk.adapter2].into_iter().flatten() {
-                admid = admid.max(ad.down.out_dim());
-                rank = max_lowrank(&ad.down, rank);
-                rank = max_lowrank(&ad.up, rank);
-            }
-        }
-        let head = match &m.head {
-            InferHead::Classifier(l) | InferHead::Regressor(l) | InferHead::Lm(l) => l,
-        };
-        rank = max_lowrank(head, rank);
+        let ModelDims {
+            d,
+            width,
+            ffn,
+            admid,
+            rank,
+            ..
+        } = model_dims(m);
         DecodeScratch {
             h: vec![0.0; d],
             q: vec![0.0; width],
@@ -287,7 +371,12 @@ pub struct DecodeSession<'m> {
     /// Current / next row, ping-ponged through the blocks.
     row: Vec<f32>,
     row_next: Vec<f32>,
-    scratch: DecodeScratch,
+    /// Per-session `_into` scratch, created lazily on the first
+    /// [`DecodeSession::decode_step`]: sessions driven by a
+    /// [`DecodeEngine`] never step themselves (the engine's shared
+    /// [`EngineScratch`] does that work), so they never pay for — or
+    /// hold — a private scratch set at all.
+    scratch: Option<DecodeScratch>,
 }
 
 impl Drop for DecodeSession<'_> {
@@ -396,7 +485,7 @@ impl InferenceModel {
             last_logits,
             row: vec![0.0; d],
             row_next: vec![0.0; d],
-            scratch: DecodeScratch::for_model(self, cap),
+            scratch: None,
         }
     }
 
@@ -567,17 +656,18 @@ impl<'m> DecodeSession<'m> {
             self.row[j] = tsrc[j] + psrc[j];
         }
 
+        // First step materializes the scratch (one-time; the zero-
+        // allocation guarantee is about steady state). Engine-driven
+        // sessions never reach here, so they never build one.
+        let p_cap = m.n_prefix() + self.cap_tokens;
+        let scratch = self
+            .scratch
+            .get_or_insert_with(|| DecodeScratch::for_model(m, p_cap));
         for (blk, layer) in m.blocks.iter().zip(self.kv.iter_mut()) {
-            blk.decode_row_into(
-                &self.row,
-                &mut self.row_next,
-                layer,
-                self.pos,
-                &mut self.scratch,
-            );
+            blk.decode_row_into(&self.row, &mut self.row_next, layer, self.pos, scratch);
             std::mem::swap(&mut self.row, &mut self.row_next);
         }
-        let DecodeScratch { h, lowrank, .. } = &mut self.scratch;
+        let DecodeScratch { h, lowrank, .. } = scratch;
         m.ln_f.apply_row_into(&self.row, &mut h[..d]);
         let InferHead::Lm(lm) = &m.head else { unreachable!() };
         lm.forward_row_into(&h[..d], &mut self.last_logits, lowrank);
@@ -705,6 +795,418 @@ impl InferBlock {
         for j in 0..d {
             out[j] = x2[j] + f_out[j];
         }
+    }
+}
+
+/// Engine-owned scratch for the layer-major fused sweep: every packed
+/// intermediate pre-sized at engine creation to `capacity ×` the model
+/// maxima ([`model_dims`]) and reused every block of every sweep, so
+/// [`DecodeEngine::sweep`] allocates nothing in steady state. The
+/// per-slot state that persists between sweeps (K/V caches, positions,
+/// logits) lives in each slot's [`DecodeSession`]; this is only the
+/// transient per-sweep working set.
+struct EngineScratch {
+    /// Packed activation rows `[n_live, d]` — the block input, rewritten
+    /// in place with each block's output (the rows are fully consumed by
+    /// the residual before being overwritten, so no ping-pong is
+    /// needed).
+    x: Vec<f32>,
+    /// Post-attention residual rows `[n_live, d]`.
+    x2: Vec<f32>,
+    /// Layer-norm / adapter output rows `[n_live, d]`.
+    h: Vec<f32>,
+    /// Q/K/V projection rows `[n_live, width]`.
+    q: Vec<f32>,
+    k: Vec<f32>,
+    v: Vec<f32>,
+    /// Attention context rows `[n_live, width]`.
+    ctx: Vec<f32>,
+    /// Attention scores for one (session, head) at a time — sized to
+    /// the model's maximum attention rows (`n_prefix + max_seq`), the
+    /// widest any session can reach.
+    scores: Vec<f32>,
+    /// Attention output rows `[n_live, d]`.
+    attn_out: Vec<f32>,
+    /// FFN hidden rows `[n_live, ffn]`.
+    hmid: Vec<f32>,
+    /// FFN output rows `[n_live, d]`.
+    ffn_out: Vec<f32>,
+    /// Adapter bottleneck rows (resized per adapter; capacity covers
+    /// `capacity × admid`).
+    adapter_mid: Vec<f32>,
+    /// Low-rank side-path rows (resized per layer; capacity covers
+    /// `capacity × rank`).
+    lowrank: Vec<f32>,
+    /// LM logits rows `[n_live, vocab]`, scattered back to each slot's
+    /// session after the head.
+    logits: Vec<f32>,
+}
+
+impl EngineScratch {
+    fn for_model(m: &InferenceModel, capacity: usize) -> EngineScratch {
+        let ModelDims {
+            d,
+            width,
+            ffn,
+            admid,
+            rank,
+            vocab,
+        } = model_dims(m);
+        let cap_rows = m.n_prefix() + m.cfg.max_seq;
+        EngineScratch {
+            x: vec![0.0; capacity * d],
+            x2: vec![0.0; capacity * d],
+            h: vec![0.0; capacity * d],
+            q: vec![0.0; capacity * width],
+            k: vec![0.0; capacity * width],
+            v: vec![0.0; capacity * width],
+            ctx: vec![0.0; capacity * width],
+            scores: vec![0.0; cap_rows],
+            attn_out: vec![0.0; capacity * d],
+            hmid: vec![0.0; capacity * ffn],
+            ffn_out: vec![0.0; capacity * d],
+            adapter_mid: Vec::with_capacity(capacity * admid),
+            lowrank: Vec::with_capacity(capacity * rank),
+            logits: vec![0.0; capacity * vocab],
+        }
+    }
+}
+
+/// One admitted sequence inside a [`DecodeEngine`]: the session holds
+/// the model state (K/V, position, logits), the slot the greedy-decode
+/// bookkeeping that [`GreedyStream`] holds for the solo path — same
+/// rules (`argmax` → EOS / budget → advance), so slot tokens are
+/// defined to match a solo stream.
+struct EngineSlot<'m> {
+    sess: DecodeSession<'m>,
+    /// Continuation emitted so far (no prompt, no EOS). Pre-reserved to
+    /// the budget at admission so steady-state pushes never allocate.
+    out: Vec<u32>,
+    /// Effective token budget: `min(max_new, capacity - prompt)`.
+    budget: usize,
+    /// Token emitted this sweep, pending its decode step.
+    pending: u32,
+    done: bool,
+}
+
+/// The **layer-major fused decode engine**: up to `capacity` concurrent
+/// sessions advanced one token per [`Self::sweep`] with one batched
+/// kernel per layer over the packed `[n_live, d]` activation rows,
+/// instead of `n_live` independent per-row kernel chains (see the
+/// module docs). Sessions join via [`Self::admit`] and retire via
+/// [`Self::release`] between sweeps — the serving coordinator's
+/// continuous batching drives exactly that cycle, one sweep per
+/// scheduler iteration (`crate::coordinator::serve`).
+pub struct DecodeEngine<'m> {
+    model: &'m InferenceModel,
+    slots: Vec<Option<EngineSlot<'m>>>,
+    scratch: EngineScratch,
+    /// Slot indices stepping in the current sweep (live, not done, and
+    /// under budget) — reused across sweeps, capacity = `capacity`.
+    active: Vec<usize>,
+    n_live: usize,
+}
+
+impl<'m> DecodeEngine<'m> {
+    /// An engine with `capacity` slots (clamped to ≥ 1) over a compiled
+    /// causal LM. All packed scratch is allocated here, once; sweeps
+    /// reuse it. Panics on non-LM models, exactly like
+    /// [`InferenceModel::prefill`].
+    pub fn new(model: &'m InferenceModel, capacity: usize) -> DecodeEngine<'m> {
+        assert!(
+            model.supports_decode(),
+            "DecodeEngine: fused decoding needs a causal LM model"
+        );
+        let capacity = capacity.max(1);
+        DecodeEngine {
+            model,
+            slots: (0..capacity).map(|_| None).collect(),
+            scratch: EngineScratch::for_model(model, capacity),
+            active: Vec::with_capacity(capacity),
+            n_live: 0,
+        }
+    }
+
+    /// The compiled model this engine decodes over.
+    pub fn model(&self) -> &'m InferenceModel {
+        self.model
+    }
+
+    /// Total slot count.
+    pub fn capacity(&self) -> usize {
+        self.slots.len()
+    }
+
+    /// Admitted, unreleased slots (finished slots count until released).
+    pub fn n_live(&self) -> usize {
+        self.n_live
+    }
+
+    pub fn has_free_slot(&self) -> bool {
+        self.n_live < self.slots.len()
+    }
+
+    /// Admit a prompt into a free slot (prefill + bookkeeping) and
+    /// return its slot id. Validation matches
+    /// [`InferenceModel::greedy_stream`]: an empty prompt or one with no
+    /// room to generate under `min(max_len, max_seq)` is an error, as is
+    /// a full engine. Admission is the once-per-request path — it may
+    /// allocate (prefill activations, the session, `out`'s reserve);
+    /// the steady-state [`Self::sweep`] does not.
+    pub fn admit(&mut self, prompt: &[u32], max_new: usize, max_len: usize) -> crate::Result<usize> {
+        let cap = max_len.min(self.model.cfg.max_seq);
+        anyhow::ensure!(!prompt.is_empty(), "engine admit: empty prompt");
+        anyhow::ensure!(
+            prompt.len() < cap,
+            "engine admit: prompt of {} tokens leaves no room to generate (capacity {cap})",
+            prompt.len()
+        );
+        let idx = self
+            .slots
+            .iter()
+            .position(|s| s.is_none())
+            .ok_or_else(|| anyhow::anyhow!("engine admit: all {} slots live", self.slots.len()))?;
+        let budget = max_new.min(cap - prompt.len());
+        let sess = self.model.prefill_bounded(prompt, budget);
+        self.slots[idx] = Some(EngineSlot {
+            sess,
+            out: Vec::with_capacity(budget),
+            budget,
+            pending: 0,
+            done: budget == 0,
+        });
+        self.n_live += 1;
+        Ok(idx)
+    }
+
+    /// Whether `slot` has finished (EOS or token budget). Vacant slots
+    /// read as finished.
+    pub fn is_done(&self, slot: usize) -> bool {
+        self.slots[slot].as_ref().map_or(true, |s| s.done)
+    }
+
+    /// Continuation emitted so far by `slot` (no prompt, no EOS; empty
+    /// for vacant slots).
+    pub fn tokens(&self, slot: usize) -> &[u32] {
+        match &self.slots[slot] {
+            Some(s) => &s.out,
+            None => &[],
+        }
+    }
+
+    /// Free `slot` and return its continuation. Dropping the slot's
+    /// session returns its K/V buffers to the thread-local pool, so a
+    /// later [`Self::admit`] on this thread reuses them. Panics on a
+    /// vacant slot.
+    pub fn release(&mut self, slot: usize) -> Vec<u32> {
+        let s = self.slots[slot].take().expect("engine release: vacant slot");
+        self.n_live -= 1;
+        s.out
+    }
+
+    /// Advance every live, unfinished slot by one greedy token — the
+    /// layer-major fused step. Per slot this is exactly one
+    /// [`GreedyStream::step`]: consume the slot's current logits
+    /// (argmax → EOS / budget bookkeeping), then run the emitted token
+    /// through every block — except the block pass happens **once for
+    /// all slots**, one fused kernel per layer over the packed rows,
+    /// with only attention looping per session over its private K/V.
+    /// Zero heap allocations in steady state.
+    pub fn sweep(&mut self) {
+        // Greedy bookkeeping per slot (the GreedyStream::step prefix):
+        // emit from current logits, mark EOS/budget, collect the rows
+        // that actually step.
+        self.active.clear();
+        for i in 0..self.slots.len() {
+            let Some(slot) = self.slots[i].as_mut() else {
+                continue;
+            };
+            if slot.done {
+                continue;
+            }
+            let tok = argmax(&slot.sess.last_logits);
+            if tok == EOS {
+                slot.done = true;
+                continue;
+            }
+            slot.out.push(tok);
+            if slot.out.len() >= slot.budget {
+                slot.done = true;
+                continue;
+            }
+            slot.pending = tok;
+            self.active.push(i);
+        }
+        let n = self.active.len();
+        if n == 0 {
+            return;
+        }
+        let m = self.model;
+        let d = m.tok.cols();
+        let vocab = m.tok.rows();
+
+        // Pack the pending tokens' embedding rows: token table + the
+        // *per-session* position (sessions are ragged; row r's position
+        // is its own session's token count, prefix rows excluded).
+        for (r, &i) in self.active.iter().enumerate() {
+            let slot = self.slots[i].as_ref().unwrap();
+            let t = slot.pending as usize;
+            debug_assert!(t < vocab, "engine sweep: token id {t} out of vocab");
+            let tsrc = &m.tok.data[t * d..(t + 1) * d];
+            let psrc = &m.pos.data[slot.sess.tokens * d..(slot.sess.tokens + 1) * d];
+            let dst = &mut self.scratch.x[r * d..(r + 1) * d];
+            for j in 0..d {
+                dst[j] = tsrc[j] + psrc[j];
+            }
+        }
+
+        // Layer-major: every block advances ALL packed rows with one
+        // fused kernel per layer.
+        for (layer, blk) in m.blocks.iter().enumerate() {
+            fused_block_rows(blk, layer, &mut self.slots, &self.active, &mut self.scratch, n, d);
+        }
+
+        // Final norm + LM head over all rows at once, then scatter the
+        // logits rows back to their sessions.
+        let s = &mut self.scratch;
+        m.ln_f.apply_rows_into(&s.x[..n * d], &mut s.h[..n * d], n);
+        let InferHead::Lm(lm) = &m.head else { unreachable!() };
+        lm.forward_rows_into(&s.h[..n * d], &mut s.logits[..n * vocab], n, &mut s.lowrank);
+        for (r, &i) in self.active.iter().enumerate() {
+            let slot = self.slots[i].as_mut().unwrap();
+            slot.sess
+                .last_logits
+                .copy_from_slice(&s.logits[r * vocab..(r + 1) * vocab]);
+            slot.sess.pos += 1;
+            slot.sess.tokens += 1;
+        }
+    }
+}
+
+/// One block's fused step over `n` packed rows — the batched mirror of
+/// [`InferBlock::decode_row_into`], same arithmetic in the same order
+/// per row (fused/solo parity is structural, not tested-into-being).
+/// Projections and FFN run as one fused kernel over all rows; the K/V
+/// append and the attention reduction loop per session, because each
+/// session's cache is private and its position ragged.
+fn fused_block_rows<'m>(
+    blk: &InferBlock,
+    layer: usize,
+    slots: &mut [Option<EngineSlot<'m>>],
+    active: &[usize],
+    s: &mut EngineScratch,
+    n: usize,
+    d: usize,
+) {
+    let EngineScratch {
+        x,
+        x2,
+        h,
+        q,
+        k,
+        v,
+        ctx,
+        scores,
+        attn_out,
+        hmid,
+        ffn_out,
+        adapter_mid,
+        lowrank,
+        ..
+    } = s;
+    let width = blk.attn.n_heads * blk.attn.head_dim;
+    let hd = blk.attn.head_dim;
+
+    // Pre-norm + fused Q/K/V projections over all packed rows: three
+    // weight reads for the whole sweep instead of three per session.
+    blk.ln1.apply_rows_into(&x[..n * d], &mut h[..n * d], n);
+    blk.attn.wq.forward_rows_into(&h[..n * d], &mut q[..n * width], n, lowrank);
+    blk.attn.wk.forward_rows_into(&h[..n * d], &mut k[..n * width], n, lowrank);
+    blk.attn.wv.forward_rows_into(&h[..n * d], &mut v[..n * width], n, lowrank);
+
+    // Append each session's new K/V row to its own cache at its own
+    // position.
+    for (r, &i) in active.iter().enumerate() {
+        let sess = &mut slots[i].as_mut().unwrap().sess;
+        let pos = sess.pos;
+        let kvl = &mut sess.kv[layer];
+        kvl.k[pos * width..(pos + 1) * width].copy_from_slice(&k[r * width..(r + 1) * width]);
+        kvl.v[pos * width..(pos + 1) * width].copy_from_slice(&v[r * width..(r + 1) * width]);
+    }
+
+    // Attention: the one per-session loop left — each session reduces
+    // over its private cache rows `0..=pos` (ragged lengths, prefix
+    // included). Identical inner arithmetic to the solo step.
+    let rscale = 1.0 / (hd as f32).sqrt();
+    for (r, &i) in active.iter().enumerate() {
+        let sess = &slots[i].as_ref().unwrap().sess;
+        let kvl = &sess.kv[layer];
+        let rows = sess.pos + 1; // attend over everything cached, self included
+        let ctx_r = &mut ctx[r * width..(r + 1) * width];
+        ctx_r.fill(0.0);
+        let sc = &mut scores[..rows];
+        for hh in 0..blk.attn.n_heads {
+            let qh = &q[r * width + hh * hd..r * width + hh * hd + hd];
+            for (j, sv) in sc.iter_mut().enumerate() {
+                let krow = &kvl.k[j * width + hh * hd..j * width + hh * hd + hd];
+                *sv = dot(qh, krow) * rscale;
+            }
+            let mx = sc.iter().fold(f32::NEG_INFINITY, |acc, &sv| acc.max(sv));
+            let mut denom = 0.0f32;
+            for sv in sc.iter_mut() {
+                *sv = (*sv - mx).exp();
+                denom += *sv;
+            }
+            let ctx_h = &mut ctx_r[hh * hd..(hh + 1) * hd];
+            for (j, &sv) in sc.iter().enumerate() {
+                let a = sv / denom;
+                if a == 0.0 {
+                    continue;
+                }
+                let vrow = &kvl.v[j * width + hh * hd..j * width + hh * hd + hd];
+                for (c, &vv) in ctx_h.iter_mut().zip(vrow) {
+                    *c += a * vv;
+                }
+            }
+        }
+    }
+
+    // Output projection (+ adapter) and residual, fused over rows.
+    blk.attn
+        .wo
+        .forward_rows_into(&ctx[..n * width], &mut attn_out[..n * d], n, lowrank);
+    let a_src: &[f32] = if let Some(ad) = &blk.adapter1 {
+        // h is dead after the Q/K/V projections — reuse it for the
+        // adapter output, like the solo step does.
+        ad.forward_rows_into(&attn_out[..n * d], &mut h[..n * d], n, adapter_mid, lowrank);
+        &h[..n * d]
+    } else {
+        &attn_out[..n * d]
+    };
+    for (o, (&xv, &av)) in x2[..n * d].iter_mut().zip(x[..n * d].iter().zip(a_src)) {
+        *o = xv + av;
+    }
+
+    // FFN (+ adapter) and residual, fused over rows.
+    blk.ln2.apply_rows_into(&x2[..n * d], &mut h[..n * d], n);
+    let f_dim = blk.fc1.out_dim();
+    blk.fc1
+        .forward_rows_into(&h[..n * d], &mut hmid[..n * f_dim], n, lowrank);
+    for vmid in hmid[..n * f_dim].iter_mut() {
+        *vmid = gelu_scalar(*vmid);
+    }
+    blk.fc2
+        .forward_rows_into(&hmid[..n * f_dim], &mut ffn_out[..n * d], n, lowrank);
+    let f_src: &[f32] = if let Some(ad) = &blk.adapter2 {
+        ad.forward_rows_into(&ffn_out[..n * d], &mut h[..n * d], n, adapter_mid, lowrank);
+        &h[..n * d]
+    } else {
+        &ffn_out[..n * d]
+    };
+    // The packed rows are fully consumed by the first residual, so the
+    // block output overwrites them in place — next block reads x again.
+    for (o, (&rv, &fv)) in x[..n * d].iter_mut().zip(x2[..n * d].iter().zip(f_src)) {
+        *o = rv + fv;
     }
 }
 
@@ -927,6 +1429,118 @@ mod tests {
         // A full-budget prefill still reports the legacy capacity.
         let sess = im.prefill(&prompt);
         assert_eq!(sess.capacity(), im.cfg.max_seq);
+    }
+
+    #[test]
+    fn fused_engine_matches_interleaved_streams_all_policies() {
+        // The tentpole invariant at unit scale: engine slots swept
+        // together must emit exactly (assert_eq, bit-identical) what
+        // solo streams emit, for every policy, over ragged prompts.
+        let m = dsee_lm_model(0xE0);
+        for policy in [MergePolicy::Merged, MergePolicy::Csr, MergePolicy::Compact] {
+            let im = m.compile(policy);
+            let cap = im.cfg.max_seq;
+            let prompts: Vec<Vec<u32>> = (0..4usize)
+                .map(|r| (0..2 + r).map(|i| ((r * 13 + i * 7 + 1) % 60) as u32).collect())
+                .collect();
+            let solo: Vec<Vec<u32>> = prompts
+                .iter()
+                .map(|p| im.generate_greedy(p, 6, cap).unwrap())
+                .collect();
+            let mut eng = super::DecodeEngine::new(&im, prompts.len());
+            let slots: Vec<usize> = prompts
+                .iter()
+                .map(|p| eng.admit(p, 6, cap).unwrap())
+                .collect();
+            let mut rounds = 0;
+            while slots.iter().any(|&s| !eng.is_done(s)) {
+                eng.sweep();
+                rounds += 1;
+                assert!(rounds < 100, "{}: engine never drained", policy.label());
+            }
+            let got: Vec<Vec<u32>> = slots.iter().map(|&s| eng.release(s)).collect();
+            assert_eq!(got, solo, "{}: fused engine diverged from solo", policy.label());
+            assert_eq!(eng.n_live(), 0);
+        }
+    }
+
+    #[test]
+    fn engine_slots_join_and_retire_between_sweeps() {
+        // Continuous batching through the engine: an early retirement
+        // frees a slot, a latecomer fills it mid-flight, and neither
+        // perturbs the other sessions' tokens (no bleed through the
+        // packed rows).
+        let m = dsee_lm_model(0xE1);
+        let im = m.compile(MergePolicy::Merged);
+        let cap = im.cfg.max_seq;
+        let long: Vec<u32> = vec![7, 21, 3];
+        let short: Vec<u32> = vec![5, 11];
+        let late: Vec<u32> = vec![2, 9, 4, 1];
+        let want_long = im.generate_greedy(&long, 8, cap).unwrap();
+        let want_short = im.generate_greedy(&short, 2, cap).unwrap();
+        let want_late = im.generate_greedy(&late, 5, cap).unwrap();
+
+        let mut eng = super::DecodeEngine::new(&im, 2);
+        let s_long = eng.admit(&long, 8, cap).unwrap();
+        let s_short = eng.admit(&short, 2, cap).unwrap();
+        assert!(!eng.has_free_slot());
+        assert!(eng.admit(&late, 5, cap).is_err(), "admit into a full engine");
+        // Budget 2 retires the short session within 3 sweeps.
+        for _ in 0..3 {
+            eng.sweep();
+        }
+        assert!(eng.is_done(s_short));
+        // (Deterministic greedy rollout: only meaningful when the long
+        // continuation actually outlives 3 sweeps.)
+        if want_long.len() > 3 {
+            assert!(!eng.is_done(s_long), "long session finished early");
+        }
+        assert_eq!(eng.tokens(s_short), want_short.as_slice());
+        let got_short = eng.release(s_short);
+        assert_eq!(got_short, want_short);
+        // Latecomer joins the freed slot while the long session is
+        // still mid-flight.
+        let s_late = eng.admit(&late, 5, cap).unwrap();
+        assert_eq!(s_late, s_short, "freed slot not reused");
+        let mut rounds = 0;
+        while !eng.is_done(s_long) || !eng.is_done(s_late) {
+            eng.sweep();
+            rounds += 1;
+            assert!(rounds < 100, "engine never drained");
+        }
+        assert_eq!(eng.release(s_long), want_long);
+        assert_eq!(eng.release(s_late), want_late);
+    }
+
+    #[test]
+    fn engine_admit_validates_like_greedy_stream() {
+        let m = dsee_lm_model(0xE2);
+        let im = m.compile(MergePolicy::Merged);
+        let cap = im.cfg.max_seq;
+        let mut eng = super::DecodeEngine::new(&im, 2);
+        assert!(eng.admit(&[], 4, cap).is_err(), "empty prompt admitted");
+        let full: Vec<u32> = (0..cap as u32).collect();
+        let err = eng.admit(&full, 4, cap).unwrap_err();
+        assert!(format!("{err}").contains("no room"), "{err}");
+        assert_eq!(eng.n_live(), 0, "failed admissions must not occupy slots");
+        // max_new == 0 admits and is immediately done with no tokens.
+        let s = eng.admit(&[1, 2], 0, cap).unwrap();
+        assert!(eng.is_done(s));
+        eng.sweep(); // no-op, must not panic or step the done slot
+        assert!(eng.release(s).is_empty());
+    }
+
+    #[test]
+    #[should_panic(expected = "causal LM")]
+    fn engine_rejects_non_causal_models() {
+        let mut rng = Rng::new(0xE3);
+        let mut cfg = lm_cfg();
+        cfg.causal = false;
+        cfg.head = "classifier".into();
+        cfg.n_classes = 2;
+        let m = Transformer::new(&cfg, &mut rng);
+        let im = m.compile(MergePolicy::Merged);
+        let _ = super::DecodeEngine::new(&im, 4);
     }
 
     #[test]

@@ -112,6 +112,44 @@ impl CsrMatrix {
         }
     }
 
+    /// ys += xs · W for `n` packed input rows — the layer-major fused
+    /// decode kernel (`xs`: `[n, rows]` row-major, `ys`: `[n, cols]`,
+    /// seeded by the caller, accumulated into).
+    ///
+    /// The loop order is inverted relative to running [`Self::matvec`]
+    /// per row: the *stored entries* are the outer loops and the packed
+    /// activation rows the inner one, so each surviving weight is read
+    /// from memory **once per sweep** and applied to every live row
+    /// while it sits in a register — per-session stepping re-streams
+    /// the whole CSR payload `n` times. Per output element the
+    /// contributions still arrive in (input-row ascending, entry
+    /// ascending) order, i.e. exactly [`Self::matvec`]'s order, and the
+    /// `x == 0` skip is applied per packed row — so the fused result is
+    /// bit-identical to the per-row kernel, which the decode parity
+    /// tests rely on. Allocates nothing.
+    pub fn matvec_batch(&self, xs: &[f32], ys: &mut [f32], n: usize) {
+        assert_eq!(xs.len(), n * self.rows, "csr matvec_batch: xs len {} vs n*rows {}", xs.len(), n * self.rows);
+        assert_eq!(ys.len(), n * self.cols, "csr matvec_batch: ys len {} vs n*cols {}", ys.len(), n * self.cols);
+        for kk in 0..self.rows {
+            let lo = self.row_ptr[kk];
+            let hi = self.row_ptr[kk + 1];
+            if lo == hi {
+                continue;
+            }
+            for e in lo..hi {
+                let col = self.col_idx[e] as usize;
+                let w = self.vals[e];
+                for b in 0..n {
+                    let a = xs[b * self.rows + kk];
+                    if a == 0.0 {
+                        continue;
+                    }
+                    ys[b * self.cols + col] += a * w;
+                }
+            }
+        }
+    }
+
     /// Densify (parity tests).
     pub fn to_dense(&self) -> Tensor {
         let mut t = Tensor::zeros(&[self.rows, self.cols]);
@@ -179,6 +217,44 @@ mod tests {
             for (j, (a, b)) in y.iter().zip(&want.data).enumerate() {
                 let b = b + bias[j];
                 assert!((a - b).abs() < 1e-5 * (1.0 + a.abs()), "{a} vs {b}");
+            }
+        }
+    }
+
+    #[test]
+    fn matvec_batch_is_bit_identical_to_per_row_matvec() {
+        // The fused decode sweep relies on the inverted loop order
+        // producing *bit-identical* results to per-row stepping (same
+        // per-output contribution order), not merely close ones.
+        let mut rng = Rng::new(703);
+        for &(n, k, cols, keep) in &[
+            (1usize, 8usize, 8usize, 2usize),
+            (4, 32, 16, 4),
+            (7, 19, 23, 3),
+        ] {
+            let w = sparse_matrix(k, cols, keep, &mut rng);
+            let csr = CsrMatrix::from_dense(&w);
+            let mut xs = Tensor::randn(&[n, k], 0.7, &mut rng);
+            // Exercise the x == 0 skip on the packed path too.
+            for (i, v) in xs.data.iter_mut().enumerate() {
+                if i % 5 == 0 {
+                    *v = 0.0;
+                }
+            }
+            let bias: Vec<f32> = (0..cols).map(|i| (i as f32) * 0.01).collect();
+            let mut fused = vec![0.0f32; n * cols];
+            for r in 0..n {
+                fused[r * cols..(r + 1) * cols].copy_from_slice(&bias);
+            }
+            csr.matvec_batch(&xs.data, &mut fused, n);
+            for r in 0..n {
+                let mut want = bias.clone();
+                csr.matvec(&xs.data[r * k..(r + 1) * k], &mut want);
+                assert_eq!(
+                    &fused[r * cols..(r + 1) * cols],
+                    want.as_slice(),
+                    "row {r} diverged from per-row matvec"
+                );
             }
         }
     }

@@ -34,7 +34,7 @@ pub mod kernels;
 
 use crate::config::ModelCfg;
 use crate::nn::{Head, Transformer};
-use crate::tensor::linalg::{gemv_into, matmul, matmul_bt, par_matmul};
+use crate::tensor::linalg::{gemv_into, matmul, matmul_bt, matmul_into, par_matmul};
 use crate::tensor::Tensor;
 use kernels::CsrMatrix;
 
@@ -298,6 +298,57 @@ impl InferLinear {
         }
     }
 
+    /// ys = xs·W + b (+ side-path) for `n` **packed rows**, written into
+    /// a caller buffer — the layer-major fused decode kernel
+    /// ([`decode::DecodeEngine`] packs every live session's current row
+    /// into `xs` and advances them all with this one call per layer).
+    ///
+    /// `xs` is `[n, in_dim]` row-major, `ys` `[n, out_dim]`; each output
+    /// row is seeded with the bias and accumulated into (the
+    /// [`Self::forward_row_into`] convention, batched). Dense layers
+    /// contract all rows against **one read of W** via the serial
+    /// [`matmul_into`] — deliberately not
+    /// [`crate::tensor::linalg::par_matmul_into`]: thread
+    /// spawning allocates, and the sweep path's zero-allocation
+    /// steady-state guarantee is load-bearing (the per-session
+    /// alternative is serial gemvs anyway, so serial fused is never a
+    /// regression; worker-level parallelism comes from the coordinator
+    /// running one engine per worker). CSR layers go through the
+    /// entry-major [`CsrMatrix::matvec_batch`] gather, and the low-rank
+    /// side-path becomes two skinny gemms (`[n,d]×[d,r]`, then
+    /// `[n,r]×[r,out]`) instead of `n` gemv pairs. Row `r` of the
+    /// result is bit-identical to `forward_row_into(&xs[r·in..])` —
+    /// every kernel here runs the same per-row loops in the same order
+    /// — which is what lets the fused engine reproduce solo sessions
+    /// exactly. `lowrank` is the shared side-path scratch, resized to
+    /// `n × rank` (allocation-free once its capacity covers
+    /// `max_batch ×` the model's widest rank).
+    pub fn forward_rows_into(&self, xs: &[f32], ys: &mut [f32], n: usize, lowrank: &mut Vec<f32>) {
+        let (kd, od) = (self.in_dim(), self.out_dim());
+        debug_assert_eq!(xs.len(), n * kd, "forward_rows_into: xs len");
+        debug_assert_eq!(ys.len(), n * od, "forward_rows_into: ys len");
+        for r in 0..n {
+            ys[r * od..(r + 1) * od].copy_from_slice(&self.bias);
+        }
+        match &self.repr {
+            Repr::Dense(w) => matmul_into(xs, &w.data, ys, n, kd, od),
+            Repr::Csr(c) => c.matvec_batch(xs, ys, n),
+        }
+        if let Some((u, v, scale)) = &self.low {
+            let rank = u.cols();
+            lowrank.clear();
+            lowrank.resize(n * rank, 0.0);
+            matmul_into(xs, &u.data, lowrank, n, kd, rank);
+            // Scale x·U once (n·r values) instead of the n·r·out
+            // products: (scale·xU)·V ≡ scale·(xU·V) to float rounding —
+            // and the same order as the per-row kernel.
+            for z in lowrank.iter_mut() {
+                *z *= *scale;
+            }
+            matmul_into(lowrank, &v.data, ys, n, rank, v.cols());
+        }
+    }
+
     /// Rank of the low-rank side-path (0 when folded/absent) — lets the
     /// decode session size its shared `lowrank` scratch up front.
     pub(crate) fn lowrank_rank(&self) -> usize {
@@ -360,6 +411,20 @@ impl InferNorm {
         let istd = 1.0 / (var + self.eps).sqrt();
         for j in 0..d {
             out[j] = (x[j] - mean) * istd * self.gamma[j] + self.beta[j];
+        }
+    }
+
+    /// Layer norm over `n` packed rows into a caller buffer — the fused
+    /// decode form; row-for-row it *is* [`Self::apply_row_into`], so
+    /// fused/solo parity is structural.
+    pub(crate) fn apply_rows_into(&self, xs: &[f32], out: &mut [f32], n: usize) {
+        debug_assert_eq!(xs.len(), out.len(), "apply_rows_into: lengths");
+        if n == 0 {
+            return;
+        }
+        let d = xs.len() / n;
+        for r in 0..n {
+            self.apply_row_into(&xs[r * d..(r + 1) * d], &mut out[r * d..(r + 1) * d]);
         }
     }
 }
@@ -466,6 +531,33 @@ impl InferAdapter {
         }
         self.up.forward_row_into(mid, out, lowrank);
         for (o, &xv) in out.iter_mut().zip(x) {
+            *o += xv;
+        }
+    }
+
+    /// Adapter pass over `n` packed rows (`out = xs + up(gelu(down(xs)))`
+    /// per row) — the fused decode form, built on
+    /// [`InferLinear::forward_rows_into`] so both projections read their
+    /// weights once per sweep. `mid` is resized to `n ×` the bottleneck
+    /// width (allocation-free once its capacity covers
+    /// `max_batch ×` the model's widest adapter).
+    pub(crate) fn forward_rows_into(
+        &self,
+        xs: &[f32],
+        out: &mut [f32],
+        n: usize,
+        mid: &mut Vec<f32>,
+        lowrank: &mut Vec<f32>,
+    ) {
+        let w = self.down.out_dim();
+        mid.clear();
+        mid.resize(n * w, 0.0);
+        self.down.forward_rows_into(xs, mid, n, lowrank);
+        for v in mid.iter_mut() {
+            *v = crate::tensor::gelu_scalar(*v);
+        }
+        self.up.forward_rows_into(mid, out, n, lowrank);
+        for (o, &xv) in out.iter_mut().zip(xs) {
             *o += xv;
         }
     }
@@ -1002,6 +1094,51 @@ mod tests {
         assert_eq!(fc1.cols, f - 6);
         let got = im.forward(&ids, 1, 8);
         assert_close(&got, &want, 1e-4, "compact-ffn");
+    }
+
+    #[test]
+    fn forward_rows_is_bit_identical_to_forward_row_per_row() {
+        // The fused decode engine's correctness rests on the packed-rows
+        // kernels reproducing the per-row kernels *exactly* (assert_eq,
+        // not a tolerance), for dense, CSR, and the low-rank side-path.
+        let mut rng = Rng::new(908);
+        let cfg = tiny_cfg("classifier", false);
+        let mut m = Transformer::new(&cfg, &mut rng);
+        attach_dsee(
+            &mut m,
+            &DseeCfg {
+                rank: 4,
+                n_sparse: 16,
+                ..DseeCfg::default()
+            },
+            &mut rng,
+        );
+        randomize_dsee(&mut m, &mut rng);
+        {
+            let mut lins = m.all_linears_mut();
+            magnitude_prune_global(&mut lins, 0.5);
+        }
+        for policy in [MergePolicy::Merged, MergePolicy::Csr] {
+            let im = m.compile(policy);
+            let blk = &im.blocks[0];
+            for lin in [&blk.attn.wq, &blk.fc1, &blk.fc2] {
+                let (kd, od) = (lin.in_dim(), lin.out_dim());
+                let n = 5;
+                let xs = Tensor::randn(&[n, kd], 0.8, &mut rng);
+                let mut fused = vec![0.0f32; n * od];
+                let mut lowrank = Vec::new();
+                lin.forward_rows_into(&xs.data, &mut fused, n, &mut lowrank);
+                for r in 0..n {
+                    let want = lin.forward_row(&xs.data[r * kd..(r + 1) * kd]);
+                    assert_eq!(
+                        &fused[r * od..(r + 1) * od],
+                        want.as_slice(),
+                        "{}: packed row {r} diverged from forward_row",
+                        policy.label()
+                    );
+                }
+            }
+        }
     }
 
     #[test]

@@ -168,37 +168,59 @@ pub fn dot(a: &[f32], b: &[f32]) -> f32 {
 /// Multi-threaded matmul: splits A's rows across `threads` OS threads.
 /// Used by the trainer when matrices are large enough to amortize spawn
 /// cost (crossover measured in the §Perf pass at roughly 64k output
-/// elements).
+/// elements). Allocating wrapper over [`par_matmul_into`].
 pub fn par_matmul(a: &Tensor, b: &Tensor, threads: usize) -> Tensor {
     let (m, k) = (a.rows(), a.cols());
     let (k2, n) = (b.rows(), b.cols());
     assert_eq!(k, k2, "par_matmul: {:?} x {:?}", a.shape, b.shape);
-    if threads <= 1 || m * n < 65_536 {
-        return matmul(a, b);
-    }
     let mut c = Tensor::zeros(&[m, n]);
+    par_matmul_into(&a.data, &b.data, &mut c.data, m, k, n, threads);
+    c
+}
+
+/// Threaded raw-slice matmul accumulating into `c` — the batched-rows
+/// companion of [`matmul_into`] ([`par_matmul`] is now a thin
+/// allocating wrapper over it).
+///
+/// Same contract as [`matmul_into`]: the caller seeds `c` (zeros, or a
+/// bias row per output row) and the kernel **accumulates**. A's rows
+/// are split across `threads` scoped threads writing disjoint row
+/// chunks of `c`; below the measured 64k-output-element crossover (or
+/// at `threads <= 1`) it degrades to the serial kernel, which also
+/// keeps sub-crossover calls **allocation-free** (thread spawning
+/// allocates; the serial path does not). Note the layer-major fused
+/// decode sweep (`crate::infer::InferLinear::forward_rows_into`)
+/// deliberately calls the serial [`matmul_into`] instead of this, so
+/// its zero-allocation steady-state guarantee holds at *any* model
+/// size. Row results are bit-identical to the serial kernel regardless
+/// of the split: each output row is produced by one thread running the
+/// same i–k–j loop.
+pub fn par_matmul_into(
+    a: &[f32],
+    b: &[f32],
+    c: &mut [f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    threads: usize,
+) {
+    debug_assert_eq!(a.len(), m * k, "par_matmul_into: a len");
+    debug_assert_eq!(b.len(), k * n, "par_matmul_into: b len");
+    debug_assert_eq!(c.len(), m * n, "par_matmul_into: c len");
+    if threads <= 1 || m * n < 65_536 {
+        return matmul_into(a, b, c, m, k, n);
+    }
     let rows_per = m.div_ceil(threads);
-    let a_data = &a.data;
-    let b_data = &b.data;
     std::thread::scope(|scope| {
-        let mut out_chunks = c.data.chunks_mut(rows_per * n);
-        let mut handles = Vec::new();
-        for t in 0..threads {
+        for (t, chunk) in c.chunks_mut(rows_per * n).enumerate() {
             let lo = t * rows_per;
-            if lo >= m {
-                break;
-            }
-            let hi = ((t + 1) * rows_per).min(m);
-            let chunk = out_chunks.next().unwrap();
-            handles.push(scope.spawn(move || {
-                matmul_into(&a_data[lo * k..hi * k], b_data, chunk, hi - lo, k, n);
-            }));
-        }
-        for h in handles {
-            h.join().unwrap();
+            let rows = chunk.len() / n;
+            let a_chunk = &a[lo * k..(lo + rows) * k];
+            scope.spawn(move || {
+                matmul_into(a_chunk, b, chunk, rows, k, n);
+            });
         }
     });
-    c
 }
 
 #[cfg(test)]
@@ -297,6 +319,28 @@ mod tests {
         let serial = matmul(&a, &b);
         for threads in [2, 3, 8] {
             assert_close(&par_matmul(&a, &b, threads), &serial, 1e-5);
+        }
+    }
+
+    #[test]
+    fn par_matmul_into_accumulates_on_seed_above_and_below_crossover() {
+        let mut rng = Rng::new(9);
+        // 300×300 = 90k output elements clears the 64k threading
+        // crossover; 8×16 stays on the serial path. Both must honor the
+        // seed-then-accumulate contract.
+        for &(m, k, n) in &[(300usize, 64usize, 300usize), (8, 32, 16)] {
+            let a = Tensor::randn(&[m, k], 1.0, &mut rng);
+            let b = Tensor::randn(&[k, n], 1.0, &mut rng);
+            let bias: Vec<f32> = (0..n).map(|i| i as f32 * 0.01).collect();
+            let mut c = vec![0.0f32; m * n];
+            for r in 0..m {
+                c[r * n..(r + 1) * n].copy_from_slice(&bias);
+            }
+            par_matmul_into(&a.data, &b.data, &mut c, m, k, n, 4);
+            let want = matmul(&a, &b).add_bias(&bias);
+            for (x, y) in c.iter().zip(&want.data) {
+                assert!((x - y).abs() < 1e-4 * (1.0 + x.abs()), "{x} vs {y}");
+            }
         }
     }
 

@@ -23,10 +23,24 @@ pub fn std(xs: &[f64]) -> f64 {
 }
 
 /// Percentile via linear interpolation of the sorted data; `p` in [0,100].
+///
+/// NaN-safe: ordered with [`f64::total_cmp`] (NaN ranks above every
+/// finite value, so it surfaces in the tail percentiles) instead of a
+/// `partial_cmp(..).unwrap()` that panicked on the first NaN sample.
+/// Clones and sorts per call — callers reading several percentiles
+/// from one sample set should sort once (`total_cmp`) and use
+/// [`percentile_sorted`].
 pub fn percentile(xs: &[f64], p: f64) -> f64 {
-    assert!(!xs.is_empty(), "percentile of empty slice");
     let mut s = xs.to_vec();
-    s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    s.sort_by(|a, b| a.total_cmp(b));
+    percentile_sorted(&s, p)
+}
+
+/// [`percentile`] over data the caller has **already sorted ascending**
+/// (under [`f64::total_cmp`] for the NaN policy to hold) — skips the
+/// per-call clone + sort.
+pub fn percentile_sorted(s: &[f64], p: f64) -> f64 {
+    assert!(!s.is_empty(), "percentile of empty slice");
     let rank = (p / 100.0) * (s.len() - 1) as f64;
     let lo = rank.floor() as usize;
     let hi = rank.ceil() as usize;
@@ -170,6 +184,17 @@ mod tests {
         assert_eq!(percentile(&xs, 50.0), 3.0);
         assert_eq!(percentile(&xs, 100.0), 5.0);
         assert!((percentile(&xs, 25.0) - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn percentile_is_nan_safe() {
+        // Regression: the sort used partial_cmp(..).unwrap() and
+        // panicked on the first NaN sample. NaN now ranks above every
+        // finite value (total_cmp), so low/median percentiles of
+        // mostly-finite data stay finite and NaN surfaces in the tail.
+        let xs = [3.0, f64::NAN, 1.0, 2.0];
+        assert_eq!(percentile(&xs, 0.0), 1.0);
+        assert!(percentile(&xs, 100.0).is_nan());
     }
 
     #[test]

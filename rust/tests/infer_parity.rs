@@ -14,7 +14,7 @@ use dsee::data::vocab::EOS;
 use dsee::dsee::attach_dsee;
 use dsee::dsee::magnitude_prune::magnitude_prune_global;
 use dsee::dsee::structured::{prune_ffn, prune_heads};
-use dsee::infer::decode::argmax;
+use dsee::infer::decode::{argmax, DecodeEngine};
 use dsee::infer::MergePolicy;
 use dsee::nn::Transformer;
 use dsee::tensor::Tensor;
@@ -220,6 +220,85 @@ fn interleaved_sessions_match_one_at_a_time_all_policies() {
             "{}: interleaved sessions diverged from solo runs",
             policy.label()
         );
+    }
+}
+
+#[test]
+fn fused_engine_matches_solo_generation_all_policies() {
+    // The layer-major acceptance bar: tokens from engine slots swept
+    // together over a ragged mix of prompt lengths must match solo
+    // `generate_greedy` for every MergePolicy. Tokens are discrete, so
+    // the 1e-4 logits criterion collapses to exact equality — and the
+    // packed kernels are in fact row-for-row bit-identical to the
+    // per-row ones, so assert_eq is the honest bar (no cross-session
+    // bleed through the packed activation matrix).
+    let model = tuned_pruned_lm(false);
+    let cap = model.cfg.max_seq;
+    let ragged: Vec<Vec<u32>> = (0..6usize)
+        .map(|r| (0..2 + r * 2).map(|i| ((r * 43 + i * 19 + 3) % 256) as u32).collect())
+        .collect();
+    for policy in POLICIES {
+        let im = model.compile(policy);
+        let solo: Vec<Vec<u32>> = ragged
+            .iter()
+            .map(|p| im.generate_greedy(p, 9, cap).unwrap())
+            .collect();
+        let mut eng = DecodeEngine::new(&im, ragged.len());
+        let slots: Vec<usize> = ragged
+            .iter()
+            .map(|p| eng.admit(p, 9, cap).unwrap())
+            .collect();
+        let mut rounds = 0;
+        while slots.iter().any(|&s| !eng.is_done(s)) {
+            eng.sweep();
+            rounds += 1;
+            assert!(rounds < 100, "{}: engine never drained", policy.label());
+        }
+        let got: Vec<Vec<u32>> = slots.iter().map(|&s| eng.release(s)).collect();
+        assert_eq!(
+            got,
+            solo,
+            "{}: fused engine diverged from solo generation",
+            policy.label()
+        );
+    }
+}
+
+#[test]
+fn fused_engine_join_retire_mid_flight_keeps_parity_all_policies() {
+    // Sessions joining and retiring between sweeps (the serving
+    // coordinator's continuous-batching cycle) must not perturb any
+    // other session: drive an engine where a small-budget session
+    // retires early and a latecomer takes its slot mid-flight, and pin
+    // every continuation to its solo reference.
+    let model = tuned_pruned_lm(false);
+    let cap = model.cfg.max_seq;
+    for policy in POLICIES {
+        let im = model.compile(policy);
+        let a: Vec<u32> = (0..5).map(|i| ((i * 17 + 2) % 256) as u32).collect();
+        let b: Vec<u32> = (0..3).map(|i| ((i * 29 + 7) % 256) as u32).collect();
+        let late: Vec<u32> = (0..7).map(|i| ((i * 13 + 11) % 256) as u32).collect();
+        let want_a = im.generate_greedy(&a, 10, cap).unwrap();
+        let want_b = im.generate_greedy(&b, 2, cap).unwrap();
+        let want_late = im.generate_greedy(&late, 6, cap).unwrap();
+        let mut eng = DecodeEngine::new(&im, 2);
+        let sa = eng.admit(&a, 10, cap).unwrap();
+        let sb = eng.admit(&b, 2, cap).unwrap();
+        // Budget 2 retires b within 3 sweeps.
+        for _ in 0..3 {
+            eng.sweep();
+        }
+        assert!(eng.is_done(sb), "{}: tiny budget not retired", policy.label());
+        assert_eq!(eng.release(sb), want_b, "{}: early-retired session", policy.label());
+        let sl = eng.admit(&late, 6, cap).unwrap();
+        let mut rounds = 0;
+        while !eng.is_done(sa) || !eng.is_done(sl) {
+            eng.sweep();
+            rounds += 1;
+            assert!(rounds < 100, "{}: engine never drained", policy.label());
+        }
+        assert_eq!(eng.release(sa), want_a, "{}: long-lived session", policy.label());
+        assert_eq!(eng.release(sl), want_late, "{}: late-joining session", policy.label());
     }
 }
 
