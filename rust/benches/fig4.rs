@@ -46,7 +46,7 @@ fn main() {
     // Robust plotting range (the paper's figure likewise clips outliers):
     // ±p99 of |ΔW| rather than the absolute extreme.
     let mut mags: Vec<f64> = deltas.iter().map(|d| d.abs()).collect();
-    mags.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    mags.sort_by(|a, b| a.total_cmp(b)); // NaN-safe: NaN ranks into the clipped tail
     let absmax = mags[(mags.len() as f64 * 0.99) as usize];
     let (centers, counts) = histogram(&deltas, -absmax, absmax, 61);
 

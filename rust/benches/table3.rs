@@ -118,10 +118,22 @@ fn main() {
         "Table 3 FLOPs ¶ — BERT_BASE/STS-B inference FLOPs (paper: 3.78e14 dense, +0.69% LoRA, −34.6%/−37.4% structured)",
         &["model", "FLOPs", "vs LoRA"],
     );
-    flops.row(vec!["BERT_BASE dense".into(), format!("{dense:.4e}"), format!("{:+.2}%", (dense / lora - 1.0) * 100.0)]);
+    flops.row(vec![
+        "BERT_BASE dense".into(),
+        format!("{dense:.4e}"),
+        format!("{:+.2}%", (dense / lora - 1.0) * 100.0),
+    ]);
     flops.row(vec!["LoRA r=16".into(), format!("{lora:.4e}"), "+0.00%".into()]);
-    flops.row(vec!["DSEE 25%*".into(), format!("{d25:.4e}"), format!("{:+.2}%", (d25 / lora - 1.0) * 100.0)]);
-    flops.row(vec!["DSEE 33%*".into(), format!("{d33:.4e}"), format!("{:+.2}%", (d33 / lora - 1.0) * 100.0)]);
+    flops.row(vec![
+        "DSEE 25%*".into(),
+        format!("{d25:.4e}"),
+        format!("{:+.2}%", (d25 / lora - 1.0) * 100.0),
+    ]);
+    flops.row(vec![
+        "DSEE 33%*".into(),
+        format!("{d33:.4e}"),
+        format!("{:+.2}%", (d33 / lora - 1.0) * 100.0),
+    ]);
     flops.emit("table3_flops");
 
     // Shape check: DSEE trainable ≪ fine-tune, quality close.

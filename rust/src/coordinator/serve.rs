@@ -758,6 +758,7 @@ struct EngineSession {
     peak: usize,
 }
 
+// lint: no-panic
 fn worker_loop(
     backend: Arc<dyn Backend>,
     cfg: ServeCfg,
@@ -1017,33 +1018,30 @@ fn worker_loop(
             let fill = elive.len();
             let panic_msg: Option<String>;
             {
-                let eng = engine
-                    .as_mut()
-                    .expect("engine sessions live without an engine");
+                // lint: allow(no-panic) -- elive is non-empty, so the engine was built at admission
+                let eng = engine.as_mut().expect("engine sessions live without an engine");
                 match std::panic::catch_unwind(AssertUnwindSafe(|| eng.sweep())) {
                     Ok(()) => {
                         panic_msg = None;
-                        let mut i = 0;
-                        while i < elive.len() {
-                            elive[i].peak = elive[i].peak.max(fill);
-                            if eng.is_done(elive[i].slot) {
-                                let s = elive.swap_remove(i);
-                                let tokens = eng.release(s.slot);
-                                stats.requests += 1;
-                                stats.generated_tokens += tokens.len();
-                                let _ = s.reply.send(Response {
-                                    logits: Vec::new(),
-                                    tokens,
-                                    queue_us: s.queue_us,
-                                    compute_us: s.started.elapsed().as_micros() as u64,
-                                    batch_size: s.peak,
-                                    cached: false,
-                                    error: None,
-                                });
-                            } else {
-                                i += 1;
+                        elive.retain_mut(|s| {
+                            s.peak = s.peak.max(fill);
+                            if !eng.is_done(s.slot) {
+                                return true;
                             }
-                        }
+                            let tokens = eng.release(s.slot);
+                            stats.requests += 1;
+                            stats.generated_tokens += tokens.len();
+                            let _ = s.reply.send(Response {
+                                logits: Vec::new(),
+                                tokens,
+                                queue_us: s.queue_us,
+                                compute_us: s.started.elapsed().as_micros() as u64,
+                                batch_size: s.peak,
+                                cached: false,
+                                error: None,
+                            });
+                            false
+                        });
                     }
                     Err(panic) => panic_msg = Some(panic_message(panic)),
                 }
@@ -1087,17 +1085,11 @@ fn worker_loop(
         if !live.is_empty() {
             let sweep_start = Instant::now();
             let fill = live.len();
-            let mut i = 0;
-            while i < live.len() {
-                let stepped = {
-                    let s = &mut live[i];
-                    s.peak = s.peak.max(fill);
-                    std::panic::catch_unwind(AssertUnwindSafe(|| s.stream.step()))
-                };
-                match stepped {
-                    Ok(true) => i += 1,
+            live.retain_mut(|s| {
+                s.peak = s.peak.max(fill);
+                match std::panic::catch_unwind(AssertUnwindSafe(|| s.stream.step())) {
+                    Ok(true) => true,
                     Ok(false) => {
-                        let s = live.swap_remove(i);
                         let tokens = s.stream.tokens().to_vec();
                         stats.requests += 1;
                         stats.generated_tokens += tokens.len();
@@ -1110,9 +1102,9 @@ fn worker_loop(
                             cached: false,
                             error: None,
                         });
+                        false
                     }
                     Err(panic) => {
-                        let s = live.swap_remove(i);
                         stats.failed += 1;
                         let msg = format!("backend error: {}", panic_message(panic));
                         let _ = s.reply.send(Response {
@@ -1124,9 +1116,10 @@ fn worker_loop(
                             cached: false,
                             error: Some(msg),
                         });
+                        false
                     }
                 }
-            }
+            });
             // Each sweep is one batch of `fill` concurrently-stepped
             // sessions: folding it into the fill accounting makes
             // mean_batch() reflect decode concurrency, and feeding the

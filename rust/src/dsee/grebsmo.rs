@@ -77,8 +77,10 @@ fn hard_threshold(resid: &Tensor, c: usize) -> Vec<(usize, usize, f32)> {
     if c == 0 {
         return Vec::new();
     }
-    // Partial selection: nth_element-style.
-    entries.select_nth_unstable_by(c - 1, |a, b| b.0.partial_cmp(&a.0).unwrap());
+    // Partial selection: nth_element-style. total_cmp ranks NaN above every
+    // finite magnitude (the `magnitude_prune` convention), so a poisoned
+    // residual is kept deterministically instead of panicking the sort.
+    entries.select_nth_unstable_by(c - 1, |a, b| b.0.total_cmp(&a.0));
     entries[..c]
         .iter()
         .map(|&(_, flat)| (flat / n, flat % n, resid.data[flat]))
@@ -196,6 +198,23 @@ mod tests {
             let dec = grebsmo(&w, 2, c, 3, &mut rng);
             assert!(dec.sparse.len() <= c, "card {} > {c}", dec.sparse.len());
         }
+    }
+
+    #[test]
+    fn nan_weight_does_not_panic_and_is_kept() {
+        // Regression: hard_threshold sorted with partial_cmp(..).unwrap()
+        // and panicked on the first NaN residual entry. NaN now ranks
+        // largest (total_cmp), so the poisoned coordinate is selected into
+        // the sparse support deterministically.
+        let mut rng = Rng::new(106);
+        let mut w = Tensor::randn(&[10, 10], 1.0, &mut rng);
+        w.data[42] = f32::NAN;
+        let dec = grebsmo(&w, 2, 5, 3, &mut rng);
+        assert!(dec.sparse.len() <= 5);
+        assert!(
+            dec.sparse.iter().any(|&(i, j, _)| i * 10 + j == 42),
+            "NaN coordinate must rank largest and enter the support"
+        );
     }
 
     #[test]

@@ -65,7 +65,11 @@ pub fn select_omega(
             if n_sparse == 0 {
                 return Vec::new();
             }
-            entries.select_nth_unstable_by(n_sparse - 1, |a, b| b.0.partial_cmp(&a.0).unwrap());
+            // NaN-safe descending selection: total_cmp ranks NaN above every
+            // finite magnitude, so poisoned weights are selected (and thus
+            // visible downstream) instead of panicking the sort. Matches the
+            // `magnitude_prune` convention.
+            entries.select_nth_unstable_by(n_sparse - 1, |a, b| b.0.total_cmp(&a.0));
             entries[..n_sparse]
                 .iter()
                 .map(|&(_, flat)| (flat / n, flat % n))
@@ -77,7 +81,7 @@ pub fn select_omega(
             // only the support is kept (S₂ restarts from zero).
             let dec = grebsmo(w, rank, n_sparse.max(1) * 4, iters, rng);
             let mut entries = dec.sparse;
-            entries.sort_by(|a, b| b.2.abs().partial_cmp(&a.2.abs()).unwrap());
+            entries.sort_by(|a, b| b.2.abs().total_cmp(&a.2.abs()));
             entries.truncate(n_sparse);
             entries.into_iter().map(|(i, j, _)| (i, j)).collect()
         }
@@ -139,6 +143,37 @@ mod tests {
         let set: std::collections::HashSet<_> = om.into_iter().collect();
         let hits = spikes.iter().filter(|s| set.contains(s)).count();
         assert!(hits >= 3, "decompose found {hits}/4 spikes: {set:?}");
+    }
+
+    #[test]
+    fn magnitude_nan_ranks_largest_without_panicking() {
+        // Regression: the selection used partial_cmp(..).unwrap() and
+        // panicked on the first NaN weight. NaN now ranks above every
+        // finite magnitude (total_cmp), so a poisoned entry is selected
+        // deterministically instead of aborting the run.
+        let mut w = Tensor::zeros(&[4, 4]);
+        w.data[3] = f32::NAN; // (0, 3)
+        w.data[7] = 5.0; // (1, 3)
+        w.data[9] = -2.0; // (2, 1)
+        let mut rng = Rng::new(114);
+        let om = select_omega(&w, OmegaMethod::Magnitude, 2, 1, 1, &mut rng);
+        let set: std::collections::HashSet<_> = om.into_iter().collect();
+        assert!(set.contains(&(0, 3)), "NaN entry must rank largest: {set:?}");
+        assert!(set.contains(&(1, 3)), "largest finite entry kept: {set:?}");
+    }
+
+    #[test]
+    fn decompose_with_nan_weight_does_not_panic() {
+        // The Decompose ranking sort shares the same NaN policy; a NaN in W
+        // propagates through GreBsmo but must not panic the ordering.
+        let mut rng = Rng::new(115);
+        let mut w = Tensor::randn(&[8, 8], 1.0, &mut rng);
+        w.data[11] = f32::NAN;
+        let om = select_omega(&w, OmegaMethod::Decompose, 4, 2, 3, &mut rng);
+        assert!(om.len() <= 4);
+        for &(i, j) in &om {
+            assert!(i < 8 && j < 8);
+        }
     }
 
     #[test]

@@ -145,12 +145,10 @@ pub fn prune_heads(model: &mut Transformer, frac: f64) -> usize {
         // Rank heads by |gate| descending, keep the top keep_n, preserve
         // original head order for determinism.
         let mut order: Vec<usize> = (0..h).collect();
-        order.sort_by(|&a, &b| {
-            att.gates.data[b]
-                .abs()
-                .partial_cmp(&att.gates.data[a].abs())
-                .unwrap()
-        });
+        // NaN-safe descending rank: total_cmp puts a NaN gate above every
+        // finite one (the `magnitude_prune` convention), so a poisoned head
+        // is kept — and visible — instead of panicking the sort.
+        order.sort_by(|&a, &b| att.gates.data[b].abs().total_cmp(&att.gates.data[a].abs()));
         let mut kept: Vec<usize> = order[..keep_n].to_vec();
         kept.sort_unstable();
         removed += drop;
@@ -202,7 +200,7 @@ pub fn prune_ffn(model: &mut Transformer, frac: f64) -> usize {
                 (s, j)
             })
             .collect();
-        scores.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap());
+        scores.sort_by(|a, b| b.0.total_cmp(&a.0));
         let mut kept: Vec<usize> = scores[..keep_n].iter().map(|&(_, j)| j).collect();
         kept.sort_unstable();
         select_out_cols(&mut blk.ffn.fc1, &kept);
@@ -297,6 +295,47 @@ mod tests {
         let (y_pruned, _) = m.forward(&ids, 1, 6);
         for (a, b) in y_gated.data.iter().zip(&y_pruned.data) {
             assert!((a - b).abs() < 1e-5, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn nan_gate_ranks_largest_and_does_not_panic() {
+        // Regression: the head ranking used partial_cmp(..).unwrap() and
+        // panicked on the first NaN gate. NaN now ranks above every finite
+        // |gate| (total_cmp), so the poisoned head is deterministically
+        // kept and the weakest finite head is the one dropped.
+        let mut m = model();
+        for blk in &mut m.blocks {
+            blk.attn.gates = Tensor::from_vec(&[4], vec![f32::NAN, 0.5, 0.9, 1.1]);
+        }
+        let removed = prune_heads(&mut m, 0.25);
+        assert_eq!(removed, 2); // 1 per layer
+        for blk in &m.blocks {
+            assert_eq!(blk.attn.n_heads, 3);
+            // Head 0 (NaN) kept; head 1 (weakest finite, 0.5) dropped.
+            assert!(blk.attn.gates.data[0].is_nan());
+            assert!(!blk.attn.gates.data.contains(&0.5));
+        }
+    }
+
+    #[test]
+    fn nan_ffn_score_ranks_largest_and_does_not_panic() {
+        // Same policy for the FFN column-norm ranking: a NaN fan-in weight
+        // makes that unit's score NaN, which ranks largest and is kept.
+        let mut m = model();
+        let f = m.blocks[0].ffn.fc1.out_dim();
+        for blk in &mut m.blocks {
+            blk.ffn.fc1.w.data[5] = f32::NAN; // row 0, col 5 → unit 5 score NaN
+        }
+        let removed = prune_ffn(&mut m, 0.4);
+        assert_eq!(removed, 2 * 8);
+        assert_eq!(f, 20);
+        for blk in &m.blocks {
+            assert_eq!(blk.ffn.fc1.out_dim(), 12);
+            assert!(
+                blk.ffn.fc1.w.data.iter().any(|v| v.is_nan()),
+                "NaN-scored unit must survive the prune"
+            );
         }
     }
 

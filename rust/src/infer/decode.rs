@@ -637,6 +637,7 @@ impl<'m> DecodeSession<'m> {
     /// the LM logits for the new position. O(d²·L + S·d) instead of the
     /// full forward's O(S·d²·L), and **allocation-free**: every
     /// intermediate lands in the session's pre-sized scratch.
+    // lint: hot-path
     pub fn decode_step(&mut self, token: u32) -> &[f32] {
         let m = self.model;
         let d = m.tok.cols();
@@ -700,6 +701,7 @@ impl InferBlock {
     /// kernels against the session's scratch, so the step allocates
     /// nothing. `x` is the incoming row, `out` (same length) receives
     /// the block output.
+    // lint: hot-path
     fn decode_row_into(
         &self,
         x: &[f32],
@@ -870,6 +872,58 @@ impl EngineScratch {
             logits: vec![0.0; capacity * vocab],
         }
     }
+
+    /// Capacity invariants against the model's dims: every packed
+    /// buffer must hold `capacity` rows (and `scores` the widest
+    /// attention row any session can reach), or a sweep would slice out
+    /// of bounds. Only compiled under the `validate` feature.
+    #[cfg(feature = "validate")]
+    fn validate_capacity(&self, m: &InferenceModel, capacity: usize) {
+        let ModelDims {
+            d,
+            width,
+            ffn,
+            admid,
+            rank,
+            vocab,
+        } = model_dims(m);
+        let cap_rows = m.n_prefix() + m.cfg.max_seq;
+        assert!(
+            self.x.len() >= capacity * d
+                && self.x2.len() >= capacity * d
+                && self.h.len() >= capacity * d
+                && self.attn_out.len() >= capacity * d
+                && self.ffn_out.len() >= capacity * d,
+            "engine scratch: [capacity, d] buffers under-sized for capacity {capacity}, d {d}"
+        );
+        assert!(
+            self.q.len() >= capacity * width
+                && self.k.len() >= capacity * width
+                && self.v.len() >= capacity * width
+                && self.ctx.len() >= capacity * width,
+            "engine scratch: [capacity, width] buffers under-sized for capacity {capacity}, width {width}"
+        );
+        assert!(
+            self.hmid.len() >= capacity * ffn,
+            "engine scratch: FFN buffer under-sized for capacity {capacity}, ffn {ffn}"
+        );
+        assert!(
+            self.logits.len() >= capacity * vocab,
+            "engine scratch: logits buffer under-sized for capacity {capacity}, vocab {vocab}"
+        );
+        assert!(
+            self.scores.len() >= cap_rows,
+            "engine scratch: scores buffer shorter than the max attention rows {cap_rows}"
+        );
+        assert!(
+            self.adapter_mid.capacity() >= capacity * admid,
+            "engine scratch: adapter_mid capacity below capacity {capacity} x admid {admid}"
+        );
+        assert!(
+            self.lowrank.capacity() >= capacity * rank,
+            "engine scratch: lowrank capacity below capacity {capacity} x rank {rank}"
+        );
+    }
 }
 
 /// One admitted sequence inside a [`DecodeEngine`]: the session holds
@@ -953,7 +1007,12 @@ impl<'m> DecodeEngine<'m> {
     /// a full engine. Admission is the once-per-request path — it may
     /// allocate (prefill activations, the session, `out`'s reserve);
     /// the steady-state [`Self::sweep`] does not.
-    pub fn admit(&mut self, prompt: &[u32], max_new: usize, max_len: usize) -> crate::Result<usize> {
+    pub fn admit(
+        &mut self,
+        prompt: &[u32],
+        max_new: usize,
+        max_len: usize,
+    ) -> crate::Result<usize> {
         let cap = max_len.min(self.model.cfg.max_seq);
         anyhow::ensure!(!prompt.is_empty(), "engine admit: empty prompt");
         anyhow::ensure!(
@@ -976,7 +1035,45 @@ impl<'m> DecodeEngine<'m> {
             done: budget == 0,
         });
         self.n_live += 1;
+        #[cfg(feature = "validate")]
+        self.debug_validate();
         Ok(idx)
+    }
+
+    /// Structural invariants checked at the engine's entry points when
+    /// the `validate` feature is on — slot accounting, scratch capacity
+    /// against the model's dims, and K/V room plus token headroom for
+    /// every live, unfinished session. Compiled out entirely otherwise,
+    /// so the steady-state sweep stays assertion-free in release
+    /// serving builds.
+    #[cfg(feature = "validate")]
+    fn debug_validate(&self) {
+        let live = self.slots.iter().filter(|s| s.is_some()).count();
+        assert_eq!(
+            live, self.n_live,
+            "engine invariant: n_live ({}) disagrees with occupied slots ({live})",
+            self.n_live
+        );
+        self.scratch.validate_capacity(self.model, self.slots.len());
+        for slot in self.slots.iter().flatten() {
+            if slot.done {
+                continue;
+            }
+            let sess = &slot.sess;
+            assert!(
+                sess.tokens < sess.cap_tokens,
+                "engine invariant: unfinished session at its token capacity {}",
+                sess.cap_tokens
+            );
+            for kvl in &sess.kv {
+                let need = (sess.pos + 1) * kvl.width;
+                assert!(
+                    need <= kvl.k.len() && need <= kvl.v.len(),
+                    "engine invariant: session position {} has no K/V row left to append",
+                    sess.pos
+                );
+            }
+        }
     }
 
     /// Whether `slot` has finished (EOS or token budget). Vacant slots
@@ -1012,7 +1109,10 @@ impl<'m> DecodeEngine<'m> {
     /// all slots**, one fused kernel per layer over the packed rows,
     /// with only attention looping per session over its private K/V.
     /// Zero heap allocations in steady state.
+    // lint: hot-path
     pub fn sweep(&mut self) {
+        #[cfg(feature = "validate")]
+        self.debug_validate();
         // Greedy bookkeeping per slot (the GreedyStream::step prefix):
         // emit from current logits, mark EOS/budget, collect the rows
         // that actually step.
@@ -1029,12 +1129,14 @@ impl<'m> DecodeEngine<'m> {
                 slot.done = true;
                 continue;
             }
+            // lint: allow(hot-path-alloc) -- out is reserved to budget at admit; never reallocates
             slot.out.push(tok);
             if slot.out.len() >= slot.budget {
                 slot.done = true;
                 continue;
             }
             slot.pending = tok;
+            // lint: allow(hot-path-alloc) -- active is reserved to capacity; never reallocates
             self.active.push(i);
         }
         let n = self.active.len();
@@ -1089,6 +1191,7 @@ impl<'m> DecodeEngine<'m> {
 /// Projections and FFN run as one fused kernel over all rows; the K/V
 /// append and the attention reduction loop per session, because each
 /// session's cache is private and its position ragged.
+// lint: hot-path
 fn fused_block_rows<'m>(
     blk: &InferBlock,
     layer: usize,

@@ -44,13 +44,84 @@ impl CsrMatrix {
             }
             row_ptr.push(vals.len());
         }
-        CsrMatrix {
+        let csr = CsrMatrix {
             rows,
             cols,
             row_ptr,
             col_idx,
             vals,
+        };
+        #[cfg(feature = "validate")]
+        csr.validate()
+            .expect("CSR invariants must hold at construction");
+        csr
+    }
+
+    /// Structural invariants of the CSR layout: `row_ptr` monotone
+    /// non-decreasing from 0 to nnz with `rows + 1` entries, and per-row
+    /// `col_idx` in-bounds and strictly increasing (the order
+    /// [`Self::from_dense`] emits and [`Self::matvec_batch`]'s
+    /// bit-identical-contribution argument relies on).
+    ///
+    /// Checked automatically at construction under the `validate` feature;
+    /// the fields are public, so code that assembles a `CsrMatrix` by hand
+    /// (or loads one from disk in the future) should call this directly.
+    /// Returns an error rather than panicking so corrupted layouts can be
+    /// probed by property tests.
+    pub fn validate(&self) -> crate::Result<()> {
+        anyhow::ensure!(
+            self.row_ptr.len() == self.rows + 1,
+            "csr validate: row_ptr len {} vs rows+1 = {}",
+            self.row_ptr.len(),
+            self.rows + 1
+        );
+        anyhow::ensure!(
+            self.row_ptr[0] == 0,
+            "csr validate: row_ptr[0] = {} (want 0)",
+            self.row_ptr[0]
+        );
+        anyhow::ensure!(
+            self.col_idx.len() == self.vals.len(),
+            "csr validate: col_idx len {} vs vals len {}",
+            self.col_idx.len(),
+            self.vals.len()
+        );
+        anyhow::ensure!(
+            self.row_ptr[self.rows] == self.vals.len(),
+            "csr validate: row_ptr[last] = {} vs nnz {}",
+            self.row_ptr[self.rows],
+            self.vals.len()
+        );
+        for k in 0..self.rows {
+            let (lo, hi) = (self.row_ptr[k], self.row_ptr[k + 1]);
+            anyhow::ensure!(
+                lo <= hi,
+                "csr validate: row_ptr not monotone at row {k}: {lo} > {hi}"
+            );
+            anyhow::ensure!(
+                hi <= self.vals.len(),
+                "csr validate: row_ptr[{}] = {hi} exceeds nnz {}",
+                k + 1,
+                self.vals.len()
+            );
+            let mut prev: Option<u32> = None;
+            for e in lo..hi {
+                let c = self.col_idx[e];
+                anyhow::ensure!(
+                    (c as usize) < self.cols,
+                    "csr validate: col {c} out of bounds (cols {}) in row {k}",
+                    self.cols
+                );
+                if let Some(p) = prev {
+                    anyhow::ensure!(
+                        c > p,
+                        "csr validate: col_idx not strictly increasing in row {k}: {p} then {c}"
+                    );
+                }
+                prev = Some(c);
+            }
         }
+        Ok(())
     }
 
     /// Stored (non-zero) entry count.
@@ -98,6 +169,7 @@ impl CsrMatrix {
     /// proportional to nnz, not rows·cols. **Accumulates** into `y`
     /// (callers seed it with the bias), and allocates nothing — the
     /// zero-allocation decode step depends on that.
+    // lint: hot-path
     #[inline]
     pub fn matvec(&self, x: &[f32], y: &mut [f32]) {
         assert_eq!(x.len(), self.rows, "csr matvec: x len {} vs rows {}", x.len(), self.rows);
@@ -127,9 +199,22 @@ impl CsrMatrix {
     /// `x == 0` skip is applied per packed row — so the fused result is
     /// bit-identical to the per-row kernel, which the decode parity
     /// tests rely on. Allocates nothing.
+    // lint: hot-path
     pub fn matvec_batch(&self, xs: &[f32], ys: &mut [f32], n: usize) {
-        assert_eq!(xs.len(), n * self.rows, "csr matvec_batch: xs len {} vs n*rows {}", xs.len(), n * self.rows);
-        assert_eq!(ys.len(), n * self.cols, "csr matvec_batch: ys len {} vs n*cols {}", ys.len(), n * self.cols);
+        assert_eq!(
+            xs.len(),
+            n * self.rows,
+            "csr matvec_batch: xs len {} vs n*rows {}",
+            xs.len(),
+            n * self.rows
+        );
+        assert_eq!(
+            ys.len(),
+            n * self.cols,
+            "csr matvec_batch: ys len {} vs n*cols {}",
+            ys.len(),
+            n * self.cols
+        );
         for kk in 0..self.rows {
             let lo = self.row_ptr[kk];
             let hi = self.row_ptr[kk + 1];
@@ -257,6 +342,37 @@ mod tests {
                 );
             }
         }
+    }
+
+    #[test]
+    fn validate_accepts_constructed_and_rejects_corrupted() {
+        let mut rng = Rng::new(704);
+        let w = sparse_matrix(9, 11, 3, &mut rng);
+        let csr = CsrMatrix::from_dense(&w);
+        assert!(csr.validate().is_ok());
+
+        // Out-of-bounds column.
+        let mut bad = csr.clone();
+        bad.col_idx[0] = bad.cols as u32;
+        assert!(bad.validate().is_err(), "out-of-bounds col must fail");
+
+        // Shuffled (non-increasing) columns within a row.
+        let mut bad = csr.clone();
+        let row = (0..bad.rows)
+            .find(|&k| bad.row_ptr[k + 1] - bad.row_ptr[k] >= 2)
+            .expect("test matrix has a row with >= 2 entries");
+        bad.col_idx.swap(bad.row_ptr[row], bad.row_ptr[row] + 1);
+        assert!(bad.validate().is_err(), "shuffled col_idx must fail");
+
+        // Non-monotone row_ptr.
+        let mut bad = csr.clone();
+        bad.row_ptr[1] = bad.row_ptr[2] + 1;
+        assert!(bad.validate().is_err(), "non-monotone row_ptr must fail");
+
+        // Truncated row_ptr.
+        let mut bad = csr;
+        bad.row_ptr.pop();
+        assert!(bad.validate().is_err(), "short row_ptr must fail");
     }
 
     #[test]

@@ -277,6 +277,7 @@ impl InferLinear {
     /// that side-path: it is resized to this layer's rank, which never
     /// allocates once its capacity has grown to the model's maximum
     /// rank (a [`decode::DecodeSession`] pre-sizes it at creation).
+    // lint: hot-path
     pub fn forward_row_into(&self, x: &[f32], y: &mut [f32], lowrank: &mut Vec<f32>) {
         debug_assert_eq!(y.len(), self.out_dim(), "forward_row_into: y len");
         y.copy_from_slice(&self.bias);
@@ -296,6 +297,8 @@ impl InferLinear {
             }
             gemv_into(lowrank, &v.data, y, v.rows(), v.cols());
         }
+        #[cfg(feature = "validate")]
+        crate::util::validate::check_finite("InferLinear::forward_row_into", y);
     }
 
     /// ys = xs·W + b (+ side-path) for `n` **packed rows**, written into
@@ -323,6 +326,7 @@ impl InferLinear {
     /// exactly. `lowrank` is the shared side-path scratch, resized to
     /// `n × rank` (allocation-free once its capacity covers
     /// `max_batch ×` the model's widest rank).
+    // lint: hot-path
     pub fn forward_rows_into(&self, xs: &[f32], ys: &mut [f32], n: usize, lowrank: &mut Vec<f32>) {
         let (kd, od) = (self.in_dim(), self.out_dim());
         debug_assert_eq!(xs.len(), n * kd, "forward_rows_into: xs len");
@@ -347,6 +351,8 @@ impl InferLinear {
             }
             matmul_into(lowrank, &v.data, ys, n, rank, v.cols());
         }
+        #[cfg(feature = "validate")]
+        crate::util::validate::check_finite("InferLinear::forward_rows_into", ys);
     }
 
     /// Rank of the low-rank side-path (0 when folded/absent) — lets the
@@ -403,6 +409,7 @@ impl InferNorm {
     /// x.len()`, `out` fully overwritten) — the zero-allocation decode
     /// kernel. Same arithmetic order as [`Self::apply`] so decode-path
     /// parity holds to float rounding.
+    // lint: hot-path
     pub(crate) fn apply_row_into(&self, x: &[f32], out: &mut [f32]) {
         let d = x.len();
         debug_assert_eq!(out.len(), d, "apply_row_into: out len");
@@ -417,6 +424,7 @@ impl InferNorm {
     /// Layer norm over `n` packed rows into a caller buffer — the fused
     /// decode form; row-for-row it *is* [`Self::apply_row_into`], so
     /// fused/solo parity is structural.
+    // lint: hot-path
     pub(crate) fn apply_rows_into(&self, xs: &[f32], out: &mut [f32], n: usize) {
         debug_assert_eq!(xs.len(), out.len(), "apply_rows_into: lengths");
         if n == 0 {
@@ -516,6 +524,7 @@ impl InferAdapter {
     /// free once its capacity covers the model's widest adapter),
     /// `lowrank` the shared side-path scratch of
     /// [`InferLinear::forward_row_into`].
+    // lint: hot-path
     pub(crate) fn forward_row_into(
         &self,
         x: &[f32],
@@ -541,6 +550,7 @@ impl InferAdapter {
     /// weights once per sweep. `mid` is resized to `n ×` the bottleneck
     /// width (allocation-free once its capacity covers
     /// `max_batch ×` the model's widest adapter).
+    // lint: hot-path
     pub(crate) fn forward_rows_into(
         &self,
         xs: &[f32],

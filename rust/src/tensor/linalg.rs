@@ -27,6 +27,7 @@ pub fn matmul(a: &Tensor, b: &Tensor) -> Tensor {
 }
 
 /// Raw i-k-j kernel writing into `c` (must be zeroed by caller).
+// lint: hot-path
 pub fn matmul_into(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: usize) {
     for i in 0..m {
         let arow = &a[i * k..(i + 1) * k];
@@ -69,6 +70,7 @@ pub fn matmul_into(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: u
 /// buffer, the kernel accumulates, and nothing on the per-token path
 /// allocates — `InferLinear::forward_row_into` and friends are built
 /// on exactly this contract.
+// lint: hot-path
 #[inline]
 pub fn gemv_into(x: &[f32], w: &[f32], y: &mut [f32], k: usize, n: usize) {
     debug_assert_eq!(x.len(), k, "gemv_into: x len vs k");
@@ -146,6 +148,7 @@ pub fn matmul_at(a: &Tensor, b: &Tensor) -> Tensor {
 }
 
 /// Dot product with 4-way accumulator splitting (keeps FP pipelines full).
+// lint: hot-path
 #[inline]
 pub fn dot(a: &[f32], b: &[f32]) -> f32 {
     debug_assert_eq!(a.len(), b.len());
@@ -195,6 +198,7 @@ pub fn par_matmul(a: &Tensor, b: &Tensor, threads: usize) -> Tensor {
 /// size. Row results are bit-identical to the serial kernel regardless
 /// of the split: each output row is produced by one thread running the
 /// same i–k–j loop.
+// lint: hot-path
 pub fn par_matmul_into(
     a: &[f32],
     b: &[f32],

@@ -212,7 +212,12 @@ impl Trainer {
     /// causal mask kept trailing `PAD` out of each row's logits);
     /// per-row sessions make row independence structural rather than
     /// mask-dependent.
-    pub fn greedy_decode(&self, inputs: &[Vec<u32>], max_new: usize, seq_len: usize) -> Vec<Vec<u32>> {
+    pub fn greedy_decode(
+        &self,
+        inputs: &[Vec<u32>],
+        max_new: usize,
+        seq_len: usize,
+    ) -> Vec<Vec<u32>> {
         let compiled = self.model.compile(crate::infer::MergePolicy::Merged);
         inputs
             .iter()
@@ -249,7 +254,12 @@ impl Trainer {
     }
 
     /// Swap in a fresh task head of the right kind (keeps body weights).
-    pub fn set_task_head(model: &mut Transformer, is_regression: bool, n_classes: usize, rng: &mut Rng) {
+    pub fn set_task_head(
+        model: &mut Transformer,
+        is_regression: bool,
+        n_classes: usize,
+        rng: &mut Rng,
+    ) {
         use crate::nn::linear::Linear;
         let d = model.cfg.d_model;
         model.head = if is_regression {

@@ -12,6 +12,8 @@ pub mod cli;
 pub mod logging;
 pub mod stats;
 pub mod prop;
+#[cfg(feature = "validate")]
+pub mod validate;
 
 pub use rng::Rng;
 pub use json::Json;

@@ -115,10 +115,10 @@ pub fn polyfit2(xs: &[f64], ys: &[f64]) -> (f64, f64, f64) {
 /// Gaussian elimination with partial pivoting for a 3×3 system.
 fn solve3(mut m: [[f64; 3]; 3], mut b: [f64; 3]) -> Option<[f64; 3]> {
     for col in 0..3 {
-        // Pivot.
-        let piv = (col..3).max_by(|&i, &j| {
-            m[i][col].abs().partial_cmp(&m[j][col].abs()).unwrap()
-        })?;
+        // Pivot. total_cmp ranks NaN above every finite value, so a
+        // NaN-poisoned system degrades to NaN coefficients deterministically
+        // instead of panicking the comparator (same policy as `percentile`).
+        let piv = (col..3).max_by(|&i, &j| m[i][col].abs().total_cmp(&m[j][col].abs()))?;
         if m[piv][col].abs() < 1e-12 {
             return None;
         }
@@ -214,6 +214,19 @@ mod tests {
         assert!((a - 1.5).abs() < 1e-8, "a={a}");
         assert!((b + 0.7).abs() < 1e-8, "b={b}");
         assert!((c - 0.2).abs() < 1e-8, "c={c}");
+    }
+
+    #[test]
+    fn quadratic_fit_with_nan_sample_does_not_panic() {
+        // Regression: solve3's pivot selection used
+        // partial_cmp(..).unwrap() and panicked when a NaN sample reached
+        // the normal equations. NaN now ranks largest (total_cmp): the
+        // pivot is chosen deterministically and the fit degrades to NaN
+        // coefficients instead of aborting the bench harness.
+        let xs = [0.0, 1.0, f64::NAN, 3.0, 4.0];
+        let ys = [1.0, 2.0, 3.0, 4.0, 5.0];
+        let (a, b, c) = polyfit2(&xs, &ys);
+        assert!(a.is_nan() && b.is_nan() && c.is_nan(), "({a}, {b}, {c})");
     }
 
     #[test]

@@ -1,0 +1,42 @@
+//! Runtime invariant helpers, compiled only under the `validate`
+//! cargo feature (see docs/INVARIANTS.md). Call sites gate themselves
+//! with `#[cfg(feature = "validate")]`, so with the feature off (the
+//! default) neither the checks nor this module exist in the binary —
+//! the hot paths stay exactly as fast as before.
+
+/// Panic if any element of `xs` is non-finite, naming the kernel
+/// boundary that produced it. Used at the `_into` kernel outputs so a
+/// NaN/Inf is caught where it is *born* (one layer, one projection)
+/// instead of surfacing tokens later as a garbage argmax.
+#[track_caller]
+pub fn check_finite(what: &str, xs: &[f32]) {
+    for (i, &x) in xs.iter().enumerate() {
+        assert!(
+            x.is_finite(),
+            "validate: {what} produced a non-finite value {x} at index {i} (len {})",
+            xs.len()
+        );
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::check_finite;
+
+    #[test]
+    fn finite_rows_pass() {
+        check_finite("test", &[0.0, -1.5, f32::MAX, f32::MIN_POSITIVE]);
+    }
+
+    #[test]
+    #[should_panic(expected = "non-finite")]
+    fn nan_is_caught() {
+        check_finite("test", &[0.0, f32::NAN]);
+    }
+
+    #[test]
+    #[should_panic(expected = "non-finite")]
+    fn infinity_is_caught() {
+        check_finite("test", &[f32::INFINITY]);
+    }
+}

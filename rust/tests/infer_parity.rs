@@ -106,7 +106,12 @@ fn tuned_pruned_lm(with_prefix: bool) -> Transformer {
 
 /// Greedy decode by re-running the full training-path forward every
 /// step — the O(S²) reference the KV-cached session must reproduce.
-fn full_recompute_greedy(model: &Transformer, prompt: &[u32], max_new: usize, cap: usize) -> Vec<u32> {
+fn full_recompute_greedy(
+    model: &Transformer,
+    prompt: &[u32],
+    max_new: usize,
+    cap: usize,
+) -> Vec<u32> {
     let p = model.n_prefix();
     let v = model.cfg.vocab;
     let mut seqv = prompt.to_vec();

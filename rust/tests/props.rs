@@ -272,3 +272,59 @@ fn prop_grid_scheduler_returns_every_job_in_order() {
         },
     );
 }
+
+#[test]
+fn prop_csr_validation_rejects_corruption() {
+    // For any matrix shape, a CSR built by `from_dense` passes its own
+    // structural validation, and each class of corruption — an
+    // out-of-bounds column, unsorted columns within a row, a
+    // non-monotone `row_ptr`, a truncated `row_ptr` — is rejected.
+    use dsee::infer::kernels::CsrMatrix;
+    check(
+        &Config {
+            cases: 24,
+            seed: 0xC5A0,
+            max_shrink: 20,
+        },
+        &PairOf(UsizeIn(2, 6), UsizeIn(2, 8)),
+        |&(rows, cols)| {
+            let mut rng = Rng::new(0xC5A0 ^ ((rows as u64) << 8) ^ cols as u64);
+            let mut w = Tensor::randn(&[rows, cols], 1.0, &mut rng);
+            // Every entry nonzero, so every row keeps all `cols >= 2`
+            // columns and each corruption below has entries to corrupt.
+            for v in w.data.iter_mut() {
+                if *v == 0.0 {
+                    *v = 1.0;
+                }
+            }
+            let csr = CsrMatrix::from_dense(&w);
+            csr.validate()
+                .map_err(|e| format!("pristine CSR rejected: {e}"))?;
+
+            let mut bad = csr.clone();
+            bad.col_idx[0] = bad.cols as u32;
+            if bad.validate().is_ok() {
+                return Err("out-of-bounds col_idx accepted".into());
+            }
+
+            let mut bad = csr.clone();
+            bad.col_idx.swap(0, 1);
+            if bad.validate().is_ok() {
+                return Err("unsorted col_idx accepted".into());
+            }
+
+            let mut bad = csr.clone();
+            bad.row_ptr[1] = bad.row_ptr[2] + 1;
+            if bad.validate().is_ok() {
+                return Err("non-monotone row_ptr accepted".into());
+            }
+
+            let mut bad = csr;
+            bad.row_ptr.pop();
+            if bad.validate().is_ok() {
+                return Err("truncated row_ptr accepted".into());
+            }
+            Ok(())
+        },
+    );
+}

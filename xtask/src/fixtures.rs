@@ -1,0 +1,97 @@
+//! Embedded fixture snippets proving each rule fires on known-bad code,
+//! stays quiet on known-good code, and honors the waiver syntax.
+//!
+//! `cargo xtask lint --fixture <name>` lints one of these exactly like a
+//! real file (bad fixtures exit non-zero); `cargo xtask lint --self-test`
+//! asserts every expectation below. The snippets only need to *lex* like
+//! Rust — they are never compiled.
+
+/// (name, source, expected rule) — `Some(rule)` means the fixture must
+/// produce at least one finding of that rule; `None` means it must be
+/// clean.
+pub const FIXTURES: [(&str, &str, Option<&str>); 7] = [
+    (
+        "bad-float-sort",
+        r#"
+pub fn rank(xs: &mut [f32]) {
+    xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+}
+"#,
+        Some(super::rules::RULE_FLOAT_SORT),
+    ),
+    (
+        "good-float-sort",
+        r#"
+/// Ascending; NaN ranks largest. The word partial_cmp in this doc comment
+/// (and in the string below) must not trip the scanner.
+pub fn rank(xs: &mut [f32]) {
+    let _tag = "partial_cmp";
+    xs.sort_by(|a, b| a.total_cmp(b));
+}
+"#,
+        None,
+    ),
+    (
+        "bad-hot-path",
+        r#"
+// lint: hot-path
+pub fn axpy(y: &mut [f32], x: &[f32], a: f32) {
+    let tmp = x.to_vec();
+    for (yi, t) in y.iter_mut().zip(tmp) {
+        *yi += a * t;
+    }
+}
+"#,
+        Some(super::rules::RULE_HOT_PATH_ALLOC),
+    ),
+    (
+        "good-hot-path",
+        r#"
+// lint: hot-path
+pub fn axpy_into(y: &mut [f32], x: &[f32], a: f32, scratch: &mut Vec<f32>) {
+    scratch.clear();
+    scratch.resize(x.len(), 0.0);
+    scratch.copy_from_slice(x);
+    // lint: allow(hot-path-alloc) -- y is pre-reserved to x.len() at admission
+    for &v in x { y.push(a * v); }
+}
+"#,
+        None,
+    ),
+    (
+        "bad-no-panic",
+        r#"
+// lint: no-panic
+fn schedule(q: &mut Vec<usize>) -> usize {
+    let first = q[0];
+    q.pop().unwrap() + first
+}
+"#,
+        Some(super::rules::RULE_NO_PANIC),
+    ),
+    (
+        "good-no-panic",
+        r#"
+// lint: no-panic
+fn schedule(q: &mut Vec<usize>) -> usize {
+    let first = q.first().copied().unwrap_or(0);
+    let engine = q.last().copied();
+    // lint: allow(no-panic) -- invariant: queue non-empty while sessions live
+    let last = engine.expect("queue non-empty");
+    first + last
+}
+"#,
+        None,
+    ),
+    (
+        "bad-waiver-no-reason",
+        r#"
+// lint: hot-path
+fn hot(out: &mut Vec<f32>) {
+    // lint: allow(hot-path-alloc)
+    out.push(0.0);
+}
+"#,
+        Some(super::rules::RULE_DIRECTIVE),
+    ),
+];

@@ -1,0 +1,303 @@
+//! A minimal Rust token scanner for `pallas-lint`.
+//!
+//! Deliberately *not* a full parser (no `syn` offline): it only needs to
+//! (a) strip comments / strings / char literals so rule matching never
+//! fires on prose, (b) produce identifier and punctuation tokens with line
+//! numbers, and (c) surface line comments so `// lint: …` directives can be
+//! parsed. Nested block comments, raw strings (`r#"…"#`), byte strings,
+//! and lifetimes are all handled; macro-expanded code is out of scope.
+
+/// One lexed token. `is_ident` covers keywords too (`fn`, `return`, …);
+/// punctuation is emitted one character at a time (`::` is two tokens).
+#[derive(Debug, Clone)]
+pub struct Tok {
+    pub text: String,
+    pub line: usize,
+    pub is_ident: bool,
+}
+
+/// A `//` line comment (doc comments included), with its full text.
+#[derive(Debug, Clone)]
+pub struct Comment {
+    pub text: String,
+    pub line: usize,
+}
+
+fn is_ident_start(c: char) -> bool {
+    c.is_alphabetic() || c == '_'
+}
+
+fn is_ident_continue(c: char) -> bool {
+    c.is_alphanumeric() || c == '_'
+}
+
+/// Lex `src` into (tokens, line comments). Lines are 1-based.
+pub fn lex(src: &str) -> (Vec<Tok>, Vec<Comment>) {
+    let b: Vec<char> = src.chars().collect();
+    let n = b.len();
+    let mut toks = Vec::new();
+    let mut comments = Vec::new();
+    let mut line = 1usize;
+    let mut i = 0usize;
+    while i < n {
+        let c = b[i];
+        if c == '\n' {
+            line += 1;
+            i += 1;
+            continue;
+        }
+        if c.is_whitespace() {
+            i += 1;
+            continue;
+        }
+        // Line comment (also doc comments `///`, `//!`).
+        if c == '/' && i + 1 < n && b[i + 1] == '/' {
+            let start = i;
+            while i < n && b[i] != '\n' {
+                i += 1;
+            }
+            comments.push(Comment {
+                text: b[start..i].iter().collect(),
+                line,
+            });
+            continue;
+        }
+        // Block comment, nested per Rust rules.
+        if c == '/' && i + 1 < n && b[i + 1] == '*' {
+            let mut depth = 1usize;
+            i += 2;
+            while i < n && depth > 0 {
+                if b[i] == '/' && i + 1 < n && b[i + 1] == '*' {
+                    depth += 1;
+                    i += 2;
+                } else if b[i] == '*' && i + 1 < n && b[i + 1] == '/' {
+                    depth -= 1;
+                    i += 2;
+                } else {
+                    if b[i] == '\n' {
+                        line += 1;
+                    }
+                    i += 1;
+                }
+            }
+            continue;
+        }
+        // String literal (escape-aware).
+        if c == '"' {
+            i += 1;
+            while i < n {
+                if b[i] == '\\' {
+                    i += 2;
+                } else if b[i] == '"' {
+                    i += 1;
+                    break;
+                } else {
+                    if b[i] == '\n' {
+                        line += 1;
+                    }
+                    i += 1;
+                }
+            }
+            continue;
+        }
+        // Char literal vs lifetime.
+        if c == '\'' {
+            let next = b.get(i + 1).copied();
+            let after = b.get(i + 2).copied();
+            let is_char = match next {
+                Some('\\') => true,
+                Some(x) if is_ident_start(x) => after == Some('\''),
+                Some(_) => true, // '3', '*', …
+                None => false,
+            };
+            if is_char {
+                i += 1;
+                while i < n {
+                    if b[i] == '\\' {
+                        i += 2;
+                    } else if b[i] == '\'' {
+                        i += 1;
+                        break;
+                    } else {
+                        i += 1;
+                    }
+                }
+            } else {
+                // Lifetime: consume the quote and the identifier.
+                i += 1;
+                while i < n && is_ident_continue(b[i]) {
+                    i += 1;
+                }
+            }
+            continue;
+        }
+        // Identifier / keyword — with raw- and byte-string prefixes.
+        if is_ident_start(c) {
+            let start = i;
+            while i < n && is_ident_continue(b[i]) {
+                i += 1;
+            }
+            let text: String = b[start..i].iter().collect();
+            let next = b.get(i).copied();
+            if (text == "r" || text == "br" || text == "rb")
+                && matches!(next, Some('"') | Some('#'))
+            {
+                // Raw string: r##"…"## — match the opening hash count.
+                let mut hashes = 0usize;
+                while i < n && b[i] == '#' {
+                    hashes += 1;
+                    i += 1;
+                }
+                if i < n && b[i] == '"' {
+                    i += 1;
+                    'raw: while i < n {
+                        if b[i] == '\n' {
+                            line += 1;
+                        }
+                        if b[i] == '"' {
+                            let mut k = 0usize;
+                            while k < hashes && i + 1 + k < n && b[i + 1 + k] == '#' {
+                                k += 1;
+                            }
+                            if k == hashes {
+                                i += 1 + hashes;
+                                break 'raw;
+                            }
+                        }
+                        i += 1;
+                    }
+                } else {
+                    // `r#ident` raw identifier: emit the identifier.
+                    let rs = i;
+                    while i < n && is_ident_continue(b[i]) {
+                        i += 1;
+                    }
+                    toks.push(Tok {
+                        text: b[rs..i].iter().collect(),
+                        line,
+                        is_ident: true,
+                    });
+                }
+                continue;
+            }
+            if text == "b" && next == Some('"') {
+                // Byte string: same escape rules as a normal string.
+                i += 1;
+                while i < n {
+                    if b[i] == '\\' {
+                        i += 2;
+                    } else if b[i] == '"' {
+                        i += 1;
+                        break;
+                    } else {
+                        if b[i] == '\n' {
+                            line += 1;
+                        }
+                        i += 1;
+                    }
+                }
+                continue;
+            }
+            toks.push(Tok {
+                text,
+                line,
+                is_ident: true,
+            });
+            continue;
+        }
+        // Number literal: digits, suffixes, and `.` only when followed by a
+        // digit (so `0..3` and `1.max(2)` tokenize sanely).
+        if c.is_ascii_digit() {
+            let start = i;
+            i += 1;
+            while i < n {
+                if is_ident_continue(b[i]) {
+                    i += 1;
+                } else if b[i] == '.' && i + 1 < n && b[i + 1].is_ascii_digit() {
+                    i += 1;
+                } else {
+                    break;
+                }
+            }
+            toks.push(Tok {
+                text: b[start..i].iter().collect(),
+                line,
+                is_ident: false,
+            });
+            continue;
+        }
+        // Single-character punctuation.
+        toks.push(Tok {
+            text: c.to_string(),
+            line,
+            is_ident: false,
+        });
+        i += 1;
+    }
+    (toks, comments)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn idents(src: &str) -> Vec<String> {
+        lex(src)
+            .0
+            .into_iter()
+            .filter(|t| t.is_ident)
+            .map(|t| t.text)
+            .collect()
+    }
+
+    #[test]
+    fn strings_and_comments_are_stripped() {
+        let src = r##"
+            // partial_cmp in a comment
+            /* partial_cmp in /* a nested */ block */
+            let s = "partial_cmp in a string";
+            let r = r#"partial_cmp raw "quoted" here"#;
+            let b = b"partial_cmp bytes";
+            real_ident();
+        "##;
+        let ids = idents(src);
+        assert!(!ids.contains(&"partial_cmp".to_string()), "{ids:?}");
+        assert!(ids.contains(&"real_ident".to_string()));
+    }
+
+    #[test]
+    fn comments_are_captured_with_lines() {
+        let src = "fn a() {}\n// lint: hot-path\nfn b() {}\n";
+        let (_, comments) = lex(src);
+        assert_eq!(comments.len(), 1);
+        assert_eq!(comments[0].line, 2);
+        assert!(comments[0].text.contains("lint: hot-path"));
+    }
+
+    #[test]
+    fn lifetimes_and_chars_do_not_eat_code() {
+        let src = "fn f<'a>(x: &'a str) -> char { let c = '\\''; let d = 'x'; c }";
+        let ids = idents(src);
+        assert!(ids.contains(&"str".to_string()));
+        // The lifetime ident is consumed silently; the trailing `c` survives.
+        assert_eq!(ids.iter().filter(|s| s.as_str() == "c").count(), 2);
+    }
+
+    #[test]
+    fn ranges_and_float_methods_tokenize() {
+        let src = "for i in 0..3 { y[i] = x.total_cmp(&z); }";
+        let ids = idents(src);
+        assert!(ids.contains(&"total_cmp".to_string()));
+        let (toks, _) = lex(src);
+        let dots = toks.iter().filter(|t| t.text == ".").count();
+        assert_eq!(dots, 3, "two range dots + one method dot");
+    }
+
+    #[test]
+    fn line_numbers_advance_through_strings_and_blocks() {
+        let src = "let a = \"x\ny\";\n/* b\nc */\nmarker();";
+        let (toks, _) = lex(src);
+        let m = toks.iter().find(|t| t.text == "marker").unwrap();
+        assert_eq!(m.line, 5);
+    }
+}

@@ -1,0 +1,203 @@
+//! `cargo xtask` — repo tooling. The only subcommand today is `lint`, the
+//! `pallas-lint` static pass over `rust/src` (see `docs/INVARIANTS.md`).
+//!
+//! ```text
+//! cargo xtask lint                  # lint rust/src; exit 1 on findings
+//! cargo xtask lint --self-test      # verify rules against embedded fixtures
+//! cargo xtask lint --fixture NAME   # lint one embedded fixture
+//! cargo xtask lint --list-fixtures  # names of the embedded fixtures
+//! ```
+
+mod fixtures;
+mod lexer;
+mod rules;
+
+use rules::{lint_source, Finding};
+use std::path::{Path, PathBuf};
+use std::process::ExitCode;
+
+/// Repo root = parent of this crate's manifest dir (xtask lives at
+/// `<root>/xtask`), so the lint works from any working directory.
+fn repo_root() -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR"))
+        .parent()
+        .expect("xtask crate sits directly under the repo root")
+        .to_path_buf()
+}
+
+/// All `.rs` files under `dir`, sorted for deterministic output.
+fn rust_files(dir: &Path, out: &mut Vec<PathBuf>) -> std::io::Result<()> {
+    let mut entries: Vec<_> = std::fs::read_dir(dir)?.collect::<Result<_, _>>()?;
+    entries.sort_by_key(|e| e.path());
+    for e in entries {
+        let path = e.path();
+        if path.is_dir() {
+            rust_files(&path, out)?;
+        } else if path.extension().is_some_and(|x| x == "rs") {
+            out.push(path);
+        }
+    }
+    Ok(())
+}
+
+/// Lint the real tree. Returns findings (empty means clean).
+fn lint_tree(root: &Path) -> Result<Vec<Finding>, String> {
+    let src_root = root.join("rust").join("src");
+    let mut files = Vec::new();
+    rust_files(&src_root, &mut files).map_err(|e| format!("walk {src_root:?}: {e}"))?;
+    let mut findings = Vec::new();
+    for path in files {
+        let src =
+            std::fs::read_to_string(&path).map_err(|e| format!("read {path:?}: {e}"))?;
+        let name = path
+            .strip_prefix(root)
+            .unwrap_or(&path)
+            .to_string_lossy()
+            .into_owned();
+        findings.extend(lint_source(&name, &src));
+    }
+    Ok(findings)
+}
+
+/// Check every embedded fixture against its expectation; returns a list of
+/// human-readable failures (empty means the linter behaves).
+fn self_test() -> Vec<String> {
+    let mut failures = Vec::new();
+    for (name, src, expect) in fixtures::FIXTURES {
+        let findings = lint_source(name, src);
+        match expect {
+            Some(rule) => {
+                if !findings.iter().any(|f| f.rule == rule) {
+                    failures.push(format!(
+                        "{name}: expected a `{rule}` finding, got {:?}",
+                        findings.iter().map(|f| f.rule).collect::<Vec<_>>()
+                    ));
+                }
+            }
+            None => {
+                if !findings.is_empty() {
+                    failures.push(format!(
+                        "{name}: expected clean, got:\n  {}",
+                        findings
+                            .iter()
+                            .map(Finding::render)
+                            .collect::<Vec<_>>()
+                            .join("\n  ")
+                    ));
+                }
+            }
+        }
+    }
+    failures
+}
+
+fn usage() -> ExitCode {
+    eprintln!(
+        "usage: cargo xtask lint [--self-test | --fixture NAME | --list-fixtures]"
+    );
+    ExitCode::from(2)
+}
+
+fn main() -> ExitCode {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let mut it = args.iter().map(String::as_str);
+    if it.next() != Some("lint") {
+        return usage();
+    }
+    match it.next() {
+        None => match lint_tree(&repo_root()) {
+            Ok(findings) if findings.is_empty() => {
+                println!("pallas-lint: clean");
+                ExitCode::SUCCESS
+            }
+            Ok(findings) => {
+                for f in &findings {
+                    eprintln!("{}", f.render());
+                }
+                eprintln!("pallas-lint: {} finding(s)", findings.len());
+                ExitCode::FAILURE
+            }
+            Err(e) => {
+                eprintln!("pallas-lint: {e}");
+                ExitCode::from(2)
+            }
+        },
+        Some("--self-test") => {
+            let failures = self_test();
+            if failures.is_empty() {
+                println!(
+                    "pallas-lint self-test: {} fixtures behave",
+                    fixtures::FIXTURES.len()
+                );
+                ExitCode::SUCCESS
+            } else {
+                for f in &failures {
+                    eprintln!("self-test failure: {f}");
+                }
+                ExitCode::FAILURE
+            }
+        }
+        Some("--list-fixtures") => {
+            for (name, _, expect) in fixtures::FIXTURES {
+                println!(
+                    "{name} ({})",
+                    if expect.is_some() { "expected dirty" } else { "expected clean" }
+                );
+            }
+            ExitCode::SUCCESS
+        }
+        Some("--fixture") => {
+            let Some(name) = it.next() else {
+                return usage();
+            };
+            let Some((_, src, _)) = fixtures::FIXTURES.iter().copied().find(|(n, _, _)| *n == name)
+            else {
+                eprintln!(
+                    "unknown fixture '{name}' (try: cargo xtask lint --list-fixtures)"
+                );
+                return ExitCode::from(2);
+            };
+            let findings = lint_source(name, src);
+            for f in &findings {
+                eprintln!("{}", f.render());
+            }
+            if findings.is_empty() {
+                println!("fixture {name}: clean");
+                ExitCode::SUCCESS
+            } else {
+                eprintln!("fixture {name}: {} finding(s)", findings.len());
+                ExitCode::FAILURE
+            }
+        }
+        Some(_) => usage(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The embedded fixtures are the linter's own regression suite; they
+    /// also run under plain `cargo test` so tier-1 exercises the rules.
+    #[test]
+    fn fixtures_behave() {
+        let failures = self_test();
+        assert!(failures.is_empty(), "{failures:#?}");
+    }
+
+    /// The shipped tree must lint clean — this is the same gate CI applies
+    /// via `cargo xtask lint`, enforced again from the test suite.
+    #[test]
+    fn repo_tree_is_clean() {
+        let findings = lint_tree(&repo_root()).expect("tree walk");
+        assert!(
+            findings.is_empty(),
+            "pallas-lint findings:\n{}",
+            findings
+                .iter()
+                .map(rules::Finding::render)
+                .collect::<Vec<_>>()
+                .join("\n")
+        );
+    }
+}

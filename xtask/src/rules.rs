@@ -1,0 +1,453 @@
+//! The three `pallas-lint` rules and the `// lint:` directive grammar.
+//!
+//! * `float-sort` (R1, whole tree): no `partial_cmp` — float orderings must
+//!   use `total_cmp` so NaN ranks deterministically (largest; the
+//!   `magnitude_prune` convention) instead of panicking a sort.
+//! * `hot-path-alloc` (R2, inside `// lint: hot-path` functions): no
+//!   allocating calls. The decode sweep's zero-allocation contract is what
+//!   makes the fused `DecodeEngine` viable; scratch reuse via
+//!   `clear`/`resize`/`copy_from_slice` is the sanctioned idiom.
+//! * `no-panic` (R3, inside `// lint: no-panic` functions): no
+//!   `unwrap`/`expect`/`panic!`-family macros/direct indexing. The worker
+//!   scheduler loop must stay panic-free outside its `catch_unwind`
+//!   containment shells.
+//!
+//! Any finding can be waived with `// lint: allow(<rule>) -- <reason>` on
+//! the same line or the line directly above; the reason is mandatory.
+
+use crate::lexer::{lex, Comment, Tok};
+
+/// One lint finding; `rule` is the waivable rule name.
+#[derive(Debug, Clone)]
+pub struct Finding {
+    pub file: String,
+    pub line: usize,
+    pub rule: &'static str,
+    pub msg: String,
+}
+
+impl Finding {
+    pub fn render(&self) -> String {
+        format!("{}:{}: [{}] {}", self.file, self.line, self.rule, self.msg)
+    }
+}
+
+pub const RULE_FLOAT_SORT: &str = "float-sort";
+pub const RULE_HOT_PATH_ALLOC: &str = "hot-path-alloc";
+pub const RULE_NO_PANIC: &str = "no-panic";
+/// Meta-rule for malformed directives (never waivable).
+pub const RULE_DIRECTIVE: &str = "directive";
+
+const KNOWN_RULES: [&str; 3] = [RULE_FLOAT_SORT, RULE_HOT_PATH_ALLOC, RULE_NO_PANIC];
+
+/// Parsed `// lint:` directives.
+enum Directive {
+    HotPath { line: usize },
+    NoPanic { line: usize },
+    Allow { line: usize, rule: String, has_reason: bool },
+    Unknown { line: usize, body: String },
+}
+
+/// Extract `lint:` directives from line comments. A directive must start
+/// the comment: `// lint: hot-path`, `// lint: allow(no-panic) -- why`.
+fn parse_directives(comments: &[Comment]) -> Vec<Directive> {
+    let mut out = Vec::new();
+    for c in comments {
+        let body = c.text.trim_start_matches('/').trim();
+        let Some(rest) = body.strip_prefix("lint:") else {
+            continue;
+        };
+        let rest = rest.trim();
+        if rest == "hot-path" {
+            out.push(Directive::HotPath { line: c.line });
+        } else if rest == "no-panic" {
+            out.push(Directive::NoPanic { line: c.line });
+        } else if let Some(inner) = rest.strip_prefix("allow(") {
+            match inner.split_once(')') {
+                Some((rule, tail)) => {
+                    let has_reason = tail
+                        .split_once("--")
+                        .map(|(_, r)| !r.trim().is_empty())
+                        .unwrap_or(false);
+                    out.push(Directive::Allow {
+                        line: c.line,
+                        rule: rule.trim().to_string(),
+                        has_reason,
+                    });
+                }
+                None => out.push(Directive::Unknown {
+                    line: c.line,
+                    body: rest.to_string(),
+                }),
+            }
+        } else {
+            out.push(Directive::Unknown {
+                line: c.line,
+                body: rest.to_string(),
+            });
+        }
+    }
+    out
+}
+
+/// Token index range (inclusive start, exclusive end) of the body of the
+/// first `fn` item starting after `after_line`. None if no such function.
+fn fn_body_after(toks: &[Tok], after_line: usize) -> Option<(usize, usize)> {
+    let fn_idx = toks
+        .iter()
+        .position(|t| t.is_ident && t.text == "fn" && t.line > after_line)?;
+    let open = (fn_idx..toks.len()).find(|&i| toks[i].text == "{")?;
+    let mut depth = 0usize;
+    for i in open..toks.len() {
+        match toks[i].text.as_str() {
+            "{" => depth += 1,
+            "}" => {
+                depth -= 1;
+                if depth == 0 {
+                    return Some((open, i + 1));
+                }
+            }
+            _ => {}
+        }
+    }
+    // Unbalanced braces: take the rest of the file rather than miss code.
+    Some((open, toks.len()))
+}
+
+/// Idents that are method calls which allocate (or may reallocate).
+const ALLOC_METHODS: [&str; 10] = [
+    "to_vec",
+    "clone",
+    "collect",
+    "push",
+    "to_string",
+    "to_owned",
+    "with_capacity",
+    "reserve",
+    "extend",
+    "append",
+];
+
+/// Types whose `::new`-style constructors allocate.
+const ALLOC_TYPES: [&str; 7] = [
+    "Vec",
+    "String",
+    "Box",
+    "HashMap",
+    "HashSet",
+    "BTreeMap",
+    "VecDeque",
+];
+
+/// Keywords that can directly precede `[` without forming an index
+/// expression (`return [..]`, `in [..]`, …).
+const NON_INDEX_KEYWORDS: [&str; 16] = [
+    "return", "break", "in", "else", "match", "if", "while", "loop", "move", "ref", "mut", "as",
+    "let", "const", "static", "where",
+];
+
+/// Run all rules over one file's source. `file` is used only for messages.
+pub fn lint_source(file: &str, src: &str) -> Vec<Finding> {
+    let (toks, comments) = lex(src);
+    let directives = parse_directives(&comments);
+    let mut raw: Vec<Finding> = Vec::new();
+    let mut waivers: Vec<(usize, String, bool)> = Vec::new();
+
+    let mut hot_regions: Vec<(usize, usize)> = Vec::new();
+    let mut panic_regions: Vec<(usize, usize)> = Vec::new();
+    for d in &directives {
+        match d {
+            Directive::HotPath { line } | Directive::NoPanic { line } => {
+                let Some(region) = fn_body_after(&toks, *line) else {
+                    raw.push(Finding {
+                        file: file.to_string(),
+                        line: *line,
+                        rule: RULE_DIRECTIVE,
+                        msg: "dangling lint directive: no `fn` item follows it".into(),
+                    });
+                    continue;
+                };
+                match d {
+                    Directive::HotPath { .. } => hot_regions.push(region),
+                    _ => panic_regions.push(region),
+                }
+            }
+            Directive::Allow { line, rule, has_reason } => {
+                if !KNOWN_RULES.contains(&rule.as_str()) {
+                    raw.push(Finding {
+                        file: file.to_string(),
+                        line: *line,
+                        rule: RULE_DIRECTIVE,
+                        msg: format!(
+                            "unknown rule '{rule}' in waiver (known: {})",
+                            KNOWN_RULES.join(", ")
+                        ),
+                    });
+                    continue;
+                }
+                if !has_reason {
+                    raw.push(Finding {
+                        file: file.to_string(),
+                        line: *line,
+                        rule: RULE_DIRECTIVE,
+                        msg: format!(
+                            "waiver for '{rule}' missing its reason: \
+                             `// lint: allow({rule}) -- <reason>`"
+                        ),
+                    });
+                    continue;
+                }
+                waivers.push((*line, rule.clone(), false));
+            }
+            Directive::Unknown { line, body } => {
+                raw.push(Finding {
+                    file: file.to_string(),
+                    line: *line,
+                    rule: RULE_DIRECTIVE,
+                    msg: format!("unrecognized lint directive '{body}'"),
+                });
+            }
+        }
+    }
+
+    // R1 — float-sort: `partial_cmp` anywhere in code.
+    for t in toks.iter().filter(|t| t.is_ident) {
+        if t.text == "partial_cmp" {
+            raw.push(Finding {
+                file: file.to_string(),
+                line: t.line,
+                rule: RULE_FLOAT_SORT,
+                msg: "NaN-unsafe float ordering: use f32/f64::total_cmp \
+                      (NaN ranks largest) instead of partial_cmp"
+                    .into(),
+            });
+        }
+    }
+
+    // R2 — hot-path-alloc: allocating calls inside `// lint: hot-path` fns.
+    for &(lo, hi) in &hot_regions {
+        let region = &toks[lo..hi];
+        for (i, t) in region.iter().enumerate() {
+            if !t.is_ident {
+                continue;
+            }
+            let next = region.get(i + 1).map(|t| t.text.as_str());
+            if (t.text == "vec" || t.text == "format") && next == Some("!") {
+                raw.push(Finding {
+                    file: file.to_string(),
+                    line: t.line,
+                    rule: RULE_HOT_PATH_ALLOC,
+                    msg: format!("`{}!` allocates inside a hot-path function", t.text),
+                });
+                continue;
+            }
+            let turbofish = next == Some(":")
+                && region.get(i + 2).map(|t| t.text.as_str()) == Some(":")
+                && region.get(i + 3).map(|t| t.text.as_str()) == Some("<");
+            if ALLOC_METHODS.contains(&t.text.as_str()) && (next == Some("(") || turbofish) {
+                raw.push(Finding {
+                    file: file.to_string(),
+                    line: t.line,
+                    rule: RULE_HOT_PATH_ALLOC,
+                    msg: format!(
+                        "`{}` allocates inside a hot-path function \
+                         (reuse caller scratch: clear/resize/copy_from_slice)",
+                        t.text
+                    ),
+                });
+                continue;
+            }
+            if ALLOC_TYPES.contains(&t.text.as_str())
+                && next == Some(":")
+                && region.get(i + 2).map(|t| t.text.as_str()) == Some(":")
+            {
+                if let Some(m) = region.get(i + 3) {
+                    if m.is_ident
+                        && (m.text == "new" || m.text == "with_capacity" || m.text == "from")
+                    {
+                        raw.push(Finding {
+                            file: file.to_string(),
+                            line: t.line,
+                            rule: RULE_HOT_PATH_ALLOC,
+                            msg: format!(
+                                "`{}::{}` allocates inside a hot-path function",
+                                t.text, m.text
+                            ),
+                        });
+                    }
+                }
+            }
+        }
+    }
+
+    // R3 — no-panic: panicking constructs inside `// lint: no-panic` fns.
+    for &(lo, hi) in &panic_regions {
+        let region = &toks[lo..hi];
+        for (i, t) in region.iter().enumerate() {
+            let next = region.get(i + 1).map(|t| t.text.as_str());
+            if t.is_ident && (t.text == "unwrap" || t.text == "expect") && next == Some("(") {
+                raw.push(Finding {
+                    file: file.to_string(),
+                    line: t.line,
+                    rule: RULE_NO_PANIC,
+                    msg: format!(
+                        "`{}` can panic inside a no-panic region \
+                         (scheduler loop relies on panic containment)",
+                        t.text
+                    ),
+                });
+                continue;
+            }
+            if t.is_ident
+                && matches!(t.text.as_str(), "panic" | "unreachable" | "todo" | "unimplemented")
+                && next == Some("!")
+            {
+                raw.push(Finding {
+                    file: file.to_string(),
+                    line: t.line,
+                    rule: RULE_NO_PANIC,
+                    msg: format!("`{}!` inside a no-panic region", t.text),
+                });
+                continue;
+            }
+            if t.text == "[" && i > 0 {
+                let prev = &region[i - 1];
+                let indexes = (prev.is_ident && !NON_INDEX_KEYWORDS.contains(&prev.text.as_str()))
+                    || prev.text == "]"
+                    || prev.text == ")";
+                if indexes {
+                    raw.push(Finding {
+                        file: file.to_string(),
+                        line: t.line,
+                        rule: RULE_NO_PANIC,
+                        msg: "direct indexing can panic inside a no-panic region \
+                              (use get/first/last or iterate)"
+                            .into(),
+                    });
+                }
+            }
+        }
+    }
+
+    // Apply waivers: a waiver suppresses findings of its rule on its own
+    // line and on the line directly below it.
+    raw.retain(|f| {
+        if f.rule == RULE_DIRECTIVE {
+            return true;
+        }
+        !waivers
+            .iter()
+            .any(|(wl, wr, _)| wr == f.rule && (f.line == *wl || f.line == wl + 1))
+    });
+    raw.sort_by(|a, b| (a.line, a.rule).cmp(&(b.line, b.rule)));
+    raw
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rules_of(src: &str) -> Vec<&'static str> {
+        lint_source("test.rs", src).into_iter().map(|f| f.rule).collect()
+    }
+
+    #[test]
+    fn partial_cmp_flags_only_in_code() {
+        assert_eq!(
+            rules_of("fn f(xs: &mut [f32]) { xs.sort_by(|a, b| a.partial_cmp(b).unwrap()); }"),
+            vec![RULE_FLOAT_SORT]
+        );
+        assert!(rules_of("// partial_cmp\nfn f() { let _ = \"partial_cmp\"; }").is_empty());
+    }
+
+    #[test]
+    fn hot_path_scope_is_the_annotated_fn_only() {
+        let src = "\
+// lint: hot-path
+fn hot(y: &mut [f32]) { y.iter_mut().for_each(|v| *v = 0.0); }
+fn cold() -> Vec<f32> { let mut v = Vec::new(); v.push(1.0); v }
+";
+        assert!(rules_of(src).is_empty(), "allocations outside the region are fine");
+    }
+
+    #[test]
+    fn alloc_in_hot_path_flags() {
+        let src = "\
+// lint: hot-path
+fn hot(x: &[f32]) -> usize { let v = x.to_vec(); v.len() }
+";
+        assert_eq!(rules_of(src), vec![RULE_HOT_PATH_ALLOC]);
+    }
+
+    #[test]
+    fn waiver_with_reason_suppresses_line_below() {
+        let src = "\
+// lint: hot-path
+fn hot(out: &mut Vec<f32>) {
+    // lint: allow(hot-path-alloc) -- out pre-reserved at admission
+    out.push(1.0);
+}
+";
+        assert!(rules_of(src).is_empty());
+    }
+
+    #[test]
+    fn waiver_without_reason_is_itself_a_finding() {
+        let src = "\
+// lint: hot-path
+fn hot(out: &mut Vec<f32>) {
+    // lint: allow(hot-path-alloc)
+    out.push(1.0);
+}
+";
+        let rules = rules_of(src);
+        assert!(rules.contains(&RULE_DIRECTIVE), "{rules:?}");
+        assert!(rules.contains(&RULE_HOT_PATH_ALLOC), "invalid waiver must not suppress");
+    }
+
+    #[test]
+    fn no_panic_flags_unwrap_expect_indexing_but_not_unwrap_or() {
+        let src = "\
+// lint: no-panic
+fn sched(q: &[usize]) -> usize {
+    let a = q.first().copied().unwrap_or(0);
+    let b = q[0];
+    let c = q.last().copied().unwrap();
+    a + b + c
+}
+";
+        let rules = rules_of(src);
+        assert_eq!(
+            rules.iter().filter(|r| **r == RULE_NO_PANIC).count(),
+            2,
+            "indexing + unwrap, but not unwrap_or: {rules:?}"
+        );
+    }
+
+    #[test]
+    fn array_literals_and_attributes_are_not_indexing() {
+        let src = "\
+// lint: no-panic
+fn sched() -> [f32; 3] {
+    #[allow(unused)]
+    let x: [f32; 3] = [0.0; 3];
+    x
+}
+";
+        assert!(rules_of(src).is_empty(), "{:?}", lint_source("t.rs", src));
+    }
+
+    #[test]
+    fn unknown_directive_and_unknown_rule_flag() {
+        assert_eq!(rules_of("// lint: hotpath\nfn f() {}"), vec![RULE_DIRECTIVE]);
+        assert_eq!(
+            rules_of("fn f() {}\n// lint: allow(bogus) -- why\nfn g() {}"),
+            vec![RULE_DIRECTIVE]
+        );
+    }
+
+    #[test]
+    fn dangling_region_directive_flags() {
+        assert_eq!(rules_of("// lint: hot-path\nconst X: usize = 3;"), vec![RULE_DIRECTIVE]);
+    }
+}
