@@ -99,7 +99,7 @@ fn main() -> anyhow::Result<()> {
         let mut tok = argmax(sess.last_logits());
         kv.push(tok);
         for _ in 1..max_new {
-            tok = argmax(sess.decode_step(tok));
+            tok = argmax(sess.decode_step(&im, tok));
             kv.push(tok);
         }
     }

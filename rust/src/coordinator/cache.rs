@@ -11,6 +11,11 @@
 //! The LRU is a slab-backed doubly-linked list under one mutex: `get`
 //! and `insert` are O(1), and the critical section is a few pointer
 //! swaps — negligible next to a forward pass, and never held across one.
+//!
+//! Multi-tenant servers key entries with [`task_key`] — the adapter's
+//! task id and registry epoch prefixed onto the token ids — so tenants
+//! never collide and an adapter reload retires exactly that adapter's
+//! entries (see `docs/ADAPTERS.md`).
 
 use std::collections::HashMap;
 use std::sync::Mutex;
@@ -100,6 +105,25 @@ impl Lru {
         self.map.insert(ids, slot);
         self.push_front(slot);
     }
+}
+
+/// Composite cache key for multi-tenant serving: the adapter's task id
+/// and its registry **epoch** (split into two little-endian `u32`
+/// halves) prefixed onto the token ids. Identical prompts on different
+/// adapters produce different keys, and bumping an adapter's epoch on
+/// reload or unload retires every key minted under the old weights
+/// without touching other tenants' entries — per-task invalidation on
+/// top of the global [`ResponseCache::clear`] hook. Compute the key
+/// **once** per request (one epoch read) and reuse it for both the
+/// pre-enqueue `get` and the post-compute `insert_at_epoch`, so a
+/// mid-request swap can never cache new logits under an old key.
+pub fn task_key(task: u32, epoch: u64, ids: &[u32]) -> Vec<u32> {
+    let mut key = Vec::with_capacity(ids.len() + 3);
+    key.push(task);
+    key.push(epoch as u32);
+    key.push((epoch >> 32) as u32);
+    key.extend_from_slice(ids);
+    key
 }
 
 /// Thread-safe bounded LRU mapping token ids → logits.
@@ -306,6 +330,28 @@ mod tests {
         let epoch = c.epoch();
         c.insert_at_epoch(k(2), vec![2.0], epoch);
         assert_eq!(c.get(&k(2)), Some(vec![2.0]));
+    }
+
+    #[test]
+    fn task_key_separates_tasks_and_epochs() {
+        let ids = [5u32, 6, 7];
+        let a = task_key(1, 0, &ids);
+        let b = task_key(2, 0, &ids);
+        let c = task_key(1, 1, &ids);
+        assert_ne!(a, b, "same prompt on different tasks must not collide");
+        assert_ne!(a, c, "an epoch bump must retire old keys");
+        assert_eq!(a, task_key(1, 0, &ids));
+        assert_eq!(a[3..], ids, "token ids ride after the (task, epoch) prefix");
+        // The full 64-bit epoch participates, not just the low half.
+        let hi = task_key(1, 1u64 << 32, &ids);
+        assert_ne!(a, hi);
+        assert_ne!(c, hi);
+        // Distinct composite keys coexist as independent entries.
+        let cache = ResponseCache::new(4);
+        cache.insert(a.clone(), vec![1.0]);
+        cache.insert(b.clone(), vec![2.0]);
+        assert_eq!(cache.get(&a), Some(vec![1.0]));
+        assert_eq!(cache.get(&b), Some(vec![2.0]));
     }
 
     #[test]

@@ -23,9 +23,9 @@
 //!    ([`crate::coordinator::shard::ShardedQueue`]): one deque per
 //!    worker under a global capacity gate of [`ServeCfg::queue_depth`]
 //!    (overload still blocks clients — backpressure, not unbounded
-//!    memory). Requests are routed by hashing their token ids
-//!    ([`crate::coordinator::shard::affinity_hash`]), so identical
-//!    sequences land on the same shard: batch contents correlate (one
+//!    memory). Requests are routed by hashing their task id and token
+//!    ids ([`crate::coordinator::shard::affinity_hash`]), so identical
+//!    sequences under the same adapter land on the same shard: batch contents correlate (one
 //!    worker runs the duplicates back-to-back), and requests *arriving
 //!    after* the first reply lands hit the client-side cache. (In-queue
 //!    duplicates are not deduplicated — the cache is consulted before
@@ -99,9 +99,29 @@
 //! (tests/queue benchmarks) and [`NativeBackend`] (the mutable
 //! training-path model, kept as the unmerged baseline the serve example
 //! measures the compiled representations against).
+//!
+//! ## Multi-tenant adapter serving
+//!
+//! Every request carries a **task id** (0 = the bare base model).
+//! [`start_multi_tenant`] serves an
+//! [`crate::infer::adapter::AdapterRegistry`] — one resident
+//! [`crate::infer::adapter::CompiledBase`] plus N attached task deltas
+//! — through [`MultiTenantBackend`]: classification batches are run in
+//! per-task slices against the task's attached model, and generation
+//! goes through a task-aware [`TenantEngine`] whose sweeps share the
+//! base-weight pass across sessions on *different* adapters (the
+//! grouped side-path in [`crate::infer::decode::DecodeEngine`]).
+//! Response-cache entries are keyed by
+//! `(task, adapter epoch, token ids)`
+//! ([`crate::coordinator::cache::task_key`]), so a hot-swapped adapter
+//! retires its own cache keyspace without touching other tenants.
+//! Unknown tasks are rejected per request ([`Backend::has_task`]), and
+//! the registry's observability snapshot lands in the adapter fields of
+//! [`ServeStats`] at join. See `docs/ADAPTERS.md`.
 
-use crate::coordinator::cache::ResponseCache;
+use crate::coordinator::cache::{task_key, ResponseCache};
 use crate::coordinator::shard::{affinity_hash, ShardedQueue};
+use crate::infer::adapter::{AdapterRegistry, AdapterStats};
 use crate::infer::InferenceModel;
 use crate::nn::Transformer;
 use std::panic::AssertUnwindSafe;
@@ -115,6 +135,32 @@ pub trait Backend: Send + Sync {
     /// Classify a flat batch; returns per-example logits rows.
     fn infer(&self, ids: &[u32], batch: usize, seq: usize) -> Vec<Vec<f32>>;
     fn seq_len(&self) -> usize;
+
+    /// Classify a flat batch under `task`'s adapter (its head and
+    /// deltas). Workers slice each formed batch into per-task runs and
+    /// call this once per run. The default ignores the task and runs
+    /// the plain forward — single-tenant backends only ever see task 0,
+    /// because the worker rejects every task [`Backend::has_task`]
+    /// disavows before batching.
+    fn infer_task(&self, _task: u32, ids: &[u32], batch: usize, seq: usize) -> Vec<Vec<f32>> {
+        self.infer(ids, batch, seq)
+    }
+
+    /// Whether `task` is currently servable. Task 0 (the bare base) is
+    /// the only task a single-tenant backend knows; multi-tenant
+    /// backends answer from their adapter registry. Checked per request
+    /// at validation, so unknown tasks are rejected instead of panicking
+    /// a batch.
+    fn has_task(&self, task: u32) -> bool {
+        task == 0
+    }
+
+    /// Adapter observability snapshot, merged into the adapter fields
+    /// of [`ServeStats`] at [`Server::join`]. `None` for single-tenant
+    /// backends.
+    fn adapter_stats(&self) -> Option<AdapterStats> {
+        None
+    }
     /// Greedy-continue `prompt` by up to `max_new` tokens, or `None`
     /// when this backend cannot generate (non-causal / non-LM models;
     /// the default). Generating backends run a KV-cached
@@ -175,11 +221,13 @@ pub trait Backend: Send + Sync {
 /// object-safe surface the worker schedules against.
 pub trait FusedDecode {
     /// Admit a **validated** prompt (non-empty, shorter than the model
-    /// sequence) into a free slot and return its slot id. Callers check
-    /// [`Self::n_live`] against [`Self::capacity`] first; invalid
-    /// prompts may panic (the worker wraps admission in the same panic
-    /// containment as `begin_decode`).
-    fn admit(&mut self, prompt: &[u32], max_new: usize) -> usize;
+    /// sequence, task known to the backend) into a free slot and return
+    /// its slot id. Callers check [`Self::n_live`] against
+    /// [`Self::capacity`] first; invalid prompts — or a task whose
+    /// adapter was unloaded between validation and admission — may
+    /// panic (the worker wraps admission in the same panic containment
+    /// as `begin_decode`).
+    fn admit(&mut self, task: u32, prompt: &[u32], max_new: usize) -> usize;
     /// Advance every live, unfinished slot by one token — one batched
     /// kernel per layer across all of them.
     fn sweep(&mut self);
@@ -194,7 +242,10 @@ pub trait FusedDecode {
 }
 
 impl FusedDecode for crate::infer::decode::DecodeEngine<'_> {
-    fn admit(&mut self, prompt: &[u32], max_new: usize) -> usize {
+    fn admit(&mut self, task: u32, prompt: &[u32], max_new: usize) -> usize {
+        // A bare engine has no registry to resolve adapters against;
+        // the worker's has_task validation keeps nonzero tasks out.
+        assert_eq!(task, 0, "bare decode engine cannot resolve adapter task {task}");
         let cap = self.model().cfg.max_seq;
         crate::infer::decode::DecodeEngine::admit(self, prompt, max_new, cap)
             .expect("engine admit: prompt validated before admission")
@@ -302,6 +353,127 @@ impl Backend for InferenceModel {
     }
 }
 
+/// Multi-tenant production backend: one resident
+/// [`crate::infer::adapter::CompiledBase`] serving task 0 plus every
+/// adapter loaded into its [`AdapterRegistry`], from roughly one
+/// model's RAM (attached models Arc-share all frozen base tensors).
+///
+/// Classification resolves the task's attached model per batch run;
+/// generation admits sessions into a [`TenantEngine`] whose sweeps run
+/// the shared base weights once across sessions on *different*
+/// adapters. Loads/unloads on the registry take effect for new
+/// admissions only — in-flight sessions hold their model `Arc` and
+/// finish on the epoch they were admitted under.
+pub struct MultiTenantBackend {
+    registry: Arc<AdapterRegistry>,
+}
+
+impl MultiTenantBackend {
+    pub fn new(registry: Arc<AdapterRegistry>) -> MultiTenantBackend {
+        MultiTenantBackend { registry }
+    }
+
+    pub fn registry(&self) -> &Arc<AdapterRegistry> {
+        &self.registry
+    }
+}
+
+impl Backend for MultiTenantBackend {
+    fn infer(&self, ids: &[u32], batch: usize, seq: usize) -> Vec<Vec<f32>> {
+        self.infer_task(0, ids, batch, seq)
+    }
+
+    fn infer_task(&self, task: u32, ids: &[u32], batch: usize, seq: usize) -> Vec<Vec<f32>> {
+        // Validation checked has_task, but the adapter can be unloaded
+        // while the request is queued; the panic is contained by the
+        // worker and becomes a per-request backend error.
+        let Some((model, _epoch)) = self.registry.resolve(task) else {
+            panic!("adapter {task} is not resident");
+        };
+        let logits = model.forward(ids, batch, seq);
+        (0..batch).map(|i| logits.row(i).to_vec()).collect()
+    }
+
+    fn seq_len(&self) -> usize {
+        self.registry.base().model().cfg.max_seq
+    }
+
+    fn has_task(&self, task: u32) -> bool {
+        self.registry.contains(task)
+    }
+
+    fn adapter_stats(&self) -> Option<AdapterStats> {
+        Some(self.registry.stats())
+    }
+
+    fn generate(&self, prompt: &[u32], max_new: usize) -> Option<Vec<u32>> {
+        let m: &InferenceModel = self.registry.base().model();
+        if !m.supports_decode() {
+            return None;
+        }
+        Some(
+            m.generate_greedy(prompt, max_new, m.cfg.max_seq)
+                .expect("generate: prompt validated before dispatch"),
+        )
+    }
+
+    fn begin_engine<'a>(&'a self, capacity: usize) -> Option<Box<dyn FusedDecode + 'a>> {
+        let m: &InferenceModel = self.registry.base().model();
+        if !m.supports_decode() {
+            return None;
+        }
+        Some(Box::new(TenantEngine {
+            eng: crate::infer::decode::DecodeEngine::new(m, capacity),
+            registry: &self.registry,
+        }))
+    }
+}
+
+/// Task-aware [`FusedDecode`]: a [`crate::infer::decode::DecodeEngine`]
+/// resident on the base model plus the registry that resolves each
+/// admission's task to its attached model and current epoch. Sessions
+/// on different adapters share every sweep's base-weight pass; the
+/// resolved `Arc` is pinned in the slot, so a swap mid-flight never
+/// changes the weights a live session decodes with.
+pub struct TenantEngine<'a> {
+    eng: crate::infer::decode::DecodeEngine<'a>,
+    registry: &'a AdapterRegistry,
+}
+
+impl FusedDecode for TenantEngine<'_> {
+    fn admit(&mut self, task: u32, prompt: &[u32], max_new: usize) -> usize {
+        if task == 0 {
+            let cap = self.eng.model().cfg.max_seq;
+            return crate::infer::decode::DecodeEngine::admit(&mut self.eng, prompt, max_new, cap)
+                .expect("engine admit: prompt validated before admission");
+        }
+        // Contained-panic path: the adapter can vanish between the
+        // worker's has_task check and this admission.
+        let Some((model, epoch)) = self.registry.resolve(task) else {
+            panic!("adapter {task} was unloaded before admission");
+        };
+        let cap = model.cfg.max_seq;
+        self.eng
+            .admit_task(model, task, epoch, prompt, max_new, cap)
+            .expect("engine admit: attached model matches the resident base by construction")
+    }
+    fn sweep(&mut self) {
+        self.eng.sweep()
+    }
+    fn is_done(&self, slot: usize) -> bool {
+        self.eng.is_done(slot)
+    }
+    fn release(&mut self, slot: usize) -> Vec<u32> {
+        self.eng.release(slot)
+    }
+    fn n_live(&self) -> usize {
+        self.eng.n_live()
+    }
+    fn capacity(&self) -> usize {
+        self.eng.capacity()
+    }
+}
+
 /// Training-path backend: serves the mutable [`Transformer`] directly
 /// (masked weights re-applied every forward). Kept as the unmerged
 /// baseline for latency comparisons and parity debugging; production
@@ -327,15 +499,19 @@ impl Backend for NativeBackend {
 /// generation requests admitted into the continuous-batching session
 /// set and stepped together).
 pub enum Request {
-    /// Fixed-length batch forward over the backend.
+    /// Fixed-length batch forward over the backend, under `task`'s
+    /// adapter (0 = bare base).
     Classify {
+        task: u32,
         ids: Vec<u32>,
         reply: Sender<Response>,
         enqueued: Instant,
     },
     /// Autoregressive continuation: greedy-decode up to `max_new`
-    /// tokens after the prompt over a KV-cached decode session.
+    /// tokens after the prompt over a KV-cached decode session, under
+    /// `task`'s adapter (0 = bare base).
     Generate {
+        task: u32,
         ids: Vec<u32>,
         max_new: usize,
         reply: Sender<Response>,
@@ -494,6 +670,10 @@ impl Drop for CloseGuard {
 pub struct Client {
     queue: Arc<ShardedQueue<Request>>,
     cache: Option<Arc<ResponseCache>>,
+    /// Present on multi-tenant servers ([`start_multi_tenant`]): the
+    /// client reads each task's current epoch here to key the response
+    /// cache, so a reloaded adapter's stale entries become unreachable.
+    registry: Option<Arc<AdapterRegistry>>,
     _close: Arc<CloseGuard>,
 }
 
@@ -503,8 +683,27 @@ impl Client {
     /// the error response still has its real queue time attached.
     /// Blocks while the queue is full (backpressure).
     pub fn try_infer(&self, ids: Vec<u32>) -> crate::Result<Response> {
-        if let Some(cache) = &self.cache {
-            if let Some(logits) = cache.get(&ids) {
+        self.try_infer_task(0, ids)
+    }
+
+    /// [`Client::try_infer`] under `task`'s adapter (0 = bare base).
+    ///
+    /// The cache key is [`task_key`]`(task, adapter_epoch, ids)`,
+    /// computed **once** per request: the epoch read before the lookup
+    /// is the same one baked into the insert key, so a reload that
+    /// lands mid-request keys the stale logits under the *old* epoch —
+    /// unreachable to post-reload lookups, aged out by LRU.
+    pub fn try_infer_task(&self, task: u32, ids: Vec<u32>) -> crate::Result<Response> {
+        // Capture both epochs *before* the backend computes: the
+        // adapter epoch is baked into the key (per-task invalidation);
+        // the cache's clear-epoch makes a full invalidation in flight
+        // drop the insert instead of repopulating the cleared cache.
+        let key = self.cache.as_ref().map(|c| {
+            let adapter_epoch = self.registry.as_ref().map_or(0, |r| r.epoch(task));
+            (task_key(task, adapter_epoch, &ids), c.epoch())
+        });
+        if let (Some(cache), Some((key, _))) = (&self.cache, &key) {
+            if let Some(logits) = cache.get(key) {
                 return Ok(Response {
                     logits,
                     tokens: Vec::new(),
@@ -516,17 +715,13 @@ impl Client {
                 });
             }
         }
-        // Capture the invalidation epoch *before* the backend computes:
-        // if the model is hot-swapped (and the cache invalidated) while
-        // this request is in flight, the old-model logits must be
-        // dropped at insert instead of repopulating the cleared cache.
-        let key = self.cache.as_ref().map(|c| (ids.clone(), c.epoch()));
-        let shard_key = affinity_hash(&ids);
+        let shard_key = affinity_hash(task, &ids);
         let (reply_tx, reply_rx) = mpsc::channel();
         self.queue
             .push_affine(
                 shard_key,
                 Request::Classify {
+                    task,
                     ids,
                     reply: reply_tx,
                     enqueued: Instant::now(),
@@ -547,7 +742,12 @@ impl Client {
     /// Submit and wait for the reply. Rejected/failed requests surface
     /// as `Err`.
     pub fn infer(&self, ids: Vec<u32>) -> crate::Result<Response> {
-        let resp = self.try_infer(ids)?;
+        self.infer_task(0, ids)
+    }
+
+    /// [`Client::infer`] under `task`'s adapter (0 = bare base).
+    pub fn infer_task(&self, task: u32, ids: Vec<u32>) -> crate::Result<Response> {
+        let resp = self.try_infer_task(task, ids)?;
         if let Some(e) = &resp.error {
             anyhow::bail!("request failed: {e}");
         }
@@ -561,12 +761,23 @@ impl Client {
     /// logits rows the cache stores. Affinity-routed like
     /// classification, so identical prompts share a shard.
     pub fn try_generate(&self, ids: Vec<u32>, max_new: usize) -> crate::Result<Response> {
-        let shard_key = affinity_hash(&ids);
+        self.try_generate_task(0, ids, max_new)
+    }
+
+    /// [`Client::try_generate`] under `task`'s adapter (0 = bare base).
+    pub fn try_generate_task(
+        &self,
+        task: u32,
+        ids: Vec<u32>,
+        max_new: usize,
+    ) -> crate::Result<Response> {
+        let shard_key = affinity_hash(task, &ids);
         let (reply_tx, reply_rx) = mpsc::channel();
         self.queue
             .push_affine(
                 shard_key,
                 Request::Generate {
+                    task,
                     ids,
                     max_new,
                     reply: reply_tx,
@@ -582,7 +793,17 @@ impl Client {
     /// Submit a generation request and wait. Rejected/failed requests
     /// surface as `Err`.
     pub fn generate(&self, ids: Vec<u32>, max_new: usize) -> crate::Result<Response> {
-        let resp = self.try_generate(ids, max_new)?;
+        self.generate_task(0, ids, max_new)
+    }
+
+    /// [`Client::generate`] under `task`'s adapter (0 = bare base).
+    pub fn generate_task(
+        &self,
+        task: u32,
+        ids: Vec<u32>,
+        max_new: usize,
+    ) -> crate::Result<Response> {
+        let resp = self.try_generate_task(task, ids, max_new)?;
         if let Some(e) = &resp.error {
             anyhow::bail!("request failed: {e}");
         }
@@ -608,6 +829,9 @@ impl Client {
 pub struct Server {
     handles: Vec<std::thread::JoinHandle<ServeStats>>,
     cache: Option<Arc<ResponseCache>>,
+    /// Kept so `join` can fold the backend's adapter observability
+    /// snapshot ([`Backend::adapter_stats`]) into the merged stats.
+    backend: Arc<dyn Backend>,
 }
 
 /// Aggregate statistics, merged across workers on `join`.
@@ -636,6 +860,34 @@ pub struct ServeStats {
     pub cache_invalidations: usize,
     /// Tokens emitted by successful `Generate` requests.
     pub generated_tokens: usize,
+    /// Adapters resident in the backend's registry at join (excluding
+    /// the base; 0 for single-tenant backends).
+    pub resident_adapters: usize,
+    /// Hot reloads over a live adapter (registry lifetime total).
+    pub adapter_swaps: u64,
+    /// Unloads of a live adapter (registry lifetime total).
+    pub adapter_evictions: u64,
+    /// Per-task cache-invalidation counts — each task's current epoch,
+    /// i.e. how many times its cache keyspace has been retired. Sorted
+    /// by task id.
+    pub adapter_invalidations: Vec<(u32, u64)>,
+    /// Tokens emitted by successful `Generate` requests, per task
+    /// (task 0 = the bare base). Sorted by task id after `join`.
+    pub adapter_tokens: Vec<(u32, usize)>,
+}
+
+/// Merge sparse per-task counters: sum matching task ids, append new
+/// ones. Callers sort when presentation order matters.
+fn merge_task_counters<T: Copy + std::ops::AddAssign>(
+    into: &mut Vec<(u32, T)>,
+    from: &[(u32, T)],
+) {
+    for &(task, n) in from {
+        match into.iter_mut().find(|(t, _)| *t == task) {
+            Some((_, total)) => *total += n,
+            None => into.push((task, n)),
+        }
+    }
 }
 
 impl ServeStats {
@@ -658,6 +910,11 @@ impl ServeStats {
         self.cache_misses += other.cache_misses;
         self.cache_invalidations += other.cache_invalidations;
         self.generated_tokens += other.generated_tokens;
+        self.resident_adapters += other.resident_adapters;
+        self.adapter_swaps += other.adapter_swaps;
+        self.adapter_evictions += other.adapter_evictions;
+        merge_task_counters(&mut self.adapter_invalidations, &other.adapter_invalidations);
+        merge_task_counters(&mut self.adapter_tokens, &other.adapter_tokens);
     }
 }
 
@@ -665,6 +922,26 @@ impl ServeStats {
 /// shared read-only across `cfg.workers` threads, each owning one queue
 /// shard.
 pub fn start(backend: Arc<dyn Backend>, cfg: ServeCfg) -> (Client, Server) {
+    start_inner(backend, None, cfg)
+}
+
+/// Start a multi-tenant server over an adapter registry: one resident
+/// base (task 0) plus every loaded task delta, served by
+/// [`MultiTenantBackend`]. The returned [`Client`] keys its response
+/// cache by `(task, adapter epoch, ids)`, reading epochs from this
+/// registry — load/unload/swap through the same `Arc` and new requests
+/// see the change immediately while in-flight sessions finish on the
+/// model they were admitted with.
+pub fn start_multi_tenant(registry: Arc<AdapterRegistry>, cfg: ServeCfg) -> (Client, Server) {
+    let backend: Arc<dyn Backend> = Arc::new(MultiTenantBackend::new(Arc::clone(&registry)));
+    start_inner(backend, Some(registry), cfg)
+}
+
+fn start_inner(
+    backend: Arc<dyn Backend>,
+    registry: Option<Arc<AdapterRegistry>>,
+    cfg: ServeCfg,
+) -> (Client, Server) {
     let workers = cfg.workers.max(1);
     // Divide the machine between the workers: each worker's large dense
     // forwards may parallelize, but N workers × all-cores matmuls would
@@ -690,9 +967,17 @@ pub fn start(backend: Arc<dyn Backend>, cfg: ServeCfg) -> (Client, Server) {
     let client = Client {
         queue: Arc::clone(&queue),
         cache: cache.clone(),
+        registry,
         _close: Arc::new(CloseGuard { queue }),
     };
-    (client, Server { handles, cache })
+    (
+        client,
+        Server {
+            handles,
+            cache,
+            backend,
+        },
+    )
 }
 
 impl Server {
@@ -713,6 +998,16 @@ impl Server {
             stats.cache_misses += misses as usize;
             stats.cache_invalidations += cache.invalidations() as usize;
         }
+        // Adapter observability comes from the backend's registry
+        // snapshot; workers only contribute per-task token counts.
+        if let Some(a) = self.backend.adapter_stats() {
+            stats.resident_adapters += a.resident;
+            stats.adapter_swaps += a.swaps;
+            stats.adapter_evictions += a.evictions;
+            merge_task_counters(&mut stats.adapter_invalidations, &a.invalidations);
+        }
+        stats.adapter_invalidations.sort_unstable_by_key(|&(t, _)| t);
+        stats.adapter_tokens.sort_unstable_by_key(|&(t, _)| t);
         stats
     }
 }
@@ -748,6 +1043,8 @@ struct LiveSession<'a> {
 /// same latency/peak accounting.
 struct EngineSession {
     slot: usize,
+    /// Task admitted under — per-adapter token accounting at release.
+    task: u32,
     reply: Sender<Response>,
     /// Enqueue → admission: the waiting this request actually did.
     queue_us: u64,
@@ -788,7 +1085,8 @@ fn worker_loop(
     let mut engine: Option<Box<dyn FusedDecode + '_>> = None;
     let mut engine_probed = false;
     let mut elive: Vec<EngineSession> = Vec::new();
-    let mut waiting: std::collections::VecDeque<(Vec<u32>, usize, Sender<Response>, Instant)> =
+    type WaitingGenerate = (u32, Vec<u32>, usize, Sender<Response>, Instant);
+    let mut waiting: std::collections::VecDeque<WaitingGenerate> =
         std::collections::VecDeque::new();
     loop {
         let mut batch: Vec<Request> = Vec::new();
@@ -838,13 +1136,22 @@ fn worker_loop(
         let formed = Instant::now();
         // Validate per request: one malformed request must not poison
         // the batch, let alone the worker. Classification needs exactly
-        // `seq` ids; generation needs a non-empty prompt within `seq`.
+        // `seq` ids; generation needs a non-empty prompt within `seq`;
+        // both need a task the backend currently serves (unknown or
+        // unloaded adapters are rejected here, never batched).
         let mut classify = Vec::new();
         for r in batch {
             match r {
-                Request::Classify { ids, reply, enqueued } => {
-                    if ids.len() == seq {
-                        classify.push((ids, reply, enqueued));
+                Request::Classify { task, ids, reply, enqueued } => {
+                    if !be.has_task(task) {
+                        stats.rejected += 1;
+                        let queue_us = formed.duration_since(enqueued).as_micros() as u64;
+                        let _ = reply.send(Response::failure(
+                            format!("bad request: task {task} has no resident adapter"),
+                            queue_us,
+                        ));
+                    } else if ids.len() == seq {
+                        classify.push((task, ids, reply, enqueued));
                     } else {
                         stats.rejected += 1;
                         let queue_us = formed.duration_since(enqueued).as_micros() as u64;
@@ -857,12 +1164,19 @@ fn worker_loop(
                         ));
                     }
                 }
-                Request::Generate { ids, max_new, reply, enqueued } => {
+                Request::Generate { task, ids, max_new, reply, enqueued } => {
                     // A prompt of exactly `seq` tokens leaves no room to
                     // generate — reject it rather than return a silent
                     // empty continuation indistinguishable from EOS.
-                    if !ids.is_empty() && ids.len() < seq {
-                        waiting.push_back((ids, max_new, reply, enqueued));
+                    if !be.has_task(task) {
+                        stats.rejected += 1;
+                        let queue_us = formed.duration_since(enqueued).as_micros() as u64;
+                        let _ = reply.send(Response::failure(
+                            format!("bad generate request: task {task} has no resident adapter"),
+                            queue_us,
+                        ));
+                    } else if !ids.is_empty() && ids.len() < seq {
+                        waiting.push_back((task, ids, max_new, reply, enqueued));
                     } else {
                         stats.rejected += 1;
                         let queue_us = formed.duration_since(enqueued).as_micros() as u64;
@@ -878,19 +1192,30 @@ fn worker_loop(
                 }
             }
         }
-        // Classification slice: one backend call for the whole slice.
-        // Contain backend panics: answer the batch with errors and keep
-        // serving. The backend is read-only (`&self`), so observing it
-        // after a panic is benign.
-        if !classify.is_empty() {
-            let bsz = classify.len();
+        // Classification: one backend call per **task run**. The slice
+        // is sorted by task (stable, so arrival order within a task is
+        // kept) and drained run by run — each resident adapter's
+        // attached model runs once per formed batch, and a panic in one
+        // task's forward fails only that run's requests. A single-task
+        // workload degenerates to exactly the old one-call path.
+        // Waiting behind an earlier run is booked as queueing, same as
+        // generation admission — queue_us + compute_us still covers the
+        // full in-server time.
+        classify.sort_by_key(|(task, ..)| *task);
+        while let Some(&(task, ..)) = classify.first() {
+            let run_len = classify.iter().take_while(|(t, ..)| *t == task).count();
+            let rest = classify.split_off(run_len);
+            let run = std::mem::replace(&mut classify, rest);
+            let bsz = run.len();
             let mut ids = Vec::with_capacity(bsz * seq);
-            for (req_ids, _, _) in &classify {
+            for (_, req_ids, _, _) in &run {
                 ids.extend_from_slice(req_ids);
             }
-            let result =
-                std::panic::catch_unwind(AssertUnwindSafe(|| backend.infer(&ids, bsz, seq)));
-            let compute = formed.elapsed();
+            let run_start = Instant::now();
+            let result = std::panic::catch_unwind(AssertUnwindSafe(|| {
+                backend.infer_task(task, &ids, bsz, seq)
+            }));
+            let compute = run_start.elapsed();
             let compute_us = compute.as_micros() as u64;
             match result {
                 Ok(logits) => {
@@ -900,8 +1225,8 @@ fn worker_loop(
                     stats.batches += 1;
                     stats.total_batch_fill += bsz;
                     stats.requests += bsz;
-                    for ((_, reply, enqueued), row) in classify.into_iter().zip(logits) {
-                        let queue_us = formed.duration_since(enqueued).as_micros() as u64;
+                    for ((_, _, reply, enqueued), row) in run.into_iter().zip(logits) {
+                        let queue_us = run_start.duration_since(enqueued).as_micros() as u64;
                         let _ = reply.send(Response {
                             logits: row,
                             tokens: Vec::new(),
@@ -917,8 +1242,8 @@ fn worker_loop(
                 Err(panic) => {
                     stats.failed += bsz;
                     let msg = format!("backend error: {}", panic_message(panic));
-                    for (_, reply, enqueued) in classify {
-                        let queue_us = formed.duration_since(enqueued).as_micros() as u64;
+                    for (_, _, reply, enqueued) in run {
+                        let queue_us = run_start.duration_since(enqueued).as_micros() as u64;
                         let _ = reply.send(Response {
                             logits: Vec::new(),
                             tokens: Vec::new(),
@@ -940,7 +1265,7 @@ fn worker_loop(
         // backends, runs the whole continuation), so it is wrapped in
         // the same panic containment as the batched backend call.
         while live.len() + elive.len() < max_sessions {
-            let Some((ids, max_new, reply, enqueued)) = waiting.pop_front() else {
+            let Some((task, ids, max_new, reply, enqueued)) = waiting.pop_front() else {
                 break;
             };
             if !engine_probed {
@@ -953,11 +1278,16 @@ fn worker_loop(
                 // Engine admission prefills the prompt, so it gets the
                 // same panic containment as the fallback begin_decode.
                 // A panicking admission (e.g. a token id outside the
-                // vocabulary) aborts before the slot is occupied, so
-                // the engine stays consistent for its other sessions.
-                match std::panic::catch_unwind(AssertUnwindSafe(|| eng.admit(&ids, max_new))) {
+                // vocabulary, or an adapter unloaded while this request
+                // queued) aborts before the slot is occupied, so the
+                // engine stays consistent for its other sessions.
+                let admitted = std::panic::catch_unwind(AssertUnwindSafe(|| {
+                    eng.admit(task, &ids, max_new)
+                }));
+                match admitted {
                     Ok(slot) => elive.push(EngineSession {
                         slot,
+                        task,
                         reply,
                         queue_us,
                         started,
@@ -977,6 +1307,16 @@ fn worker_loop(
                         });
                     }
                 }
+                continue;
+            }
+            // The per-stream fallback has no registry: only the bare
+            // base (task 0) is servable without a fused engine.
+            if task != 0 {
+                stats.rejected += 1;
+                let _ = reply.send(Response::failure(
+                    format!("backend cannot serve adapter task {task} (no fused engine)"),
+                    queue_us,
+                ));
                 continue;
             }
             match std::panic::catch_unwind(AssertUnwindSafe(|| be.begin_decode(&ids, max_new))) {
@@ -1031,6 +1371,10 @@ fn worker_loop(
                             let tokens = eng.release(s.slot);
                             stats.requests += 1;
                             stats.generated_tokens += tokens.len();
+                            merge_task_counters(
+                                &mut stats.adapter_tokens,
+                                &[(s.task, tokens.len())],
+                            );
                             let _ = s.reply.send(Response {
                                 logits: Vec::new(),
                                 tokens,
@@ -1093,6 +1437,8 @@ fn worker_loop(
                         let tokens = s.stream.tokens().to_vec();
                         stats.requests += 1;
                         stats.generated_tokens += tokens.len();
+                        // Stream-path sessions are always task 0.
+                        merge_task_counters(&mut stats.adapter_tokens, &[(0, tokens.len())]);
                         let _ = s.reply.send(Response {
                             logits: Vec::new(),
                             tokens,
@@ -1668,7 +2014,7 @@ mod tests {
     }
 
     impl FusedDecode for PacedEngine {
-        fn admit(&mut self, _prompt: &[u32], max_new: usize) -> usize {
+        fn admit(&mut self, _task: u32, _prompt: &[u32], max_new: usize) -> usize {
             let i = self
                 .slots
                 .iter()
@@ -1773,6 +2119,143 @@ mod tests {
         assert!(
             stats.mean_batch() > 1.0,
             "engine sweeps missing from batch accounting: {stats:?}"
+        );
+    }
+
+    #[test]
+    fn unknown_task_requests_are_rejected() {
+        // Single-tenant backends serve only task 0; any other task is
+        // rejected per request at validation, never batched.
+        let (client, server) = start(echo(4, Duration::ZERO), ServeCfg::default());
+        let err = client.infer_task(3, vec![1, 2, 3, 4]).unwrap_err();
+        assert!(format!("{err}").contains("no resident adapter"), "{err}");
+        let err = client.generate_task(3, vec![1, 2], 4).unwrap_err();
+        assert!(format!("{err}").contains("no resident adapter"), "{err}");
+        // Task 0 keeps flowing on the same queue.
+        assert_eq!(client.infer(vec![1, 2, 3, 4]).unwrap().logits[0], 10.0);
+        drop(client);
+        let stats = server.join();
+        assert_eq!(stats.rejected, 2);
+        assert_eq!(stats.requests, 1);
+        assert_eq!(stats.resident_adapters, 0);
+        assert!(stats.adapter_tokens.is_empty());
+    }
+
+    fn dsee_lm_base(seed: u64) -> Transformer {
+        use crate::config::{DseeCfg, ModelCfg};
+        use crate::dsee::attach_dsee;
+        use crate::util::Rng;
+        let cfg = ModelCfg {
+            name: "tiny-serve-adapter".into(),
+            vocab: 60,
+            max_seq: 8,
+            d_model: 16,
+            n_layers: 2,
+            n_heads: 4,
+            d_ffn: 24,
+            causal: true,
+            n_classes: 3,
+            head: "lm".into(),
+            n_prefix: 0,
+        };
+        let mut rng = Rng::new(seed);
+        let mut m = Transformer::new(&cfg, &mut rng);
+        attach_dsee(
+            &mut m,
+            &DseeCfg {
+                rank: 4,
+                n_sparse: 16,
+                ..DseeCfg::default()
+            },
+            &mut rng,
+        );
+        m
+    }
+
+    /// Re-randomize the DSEE carriers so each "task" is a genuinely
+    /// different delta over the same frozen base.
+    fn tuned(base: &Transformer, seed: u64) -> Transformer {
+        use crate::tensor::Tensor;
+        use crate::util::Rng;
+        let mut rng = Rng::new(seed);
+        let mut m = base.clone();
+        for lin in m.attn_projections_mut() {
+            if let Some(a) = &mut lin.adapter {
+                a.u = Tensor::randn(&[a.u.rows(), a.u.cols()], 0.2, &mut rng);
+                a.scale = 0.7;
+            }
+            if let Some(r) = &mut lin.residual {
+                r.values = Tensor::randn(&[r.nnz()], 0.3, &mut rng);
+            }
+        }
+        m
+    }
+
+    #[test]
+    fn multi_tenant_serves_tasks_with_isolated_caches_and_stats() {
+        use crate::infer::adapter::AdapterRegistry;
+        let base_t = dsee_lm_base(904);
+        let reg = Arc::new(AdapterRegistry::new(base_t.compile_base(MergePolicy::Csr)));
+        let ad1 = tuned(&base_t, 21).compile_adapter(MergePolicy::Csr);
+        let ad2 = tuned(&base_t, 22).compile_adapter(MergePolicy::Csr);
+        reg.load(1, &ad1);
+        reg.load(2, &ad2);
+        // Direct attached models for parity.
+        let m0 = Arc::clone(reg.base().model());
+        let m1 = reg.base().attach(&ad1);
+        let m2 = reg.base().attach(&ad2);
+        let (client, server) = start_multi_tenant(
+            Arc::clone(&reg),
+            ServeCfg {
+                cache_entries: 32,
+                ..ServeCfg::default()
+            },
+        );
+        let seq = m0.cfg.max_seq;
+        let ids: Vec<u32> = (0..seq as u32).map(|i| (i * 7 + 3) % 60).collect();
+        // Per-task classification matches the directly-attached model.
+        let want0 = m0.forward(&ids, 1, seq).row(0).to_vec();
+        let want1 = m1.forward(&ids, 1, seq).row(0).to_vec();
+        for (task, want) in [(0u32, &want0), (1, &want1)] {
+            let got = client.infer_task(task, ids.clone()).unwrap();
+            assert!(!got.cached);
+            assert_eq!(&got.logits, want, "task {task} logits diverge");
+        }
+        assert_ne!(want0, want1, "adapter 1 did not change the served logits");
+        // Same (task, ids) hits the task-keyed cache; a reload bumps
+        // the epoch and retires exactly that task's keyspace.
+        assert!(client.infer_task(1, ids.clone()).unwrap().cached);
+        reg.load(1, &ad1);
+        let after = client.infer_task(1, ids.clone()).unwrap();
+        assert!(!after.cached, "stale adapter logits served across a reload");
+        assert!(
+            client.infer_task(0, ids.clone()).unwrap().cached,
+            "task 1's reload must not invalidate task 0's entries"
+        );
+        // Per-task generation matches the directly-attached greedy
+        // decode, and lands in the per-task token counters.
+        let prompt = vec![5u32, 9, 2];
+        let want_t1 = m1.generate_greedy(&prompt, 4, seq).unwrap();
+        let want_t2 = m2.generate_greedy(&prompt, 4, seq).unwrap();
+        let got_t1 = client.generate_task(1, prompt.clone(), 4).unwrap();
+        let got_t2 = client.generate_task(2, prompt.clone(), 4).unwrap();
+        assert_eq!(got_t1.tokens, want_t1, "task 1 generation diverges");
+        assert_eq!(got_t2.tokens, want_t2, "task 2 generation diverges");
+        // Unloading stops new admissions for that task only.
+        assert!(reg.unload(2));
+        assert!(client.generate_task(2, prompt.clone(), 4).is_err());
+        assert!(client.generate_task(1, prompt, 4).is_ok());
+        drop(client);
+        let stats = server.join();
+        assert_eq!(stats.resident_adapters, 1, "task 2 was evicted");
+        assert_eq!(stats.adapter_swaps, 1);
+        assert_eq!(stats.adapter_evictions, 1);
+        // Each task's epoch counts its retired cache keyspaces.
+        assert_eq!(stats.adapter_invalidations, vec![(1, 1), (2, 1)]);
+        assert_eq!(
+            stats.adapter_tokens,
+            vec![(1, 2 * want_t1.len()), (2, want_t2.len())],
+            "per-adapter token accounting is off"
         );
     }
 

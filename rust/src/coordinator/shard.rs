@@ -23,18 +23,28 @@ use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Condvar, Mutex};
 use std::time::Duration;
 
-/// FNV-1a over a token-id slice — the affinity key for shard routing.
+/// FNV-1a over `(task, token ids)` — the affinity key for shard
+/// routing.
 ///
-/// Requests with identical ids hash to the same shard, so repeated
-/// sequences land in the same worker's deque: its batches correlate
-/// (one backend call covers the duplicates back-to-back), and once the
-/// first reply fills the client-side response cache, *later* identical
-/// requests hit it before enqueueing. (Duplicates already queued are
-/// not deduplicated — the cache is client-side only.) Work-stealing
-/// remains the fallback when affinity skews load — a hot shard's
-/// backlog is drained by idle peers exactly as under round-robin.
-pub fn affinity_hash(ids: &[u32]) -> u64 {
+/// Requests with identical ids *on the same adapter* hash to the same
+/// shard, so repeated sequences land in the same worker's deque: its
+/// batches correlate (one backend call covers the duplicates
+/// back-to-back), and once the first reply fills the client-side
+/// response cache, *later* identical requests hit it before enqueueing.
+/// (Duplicates already queued are not deduplicated — the cache is
+/// client-side only.) The task id is hashed first — its four
+/// little-endian bytes seed the stream before any token — so the same
+/// prompt on different adapters neither collides in the key space nor
+/// stacks onto one shard: each tenant's traffic spreads independently.
+/// Work-stealing remains the fallback when affinity skews load — a hot
+/// shard's backlog is drained by idle peers exactly as under
+/// round-robin.
+pub fn affinity_hash(task: u32, ids: &[u32]) -> u64 {
     let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for b in task.to_le_bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100_0000_01b3);
+    }
     for &t in ids {
         for b in t.to_le_bytes() {
             h ^= b as u64;
@@ -311,11 +321,16 @@ mod tests {
         let q = ShardedQueue::new(4, 64);
         let ids_a = [3u32, 1, 4, 1, 5];
         let ids_b = [2u32, 7, 1, 8];
-        let (ka, kb) = (affinity_hash(&ids_a), affinity_hash(&ids_b));
-        // The hash is a pure function of the ids…
-        assert_eq!(ka, affinity_hash(&ids_a.to_vec()));
+        let (ka, kb) = (affinity_hash(0, &ids_a), affinity_hash(0, &ids_b));
+        // The hash is a pure function of the task and ids…
+        assert_eq!(ka, affinity_hash(0, &ids_a.to_vec()));
         // …and distinguishes order (FNV-1a is sequence-sensitive).
-        assert_ne!(affinity_hash(&[1u32, 2]), affinity_hash(&[2u32, 1]));
+        assert_ne!(affinity_hash(0, &[1u32, 2]), affinity_hash(0, &[2u32, 1]));
+        // The task id participates: the same prompt on different
+        // adapters must not share an affinity key (nor, typically, a
+        // shard — tenants spread independently).
+        assert_ne!(affinity_hash(1, &ids_a), affinity_hash(2, &ids_a));
+        assert_ne!(affinity_hash(1, &ids_a), affinity_hash(0, &ids_a));
         for i in 0..6u32 {
             q.push_affine(ka, i).unwrap();
             q.push_affine(kb, 100 + i).unwrap();

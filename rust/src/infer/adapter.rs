@@ -1,0 +1,652 @@
+//! **Multi-tenant compilation**: one resident base, N task deltas.
+//!
+//! The monolithic [`Transformer::compile`] folds everything — frozen
+//! base, low-rank `UV`, scattered `S₂`, gates, head — into one model
+//! per task, so serving T tasks costs T models of RAM. DSEE's whole
+//! pitch is that the task-specific part is ~0.5% of the parameters;
+//! this module splits compilation along that line:
+//!
+//! * [`Transformer::compile_base`] → [`CompiledBase`]: the frozen
+//!   `W⊙S₁` weights (dense, or CSR under [`MergePolicy::Csr`]),
+//!   biases, layernorms, and embeddings, every heavy buffer behind
+//!   `Arc`. Compiled **once** per process.
+//! * [`Transformer::compile_adapter`] → [`TaskAdapter`]: the per-task
+//!   delta — `UV` factors, the `S₂` scatter on its frozen support Ω,
+//!   per-head gates, prefix rows, and the task head. Kilobytes, not
+//!   megabytes.
+//! * [`CompiledBase::attach`] glues a delta onto the base, producing a
+//!   full [`InferenceModel`] whose base weights, biases, norms, and
+//!   embeddings are `Arc`-shares of the resident base — *this is the
+//!   per-task compile* in the multi-tenant world, and the model every
+//!   parity test compares against the monolithic form.
+//!
+//! [`AdapterRegistry`] owns the base and the live task set:
+//! `load`/`unload`/swap with a **per-adapter epoch** that increments on
+//! every reload or eviction. The serving layer keys its response cache
+//! on `(task, epoch, tokens)` (see `coordinator::cache::task_key`), so
+//! bumping the epoch makes every stale entry unreachable — the
+//! automatic cache-invalidation trigger the epoch hook was waiting
+//! for. Tombstoned (unloaded) tasks keep their epoch so a later
+//! re-load can never resurrect pre-eviction cache entries.
+//!
+//! Semantics notes, load-bearing for the parity suite:
+//! * Attached models apply gates explicitly to the value rows
+//!   (`g·(attn·v) ≡ attn·(g·v)`) instead of folding them into the
+//!   shared `wv`; exact-zero gates contribute exact zeros, so
+//!   `Compact`-attached equals `Merged`-attached, and the monolithic
+//!   forms match at 1e-4.
+//! * Under [`MergePolicy::Compact`] the *base* keeps full shapes (two
+//!   tasks can gate different heads, so column surgery on the shared
+//!   weights is impossible); per-task **structural** FFN/head removal
+//!   is therefore a monolithic-compile-only optimization.
+//! * Every task must come from the *same* base transformer (same
+//!   shapes, same `W⊙S₁`); only the DSEE carriers, gates, prefix, and
+//!   head may differ between tasks.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, RwLock};
+
+use super::{
+    CooScatter, CsrMatrix, InferAttention, InferBlock, InferHead, InferLinear, InferenceModel,
+    MergePolicy, Repr, CSR_MIN_SPARSITY,
+};
+use crate::nn::{Head, Transformer};
+use crate::tensor::Tensor;
+
+/// Freeze a dense `[in, out]` weight + bias into an [`InferLinear`]
+/// with no task delta, honoring the policy's representation choice.
+fn freeze_linear(w: Tensor, bias: Vec<f32>, policy: MergePolicy) -> InferLinear {
+    let repr = match policy {
+        MergePolicy::Csr => {
+            let csr = CsrMatrix::from_dense(&w);
+            if csr.sparsity() >= CSR_MIN_SPARSITY {
+                Repr::Csr(Arc::new(csr))
+            } else {
+                Repr::Dense(Arc::new(w))
+            }
+        }
+        MergePolicy::Merged | MergePolicy::Compact => Repr::Dense(Arc::new(w)),
+    };
+    InferLinear {
+        repr,
+        low: None,
+        bias: Arc::new(bias),
+        sparse: None,
+    }
+}
+
+fn freeze_base_linear(lin: &crate::nn::linear::Linear, policy: MergePolicy) -> InferLinear {
+    freeze_linear(lin.effective_w(), lin.b.data.clone(), policy)
+}
+
+/// The per-task delta of one linear: the `UV` side-path and the `S₂`
+/// scatter (either may be absent). No base weight, no bias — those
+/// stay resident in the [`CompiledBase`].
+#[derive(Clone, Debug)]
+pub struct LinDelta {
+    low: Option<(Tensor, Tensor, f32)>,
+    sparse: Option<CooScatter>,
+}
+
+impl LinDelta {
+    fn from_linear(lin: &crate::nn::linear::Linear) -> LinDelta {
+        let low = lin
+            .adapter
+            .as_ref()
+            .map(|a| (a.u.clone(), a.v.clone(), a.scale));
+        let sparse = lin.residual.as_ref().and_then(|r| {
+            if r.idx.is_empty() {
+                None
+            } else {
+                Some(CooScatter::from_entries(
+                    lin.in_dim(),
+                    lin.out_dim(),
+                    &r.idx,
+                    &r.values.data,
+                ))
+            }
+        });
+        LinDelta { low, sparse }
+    }
+
+    /// Attach this delta to its base linear: `Arc`-share the base
+    /// weight and bias, own only the task carriers.
+    fn attach(&self, base: &InferLinear) -> InferLinear {
+        if let Some((u, v, _)) = &self.low {
+            debug_assert_eq!(u.rows(), base.in_dim(), "LinDelta::attach: U rows");
+            debug_assert_eq!(v.cols(), base.out_dim(), "LinDelta::attach: V cols");
+        }
+        InferLinear {
+            repr: base.repr.clone(),
+            low: self.low.clone(),
+            bias: Arc::clone(&base.bias),
+            sparse: self.sparse.clone(),
+        }
+    }
+}
+
+/// Per-block task delta: one [`LinDelta`] per projection plus the
+/// task's per-head gates (`None` when all 1.0).
+#[derive(Clone, Debug)]
+pub struct AdapterBlock {
+    wq: LinDelta,
+    wk: LinDelta,
+    wv: LinDelta,
+    wo: LinDelta,
+    fc1: LinDelta,
+    fc2: LinDelta,
+    gates: Option<Vec<f32>>,
+}
+
+/// A compiled task delta — everything task-specific and nothing else.
+/// Cheap to hold in memory by the hundred; see the module docs.
+#[derive(Clone, Debug)]
+pub struct TaskAdapter {
+    policy: MergePolicy,
+    blocks: Vec<AdapterBlock>,
+    head_w: Tensor,
+    head_b: Vec<f32>,
+    prefix: Option<Tensor>,
+}
+
+impl TaskAdapter {
+    pub fn policy(&self) -> MergePolicy {
+        self.policy
+    }
+
+    /// Heap bytes this delta owns (`UV` + `S₂` + gates + head + prefix).
+    pub fn delta_bytes(&self) -> usize {
+        let mut total = self.head_w.data.len() * 4 + self.head_b.len() * 4;
+        if let Some(p) = &self.prefix {
+            total += p.data.len() * 4;
+        }
+        for blk in &self.blocks {
+            for d in [&blk.wq, &blk.wk, &blk.wv, &blk.wo, &blk.fc1, &blk.fc2] {
+                if let Some((u, v, _)) = &d.low {
+                    total += (u.data.len() + v.data.len()) * 4;
+                }
+                if let Some(s) = &d.sparse {
+                    total += s.vals.len() * 4 + (s.row_idx.len() + s.col_idx.len()) * 4;
+                }
+            }
+            total += blk.gates.as_ref().map_or(0, |g| g.len() * 4);
+        }
+        total
+    }
+}
+
+/// The resident base: a full base-only [`InferenceModel`] (usable
+/// directly — it *is* "task 0", the untuned base), plus dense copies of
+/// the base head for tie-detection when attaching.
+#[derive(Clone, Debug)]
+pub struct CompiledBase {
+    model: Arc<InferenceModel>,
+    head_w: Tensor,
+    head_b: Vec<f32>,
+}
+
+impl CompiledBase {
+    /// The base-only model (frozen `W⊙S₁`, unit task delta).
+    pub fn model(&self) -> &Arc<InferenceModel> {
+        &self.model
+    }
+
+    /// Attach a task delta to the resident base, producing the
+    /// per-task serving model. Base weights, biases, layernorms, and
+    /// embeddings are `Arc`-shared with the base (and with every other
+    /// attached task); the returned model owns only the delta. When the
+    /// task head equals the base head bit-for-bit, even the head is
+    /// shared.
+    pub fn attach(&self, adapter: &TaskAdapter) -> InferenceModel {
+        let base = &*self.model;
+        assert_eq!(
+            adapter.policy, base.policy,
+            "attach: adapter compiled for {:?}, base for {:?}",
+            adapter.policy, base.policy
+        );
+        assert_eq!(
+            adapter.blocks.len(),
+            base.blocks.len(),
+            "attach: adapter has {} blocks, base {}",
+            adapter.blocks.len(),
+            base.blocks.len()
+        );
+        let blocks: Vec<InferBlock> = base
+            .blocks
+            .iter()
+            .zip(&adapter.blocks)
+            .map(|(bb, ab)| InferBlock {
+                ln1: bb.ln1.clone(),
+                attn: InferAttention {
+                    wq: ab.wq.attach(&bb.attn.wq),
+                    wk: ab.wk.attach(&bb.attn.wk),
+                    wv: ab.wv.attach(&bb.attn.wv),
+                    wo: ab.wo.attach(&bb.attn.wo),
+                    gates: ab.gates.clone(),
+                    n_heads: bb.attn.n_heads,
+                    head_dim: bb.attn.head_dim,
+                    causal: bb.attn.causal,
+                },
+                ln2: bb.ln2.clone(),
+                fc1: ab.fc1.attach(&bb.fc1),
+                fc2: ab.fc2.attach(&bb.fc2),
+                adapter1: bb.adapter1.clone(),
+                adapter2: bb.adapter2.clone(),
+            })
+            .collect();
+        let base_head = match &base.head {
+            InferHead::Classifier(l) | InferHead::Regressor(l) | InferHead::Lm(l) => l,
+        };
+        let tied = adapter.head_w == self.head_w && adapter.head_b == self.head_b;
+        let head_lin = if tied {
+            base_head.clone() // Arc-shared with the base
+        } else {
+            freeze_linear(adapter.head_w.clone(), adapter.head_b.clone(), adapter.policy)
+        };
+        let head = match &base.head {
+            InferHead::Classifier(_) => InferHead::Classifier(head_lin),
+            InferHead::Regressor(_) => InferHead::Regressor(head_lin),
+            InferHead::Lm(_) => InferHead::Lm(head_lin),
+        };
+        InferenceModel {
+            cfg: base.cfg.clone(),
+            policy: base.policy,
+            tok: Arc::clone(&base.tok),
+            pos: Arc::clone(&base.pos),
+            prefix: adapter.prefix.clone().or_else(|| base.prefix.clone()),
+            blocks,
+            ln_f: base.ln_f.clone(),
+            head,
+        }
+    }
+}
+
+impl Transformer {
+    /// Compile only the frozen, task-independent half of this model:
+    /// `W⊙S₁` per linear (CSR when the policy and sparsity warrant),
+    /// biases, layernorms, embeddings, and the base head. DSEE carriers
+    /// (`UV`, `S₂`), trainable gates, and prefix rows are *not* folded
+    /// in — they are what [`Transformer::compile_adapter`] extracts.
+    ///
+    /// The base model does carry this transformer's own gates when they
+    /// are non-unit (applied explicitly, like an attached model), so
+    /// serving the bare base stays faithful. Under
+    /// [`MergePolicy::Compact`] no structural surgery happens — the
+    /// shapes must stay valid for *every* future task.
+    pub fn compile_base(&self, policy: MergePolicy) -> CompiledBase {
+        let blocks: Vec<InferBlock> = self
+            .blocks
+            .iter()
+            .map(|blk| {
+                let att = &blk.attn;
+                let gates = if att.gates.data.iter().any(|&g| g != 1.0) {
+                    Some(att.gates.data.clone())
+                } else {
+                    None
+                };
+                InferBlock {
+                    ln1: super::InferNorm::from_train(&blk.ln1),
+                    attn: InferAttention {
+                        wq: freeze_base_linear(&att.wq, policy),
+                        wk: freeze_base_linear(&att.wk, policy),
+                        wv: freeze_base_linear(&att.wv, policy),
+                        wo: freeze_base_linear(&att.wo, policy),
+                        gates,
+                        n_heads: att.n_heads,
+                        head_dim: att.head_dim,
+                        causal: att.causal,
+                    },
+                    ln2: super::InferNorm::from_train(&blk.ln2),
+                    fc1: freeze_base_linear(&blk.ffn.fc1, policy),
+                    fc2: freeze_base_linear(&blk.ffn.fc2, policy),
+                    adapter1: blk.adapter1.as_ref().map(|ad| super::InferAdapter {
+                        down: freeze_base_linear(&ad.down, policy),
+                        up: freeze_base_linear(&ad.up, policy),
+                    }),
+                    adapter2: blk.adapter2.as_ref().map(|ad| super::InferAdapter {
+                        down: freeze_base_linear(&ad.down, policy),
+                        up: freeze_base_linear(&ad.up, policy),
+                    }),
+                }
+            })
+            .collect();
+        let head_w = self.head_proj().effective_w();
+        let head_b = self.head_proj().b.data.clone();
+        let head_lin = freeze_linear(head_w.clone(), head_b.clone(), policy);
+        let head = match &self.head {
+            Head::Classifier(_) => InferHead::Classifier(head_lin),
+            Head::Regressor(_) => InferHead::Regressor(head_lin),
+            Head::Lm(_) => InferHead::Lm(head_lin),
+        };
+        let model = InferenceModel {
+            cfg: self.cfg.clone(),
+            policy,
+            tok: Arc::new(self.embed.tok.clone()),
+            pos: Arc::new(self.embed.pos.clone()),
+            prefix: self.prefix.as_ref().map(|p| p.vecs.clone()),
+            blocks,
+            ln_f: super::InferNorm::from_train(&self.ln_f),
+            head,
+        };
+        CompiledBase {
+            model: Arc::new(model),
+            head_w,
+            head_b,
+        }
+    }
+
+    /// Extract this model's task delta: per-linear `UV` factors and
+    /// `S₂` scatters (training support order preserved — the fused
+    /// kernels' bit-identity argument needs one fixed entry order),
+    /// per-head gates when non-unit, prefix rows, and the full task
+    /// head (`W⊙S₁ + UV + S₂` of the head projection).
+    pub fn compile_adapter(&self, policy: MergePolicy) -> TaskAdapter {
+        let blocks = self
+            .blocks
+            .iter()
+            .map(|blk| {
+                let att = &blk.attn;
+                let gates = if att.gates.data.iter().any(|&g| g != 1.0) {
+                    Some(att.gates.data.clone())
+                } else {
+                    None
+                };
+                AdapterBlock {
+                    wq: LinDelta::from_linear(&att.wq),
+                    wk: LinDelta::from_linear(&att.wk),
+                    wv: LinDelta::from_linear(&att.wv),
+                    wo: LinDelta::from_linear(&att.wo),
+                    fc1: LinDelta::from_linear(&blk.ffn.fc1),
+                    fc2: LinDelta::from_linear(&blk.ffn.fc2),
+                    gates,
+                }
+            })
+            .collect();
+        TaskAdapter {
+            policy,
+            blocks,
+            head_w: self.head_proj().effective_total(),
+            head_b: self.head_proj().b.data.clone(),
+            prefix: self.prefix.as_ref().map(|p| p.vecs.clone()),
+        }
+    }
+}
+
+struct AdapterEntry {
+    /// `None` = tombstone: the task was unloaded but its epoch is
+    /// retained so a later re-load can never resurrect stale cache
+    /// entries keyed at an older epoch.
+    model: Option<Arc<InferenceModel>>,
+    epoch: u64,
+}
+
+/// The live task set: one resident [`CompiledBase`] plus the attached
+/// per-task models, each with a monotone **epoch**. `Sync` — the
+/// serving worker pool shares one registry behind `Arc`; `resolve` is
+/// a read-lock clone of an `Arc`, cheap enough for per-request use.
+pub struct AdapterRegistry {
+    base: Arc<CompiledBase>,
+    inner: RwLock<HashMap<u32, AdapterEntry>>,
+    swaps: AtomicU64,
+    evictions: AtomicU64,
+}
+
+/// Registry observability snapshot, surfaced through `ServeStats`.
+#[derive(Clone, Debug, Default)]
+pub struct AdapterStats {
+    /// Tasks currently resident (tombstones excluded).
+    pub resident: usize,
+    /// Hot reloads over a live adapter.
+    pub swaps: u64,
+    /// Unloads of a live adapter.
+    pub evictions: u64,
+    /// Per-task cache-invalidation counts — each task's current epoch,
+    /// i.e. how many times its cache keyspace has been retired.
+    /// Sorted by task id; includes tombstoned tasks.
+    pub invalidations: Vec<(u32, u64)>,
+}
+
+impl AdapterRegistry {
+    pub fn new(base: CompiledBase) -> AdapterRegistry {
+        AdapterRegistry {
+            base: Arc::new(base),
+            inner: RwLock::new(HashMap::new()),
+            swaps: AtomicU64::new(0),
+            evictions: AtomicU64::new(0),
+        }
+    }
+
+    pub fn base(&self) -> &Arc<CompiledBase> {
+        &self.base
+    }
+
+    /// Load (or hot-swap) `task`, attaching the delta to the resident
+    /// base. Returns the task's new epoch: 0 for a first load, `old +
+    /// 1` for a reload or a load over a tombstone — every path that
+    /// could change served bytes retires the old cache keyspace.
+    ///
+    /// Task id 0 is reserved for the bare base and cannot be loaded.
+    pub fn load(&self, task: u32, adapter: &TaskAdapter) -> u64 {
+        assert_ne!(task, 0, "task 0 is the resident base");
+        let model = Arc::new(self.base.attach(adapter));
+        let mut map = self.inner.write().expect("adapter registry poisoned");
+        match map.get_mut(&task) {
+            Some(entry) => {
+                if entry.model.is_some() {
+                    self.swaps.fetch_add(1, Ordering::Relaxed);
+                }
+                entry.epoch += 1;
+                entry.model = Some(model);
+                entry.epoch
+            }
+            None => {
+                map.insert(
+                    task,
+                    AdapterEntry {
+                        model: Some(model),
+                        epoch: 0,
+                    },
+                );
+                0
+            }
+        }
+    }
+
+    /// Unload `task`, leaving an epoch-retaining tombstone. Returns
+    /// whether a live adapter was actually evicted. In-flight sessions
+    /// holding the old `Arc` finish unaffected — eviction only stops
+    /// *new* admissions.
+    pub fn unload(&self, task: u32) -> bool {
+        let mut map = self.inner.write().expect("adapter registry poisoned");
+        match map.get_mut(&task) {
+            Some(entry) if entry.model.is_some() => {
+                entry.model = None;
+                entry.epoch += 1;
+                self.evictions.fetch_add(1, Ordering::Relaxed);
+                true
+            }
+            _ => false,
+        }
+    }
+
+    /// The serving lookup: the task's attached model and current epoch.
+    /// Task 0 resolves to the bare base at epoch 0.
+    pub fn resolve(&self, task: u32) -> Option<(Arc<InferenceModel>, u64)> {
+        if task == 0 {
+            return Some((Arc::clone(self.base.model()), 0));
+        }
+        let map = self.inner.read().expect("adapter registry poisoned");
+        map.get(&task)
+            .and_then(|e| e.model.as_ref().map(|m| (Arc::clone(m), e.epoch)))
+    }
+
+    /// Current epoch of `task` (0 when never loaded). Tombstones keep
+    /// reporting their (bumped) epoch — that is the point of them.
+    pub fn epoch(&self, task: u32) -> u64 {
+        let map = self.inner.read().expect("adapter registry poisoned");
+        map.get(&task).map_or(0, |e| e.epoch)
+    }
+
+    /// Is `task` currently servable? (Task 0 always is.)
+    pub fn contains(&self, task: u32) -> bool {
+        if task == 0 {
+            return true;
+        }
+        let map = self.inner.read().expect("adapter registry poisoned");
+        map.get(&task).is_some_and(|e| e.model.is_some())
+    }
+
+    /// Live (non-tombstone) adapter count, excluding the base.
+    pub fn resident(&self) -> usize {
+        let map = self.inner.read().expect("adapter registry poisoned");
+        map.values().filter(|e| e.model.is_some()).count()
+    }
+
+    pub fn stats(&self) -> AdapterStats {
+        let map = self.inner.read().expect("adapter registry poisoned");
+        let mut invalidations: Vec<(u32, u64)> =
+            map.iter().map(|(&t, e)| (t, e.epoch)).collect();
+        invalidations.sort_unstable_by_key(|&(t, _)| t);
+        AdapterStats {
+            resident: map.values().filter(|e| e.model.is_some()).count(),
+            swaps: self.swaps.load(Ordering::Relaxed),
+            evictions: self.evictions.load(Ordering::Relaxed),
+            invalidations,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{DseeCfg, ModelCfg};
+    use crate::dsee::attach_dsee;
+    use crate::util::Rng;
+    use std::collections::HashSet;
+
+    fn tiny_cfg() -> ModelCfg {
+        ModelCfg {
+            name: "tiny-adapter".into(),
+            vocab: 60,
+            max_seq: 8,
+            d_model: 16,
+            n_layers: 2,
+            n_heads: 4,
+            d_ffn: 24,
+            causal: true,
+            n_classes: 3,
+            head: "lm".into(),
+            n_prefix: 0,
+        }
+    }
+
+    fn tuned_task(base: &Transformer, seed: u64) -> Transformer {
+        let mut rng = Rng::new(seed);
+        let mut m = base.clone();
+        for lin in m.attn_projections_mut() {
+            if let Some(a) = &mut lin.adapter {
+                a.u = Tensor::randn(&[a.u.rows(), a.u.cols()], 0.2, &mut rng);
+                a.scale = 0.7;
+            }
+            if let Some(r) = &mut lin.residual {
+                r.values = Tensor::randn(&[r.nnz()], 0.3, &mut rng);
+            }
+        }
+        m
+    }
+
+    fn dsee_base() -> Transformer {
+        let mut rng = Rng::new(4100);
+        let mut m = Transformer::new(&tiny_cfg(), &mut rng);
+        attach_dsee(
+            &mut m,
+            &DseeCfg {
+                rank: 4,
+                n_sparse: 16,
+                ..DseeCfg::default()
+            },
+            &mut rng,
+        );
+        m
+    }
+
+    #[test]
+    fn registry_epochs_swaps_and_tombstones() {
+        let base = dsee_base();
+        let reg = AdapterRegistry::new(base.compile_base(MergePolicy::Merged));
+        let ad = tuned_task(&base, 1).compile_adapter(MergePolicy::Merged);
+
+        assert!(reg.contains(0), "base is always servable");
+        assert!(!reg.contains(7));
+        assert_eq!(reg.load(7, &ad), 0, "first load starts at epoch 0");
+        assert!(reg.contains(7));
+        assert_eq!(reg.resident(), 1);
+        assert_eq!(reg.load(7, &ad), 1, "reload bumps the epoch");
+        let st = reg.stats();
+        assert_eq!((st.resident, st.swaps, st.evictions), (1, 1, 0));
+
+        assert!(reg.unload(7));
+        assert!(!reg.contains(7), "tombstoned");
+        assert_eq!(reg.epoch(7), 2, "unload bumps the epoch too");
+        assert!(reg.resolve(7).is_none());
+        assert!(!reg.unload(7), "double-unload is a no-op");
+        assert_eq!(reg.load(7, &ad), 3, "re-load over tombstone keeps going up");
+        assert_eq!(reg.stats().invalidations, vec![(7, 3)]);
+
+        let (m0, e0) = reg.resolve(0).expect("base resolves");
+        assert_eq!(e0, 0);
+        assert!(Arc::ptr_eq(&m0, reg.base().model()));
+    }
+
+    #[test]
+    fn attached_models_share_base_buffers() {
+        let base_t = dsee_base();
+        let cb = base_t.compile_base(MergePolicy::Merged);
+        let mut seen = HashSet::new();
+        let base_bytes = cb.model().resident_bytes(&mut seen);
+        assert!(base_bytes > 0);
+
+        // 8 attached tasks over the same seen-set: each must add only
+        // its delta (UV + S₂ + head-if-untied), not another base. (The
+        // acceptance-grade "< 1.5× at 16 adapters" bound is asserted in
+        // the perf_hotpath bench on a realistically-sized model; this
+        // tiny model's deltas are proportionally huge.)
+        let mut total = base_bytes;
+        for t in 0..8u64 {
+            let ad = tuned_task(&base_t, 10 + t).compile_adapter(MergePolicy::Merged);
+            let att = cb.attach(&ad);
+            let added = att.resident_bytes(&mut seen);
+            assert!(
+                added <= ad.delta_bytes(),
+                "attach leaked base bytes: added {added} vs delta {}",
+                ad.delta_bytes()
+            );
+            total += added;
+        }
+        // Far below the naive cost of 8 monolithic models + the base.
+        let naive = 9 * base_bytes;
+        assert!(2 * total < naive, "8 tasks cost {total} bytes vs naive {naive}");
+    }
+
+    #[test]
+    fn untouched_head_is_arc_shared() {
+        let base_t = dsee_base();
+        let cb = base_t.compile_base(MergePolicy::Merged);
+        // tuned_task only perturbs attention carriers, so the task head
+        // stays equal to the base head and must be tie-shared.
+        let ad = tuned_task(&base_t, 3).compile_adapter(MergePolicy::Merged);
+        let att = cb.attach(&ad);
+        let mut seen = HashSet::new();
+        cb.model().resident_bytes(&mut seen);
+        let head_bytes = cb.model().cfg.vocab * cb.model().cfg.d_model * 4;
+        let added = att.resident_bytes(&mut seen);
+        // delta_bytes always counts the head copy the adapter carries;
+        // a tied attach must shed at least that much.
+        assert!(
+            added + head_bytes <= ad.delta_bytes(),
+            "tied head re-counted: added {added} + head {head_bytes} vs delta {}",
+            ad.delta_bytes()
+        );
+    }
+}

@@ -135,12 +135,36 @@
 //! use them directly), and the parity suite pins fused-vs-solo
 //! equality for all three merge policies, including sessions joining
 //! and retiring mid-flight.
+//!
+//! ### The adapter-grouping pass (multi-tenant sweeps)
+//!
+//! Slots admitted via [`DecodeEngine::admit_task`] carry their own
+//! `Arc<InferenceModel>` — per-task models attached to one resident
+//! base (see [`super::adapter`]). Each sweep sorts the active rows by
+//! model identity and builds contiguous **groups** of rows on the same
+//! model. The base half of every projection
+//! ([`InferLinear::base_rows_into`]) still runs **once over all packed
+//! rows** whenever every group shares the engine's base weights
+//! (`base_ptr` equality — the common case, since attached models
+//! `Arc`-share the base), so N tasks cost one base-weight read per
+//! layer per sweep, exactly like N sessions of one task. The
+//! task-specific half then runs as a block-diagonal *grouped* gemm:
+//! per group, the low-rank side-path's two skinny gemms
+//! (`[n_g,d]×[d,r]`, then `[n_g,r]×[r,out]`) plus that task's `S₂`
+//! scatter ([`InferLinear::sidepath_rows_into`]), plus per-group gate
+//! application to the value rows and the per-task LM head. Per row the
+//! arithmetic and its order are identical to that row's solo session
+//! on its own attached model, so fused mixed-adapter sweeps stay
+//! bit-identical to solo runs — the same structural argument as
+//! single-model fusion, and the sweep still allocates nothing in
+//! steady state (`groups` is pre-reserved to capacity).
 
 use super::{InferBlock, InferHead, InferLinear, InferenceModel};
 use crate::data::vocab::EOS;
 use crate::tensor::linalg::dot;
 use crate::tensor::{gelu_scalar, Tensor};
 use std::cell::RefCell;
+use std::sync::Arc;
 
 /// Index of the largest logit under [`f32::total_cmp`]'s total order,
 /// first index winning exact ties — the greedy decode rule. One
@@ -358,8 +382,14 @@ impl DecodeScratch {
 /// [`InferenceModel::prefill_bounded`], advanced one token at a time by
 /// [`DecodeSession::decode_step`]. Dropping a session returns its K/V
 /// buffers to the thread-local pool.
-pub struct DecodeSession<'m> {
-    model: &'m InferenceModel,
+///
+/// The session does **not** borrow its model: each step takes the model
+/// as an argument (the caller owns how models are kept alive — a plain
+/// reference for solo streams, a per-slot `Arc` for the multi-tenant
+/// engine). Stepping a session against a model other than the one that
+/// prefilled it is a logic error; shape mismatches will panic, shape
+/// coincidences will produce garbage.
+pub struct DecodeSession {
     kv: Vec<LayerKv>,
     /// Attention positions cached so far (prefix rows + tokens).
     pos: usize,
@@ -379,7 +409,7 @@ pub struct DecodeSession<'m> {
     scratch: Option<DecodeScratch>,
 }
 
-impl Drop for DecodeSession<'_> {
+impl Drop for DecodeSession {
     fn drop(&mut self) {
         for layer in self.kv.drain(..) {
             kv_release(layer.k);
@@ -400,7 +430,7 @@ impl InferenceModel {
 
     /// [`Self::prefill_bounded`] with the full `max_seq` decode budget —
     /// the session can decode until the model's position table runs out.
-    pub fn prefill(&self, ids: &[u32]) -> DecodeSession<'_> {
+    pub fn prefill(&self, ids: &[u32]) -> DecodeSession {
         self.prefill_bounded(ids, self.cfg.max_seq)
     }
 
@@ -418,7 +448,7 @@ impl InferenceModel {
     /// Panics unless the model is a causal LM (incremental decoding is
     /// meaningless when earlier positions attend to later ones) and the
     /// prompt is non-empty and within `max_seq`.
-    pub fn prefill_bounded(&self, ids: &[u32], max_new: usize) -> DecodeSession<'_> {
+    pub fn prefill_bounded(&self, ids: &[u32], max_new: usize) -> DecodeSession {
         assert!(
             self.supports_decode(),
             "prefill: incremental decoding needs a causal LM model"
@@ -477,7 +507,6 @@ impl InferenceModel {
         let last_logits = lm.forward_row(&h_last);
 
         DecodeSession {
-            model: self,
             kv,
             pos: eff_seq,
             tokens: seq,
@@ -538,6 +567,7 @@ impl InferenceModel {
         let budget = max_new.min(cap - prompt.len());
         let sess = self.prefill_bounded(prompt, budget);
         Ok(GreedyStream {
+            model: self,
             out: Vec::with_capacity(budget),
             budget,
             done: budget == 0,
@@ -553,7 +583,8 @@ impl InferenceModel {
 /// order across streams cannot change any stream's output because each
 /// owns its session outright.
 pub struct GreedyStream<'m> {
-    sess: DecodeSession<'m>,
+    model: &'m InferenceModel,
+    sess: DecodeSession,
     out: Vec<u32>,
     /// Effective token budget: `min(max_new, capacity - prompt)`.
     budget: usize,
@@ -579,7 +610,7 @@ impl<'m> GreedyStream<'m> {
             self.done = true;
             return false;
         }
-        self.sess.decode_step(tok);
+        self.sess.decode_step(self.model, tok);
         true
     }
 
@@ -598,12 +629,12 @@ impl<'m> GreedyStream<'m> {
     }
 
     /// The underlying session (introspection: lengths, capacity).
-    pub fn session(&self) -> &DecodeSession<'m> {
+    pub fn session(&self) -> &DecodeSession {
         &self.sess
     }
 }
 
-impl<'m> DecodeSession<'m> {
+impl DecodeSession {
     /// LM logits at the most recently consumed position (prompt tail
     /// after [`InferenceModel::prefill`], the new token after each
     /// [`Self::decode_step`]).
@@ -637,9 +668,12 @@ impl<'m> DecodeSession<'m> {
     /// the LM logits for the new position. O(d²·L + S·d) instead of the
     /// full forward's O(S·d²·L), and **allocation-free**: every
     /// intermediate lands in the session's pre-sized scratch.
+    ///
+    /// `m` must be the model that prefilled this session (the session
+    /// itself is model-free so the multi-tenant engine can own per-slot
+    /// `Arc` models; see the struct docs).
     // lint: hot-path
-    pub fn decode_step(&mut self, token: u32) -> &[f32] {
-        let m = self.model;
+    pub fn decode_step(&mut self, m: &InferenceModel, token: u32) -> &[f32] {
         let d = m.tok.cols();
         let vocab = m.tok.rows();
         assert!(
@@ -732,6 +766,10 @@ impl InferBlock {
         self.attn.wq.forward_row_into(&h[..d], &mut q[..width], lowrank);
         self.attn.wk.forward_row_into(&h[..d], &mut k[..width], lowrank);
         self.attn.wv.forward_row_into(&h[..d], &mut v[..width], lowrank);
+        // Per-head gates (attached-adapter models only; no-op when
+        // folded): applied before the cache append so cached V rows are
+        // gated exactly once, mirroring `forward_capture`.
+        self.attn.gate_value_rows(&mut v[..width]);
         kv.k[pos * width..(pos + 1) * width].copy_from_slice(&k[..width]);
         kv.v[pos * width..(pos + 1) * width].copy_from_slice(&v[..width]);
 
@@ -873,6 +911,50 @@ impl EngineScratch {
         }
     }
 
+    /// Grow-only resize against *another* model's dims. The engine is
+    /// sized for its own model at creation; a task model admitted via
+    /// [`DecodeEngine::admit_task`] can have a wider side-path (e.g. a
+    /// low-rank delta over a fully-folded `Merged` base, where the
+    /// engine's own rank maximum is 0). Called once per admission —
+    /// never from the sweep — so the zero-allocation steady state is
+    /// untouched.
+    fn ensure(&mut self, m: &InferenceModel, capacity: usize) {
+        let ModelDims {
+            d,
+            width,
+            ffn,
+            admid,
+            rank,
+            vocab,
+        } = model_dims(m);
+        let cap_rows = m.n_prefix() + m.cfg.max_seq;
+        fn grow(buf: &mut Vec<f32>, need: usize) {
+            if buf.len() < need {
+                buf.resize(need, 0.0);
+            }
+        }
+        grow(&mut self.x, capacity * d);
+        grow(&mut self.x2, capacity * d);
+        grow(&mut self.h, capacity * d);
+        grow(&mut self.q, capacity * width);
+        grow(&mut self.k, capacity * width);
+        grow(&mut self.v, capacity * width);
+        grow(&mut self.ctx, capacity * width);
+        grow(&mut self.scores, cap_rows);
+        grow(&mut self.attn_out, capacity * d);
+        grow(&mut self.hmid, capacity * ffn);
+        grow(&mut self.ffn_out, capacity * d);
+        grow(&mut self.logits, capacity * vocab);
+        if self.adapter_mid.capacity() < capacity * admid {
+            let need = capacity * admid - self.adapter_mid.len();
+            self.adapter_mid.reserve(need);
+        }
+        if self.lowrank.capacity() < capacity * rank {
+            let need = capacity * rank - self.lowrank.len();
+            self.lowrank.reserve(need);
+        }
+    }
+
     /// Capacity invariants against the model's dims: every packed
     /// buffer must hold `capacity` rows (and `scores` the widest
     /// attention row any session can reach), or a sweep would slice out
@@ -931,8 +1013,18 @@ impl EngineScratch {
 /// bookkeeping that [`GreedyStream`] holds for the solo path — same
 /// rules (`argmax` → EOS / budget → advance), so slot tokens are
 /// defined to match a solo stream.
-struct EngineSlot<'m> {
-    sess: DecodeSession<'m>,
+struct EngineSlot {
+    sess: DecodeSession,
+    /// The model this slot decodes over: `None` for the engine's own
+    /// (borrowed) model, `Some` for a per-task attached model admitted
+    /// via [`DecodeEngine::admit_task`]. Owning an `Arc` here is what
+    /// lets in-flight sessions finish on the epoch they were admitted
+    /// under even after the registry swaps the task's model out.
+    model: Option<Arc<InferenceModel>>,
+    /// Task id this slot was admitted under (0 = the engine's model).
+    task: u32,
+    /// Adapter epoch at admission (cache-invalidation generation).
+    epoch: u64,
     /// Continuation emitted so far (no prompt, no EOS). Pre-reserved to
     /// the budget at admission so steady-state pushes never allocate.
     out: Vec<u32>,
@@ -941,6 +1033,29 @@ struct EngineSlot<'m> {
     /// Token emitted this sweep, pending its decode step.
     pending: u32,
     done: bool,
+}
+
+/// The model a packed row decodes against: the slot's own task model,
+/// or the engine default when the slot was admitted task-free.
+fn slot_model<'a>(
+    slots: &'a [Option<EngineSlot>],
+    i: usize,
+    default_model: &'a InferenceModel,
+) -> &'a InferenceModel {
+    match &slots[i].as_ref().unwrap().model {
+        Some(mm) => &**mm,
+        None => default_model,
+    }
+}
+
+/// Model identity key for grouping rows: attached models that share a
+/// task share an `Arc`, so pointer identity is exactly "same weights,
+/// same epoch".
+fn slot_model_key(slots: &[Option<EngineSlot>], i: usize) -> usize {
+    match &slots[i].as_ref().unwrap().model {
+        Some(mm) => Arc::as_ptr(mm) as usize,
+        None => 0,
+    }
 }
 
 /// The **layer-major fused decode engine**: up to `capacity` concurrent
@@ -953,11 +1068,16 @@ struct EngineSlot<'m> {
 /// scheduler iteration (`crate::coordinator::serve`).
 pub struct DecodeEngine<'m> {
     model: &'m InferenceModel,
-    slots: Vec<Option<EngineSlot<'m>>>,
+    slots: Vec<Option<EngineSlot>>,
     scratch: EngineScratch,
     /// Slot indices stepping in the current sweep (live, not done, and
-    /// under budget) — reused across sweeps, capacity = `capacity`.
+    /// under budget), sorted by model identity so same-model rows are
+    /// contiguous — reused across sweeps, capacity = `capacity`.
     active: Vec<usize>,
+    /// Contiguous `[lo, hi)` row spans of `active` on the same model —
+    /// the grouped side-path's block-diagonal layout. Rebuilt each
+    /// sweep; reused, capacity = `capacity`.
+    groups: Vec<(usize, usize)>,
     n_live: usize,
 }
 
@@ -977,6 +1097,7 @@ impl<'m> DecodeEngine<'m> {
             slots: (0..capacity).map(|_| None).collect(),
             scratch: EngineScratch::for_model(model, capacity),
             active: Vec::with_capacity(capacity),
+            groups: Vec::with_capacity(capacity),
             n_live: 0,
         }
     }
@@ -1013,7 +1134,65 @@ impl<'m> DecodeEngine<'m> {
         max_new: usize,
         max_len: usize,
     ) -> crate::Result<usize> {
-        let cap = max_len.min(self.model.cfg.max_seq);
+        self.admit_inner(None, 0, 0, prompt, max_new, max_len)
+    }
+
+    /// [`Self::admit`] for a per-task model: the slot decodes over
+    /// `model` (an attached adapter model `Arc`-sharing this engine's
+    /// resident base — see [`super::adapter`]) while every other slot
+    /// keeps its own. `task` and `epoch` tag the slot for retirement
+    /// accounting; the engine itself never re-resolves them, which is
+    /// exactly how in-flight sessions survive a mid-flight adapter
+    /// swap — they finish on the `Arc` they were admitted with.
+    ///
+    /// The model must be shape-compatible with the engine's packing
+    /// (same `d_model`, vocab, layer count, and per-layer attention /
+    /// FFN widths); attached models are by construction. Scratch is
+    /// grown here if the task model's side-path is wider than anything
+    /// seen so far — admission may allocate, sweeps still never do.
+    pub fn admit_task(
+        &mut self,
+        model: Arc<InferenceModel>,
+        task: u32,
+        epoch: u64,
+        prompt: &[u32],
+        max_new: usize,
+        max_len: usize,
+    ) -> crate::Result<usize> {
+        anyhow::ensure!(
+            model.supports_decode(),
+            "engine admit: task {task} model is not a causal LM"
+        );
+        let dm = self.model;
+        anyhow::ensure!(
+            model.tok.cols() == dm.tok.cols()
+                && model.tok.rows() == dm.tok.rows()
+                && model.blocks.len() == dm.blocks.len(),
+            "engine admit: task {task} model shape mismatch with the engine's resident model"
+        );
+        for (l, (a, b)) in model.blocks.iter().zip(&dm.blocks).enumerate() {
+            anyhow::ensure!(
+                a.attn.n_heads == b.attn.n_heads
+                    && a.attn.head_dim == b.attn.head_dim
+                    && a.fc1.out_dim() == b.fc1.out_dim(),
+                "engine admit: task {task} model layer {l} width mismatch with the engine's model"
+            );
+        }
+        self.scratch.ensure(&model, self.slots.len());
+        self.admit_inner(Some(model), task, epoch, prompt, max_new, max_len)
+    }
+
+    fn admit_inner(
+        &mut self,
+        model: Option<Arc<InferenceModel>>,
+        task: u32,
+        epoch: u64,
+        prompt: &[u32],
+        max_new: usize,
+        max_len: usize,
+    ) -> crate::Result<usize> {
+        let m = model.as_deref().unwrap_or(self.model);
+        let cap = max_len.min(m.cfg.max_seq);
         anyhow::ensure!(!prompt.is_empty(), "engine admit: empty prompt");
         anyhow::ensure!(
             prompt.len() < cap,
@@ -1026,9 +1205,12 @@ impl<'m> DecodeEngine<'m> {
             .position(|s| s.is_none())
             .ok_or_else(|| anyhow::anyhow!("engine admit: all {} slots live", self.slots.len()))?;
         let budget = max_new.min(cap - prompt.len());
-        let sess = self.model.prefill_bounded(prompt, budget);
+        let sess = m.prefill_bounded(prompt, budget);
         self.slots[idx] = Some(EngineSlot {
             sess,
+            model,
+            task,
+            epoch,
             out: Vec::with_capacity(budget),
             budget,
             pending: 0,
@@ -1056,6 +1238,11 @@ impl<'m> DecodeEngine<'m> {
         );
         self.scratch.validate_capacity(self.model, self.slots.len());
         for slot in self.slots.iter().flatten() {
+            // Per-task models must also fit the shared scratch (admit_task
+            // grows it; this catches any path that forgot).
+            if let Some(mm) = &slot.model {
+                self.scratch.validate_capacity(mm, self.slots.len());
+            }
             if slot.done {
                 continue;
             }
@@ -1080,6 +1267,19 @@ impl<'m> DecodeEngine<'m> {
     /// read as finished.
     pub fn is_done(&self, slot: usize) -> bool {
         self.slots[slot].as_ref().map_or(true, |s| s.done)
+    }
+
+    /// Task id `slot` was admitted under (0 for task-free admissions
+    /// and vacant slots).
+    pub fn task(&self, slot: usize) -> u32 {
+        self.slots[slot].as_ref().map_or(0, |s| s.task)
+    }
+
+    /// Adapter epoch `slot` was admitted under (0 for task-free
+    /// admissions and vacant slots). Stable for the slot's whole life,
+    /// even across a registry swap — sessions finish on their epoch.
+    pub fn epoch(&self, slot: usize) -> u64 {
+        self.slots[slot].as_ref().map_or(0, |s| s.epoch)
     }
 
     /// Continuation emitted so far by `slot` (no prompt, no EOS; empty
@@ -1147,15 +1347,37 @@ impl<'m> DecodeEngine<'m> {
         let d = m.tok.cols();
         let vocab = m.tok.rows();
 
+        // Adapter-grouping pass: make same-model rows contiguous, then
+        // record the `[lo, hi)` span per model. Packed-row order is
+        // free to change between sweeps — every downstream kernel is
+        // row-independent and the scatter below goes through `active`.
+        self.active.sort_unstable_by_key(|&i| slot_model_key(&self.slots, i));
+        self.groups.clear();
+        let mut lo = 0usize;
+        for r in 1..n {
+            let prev = slot_model_key(&self.slots, self.active[r - 1]);
+            let cur = slot_model_key(&self.slots, self.active[r]);
+            if cur != prev {
+                // lint: allow(hot-path-alloc) -- groups is reserved to capacity; never reallocates
+                self.groups.push((lo, r));
+                lo = r;
+            }
+        }
+        // lint: allow(hot-path-alloc) -- groups is reserved to capacity; never reallocates
+        self.groups.push((lo, n));
+
         // Pack the pending tokens' embedding rows: token table + the
         // *per-session* position (sessions are ragged; row r's position
         // is its own session's token count, prefix rows excluded).
+        // Attached models Arc-share the base tables, so this is the
+        // same data regardless of the row's task.
         for (r, &i) in self.active.iter().enumerate() {
+            let sm = slot_model(&self.slots, i, m);
             let slot = self.slots[i].as_ref().unwrap();
             let t = slot.pending as usize;
             debug_assert!(t < vocab, "engine sweep: token id {t} out of vocab");
-            let tsrc = &m.tok.data[t * d..(t + 1) * d];
-            let psrc = &m.pos.data[slot.sess.tokens * d..(slot.sess.tokens + 1) * d];
+            let tsrc = &sm.tok.data[t * d..(t + 1) * d];
+            let psrc = &sm.pos.data[slot.sess.tokens * d..(slot.sess.tokens + 1) * d];
             let dst = &mut self.scratch.x[r * d..(r + 1) * d];
             for j in 0..d {
                 dst[j] = tsrc[j] + psrc[j];
@@ -1163,17 +1385,38 @@ impl<'m> DecodeEngine<'m> {
         }
 
         // Layer-major: every block advances ALL packed rows with one
-        // fused kernel per layer.
-        for (layer, blk) in m.blocks.iter().enumerate() {
-            fused_block_rows(blk, layer, &mut self.slots, &self.active, &mut self.scratch, n, d);
+        // shared base kernel per layer plus one grouped side-path per
+        // adapter group.
+        for layer in 0..m.blocks.len() {
+            fused_block_rows(
+                m,
+                layer,
+                &mut self.slots,
+                &self.active,
+                &self.groups,
+                &mut self.scratch,
+                n,
+                d,
+            );
         }
 
-        // Final norm + LM head over all rows at once, then scatter the
-        // logits rows back to their sessions.
+        // Final norm + LM head, grouped: ln_f is base-shared across
+        // attached models but the head is per-task, so each group runs
+        // its own model's pair — every logits row equals that row's
+        // solo session bit-for-bit.
         let s = &mut self.scratch;
-        m.ln_f.apply_rows_into(&s.x[..n * d], &mut s.h[..n * d], n);
-        let InferHead::Lm(lm) = &m.head else { unreachable!() };
-        lm.forward_rows_into(&s.h[..n * d], &mut s.logits[..n * vocab], n, &mut s.lowrank);
+        for &(glo, ghi) in &self.groups {
+            let gm = slot_model(&self.slots, self.active[glo], m);
+            let ng = ghi - glo;
+            gm.ln_f.apply_rows_into(&s.x[glo * d..ghi * d], &mut s.h[glo * d..ghi * d], ng);
+            let InferHead::Lm(lm) = &gm.head else { unreachable!() };
+            lm.forward_rows_into(
+                &s.h[glo * d..ghi * d],
+                &mut s.logits[glo * vocab..ghi * vocab],
+                ng,
+                &mut s.lowrank,
+            );
+        }
         for (r, &i) in self.active.iter().enumerate() {
             let slot = self.slots[i].as_mut().unwrap();
             slot.sess
@@ -1185,18 +1428,91 @@ impl<'m> DecodeEngine<'m> {
     }
 }
 
+/// Selectors naming one linear of one block: [`grouped_rows_into`]
+/// takes these as plain `fn` pointers so one grouped-gemm routine
+/// serves all six projections without a per-call closure (closures
+/// would each be a distinct type and monomorphize six copies).
+fn sel_wq(m: &InferenceModel, layer: usize) -> &InferLinear {
+    &m.blocks[layer].attn.wq
+}
+fn sel_wk(m: &InferenceModel, layer: usize) -> &InferLinear {
+    &m.blocks[layer].attn.wk
+}
+fn sel_wv(m: &InferenceModel, layer: usize) -> &InferLinear {
+    &m.blocks[layer].attn.wv
+}
+fn sel_wo(m: &InferenceModel, layer: usize) -> &InferLinear {
+    &m.blocks[layer].attn.wo
+}
+fn sel_fc1(m: &InferenceModel, layer: usize) -> &InferLinear {
+    &m.blocks[layer].fc1
+}
+fn sel_fc2(m: &InferenceModel, layer: usize) -> &InferLinear {
+    &m.blocks[layer].fc2
+}
+
+/// One projection over `n` packed rows spanning several adapter
+/// groups: the frozen-base half runs as **one** gemm over all rows
+/// when every group resolves to the same base weights (`base_ptr`
+/// equality — attached models `Arc`-share the base, so this is the
+/// steady state), falling back to per-group base gemms otherwise; the
+/// task-specific half (low-rank `UV` pair + `S₂` scatter) always runs
+/// as a block-diagonal grouped gemm, one skinny pair per group. Per
+/// row this is bias → base → low-rank → sparse, the exact
+/// `forward_row_into` order, so grouping preserves bit-identity.
+// lint: hot-path
+fn grouped_rows_into(
+    default_model: &InferenceModel,
+    slots: &[Option<EngineSlot>],
+    active: &[usize],
+    groups: &[(usize, usize)],
+    layer: usize,
+    sel: fn(&InferenceModel, usize) -> &InferLinear,
+    xs: &[f32],
+    ys: &mut [f32],
+    n: usize,
+    lowrank: &mut Vec<f32>,
+) {
+    let lin0 = sel(slot_model(slots, active[groups[0].0], default_model), layer);
+    let kd = lin0.in_dim();
+    let od = lin0.out_dim();
+    let shared = groups.iter().all(|&(lo, _)| {
+        sel(slot_model(slots, active[lo], default_model), layer).base_ptr() == lin0.base_ptr()
+    });
+    if shared {
+        // One resident base: one bias seed + one base gemm over every
+        // packed row, no matter how many adapters are live. (Identical
+        // base `Arc` implies identical bias `Arc` — both come from the
+        // same frozen base linear.)
+        lin0.base_rows_into(&xs[..n * kd], &mut ys[..n * od], n);
+    } else {
+        for &(lo, hi) in groups {
+            let lin = sel(slot_model(slots, active[lo], default_model), layer);
+            lin.base_rows_into(&xs[lo * kd..hi * kd], &mut ys[lo * od..hi * od], hi - lo);
+        }
+    }
+    for &(lo, hi) in groups {
+        let lin = sel(slot_model(slots, active[lo], default_model), layer);
+        let ng = hi - lo;
+        lin.sidepath_rows_into(&xs[lo * kd..hi * kd], &mut ys[lo * od..hi * od], ng, lowrank);
+    }
+}
+
 /// One block's fused step over `n` packed rows — the batched mirror of
 /// [`InferBlock::decode_row_into`], same arithmetic in the same order
 /// per row (fused/solo parity is structural, not tested-into-being).
-/// Projections and FFN run as one fused kernel over all rows; the K/V
-/// append and the attention reduction loop per session, because each
-/// session's cache is private and its position ragged.
+/// Base gemms run once over all rows whenever the adapter groups share
+/// the resident base; side-paths, gates, norms, and adapters run per
+/// group ([`grouped_rows_into`]); the K/V append and the attention
+/// reduction loop per session, because each session's cache is private
+/// and its position ragged.
 // lint: hot-path
-fn fused_block_rows<'m>(
-    blk: &InferBlock,
+fn fused_block_rows(
+    default_model: &InferenceModel,
     layer: usize,
-    slots: &mut [Option<EngineSlot<'m>>],
+    slots: &mut [Option<EngineSlot>],
     active: &[usize],
+    groups: &[(usize, usize)],
     s: &mut EngineScratch,
     n: usize,
     d: usize,
@@ -1217,15 +1533,61 @@ fn fused_block_rows<'m>(
         lowrank,
         ..
     } = s;
-    let width = blk.attn.n_heads * blk.attn.head_dim;
-    let hd = blk.attn.head_dim;
+    let blk0 = &default_model.blocks[layer];
+    let width = blk0.attn.n_heads * blk0.attn.head_dim;
+    let hd = blk0.attn.head_dim;
 
-    // Pre-norm + fused Q/K/V projections over all packed rows: three
-    // weight reads for the whole sweep instead of three per session.
-    blk.ln1.apply_rows_into(&x[..n * d], &mut h[..n * d], n);
-    blk.attn.wq.forward_rows_into(&h[..n * d], &mut q[..n * width], n, lowrank);
-    blk.attn.wk.forward_rows_into(&h[..n * d], &mut k[..n * width], n, lowrank);
-    blk.attn.wv.forward_rows_into(&h[..n * d], &mut v[..n * width], n, lowrank);
+    // Pre-norm per group (base-shared values, the group's own object),
+    // then Q/K/V: one base gemm for the whole sweep plus one grouped
+    // side-path per adapter.
+    for &(lo, hi) in groups {
+        let gb = &slot_model(slots, active[lo], default_model).blocks[layer];
+        gb.ln1.apply_rows_into(&x[lo * d..hi * d], &mut h[lo * d..hi * d], hi - lo);
+    }
+    grouped_rows_into(
+        default_model,
+        slots,
+        active,
+        groups,
+        layer,
+        sel_wq,
+        &h[..n * d],
+        &mut q[..n * width],
+        n,
+        lowrank,
+    );
+    grouped_rows_into(
+        default_model,
+        slots,
+        active,
+        groups,
+        layer,
+        sel_wk,
+        &h[..n * d],
+        &mut k[..n * width],
+        n,
+        lowrank,
+    );
+    grouped_rows_into(
+        default_model,
+        slots,
+        active,
+        groups,
+        layer,
+        sel_wv,
+        &h[..n * d],
+        &mut v[..n * width],
+        n,
+        lowrank,
+    );
+
+    // Per-head gates (attached-adapter models only), per group, before
+    // the cache append — cached V rows are gated exactly once, exactly
+    // like the solo step and prefill.
+    for &(lo, hi) in groups {
+        let gb = &slot_model(slots, active[lo], default_model).blocks[layer];
+        gb.attn.gate_value_rows(&mut v[lo * width..hi * width]);
+    }
 
     // Append each session's new K/V row to its own cache at its own
     // position.
@@ -1239,7 +1601,8 @@ fn fused_block_rows<'m>(
 
     // Attention: the one per-session loop left — each session reduces
     // over its private cache rows `0..=pos` (ragged lengths, prefix
-    // included). Identical inner arithmetic to the solo step.
+    // included). Identical inner arithmetic to the solo step. Head
+    // geometry is engine-wide (admit_task enforces it).
     let rscale = 1.0 / (hd as f32).sqrt();
     for (r, &i) in active.iter().enumerate() {
         let sess = &slots[i].as_ref().unwrap().sess;
@@ -1248,7 +1611,7 @@ fn fused_block_rows<'m>(
         let ctx_r = &mut ctx[r * width..(r + 1) * width];
         ctx_r.fill(0.0);
         let sc = &mut scores[..rows];
-        for hh in 0..blk.attn.n_heads {
+        for hh in 0..blk0.attn.n_heads {
             let qh = &q[r * width + hh * hd..r * width + hh * hd + hd];
             for (j, sv) in sc.iter_mut().enumerate() {
                 let krow = &kvl.k[j * width + hh * hd..j * width + hh * hd + hd];
@@ -1274,42 +1637,88 @@ fn fused_block_rows<'m>(
         }
     }
 
-    // Output projection (+ adapter) and residual, fused over rows.
-    blk.attn
-        .wo
-        .forward_rows_into(&ctx[..n * width], &mut attn_out[..n * d], n, lowrank);
-    let a_src: &[f32] = if let Some(ad) = &blk.adapter1 {
-        // h is dead after the Q/K/V projections — reuse it for the
-        // adapter output, like the solo step does.
-        ad.forward_rows_into(&attn_out[..n * d], &mut h[..n * d], n, adapter_mid, lowrank);
-        &h[..n * d]
-    } else {
-        &attn_out[..n * d]
-    };
-    for (o, (&xv, &av)) in x2[..n * d].iter_mut().zip(x[..n * d].iter().zip(a_src)) {
-        *o = xv + av;
+    // Output projection (grouped) + optional adapter and residual, per
+    // group. Adapters are base-frozen and Arc-shared across attached
+    // models, but running them through the group's own block keeps the
+    // arithmetic exactly that row's solo path.
+    grouped_rows_into(
+        default_model,
+        slots,
+        active,
+        groups,
+        layer,
+        sel_wo,
+        &ctx[..n * width],
+        &mut attn_out[..n * d],
+        n,
+        lowrank,
+    );
+    for &(lo, hi) in groups {
+        let ng = hi - lo;
+        let (glo, ghi) = (lo * d, hi * d);
+        let gb = &slot_model(slots, active[lo], default_model).blocks[layer];
+        let a_src: &[f32] = if let Some(ad) = &gb.adapter1 {
+            // h is dead after the Q/K/V projections — reuse it for the
+            // adapter output, like the solo step does.
+            ad.forward_rows_into(&attn_out[glo..ghi], &mut h[glo..ghi], ng, adapter_mid, lowrank);
+            &h[glo..ghi]
+        } else {
+            &attn_out[glo..ghi]
+        };
+        for (o, (&xv, &av)) in x2[glo..ghi].iter_mut().zip(x[glo..ghi].iter().zip(a_src)) {
+            *o = xv + av;
+        }
     }
 
-    // FFN (+ adapter) and residual, fused over rows.
-    blk.ln2.apply_rows_into(&x2[..n * d], &mut h[..n * d], n);
-    let f_dim = blk.fc1.out_dim();
-    blk.fc1
-        .forward_rows_into(&h[..n * d], &mut hmid[..n * f_dim], n, lowrank);
+    // FFN: pre-norm per group, base gemms shared, side-paths grouped.
+    for &(lo, hi) in groups {
+        let gb = &slot_model(slots, active[lo], default_model).blocks[layer];
+        gb.ln2.apply_rows_into(&x2[lo * d..hi * d], &mut h[lo * d..hi * d], hi - lo);
+    }
+    let f_dim = blk0.fc1.out_dim();
+    grouped_rows_into(
+        default_model,
+        slots,
+        active,
+        groups,
+        layer,
+        sel_fc1,
+        &h[..n * d],
+        &mut hmid[..n * f_dim],
+        n,
+        lowrank,
+    );
     for vmid in hmid[..n * f_dim].iter_mut() {
         *vmid = gelu_scalar(*vmid);
     }
-    blk.fc2
-        .forward_rows_into(&hmid[..n * f_dim], &mut ffn_out[..n * d], n, lowrank);
-    let f_src: &[f32] = if let Some(ad) = &blk.adapter2 {
-        ad.forward_rows_into(&ffn_out[..n * d], &mut h[..n * d], n, adapter_mid, lowrank);
-        &h[..n * d]
-    } else {
-        &ffn_out[..n * d]
-    };
-    // The packed rows are fully consumed by the first residual, so the
-    // block output overwrites them in place — next block reads x again.
-    for (o, (&rv, &fv)) in x[..n * d].iter_mut().zip(x2[..n * d].iter().zip(f_src)) {
-        *o = rv + fv;
+    grouped_rows_into(
+        default_model,
+        slots,
+        active,
+        groups,
+        layer,
+        sel_fc2,
+        &hmid[..n * f_dim],
+        &mut ffn_out[..n * d],
+        n,
+        lowrank,
+    );
+    for &(lo, hi) in groups {
+        let ng = hi - lo;
+        let (glo, ghi) = (lo * d, hi * d);
+        let gb = &slot_model(slots, active[lo], default_model).blocks[layer];
+        let f_src: &[f32] = if let Some(ad) = &gb.adapter2 {
+            ad.forward_rows_into(&ffn_out[glo..ghi], &mut h[glo..ghi], ng, adapter_mid, lowrank);
+            &h[glo..ghi]
+        } else {
+            &ffn_out[glo..ghi]
+        };
+        // The packed rows are fully consumed by the first residual, so
+        // the block output overwrites them in place — the next block
+        // reads x again.
+        for (o, (&rv, &fv)) in x[glo..ghi].iter_mut().zip(x2[glo..ghi].iter().zip(f_src)) {
+            *o = rv + fv;
+        }
     }
 }
 
@@ -1390,7 +1799,7 @@ mod tests {
             };
             check(sess.last_logits(), split - 1);
             for (i, &tok) in ids.iter().enumerate().skip(split) {
-                sess.decode_step(tok);
+                sess.decode_step(&im, tok);
                 check(sess.last_logits(), i);
             }
             assert_eq!(sess.len(), ids.len());
@@ -1523,7 +1932,7 @@ mod tests {
         assert!(fresh1 > fresh0, "first session must allocate fresh K/V");
         {
             let mut sess = im.prefill_bounded(&prompt, 2);
-            sess.decode_step(7);
+            sess.decode_step(&im, 7);
             assert_eq!(sess.remaining(), 1);
         }
         let (reused2, fresh2) = super::kv_pool_counters();
@@ -1565,6 +1974,73 @@ mod tests {
             assert_eq!(got, solo, "{}: fused engine diverged from solo", policy.label());
             assert_eq!(eng.n_live(), 0);
         }
+    }
+
+    #[test]
+    fn fused_engine_groups_mixed_adapters_bit_identically() {
+        // Three slots on three different models — the resident base
+        // plus two attached tasks — swept together must emit exactly
+        // (assert_eq) what each emits solo on its own model, and the
+        // slots must report the task/epoch they were admitted under.
+        use std::sync::Arc;
+        let t = dsee_lm_model(0xE4);
+        let base = t.compile_base(MergePolicy::Csr);
+        let tune = |seed: u64| {
+            let mut v = t.clone();
+            let mut rng = Rng::new(seed);
+            for lin in v.attn_projections_mut() {
+                if let Some(a) = &mut lin.adapter {
+                    a.u = Tensor::randn(&[a.u.rows(), a.u.cols()], 0.2, &mut rng);
+                }
+                if let Some(r) = &mut lin.residual {
+                    r.values = Tensor::randn(&[r.nnz()], 0.3, &mut rng);
+                }
+            }
+            v.compile_adapter(MergePolicy::Csr)
+        };
+        let m1 = Arc::new(base.attach(&tune(0xA1)));
+        let m2 = Arc::new(base.attach(&tune(0xA2)));
+        let im0 = &**base.model();
+        let cap = im0.cfg.max_seq;
+        let prompts: [Vec<u32>; 3] = [vec![7, 21, 3], vec![5, 11], vec![2, 9, 4, 1]];
+        let want0 = im0.generate_greedy(&prompts[0], 6, cap).unwrap();
+        let want1 = m1.generate_greedy(&prompts[1], 6, cap).unwrap();
+        let want2 = m2.generate_greedy(&prompts[2], 6, cap).unwrap();
+
+        let mut eng = super::DecodeEngine::new(im0, 3);
+        let s0 = eng.admit(&prompts[0], 6, cap).unwrap();
+        let s1 = eng.admit_task(Arc::clone(&m1), 1, 0, &prompts[1], 6, cap).unwrap();
+        let s2 = eng.admit_task(Arc::clone(&m2), 2, 5, &prompts[2], 6, cap).unwrap();
+        assert_eq!((eng.task(s0), eng.epoch(s0)), (0, 0));
+        assert_eq!((eng.task(s1), eng.epoch(s1)), (1, 0));
+        assert_eq!((eng.task(s2), eng.epoch(s2)), (2, 5));
+        let mut rounds = 0;
+        while [s0, s1, s2].iter().any(|&s| !eng.is_done(s)) {
+            eng.sweep();
+            rounds += 1;
+            assert!(rounds < 100, "mixed-adapter engine never drained");
+        }
+        assert_eq!(eng.release(s0), want0, "base slot diverged from solo");
+        assert_eq!(eng.release(s1), want1, "task 1 slot diverged from solo");
+        assert_eq!(eng.release(s2), want2, "task 2 slot diverged from solo");
+    }
+
+    #[test]
+    fn engine_admit_task_rejects_shape_mismatch() {
+        // A task model with different layer geometry must be refused
+        // before it can corrupt the packed sweep.
+        use std::sync::Arc;
+        let t = dsee_lm_model(0xE5);
+        let base = t.compile_base(MergePolicy::Merged);
+        let im0 = &**base.model();
+        let mut eng = super::DecodeEngine::new(im0, 2);
+        let mut cfg = lm_cfg();
+        cfg.n_layers = 1;
+        let mut rng = Rng::new(0xE6);
+        let other = Arc::new(Transformer::new(&cfg, &mut rng).compile(MergePolicy::Merged));
+        let err = eng.admit_task(other, 9, 0, &[1, 2], 4, 12).unwrap_err();
+        assert!(format!("{err}").contains("shape mismatch"), "{err}");
+        assert_eq!(eng.n_live(), 0);
     }
 
     #[test]
@@ -1652,8 +2128,8 @@ mod tests {
         let m = dsee_lm_model(0xD7);
         let im = m.compile(MergePolicy::Merged);
         let mut sess = im.prefill_bounded(&[1, 2], 1);
-        sess.decode_step(3);
-        sess.decode_step(4); // budget (1 new token) exhausted
+        sess.decode_step(&im, 3);
+        sess.decode_step(&im, 4); // budget (1 new token) exhausted
     }
 
     #[test]
@@ -1684,7 +2160,7 @@ mod tests {
         let p = 3;
         let mut sess = im.prefill(&ids[..2]);
         for (i, &tok) in ids.iter().enumerate().skip(2) {
-            sess.decode_step(tok);
+            sess.decode_step(&im, tok);
             // LM logits rows include the prefix positions.
             let row = p + i;
             let seg = &want.data[row * vocab..(row + 1) * vocab];

@@ -247,6 +247,119 @@ impl CsrMatrix {
     }
 }
 
+/// Coordinate-format scatter over the `[in, out]` weight layout — the
+/// compiled form of DSEE's `S₂` sparse residual (a few dozen surviving
+/// entries on a frozen support Ω, far too sparse for CSR's per-row
+/// pointer array to pay off).
+///
+/// Entries keep the *training-time support order* (`SparseResidual.idx`
+/// order): both kernels stream entries in that one fixed order, so for
+/// any output element the contribution order is identical between
+/// [`Self::matvec`] and [`Self::matvec_batch`] — the same
+/// bit-identical fused-vs-solo argument the CSR kernels make.
+#[derive(Clone, Debug)]
+pub struct CooScatter {
+    pub rows: usize,
+    pub cols: usize,
+    pub row_idx: Vec<u32>,
+    pub col_idx: Vec<u32>,
+    pub vals: Vec<f32>,
+}
+
+impl CooScatter {
+    /// Build from the training-time support list, preserving entry
+    /// order. Exact zeros are kept: the support Ω is part of the task's
+    /// identity and a zero value still occupies its slot.
+    pub fn from_entries(rows: usize, cols: usize, idx: &[(usize, usize)], vals: &[f32]) -> Self {
+        assert_eq!(idx.len(), vals.len(), "coo: {} coords vs {} values", idx.len(), vals.len());
+        let mut row_idx = Vec::with_capacity(idx.len());
+        let mut col_idx = Vec::with_capacity(idx.len());
+        for &(r, c) in idx {
+            assert!(r < rows && c < cols, "coo: entry ({r},{c}) outside [{rows},{cols}]");
+            row_idx.push(r as u32);
+            col_idx.push(c as u32);
+        }
+        CooScatter {
+            rows,
+            cols,
+            row_idx,
+            col_idx,
+            vals: vals.to_vec(),
+        }
+    }
+
+    /// Stored entry count (the support size |Ω|, zeros included).
+    pub fn nnz(&self) -> usize {
+        self.vals.len()
+    }
+
+    /// Densify (parity tests).
+    pub fn to_dense(&self) -> Tensor {
+        let mut t = Tensor::zeros(&[self.rows, self.cols]);
+        for e in 0..self.vals.len() {
+            t.data[self.row_idx[e] as usize * self.cols + self.col_idx[e] as usize] += self.vals[e];
+        }
+        t
+    }
+
+    /// y += x · S₂ for a single input row — the decode-path kernel.
+    ///
+    /// Entry-major: each stored entry contributes `x[row] * val` to
+    /// `y[col]`, skipping dead activations like the CSR kernels do.
+    /// **Accumulates** (callers seed `y`), allocates nothing.
+    // lint: hot-path
+    #[inline]
+    pub fn matvec(&self, x: &[f32], y: &mut [f32]) {
+        assert_eq!(x.len(), self.rows, "coo matvec: x len {} vs rows {}", x.len(), self.rows);
+        assert_eq!(y.len(), self.cols, "coo matvec: y len {} vs cols {}", y.len(), self.cols);
+        for e in 0..self.vals.len() {
+            let a = x[self.row_idx[e] as usize];
+            if a == 0.0 {
+                continue;
+            }
+            y[self.col_idx[e] as usize] += a * self.vals[e];
+        }
+    }
+
+    /// ys += xs · S₂ for `n` packed input rows — the fused-sweep form
+    /// (`xs`: `[n, rows]` row-major, `ys`: `[n, cols]`, accumulated).
+    ///
+    /// Entries are the outer loop and packed rows the inner one, so
+    /// each S₂ value is read once per sweep; per output element the
+    /// contributions arrive in entry order, exactly [`Self::matvec`]'s
+    /// order, with the same `x == 0` skip — bit-identical to per-row
+    /// stepping. Allocates nothing.
+    // lint: hot-path
+    pub fn matvec_batch(&self, xs: &[f32], ys: &mut [f32], n: usize) {
+        assert_eq!(
+            xs.len(),
+            n * self.rows,
+            "coo matvec_batch: xs len {} vs n*rows {}",
+            xs.len(),
+            n * self.rows
+        );
+        assert_eq!(
+            ys.len(),
+            n * self.cols,
+            "coo matvec_batch: ys len {} vs n*cols {}",
+            ys.len(),
+            n * self.cols
+        );
+        for e in 0..self.vals.len() {
+            let row = self.row_idx[e] as usize;
+            let col = self.col_idx[e] as usize;
+            let w = self.vals[e];
+            for b in 0..n {
+                let a = xs[b * self.rows + row];
+                if a == 0.0 {
+                    continue;
+                }
+                ys[b * self.cols + col] += a * w;
+            }
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -383,5 +496,80 @@ mod tests {
         let x = Tensor::full(&[2, 4], 1.0);
         let y = csr.matmul(&x);
         assert!(y.data.iter().all(|&v| v == 0.0));
+    }
+
+    fn coo_fixture(rows: usize, cols: usize, n: usize, rng: &mut Rng) -> CooScatter {
+        // Deterministic scattered support with one duplicate-free walk.
+        let mut idx = Vec::new();
+        let mut vals = Vec::new();
+        for e in 0..n {
+            idx.push(((e * 7 + 3) % rows, (e * 5 + 1) % cols));
+            vals.push(Tensor::randn(&[1, 1], 0.5, rng).data[0]);
+        }
+        CooScatter::from_entries(rows, cols, &idx, &vals)
+    }
+
+    #[test]
+    fn coo_matvec_matches_dense_matmul_row() {
+        let mut rng = Rng::new(705);
+        for &(k, cols, n) in &[(8usize, 8usize, 5usize), (32, 16, 24), (7, 19, 11)] {
+            let coo = coo_fixture(k, cols, n, &mut rng);
+            let x = Tensor::randn(&[1, k], 0.7, &mut rng);
+            let bias: Vec<f32> = (0..cols).map(|i| (i as f32) * 0.01).collect();
+            let mut y = bias.clone();
+            coo.matvec(&x.data, &mut y);
+            let want = matmul(&x, &coo.to_dense());
+            for (j, (a, b)) in y.iter().zip(&want.data).enumerate() {
+                let b = b + bias[j];
+                assert!((a - b).abs() < 1e-5 * (1.0 + a.abs()), "{a} vs {b}");
+            }
+        }
+    }
+
+    #[test]
+    fn coo_matvec_batch_is_bit_identical_to_per_row_matvec() {
+        let mut rng = Rng::new(706);
+        let cases = [(1usize, 8usize, 8usize, 6usize), (4, 32, 16, 30), (7, 19, 23, 13)];
+        for &(n, k, cols, ents) in &cases {
+            let coo = coo_fixture(k, cols, ents, &mut rng);
+            let mut xs = Tensor::randn(&[n, k], 0.7, &mut rng);
+            // Exercise the x == 0 skip on the packed path too.
+            for (i, v) in xs.data.iter_mut().enumerate() {
+                if i % 5 == 0 {
+                    *v = 0.0;
+                }
+            }
+            let bias: Vec<f32> = (0..cols).map(|i| (i as f32) * 0.01).collect();
+            let mut fused = vec![0.0f32; n * cols];
+            for r in 0..n {
+                fused[r * cols..(r + 1) * cols].copy_from_slice(&bias);
+            }
+            coo.matvec_batch(&xs.data, &mut fused, n);
+            for r in 0..n {
+                let mut want = bias.clone();
+                coo.matvec(&xs.data[r * k..(r + 1) * k], &mut want);
+                assert_eq!(
+                    &fused[r * cols..(r + 1) * cols],
+                    want.as_slice(),
+                    "row {r} diverged from per-row matvec"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn coo_preserves_entry_order_and_zero_values() {
+        let idx = [(2usize, 3usize), (0, 1), (2, 3)];
+        let vals = [1.5f32, 0.0, -0.25];
+        let coo = CooScatter::from_entries(4, 5, &idx, &vals);
+        assert_eq!(coo.nnz(), 3, "zero-valued support entries must be kept");
+        // Duplicate coordinates accumulate in to_dense and in matvec alike.
+        let dense = coo.to_dense();
+        assert_eq!(dense.data[2 * 5 + 3], 1.25);
+        let x = [0.0f32, 0.0, 2.0, 0.0];
+        let mut y = vec![0.0f32; 5];
+        coo.matvec(&x, &mut y);
+        assert_eq!(y[3], 2.5);
+        assert_eq!(y[1], 0.0);
     }
 }

@@ -28,15 +28,28 @@
 //! (`crate::coordinator::serve`) shares one `Arc<InferenceModel>`
 //! across its worker pool — the model is immutable and `Sync` by
 //! construction.
+//!
+//! For **multi-tenant** serving the monolithic compile is split in two
+//! (see [`adapter`]): [`Transformer::compile_base`] freezes the shared
+//! `W⊙S₁` base once, [`Transformer::compile_adapter`] extracts the
+//! per-task delta (`UV` factors, scattered `S₂`, gates, head), and
+//! [`adapter::CompiledBase::attach`] glues a delta onto the resident
+//! base — every heavy buffer (`Repr`, biases, norms, embeddings) is
+//! `Arc`-shared, so N attached tasks cost roughly one model's RAM.
 
+pub mod adapter;
 pub mod decode;
 pub mod kernels;
+
+pub use adapter::{AdapterRegistry, AdapterStats, CompiledBase, TaskAdapter};
 
 use crate::config::ModelCfg;
 use crate::nn::{Head, Transformer};
 use crate::tensor::linalg::{gemv_into, matmul, matmul_bt, matmul_into, par_matmul};
 use crate::tensor::Tensor;
-use kernels::CsrMatrix;
+use kernels::{CooScatter, CsrMatrix};
+use std::collections::HashSet;
+use std::sync::Arc;
 
 /// Per-call thread budget for the batched dense hot path; 0 = auto
 /// (all of `available_parallelism`). See [`set_matmul_threads`].
@@ -96,6 +109,26 @@ impl MergePolicy {
             MergePolicy::Csr => "csr",
             MergePolicy::Compact => "compact",
         }
+    }
+}
+
+/// Count an `Arc<Vec<f32>>`'s heap bytes once per distinct buffer:
+/// `seen` holds the data pointers already counted, so buffers shared
+/// across attached per-task models cost their bytes exactly once.
+fn arc_vec_bytes(v: &Arc<Vec<f32>>, seen: &mut HashSet<usize>) -> usize {
+    if seen.insert(Arc::as_ptr(v) as usize) {
+        v.len() * 4
+    } else {
+        0
+    }
+}
+
+/// [`arc_vec_bytes`], for `Arc<Tensor>` payloads.
+fn arc_tensor_bytes(t: &Arc<Tensor>, seen: &mut HashSet<usize>) -> usize {
+    if seen.insert(Arc::as_ptr(t) as usize) {
+        t.data.len() * 4
+    } else {
+        0
     }
 }
 
@@ -159,22 +192,29 @@ impl LinParts {
 }
 
 /// A frozen linear: merged base weight (dense or CSR), an optional
-/// low-rank side-path (Csr policy only), and the bias. No gradient
-/// buffers, no mutable carriers — everything was folded at compile
-/// time.
+/// low-rank side-path (Csr policy only, plus every attached task
+/// adapter), an optional `S₂` scatter (attached adapters only), and
+/// the bias. No gradient buffers, no mutable carriers — everything was
+/// folded at compile time. The base weight and bias live behind `Arc`
+/// so [`adapter::CompiledBase::attach`] can share them across N
+/// per-task models for free.
 #[derive(Clone, Debug)]
 pub struct InferLinear {
     repr: Repr,
     /// (U, V, scale): adds `(x·U)·V·scale` — kept separate under the
-    /// Csr policy so the dense UV update cannot densify the base.
+    /// Csr policy so the dense UV update cannot densify the base, and
+    /// for attached adapters so the shared base stays untouched.
     low: Option<(Tensor, Tensor, f32)>,
-    bias: Vec<f32>,
+    bias: Arc<Vec<f32>>,
+    /// Scattered `S₂` residual on the task's frozen support — attached
+    /// adapters only (the monolithic compile folds S₂ into the base).
+    sparse: Option<CooScatter>,
 }
 
 #[derive(Clone, Debug)]
 enum Repr {
-    Dense(Tensor),
-    Csr(CsrMatrix),
+    Dense(Arc<Tensor>),
+    Csr(Arc<CsrMatrix>),
 }
 
 impl InferLinear {
@@ -184,22 +224,27 @@ impl InferLinear {
             MergePolicy::Csr => {
                 let csr = CsrMatrix::from_dense(&w);
                 if csr.sparsity() >= CSR_MIN_SPARSITY {
-                    Repr::Csr(csr)
+                    Repr::Csr(Arc::new(csr))
                 } else {
                     // Not sparse enough to win: fold UV back in and
                     // store dense.
                     if let Some((u, v, scale)) = low.take() {
                         w = w.add(&matmul(&u, &v).scale(scale));
                     }
-                    Repr::Dense(w)
+                    Repr::Dense(Arc::new(w))
                 }
             }
             MergePolicy::Merged | MergePolicy::Compact => {
                 debug_assert!(low.is_none(), "UV must be pre-folded outside Csr");
-                Repr::Dense(w)
+                Repr::Dense(Arc::new(w))
             }
         };
-        InferLinear { repr, low, bias }
+        InferLinear {
+            repr,
+            low,
+            bias: Arc::new(bias),
+            sparse: None,
+        }
     }
 
     pub fn in_dim(&self) -> usize {
@@ -217,7 +262,8 @@ impl InferLinear {
     }
 
     /// Stored multiply count per input row (2·nnz FLOPs each),
-    /// including the low-rank side-path factors when present.
+    /// including the low-rank side-path factors and the `S₂` scatter
+    /// when present.
     pub fn nnz(&self) -> usize {
         let base = match &self.repr {
             Repr::Dense(w) => w.numel(),
@@ -227,14 +273,25 @@ impl InferLinear {
             .low
             .as_ref()
             .map_or(0, |(u, v, _)| u.numel() + v.numel());
-        base + low
+        base + low + self.sparse.as_ref().map_or(0, |s| s.nnz())
     }
 
     pub fn is_csr(&self) -> bool {
         matches!(self.repr, Repr::Csr(_))
     }
 
-    /// y = x·W + b (+ (x·U)·V·scale when the side-path is live).
+    /// Identity of the shared base weight buffer (the `Arc` data
+    /// pointer) — equal for every per-task model attached to one
+    /// [`adapter::CompiledBase`], which is how the fused sweep detects
+    /// that a whole packed batch can share a single base gemm.
+    pub(crate) fn base_ptr(&self) -> usize {
+        match &self.repr {
+            Repr::Dense(w) => Arc::as_ptr(w) as usize,
+            Repr::Csr(c) => Arc::as_ptr(c) as usize,
+        }
+    }
+
+    /// y = x·W + b (+ (x·U)·V·scale and the `S₂` scatter when live).
     pub fn forward(&self, x: &Tensor) -> Tensor {
         let mut y = match &self.repr {
             // Large prefill/classification batches clear par_matmul's
@@ -246,6 +303,10 @@ impl InferLinear {
         if let Some((u, v, scale)) = &self.low {
             let xu = matmul(x, u);
             y.axpy(*scale, &matmul(&xu, v));
+        }
+        if let Some(s2) = &self.sparse {
+            let n = x.rows();
+            s2.matvec_batch(&x.data, &mut y.data, n);
         }
         y.add_bias(&self.bias)
     }
@@ -297,6 +358,9 @@ impl InferLinear {
             }
             gemv_into(lowrank, &v.data, y, v.rows(), v.cols());
         }
+        if let Some(s2) = &self.sparse {
+            s2.matvec(x, y);
+        }
         #[cfg(feature = "validate")]
         crate::util::validate::check_finite("InferLinear::forward_row_into", y);
     }
@@ -328,9 +392,22 @@ impl InferLinear {
     /// `max_batch ×` the model's widest rank).
     // lint: hot-path
     pub fn forward_rows_into(&self, xs: &[f32], ys: &mut [f32], n: usize, lowrank: &mut Vec<f32>) {
+        self.base_rows_into(xs, ys, n);
+        self.sidepath_rows_into(xs, ys, n, lowrank);
+    }
+
+    /// The **base half** of [`Self::forward_rows_into`]: seed every
+    /// output row with the bias, then contract all rows against the
+    /// (possibly `Arc`-shared) base weight. The multi-adapter fused
+    /// sweep calls this once over the *whole* packed batch when every
+    /// live session shares one base (`base_ptr` equal — bias `Arc`s are
+    /// then identical too, so the seed is exact for every group), and
+    /// per group otherwise.
+    // lint: hot-path
+    pub(crate) fn base_rows_into(&self, xs: &[f32], ys: &mut [f32], n: usize) {
         let (kd, od) = (self.in_dim(), self.out_dim());
-        debug_assert_eq!(xs.len(), n * kd, "forward_rows_into: xs len");
-        debug_assert_eq!(ys.len(), n * od, "forward_rows_into: ys len");
+        debug_assert_eq!(xs.len(), n * kd, "base_rows_into: xs len");
+        debug_assert_eq!(ys.len(), n * od, "base_rows_into: ys len");
         for r in 0..n {
             ys[r * od..(r + 1) * od].copy_from_slice(&self.bias);
         }
@@ -338,6 +415,29 @@ impl InferLinear {
             Repr::Dense(w) => matmul_into(xs, &w.data, ys, n, kd, od),
             Repr::Csr(c) => c.matvec_batch(xs, ys, n),
         }
+    }
+
+    /// The **task half** of [`Self::forward_rows_into`]: accumulate the
+    /// low-rank side-path (two skinny gemms, `[n,d]×[d,r]` then
+    /// `[n,r]×[r,out]`) and the `S₂` scatter onto already-seeded output
+    /// rows. In the multi-adapter fused sweep this is the block-diagonal
+    /// *grouped* gemm: rows are grouped by adapter and each group runs
+    /// its own skinny pair + scatter over its sub-slice of the packed
+    /// batch. Row `r` of `base + sidepath` is bit-identical to
+    /// [`Self::forward_row_into`] on row `r` — same kernels, same
+    /// per-row loop order — which is what keeps fused mixed-adapter
+    /// sweeps exactly equal to solo sessions.
+    // lint: hot-path
+    pub(crate) fn sidepath_rows_into(
+        &self,
+        xs: &[f32],
+        ys: &mut [f32],
+        n: usize,
+        lowrank: &mut Vec<f32>,
+    ) {
+        let kd = self.in_dim();
+        debug_assert_eq!(xs.len(), n * kd, "sidepath_rows_into: xs len");
+        debug_assert_eq!(ys.len(), n * self.out_dim(), "sidepath_rows_into: ys len");
         if let Some((u, v, scale)) = &self.low {
             let rank = u.cols();
             lowrank.clear();
@@ -351,8 +451,11 @@ impl InferLinear {
             }
             matmul_into(lowrank, &v.data, ys, n, rank, v.cols());
         }
+        if let Some(s2) = &self.sparse {
+            s2.matvec_batch(xs, ys, n);
+        }
         #[cfg(feature = "validate")]
-        crate::util::validate::check_finite("InferLinear::forward_rows_into", ys);
+        crate::util::validate::check_finite("InferLinear::sidepath_rows_into", ys);
     }
 
     /// Rank of the low-rank side-path (0 when folded/absent) — lets the
@@ -360,23 +463,53 @@ impl InferLinear {
     pub(crate) fn lowrank_rank(&self) -> usize {
         self.low.as_ref().map_or(0, |(u, _, _)| u.cols())
     }
+
+    /// Heap bytes, deduped against `seen` (`Arc` data pointers): the
+    /// base weight and bias count once per *distinct* buffer, the
+    /// per-task `UV`/`S₂` carriers always (they are owned).
+    fn resident_bytes(&self, seen: &mut HashSet<usize>) -> usize {
+        let mut total = match &self.repr {
+            Repr::Dense(w) => arc_tensor_bytes(w, seen),
+            Repr::Csr(c) => {
+                if seen.insert(Arc::as_ptr(c) as usize) {
+                    c.vals.len() * 4 + c.col_idx.len() * 4 + c.row_ptr.len() * 8
+                } else {
+                    0
+                }
+            }
+        };
+        total += arc_vec_bytes(&self.bias, seen);
+        if let Some((u, v, _)) = &self.low {
+            total += (u.data.len() + v.data.len()) * 4;
+        }
+        if let Some(s) = &self.sparse {
+            total += s.vals.len() * 4 + (s.row_idx.len() + s.col_idx.len()) * 4;
+        }
+        total
+    }
 }
 
-/// Frozen layer norm (γ, β only).
+/// Frozen layer norm (γ, β only). The vectors live behind `Arc` so
+/// attached per-task models share the base's copies.
 #[derive(Clone, Debug)]
 pub struct InferNorm {
-    gamma: Vec<f32>,
-    beta: Vec<f32>,
+    gamma: Arc<Vec<f32>>,
+    beta: Arc<Vec<f32>>,
     eps: f32,
 }
 
 impl InferNorm {
     fn from_train(ln: &crate::nn::layernorm::LayerNorm) -> InferNorm {
         InferNorm {
-            gamma: ln.gamma.data.clone(),
-            beta: ln.beta.data.clone(),
+            gamma: Arc::new(ln.gamma.data.clone()),
+            beta: Arc::new(ln.beta.data.clone()),
             eps: ln.eps,
         }
+    }
+
+    /// Heap bytes, deduped against `seen` (`Arc` data pointers).
+    fn resident_bytes(&self, seen: &mut HashSet<usize>) -> usize {
+        arc_vec_bytes(&self.gamma, seen) + arc_vec_bytes(&self.beta, seen)
     }
 
     /// Row-wise layer norm; same arithmetic order as the training
@@ -437,13 +570,19 @@ impl InferNorm {
     }
 }
 
-/// Frozen multi-head attention with gates folded into `wv`.
+/// Frozen multi-head attention. The monolithic compile folds the
+/// per-head gates into `wv` (`gates: None`); attached per-task models
+/// cannot touch the shared base `wv`, so they carry their task's gates
+/// explicitly and apply them to the value rows right after the `wv`
+/// projection — before K/V capture, so cached values are gated once.
 #[derive(Clone, Debug)]
 pub struct InferAttention {
     wq: InferLinear,
     wk: InferLinear,
     wv: InferLinear,
     wo: InferLinear,
+    /// Per-head gate factors, `None` when folded (or all 1.0).
+    gates: Option<Vec<f32>>,
     n_heads: usize,
     head_dim: usize,
     causal: bool,
@@ -474,7 +613,10 @@ impl InferAttention {
         let hd = self.head_dim;
         let q2 = self.wq.forward(x);
         let k2 = self.wk.forward(x);
-        let v2 = self.wv.forward(x); // gates pre-folded into wv
+        // Monolithic compile pre-folds gates into wv; attached models
+        // carry them and gate the value rows here (before capture).
+        let mut v2 = self.wv.forward(x);
+        self.gate_value_rows(&mut v2.data);
         if let Some((kd, vd)) = capture {
             debug_assert_eq!(batch, 1, "K/V capture is a single-sequence path");
             kd.copy_from_slice(&k2.data);
@@ -501,6 +643,44 @@ impl InferAttention {
             }
         }
         self.wo.forward(&ctx)
+    }
+
+    /// Scale the head slices of packed value rows (`vs`: any whole
+    /// number of `[width]` rows) by the per-head gates, if this model
+    /// carries unfolded gates. `g·(attn·v) ≡ attn·(g·v)`, so gating the
+    /// raw value projection reproduces training-time gating; exact-zero
+    /// gates contribute exact zeros, which is what keeps
+    /// Compact-attached equal to Merged-attached. No-op (and free) on
+    /// monolithically compiled models. Allocates nothing.
+    // lint: hot-path
+    pub(crate) fn gate_value_rows(&self, vs: &mut [f32]) {
+        let gs = match &self.gates {
+            Some(gs) => gs,
+            None => return,
+        };
+        let width = self.n_heads * self.head_dim;
+        let hd = self.head_dim;
+        debug_assert_eq!(vs.len() % width, 0, "gate_value_rows: ragged rows");
+        let rows = vs.len() / width;
+        for r in 0..rows {
+            for (h, &g) in gs.iter().enumerate() {
+                if g == 1.0 {
+                    continue;
+                }
+                for v in vs[r * width + h * hd..r * width + (h + 1) * hd].iter_mut() {
+                    *v *= g;
+                }
+            }
+        }
+    }
+
+    /// Heap bytes, deduped against `seen` (`Arc` data pointers).
+    fn resident_bytes(&self, seen: &mut HashSet<usize>) -> usize {
+        let mut total = 0;
+        for lin in [&self.wq, &self.wk, &self.wv, &self.wo] {
+            total += lin.resident_bytes(seen);
+        }
+        total + self.gates.as_ref().map_or(0, |g| g.len() * 4)
     }
 }
 
@@ -571,6 +751,11 @@ impl InferAdapter {
             *o += xv;
         }
     }
+
+    /// Heap bytes, deduped against `seen` (`Arc` data pointers).
+    fn resident_bytes(&self, seen: &mut HashSet<usize>) -> usize {
+        self.down.resident_bytes(seen) + self.up.resident_bytes(seen)
+    }
 }
 
 /// One frozen pre-LN block.
@@ -613,6 +798,17 @@ impl InferBlock {
             f_out = ad.forward(&f_out);
         }
         x2.add(&f_out)
+    }
+
+    /// Heap bytes, deduped against `seen` (`Arc` data pointers).
+    fn resident_bytes(&self, seen: &mut HashSet<usize>) -> usize {
+        let mut total = self.ln1.resident_bytes(seen) + self.ln2.resident_bytes(seen);
+        total += self.attn.resident_bytes(seen);
+        total += self.fc1.resident_bytes(seen) + self.fc2.resident_bytes(seen);
+        for ad in [&self.adapter1, &self.adapter2].into_iter().flatten() {
+            total += ad.resident_bytes(seen);
+        }
+        total
     }
 }
 
@@ -670,8 +866,8 @@ impl ModelStats {
 pub struct InferenceModel {
     pub cfg: ModelCfg,
     policy: MergePolicy,
-    tok: Tensor,
-    pos: Tensor,
+    tok: Arc<Tensor>,
+    pos: Arc<Tensor>,
     prefix: Option<Tensor>,
     blocks: Vec<InferBlock>,
     ln_f: InferNorm,
@@ -721,8 +917,8 @@ impl InferenceModel {
         InferenceModel {
             cfg: model.cfg.clone(),
             policy,
-            tok: model.embed.tok.clone(),
-            pos: model.embed.pos.clone(),
+            tok: Arc::new(model.embed.tok.clone()),
+            pos: Arc::new(model.embed.pos.clone()),
             prefix: model.prefix.as_ref().map(|p| p.vecs.clone()),
             blocks,
             ln_f: InferNorm::from_train(&model.ln_f),
@@ -838,6 +1034,27 @@ impl InferenceModel {
         push("head".into(), head);
         st
     }
+
+    /// Heap bytes resident for this model, deduped against `seen` (a
+    /// set of `Arc` data pointers). Summing over N attached per-task
+    /// models with one shared `seen` measures the *true* multi-tenant
+    /// footprint: the shared base buffers count once, each task's
+    /// `UV`/`S₂`/gates/head delta counts per task — the quantity the
+    /// "N adapters in ~1× RAM" acceptance bench asserts on.
+    pub fn resident_bytes(&self, seen: &mut HashSet<usize>) -> usize {
+        let mut total = arc_tensor_bytes(&self.tok, seen) + arc_tensor_bytes(&self.pos, seen);
+        if let Some(p) = &self.prefix {
+            total += p.data.len() * 4;
+        }
+        for blk in &self.blocks {
+            total += blk.resident_bytes(seen);
+        }
+        total += self.ln_f.resident_bytes(seen);
+        let head = match &self.head {
+            InferHead::Classifier(l) | InferHead::Regressor(l) | InferHead::Lm(l) => l,
+        };
+        total + head.resident_bytes(seen)
+    }
 }
 
 impl Transformer {
@@ -919,6 +1136,7 @@ fn compile_block(blk: &crate::nn::Block, policy: MergePolicy) -> InferBlock {
             wk: InferLinear::finalize(wk, policy),
             wv: InferLinear::finalize(wv, policy),
             wo: InferLinear::finalize(wo, policy),
+            gates: None, // folded into wv above
             n_heads,
             head_dim: hd,
             causal: att.causal,

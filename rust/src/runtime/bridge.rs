@@ -272,6 +272,52 @@ pub fn import_params(
     Ok(())
 }
 
+/// Spec list for one task's **adapter delta group** — exactly the
+/// carriers [`crate::nn::Transformer::compile_adapter`] freezes: per
+/// linear the `UV` factors and the dense `S₂` carrier (where attached),
+/// the per-head gates, and the task head. This is the multi-tenant
+/// checkpoint unit (see `docs/ADAPTERS.md`): [`export_params`] over
+/// these specs serializes a task as kilobytes of delta, and
+/// [`import_params`] into a clone of the shared base re-creates the
+/// task for `compile_adapter` + `AdapterRegistry::load` — the base's
+/// frozen `W⊙S₁`, norms, and embeddings never travel.
+pub fn adapter_param_specs(model: &Transformer) -> Vec<IoSpec> {
+    let f32spec = |name: String, shape: Vec<usize>| IoSpec {
+        name,
+        shape,
+        dtype: "f32".into(),
+    };
+    let mut specs = Vec::new();
+    for (b, block) in model.blocks.iter().enumerate() {
+        let linears = [
+            ("attn.wq", &block.attn.wq),
+            ("attn.wk", &block.attn.wk),
+            ("attn.wv", &block.attn.wv),
+            ("attn.wo", &block.attn.wo),
+            ("ffn.fc1", &block.ffn.fc1),
+            ("ffn.fc2", &block.ffn.fc2),
+        ];
+        for (p, lin) in linears {
+            if let Some(a) = &lin.adapter {
+                specs.push(f32spec(format!("block{b}.{p}.u"), a.u.shape.clone()));
+                specs.push(f32spec(format!("block{b}.{p}.v"), a.v.shape.clone()));
+            }
+            if lin.residual.is_some() {
+                let shape = vec![lin.in_dim(), lin.out_dim()];
+                specs.push(f32spec(format!("block{b}.{p}.s2"), shape));
+            }
+        }
+        specs.push(f32spec(
+            format!("block{b}.attn.gates"),
+            block.attn.gates.shape.clone(),
+        ));
+    }
+    let head = model.head_proj();
+    specs.push(f32spec("head.w".into(), head.w.shape.clone()));
+    specs.push(f32spec("head.b".into(), head.b.shape.clone()));
+    specs
+}
+
 /// Split an artifact's input specs into (model params, the rest) —
 /// the rest being m.* / v.* optimizer state and data inputs.
 pub fn split_param_specs(specs: &[IoSpec]) -> (Vec<IoSpec>, Vec<IoSpec>) {
@@ -400,6 +446,42 @@ mod tests {
         carrier.data[1] = 5.0; // (0,1) is not in the {(0,0), (3,5)} support
         let err = import_params(&mut m, &[s], &[carrier]).unwrap_err();
         assert!(format!("{err}").contains("support"), "{err}");
+    }
+
+    #[test]
+    fn adapter_param_specs_round_trip_the_task_delta() {
+        let m = model_with_dsee();
+        let specs = adapter_param_specs(&m);
+        // model_with_dsee attaches u/v/s2 to the 4 attention
+        // projections only; plus per-layer gates and the task head.
+        assert_eq!(specs.len(), m.cfg.n_layers * (4 * 3 + 1) + 2);
+        // Every spec exports at its declared shape.
+        let values = export_params(&m, &specs).unwrap();
+        assert_eq!(values.len(), specs.len());
+        // The delta group alone moves a task between models: export a
+        // differently-tuned source's delta, import it into a fresh
+        // model sharing the same frozen base, and the forwards agree.
+        let mut rng = Rng::new(602);
+        let mut src = model_with_dsee();
+        for lin in src.attn_projections_mut() {
+            if let Some(a) = &mut lin.adapter {
+                a.u = Tensor::randn(&[a.u.rows(), a.u.cols()], 0.2, &mut rng);
+            }
+            if let Some(r) = &mut lin.residual {
+                r.values = Tensor::randn(&[r.nnz()], 0.3, &mut rng);
+            }
+        }
+        let values = export_params(&src, &specs).unwrap();
+        let mut dst = model_with_dsee();
+        import_params(&mut dst, &specs, &values).unwrap();
+        let ids: Vec<u32> = (0..dst.cfg.max_seq)
+            .map(|i| (i % dst.cfg.vocab) as u32)
+            .collect();
+        let (want, _) = src.forward(&ids, 1, src.cfg.max_seq);
+        let (got, _) = dst.forward(&ids, 1, dst.cfg.max_seq);
+        for (a, b) in want.data.iter().zip(&got.data) {
+            assert!((a - b).abs() < 1e-6, "{a} vs {b}");
+        }
     }
 
     #[test]

@@ -1,0 +1,232 @@
+//! Multi-tenant adapter serving — acceptance parity.
+//!
+//! The split-compile path (`compile_base` once + `compile_adapter` per
+//! task, re-joined by [`CompiledBase::attach`]) must be
+//! indistinguishable from the monolithic `compile` under **every**
+//! [`MergePolicy`]: same forward logits at 1e-4, same greedy
+//! continuation token-for-token. On top of that, the fused
+//! [`DecodeEngine`] sweeping sessions pinned to *different* adapters in
+//! one pass must emit exactly what each adapter's model emits running
+//! alone, and a mid-flight adapter swap must never perturb sessions
+//! admitted under the old epoch.
+//!
+//! [`CompiledBase::attach`]: dsee::infer::CompiledBase::attach
+//! [`DecodeEngine`]: dsee::infer::decode::DecodeEngine
+
+use dsee::config::{DseeCfg, ModelCfg};
+use dsee::infer::adapter::AdapterRegistry;
+use dsee::infer::decode::DecodeEngine;
+use dsee::infer::MergePolicy;
+use dsee::nn::Transformer;
+use dsee::tensor::Tensor;
+use dsee::util::Rng;
+
+const POLICIES: [MergePolicy; 3] = [MergePolicy::Merged, MergePolicy::Csr, MergePolicy::Compact];
+
+/// A small causal LM with DSEE carriers attached — the shared frozen
+/// base every per-task delta in these tests rides on.
+fn dsee_lm_base(seed: u64) -> Transformer {
+    let cfg = ModelCfg {
+        name: "tiny-adapter-parity".into(),
+        vocab: 60,
+        max_seq: 12,
+        d_model: 16,
+        n_layers: 2,
+        n_heads: 4,
+        d_ffn: 24,
+        causal: true,
+        n_classes: 3,
+        head: "lm".into(),
+        n_prefix: 0,
+    };
+    let mut rng = Rng::new(seed);
+    let mut m = Transformer::new(&cfg, &mut rng);
+    dsee::dsee::attach_dsee(
+        &mut m,
+        &DseeCfg {
+            rank: 4,
+            n_sparse: 16,
+            ..DseeCfg::default()
+        },
+        &mut rng,
+    );
+    m
+}
+
+/// Re-randomize the DSEE carriers (low-rank U, its scale, and the S₂
+/// values on the fixed support Ω) so each "task" is a genuinely
+/// different delta over the *same* frozen base weights.
+fn tuned(base: &Transformer, seed: u64) -> Transformer {
+    let mut rng = Rng::new(seed);
+    let mut m = base.clone();
+    for lin in m.attn_projections_mut() {
+        if let Some(a) = &mut lin.adapter {
+            a.u = Tensor::randn(&[a.u.rows(), a.u.cols()], 0.2, &mut rng);
+            a.scale = 0.7;
+        }
+        if let Some(r) = &mut lin.residual {
+            r.values = Tensor::randn(&[r.nnz()], 0.3, &mut rng);
+        }
+    }
+    m
+}
+
+/// Deterministic ragged prompt (3–5 tokens) for interleaved sessions.
+fn mixed_prompt(seed: u64) -> Vec<u32> {
+    (0..3 + seed as usize % 3).map(|i| ((i * seed as usize + 7) % 60) as u32).collect()
+}
+
+#[test]
+fn base_plus_adapter_matches_monolithic_compile_all_policies() {
+    // `compile_base(p).attach(&compile_adapter(p))` must be the same
+    // model as `compile(p)`: forward logits at 1e-4 and greedy decode
+    // token-for-token, for every MergePolicy. This is the split-compile
+    // acceptance bar — if it holds, serving N tenants from one resident
+    // base is a pure memory optimization, never a quality trade.
+    let model = tuned(&dsee_lm_base(0xADA0), 41);
+    let seq = 8;
+    let ids: Vec<u32> = (0..seq).map(|i| ((i * 13 + 5) % 60) as u32).collect();
+    let prompt: Vec<u32> = ids[..4].to_vec();
+    let cap = model.cfg.max_seq;
+    for policy in POLICIES {
+        let mono = model.compile(policy);
+        let split = model.compile_base(policy).attach(&model.compile_adapter(policy));
+        let want = mono.forward(&ids, 1, seq);
+        let got = split.forward(&ids, 1, seq);
+        assert_eq!(got.shape, want.shape, "{}", policy.label());
+        for (a, b) in got.data.iter().zip(&want.data) {
+            assert!(
+                (a - b).abs() < 1e-4 * (1.0 + b.abs()),
+                "{}: attached {a} vs monolithic {b}",
+                policy.label()
+            );
+        }
+        let want_toks = mono.generate_greedy(&prompt, 6, cap).unwrap();
+        let got_toks = split.generate_greedy(&prompt, 6, cap).unwrap();
+        assert_eq!(
+            got_toks,
+            want_toks,
+            "{}: split-compile greedy decode diverged",
+            policy.label()
+        );
+    }
+}
+
+#[test]
+fn fused_sweep_over_three_adapters_matches_solo_all_policies() {
+    // One engine sweeping sessions pinned to three *different* task
+    // adapters (plus the bare base) must emit, per session, exactly the
+    // tokens that session's own attached model emits running alone.
+    // Tokens are discrete, so the grouped base-gemm + per-adapter
+    // side-path decomposition gets the honest bar: assert_eq,
+    // bit-identical, no cross-tenant bleed through the packed rows.
+    let src = dsee_lm_base(0xADA1);
+    for policy in POLICIES {
+        let reg = AdapterRegistry::new(src.compile_base(policy));
+        for t in 1..=3u32 {
+            reg.load(t, &tuned(&src, 100 + t as u64).compile_adapter(policy));
+        }
+        let cap = reg.base().model().cfg.max_seq;
+        // Two sessions per tenant, admission order interleaving tasks
+        // 0,1,2,3,1,2,3,0 so no adapter's rows are ever contiguous by
+        // construction; prompts are ragged (3–5 tokens) per session.
+        let tasks: [u32; 8] = [0, 1, 2, 3, 1, 2, 3, 0];
+        let solo: Vec<Vec<u32>> = tasks
+            .iter()
+            .enumerate()
+            .map(|(i, &task)| {
+                let (m, _) = reg.resolve(task).unwrap();
+                let prompt = mixed_prompt(31 * (i as u64 + 1));
+                m.generate_greedy(&prompt, 6, cap).unwrap()
+            })
+            .collect();
+        let mut eng = DecodeEngine::new(reg.base().model(), tasks.len());
+        let slots: Vec<usize> = tasks
+            .iter()
+            .enumerate()
+            .map(|(i, &task)| {
+                let (m, epoch) = reg.resolve(task).unwrap();
+                let prompt = mixed_prompt(31 * (i as u64 + 1));
+                eng.admit_task(m, task, epoch, &prompt, 6, cap).unwrap()
+            })
+            .collect();
+        let mut rounds = 0;
+        while slots.iter().any(|&s| !eng.is_done(s)) {
+            eng.sweep();
+            rounds += 1;
+            assert!(rounds < 100, "{}: engine never drained", policy.label());
+        }
+        let got: Vec<Vec<u32>> = slots.iter().map(|&s| eng.release(s)).collect();
+        assert_eq!(
+            got,
+            solo,
+            "{}: mixed-adapter fused sweep diverged from solo decode",
+            policy.label()
+        );
+    }
+}
+
+#[test]
+fn adapter_swap_mid_flight_finishes_on_old_epoch() {
+    // A session admitted under epoch e pins its model Arc: reloading
+    // the task mid-decode must not change one token of the in-flight
+    // continuation, while a post-swap admission resolves the new delta
+    // and the new epoch. This is the registry's whole concurrency
+    // story — swaps are epoch bumps, never in-place mutation.
+    let src = dsee_lm_base(0xADA2);
+    let reg = AdapterRegistry::new(src.compile_base(MergePolicy::Csr));
+    let old_delta = tuned(&src, 7);
+    let new_delta = tuned(&src, 8);
+    reg.load(1, &old_delta.compile_adapter(MergePolicy::Csr));
+    let cap = reg.base().model().cfg.max_seq;
+    let prompt: Vec<u32> = vec![5, 9, 2, 44];
+
+    let (m_old, e_old) = reg.resolve(1).unwrap();
+    let want_old = m_old.generate_greedy(&prompt, 7, cap).unwrap();
+    let mut eng = DecodeEngine::new(reg.base().model(), 2);
+    let slot = eng.admit_task(m_old, 1, e_old, &prompt, 7, cap).unwrap();
+    eng.sweep();
+    eng.sweep();
+    assert!(!eng.is_done(slot), "budget 7 should outlive two sweeps");
+
+    // Swap the adapter out from under the live session.
+    let e_new = reg.load(1, &new_delta.compile_adapter(MergePolicy::Csr));
+    assert_eq!(e_new, e_old + 1, "reload must bump the epoch");
+    assert_eq!(eng.epoch(slot), e_old, "in-flight slot must keep its admission epoch");
+
+    // The in-flight session finishes on the model it was admitted with.
+    while !eng.is_done(slot) {
+        eng.sweep();
+    }
+    assert_eq!(eng.task(slot), 1);
+    assert_eq!(
+        eng.release(slot),
+        want_old,
+        "mid-flight swap perturbed a session admitted under the old epoch"
+    );
+
+    // A fresh admission sees the new epoch and the new delta.
+    let (m_new, epoch) = reg.resolve(1).unwrap();
+    assert_eq!(epoch, e_new);
+    let want_new = m_new.generate_greedy(&prompt, 7, cap).unwrap();
+    assert_ne!(
+        want_new, want_old,
+        "test deltas too similar to distinguish the swap"
+    );
+    let slot2 = eng.admit_task(m_new, 1, epoch, &prompt, 7, cap).unwrap();
+    while !eng.is_done(slot2) {
+        eng.sweep();
+    }
+    assert_eq!(eng.epoch(slot2), e_new);
+    assert_eq!(
+        eng.release(slot2),
+        want_new,
+        "post-swap admission did not decode under the new delta"
+    );
+
+    // Unload tombstones: the task vanishes but the epoch keeps rising.
+    assert!(reg.unload(1));
+    assert!(reg.resolve(1).is_none());
+    assert_eq!(reg.epoch(1), e_new + 1);
+    assert_eq!(reg.resident(), 0);
+}

@@ -158,7 +158,7 @@ fn kv_decode_matches_full_forward_all_policies() {
             };
             check(sess.last_logits(), split - 1);
             for (i, &tok) in ids.iter().enumerate().skip(split) {
-                sess.decode_step(tok);
+                sess.decode_step(&compiled, tok);
                 check(sess.last_logits(), i);
             }
         }
