@@ -46,6 +46,7 @@ fn drive(backend: Arc<dyn Backend>, workers: usize, label: &str) -> (f64, f64, f
             queue_depth: 1024,
             workers,
             cache_entries: 0,
+            ..ServeCfg::default()
         },
     );
     let t0 = Instant::now();
@@ -169,6 +170,7 @@ fn main() -> anyhow::Result<()> {
                 queue_depth: 1024,
                 workers: 4,
                 cache_entries: 2 * N_REQ,
+                ..ServeCfg::default()
             },
         );
         for pass in 1..=2 {
@@ -232,6 +234,7 @@ fn main() -> anyhow::Result<()> {
                 queue_depth: 1024,
                 workers: 2,
                 cache_entries: 0,
+                ..ServeCfg::default()
             },
         );
         let n = 128.min(ds.examples.len());

@@ -43,7 +43,8 @@
 use dsee::bench_harness::{bench, black_box, smoke_mode};
 use dsee::config::{DseeCfg, ModelCfg, TrainCfg};
 use dsee::coordinator::serve::{
-    latency_summary, start, Backend, DecodeStream, EchoBackend, ServeCfg,
+    latency_summary, latency_summary_by_class, start, Backend, DecodeStream, EchoBackend,
+    Priority, RequestOpts, ServeCfg,
 };
 use dsee::data::glue::{make_dataset, GlueTask};
 use dsee::dsee::grebsmo::grebsmo;
@@ -727,6 +728,163 @@ fn main() {
             println!("    → multi-adapter sweep steady-state heap allocations: {allocs}");
         }
 
+        println!("\n== SLO overload (admission shedding) ==");
+        // Deliberate overload of the serving path: one worker, 2 ms of
+        // compute per request (max_batch 1), a 10 ms interactive
+        // deadline, and 8 client threads offering ~4× the service rate.
+        // Three bars, all asserted (and mirrored in tests/chaos_serve.rs
+        // with injected compute):
+        //   * sheds are decided in ≪ the p50 compute time — rejection
+        //     costs an estimator read, not a forward;
+        //   * goodput under overload stays within 10% of the
+        //     un-overloaded rate — shedding protects the served
+        //     requests instead of thrashing the worker;
+        //   * zero requests are answered later than deadline + one
+        //     batch (the sweep allowance), modulo scheduling slack.
+        let overload_json = {
+            let compute = Duration::from_millis(2);
+            const DEADLINE_US: u64 = 10_000;
+            let mk = || {
+                start(
+                    Arc::new(EchoBackend {
+                        seq: 8,
+                        delay: compute,
+                    }),
+                    ServeCfg {
+                        max_batch: 1,
+                        max_wait: Duration::from_micros(100),
+                        queue_depth: 4096,
+                        workers: 1,
+                        cache_entries: 0,
+                        class_deadlines: [
+                            Some(Duration::from_micros(DEADLINE_US)),
+                            None,
+                            None,
+                        ],
+                        ..ServeCfg::default()
+                    },
+                )
+            };
+            let batch_opts = RequestOpts {
+                class: Priority::Batch,
+                deadline: None,
+            };
+            // Un-overloaded baseline: sequential offered load, so every
+            // request is answered and the rate is the service rate.
+            let n_base = if smoke_mode() { 30usize } else { 100 };
+            let (client, server) = mk();
+            let t0 = Instant::now();
+            for i in 0..n_base {
+                let r = client
+                    .try_infer_with(0, vec![(i % 200) as u32; 8], batch_opts)
+                    .unwrap();
+                assert!(r.error.is_none(), "baseline request failed: {:?}", r.error);
+            }
+            let base_rps = n_base as f64 / t0.elapsed().as_secs_f64();
+            drop(client);
+            server.join();
+
+            // Overload: warm the wait estimator, then storm from 8
+            // threads. Shed decision time is measured client-side (the
+            // whole call, since a shed never reaches the queue).
+            let (client, server) = mk();
+            for _ in 0..3 {
+                let r = client.try_infer_with(0, vec![1; 8], batch_opts).unwrap();
+                assert!(r.error.is_none(), "warmup failed: {:?}", r.error);
+            }
+            let n_threads = 8usize;
+            let per_thread = n_base / 4;
+            let results = std::sync::Mutex::new(Vec::new());
+            let t0 = Instant::now();
+            std::thread::scope(|s| {
+                for t in 0..n_threads {
+                    let client = &client;
+                    let results = &results;
+                    s.spawn(move || {
+                        for i in 0..per_thread {
+                            let ids = vec![((t * 37 + i) % 200) as u32; 8];
+                            let opts = RequestOpts {
+                                class: Priority::Interactive,
+                                deadline: None, // class default: 10 ms
+                            };
+                            let q0 = Instant::now();
+                            let r = client.try_infer_with(0, ids, opts).unwrap();
+                            let wall_us = q0.elapsed().as_secs_f64() * 1e6;
+                            results.lock().unwrap().push((r, wall_us));
+                        }
+                    });
+                }
+            });
+            let storm_elapsed = t0.elapsed();
+            drop(client);
+            let stats = server.join();
+            let results = results.into_inner().unwrap();
+            let offered = n_threads * per_thread;
+            assert_eq!(results.len(), offered);
+            let mut shed_us = Vec::new();
+            let mut compute_us = Vec::new();
+            let mut class_samples = Vec::new();
+            let (mut ok, mut expired) = (0usize, 0usize);
+            for (r, wall_us) in &results {
+                if r.shed {
+                    shed_us.push(*wall_us);
+                } else if r.deadline_exceeded {
+                    expired += 1;
+                } else {
+                    assert!(r.error.is_none(), "storm request failed: {:?}", r.error);
+                    ok += 1;
+                    let in_server = r.queue_us + r.compute_us;
+                    // Deadline + one batch, plus generous slack for a
+                    // loaded CI box — far below the unshedded backlog.
+                    assert!(
+                        in_server <= DEADLINE_US + 2_000 + 20_000,
+                        "answered later than deadline + one batch: {in_server} µs in-server"
+                    );
+                    compute_us.push(r.compute_us as f64);
+                    class_samples.push((Priority::Interactive, in_server as f64));
+                }
+            }
+            let sheds = shed_us.len();
+            assert!(sheds >= 1, "storm must visibly overload the server");
+            assert_eq!(ok + sheds + expired, offered);
+            assert_eq!(stats.shed, sheds);
+            let (shed_p50, _, _) = latency_summary(shed_us);
+            let (compute_p50, _, _) = latency_summary(compute_us);
+            assert!(
+                shed_p50 * 4.0 < compute_p50,
+                "shedding must cost ≪ p50 compute: shed {shed_p50:.0} µs vs \
+                 compute {compute_p50:.0} µs"
+            );
+            let goodput_rps = ok as f64 / storm_elapsed.as_secs_f64();
+            assert!(
+                goodput_rps >= 0.9 * base_rps,
+                "overload degraded goodput past 10%: {goodput_rps:.0} req/s vs \
+                 baseline {base_rps:.0} req/s"
+            );
+            let by_class = latency_summary_by_class(&class_samples);
+            let (i_p50, i_p95, _) = by_class[Priority::Interactive.idx()];
+            println!(
+                "    → {offered} offered: {ok} ok / {sheds} shed / {expired} expired; \
+                 goodput {goodput_rps:.0} vs baseline {base_rps:.0} req/s"
+            );
+            println!(
+                "    → shed p50 {shed_p50:.0} µs vs compute p50 {compute_p50:.0} µs; \
+                 interactive in-server p50/p95 {i_p50:.0}/{i_p95:.0} µs"
+            );
+            Json::obj(vec![
+                ("offered", Json::num(offered as f64)),
+                ("ok", Json::num(ok as f64)),
+                ("shed", Json::num(sheds as f64)),
+                ("deadline_exceeded", Json::num(expired as f64)),
+                ("baseline_rps", Json::num(base_rps)),
+                ("goodput_rps", Json::num(goodput_rps)),
+                ("shed_p50_us", Json::num(shed_p50)),
+                ("compute_p50_us", Json::num(compute_p50)),
+                ("interactive_p50_us", Json::num(i_p50)),
+                ("interactive_p95_us", Json::num(i_p95)),
+            ])
+        };
+
         // Machine-readable perf trajectory: future PRs diff their
         // numbers against this file instead of scraping stdout.
         let doc = Json::obj(vec![
@@ -736,6 +894,7 @@ fn main() {
             ("smoke", Json::Bool(smoke_mode())),
             ("scenarios", Json::Arr(decode_scenarios)),
             ("adapter_scenarios", Json::Arr(adapter_scenarios)),
+            ("overload", overload_json),
         ]);
         std::fs::write("BENCH_decode.json", doc.pretty()).expect("write BENCH_decode.json");
         println!("    → wrote BENCH_decode.json");
@@ -764,6 +923,7 @@ fn main() {
                         queue_depth: 256,
                         workers: 1,
                         cache_entries: 0,
+                        ..ServeCfg::default()
                     },
                 );
                 let label = if serial { "serial" } else { "continuous" };
@@ -824,6 +984,7 @@ fn main() {
                     queue_depth: 64,
                     workers: 1,
                     cache_entries: 0,
+                    ..ServeCfg::default()
                 },
             );
             let iters = if smoke_mode() { 1 } else { 5 };
@@ -874,6 +1035,7 @@ fn main() {
         queue_depth: 4096,
         workers: 1,
         cache_entries: 0,
+        ..ServeCfg::default()
     };
     let (client, server) = start(
         Arc::new(EchoBackend {

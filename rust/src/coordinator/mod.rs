@@ -52,14 +52,10 @@ pub fn run_grid(jobs: Vec<Job>, workers: usize) -> Vec<JobOutcome> {
                 let Job { id, name, run } = job;
                 let outcome = match std::panic::catch_unwind(AssertUnwindSafe(run)) {
                     Ok(result) => JobOutcome::Done(result),
-                    Err(panic) => {
-                        let error = panic
-                            .downcast_ref::<String>()
-                            .cloned()
-                            .or_else(|| panic.downcast_ref::<&str>().map(|s| s.to_string()))
-                            .unwrap_or_else(|| "unknown panic".into());
-                        JobOutcome::Failed { name, error }
-                    }
+                    Err(panic) => JobOutcome::Failed {
+                        name,
+                        error: serve::panic_message(panic),
+                    },
                 };
                 let _ = tx.send((id, outcome));
             });

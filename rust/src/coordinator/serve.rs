@@ -120,11 +120,12 @@
 //! [`ServeStats`] at join. See `docs/ADAPTERS.md`.
 
 use crate::coordinator::cache::{task_key, ResponseCache};
-use crate::coordinator::shard::{affinity_hash, ShardedQueue};
+use crate::coordinator::shard::{affinity_hash, PushError, ShardedQueue};
 use crate::infer::adapter::{AdapterRegistry, AdapterStats};
 use crate::infer::InferenceModel;
 use crate::nn::Transformer;
 use std::panic::AssertUnwindSafe;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc::{self, Sender};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
@@ -493,6 +494,87 @@ impl Backend for NativeBackend {
     }
 }
 
+/// SLO priority class of a request. Classes do not reorder the queue —
+/// they select the default deadline budget
+/// ([`ServeCfg::class_deadlines`]) and bucket the per-class
+/// shed/deadline counters in [`ServeStats`], so one misbehaving tenant
+/// class degrades visibly instead of silently dragging every class's
+/// tail.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum Priority {
+    /// Latency-sensitive traffic (chat turns): tight budget, shed early.
+    Interactive,
+    /// The default for requests that never state a class.
+    #[default]
+    Standard,
+    /// Throughput traffic (offline eval, backfills): loose or no budget.
+    Batch,
+}
+
+impl Priority {
+    pub const COUNT: usize = 3;
+    pub const ALL: [Priority; Priority::COUNT] =
+        [Priority::Interactive, Priority::Standard, Priority::Batch];
+
+    /// Stable index into per-class counter arrays.
+    pub fn idx(self) -> usize {
+        match self {
+            Priority::Interactive => 0,
+            Priority::Standard => 1,
+            Priority::Batch => 2,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Priority::Interactive => "interactive",
+            Priority::Standard => "standard",
+            Priority::Batch => "batch",
+        }
+    }
+}
+
+/// Per-request SLO options for the `*_with` client calls.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct RequestOpts {
+    pub class: Priority,
+    /// Deadline budget (submit → reply). `None` uses the class default
+    /// from [`ServeCfg::class_deadlines`]; if that is also `None` the
+    /// request has no deadline (the pre-SLO blocking behavior).
+    pub deadline: Option<Duration>,
+}
+
+/// Typed error from the bounded-submission client calls
+/// ([`Client::try_infer_for`] / [`Client::try_generate_for`]), so
+/// callers can distinguish a retryable overload from a dead server
+/// without string-matching.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum SubmitError {
+    /// The queue stayed at capacity for the whole timeout. Retryable:
+    /// requests are idempotent by construction (the response cache key
+    /// is `(task, adapter epoch, ids)` and generation is deterministic
+    /// greedy decode), so [`Client::infer_retry`] resubmits safely.
+    Overloaded {
+        /// Queue depth observed when the push timed out.
+        pending: usize,
+    },
+    /// The server stopped (queue closed); retrying cannot succeed.
+    Stopped,
+}
+
+impl std::fmt::Display for SubmitError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SubmitError::Overloaded { pending } => {
+                write!(f, "server overloaded ({pending} requests queued)")
+            }
+            SubmitError::Stopped => write!(f, "server stopped"),
+        }
+    }
+}
+
+impl std::error::Error for SubmitError {}
+
 /// One queued request: token ids + reply channel, in one of two kinds.
 /// Both kinds share the sharded queue, so a drained batch can carry a
 /// mix; the worker splits it (classification slice in one backend call,
@@ -506,6 +588,10 @@ pub enum Request {
         ids: Vec<u32>,
         reply: Sender<Response>,
         enqueued: Instant,
+        class: Priority,
+        /// Absolute deadline; expired requests are dropped at batch
+        /// formation instead of computing an answer nobody waits for.
+        deadline: Option<Instant>,
     },
     /// Autoregressive continuation: greedy-decode up to `max_new`
     /// tokens after the prompt over a KV-cached decode session, under
@@ -516,6 +602,10 @@ pub enum Request {
         max_new: usize,
         reply: Sender<Response>,
         enqueued: Instant,
+        class: Priority,
+        /// Absolute deadline, re-checked at admission and at every
+        /// sweep boundary while the session is live.
+        deadline: Option<Instant>,
     },
 }
 
@@ -544,19 +634,61 @@ pub struct Response {
     pub batch_size: usize,
     /// Answered from the response cache (queue and backend skipped).
     pub cached: bool,
+    /// Rejected by SLO admission control before any compute: the
+    /// estimated wait exceeded the deadline budget, or the queue stayed
+    /// full for the whole budget. `queue_us` still carries the real
+    /// time spent deciding, so "shed instantly" and "waited then shed"
+    /// are distinguishable.
+    pub shed: bool,
+    /// The deadline expired in-server: in queue (empty payload) or
+    /// mid-generation (partial `tokens` kept — the client paid for
+    /// them; it can decide whether a truncated continuation is usable).
+    pub deadline_exceeded: bool,
     pub error: Option<String>,
+}
+
+impl Default for Response {
+    fn default() -> Response {
+        Response {
+            logits: Vec::new(),
+            tokens: Vec::new(),
+            queue_us: 0,
+            compute_us: 0,
+            batch_size: 0,
+            cached: false,
+            shed: false,
+            deadline_exceeded: false,
+            error: None,
+        }
+    }
 }
 
 impl Response {
     fn failure(msg: String, queue_us: u64) -> Response {
         Response {
-            logits: Vec::new(),
-            tokens: Vec::new(),
             queue_us,
-            compute_us: 0,
-            batch_size: 0,
-            cached: false,
             error: Some(msg),
+            ..Response::default()
+        }
+    }
+
+    /// Load-shedding rejection (no compute spent).
+    fn shed(msg: String, queue_us: u64) -> Response {
+        Response {
+            queue_us,
+            shed: true,
+            error: Some(msg),
+            ..Response::default()
+        }
+    }
+
+    /// Deadline expiry before any compute (dropped in queue/admission).
+    fn deadline_expired(queue_us: u64) -> Response {
+        Response {
+            queue_us,
+            deadline_exceeded: true,
+            error: Some("deadline exceeded before compute".into()),
+            ..Response::default()
         }
     }
 }
@@ -577,6 +709,17 @@ pub struct ServeCfg {
     /// Response-cache capacity in entries; 0 disables the cache. Only
     /// enable for deterministic backends (compiled classification is).
     pub cache_entries: usize,
+    /// Default deadline budget (submit → reply) per [`Priority`] class,
+    /// indexed by [`Priority::idx`]. `None` (the default for every
+    /// class) means no deadline: requests block on a full queue and are
+    /// never shed — exactly the pre-SLO behavior. A request can
+    /// override its class default via [`RequestOpts::deadline`].
+    pub class_deadlines: [Option<Duration>; Priority::COUNT],
+    /// Worker panics tolerated per worker thread before supervision
+    /// gives up restarting it. Non-request panics only: request-path
+    /// panics are already contained per request and never kill the
+    /// worker loop.
+    pub worker_restart_budget: usize,
 }
 
 impl Default for ServeCfg {
@@ -587,6 +730,8 @@ impl Default for ServeCfg {
             queue_depth: 1024,
             workers: 1,
             cache_entries: 0,
+            class_deadlines: [None; Priority::COUNT],
+            worker_restart_budget: 2,
         }
     }
 }
@@ -654,6 +799,108 @@ impl BatchController {
     }
 }
 
+/// Robustness state shared by clients, workers, and the server handle:
+/// the admission-control wait estimator, the drain switch, and the
+/// shed/deadline/restart counters (folded into [`ServeStats`] at
+/// join). Everything is atomic — the worker loop is `no-panic`, so no
+/// lock (and no `lock().unwrap()`) may sit on its path.
+struct Shared {
+    /// Epoch for the micros-encoded drain deadline below.
+    start: Instant,
+    workers: usize,
+    /// EWMA of per-request service time in nanoseconds, fed by every
+    /// completed classification run and decode sweep
+    /// (compute / batch fill). 0 until the first batch lands — a cold
+    /// server never sheds on an estimate it does not have.
+    ewma_per_req_ns: AtomicU64,
+    /// Micros since `start` at which draining in-flight work must stop;
+    /// 0 = not draining.
+    drain_deadline_us: AtomicU64,
+    submitted: [AtomicUsize; Priority::COUNT],
+    shed: [AtomicUsize; Priority::COUNT],
+    deadline_exceeded: [AtomicUsize; Priority::COUNT],
+    worker_restarts: AtomicUsize,
+    /// Workers still running their loop; the last one to die past its
+    /// restart budget fails the queue's remaining requests so no
+    /// client hangs on a reply that can never come.
+    live_workers: AtomicUsize,
+}
+
+impl Shared {
+    fn new(workers: usize) -> Shared {
+        const ZERO: AtomicUsize = AtomicUsize::new(0);
+        Shared {
+            start: Instant::now(),
+            workers: workers.max(1),
+            ewma_per_req_ns: AtomicU64::new(0),
+            drain_deadline_us: AtomicU64::new(0),
+            submitted: [ZERO; Priority::COUNT],
+            shed: [ZERO; Priority::COUNT],
+            deadline_exceeded: [ZERO; Priority::COUNT],
+            worker_restarts: AtomicUsize::new(0),
+            live_workers: AtomicUsize::new(workers.max(1)),
+        }
+    }
+
+    fn count(counters: &[AtomicUsize; Priority::COUNT], class: Priority) {
+        counters[class.idx()].fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Fold one completed batch (classification run or decode sweep)
+    /// into the per-request service-time estimate. Lossy racy
+    /// load/store across workers is fine — this feeds a shedding
+    /// heuristic, not an invariant.
+    // lint: no-panic
+    fn note_batch(&self, compute: Duration, fill: usize) {
+        let per_req_ns = (compute.as_nanos() as u64) / fill.max(1) as u64;
+        let prev = self.ewma_per_req_ns.load(Ordering::Relaxed);
+        let next = if prev == 0 {
+            per_req_ns
+        } else {
+            (4 * prev + per_req_ns) / 5
+        };
+        self.ewma_per_req_ns.store(next.max(1), Ordering::Relaxed);
+    }
+
+    /// Estimated wait for a request entering behind `pending` queued
+    /// ones: EWMA per-request service time × depth, divided across the
+    /// worker pool. Zero until the estimator warms up.
+    // lint: no-panic
+    fn estimated_wait(&self, pending: usize) -> Duration {
+        let per_req = self.ewma_per_req_ns.load(Ordering::Relaxed);
+        Duration::from_nanos(per_req.saturating_mul(pending as u64) / self.workers as u64)
+    }
+
+    fn begin_drain(&self, timeout: Duration) {
+        let at = self.start.elapsed() + timeout;
+        // 0 means "not draining", so a drain deadline landing on the
+        // epoch micro is nudged forward one.
+        self.drain_deadline_us
+            .store((at.as_micros() as u64).max(1), Ordering::SeqCst);
+    }
+
+    /// Whether the drain deadline has passed (false when not draining).
+    // lint: no-panic
+    fn drain_expired(&self) -> bool {
+        let dl = self.drain_deadline_us.load(Ordering::Relaxed);
+        dl != 0 && self.start.elapsed().as_micros() as u64 >= dl
+    }
+
+    /// Copy the authoritative shared counters into merged stats (the
+    /// workers never count these locally — one source of truth).
+    fn fold_into(&self, stats: &mut ServeStats) {
+        for c in Priority::ALL {
+            stats.class_submitted[c.idx()] = self.submitted[c.idx()].load(Ordering::Relaxed);
+            stats.class_shed[c.idx()] = self.shed[c.idx()].load(Ordering::Relaxed);
+            stats.class_deadline_exceeded[c.idx()] =
+                self.deadline_exceeded[c.idx()].load(Ordering::Relaxed);
+        }
+        stats.shed = stats.class_shed.iter().sum();
+        stats.deadline_exceeded = stats.class_deadline_exceeded.iter().sum();
+        stats.worker_restarts = self.worker_restarts.load(Ordering::Relaxed);
+    }
+}
+
 /// Closes the queue when the last client handle is dropped.
 struct CloseGuard {
     queue: Arc<ShardedQueue<Request>>,
@@ -674,10 +921,68 @@ pub struct Client {
     /// client reads each task's current epoch here to key the response
     /// cache, so a reloaded adapter's stale entries become unreachable.
     registry: Option<Arc<AdapterRegistry>>,
+    shared: Arc<Shared>,
+    class_deadlines: [Option<Duration>; Priority::COUNT],
     _close: Arc<CloseGuard>,
 }
 
 impl Client {
+    /// Effective deadline budget for a request: its explicit override,
+    /// else its class default from [`ServeCfg::class_deadlines`].
+    fn budget_for(&self, opts: &RequestOpts) -> Option<Duration> {
+        opts.deadline.or(self.class_deadlines[opts.class.idx()])
+    }
+
+    /// SLO admission gate, run *before* enqueueing: shed immediately
+    /// when the estimated wait (EWMA per-request service time × queue
+    /// depth, across the worker pool) already exceeds the deadline
+    /// budget — rejecting with budget left beats timing out late.
+    /// `None` = admit.
+    // lint: no-panic
+    fn admission_shed(&self, budget: Option<Duration>, class: Priority) -> Option<Response> {
+        let budget = budget?;
+        let est = self.shared.estimated_wait(self.queue.pending() + 1);
+        if est <= budget {
+            return None;
+        }
+        Shared::count(&self.shared.shed, class);
+        Some(Response::shed(
+            format!(
+                "shed: estimated wait {est:?} exceeds deadline budget {budget:?}"
+            ),
+            0,
+        ))
+    }
+
+    /// Push with the deadline budget bounding the backpressure wait;
+    /// a queue still full at the deadline sheds the request instead of
+    /// blocking past its own budget. `Ok(None)` means pushed.
+    fn push_within_budget(
+        &self,
+        shard_key: u64,
+        req: Request,
+        budget: Option<Duration>,
+        class: Priority,
+    ) -> crate::Result<Option<Response>> {
+        let Some(budget) = budget else {
+            self.queue
+                .push_affine(shard_key, req)
+                .map_err(|_| anyhow::anyhow!("server stopped"))?;
+            return Ok(None);
+        };
+        let waited = Instant::now();
+        match self.queue.push_affine_for(shard_key, req, budget) {
+            Ok(()) => Ok(None),
+            Err(PushError::Closed(_)) => anyhow::bail!("server stopped"),
+            Err(PushError::Full(_)) => {
+                Shared::count(&self.shared.shed, class);
+                Ok(Some(Response::shed(
+                    format!("shed: queue full for the whole {budget:?} deadline budget"),
+                    waited.elapsed().as_micros() as u64,
+                )))
+            }
+        }
+    }
     /// Submit and wait for the reply, returning the raw [`Response`]
     /// even when it carries an error (rejection / backend failure) —
     /// the error response still has its real queue time attached.
@@ -687,13 +992,31 @@ impl Client {
     }
 
     /// [`Client::try_infer`] under `task`'s adapter (0 = bare base).
+    pub fn try_infer_task(&self, task: u32, ids: Vec<u32>) -> crate::Result<Response> {
+        self.try_infer_with(task, ids, RequestOpts::default())
+    }
+
+    /// [`Client::try_infer_task`] with explicit SLO options: the
+    /// request carries `opts.class` and a deadline budget
+    /// ([`Client::budget_for`]). With a budget set, admission sheds
+    /// early when the estimated wait already exceeds it, the
+    /// backpressure wait is bounded by it, and the worker drops the
+    /// request (typed `deadline_exceeded`) once it expires in queue —
+    /// with no budget (the default) behavior is exactly the blocking
+    /// pre-SLO path.
     ///
     /// The cache key is [`task_key`]`(task, adapter_epoch, ids)`,
     /// computed **once** per request: the epoch read before the lookup
     /// is the same one baked into the insert key, so a reload that
     /// lands mid-request keys the stale logits under the *old* epoch —
     /// unreachable to post-reload lookups, aged out by LRU.
-    pub fn try_infer_task(&self, task: u32, ids: Vec<u32>) -> crate::Result<Response> {
+    pub fn try_infer_with(
+        &self,
+        task: u32,
+        ids: Vec<u32>,
+        opts: RequestOpts,
+    ) -> crate::Result<Response> {
+        Shared::count(&self.shared.submitted, opts.class);
         // Capture both epochs *before* the backend computes: the
         // adapter epoch is baked into the key (per-task invalidation);
         // the cache's clear-epoch makes a full invalidation in flight
@@ -706,28 +1029,28 @@ impl Client {
             if let Some(logits) = cache.get(key) {
                 return Ok(Response {
                     logits,
-                    tokens: Vec::new(),
-                    queue_us: 0,
-                    compute_us: 0,
-                    batch_size: 0,
                     cached: true,
-                    error: None,
+                    ..Response::default()
                 });
             }
         }
+        let budget = self.budget_for(&opts);
+        if let Some(shed) = self.admission_shed(budget, opts.class) {
+            return Ok(shed);
+        }
         let shard_key = affinity_hash(task, &ids);
         let (reply_tx, reply_rx) = mpsc::channel();
-        self.queue
-            .push_affine(
-                shard_key,
-                Request::Classify {
-                    task,
-                    ids,
-                    reply: reply_tx,
-                    enqueued: Instant::now(),
-                },
-            )
-            .map_err(|_| anyhow::anyhow!("server stopped"))?;
+        let req = Request::Classify {
+            task,
+            ids,
+            reply: reply_tx,
+            enqueued: Instant::now(),
+            class: opts.class,
+            deadline: budget.map(|b| Instant::now() + b),
+        };
+        if let Some(shed) = self.push_within_budget(shard_key, req, budget, opts.class)? {
+            return Ok(shed);
+        }
         let resp = reply_rx
             .recv()
             .map_err(|_| anyhow::anyhow!("server dropped request"))?;
@@ -737,6 +1060,141 @@ impl Client {
             }
         }
         Ok(resp)
+    }
+
+    /// Bounded-submission variant of [`Client::try_infer`]: waits at
+    /// most `timeout` for queue admission, then returns a typed
+    /// [`SubmitError::Overloaded`] instead of blocking on backpressure
+    /// indefinitely. Once admitted, the request is served normally (no
+    /// deadline attached) — the bound covers the *submission* wait, the
+    /// part a caller can safely retry.
+    pub fn try_infer_for(
+        &self,
+        ids: Vec<u32>,
+        timeout: Duration,
+    ) -> Result<Response, SubmitError> {
+        self.try_infer_task_for(0, ids, timeout)
+    }
+
+    /// [`Client::try_infer_for`] under `task`'s adapter.
+    pub fn try_infer_task_for(
+        &self,
+        task: u32,
+        ids: Vec<u32>,
+        timeout: Duration,
+    ) -> Result<Response, SubmitError> {
+        Shared::count(&self.shared.submitted, Priority::Standard);
+        let key = self.cache.as_ref().map(|c| {
+            let adapter_epoch = self.registry.as_ref().map_or(0, |r| r.epoch(task));
+            (task_key(task, adapter_epoch, &ids), c.epoch())
+        });
+        if let (Some(cache), Some((key, _))) = (&self.cache, &key) {
+            if let Some(logits) = cache.get(key) {
+                return Ok(Response {
+                    logits,
+                    cached: true,
+                    ..Response::default()
+                });
+            }
+        }
+        let shard_key = affinity_hash(task, &ids);
+        let (reply_tx, reply_rx) = mpsc::channel();
+        let req = Request::Classify {
+            task,
+            ids,
+            reply: reply_tx,
+            enqueued: Instant::now(),
+            class: Priority::Standard,
+            deadline: None,
+        };
+        self.submit_bounded(shard_key, req, timeout)?;
+        let resp = reply_rx.recv().map_err(|_| SubmitError::Stopped)?;
+        if resp.error.is_none() {
+            if let (Some(cache), Some((key, epoch))) = (&self.cache, key) {
+                cache.insert_at_epoch(key, resp.logits.clone(), epoch);
+            }
+        }
+        Ok(resp)
+    }
+
+    /// Bounded-submission variant of [`Client::try_generate`] — same
+    /// contract as [`Client::try_infer_for`].
+    pub fn try_generate_for(
+        &self,
+        ids: Vec<u32>,
+        max_new: usize,
+        timeout: Duration,
+    ) -> Result<Response, SubmitError> {
+        Shared::count(&self.shared.submitted, Priority::Standard);
+        let shard_key = affinity_hash(0, &ids);
+        let (reply_tx, reply_rx) = mpsc::channel();
+        let req = Request::Generate {
+            task: 0,
+            ids,
+            max_new,
+            reply: reply_tx,
+            enqueued: Instant::now(),
+            class: Priority::Standard,
+            deadline: None,
+        };
+        self.submit_bounded(shard_key, req, timeout)?;
+        reply_rx.recv().map_err(|_| SubmitError::Stopped)
+    }
+
+    fn submit_bounded(
+        &self,
+        shard_key: u64,
+        req: Request,
+        timeout: Duration,
+    ) -> Result<(), SubmitError> {
+        match self.queue.push_affine_for(shard_key, req, timeout) {
+            Ok(()) => Ok(()),
+            Err(PushError::Closed(_)) => Err(SubmitError::Stopped),
+            Err(PushError::Full(_)) => Err(SubmitError::Overloaded {
+                pending: self.queue.pending(),
+            }),
+        }
+    }
+
+    /// [`Client::try_infer_task_for`] with client-side retry: on
+    /// [`SubmitError::Overloaded`], back off (doubling, capped at 50
+    /// ms) with deterministic jitter — hashed from the ids and attempt
+    /// number, so retry storms decorrelate *and* tests reproduce — and
+    /// resubmit, up to `attempts` total submissions. Safe because
+    /// requests are idempotent by construction: the response-cache key
+    /// is `(task, epoch, ids)` and classification over a frozen model
+    /// is deterministic, so a duplicate submission can only re-derive
+    /// the same answer.
+    pub fn infer_retry(
+        &self,
+        task: u32,
+        ids: Vec<u32>,
+        attempts: usize,
+        timeout: Duration,
+    ) -> crate::Result<Response> {
+        let mut backoff = Duration::from_micros(500);
+        for attempt in 0..attempts.max(1) {
+            match self.try_infer_task_for(task, ids.clone(), timeout) {
+                Ok(resp) => return Ok(resp),
+                Err(SubmitError::Stopped) => anyhow::bail!("server stopped"),
+                Err(SubmitError::Overloaded { pending }) => {
+                    if attempt + 1 == attempts.max(1) {
+                        anyhow::bail!(
+                            "server overloaded after {} attempts ({pending} requests queued)",
+                            attempts.max(1)
+                        );
+                    }
+                    // Deterministic jitter in [0, backoff): reruns see
+                    // identical schedules, concurrent clients with
+                    // different ids spread out.
+                    let jitter_us =
+                        affinity_hash(attempt as u32, &ids) % backoff.as_micros().max(1) as u64;
+                    std::thread::sleep(backoff + Duration::from_micros(jitter_us));
+                    backoff = (backoff * 2).min(Duration::from_millis(50));
+                }
+            }
+        }
+        unreachable!("retry loop returns or bails on its last attempt")
     }
 
     /// Submit and wait for the reply. Rejected/failed requests surface
@@ -771,20 +1229,41 @@ impl Client {
         ids: Vec<u32>,
         max_new: usize,
     ) -> crate::Result<Response> {
+        self.try_generate_with(task, ids, max_new, RequestOpts::default())
+    }
+
+    /// [`Client::try_generate_task`] with explicit SLO options. With a
+    /// deadline budget, admission sheds early on estimated wait, the
+    /// backpressure wait is bounded, expiry in queue or at admission is
+    /// a typed drop, and a session that outlives its deadline
+    /// mid-generation is retired at the next sweep boundary with the
+    /// tokens produced so far (`deadline_exceeded` + partial payload).
+    pub fn try_generate_with(
+        &self,
+        task: u32,
+        ids: Vec<u32>,
+        max_new: usize,
+        opts: RequestOpts,
+    ) -> crate::Result<Response> {
+        Shared::count(&self.shared.submitted, opts.class);
+        let budget = self.budget_for(&opts);
+        if let Some(shed) = self.admission_shed(budget, opts.class) {
+            return Ok(shed);
+        }
         let shard_key = affinity_hash(task, &ids);
         let (reply_tx, reply_rx) = mpsc::channel();
-        self.queue
-            .push_affine(
-                shard_key,
-                Request::Generate {
-                    task,
-                    ids,
-                    max_new,
-                    reply: reply_tx,
-                    enqueued: Instant::now(),
-                },
-            )
-            .map_err(|_| anyhow::anyhow!("server stopped"))?;
+        let req = Request::Generate {
+            task,
+            ids,
+            max_new,
+            reply: reply_tx,
+            enqueued: Instant::now(),
+            class: opts.class,
+            deadline: budget.map(|b| Instant::now() + b),
+        };
+        if let Some(shed) = self.push_within_budget(shard_key, req, budget, opts.class)? {
+            return Ok(shed);
+        }
         reply_rx
             .recv()
             .map_err(|_| anyhow::anyhow!("server dropped request"))
@@ -825,13 +1304,16 @@ impl Client {
 }
 
 /// The running server; dropping all `Client`s then calling `join` shuts
-/// down every worker.
+/// down every worker, or [`Server::drain`] shuts down proactively with
+/// a bounded grace period for in-flight work.
 pub struct Server {
     handles: Vec<std::thread::JoinHandle<ServeStats>>,
     cache: Option<Arc<ResponseCache>>,
     /// Kept so `join` can fold the backend's adapter observability
     /// snapshot ([`Backend::adapter_stats`]) into the merged stats.
     backend: Arc<dyn Backend>,
+    queue: Arc<ShardedQueue<Request>>,
+    shared: Arc<Shared>,
 }
 
 /// Aggregate statistics, merged across workers on `join`.
@@ -874,6 +1356,28 @@ pub struct ServeStats {
     /// Tokens emitted by successful `Generate` requests, per task
     /// (task 0 = the bare base). Sorted by task id after `join`.
     pub adapter_tokens: Vec<(u32, usize)>,
+    /// Requests rejected by SLO admission control (estimated wait or
+    /// bounded backpressure exceeded the deadline budget) — no compute
+    /// was spent on them.
+    pub shed: usize,
+    /// Requests whose deadline expired in-server: dropped at batch
+    /// formation / admission, or retired mid-generation with partial
+    /// tokens.
+    pub deadline_exceeded: usize,
+    /// Worker threads restarted by supervision after a non-request
+    /// panic.
+    pub worker_restarts: usize,
+    /// Wall time [`Server::drain`] took: admission stop → last worker
+    /// exit. 0 when the server was joined without draining.
+    pub drain_us: u64,
+    /// Per-[`Priority`]-class submissions, indexed by
+    /// [`Priority::idx`]. Cache hits and sheds included — this counts
+    /// offered load.
+    pub class_submitted: [usize; Priority::COUNT],
+    /// Per-class sheds (subset of `shed`'s total, by class).
+    pub class_shed: [usize; Priority::COUNT],
+    /// Per-class deadline expiries.
+    pub class_deadline_exceeded: [usize; Priority::COUNT],
 }
 
 /// Merge sparse per-task counters: sum matching task ids, append new
@@ -951,6 +1455,7 @@ fn start_inner(
         .unwrap_or(1);
     crate::infer::set_matmul_threads((cores / workers).max(1));
     let queue = Arc::new(ShardedQueue::new(workers, cfg.queue_depth.max(1)));
+    let shared = Arc::new(Shared::new(workers));
     let cache = if cfg.cache_entries > 0 {
         Some(Arc::new(ResponseCache::new(cfg.cache_entries)))
     } else {
@@ -961,14 +1466,19 @@ fn start_inner(
             let backend = Arc::clone(&backend);
             let cfg = cfg.clone();
             let queue = Arc::clone(&queue);
-            std::thread::spawn(move || worker_loop(backend, cfg, queue, me))
+            let shared = Arc::clone(&shared);
+            std::thread::spawn(move || supervised_worker(backend, cfg, queue, shared, me))
         })
         .collect();
     let client = Client {
         queue: Arc::clone(&queue),
         cache: cache.clone(),
         registry,
-        _close: Arc::new(CloseGuard { queue }),
+        shared: Arc::clone(&shared),
+        class_deadlines: cfg.class_deadlines,
+        _close: Arc::new(CloseGuard {
+            queue: Arc::clone(&queue),
+        }),
     };
     (
         client,
@@ -976,17 +1486,41 @@ fn start_inner(
             handles,
             cache,
             backend,
+            queue,
+            shared,
         },
     )
 }
 
 impl Server {
+    /// Graceful shutdown with a bounded grace period: stop admission
+    /// *now* (new submissions fail with "server stopped"), let every
+    /// in-flight session and queued request finish for up to `timeout`,
+    /// then abort the stragglers — live generations retire at the next
+    /// sweep boundary with their partial tokens, still-queued requests
+    /// get error replies — and join. No request is left hanging either
+    /// way; `drain_us` in the merged stats records the wall time the
+    /// drain actually took (< timeout when in-flight work finished
+    /// early).
+    pub fn drain(self, timeout: Duration) -> ServeStats {
+        let t0 = Instant::now();
+        self.queue.close();
+        self.shared.begin_drain(timeout);
+        let mut stats = self.join();
+        stats.drain_us = t0.elapsed().as_micros() as u64;
+        stats
+    }
+
     /// Wait for shutdown (all clients dropped) and return merged stats.
     pub fn join(self) -> ServeStats {
         let mut stats = ServeStats::default();
         for h in self.handles {
             stats.absorb(&h.join().unwrap_or_default());
         }
+        // Shed/deadline/restart counters live in the shared state (one
+        // source of truth across client-side sheds and worker-side
+        // drops); copy, don't sum.
+        self.shared.fold_into(&mut stats);
         // Restore the auto matmul thread budget: the per-worker divide
         // set in `start` must not outlive the worker pool (a joined
         // 8-worker server would otherwise pin every later compiled
@@ -1012,12 +1546,89 @@ impl Server {
     }
 }
 
-fn panic_message(panic: Box<dyn std::any::Any + Send>) -> String {
-    panic
-        .downcast_ref::<String>()
-        .cloned()
-        .or_else(|| panic.downcast_ref::<&str>().map(|s| s.to_string()))
-        .unwrap_or_else(|| "backend panicked".into())
+/// Best-effort rendering of a caught panic payload. String payloads
+/// (every `panic!` with a message) pass through; non-string payloads
+/// (`panic_any` with an error code or struct) keep at least their type
+/// name — the old generic "backend panicked" fallback made chaos and
+/// containment test failures undiagnosable.
+pub(crate) fn panic_message(panic: Box<dyn std::any::Any + Send>) -> String {
+    if let Some(s) = panic.downcast_ref::<String>() {
+        return s.clone();
+    }
+    if let Some(s) = panic.downcast_ref::<&str>() {
+        return (*s).to_string();
+    }
+    macro_rules! named_payload {
+        ($($t:ty),*) => {
+            $(if let Some(v) = panic.downcast_ref::<$t>() {
+                return format!(
+                    "non-string panic payload: {} = {v:?}",
+                    std::any::type_name::<$t>()
+                );
+            })*
+        };
+    }
+    named_payload!(i32, u32, i64, u64, usize, isize, f32, f64, bool, char);
+    format!("non-string panic payload of type {:?}", (*panic).type_id())
+}
+
+/// Worker supervision: runs [`worker_loop`] under `catch_unwind` and
+/// restarts it after a non-request panic (a bug escaping the per-
+/// request containment, or an injected `serve.worker_tick` chaos
+/// failure), up to [`ServeCfg::worker_restart_budget`] times. Stats
+/// accumulate across incarnations — `&mut` survives the unwind — and
+/// the restarted loop re-opens its shard, so queued requests are
+/// served, not lost (peers also steal from a down worker's shard the
+/// whole time). A worker that exhausts its budget stops; if it was the
+/// *last* live worker it closes the queue and fails the stranded
+/// requests so no client blocks on a reply that can never come.
+fn supervised_worker(
+    backend: Arc<dyn Backend>,
+    cfg: ServeCfg,
+    queue: Arc<ShardedQueue<Request>>,
+    shared: Arc<Shared>,
+    me: usize,
+) -> ServeStats {
+    let mut stats = ServeStats::default();
+    let mut restarts = 0usize;
+    loop {
+        let run = std::panic::catch_unwind(AssertUnwindSafe(|| {
+            worker_loop(&backend, &cfg, &queue, &shared, me, &mut stats)
+        }));
+        let panic = match run {
+            Ok(()) => break, // clean exit: queue closed and drained
+            Err(panic) => panic,
+        };
+        let msg = panic_message(panic);
+        if restarts < cfg.worker_restart_budget {
+            restarts += 1;
+            shared.worker_restarts.fetch_add(1, Ordering::Relaxed);
+            crate::warn_!(
+                "worker {me} panicked ({msg}); restart {restarts}/{}",
+                cfg.worker_restart_budget
+            );
+            continue;
+        }
+        crate::warn_!("worker {me} panicked ({msg}); restart budget exhausted");
+        if shared.live_workers.fetch_sub(1, Ordering::SeqCst) == 1 {
+            // Last worker down: nothing will ever pop the queue again.
+            // Fail fast — close it and answer everything still queued.
+            queue.close();
+            while let Some((req, _)) = queue.pop_first(me) {
+                stats.failed += 1;
+                let (reply, enqueued) = match req {
+                    Request::Classify { reply, enqueued, .. } => (reply, enqueued),
+                    Request::Generate { reply, enqueued, .. } => (reply, enqueued),
+                };
+                let _ = reply.send(Response::failure(
+                    format!("worker died past its restart budget: {msg}"),
+                    enqueued.elapsed().as_micros() as u64,
+                ));
+            }
+        }
+        break;
+    }
+    stats
 }
 
 /// One live, admitted decode stream plus its reply bookkeeping — the
@@ -1035,6 +1646,10 @@ struct LiveSession<'a> {
     /// Peak number of concurrently-stepped sessions observed while this
     /// one was live — reported as [`Response::batch_size`].
     peak: usize,
+    class: Priority,
+    /// Absolute deadline: checked at every sweep boundary; an expired
+    /// session retires with its partial tokens.
+    deadline: Option<Instant>,
 }
 
 /// Reply bookkeeping for one engine-admitted generation — the
@@ -1053,18 +1668,34 @@ struct EngineSession {
     started: Instant,
     /// Peak concurrently-swept sessions observed while live.
     peak: usize,
+    class: Priority,
+    /// Absolute deadline: checked at every sweep boundary; an expired
+    /// slot is released with its partial tokens.
+    deadline: Option<Instant>,
+}
+
+/// A validated `Generate` request parked for a free session slot.
+struct PendingGenerate {
+    task: u32,
+    ids: Vec<u32>,
+    max_new: usize,
+    reply: Sender<Response>,
+    enqueued: Instant,
+    class: Priority,
+    deadline: Option<Instant>,
 }
 
 // lint: no-panic
 fn worker_loop(
-    backend: Arc<dyn Backend>,
-    cfg: ServeCfg,
-    queue: Arc<ShardedQueue<Request>>,
+    backend: &Arc<dyn Backend>,
+    cfg: &ServeCfg,
+    queue: &Arc<ShardedQueue<Request>>,
+    shared: &Arc<Shared>,
     me: usize,
-) -> ServeStats {
+    stats: &mut ServeStats,
+) {
     let be: &dyn Backend = backend.as_ref();
     let seq = be.seq_len();
-    let mut stats = ServeStats::default();
     let mut ctrl = BatchController::new(cfg.max_batch, cfg.max_wait);
     // Continuous batching state: `live` is the session set (every
     // scheduler iteration advances each entry one decode step),
@@ -1085,15 +1716,26 @@ fn worker_loop(
     let mut engine: Option<Box<dyn FusedDecode + '_>> = None;
     let mut engine_probed = false;
     let mut elive: Vec<EngineSession> = Vec::new();
-    type WaitingGenerate = (u32, Vec<u32>, usize, Sender<Response>, Instant);
-    let mut waiting: std::collections::VecDeque<WaitingGenerate> =
+    let mut waiting: std::collections::VecDeque<PendingGenerate> =
         std::collections::VecDeque::new();
     loop {
+        // Supervision hook: a panic here (chaos `serve.worker_tick`, or
+        // a real bug outside the per-request containment) unwinds to
+        // `supervised_worker`, which restarts this loop. No request is
+        // in hand at this point, so nothing is lost across a restart.
+        crate::failpoint!("serve.worker_tick");
+        // Drain: past the grace deadline, abort in-flight sessions with
+        // their partial output and reject everything still queued —
+        // the queue is already closed, so the loop then exits through
+        // the normal closed-and-drained path below.
+        if shared.drain_expired() {
+            abort_for_drain(&mut engine, &mut elive, &mut live, &mut waiting, stats);
+        }
         let mut batch: Vec<Request> = Vec::new();
         if live.is_empty() && elive.is_empty() && waiting.is_empty() {
             // Idle: block for work, exactly like the plain batcher.
             let Some((first, was_stolen)) = queue.pop_first(me) else {
-                return stats; // closed and drained, no sessions in flight
+                return; // closed and drained, no sessions in flight
             };
             if was_stolen {
                 stats.stolen += 1;
@@ -1134,16 +1776,40 @@ fn worker_loop(
         // compute must not leak into queue_us. (Generation queue time
         // runs until admission below.)
         let formed = Instant::now();
+        // Past the drain grace deadline nothing new is served; the
+        // sessions were aborted at the top of this iteration, so only
+        // reject what the closed queue still held.
+        if shared.drain_expired() && !batch.is_empty() {
+            for r in batch {
+                stats.rejected += 1;
+                let (reply, enqueued) = match r {
+                    Request::Classify { reply, enqueued, .. } => (reply, enqueued),
+                    Request::Generate { reply, enqueued, .. } => (reply, enqueued),
+                };
+                let queue_us = formed.duration_since(enqueued).as_micros() as u64;
+                let _ = reply.send(Response::failure(
+                    "server draining: grace deadline passed".into(),
+                    queue_us,
+                ));
+            }
+            continue;
+        }
         // Validate per request: one malformed request must not poison
         // the batch, let alone the worker. Classification needs exactly
         // `seq` ids; generation needs a non-empty prompt within `seq`;
         // both need a task the backend currently serves (unknown or
-        // unloaded adapters are rejected here, never batched).
+        // unloaded adapters are rejected here, never batched) and an
+        // unexpired deadline (computing an answer nobody is waiting
+        // for wastes the batch's budget on dead work).
         let mut classify = Vec::new();
         for r in batch {
             match r {
-                Request::Classify { task, ids, reply, enqueued } => {
-                    if !be.has_task(task) {
+                Request::Classify { task, ids, reply, enqueued, class, deadline } => {
+                    if deadline.is_some_and(|d| formed > d) {
+                        Shared::count(&shared.deadline_exceeded, class);
+                        let queue_us = formed.duration_since(enqueued).as_micros() as u64;
+                        let _ = reply.send(Response::deadline_expired(queue_us));
+                    } else if !be.has_task(task) {
                         stats.rejected += 1;
                         let queue_us = formed.duration_since(enqueued).as_micros() as u64;
                         let _ = reply.send(Response::failure(
@@ -1164,11 +1830,15 @@ fn worker_loop(
                         ));
                     }
                 }
-                Request::Generate { task, ids, max_new, reply, enqueued } => {
+                Request::Generate { task, ids, max_new, reply, enqueued, class, deadline } => {
                     // A prompt of exactly `seq` tokens leaves no room to
                     // generate — reject it rather than return a silent
                     // empty continuation indistinguishable from EOS.
-                    if !be.has_task(task) {
+                    if deadline.is_some_and(|d| formed > d) {
+                        Shared::count(&shared.deadline_exceeded, class);
+                        let queue_us = formed.duration_since(enqueued).as_micros() as u64;
+                        let _ = reply.send(Response::deadline_expired(queue_us));
+                    } else if !be.has_task(task) {
                         stats.rejected += 1;
                         let queue_us = formed.duration_since(enqueued).as_micros() as u64;
                         let _ = reply.send(Response::failure(
@@ -1176,7 +1846,15 @@ fn worker_loop(
                             queue_us,
                         ));
                     } else if !ids.is_empty() && ids.len() < seq {
-                        waiting.push_back((task, ids, max_new, reply, enqueued));
+                        waiting.push_back(PendingGenerate {
+                            task,
+                            ids,
+                            max_new,
+                            reply,
+                            enqueued,
+                            class,
+                            deadline,
+                        });
                     } else {
                         stats.rejected += 1;
                         let queue_us = formed.duration_since(enqueued).as_micros() as u64;
@@ -1213,6 +1891,9 @@ fn worker_loop(
             }
             let run_start = Instant::now();
             let result = std::panic::catch_unwind(AssertUnwindSafe(|| {
+                // Chaos: Nth-call backend panic / slow-compute delay,
+                // inside the same containment the real backend gets.
+                crate::failpoint!("serve.classify");
                 backend.infer_task(task, &ids, bsz, seq)
             }));
             let compute = run_start.elapsed();
@@ -1229,15 +1910,14 @@ fn worker_loop(
                         let queue_us = run_start.duration_since(enqueued).as_micros() as u64;
                         let _ = reply.send(Response {
                             logits: row,
-                            tokens: Vec::new(),
                             queue_us,
                             compute_us,
                             batch_size: bsz,
-                            cached: false,
-                            error: None,
+                            ..Response::default()
                         });
                     }
                     ctrl.observe(queue.pending(), bsz, compute);
+                    shared.note_batch(compute, bsz);
                 }
                 Err(panic) => {
                     stats.failed += bsz;
@@ -1245,13 +1925,11 @@ fn worker_loop(
                     for (_, _, reply, enqueued) in run {
                         let queue_us = run_start.duration_since(enqueued).as_micros() as u64;
                         let _ = reply.send(Response {
-                            logits: Vec::new(),
-                            tokens: Vec::new(),
                             queue_us,
                             compute_us,
                             batch_size: bsz,
-                            cached: false,
                             error: Some(msg.clone()),
+                            ..Response::default()
                         });
                     }
                 }
@@ -1265,15 +1943,29 @@ fn worker_loop(
         // backends, runs the whole continuation), so it is wrapped in
         // the same panic containment as the batched backend call.
         while live.len() + elive.len() < max_sessions {
-            let Some((task, ids, max_new, reply, enqueued)) = waiting.pop_front() else {
+            let Some(p) = waiting.pop_front() else {
                 break;
             };
+            let PendingGenerate { task, ids, max_new, reply, enqueued, class, deadline } = p;
             if !engine_probed {
                 engine_probed = true;
                 engine = be.begin_engine(max_sessions);
             }
+            // Chaos: a delay here widens the validation → admission
+            // window deterministically (the adapter-unloaded-mid-queue
+            // race the containment below covers).
+            crate::failpoint!("serve.pre_admit");
             let started = Instant::now();
             let queue_us = started.duration_since(enqueued).as_micros() as u64;
+            // Decode admission re-checks the deadline: the request may
+            // have expired waiting behind a full session set or the
+            // batch's classification slice. Prefill is the expensive
+            // step — never start it for a dead request.
+            if deadline.is_some_and(|d| started > d) {
+                Shared::count(&shared.deadline_exceeded, class);
+                let _ = reply.send(Response::deadline_expired(queue_us));
+                continue;
+            }
             if let Some(eng) = engine.as_mut() {
                 // Engine admission prefills the prompt, so it gets the
                 // same panic containment as the fallback begin_decode.
@@ -1282,6 +1974,7 @@ fn worker_loop(
                 // queued) aborts before the slot is occupied, so the
                 // engine stays consistent for its other sessions.
                 let admitted = std::panic::catch_unwind(AssertUnwindSafe(|| {
+                    crate::failpoint!("serve.engine_admit");
                     eng.admit(task, &ids, max_new)
                 }));
                 match admitted {
@@ -1292,18 +1985,17 @@ fn worker_loop(
                         queue_us,
                         started,
                         peak: 1,
+                        class,
+                        deadline,
                     }),
                     Err(panic) => {
                         stats.failed += 1;
                         let msg = format!("backend error: {}", panic_message(panic));
                         let _ = reply.send(Response {
-                            logits: Vec::new(),
-                            tokens: Vec::new(),
                             queue_us,
                             compute_us: started.elapsed().as_micros() as u64,
-                            batch_size: 0,
-                            cached: false,
                             error: Some(msg),
+                            ..Response::default()
                         });
                     }
                 }
@@ -1326,6 +2018,8 @@ fn worker_loop(
                     queue_us,
                     started,
                     peak: 1,
+                    class,
+                    deadline,
                 }),
                 Ok(None) => {
                     stats.rejected += 1;
@@ -1338,13 +2032,10 @@ fn worker_loop(
                     stats.failed += 1;
                     let msg = format!("backend error: {}", panic_message(panic));
                     let _ = reply.send(Response {
-                        logits: Vec::new(),
-                        tokens: Vec::new(),
                         queue_us,
                         compute_us: started.elapsed().as_micros() as u64,
-                        batch_size: 0,
-                        cached: false,
                         error: Some(msg),
+                        ..Response::default()
                     });
                 }
             }
@@ -1360,31 +2051,56 @@ fn worker_loop(
             {
                 // lint: allow(no-panic) -- elive is non-empty, so the engine was built at admission
                 let eng = engine.as_mut().expect("engine sessions live without an engine");
-                match std::panic::catch_unwind(AssertUnwindSafe(|| eng.sweep())) {
+                match std::panic::catch_unwind(AssertUnwindSafe(|| {
+                    crate::failpoint!("serve.engine_sweep");
+                    eng.sweep()
+                })) {
                     Ok(()) => {
                         panic_msg = None;
+                        let now = Instant::now();
                         elive.retain_mut(|s| {
                             s.peak = s.peak.max(fill);
-                            if !eng.is_done(s.slot) {
-                                return true;
+                            // A session that just finished retires
+                            // successfully even if its deadline lapsed
+                            // during this sweep: the tokens are already
+                            // paid for. This is the "deadline + one
+                            // sweep" allowance (docs/ROBUSTNESS.md).
+                            if eng.is_done(s.slot) {
+                                let tokens = eng.release(s.slot);
+                                stats.requests += 1;
+                                stats.generated_tokens += tokens.len();
+                                merge_task_counters(
+                                    &mut stats.adapter_tokens,
+                                    &[(s.task, tokens.len())],
+                                );
+                                let _ = s.reply.send(Response {
+                                    tokens,
+                                    queue_us: s.queue_us,
+                                    compute_us: s.started.elapsed().as_micros() as u64,
+                                    batch_size: s.peak,
+                                    ..Response::default()
+                                });
+                                return false;
                             }
-                            let tokens = eng.release(s.slot);
-                            stats.requests += 1;
-                            stats.generated_tokens += tokens.len();
-                            merge_task_counters(
-                                &mut stats.adapter_tokens,
-                                &[(s.task, tokens.len())],
-                            );
-                            let _ = s.reply.send(Response {
-                                logits: Vec::new(),
-                                tokens,
-                                queue_us: s.queue_us,
-                                compute_us: s.started.elapsed().as_micros() as u64,
-                                batch_size: s.peak,
-                                cached: false,
-                                error: None,
-                            });
-                            false
+                            // Mid-generation expiry: retire at the sweep
+                            // boundary with the tokens decoded so far.
+                            // Partial tokens are delivered but not
+                            // counted as goodput (generated_tokens).
+                            if s.deadline.is_some_and(|d| now > d) {
+                                let tokens = eng.release(s.slot);
+                                Shared::count(&shared.deadline_exceeded, s.class);
+                                let _ = s.reply.send(Response {
+                                    tokens,
+                                    queue_us: s.queue_us,
+                                    compute_us: s.started.elapsed().as_micros() as u64,
+                                    batch_size: s.peak,
+                                    deadline_exceeded: true,
+                                    error: Some("deadline exceeded mid-generation".into()),
+                                    ..Response::default()
+                                });
+                                return false;
+                            }
+                            true
                         });
                     }
                     Err(panic) => panic_msg = Some(panic_message(panic)),
@@ -1398,7 +2114,9 @@ fn worker_loop(
                     // controller see decode concurrency identically.
                     stats.batches += 1;
                     stats.total_batch_fill += fill;
-                    ctrl.observe(queue.pending(), fill, sweep_start.elapsed());
+                    let compute = sweep_start.elapsed();
+                    ctrl.observe(queue.pending(), fill, compute);
+                    shared.note_batch(compute, fill);
                 }
                 Some(msg) => {
                     // A panic mid-sweep can leave the shared packed
@@ -1410,13 +2128,11 @@ fn worker_loop(
                     let msg = format!("backend error: {msg}");
                     for s in elive.drain(..) {
                         let _ = s.reply.send(Response {
-                            logits: Vec::new(),
-                            tokens: Vec::new(),
                             queue_us: s.queue_us,
                             compute_us: s.started.elapsed().as_micros() as u64,
                             batch_size: s.peak,
-                            cached: false,
                             error: Some(msg.clone()),
+                            ..Response::default()
                         });
                     }
                     engine = be.begin_engine(max_sessions);
@@ -1432,7 +2148,25 @@ fn worker_loop(
             live.retain_mut(|s| {
                 s.peak = s.peak.max(fill);
                 match std::panic::catch_unwind(AssertUnwindSafe(|| s.stream.step())) {
-                    Ok(true) => true,
+                    Ok(true) => {
+                        // Same deadline-at-sweep-boundary contract as
+                        // the engine path: a still-running session past
+                        // its deadline retires with partial tokens.
+                        if s.deadline.is_some_and(|d| Instant::now() > d) {
+                            Shared::count(&shared.deadline_exceeded, s.class);
+                            let _ = s.reply.send(Response {
+                                tokens: s.stream.tokens().to_vec(),
+                                queue_us: s.queue_us,
+                                compute_us: s.started.elapsed().as_micros() as u64,
+                                batch_size: s.peak,
+                                deadline_exceeded: true,
+                                error: Some("deadline exceeded mid-generation".into()),
+                                ..Response::default()
+                            });
+                            return false;
+                        }
+                        true
+                    }
                     Ok(false) => {
                         let tokens = s.stream.tokens().to_vec();
                         stats.requests += 1;
@@ -1440,13 +2174,11 @@ fn worker_loop(
                         // Stream-path sessions are always task 0.
                         merge_task_counters(&mut stats.adapter_tokens, &[(0, tokens.len())]);
                         let _ = s.reply.send(Response {
-                            logits: Vec::new(),
                             tokens,
                             queue_us: s.queue_us,
                             compute_us: s.started.elapsed().as_micros() as u64,
                             batch_size: s.peak,
-                            cached: false,
-                            error: None,
+                            ..Response::default()
                         });
                         false
                     }
@@ -1454,13 +2186,11 @@ fn worker_loop(
                         stats.failed += 1;
                         let msg = format!("backend error: {}", panic_message(panic));
                         let _ = s.reply.send(Response {
-                            logits: Vec::new(),
-                            tokens: Vec::new(),
                             queue_us: s.queue_us,
                             compute_us: s.started.elapsed().as_micros() as u64,
                             batch_size: s.peak,
-                            cached: false,
                             error: Some(msg),
+                            ..Response::default()
                         });
                         false
                     }
@@ -1475,8 +2205,60 @@ fn worker_loop(
             // the initial max_wait forever).
             stats.batches += 1;
             stats.total_batch_fill += fill;
-            ctrl.observe(queue.pending(), fill, sweep_start.elapsed());
+            let compute = sweep_start.elapsed();
+            ctrl.observe(queue.pending(), fill, compute);
+            shared.note_batch(compute, fill);
         }
+    }
+}
+
+/// Drain grace expired: fail everything this worker still holds so
+/// [`Server::drain`] can join promptly. In-flight generations return
+/// the tokens decoded so far; validated-but-unadmitted requests get
+/// plain failures. The caller keeps looping afterwards — with the
+/// queue closed, remaining queued requests are rejected at batch
+/// formation and the worker exits at the idle check.
+// lint: no-panic
+fn abort_for_drain<'a>(
+    engine: &mut Option<Box<dyn FusedDecode + 'a>>,
+    elive: &mut Vec<EngineSession>,
+    live: &mut Vec<LiveSession<'a>>,
+    waiting: &mut std::collections::VecDeque<PendingGenerate>,
+    stats: &mut ServeStats,
+) {
+    let msg = "server draining: grace deadline passed";
+    for s in elive.drain(..) {
+        let tokens = match engine.as_mut() {
+            Some(eng) => eng.release(s.slot),
+            None => Vec::new(),
+        };
+        stats.failed += 1;
+        let _ = s.reply.send(Response {
+            tokens,
+            queue_us: s.queue_us,
+            compute_us: s.started.elapsed().as_micros() as u64,
+            batch_size: s.peak,
+            error: Some(msg.into()),
+            ..Response::default()
+        });
+    }
+    for s in live.drain(..) {
+        stats.failed += 1;
+        let _ = s.reply.send(Response {
+            tokens: s.stream.tokens().to_vec(),
+            queue_us: s.queue_us,
+            compute_us: s.started.elapsed().as_micros() as u64,
+            batch_size: s.peak,
+            error: Some(msg.into()),
+            ..Response::default()
+        });
+    }
+    for p in waiting.drain(..) {
+        stats.failed += 1;
+        let _ = p.reply.send(Response::failure(
+            msg.into(),
+            p.enqueued.elapsed().as_micros() as u64,
+        ));
     }
 }
 
@@ -1524,6 +2306,25 @@ pub fn latency_summary(mut micros: Vec<f64>) -> (f64, f64, f64) {
         percentile_sorted(&micros, 95.0),
         percentile_sorted(&micros, 99.0),
     )
+}
+
+/// Per-priority-class latency summaries, indexed by [`Priority::idx`].
+///
+/// Partitions `(class, micros)` samples and reuses [`latency_summary`]
+/// per bucket, so it inherits the same NaN safety. Classes with no
+/// samples report `(0.0, 0.0, 0.0)`.
+pub fn latency_summary_by_class(
+    samples: &[(Priority, f64)],
+) -> [(f64, f64, f64); Priority::COUNT] {
+    let mut buckets: [Vec<f64>; Priority::COUNT] = Default::default();
+    for &(class, us) in samples {
+        buckets[class.idx()].push(us);
+    }
+    let mut out = [(0.0, 0.0, 0.0); Priority::COUNT];
+    for (summary, bucket) in out.iter_mut().zip(buckets) {
+        *summary = latency_summary(bucket);
+    }
+    out
 }
 
 #[cfg(test)]
@@ -2083,7 +2884,7 @@ mod tests {
                 max_wait: Duration::from_micros(100),
                 queue_depth: 16,
                 workers: 1,
-                cache_entries: 0,
+                ..ServeCfg::default()
             },
         );
         let long = {
@@ -2257,6 +3058,155 @@ mod tests {
             vec![(1, 2 * want_t1.len()), (2, want_t2.len())],
             "per-adapter token accounting is off"
         );
+    }
+
+    #[test]
+    fn priority_defaults_and_indices_are_stable() {
+        assert_eq!(Priority::default(), Priority::Standard);
+        for (i, c) in Priority::ALL.into_iter().enumerate() {
+            assert_eq!(c.idx(), i, "ALL and idx() disagree for {}", c.name());
+        }
+        // RequestOpts::default() = standard class, no deadline override.
+        let opts = RequestOpts::default();
+        assert_eq!(opts.class, Priority::Standard);
+        assert!(opts.deadline.is_none());
+    }
+
+    #[test]
+    fn panic_message_preserves_nonstring_payload_type() {
+        let p = std::panic::catch_unwind(|| std::panic::panic_any(42i32)).unwrap_err();
+        let msg = panic_message(p);
+        assert!(msg.contains("i32") && msg.contains("42"), "{msg}");
+        let p = std::panic::catch_unwind(|| std::panic::panic_any(true)).unwrap_err();
+        assert!(panic_message(p).contains("bool"));
+        // String payloads still pass through verbatim.
+        let p = std::panic::catch_unwind(|| panic!("plain message {}", 7)).unwrap_err();
+        assert_eq!(panic_message(p), "plain message 7");
+    }
+
+    #[test]
+    fn latency_summary_by_class_partitions_and_stays_nan_safe() {
+        let samples = vec![
+            (Priority::Interactive, 1.0),
+            (Priority::Interactive, 3.0),
+            (Priority::Batch, f64::NAN),
+            (Priority::Batch, 10.0),
+        ];
+        let per_class = latency_summary_by_class(&samples);
+        assert_eq!(per_class[Priority::Interactive.idx()].0, 2.0);
+        // Unused class reports zeros, not a panic.
+        assert_eq!(per_class[Priority::Standard.idx()], (0.0, 0.0, 0.0));
+        // NaN surfaces in that class's tail only.
+        assert!(per_class[Priority::Batch.idx()].2.is_nan());
+        assert!(!per_class[Priority::Interactive.idx()].2.is_nan());
+    }
+
+    #[test]
+    fn shared_wait_estimator_warms_then_scales_with_depth() {
+        let s = Shared::new(2);
+        // Cold estimator never sheds: estimated wait is zero.
+        assert_eq!(s.estimated_wait(1000), Duration::ZERO);
+        // 10 ms batch of 10 → 1 ms per request, across 2 workers.
+        s.note_batch(Duration::from_millis(10), 10);
+        let est = s.estimated_wait(4);
+        assert_eq!(est, Duration::from_millis(2), "4 × 1 ms / 2 workers");
+        // EWMA smooths rather than jumps: one fast batch can shift the
+        // estimate by at most a fifth.
+        s.note_batch(Duration::ZERO, 10);
+        let est = s.estimated_wait(10);
+        assert!(est >= Duration::from_millis(4), "EWMA collapsed: {est:?}");
+    }
+
+    #[test]
+    fn engine_deadline_expiry_returns_partial_tokens() {
+        use std::sync::atomic::AtomicUsize;
+        // Paced engine: 1 token per 2 ms sweep. A 100-token request on
+        // a ~30 ms budget must retire at a sweep boundary with a
+        // partial, typed response — not run to completion, not vanish.
+        let (client, server) = start(
+            Arc::new(PacedEngineBackend {
+                sweep_cost: Duration::from_millis(2),
+                sweeps: Arc::new(AtomicUsize::new(0)),
+            }),
+            ServeCfg {
+                max_batch: 4,
+                max_wait: Duration::from_micros(100),
+                queue_depth: 16,
+                workers: 1,
+                ..ServeCfg::default()
+            },
+        );
+        let resp = client
+            .try_generate_with(
+                0,
+                vec![1],
+                100,
+                RequestOpts {
+                    class: Priority::Interactive,
+                    deadline: Some(Duration::from_millis(30)),
+                },
+            )
+            .unwrap();
+        assert!(resp.deadline_exceeded, "{resp:?}");
+        assert!(resp.error.is_some());
+        assert!(
+            !resp.tokens.is_empty() && resp.tokens.len() < 100,
+            "expected a partial continuation, got {} tokens",
+            resp.tokens.len()
+        );
+        // An untimed request on the same server still runs to completion.
+        let full = client.try_generate(vec![2], 3).unwrap();
+        assert_eq!(full.tokens.len(), 3);
+        assert!(!full.deadline_exceeded);
+        drop(client);
+        let stats = server.join();
+        assert_eq!(stats.deadline_exceeded, 1);
+        assert_eq!(stats.class_deadline_exceeded[Priority::Interactive.idx()], 1);
+        assert_eq!(stats.class_submitted[Priority::Interactive.idx()], 1);
+        assert_eq!(stats.class_submitted[Priority::Standard.idx()], 1);
+    }
+
+    #[test]
+    fn drain_aborts_inflight_sessions_after_grace() {
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        let sweeps = Arc::new(AtomicUsize::new(0));
+        let (client, server) = start(
+            Arc::new(PacedEngineBackend {
+                sweep_cost: Duration::from_millis(2),
+                sweeps: Arc::clone(&sweeps),
+            }),
+            ServeCfg {
+                max_batch: 4,
+                max_wait: Duration::from_micros(100),
+                queue_depth: 16,
+                workers: 1,
+                ..ServeCfg::default()
+            },
+        );
+        // ~200 ms of decode in flight when the drain starts.
+        let c = client.clone();
+        let long = std::thread::spawn(move || c.try_generate(vec![1], 100).unwrap());
+        let t0 = Instant::now();
+        while sweeps.load(Ordering::SeqCst) < 3 {
+            assert!(t0.elapsed() < Duration::from_secs(5), "decode never started");
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        let stats = server.drain(Duration::from_millis(20));
+        let resp = long.join().unwrap();
+        let err = resp.error.expect("drained session must carry an error");
+        assert!(err.contains("draining"), "{err}");
+        assert!(
+            !resp.tokens.is_empty() && resp.tokens.len() < 100,
+            "aborted session should keep its partial tokens ({} emitted)",
+            resp.tokens.len()
+        );
+        assert!(stats.drain_us > 0);
+        assert_eq!(stats.failed, 1);
+        // Admission stopped the moment the drain began.
+        assert!(matches!(
+            client.try_generate_for(vec![2], 3, Duration::from_millis(5)),
+            Err(SubmitError::Stopped)
+        ));
     }
 
     #[test]

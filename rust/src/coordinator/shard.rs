@@ -21,7 +21,18 @@
 use std::collections::VecDeque;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Condvar, Mutex};
-use std::time::Duration;
+use std::time::{Duration, Instant};
+
+/// Why a bounded push ([`ShardedQueue::push_to_for`]) returned the item
+/// instead of queueing it.
+#[derive(Debug, PartialEq, Eq)]
+pub enum PushError<T> {
+    /// The queue stayed at capacity for the whole timeout — the caller
+    /// can shed, retry with backoff, or surface a typed overload error.
+    Full(T),
+    /// The queue was closed (server stopping); retrying is pointless.
+    Closed(T),
+}
 
 /// FNV-1a over `(task, token ids)` — the affinity key for shard
 /// routing.
@@ -152,6 +163,50 @@ impl<T> ShardedQueue<T> {
                 g = self.not_full.wait(g).unwrap();
             }
         }
+        self.deposit(shard, item);
+        Ok(())
+    }
+
+    /// Bounded-wait variant of [`ShardedQueue::push_affine`]: waits at
+    /// most `timeout` for a capacity slot, then returns the item with a
+    /// typed [`PushError`] instead of blocking indefinitely — the
+    /// load-shedding admission path.
+    pub fn push_affine_for(&self, key: u64, item: T, timeout: Duration) -> Result<(), PushError<T>> {
+        self.push_to_for((key % self.shards.len() as u64) as usize, item, timeout)
+    }
+
+    /// Bounded-wait variant of [`ShardedQueue::push_to`]. A zero
+    /// timeout is a try-push: one capacity check, no waiting.
+    pub fn push_to_for(&self, shard: usize, item: T, timeout: Duration) -> Result<(), PushError<T>> {
+        #[cfg(feature = "chaos")]
+        if crate::util::chaos::should_trip("shard.push_full") {
+            return Err(PushError::Full(item));
+        }
+        let deadline = Instant::now() + timeout;
+        {
+            let mut g = self.gate.lock().unwrap();
+            loop {
+                if g.closed {
+                    return Err(PushError::Closed(item));
+                }
+                if g.len < self.cap {
+                    g.len += 1;
+                    break;
+                }
+                let now = Instant::now();
+                if now >= deadline {
+                    return Err(PushError::Full(item));
+                }
+                g = self.not_full.wait_timeout(g, deadline - now).unwrap().0;
+            }
+        }
+        self.deposit(shard, item);
+        Ok(())
+    }
+
+    /// Enqueue an item whose capacity slot is already reserved in the
+    /// gate, and wake consumers.
+    fn deposit(&self, shard: usize, item: T) {
         let s = &self.shards[shard];
         let prev_len = {
             let mut q = s.q.lock().unwrap();
@@ -171,7 +226,6 @@ impl<T> ShardedQueue<T> {
                 p.ready.notify_all();
             }
         }
-        Ok(())
     }
 
     /// Release `n` capacity slots after removing items from a shard.
@@ -379,6 +433,41 @@ mod tests {
         h.join().unwrap();
         assert!(done.load(Ordering::SeqCst));
         assert_eq!(q.pending(), 2);
+    }
+
+    #[test]
+    fn bounded_push_times_out_full_and_fails_closed() {
+        let q = ShardedQueue::new(1, 1);
+        assert_eq!(q.push_to_for(0, 1u32, Duration::ZERO), Ok(()));
+        // At capacity: a bounded push waits out its timeout, returns
+        // the item typed as Full, and leaves the queue intact.
+        let t0 = Instant::now();
+        assert_eq!(
+            q.push_to_for(0, 2, Duration::from_millis(10)),
+            Err(PushError::Full(2))
+        );
+        assert!(t0.elapsed() >= Duration::from_millis(10));
+        assert_eq!(q.pending(), 1);
+        // A take frees capacity; the bounded push succeeds again.
+        assert_eq!(q.take_local(0, 1), vec![1]);
+        assert_eq!(q.push_affine_for(0, 3, Duration::ZERO), Ok(()));
+        q.close();
+        assert_eq!(
+            q.push_to_for(0, 4, Duration::from_millis(5)),
+            Err(PushError::Closed(4))
+        );
+    }
+
+    #[test]
+    fn bounded_push_wakes_when_capacity_frees() {
+        let q = Arc::new(ShardedQueue::new(1, 1));
+        q.push(1u32).unwrap();
+        let q2 = Arc::clone(&q);
+        let h = std::thread::spawn(move || q2.push_to_for(0, 2, Duration::from_secs(5)));
+        std::thread::sleep(Duration::from_millis(10));
+        assert_eq!(q.take_local(0, 1), vec![1]);
+        assert_eq!(h.join().unwrap(), Ok(()));
+        assert_eq!(q.take_local(0, 1), vec![2]);
     }
 
     #[test]

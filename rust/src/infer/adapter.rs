@@ -476,6 +476,10 @@ impl AdapterRegistry {
         if task == 0 {
             return Some((Arc::clone(self.base.model()), 0));
         }
+        // Chaos: a delay here widens the window between a request's
+        // validation (`contains`) and this resolve, so the
+        // unloaded-mid-flight race is reproducible on demand.
+        crate::failpoint!("adapter.resolve");
         let map = self.inner.read().expect("adapter registry poisoned");
         map.get(&task)
             .and_then(|e| e.model.as_ref().map(|m| (Arc::clone(m), e.epoch)))

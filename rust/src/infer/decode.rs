@@ -1313,6 +1313,11 @@ impl<'m> DecodeEngine<'m> {
     pub fn sweep(&mut self) {
         #[cfg(feature = "validate")]
         self.debug_validate();
+        // Chaos: inject a mid-sweep panic (serve containment must fail
+        // all live sessions and rebuild the engine) or a slow sweep.
+        // Expands to nothing without the `chaos` feature — the
+        // zero-allocation hot-path contract is untouched.
+        crate::failpoint!("decode.sweep");
         // Greedy bookkeeping per slot (the GreedyStream::step prefix):
         // emit from current logits, mark EOS/budget, collect the rows
         // that actually step.

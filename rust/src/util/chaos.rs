@@ -1,0 +1,263 @@
+//! Deterministic fault injection, compiled only under the `chaos`
+//! cargo feature (the `validate` pattern: strictly additive, zero cost
+//! when off — see docs/ROBUSTNESS.md for the failpoint catalog).
+//!
+//! Production code marks interesting points with
+//! `crate::failpoint!("component.site")`; with the feature off the
+//! macro expands to nothing. With it on, each hit consults a global
+//! registry of **armed** failpoints: a name that is not armed costs one
+//! mutex lock and a hash lookup, an armed one counts the hit and — once
+//! `after` hits have passed, for at most `times` firings — executes its
+//! [`FailAction`]. Everything is counter-driven and configured from the
+//! test, so every injected failure is exactly reproducible: "panic on
+//! the 3rd sweep" means the 3rd sweep, every run.
+//!
+//! Failures are *injected outside* any registry state: the lock is
+//! released before a `Panic` action unwinds, so a caught injection
+//! never poisons the registry and the same test can keep arming points.
+
+use std::collections::HashMap;
+use std::sync::{Mutex, OnceLock};
+use std::time::Duration;
+
+/// What an armed failpoint does when it fires.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FailAction {
+    /// Panic with a message naming the failpoint — exercises the
+    /// containment path around the call site (catch_unwind, worker
+    /// supervision).
+    Panic,
+    /// Sleep for the given duration — simulates slow compute / widens
+    /// race windows deterministically.
+    Delay(Duration),
+    /// Record the firing and let cooperating call sites observe it via
+    /// [`should_trip`] — simulates environmental failures the code
+    /// checks for (e.g. a full queue) without faking the real state.
+    Trip,
+}
+
+struct Failpoint {
+    action: FailAction,
+    /// Hits to let pass before the first firing.
+    after: usize,
+    /// Maximum number of firings; 0 = unlimited.
+    times: usize,
+    hits: usize,
+    fired: usize,
+}
+
+fn registry() -> &'static Mutex<HashMap<String, Failpoint>> {
+    static REG: OnceLock<Mutex<HashMap<String, Failpoint>>> = OnceLock::new();
+    REG.get_or_init(|| Mutex::new(HashMap::new()))
+}
+
+fn lock() -> std::sync::MutexGuard<'static, HashMap<String, Failpoint>> {
+    // A panic injected by `hit` happens after the guard is dropped, so
+    // the registry itself is never poisoned by its own failures; any
+    // other poisoning is a test-harness bug worth recovering from.
+    match registry().lock() {
+        Ok(g) => g,
+        Err(poisoned) => poisoned.into_inner(),
+    }
+}
+
+/// Arm `name`: skip the first `after` hits, then perform `action` on
+/// each subsequent hit, at most `times` times (0 = unlimited). Re-arms
+/// (and resets the counters of) an already-armed point.
+pub fn arm(name: &str, action: FailAction, after: usize, times: usize) {
+    lock().insert(
+        name.to_string(),
+        Failpoint {
+            action,
+            after,
+            times,
+            hits: 0,
+            fired: 0,
+        },
+    );
+}
+
+/// Disarm `name`; returns whether it was armed.
+pub fn disarm(name: &str) -> bool {
+    lock().remove(name).is_some()
+}
+
+/// Disarm everything — call between tests sharing a process.
+pub fn reset() {
+    lock().clear();
+}
+
+/// Hits recorded for `name` (0 when never armed).
+pub fn hits(name: &str) -> usize {
+    lock().get(name).map_or(0, |f| f.hits)
+}
+
+/// Firings performed for `name` (0 when never armed).
+pub fn fired(name: &str) -> usize {
+    lock().get(name).map_or(0, |f| f.fired)
+}
+
+/// Decide, under the lock, what this hit should do.
+fn on_hit(name: &str) -> Option<FailAction> {
+    let mut reg = lock();
+    let fp = reg.get_mut(name)?;
+    fp.hits += 1;
+    if fp.hits <= fp.after || (fp.times != 0 && fp.fired >= fp.times) {
+        return None;
+    }
+    fp.fired += 1;
+    Some(fp.action)
+}
+
+/// The instrumentation hook behind `crate::failpoint!`. Unarmed names
+/// return immediately; armed ones count the hit and execute their
+/// action once due. `Trip` actions only record here — cooperating call
+/// sites observe them through [`should_trip`].
+pub fn hit(name: &str) {
+    match on_hit(name) {
+        None | Some(FailAction::Trip) => {}
+        Some(FailAction::Panic) => {
+            // The registry lock is already released: the unwind is
+            // containable without poisoning the registry.
+            panic!("chaos: injected panic at failpoint {name}");
+        }
+        Some(FailAction::Delay(d)) => std::thread::sleep(d),
+    }
+}
+
+/// For call sites that *branch* on an injected failure instead of
+/// unwinding (e.g. "pretend the queue is full"): counts a hit and
+/// returns whether a `Trip` armed at `name` fires on it.
+pub fn should_trip(name: &str) -> bool {
+    matches!(on_hit(name), Some(FailAction::Trip))
+}
+
+/// Arm failpoints from a seeded spec string — one `;`-separated clause
+/// per point, each `name=action[@after][xN]` where action is `panic`,
+/// `trip`, or `delay:<millis>ms`. Examples:
+///
+/// * `serve.worker_tick=panic@1x1` — panic on the 2nd tick, once.
+/// * `serve.classify=delay:5ms` — every classify run sleeps 5 ms.
+/// * `shard.push_full=trip@0x3` — the next 3 pushes see a full queue.
+///
+/// Malformed clauses return `Err` without arming anything from the
+/// spec (all-or-nothing, so a typo cannot silently weaken a test).
+pub fn arm_spec(spec: &str) -> Result<(), String> {
+    let mut parsed = Vec::new();
+    for clause in spec.split(';').filter(|c| !c.trim().is_empty()) {
+        let (name, rest) = clause
+            .trim()
+            .split_once('=')
+            .ok_or_else(|| format!("chaos spec clause `{clause}` is missing `=`"))?;
+        let mut action_str = rest;
+        let mut after = 0usize;
+        let mut times = 0usize;
+        if let Some((head, n)) = action_str.rsplit_once('x') {
+            // `delay:5ms` contains no `x`; only a trailing count does.
+            if let Ok(n) = n.parse() {
+                times = n;
+                action_str = head;
+            }
+        }
+        if let Some((head, n)) = action_str.rsplit_once('@') {
+            after = n
+                .parse()
+                .map_err(|_| format!("chaos spec clause `{clause}`: bad @after count"))?;
+            action_str = head;
+        }
+        let action = match action_str {
+            "panic" => FailAction::Panic,
+            "trip" => FailAction::Trip,
+            s => {
+                let ms = s
+                    .strip_prefix("delay:")
+                    .and_then(|d| d.strip_suffix("ms"))
+                    .and_then(|d| d.parse::<u64>().ok())
+                    .ok_or_else(|| format!("chaos spec clause `{clause}`: unknown action"))?;
+                FailAction::Delay(Duration::from_millis(ms))
+            }
+        };
+        parsed.push((name.to_string(), action, after, times));
+    }
+    for (name, action, after, times) in parsed {
+        arm(&name, action, after, times);
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The registry is process-global; unit tests here serialize on it
+    /// and use test-local names so they cannot race each other (or the
+    /// integration tests, which run in separate processes).
+    fn guard() -> std::sync::MutexGuard<'static, ()> {
+        static GATE: Mutex<()> = Mutex::new(());
+        match GATE.lock() {
+            Ok(g) => g,
+            Err(p) => p.into_inner(),
+        }
+    }
+
+    #[test]
+    fn unarmed_hits_are_noops() {
+        let _g = guard();
+        hit("unit.never_armed");
+        assert_eq!(hits("unit.never_armed"), 0);
+        assert!(!should_trip("unit.never_armed"));
+    }
+
+    #[test]
+    fn panic_fires_on_nth_hit_bounded_times() {
+        let _g = guard();
+        arm("unit.bomb", FailAction::Panic, 2, 1);
+        hit("unit.bomb");
+        hit("unit.bomb"); // first two pass
+        let r = std::panic::catch_unwind(|| hit("unit.bomb"));
+        let msg = format!("{:?}", r.unwrap_err().downcast_ref::<String>());
+        assert!(msg.contains("unit.bomb"), "panic should name the failpoint: {msg}");
+        hit("unit.bomb"); // times=1 exhausted: passes again
+        assert_eq!(hits("unit.bomb"), 4);
+        assert_eq!(fired("unit.bomb"), 1);
+        disarm("unit.bomb");
+    }
+
+    #[test]
+    fn trip_is_observed_not_thrown() {
+        let _g = guard();
+        arm("unit.full", FailAction::Trip, 0, 2);
+        assert!(should_trip("unit.full"));
+        assert!(should_trip("unit.full"));
+        assert!(!should_trip("unit.full"), "times=2 must exhaust");
+        assert_eq!(fired("unit.full"), 2);
+        disarm("unit.full");
+    }
+
+    #[test]
+    fn delay_sleeps_for_the_configured_time() {
+        let _g = guard();
+        arm("unit.slow", FailAction::Delay(Duration::from_millis(20)), 0, 1);
+        let t0 = std::time::Instant::now();
+        hit("unit.slow");
+        assert!(t0.elapsed() >= Duration::from_millis(20));
+        let t0 = std::time::Instant::now();
+        hit("unit.slow"); // exhausted: no sleep
+        assert!(t0.elapsed() < Duration::from_millis(20));
+        disarm("unit.slow");
+    }
+
+    #[test]
+    fn spec_arms_multiple_points_all_or_nothing() {
+        let _g = guard();
+        arm_spec("unit.a=panic@1x1; unit.b=delay:5ms@2; unit.c=trip").unwrap();
+        assert_eq!(hits("unit.a"), 0);
+        assert!(should_trip("unit.c"));
+        // One bad clause arms nothing, including the valid clauses.
+        reset();
+        assert!(arm_spec("unit.a=panic; unit.bad=explode").is_err());
+        hit("unit.a"); // would fire if armed
+        assert_eq!(hits("unit.a"), 0, "failed spec must not arm any clause");
+        reset();
+    }
+}

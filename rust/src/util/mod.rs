@@ -14,6 +14,20 @@ pub mod stats;
 pub mod prop;
 #[cfg(feature = "validate")]
 pub mod validate;
+#[cfg(feature = "chaos")]
+pub mod chaos;
+
+/// Mark a deterministic fault-injection point (see
+/// [`chaos`]/docs/ROBUSTNESS.md). Expands to a registry hit under the
+/// `chaos` cargo feature and to nothing otherwise — production builds
+/// carry zero cost, not even a branch.
+#[macro_export]
+macro_rules! failpoint {
+    ($name:expr) => {
+        #[cfg(feature = "chaos")]
+        $crate::util::chaos::hit($name);
+    };
+}
 
 pub use rng::Rng;
 pub use json::Json;

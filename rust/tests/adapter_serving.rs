@@ -10,6 +10,11 @@
 //! alone, and a mid-flight adapter swap must never perturb sessions
 //! admitted under the old epoch.
 //!
+//! The *injected-fault* variants of these races — an adapter unloaded
+//! inside the validation→admission window, a hot swap landed
+//! deterministically mid-generation — live in `tests/chaos_adapter.rs`
+//! and run under `--features chaos`.
+//!
 //! [`CompiledBase::attach`]: dsee::infer::CompiledBase::attach
 //! [`DecodeEngine`]: dsee::infer::decode::DecodeEngine
 
@@ -229,4 +234,47 @@ fn adapter_swap_mid_flight_finishes_on_old_epoch() {
     assert!(reg.resolve(1).is_none());
     assert_eq!(reg.epoch(1), e_new + 1);
     assert_eq!(reg.resident(), 0);
+}
+
+#[test]
+fn registry_survives_load_unload_churn_with_monotonic_epochs() {
+    // Robustness under adapter churn: cycles of load → serve → unload
+    // must keep the epoch strictly monotonic per task (each cycle
+    // retires the previous cache keyspace), keep tombstoned tasks
+    // unresolvable, and keep every *resident* generation bit-identical
+    // to the delta loaded that cycle — no state bleeding across cycles.
+    let src = dsee_lm_base(0xADA3);
+    let reg = AdapterRegistry::new(src.compile_base(MergePolicy::Merged));
+    let cap = reg.base().model().cfg.max_seq;
+    let prompt: Vec<u32> = vec![3, 41, 8, 19];
+    let mut last_epoch = 0u64;
+    for cycle in 0..4u64 {
+        let delta = tuned(&src, 900 + cycle);
+        let epoch = reg.load(1, &delta.compile_adapter(MergePolicy::Merged));
+        assert!(
+            epoch > last_epoch || cycle == 0,
+            "cycle {cycle}: epoch must rise across churn ({last_epoch} → {epoch})"
+        );
+        last_epoch = epoch;
+        let (m, e) = reg.resolve(1).expect("freshly loaded task must resolve");
+        assert_eq!(e, epoch);
+        let want = delta
+            .compile(MergePolicy::Merged)
+            .generate_greedy(&prompt, 6, cap)
+            .unwrap();
+        assert_eq!(
+            m.generate_greedy(&prompt, 6, cap).unwrap(),
+            want,
+            "cycle {cycle}: resident adapter decoded a stale delta"
+        );
+        assert_eq!(reg.resident(), 1);
+        assert!(reg.unload(1));
+        assert!(reg.resolve(1).is_none(), "tombstoned task must not resolve");
+        assert_eq!(reg.resident(), 0);
+        last_epoch = reg.epoch(1); // unload bumps it once more
+        assert_eq!(last_epoch, epoch + 1);
+    }
+    let st = reg.stats();
+    assert_eq!(st.evictions, 4, "every cycle's unload is an eviction");
+    assert_eq!(st.swaps, 0, "loads over a tombstone are not swaps");
 }

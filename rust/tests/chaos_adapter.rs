@@ -1,0 +1,198 @@
+//! Deterministic fault injection against multi-tenant adapter serving —
+//! `--features chaos` only.
+//!
+//! The registry's two racy windows are made reproducible here by
+//! injected delays: an adapter unloaded *between* a request's
+//! validation and its engine admission must fail that request alone
+//! (and the task must serve again after a reload), and a hot swap
+//! landing mid-generation must not perturb one token of a session
+//! admitted under the old epoch.
+//!
+//! Same process-isolation rules as `chaos_serve.rs`: own test binary,
+//! gate mutex, registry reset per test.
+
+#![cfg(feature = "chaos")]
+
+use dsee::config::{DseeCfg, ModelCfg};
+use dsee::coordinator::serve::{start_multi_tenant, ServeCfg};
+use dsee::infer::adapter::AdapterRegistry;
+use dsee::infer::MergePolicy;
+use dsee::nn::Transformer;
+use dsee::tensor::Tensor;
+use dsee::util::chaos::{self, FailAction};
+use dsee::util::Rng;
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+fn gate() -> std::sync::MutexGuard<'static, ()> {
+    static GATE: Mutex<()> = Mutex::new(());
+    match GATE.lock() {
+        Ok(g) => g,
+        Err(p) => p.into_inner(),
+    }
+}
+
+/// Tiny causal LM with DSEE carriers — the shared frozen base.
+fn lm_base(seed: u64) -> Transformer {
+    let cfg = ModelCfg {
+        name: "tiny-chaos-adapter".into(),
+        vocab: 60,
+        max_seq: 12,
+        d_model: 16,
+        n_layers: 2,
+        n_heads: 4,
+        d_ffn: 24,
+        causal: true,
+        n_classes: 3,
+        head: "lm".into(),
+        n_prefix: 0,
+    };
+    let mut rng = Rng::new(seed);
+    let mut m = Transformer::new(&cfg, &mut rng);
+    dsee::dsee::attach_dsee(
+        &mut m,
+        &DseeCfg {
+            rank: 4,
+            n_sparse: 16,
+            ..DseeCfg::default()
+        },
+        &mut rng,
+    );
+    m
+}
+
+/// Re-randomize the DSEE carriers so each "task" is a distinct delta
+/// over the same frozen base.
+fn tuned(base: &Transformer, seed: u64) -> Transformer {
+    let mut rng = Rng::new(seed);
+    let mut m = base.clone();
+    for lin in m.attn_projections_mut() {
+        if let Some(a) = &mut lin.adapter {
+            a.u = Tensor::randn(&[a.u.rows(), a.u.cols()], 0.2, &mut rng);
+            a.scale = 0.7;
+        }
+        if let Some(r) = &mut lin.residual {
+            r.values = Tensor::randn(&[r.nnz()], 0.3, &mut rng);
+        }
+    }
+    m
+}
+
+/// Spin until a chaos counter reaches `want` (the injected window is
+/// open), with a hard timeout so a wiring regression fails the test
+/// instead of hanging it.
+fn wait_for(counter: impl Fn() -> usize, want: usize, what: &str) {
+    let t0 = Instant::now();
+    while counter() < want {
+        assert!(
+            t0.elapsed() < Duration::from_secs(5),
+            "{what} never reached {want}"
+        );
+        std::thread::sleep(Duration::from_millis(1));
+    }
+}
+
+#[test]
+fn unload_between_validation_and_admission_fails_one_request_then_recovers() {
+    let _g = gate();
+    chaos::reset();
+    let src = lm_base(0xC4A0);
+    let reg = Arc::new(AdapterRegistry::new(src.compile_base(MergePolicy::Csr)));
+    reg.load(1, &tuned(&src, 11).compile_adapter(MergePolicy::Csr));
+    // Hold the request for 80 ms between its has_task validation and
+    // its engine admission — the window the unload below lands in.
+    chaos::arm(
+        "serve.pre_admit",
+        FailAction::Delay(Duration::from_millis(80)),
+        0,
+        1,
+    );
+    let (client, server) = start_multi_tenant(
+        Arc::clone(&reg),
+        ServeCfg {
+            workers: 1,
+            ..ServeCfg::default()
+        },
+    );
+    let prompt = vec![5u32, 9, 2, 44];
+    let resp = std::thread::scope(|s| {
+        let h = s.spawn(|| client.try_generate_task(1, prompt.clone(), 5).unwrap());
+        // The delay counter ticks as the worker *enters* the window;
+        // the unload then lands well inside the 80 ms hold.
+        wait_for(|| chaos::fired("serve.pre_admit"), 1, "serve.pre_admit");
+        assert!(reg.unload(1));
+        h.join().unwrap()
+    });
+    let err = resp.error.expect("admission after the unload must fail");
+    assert!(
+        err.contains("unloaded before admission"),
+        "containment should name the race: {err}"
+    );
+    // One request died; the server did not. The bare base still
+    // serves, and a reloaded task 1 serves its new delta.
+    let base_ok = client.generate_task(0, prompt.clone(), 5).unwrap();
+    assert!(!base_ok.tokens.is_empty());
+    reg.load(1, &tuned(&src, 12).compile_adapter(MergePolicy::Csr));
+    let (m_new, _) = reg.resolve(1).unwrap();
+    let want = m_new.generate_greedy(&prompt, 5, m_new.cfg.max_seq).unwrap();
+    let re_ok = client.generate_task(1, prompt.clone(), 5).unwrap();
+    assert_eq!(re_ok.tokens, want, "reloaded task must serve its new delta");
+    drop(client);
+    let stats = server.join();
+    assert_eq!(stats.failed, 1);
+    assert_eq!(stats.requests, 2);
+    chaos::reset();
+}
+
+#[test]
+fn hot_swap_mid_generation_finishes_on_the_admission_epoch() {
+    let _g = gate();
+    chaos::reset();
+    let src = lm_base(0xC4A1);
+    let reg = Arc::new(AdapterRegistry::new(src.compile_base(MergePolicy::Csr)));
+    let old_delta = tuned(&src, 21);
+    let new_delta = tuned(&src, 22);
+    reg.load(1, &old_delta.compile_adapter(MergePolicy::Csr));
+    let prompt = vec![5u32, 9, 2, 44];
+    let (m_old, _) = reg.resolve(1).unwrap();
+    let want_old = m_old.generate_greedy(&prompt, 7, m_old.cfg.max_seq).unwrap();
+    // Stretch every decode sweep to 8 ms so a 7-token generation is a
+    // wide-open (~56 ms) window to land the swap in mid-flight.
+    chaos::arm(
+        "decode.sweep",
+        FailAction::Delay(Duration::from_millis(8)),
+        0,
+        0,
+    );
+    let (client, server) = start_multi_tenant(
+        Arc::clone(&reg),
+        ServeCfg {
+            workers: 1,
+            ..ServeCfg::default()
+        },
+    );
+    let resp = std::thread::scope(|s| {
+        let h = s.spawn(|| client.try_generate_task(1, prompt.clone(), 7).unwrap());
+        // Two sweeps in: the session is demonstrably mid-generation.
+        wait_for(|| chaos::hits("decode.sweep"), 2, "decode.sweep");
+        reg.load(1, &new_delta.compile_adapter(MergePolicy::Csr));
+        h.join().unwrap()
+    });
+    assert!(resp.error.is_none(), "swap must not fail the session: {:?}", resp.error);
+    assert_eq!(
+        resp.tokens, want_old,
+        "mid-flight swap perturbed a session admitted under the old epoch"
+    );
+    // Post-swap admissions decode under the new delta.
+    let (m_new, _) = reg.resolve(1).unwrap();
+    let want_new = m_new.generate_greedy(&prompt, 7, m_new.cfg.max_seq).unwrap();
+    assert_ne!(want_new, want_old, "test deltas too similar to distinguish the swap");
+    let post = client.generate_task(1, prompt.clone(), 7).unwrap();
+    assert_eq!(post.tokens, want_new);
+    drop(client);
+    let stats = server.join();
+    assert_eq!(stats.requests, 2);
+    assert_eq!(stats.failed, 0);
+    assert_eq!(stats.adapter_swaps, 1, "one reload over a live task");
+    chaos::reset();
+}

@@ -1,0 +1,276 @@
+//! Deterministic fault injection against the serving coordinator —
+//! `--features chaos` only.
+//!
+//! Every failure here is injected through the `crate::failpoint!`
+//! registry (`dsee::util::chaos`), so "the worker dies after its first
+//! batch" means exactly that, every run: worker supervision restarts a
+//! panicked worker and no request is lost; an exhausted restart budget
+//! fails queued requests instead of hanging their clients; a mid-sweep
+//! engine panic fails only the in-flight generations and the rebuilt
+//! engine serves on; an injected full queue surfaces as the typed
+//! `SubmitError::Overloaded`; and an overloaded server sheds or drops
+//! every request it cannot answer by its deadline — zero late answers.
+//!
+//! The chaos registry is process-global and cargo runs a binary's
+//! tests on parallel threads, so these tests live in their own binary
+//! (separate process from the non-chaos suites) and serialize on a
+//! local gate mutex; each resets the registry before arming its own
+//! points.
+
+#![cfg(feature = "chaos")]
+
+use dsee::config::ModelCfg;
+use dsee::coordinator::serve::{
+    start, Backend, EchoBackend, Priority, RequestOpts, Response, ServeCfg, SubmitError,
+};
+use dsee::infer::MergePolicy;
+use dsee::nn::Transformer;
+use dsee::util::chaos::{self, FailAction};
+use dsee::util::Rng;
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+/// Serialize tests in this binary: the chaos registry is process-global.
+fn gate() -> std::sync::MutexGuard<'static, ()> {
+    static GATE: Mutex<()> = Mutex::new(());
+    match GATE.lock() {
+        Ok(g) => g,
+        Err(p) => p.into_inner(),
+    }
+}
+
+fn echo(seq: usize, delay: Duration) -> Arc<dyn Backend> {
+    Arc::new(EchoBackend { seq, delay })
+}
+
+#[test]
+fn worker_panic_restarts_and_no_request_is_lost() {
+    let _g = gate();
+    chaos::reset();
+    // Panic on the 2nd scheduler tick, once: the startup tick passes,
+    // the first request is served, then the worker dies *between*
+    // requests — the supervision restart path, not per-request
+    // containment.
+    chaos::arm_spec("serve.worker_tick=panic@1x1").unwrap();
+    let (client, server) = start(
+        echo(4, Duration::ZERO),
+        ServeCfg {
+            workers: 1,
+            ..ServeCfg::default()
+        },
+    );
+    let r1 = client.infer(vec![1, 2, 3, 4]).unwrap();
+    assert_eq!(r1.logits[0], 10.0);
+    // Served by the restarted incarnation of the same worker thread.
+    let r2 = client.infer(vec![2, 3, 4, 5]).unwrap();
+    assert_eq!(r2.logits[0], 14.0);
+    assert_eq!(chaos::fired("serve.worker_tick"), 1);
+    drop(client);
+    let stats = server.join();
+    assert_eq!(stats.worker_restarts, 1, "supervision must log the restart");
+    assert_eq!(stats.requests, 2);
+    assert_eq!(stats.failed, 0, "a tick panic holds no request");
+    chaos::reset();
+}
+
+#[test]
+fn exhausted_restart_budget_fails_queued_requests_instead_of_hanging() {
+    let _g = gate();
+    chaos::reset();
+    // Same 2nd-tick panic, but with a zero restart budget: the (only)
+    // worker dies for good after its first batch. The request queued
+    // behind that batch must get an error reply, not a forever-blocked
+    // client, and later submissions must fail fast.
+    chaos::arm("serve.worker_tick", FailAction::Panic, 1, 1);
+    let (client, server) = start(
+        echo(4, Duration::from_millis(300)),
+        ServeCfg {
+            workers: 1,
+            worker_restart_budget: 0,
+            ..ServeCfg::default()
+        },
+    );
+    let (r1, r2) = std::thread::scope(|s| {
+        let a = s.spawn(|| client.try_infer(vec![1, 2, 3, 4]).unwrap());
+        // Queue the second request while the first is still computing
+        // (300 ms leaves a wide margin), so it is in the queue when the
+        // worker dies at the next tick.
+        std::thread::sleep(Duration::from_millis(50));
+        let b = s.spawn(|| client.try_infer(vec![9, 9, 9, 9]).unwrap());
+        (a.join().unwrap(), b.join().unwrap())
+    });
+    assert_eq!(r1.logits[0], 10.0, "the batch in flight still completes");
+    let err = r2.error.expect("stranded request must get an error reply");
+    assert!(
+        err.contains("worker died past its restart budget"),
+        "unexpected failure text: {err}"
+    );
+    // The dead last worker closed the queue: no new admissions.
+    let err = client.try_infer(vec![1, 1, 1, 1]).unwrap_err();
+    assert!(format!("{err}").contains("server stopped"), "{err}");
+    drop(client);
+    let stats = server.join();
+    assert_eq!(stats.worker_restarts, 0, "budget 0 means no restart");
+    assert_eq!(stats.requests, 1);
+    assert_eq!(stats.failed, 1);
+    chaos::reset();
+}
+
+#[test]
+fn mid_sweep_engine_panic_rebuilds_and_traffic_survives() {
+    let _g = gate();
+    chaos::reset();
+    let mut rng = Rng::new(0xC405);
+    let model = Transformer::new(&ModelCfg::sim_gpt_s(), &mut rng);
+    let compiled = Arc::new(model.compile(MergePolicy::Merged));
+    let direct = Arc::clone(&compiled);
+    let prompt = vec![5u32, 9, 2, 44];
+    let want = direct.generate_greedy(&prompt, 6, direct.cfg.max_seq).unwrap();
+    // The very first fused decode sweep panics inside the engine — the
+    // worker's containment must fail the in-flight generation (the
+    // packed state may be torn) and rebuild a fresh engine.
+    chaos::arm("decode.sweep", FailAction::Panic, 0, 1);
+    let (client, server) = start(
+        Arc::clone(&compiled) as Arc<dyn Backend>,
+        ServeCfg {
+            workers: 1,
+            ..ServeCfg::default()
+        },
+    );
+    let failed = client.try_generate(prompt.clone(), 6).unwrap();
+    let err = failed.error.expect("sweep panic must fail the generation");
+    assert!(err.contains("decode.sweep"), "error should name the failpoint: {err}");
+    assert_eq!(chaos::fired("decode.sweep"), 1);
+    // The rebuilt engine decodes bit-identically to a direct session,
+    // and classification on the same worker never noticed.
+    let ok = client.generate(prompt.clone(), 6).unwrap();
+    assert_eq!(ok.tokens, want, "rebuilt engine diverged from direct decode");
+    let logits = client.infer(vec![7u32; 32]).unwrap().logits;
+    assert!(!logits.is_empty(), "classification must survive the rebuild");
+    drop(client);
+    let stats = server.join();
+    assert_eq!(stats.failed, 1);
+    assert_eq!(stats.requests, 2);
+    chaos::reset();
+}
+
+#[test]
+fn injected_full_queue_surfaces_as_typed_overload() {
+    let _g = gate();
+    chaos::reset();
+    // One bounded push sees a full queue without the queue ever being
+    // full: the client must return the typed Overloaded error at once
+    // (no deadline-long wait), and the next submission goes through.
+    chaos::arm("shard.push_full", FailAction::Trip, 0, 1);
+    let (client, server) = start(echo(4, Duration::ZERO), ServeCfg::default());
+    let t0 = Instant::now();
+    let err = client
+        .try_infer_for(vec![1, 2, 3, 4], Duration::from_millis(200))
+        .unwrap_err();
+    assert!(matches!(err, SubmitError::Overloaded { .. }), "{err:?}");
+    assert!(
+        t0.elapsed() < Duration::from_millis(100),
+        "a tripped push must shed instantly, not wait out the timeout"
+    );
+    assert_eq!(chaos::fired("shard.push_full"), 1);
+    let ok = client.try_infer_for(vec![1, 2, 3, 4], Duration::from_millis(200)).unwrap();
+    assert_eq!(ok.logits[0], 10.0);
+    drop(client);
+    let stats = server.join();
+    assert_eq!(stats.requests, 1);
+    assert_eq!(stats.shed, 0, "typed submission errors are not counted as sheds");
+    chaos::reset();
+}
+
+#[test]
+fn overloaded_server_sheds_early_and_never_answers_late() {
+    let _g = gate();
+    chaos::reset();
+    // Every classification run takes 10 ms (injected slow compute).
+    // With one worker, batch size 1, and a 30 ms interactive deadline,
+    // a 4-thread storm offers far more load than the server can answer
+    // in budget: admission must shed on estimated wait or drop expired
+    // requests at batch formation — and every answer that *does* come
+    // back must have spent at most deadline + one sweep in-server.
+    chaos::arm(
+        "serve.classify",
+        FailAction::Delay(Duration::from_millis(10)),
+        0,
+        0,
+    );
+    const DEADLINE: Duration = Duration::from_millis(30);
+    let (client, server) = start(
+        echo(4, Duration::ZERO),
+        ServeCfg {
+            workers: 1,
+            max_batch: 1,
+            class_deadlines: [Some(DEADLINE), None, None],
+            ..ServeCfg::default()
+        },
+    );
+    // Warm the wait estimator with untimed batch-class traffic so the
+    // storm below sheds deterministically instead of riding the cold
+    // (zero-estimate) start.
+    for _ in 0..3 {
+        let opts = RequestOpts {
+            class: Priority::Batch,
+            deadline: None,
+        };
+        let r = client.try_infer_with(0, vec![1, 2, 3, 4], opts).unwrap();
+        assert!(r.error.is_none(), "warmup failed: {:?}", r.error);
+    }
+    let results: Mutex<Vec<Response>> = Mutex::new(Vec::new());
+    std::thread::scope(|s| {
+        for t in 0..4u32 {
+            let results = &results;
+            let client = &client;
+            s.spawn(move || {
+                for i in 0..5u32 {
+                    let opts = RequestOpts {
+                        class: Priority::Interactive,
+                        deadline: None, // class default: 30 ms
+                    };
+                    let r = client.try_infer_with(0, vec![t, i, t + i, 1], opts).unwrap();
+                    results.lock().unwrap().push(r);
+                }
+            });
+        }
+    });
+    let results = results.into_inner().unwrap();
+    assert_eq!(results.len(), 20, "every submission must get a response");
+    let (mut ok, mut shed, mut expired) = (0usize, 0usize, 0usize);
+    // Deadline + one sweep, with generous scheduling slack: 30 ms
+    // budget + 10 ms injected compute + 50 ms for a loaded CI box.
+    // The un-shed serial backlog would be 200 ms+, so this bound still
+    // separates "answered in budget" from "answered whenever".
+    let late_bound_us = 90_000u64;
+    for r in &results {
+        match (&r.error, r.shed, r.deadline_exceeded) {
+            (None, false, false) => {
+                ok += 1;
+                assert!(
+                    r.queue_us + r.compute_us <= late_bound_us,
+                    "answered later than deadline + one sweep: {} us in-server",
+                    r.queue_us + r.compute_us
+                );
+            }
+            (Some(_), true, false) => {
+                shed += 1;
+                assert_eq!(r.compute_us, 0, "sheds must spend no compute");
+            }
+            (Some(_), false, true) => expired += 1,
+            other => panic!("unexpected response shape: {other:?}"),
+        }
+    }
+    assert_eq!(ok + shed + expired, 20);
+    assert!(shed + expired >= 1, "this load must visibly overload the server");
+    drop(client);
+    let stats = server.join();
+    assert_eq!(stats.class_submitted[Priority::Interactive.idx()], 20);
+    assert_eq!(stats.class_submitted[Priority::Batch.idx()], 3);
+    assert_eq!(stats.shed, shed);
+    assert_eq!(stats.deadline_exceeded, expired);
+    assert_eq!(stats.requests, 3 + ok);
+    assert_eq!(stats.failed, 0);
+    chaos::reset();
+}

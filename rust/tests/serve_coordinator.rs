@@ -3,7 +3,9 @@
 //! queueing/compute latency split, and continuous batching of decode
 //! sessions.
 
-use dsee::coordinator::serve::{start, Backend, DecodeStream, EchoBackend, ServeCfg};
+use dsee::coordinator::serve::{
+    start, Backend, DecodeStream, EchoBackend, Priority, RequestOpts, ServeCfg, SubmitError,
+};
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
@@ -84,6 +86,7 @@ fn cached_serving_answers_every_request_consistently() {
             queue_depth: 128,
             workers: 4,
             cache_entries: 256,
+            ..ServeCfg::default()
         },
     );
     let mut handles = Vec::new();
@@ -143,6 +146,7 @@ fn idle_workers_steal_from_a_stalled_shard() {
             queue_depth: 64,
             workers: 2,
             cache_entries: 0,
+            ..ServeCfg::default()
         },
     );
     // Stall one worker on a 200 ms request...
@@ -187,6 +191,7 @@ fn queue_and_compute_latency_are_separated() {
             queue_depth: 16,
             workers: 1,
             cache_entries: 0,
+            ..ServeCfg::default()
         },
     );
     let resp = client.infer(vec![1, 2]).unwrap();
@@ -276,6 +281,7 @@ fn short_generate_completes_while_long_decode_is_live() {
             queue_depth: 16,
             workers: 1,
             cache_entries: 0,
+            ..ServeCfg::default()
         },
     );
     // Long decode: 150 steps × 2 ms ≈ 300 ms of stepping.
@@ -347,6 +353,7 @@ fn rejected_requests_carry_real_queue_time() {
             queue_depth: 16,
             workers: 1,
             cache_entries: 0,
+            ..ServeCfg::default()
         },
     );
     // Occupy the single worker with a slow batch...
@@ -369,4 +376,269 @@ fn rejected_requests_carry_real_queue_time() {
     let stats = server.join();
     assert_eq!(stats.rejected, 1);
     assert_eq!(stats.requests, 1);
+}
+
+#[test]
+fn request_expiring_in_queue_is_dropped_typed() {
+    // A deadline that lapses while the request waits behind a slow
+    // batch must produce a typed drop at batch formation — no compute
+    // spent, real queue time attached.
+    let (client, server) = start(
+        Arc::new(EchoBackend {
+            seq: 2,
+            delay: Duration::from_millis(200),
+        }),
+        ServeCfg {
+            max_batch: 1,
+            max_wait: Duration::from_micros(50),
+            queue_depth: 16,
+            workers: 1,
+            ..ServeCfg::default()
+        },
+    );
+    // Occupy the single worker for 200 ms...
+    let busy = {
+        let c = client.clone();
+        std::thread::spawn(move || c.infer(vec![1, 2]).unwrap())
+    };
+    std::thread::sleep(Duration::from_millis(20));
+    // ...then queue a request whose 50 ms budget cannot survive the
+    // ~180 ms still left on the running batch. The estimator is cold
+    // (no batch has completed), so admission lets it through.
+    let resp = client
+        .try_infer_with(
+            0,
+            vec![3, 4],
+            RequestOpts {
+                class: Priority::Interactive,
+                deadline: Some(Duration::from_millis(50)),
+            },
+        )
+        .unwrap();
+    assert!(resp.deadline_exceeded, "{resp:?}");
+    assert!(!resp.shed, "queued expiry is not an admission shed");
+    assert!(resp.error.as_deref().unwrap_or("").contains("deadline"));
+    assert!(
+        resp.queue_us >= 100_000,
+        "drop lost its real queue time: {} µs",
+        resp.queue_us
+    );
+    busy.join().unwrap();
+    drop(client);
+    let stats = server.join();
+    assert_eq!(stats.requests, 1);
+    assert_eq!(stats.deadline_exceeded, 1);
+    assert_eq!(stats.class_deadline_exceeded[Priority::Interactive.idx()], 1);
+    assert_eq!(stats.class_deadline_exceeded[Priority::Standard.idx()], 0);
+}
+
+#[test]
+fn warm_estimator_sheds_hopeless_requests_before_enqueue() {
+    // Once the wait estimator has seen real batches, a request whose
+    // budget cannot even cover one service time is shed client-side:
+    // no queue slot, no compute, `shed` flagged with the reason.
+    let (client, server) = start(
+        Arc::new(EchoBackend {
+            seq: 2,
+            delay: Duration::from_millis(20),
+        }),
+        ServeCfg {
+            max_batch: 1,
+            max_wait: Duration::from_micros(50),
+            queue_depth: 16,
+            workers: 1,
+            ..ServeCfg::default()
+        },
+    );
+    // Warm the EWMA: three served batches at ~20 ms per request.
+    for i in 0..3u32 {
+        client.infer(vec![i, i + 1]).unwrap();
+    }
+    let resp = client
+        .try_infer_with(
+            0,
+            vec![9, 9],
+            RequestOpts {
+                class: Priority::Interactive,
+                deadline: Some(Duration::from_millis(5)),
+            },
+        )
+        .unwrap();
+    assert!(resp.shed, "5 ms budget vs ~20 ms service time: {resp:?}");
+    assert!(resp.error.as_deref().unwrap_or("").contains("shed"));
+    assert!(resp.logits.is_empty());
+    // A loose budget on the same warm server is admitted and served.
+    let ok = client
+        .try_infer_with(
+            0,
+            vec![4, 5],
+            RequestOpts {
+                class: Priority::Batch,
+                deadline: Some(Duration::from_millis(500)),
+            },
+        )
+        .unwrap();
+    assert!(ok.error.is_none(), "{ok:?}");
+    assert_eq!(ok.logits[0], 9.0);
+    drop(client);
+    let stats = server.join();
+    assert_eq!(stats.shed, 1);
+    assert_eq!(stats.class_shed[Priority::Interactive.idx()], 1);
+    assert_eq!(stats.class_submitted[Priority::Interactive.idx()], 1);
+    assert_eq!(stats.class_submitted[Priority::Batch.idx()], 1);
+    assert_eq!(stats.requests, 4, "shed request must not reach the backend");
+}
+
+#[test]
+fn stream_deadline_expiry_returns_partial_tokens() {
+    // Per-stream fallback path sibling of the engine-path unit test: a
+    // session outliving its deadline retires at the next sweep boundary
+    // with the tokens decoded so far.
+    let (client, server) = start(
+        Arc::new(PacedBackend {
+            step_cost: Duration::from_millis(2),
+            steps: Arc::new(AtomicUsize::new(0)),
+        }),
+        ServeCfg {
+            max_batch: 4,
+            max_wait: Duration::from_micros(100),
+            queue_depth: 16,
+            workers: 1,
+            ..ServeCfg::default()
+        },
+    );
+    let resp = client
+        .try_generate_with(
+            0,
+            vec![1],
+            100,
+            RequestOpts {
+                class: Priority::Standard,
+                deadline: Some(Duration::from_millis(30)),
+            },
+        )
+        .unwrap();
+    assert!(resp.deadline_exceeded, "{resp:?}");
+    assert!(
+        !resp.tokens.is_empty() && resp.tokens.len() < 100,
+        "expected a partial continuation, got {} tokens",
+        resp.tokens.len()
+    );
+    drop(client);
+    let stats = server.join();
+    assert_eq!(stats.deadline_exceeded, 1);
+    assert_eq!(stats.generated_tokens, 0, "partial tokens are not goodput");
+}
+
+#[test]
+fn bounded_submission_times_out_with_typed_overload() {
+    let (client, server) = start(
+        Arc::new(SlowTokenBackend { slow: 999, seq: 1 }),
+        ServeCfg {
+            max_batch: 1,
+            max_wait: Duration::from_micros(50),
+            queue_depth: 1,
+            workers: 1,
+            ..ServeCfg::default()
+        },
+    );
+    // Worker busy for 200 ms, then one request occupying the depth-1
+    // queue: the bounded push can only time out.
+    let slow = {
+        let c = client.clone();
+        std::thread::spawn(move || c.infer(vec![999]).unwrap())
+    };
+    std::thread::sleep(Duration::from_millis(20));
+    let filler = {
+        let c = client.clone();
+        std::thread::spawn(move || c.infer(vec![5]).unwrap())
+    };
+    std::thread::sleep(Duration::from_millis(20));
+    let t0 = Instant::now();
+    let err = client
+        .try_infer_for(vec![7], Duration::from_millis(10))
+        .unwrap_err();
+    let waited = t0.elapsed();
+    match err {
+        SubmitError::Overloaded { pending } => assert!(pending >= 1, "pending {pending}"),
+        SubmitError::Stopped => panic!("queue reported closed while the server was live"),
+    }
+    assert!(
+        waited >= Duration::from_millis(10) && waited < Duration::from_millis(150),
+        "bounded push did not respect its timeout: {waited:?}"
+    );
+    slow.join().unwrap();
+    filler.join().unwrap();
+    drop(client);
+    let stats = server.join();
+    assert_eq!(stats.requests, 2, "timed-out submission must not be served");
+}
+
+#[test]
+fn infer_retry_rides_out_a_transient_overload() {
+    let (client, server) = start(
+        Arc::new(SlowTokenBackend { slow: 999, seq: 1 }),
+        ServeCfg {
+            max_batch: 1,
+            max_wait: Duration::from_micros(50),
+            queue_depth: 1,
+            workers: 1,
+            ..ServeCfg::default()
+        },
+    );
+    // Same overload shape as above, but it clears after ~200 ms — a
+    // retrying client must land a later attempt and get the answer.
+    let slow = {
+        let c = client.clone();
+        std::thread::spawn(move || c.infer(vec![999]).unwrap())
+    };
+    std::thread::sleep(Duration::from_millis(20));
+    let filler = {
+        let c = client.clone();
+        std::thread::spawn(move || c.infer(vec![5]).unwrap())
+    };
+    std::thread::sleep(Duration::from_millis(20));
+    let resp = client
+        .infer_retry(0, vec![7], 40, Duration::from_millis(10))
+        .expect("retry should eventually land once the slow batch clears");
+    assert!(resp.error.is_none(), "{resp:?}");
+    assert_eq!(resp.logits[0], 7.0);
+    slow.join().unwrap();
+    filler.join().unwrap();
+    drop(client);
+    let stats = server.join();
+    assert_eq!(stats.requests, 3);
+}
+
+#[test]
+fn per_class_counters_track_offered_load() {
+    let (client, server) = start(
+        Arc::new(EchoBackend {
+            seq: 2,
+            delay: Duration::ZERO,
+        }),
+        ServeCfg::default(),
+    );
+    let interactive = RequestOpts {
+        class: Priority::Interactive,
+        deadline: None,
+    };
+    let batch = RequestOpts {
+        class: Priority::Batch,
+        deadline: None,
+    };
+    client.try_infer_with(0, vec![1, 2], interactive).unwrap();
+    client.try_infer_with(0, vec![3, 4], interactive).unwrap();
+    client.infer(vec![5, 6]).unwrap(); // plain calls count as Standard
+    for i in 0..3u32 {
+        client.try_infer_with(0, vec![i, i], batch).unwrap();
+    }
+    drop(client);
+    let stats = server.join();
+    assert_eq!(stats.class_submitted[Priority::Interactive.idx()], 2);
+    assert_eq!(stats.class_submitted[Priority::Standard.idx()], 1);
+    assert_eq!(stats.class_submitted[Priority::Batch.idx()], 3);
+    assert_eq!(stats.shed + stats.deadline_exceeded, 0);
+    assert_eq!(stats.worker_restarts, 0);
+    assert_eq!(stats.drain_us, 0, "join without drain must not stamp drain_us");
 }
