@@ -195,6 +195,44 @@ fn main() -> anyhow::Result<()> {
         );
     }
 
+    // Prefix sharing: generation traffic over a common system prompt.
+    // Each worker's radix K/V store lets every admission after the
+    // first borrow the prompt's K/V rows instead of re-prefilling them
+    // — the generation-side analogue of the response-cache line above
+    // (which can only reuse whole identical requests).
+    {
+        use dsee::nn::Transformer;
+        let gpt = Transformer::new(&ModelCfg::sim_gpt_s(), &mut rng);
+        let lm = Arc::new(gpt.compile(MergePolicy::Merged));
+        let (client, server) = start(
+            Arc::clone(&lm) as Arc<dyn Backend>,
+            ServeCfg {
+                max_batch: 8,
+                workers: 1,
+                cache_entries: 0,
+                ..ServeCfg::default()
+            },
+        );
+        let system: Vec<u32> = (0..16u32).map(|i| (i * 7 + 3) % 256).collect();
+        let n_gen = 32u32;
+        for r in 0..n_gen {
+            let mut prompt = system.clone();
+            prompt.push(100 + r); // unique user tail after the shared prefix
+            client.generate(prompt, 8).unwrap();
+        }
+        drop(client);
+        let stats = server.join();
+        println!(
+            "prefix cache:   {} hits / {} misses over {n_gen} generations, \
+             {} K/V rows reused, {} evictions\n",
+            stats.prefix_hits, stats.prefix_misses, stats.shared_rows_reused, stats.radix_evictions
+        );
+        anyhow::ensure!(
+            stats.prefix_hits == u64::from(n_gen) - 1,
+            "every generation after the first should borrow the system prompt"
+        );
+    }
+
     // Multi-tenant: one resident base + per-task deltas from the
     // adapter registry — N tenants from roughly one model's RAM,
     // request-routed by task id. Tenant 0 is the bare base; tenants

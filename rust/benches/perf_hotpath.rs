@@ -27,6 +27,11 @@
 //!   of 1, measured structurally via `resident_bytes`), mixed-vs-solo
 //!   decode parity, and the zero-allocation sweep assert extended to
 //!   mixed-adapter packing (also in `BENCH_decode.json`);
+//! * Shared-prefix prefill: 16 sessions over a common 64-token system
+//!   prompt, radix K/V store vs no-sharing baseline — hard asserts
+//!   that prefix-hit prefill is strictly cheaper than cold prefill and
+//!   that grouped shared-row sweeps stay zero-allocation (also in
+//!   `BENCH_decode.json`);
 //! * Continuous-batched decode serving: tokens/s at 1/4/16 concurrent
 //!   sessions and short-behind-long time-to-first-token, continuous
 //!   session interleaving vs the serial run-to-completion baseline
@@ -728,6 +733,120 @@ fn main() {
             println!("    → multi-adapter sweep steady-state heap allocations: {allocs}");
         }
 
+        println!("\n== shared-prefix prefill (radix K/V store) ==");
+        // 16 sessions over a common 64-token system prompt: the radix
+        // store prefills the prompt once, every later admission borrows
+        // its K/V rows and computes only the unique tail, and the sweep
+        // reads the shared rows once per group. The no-sharing baseline
+        // prefills all 65 rows per session. Hard bars (under --smoke
+        // too): token parity with solo decode, shared admission
+        // wall-clock strictly below baseline, and steady-state sweeps
+        // still zero-allocation with grouped shared-row attention.
+        let prefix_json = {
+            let pcfg = ModelCfg {
+                name: "SimGpt-S-96".into(),
+                max_seq: 96,
+                ..ModelCfg::sim_gpt_s()
+            };
+            let mut pm = Transformer::new(&pcfg, &mut rng);
+            attach_dsee(
+                &mut pm,
+                &DseeCfg {
+                    rank: 4,
+                    n_sparse: 64,
+                    ..DseeCfg::default()
+                },
+                &mut rng,
+            );
+            let pim = pm.compile(MergePolicy::Merged);
+            let sessions = 16usize;
+            let sys: Vec<u32> = (0..64).map(|i| ((i * 13 + 7) % 256) as u32).collect();
+            let prompts: Vec<Vec<u32>> = (0..sessions)
+                .map(|c| {
+                    let mut p = sys.clone();
+                    p.push((100 + c) as u32); // unique user tail
+                    p
+                })
+                .collect();
+            let p_new = 16usize;
+            let cap = pim.cfg.max_seq;
+            let budget_rows = 4 * sessions * cap;
+            // Token parity first, outside the timed loops: shared
+            // admissions must decode bit-identically to solo runs.
+            let solo: Vec<Vec<u32>> = prompts
+                .iter()
+                .map(|p| pim.generate_greedy(p, p_new, cap).unwrap())
+                .collect();
+            {
+                let mut eng = DecodeEngine::new_shared(&pim, sessions, budget_rows);
+                let slots: Vec<usize> = prompts
+                    .iter()
+                    .map(|p| eng.admit(p, p_new, cap).unwrap())
+                    .collect();
+                while slots.iter().any(|&s| !eng.is_done(s)) {
+                    eng.sweep();
+                }
+                let got: Vec<Vec<u32>> = slots.iter().map(|&s| eng.release(s)).collect();
+                assert_eq!(got, solo, "shared-prefix decode diverged from solo");
+                let kv = eng.kv_stats().unwrap();
+                assert_eq!(kv.hits, sessions as u64 - 1, "all but the first must hit");
+                assert_eq!(kv.rows_reused, ((sessions - 1) * sys.len()) as u64);
+            }
+            let t_base = bench("prefill 16×(64 shared + 1) no sharing ", 2, 10, || {
+                let mut eng = DecodeEngine::new(&pim, sessions);
+                for p in &prompts {
+                    black_box(eng.admit(p, p_new, cap).unwrap());
+                }
+            });
+            let t_shared = bench("prefill 16×(64 shared + 1) radix store", 2, 10, || {
+                let mut eng = DecodeEngine::new_shared(&pim, sessions, budget_rows);
+                for p in &prompts {
+                    black_box(eng.admit(p, p_new, cap).unwrap());
+                }
+            });
+            println!(
+                "    → prefill {:.2} ms baseline vs {:.2} ms shared: {:.2}×",
+                t_base.mean_s * 1e3,
+                t_shared.mean_s * 1e3,
+                t_base.mean_s / t_shared.mean_s
+            );
+            assert!(
+                t_shared.mean_s < t_base.mean_s,
+                "prefix-hit prefill must do strictly less work than cold prefill: \
+                 shared {:.3} ms vs baseline {:.3} ms",
+                t_shared.mean_s * 1e3,
+                t_base.mean_s * 1e3
+            );
+            // Zero-allocation sweeps hold with grouped shared rows: the
+            // score/denominator scratch is engine-owned and the shared
+            // K/V is read through borrowed spans, never copied.
+            let mut eng = DecodeEngine::new_shared(&pim, sessions, budget_rows);
+            for p in &prompts {
+                eng.admit(p, p_new, cap).unwrap();
+            }
+            for _ in 0..2 {
+                eng.sweep(); // warmup: shared scratch reaches steady size
+            }
+            let before = ALLOC_COUNT.load(Ordering::SeqCst);
+            for _ in 0..4 {
+                eng.sweep();
+            }
+            let allocs = ALLOC_COUNT.load(Ordering::SeqCst) - before;
+            assert_eq!(
+                allocs, 0,
+                "shared-prefix sweep allocated {allocs}× in steady state"
+            );
+            println!("    → shared-prefix sweep steady-state heap allocations: {allocs}");
+            Json::obj(vec![
+                ("sessions", Json::num(sessions as f64)),
+                ("system_prompt_tokens", Json::num(sys.len() as f64)),
+                ("baseline_prefill_ms", Json::num(t_base.mean_s * 1e3)),
+                ("shared_prefill_ms", Json::num(t_shared.mean_s * 1e3)),
+                ("prefill_speedup", Json::num(t_base.mean_s / t_shared.mean_s)),
+                ("kv_rows_reused", Json::num(((sessions - 1) * sys.len()) as f64)),
+            ])
+        };
+
         println!("\n== SLO overload (admission shedding) ==");
         // Deliberate overload of the serving path: one worker, 2 ms of
         // compute per request (max_batch 1), a 10 ms interactive
@@ -894,6 +1013,7 @@ fn main() {
             ("smoke", Json::Bool(smoke_mode())),
             ("scenarios", Json::Arr(decode_scenarios)),
             ("adapter_scenarios", Json::Arr(adapter_scenarios)),
+            ("prefix", prefix_json),
             ("overload", overload_json),
         ]);
         std::fs::write("BENCH_decode.json", doc.pretty()).expect("write BENCH_decode.json");

@@ -240,6 +240,13 @@ pub trait FusedDecode {
     fn n_live(&self) -> usize;
     /// Total slot count.
     fn capacity(&self) -> usize;
+    /// Cumulative counters of the engine's prefix K/V store, or `None`
+    /// when the engine does not share prefixes. Point-in-time totals
+    /// over the store's lifetime — the worker folds them into
+    /// [`ServeStats`] once per engine, never per sweep.
+    fn kv_stats(&self) -> Option<crate::infer::KvStoreStats> {
+        None
+    }
 }
 
 impl FusedDecode for crate::infer::decode::DecodeEngine<'_> {
@@ -266,6 +273,18 @@ impl FusedDecode for crate::infer::decode::DecodeEngine<'_> {
     fn capacity(&self) -> usize {
         crate::infer::decode::DecodeEngine::capacity(self)
     }
+    fn kv_stats(&self) -> Option<crate::infer::KvStoreStats> {
+        crate::infer::decode::DecodeEngine::kv_stats(self)
+    }
+}
+
+/// Worker-local prefix-store budget: resident rows for roughly four
+/// full-length prefixes per engine slot. Generous enough that a shared
+/// system prompt plus per-slot divergent tails stay resident, small
+/// enough that an adversarial mix of distinct prompts cannot pin
+/// unbounded K/V — LRU eviction reclaims cold paths past this.
+fn kv_budget_rows(m: &InferenceModel, capacity: usize) -> usize {
+    4 * capacity * (m.n_prefix() + m.cfg.max_seq)
 }
 
 /// One in-flight generation advanced incrementally by a worker's
@@ -348,8 +367,10 @@ impl Backend for InferenceModel {
         if !self.supports_decode() {
             return None;
         }
-        Some(Box::new(crate::infer::decode::DecodeEngine::new(
-            self, capacity,
+        Some(Box::new(crate::infer::decode::DecodeEngine::new_shared(
+            self,
+            capacity,
+            kv_budget_rows(self, capacity),
         )))
     }
 }
@@ -424,7 +445,11 @@ impl Backend for MultiTenantBackend {
             return None;
         }
         Some(Box::new(TenantEngine {
-            eng: crate::infer::decode::DecodeEngine::new(m, capacity),
+            eng: crate::infer::decode::DecodeEngine::new_shared(
+                m,
+                capacity,
+                kv_budget_rows(m, capacity),
+            ),
             registry: &self.registry,
         }))
     }
@@ -472,6 +497,9 @@ impl FusedDecode for TenantEngine<'_> {
     }
     fn capacity(&self) -> usize {
         self.eng.capacity()
+    }
+    fn kv_stats(&self) -> Option<crate::infer::KvStoreStats> {
+        self.eng.kv_stats()
     }
 }
 
@@ -1342,6 +1370,16 @@ pub struct ServeStats {
     pub cache_invalidations: usize,
     /// Tokens emitted by successful `Generate` requests.
     pub generated_tokens: usize,
+    /// Prefix-cache lookups that borrowed at least one shared K/V row
+    /// ([`crate::infer::KvStore`] radix hits, summed over workers).
+    pub prefix_hits: u64,
+    /// Prefix-cache lookups that prefilled from scratch.
+    pub prefix_misses: u64,
+    /// K/V rows borrowed from the prefix cache instead of recomputed —
+    /// each one is a full attention row of prefill work saved.
+    pub shared_rows_reused: u64,
+    /// Radix nodes evicted by LRU budget pressure.
+    pub radix_evictions: u64,
     /// Adapters resident in the backend's registry at join (excluding
     /// the base; 0 for single-tenant backends).
     pub resident_adapters: usize,
@@ -1414,6 +1452,10 @@ impl ServeStats {
         self.cache_misses += other.cache_misses;
         self.cache_invalidations += other.cache_invalidations;
         self.generated_tokens += other.generated_tokens;
+        self.prefix_hits += other.prefix_hits;
+        self.prefix_misses += other.prefix_misses;
+        self.shared_rows_reused += other.shared_rows_reused;
+        self.radix_evictions += other.radix_evictions;
         self.resident_adapters += other.resident_adapters;
         self.adapter_swaps += other.adapter_swaps;
         self.adapter_evictions += other.adapter_evictions;
@@ -1735,7 +1777,11 @@ fn worker_loop(
         if live.is_empty() && elive.is_empty() && waiting.is_empty() {
             // Idle: block for work, exactly like the plain batcher.
             let Some((first, was_stolen)) = queue.pop_first(me) else {
-                return; // closed and drained, no sessions in flight
+                // Closed and drained, no sessions in flight: fold the
+                // engine's lifetime prefix-cache counters in on the way
+                // out (the only other harvest point is engine rebuild).
+                harvest_kv_stats(engine.as_deref(), stats);
+                return;
             };
             if was_stolen {
                 stats.stolen += 1;
@@ -2135,6 +2181,10 @@ fn worker_loop(
                             ..Response::default()
                         });
                     }
+                    // The replacement engine starts a fresh, zeroed
+                    // prefix store — harvest the old one's counters
+                    // before they are dropped with it.
+                    harvest_kv_stats(engine.as_deref(), stats);
                     engine = be.begin_engine(max_sessions);
                 }
             }
@@ -2260,6 +2310,23 @@ fn abort_for_drain<'a>(
             p.enqueued.elapsed().as_micros() as u64,
         ));
     }
+}
+
+/// Fold a retiring engine's prefix-cache counters into the worker's
+/// stats. [`crate::infer::KvStoreStats`] totals are cumulative over the
+/// store's lifetime, so this runs exactly once per engine — at worker
+/// exit, or just before a mid-sweep panic replaces the engine — never
+/// per iteration (that would double-count). An engine lost to an
+/// uncontained worker panic under-reports; supervision restarts are
+/// counted separately in `worker_restarts`.
+fn harvest_kv_stats(engine: Option<&dyn FusedDecode>, stats: &mut ServeStats) {
+    let Some(kv) = engine.and_then(|e| e.kv_stats()) else {
+        return;
+    };
+    stats.prefix_hits += kv.hits;
+    stats.prefix_misses += kv.misses;
+    stats.shared_rows_reused += kv.rows_reused;
+    stats.radix_evictions += kv.evictions;
 }
 
 /// A trivially checkable backend for tests: logits = [sum(ids), batch].

@@ -29,6 +29,14 @@
 //! for. Tombstoned (unloaded) tasks keep their epoch so a later
 //! re-load can never resurrect pre-eviction cache entries.
 //!
+//! The same `(task, epoch)` pair keys the prefix K/V cache
+//! ([`crate::infer::KvStore`] roots one radix tree per pair): K/V rows
+//! depend on the adapter's attention deltas and prefix rows, so a swap
+//! that re-used task-keyed trees would let a new adapter attend over a
+//! predecessor's K/V. Bumping the epoch strands the old tree instead —
+//! unreachable to new admissions, LRU-evicted once its borrowers
+//! retire.
+//!
 //! Semantics notes, load-bearing for the parity suite:
 //! * Attached models apply gates explicitly to the value rows
 //!   (`g·(attn·v) ≡ attn·(g·v)`) instead of folding them into the

@@ -158,11 +158,55 @@
 //! bit-identical to solo runs — the same structural argument as
 //! single-model fusion, and the sweep still allocates nothing in
 //! steady state (`groups` is pre-reserved to capacity).
+//!
+//! ## Prefix sharing: the radix K/V store ([`super::radix`])
+//!
+//! At production traffic most prompts repeat long prefixes (system
+//! prompts, few-shot templates, chat history), and the FNV-1a affinity
+//! routing already lands identical prefixes on the same worker. A
+//! worker-local [`super::radix::KvStore`] indexes committed prompt
+//! prefixes by token id, each trie node owning an immutable, refcounted
+//! span of per-block K/V rows; trees are keyed `(task, adapter epoch)`
+//! so an adapter swap can never alias stale rows onto new weights.
+//! Admission becomes **lookup-then-extend**
+//! ([`InferenceModel::prefill_shared`], or the engine's admit paths on
+//! a [`DecodeEngine::new_shared`] engine): walk the trie, *borrow* the
+//! longest matching prefix's rows outright — zero recompute — and
+//! prefill only the unshared suffix. The session records the split as
+//! `shared_rows`: its private cache holds only rows
+//! `shared_rows..cap`, so sharing also lifts the sessions-per-GB
+//! ceiling, and [`DecodeSession::decode_step`] appends strictly to the
+//! private tail. Divergence is **copy-on-extend**: borrowed spans are
+//! never written (publication hands out `Arc`s only — no `&mut` path
+//! exists), the diverging suffix lands in private rows and is copied
+//! into a fresh trie leaf on commit, while splitting an existing edge
+//! just re-views the same buffer. Pool interaction is structural:
+//! span buffers come from the same thread-local pool as session
+//! caches, and return there exactly once — when the *last* `Arc`
+//! (index entry or borrowing session) drops — so a borrower dropping
+//! mid-generation can never recycle rows a sibling still attends over.
+//!
+//! Per-row arithmetic is pinned to be identical either side of the
+//! split: the row-oriented prefill and the solo step share
+//! [`attend_row`], whose position order (shared segments ascending,
+//! then the private tail) degenerates to the historical private loop
+//! when no rows are shared — so rows computed by one session and
+//! borrowed by another are bit-identical to the rows the borrower
+//! would have computed itself, and shared-prefix generation is
+//! token-exact vs. private generation by construction. Fused sweeps
+//! exploit the same structure: active rows are sorted by
+//! `(model, shared group)` and each run of sessions borrowing
+//! identical spans reduces its shared attention scores/context with
+//! **one read of the shared K/V per head for the whole run**
+//! (j-outer, members-inner), private ragged tails per member —
+//! closing the "attention is the one per-session loop left" note
+//! above. See `docs/PREFIX_CACHE.md` for the operational story.
 
-use super::{InferBlock, InferHead, InferLinear, InferenceModel};
+use super::radix::{KvStore, KvStoreStats, SharedPrefix, SharedSeg};
+use super::{InferAttention, InferBlock, InferHead, InferLinear, InferenceModel};
 use crate::data::vocab::EOS;
+use crate::tensor::gelu_scalar;
 use crate::tensor::linalg::dot;
-use crate::tensor::{gelu_scalar, Tensor};
 use std::cell::RefCell;
 use std::sync::Arc;
 
@@ -220,7 +264,7 @@ thread_local! {
     });
 }
 
-fn kv_acquire(len: usize) -> Vec<f32> {
+pub(crate) fn kv_acquire(len: usize) -> Vec<f32> {
     KV_POOL.with(|p| {
         let mut p = p.borrow_mut();
         match p.free.pop() {
@@ -238,7 +282,7 @@ fn kv_acquire(len: usize) -> Vec<f32> {
     })
 }
 
-fn kv_release(buf: Vec<f32>) {
+pub(crate) fn kv_release(buf: Vec<f32>) {
     KV_POOL.with(|p| {
         let mut p = p.borrow_mut();
         if p.free.len() < KV_POOL_MAX_BUFS {
@@ -377,6 +421,53 @@ impl DecodeScratch {
     }
 }
 
+/// Prefill-time scratch: the [`DecodeScratch`] buffers widened to `n`
+/// packed rows (one per unshared prompt position), plus one score row
+/// sized to the widest attention row the prefill can reach. Allocated
+/// per `prefill` call — prefill is the once-per-request path, only
+/// `decode_step`/`sweep` are allocation-free.
+struct SeqScratch {
+    h: Vec<f32>,
+    q: Vec<f32>,
+    k: Vec<f32>,
+    v: Vec<f32>,
+    ctx: Vec<f32>,
+    scores: Vec<f32>,
+    attn_out: Vec<f32>,
+    x2: Vec<f32>,
+    hmid: Vec<f32>,
+    ffn_out: Vec<f32>,
+    adapter_mid: Vec<f32>,
+    lowrank: Vec<f32>,
+}
+
+impl SeqScratch {
+    fn for_model(m: &InferenceModel, n: usize, rows_max: usize) -> SeqScratch {
+        let ModelDims {
+            d,
+            width,
+            ffn,
+            admid,
+            rank,
+            ..
+        } = model_dims(m);
+        SeqScratch {
+            h: vec![0.0; n * d],
+            q: vec![0.0; n * width],
+            k: vec![0.0; n * width],
+            v: vec![0.0; n * width],
+            ctx: vec![0.0; n * width],
+            scores: vec![0.0; rows_max],
+            attn_out: vec![0.0; n * d],
+            x2: vec![0.0; n * d],
+            hmid: vec![0.0; n * ffn],
+            ffn_out: vec![0.0; n * d],
+            adapter_mid: Vec::with_capacity(n * admid),
+            lowrank: Vec::with_capacity(n * rank),
+        }
+    }
+}
+
 /// One in-flight autoregressive sequence over a compiled model:
 /// created by [`InferenceModel::prefill`] /
 /// [`InferenceModel::prefill_bounded`], advanced one token at a time by
@@ -407,6 +498,40 @@ pub struct DecodeSession {
     /// [`EngineScratch`] does that work), so they never pay for — or
     /// hold — a private scratch set at all.
     scratch: Option<DecodeScratch>,
+    /// Borrowed shared-prefix rows (trie-owned, immutable, pinned for
+    /// this session's lifetime) — `None` for fully private sessions.
+    shared: Option<SharedPrefix>,
+    /// Attention positions covered by `shared` (prefix rows + matched
+    /// prompt tokens). The private K/V caches hold only positions
+    /// `shared_rows..cap`: private cache row `r` is attention position
+    /// `shared_rows + r`.
+    shared_rows: usize,
+}
+
+impl DecodeSession {
+    /// Attention rows this session borrows from a radix store (0 for
+    /// private sessions).
+    pub(crate) fn shared_rows(&self) -> usize {
+        self.shared_rows
+    }
+
+    pub(crate) fn n_kv_layers(&self) -> usize {
+        self.kv.len()
+    }
+
+    /// One layer's private K/V rows `[lo, hi)` (private-row indices,
+    /// i.e. relative to the shared/private split) plus the layer width
+    /// — the copy-out source for [`KvStore::insert`].
+    pub(crate) fn export_rows(
+        &self,
+        layer: usize,
+        lo: usize,
+        hi: usize,
+    ) -> (&[f32], &[f32], usize) {
+        let kvl = &self.kv[layer];
+        let w = kvl.width;
+        (&kvl.k[lo * w..hi * w], &kvl.v[lo * w..hi * w], w)
+    }
 }
 
 impl Drop for DecodeSession {
@@ -449,6 +574,44 @@ impl InferenceModel {
     /// meaningless when earlier positions attend to later ones) and the
     /// prompt is non-empty and within `max_seq`.
     pub fn prefill_bounded(&self, ids: &[u32], max_new: usize) -> DecodeSession {
+        self.prefill_impl(ids, max_new, None)
+    }
+
+    /// Lookup-then-extend prefill against a worker-local radix store:
+    /// borrow the longest matching `(task, epoch)` prefix from `store`
+    /// (zero recompute for the matched rows), prefill only the unshared
+    /// suffix, and commit that suffix back to the trie (copy-on-extend)
+    /// so later siblings can borrow it. The returned session generates
+    /// token-exactly like one from [`Self::prefill_bounded`] — borrowed
+    /// rows are bit-identical to privately computed ones (see the
+    /// module docs).
+    ///
+    /// Errors only if the commit fails; the store is untouched then.
+    pub fn prefill_shared(
+        &self,
+        store: &mut KvStore,
+        task: u32,
+        epoch: u64,
+        ids: &[u32],
+        max_new: usize,
+    ) -> crate::Result<DecodeSession> {
+        let shared = store.lookup(task, epoch, self.n_prefix(), ids);
+        let sess = self.prefill_impl(ids, max_new, shared);
+        store.insert(task, epoch, self.n_prefix(), ids, &sess)?;
+        Ok(sess)
+    }
+
+    /// The prefill worker: `shared`, when present, is a borrow of
+    /// attention rows `0..shared.rows` (soft-prefix rows plus a prompt
+    /// prefix strictly shorter than `ids`) obtained from a
+    /// [`KvStore::lookup`] over these exact `ids`. Only the remaining
+    /// rows are embedded and run through the blocks.
+    pub(crate) fn prefill_impl(
+        &self,
+        ids: &[u32],
+        max_new: usize,
+        shared: Option<SharedPrefix>,
+    ) -> DecodeSession {
         assert!(
             self.supports_decode(),
             "prefill: incremental decoding needs a causal LM model"
@@ -468,41 +631,82 @@ impl InferenceModel {
         let cap = p + cap_tokens;
         let eff_seq = p + seq;
 
+        // Normalize an empty borrow to a fully private prefill; a real
+        // borrow covers the soft-prefix rows and leaves at least the
+        // last prompt token to compute (the session must own the rows
+        // behind its `last_logits`).
+        let (shared, shared_rows) = match shared {
+            Some(sp) if sp.rows > 0 => {
+                debug_assert!(
+                    sp.rows >= p && sp.rows < eff_seq,
+                    "shared prefix of {} rows out of range for prefix {p} + prompt {seq}",
+                    sp.rows
+                );
+                let rows = sp.rows;
+                (Some(sp), rows)
+            }
+            _ => (None, 0),
+        };
+        let n_new = eff_seq - shared_rows;
+        let priv_cap = cap - shared_rows;
+
         let mut kv: Vec<LayerKv> = self
             .blocks
             .iter()
             .map(|blk| {
                 let width = blk.attn.n_heads * blk.attn.head_dim;
                 LayerKv {
-                    k: kv_acquire(cap * width),
-                    v: kv_acquire(cap * width),
+                    k: kv_acquire(priv_cap * width),
+                    v: kv_acquire(priv_cap * width),
                     width,
                 }
             })
             .collect();
 
-        // Prefix rows + token/position embeddings, batch = 1.
-        let mut x = Tensor::zeros(&[eff_seq, d]);
-        if let Some(pref) = &self.prefix {
-            x.data[..p * d].copy_from_slice(&pref.data[..p * d]);
-        }
-        for (s, &id) in ids.iter().enumerate() {
-            let t = id as usize;
-            assert!(t < vocab, "token id {t} out of vocab ({vocab})");
-            let dst = &mut x.data[(p + s) * d..(p + s + 1) * d];
-            let tsrc = &self.tok.data[t * d..(t + 1) * d];
-            let psrc = &self.pos.data[s * d..(s + 1) * d];
-            for j in 0..d {
-                dst[j] = tsrc[j] + psrc[j];
+        // Embed the unshared rows: soft-prefix vectors for global rows
+        // `< p` (only reached on a store miss / private prefill), then
+        // token + position sums.
+        let mut xs = vec![0.0f32; n_new * d];
+        for r in 0..n_new {
+            let g = shared_rows + r;
+            let dst = &mut xs[r * d..(r + 1) * d];
+            if g < p {
+                let pref = self.prefix.as_ref().expect("n_prefix > 0 without prefix rows");
+                dst.copy_from_slice(&pref.data[g * d..(g + 1) * d]);
+            } else {
+                let s = g - p;
+                let t = ids[s] as usize;
+                assert!(t < vocab, "token id {t} out of vocab ({vocab})");
+                let tsrc = &self.tok.data[t * d..(t + 1) * d];
+                let psrc = &self.pos.data[s * d..(s + 1) * d];
+                for j in 0..d {
+                    dst[j] = tsrc[j] + psrc[j];
+                }
             }
         }
 
-        for (blk, layer) in self.blocks.iter().zip(kv.iter_mut()) {
-            x = blk.prefill(&x, eff_seq, layer);
+        // Row-oriented prefill: batched projections + the per-row
+        // attention loop, identical per row to the solo decode step.
+        // Prefill is the once-per-request path — allocating the
+        // sequence scratch here is fine.
+        let mut scratch = SeqScratch::for_model(self, n_new, eff_seq);
+        let segs: &[SharedSeg] = shared.as_ref().map_or(&[], |sp| &sp.segs);
+        for (layer, blk) in self.blocks.iter().enumerate() {
+            blk.prefill_rows(
+                &mut xs,
+                n_new,
+                d,
+                segs,
+                shared_rows,
+                layer,
+                &mut kv[layer],
+                0,
+                &mut scratch,
+            );
         }
 
         // Only the last position's logits are needed for decoding.
-        let h_last = self.ln_f.apply_row(&x.data[(eff_seq - 1) * d..eff_seq * d]);
+        let h_last = self.ln_f.apply_row(&xs[(n_new - 1) * d..n_new * d]);
         let InferHead::Lm(lm) = &self.head else { unreachable!() };
         let last_logits = lm.forward_row(&h_last);
 
@@ -515,6 +719,8 @@ impl InferenceModel {
             row: vec![0.0; d],
             row_next: vec![0.0; d],
             scratch: None,
+            shared,
+            shared_rows,
         }
     }
 
@@ -698,8 +904,21 @@ impl DecodeSession {
         let scratch = self
             .scratch
             .get_or_insert_with(|| DecodeScratch::for_model(m, p_cap));
-        for (blk, layer) in m.blocks.iter().zip(self.kv.iter_mut()) {
-            blk.decode_row_into(&self.row, &mut self.row_next, layer, self.pos, scratch);
+        // The new row appends to the private tail: position `pos` is
+        // private cache row `pos - shared_rows`.
+        let segs: &[SharedSeg] = self.shared.as_ref().map_or(&[], |sp| &sp.segs[..]);
+        let priv_pos = self.pos - self.shared_rows;
+        for (layer, (blk, kvl)) in m.blocks.iter().zip(self.kv.iter_mut()).enumerate() {
+            blk.decode_row_into(
+                &self.row,
+                &mut self.row_next,
+                kvl,
+                layer,
+                segs,
+                self.shared_rows,
+                priv_pos,
+                scratch,
+            );
             std::mem::swap(&mut self.row, &mut self.row_next);
         }
         let DecodeScratch { h, lowrank, .. } = scratch;
@@ -713,35 +932,133 @@ impl DecodeSession {
 }
 
 impl InferBlock {
-    /// Batched (batch = 1) block forward that records this block's K/V
-    /// rows into the cache. This *is* the batched implementation
-    /// (`forward_capture` with a capture target) — the causal mask is
-    /// applied because decode models are causal by the
-    /// [`InferenceModel::supports_decode`] gate — so prefill parity is
-    /// the batched path's parity by construction, not by duplication.
-    fn prefill(&self, x: &Tensor, seq: usize, kv: &mut LayerKv) -> Tensor {
+    /// Row-oriented block prefill over `n` packed rows: batched `_rows`
+    /// projections (each bit-identical per row to its single-row form —
+    /// pinned by the kernel parity tests) plus the same per-row causal
+    /// attention loop as the solo step ([`attend_row`]), appending all
+    /// `n` K/V rows at private positions `base_priv..base_priv + n`.
+    /// Row `r` attends over the shared segments plus private rows
+    /// `0..=base_priv + r` — the causal mask by construction. Because
+    /// every row runs the exact solo-step arithmetic, the K/V rows this
+    /// writes are bit-identical to the rows a `decode_step` at that
+    /// position would write — which is what lets the radix store hand
+    /// one session's prefill rows to another with zero recompute.
+    ///
+    /// `xs` (`[n, d]`) holds the block input and is overwritten with
+    /// the block output.
+    #[allow(clippy::too_many_arguments)]
+    fn prefill_rows(
+        &self,
+        xs: &mut [f32],
+        n: usize,
+        d: usize,
+        segs: &[SharedSeg],
+        shared_rows: usize,
+        layer: usize,
+        kv: &mut LayerKv,
+        base_priv: usize,
+        s: &mut SeqScratch,
+    ) {
+        let SeqScratch {
+            h,
+            q,
+            k,
+            v,
+            ctx,
+            scores,
+            attn_out,
+            x2,
+            hmid,
+            ffn_out,
+            adapter_mid,
+            lowrank,
+        } = s;
         let width = kv.width;
-        self.forward_capture(
-            x,
-            1,
-            seq,
-            Some((&mut kv.k[..seq * width], &mut kv.v[..seq * width])),
-        )
+
+        self.ln1.apply_rows_into(&xs[..n * d], &mut h[..n * d], n);
+        self.attn
+            .wq
+            .forward_rows_into(&h[..n * d], &mut q[..n * width], n, lowrank);
+        self.attn
+            .wk
+            .forward_rows_into(&h[..n * d], &mut k[..n * width], n, lowrank);
+        self.attn
+            .wv
+            .forward_rows_into(&h[..n * d], &mut v[..n * width], n, lowrank);
+        // Per-head gates before the cache append — cached V rows are
+        // gated exactly once, like the solo step.
+        self.attn.gate_value_rows(&mut v[..n * width]);
+        for r in 0..n {
+            let at = (base_priv + r) * width;
+            kv.k[at..at + width].copy_from_slice(&k[r * width..(r + 1) * width]);
+            kv.v[at..at + width].copy_from_slice(&v[r * width..(r + 1) * width]);
+        }
+        for r in 0..n {
+            attend_row(
+                &self.attn,
+                layer,
+                &q[r * width..(r + 1) * width],
+                segs,
+                shared_rows,
+                kv,
+                base_priv + r + 1,
+                scores,
+                &mut ctx[r * width..(r + 1) * width],
+            );
+        }
+
+        self.attn
+            .wo
+            .forward_rows_into(&ctx[..n * width], &mut attn_out[..n * d], n, lowrank);
+        let a_src: &[f32] = if let Some(ad) = &self.adapter1 {
+            // h is dead after the Q/K/V projections — reuse it for the
+            // adapter output, like the solo step does.
+            ad.forward_rows_into(&attn_out[..n * d], &mut h[..n * d], n, adapter_mid, lowrank);
+            &h[..n * d]
+        } else {
+            &attn_out[..n * d]
+        };
+        for (o, (&xv, &av)) in x2[..n * d].iter_mut().zip(xs[..n * d].iter().zip(a_src)) {
+            *o = xv + av;
+        }
+
+        self.ln2.apply_rows_into(&x2[..n * d], &mut h[..n * d], n);
+        let f_dim = self.fc1.out_dim();
+        self.fc1
+            .forward_rows_into(&h[..n * d], &mut hmid[..n * f_dim], n, lowrank);
+        for vmid in hmid[..n * f_dim].iter_mut() {
+            *vmid = gelu_scalar(*vmid);
+        }
+        self.fc2
+            .forward_rows_into(&hmid[..n * f_dim], &mut ffn_out[..n * d], n, lowrank);
+        let f_src: &[f32] = if let Some(ad) = &self.adapter2 {
+            ad.forward_rows_into(&ffn_out[..n * d], &mut h[..n * d], n, adapter_mid, lowrank);
+            &h[..n * d]
+        } else {
+            &ffn_out[..n * d]
+        };
+        for (o, (&rv, &fv)) in xs[..n * d].iter_mut().zip(x2[..n * d].iter().zip(f_src)) {
+            *o = rv + fv;
+        }
     }
 
-    /// Single-row block step at attention position `pos`: project the
-    /// new row, append its K/V to the cache, attend over rows
-    /// `0..=pos`, and run the FFN — all through the `_into` single-row
-    /// kernels against the session's scratch, so the step allocates
-    /// nothing. `x` is the incoming row, `out` (same length) receives
-    /// the block output.
+    /// Single-row block step: project the new row, append its K/V at
+    /// private cache row `priv_pos`, attend over the shared segments
+    /// plus private rows `0..=priv_pos` ([`attend_row`]), and run the
+    /// FFN — all through the `_into` single-row kernels against the
+    /// session's scratch, so the step allocates nothing. `x` is the
+    /// incoming row, `out` (same length) receives the block output.
     // lint: hot-path
+    #[allow(clippy::too_many_arguments)]
     fn decode_row_into(
         &self,
         x: &[f32],
         out: &mut [f32],
         kv: &mut LayerKv,
-        pos: usize,
+        layer: usize,
+        segs: &[SharedSeg],
+        shared_rows: usize,
+        priv_pos: usize,
         scratch: &mut DecodeScratch,
     ) {
         let DecodeScratch {
@@ -759,7 +1076,6 @@ impl InferBlock {
             lowrank,
         } = scratch;
         let width = kv.width;
-        let hd = self.attn.head_dim;
         let d = x.len();
 
         self.ln1.apply_row_into(x, &mut h[..d]);
@@ -768,39 +1084,22 @@ impl InferBlock {
         self.attn.wv.forward_row_into(&h[..d], &mut v[..width], lowrank);
         // Per-head gates (attached-adapter models only; no-op when
         // folded): applied before the cache append so cached V rows are
-        // gated exactly once, mirroring `forward_capture`.
+        // gated exactly once, mirroring the batched forward.
         self.attn.gate_value_rows(&mut v[..width]);
-        kv.k[pos * width..(pos + 1) * width].copy_from_slice(&k[..width]);
-        kv.v[pos * width..(pos + 1) * width].copy_from_slice(&v[..width]);
+        kv.k[priv_pos * width..(priv_pos + 1) * width].copy_from_slice(&k[..width]);
+        kv.v[priv_pos * width..(priv_pos + 1) * width].copy_from_slice(&v[..width]);
 
-        let n = pos + 1; // attend over everything cached, self included
-        let rscale = 1.0 / (hd as f32).sqrt();
-        ctx[..width].fill(0.0);
-        let scores = &mut scores[..n];
-        for hh in 0..self.attn.n_heads {
-            let qh = &q[hh * hd..(hh + 1) * hd];
-            for (j, s) in scores.iter_mut().enumerate() {
-                let krow = &kv.k[j * width + hh * hd..j * width + hh * hd + hd];
-                *s = dot(qh, krow) * rscale;
-            }
-            let mx = scores.iter().fold(f32::NEG_INFINITY, |m, &s| m.max(s));
-            let mut denom = 0.0f32;
-            for s in scores.iter_mut() {
-                *s = (*s - mx).exp();
-                denom += *s;
-            }
-            let ctx_h = &mut ctx[hh * hd..(hh + 1) * hd];
-            for (j, &s) in scores.iter().enumerate() {
-                let a = s / denom;
-                if a == 0.0 {
-                    continue;
-                }
-                let vrow = &kv.v[j * width + hh * hd..j * width + hh * hd + hd];
-                for (c, &vv) in ctx_h.iter_mut().zip(vrow) {
-                    *c += a * vv;
-                }
-            }
-        }
+        attend_row(
+            &self.attn,
+            layer,
+            &q[..width],
+            segs,
+            shared_rows,
+            kv,
+            priv_pos + 1, // attend over everything cached, self included
+            scores,
+            &mut ctx[..width],
+        );
 
         self.attn
             .wo
@@ -838,6 +1137,91 @@ impl InferBlock {
     }
 }
 
+/// Causal attention for one query row over a session's cached rows:
+/// the borrowed shared segments first (attention positions
+/// `0..shared_rows`, in segment order), then the session's private rows
+/// `0..priv_rows`. With no shared segments this is exactly the
+/// historical private loop — score each position, streaming max,
+/// exp/normalize, context accumulate, all in ascending position order —
+/// and *with* them the per-position arithmetic and its order are
+/// unchanged, so borrowed-vs-private attention is bit-identical (the
+/// parity the radix store's zero-recompute borrow rests on).
+///
+/// `scores` must hold `shared_rows + priv_rows` values; `ctx` is one
+/// `[width]` context row, zeroed here.
+// lint: hot-path
+#[allow(clippy::too_many_arguments)]
+fn attend_row(
+    attn: &InferAttention,
+    layer: usize,
+    q: &[f32],
+    segs: &[SharedSeg],
+    shared_rows: usize,
+    kv: &LayerKv,
+    priv_rows: usize,
+    scores: &mut [f32],
+    ctx: &mut [f32],
+) {
+    let width = kv.width;
+    let hd = attn.head_dim;
+    let rscale = 1.0 / (hd as f32).sqrt();
+    let rows = shared_rows + priv_rows;
+    ctx.fill(0.0);
+    let sc = &mut scores[..rows];
+    for hh in 0..attn.n_heads {
+        let qh = &q[hh * hd..(hh + 1) * hd];
+        let mut j = 0usize;
+        for seg in segs {
+            let (sk, _, sw) = seg.layer(layer);
+            debug_assert_eq!(sw, width, "shared segment width mismatch at layer {layer}");
+            for r in 0..seg.rows() {
+                let krow = &sk[r * width + hh * hd..r * width + hh * hd + hd];
+                sc[j] = dot(qh, krow) * rscale;
+                j += 1;
+            }
+        }
+        debug_assert_eq!(j, shared_rows, "shared segments must cover exactly shared_rows");
+        for r in 0..priv_rows {
+            let krow = &kv.k[r * width + hh * hd..r * width + hh * hd + hd];
+            sc[j] = dot(qh, krow) * rscale;
+            j += 1;
+        }
+        let mx = sc.iter().fold(f32::NEG_INFINITY, |m, &s| m.max(s));
+        let mut denom = 0.0f32;
+        for s in sc.iter_mut() {
+            *s = (*s - mx).exp();
+            denom += *s;
+        }
+        let ctx_h = &mut ctx[hh * hd..(hh + 1) * hd];
+        let mut j = 0usize;
+        for seg in segs {
+            let (_, sv, _) = seg.layer(layer);
+            for r in 0..seg.rows() {
+                let a = sc[j] / denom;
+                j += 1;
+                if a == 0.0 {
+                    continue;
+                }
+                let vrow = &sv[r * width + hh * hd..r * width + hh * hd + hd];
+                for (c, &vv) in ctx_h.iter_mut().zip(vrow) {
+                    *c += a * vv;
+                }
+            }
+        }
+        for r in 0..priv_rows {
+            let a = sc[j] / denom;
+            j += 1;
+            if a == 0.0 {
+                continue;
+            }
+            let vrow = &kv.v[r * width + hh * hd..r * width + hh * hd + hd];
+            for (c, &vv) in ctx_h.iter_mut().zip(vrow) {
+                *c += a * vv;
+            }
+        }
+    }
+}
+
 /// Engine-owned scratch for the layer-major fused sweep: every packed
 /// intermediate pre-sized at engine creation to `capacity ×` the model
 /// maxima ([`model_dims`]) and reused every block of every sweep, so
@@ -861,10 +1245,16 @@ struct EngineScratch {
     v: Vec<f32>,
     /// Attention context rows `[n_live, width]`.
     ctx: Vec<f32>,
-    /// Attention scores for one (session, head) at a time — sized to
-    /// the model's maximum attention rows (`n_prefix + max_seq`), the
-    /// widest any session can reach.
+    /// Attention scores, `[capacity, cap_rows]` with stride
+    /// [`DecodeEngine::cap_rows`] (the widest attention row any
+    /// admitted model can reach): one score row **per packed session**,
+    /// so the shared-prefix reduction can hold a whole run's scores at
+    /// once instead of one session's at a time.
     scores: Vec<f32>,
+    /// Per-session softmax denominators for the current head
+    /// (`[capacity]`) — carried between the score and context phases of
+    /// the shared-prefix attention reduction.
+    denoms: Vec<f32>,
     /// Attention output rows `[n_live, d]`.
     attn_out: Vec<f32>,
     /// FFN hidden rows `[n_live, ffn]`.
@@ -883,7 +1273,7 @@ struct EngineScratch {
 }
 
 impl EngineScratch {
-    fn for_model(m: &InferenceModel, capacity: usize) -> EngineScratch {
+    fn for_model(m: &InferenceModel, capacity: usize, cap_rows: usize) -> EngineScratch {
         let ModelDims {
             d,
             width,
@@ -892,7 +1282,6 @@ impl EngineScratch {
             rank,
             vocab,
         } = model_dims(m);
-        let cap_rows = m.n_prefix() + m.cfg.max_seq;
         EngineScratch {
             x: vec![0.0; capacity * d],
             x2: vec![0.0; capacity * d],
@@ -901,7 +1290,8 @@ impl EngineScratch {
             k: vec![0.0; capacity * width],
             v: vec![0.0; capacity * width],
             ctx: vec![0.0; capacity * width],
-            scores: vec![0.0; cap_rows],
+            scores: vec![0.0; capacity * cap_rows],
+            denoms: vec![0.0; capacity],
             attn_out: vec![0.0; capacity * d],
             hmid: vec![0.0; capacity * ffn],
             ffn_out: vec![0.0; capacity * d],
@@ -918,7 +1308,7 @@ impl EngineScratch {
     /// engine's own rank maximum is 0). Called once per admission —
     /// never from the sweep — so the zero-allocation steady state is
     /// untouched.
-    fn ensure(&mut self, m: &InferenceModel, capacity: usize) {
+    fn ensure(&mut self, m: &InferenceModel, capacity: usize, cap_rows: usize) {
         let ModelDims {
             d,
             width,
@@ -927,7 +1317,6 @@ impl EngineScratch {
             rank,
             vocab,
         } = model_dims(m);
-        let cap_rows = m.n_prefix() + m.cfg.max_seq;
         fn grow(buf: &mut Vec<f32>, need: usize) {
             if buf.len() < need {
                 buf.resize(need, 0.0);
@@ -940,7 +1329,8 @@ impl EngineScratch {
         grow(&mut self.k, capacity * width);
         grow(&mut self.v, capacity * width);
         grow(&mut self.ctx, capacity * width);
-        grow(&mut self.scores, cap_rows);
+        grow(&mut self.scores, capacity * cap_rows);
+        grow(&mut self.denoms, capacity);
         grow(&mut self.attn_out, capacity * d);
         grow(&mut self.hmid, capacity * ffn);
         grow(&mut self.ffn_out, capacity * d);
@@ -960,7 +1350,7 @@ impl EngineScratch {
     /// attention row any session can reach), or a sweep would slice out
     /// of bounds. Only compiled under the `validate` feature.
     #[cfg(feature = "validate")]
-    fn validate_capacity(&self, m: &InferenceModel, capacity: usize) {
+    fn validate_capacity(&self, m: &InferenceModel, capacity: usize, cap_rows: usize) {
         let ModelDims {
             d,
             width,
@@ -969,7 +1359,10 @@ impl EngineScratch {
             rank,
             vocab,
         } = model_dims(m);
-        let cap_rows = m.n_prefix() + m.cfg.max_seq;
+        assert!(
+            cap_rows >= m.n_prefix() + m.cfg.max_seq,
+            "engine scratch: score stride {cap_rows} below the model's max attention rows"
+        );
         assert!(
             self.x.len() >= capacity * d
                 && self.x2.len() >= capacity * d
@@ -994,8 +1387,12 @@ impl EngineScratch {
             "engine scratch: logits buffer under-sized for capacity {capacity}, vocab {vocab}"
         );
         assert!(
-            self.scores.len() >= cap_rows,
-            "engine scratch: scores buffer shorter than the max attention rows {cap_rows}"
+            self.scores.len() >= capacity * cap_rows,
+            "engine scratch: scores buffer under-sized for capacity {capacity} x stride {cap_rows}"
+        );
+        assert!(
+            self.denoms.len() >= capacity,
+            "engine scratch: denoms buffer under-sized for capacity {capacity}"
         );
         assert!(
             self.adapter_mid.capacity() >= capacity * admid,
@@ -1058,6 +1455,17 @@ fn slot_model_key(slots: &[Option<EngineSlot>], i: usize) -> usize {
     }
 }
 
+/// Sharing-group key for grouping a sweep's attention reduction: equal
+/// keys mean byte-identical borrowed segment chains (same deepest trie
+/// node, same borrowed row count — see [`SharedPrefix`]); `(0, 0)` for
+/// sessions that borrow nothing.
+fn slot_shared_group(slots: &[Option<EngineSlot>], i: usize) -> (usize, usize) {
+    match &slots[i].as_ref().unwrap().sess.shared {
+        Some(sp) => sp.group,
+        None => (0, 0),
+    }
+}
+
 /// The **layer-major fused decode engine**: up to `capacity` concurrent
 /// sessions advanced one token per [`Self::sweep`] with one batched
 /// kernel per layer over the packed `[n_live, d]` activation rows,
@@ -1079,6 +1487,14 @@ pub struct DecodeEngine<'m> {
     /// sweep; reused, capacity = `capacity`.
     groups: Vec<(usize, usize)>,
     n_live: usize,
+    /// Score-buffer stride: the widest attention row any admitted model
+    /// can reach (`n_prefix + max_seq`; grown by [`Self::admit_task`] —
+    /// stride changes between sweeps are safe because `scores` holds no
+    /// cross-sweep state).
+    cap_rows: usize,
+    /// Worker-local prefix-sharing radix store; `None` for engines
+    /// built with [`Self::new`] (fully private sessions).
+    store: Option<KvStore>,
 }
 
 impl<'m> DecodeEngine<'m> {
@@ -1092,14 +1508,39 @@ impl<'m> DecodeEngine<'m> {
             "DecodeEngine: fused decoding needs a causal LM model"
         );
         let capacity = capacity.max(1);
+        let cap_rows = model.n_prefix() + model.cfg.max_seq;
         DecodeEngine {
             model,
             slots: (0..capacity).map(|_| None).collect(),
-            scratch: EngineScratch::for_model(model, capacity),
+            scratch: EngineScratch::for_model(model, capacity, cap_rows),
             active: Vec::with_capacity(capacity),
             groups: Vec::with_capacity(capacity),
             n_live: 0,
+            cap_rows,
+            store: None,
         }
+    }
+
+    /// [`Self::new`] plus a worker-local [`KvStore`] holding at most
+    /// `budget_rows` resident K/V rows per block: every admission
+    /// becomes lookup-then-extend (borrow the longest matching prefix,
+    /// prefill only the suffix, commit the suffix back), and sweeps
+    /// batch the attention reduction across sessions borrowing the same
+    /// trie rows. Generation stays token-exact vs. a private engine.
+    pub fn new_shared(
+        model: &'m InferenceModel,
+        capacity: usize,
+        budget_rows: usize,
+    ) -> DecodeEngine<'m> {
+        let mut eng = DecodeEngine::new(model, capacity);
+        eng.store = Some(KvStore::new(budget_rows));
+        eng
+    }
+
+    /// Prefix-cache counters (`None` for engines built without a
+    /// store).
+    pub fn kv_stats(&self) -> Option<KvStoreStats> {
+        self.store.as_ref().map(KvStore::stats)
     }
 
     /// The compiled model this engine decodes over.
@@ -1178,7 +1619,9 @@ impl<'m> DecodeEngine<'m> {
                 "engine admit: task {task} model layer {l} width mismatch with the engine's model"
             );
         }
-        self.scratch.ensure(&model, self.slots.len());
+        self.cap_rows = self.cap_rows.max(model.n_prefix() + model.cfg.max_seq);
+        let (capacity, cap_rows) = (self.slots.len(), self.cap_rows);
+        self.scratch.ensure(&model, capacity, cap_rows);
         self.admit_inner(Some(model), task, epoch, prompt, max_new, max_len)
     }
 
@@ -1205,7 +1648,20 @@ impl<'m> DecodeEngine<'m> {
             .position(|s| s.is_none())
             .ok_or_else(|| anyhow::anyhow!("engine admit: all {} slots live", self.slots.len()))?;
         let budget = max_new.min(cap - prompt.len());
-        let sess = m.prefill_bounded(prompt, budget);
+        // Lookup-then-extend when the engine carries a radix store:
+        // borrow the longest matching (task, epoch) prefix, prefill
+        // only the suffix, and commit the suffix back. The inserting
+        // session keeps its private rows (it does not re-borrow its own
+        // insert) — only later admissions hit the new path.
+        let sess = match self.store.as_mut() {
+            Some(store) => {
+                let shared = store.lookup(task, epoch, m.n_prefix(), prompt);
+                let sess = m.prefill_impl(prompt, budget, shared);
+                store.insert(task, epoch, m.n_prefix(), prompt, &sess)?;
+                sess
+            }
+            None => m.prefill_bounded(prompt, budget),
+        };
         self.slots[idx] = Some(EngineSlot {
             sess,
             model,
@@ -1236,12 +1692,16 @@ impl<'m> DecodeEngine<'m> {
             "engine invariant: n_live ({}) disagrees with occupied slots ({live})",
             self.n_live
         );
-        self.scratch.validate_capacity(self.model, self.slots.len());
+        self.scratch
+            .validate_capacity(self.model, self.slots.len(), self.cap_rows);
+        if let Some(store) = &self.store {
+            store.debug_validate();
+        }
         for slot in self.slots.iter().flatten() {
             // Per-task models must also fit the shared scratch (admit_task
             // grows it; this catches any path that forgot).
             if let Some(mm) = &slot.model {
-                self.scratch.validate_capacity(mm, self.slots.len());
+                self.scratch.validate_capacity(mm, self.slots.len(), self.cap_rows);
             }
             if slot.done {
                 continue;
@@ -1253,7 +1713,9 @@ impl<'m> DecodeEngine<'m> {
                 sess.cap_tokens
             );
             for kvl in &sess.kv {
-                let need = (sess.pos + 1) * kvl.width;
+                // The private cache only holds rows past the shared
+                // split; the next append lands at pos - shared_rows.
+                let need = (sess.pos + 1 - sess.shared_rows) * kvl.width;
                 assert!(
                     need <= kvl.k.len() && need <= kvl.v.len(),
                     "engine invariant: session position {} has no K/V row left to append",
@@ -1353,10 +1815,16 @@ impl<'m> DecodeEngine<'m> {
         let vocab = m.tok.rows();
 
         // Adapter-grouping pass: make same-model rows contiguous, then
-        // record the `[lo, hi)` span per model. Packed-row order is
-        // free to change between sweeps — every downstream kernel is
+        // record the `[lo, hi)` span per model. The secondary key makes
+        // sessions borrowing identical shared spans adjacent *within*
+        // their model group (lexicographic order keeps model groups
+        // contiguous), which is what lets the attention reduction read
+        // each shared K/V row once per run. Packed-row order is free to
+        // change between sweeps — every downstream kernel is
         // row-independent and the scatter below goes through `active`.
-        self.active.sort_unstable_by_key(|&i| slot_model_key(&self.slots, i));
+        let slots = &self.slots;
+        self.active
+            .sort_unstable_by_key(|&i| (slot_model_key(slots, i), slot_shared_group(slots, i)));
         self.groups.clear();
         let mut lo = 0usize;
         for r in 1..n {
@@ -1402,6 +1870,7 @@ impl<'m> DecodeEngine<'m> {
                 &mut self.scratch,
                 n,
                 d,
+                self.cap_rows,
             );
         }
 
@@ -1508,10 +1977,13 @@ fn grouped_rows_into(
 /// per row (fused/solo parity is structural, not tested-into-being).
 /// Base gemms run once over all rows whenever the adapter groups share
 /// the resident base; side-paths, gates, norms, and adapters run per
-/// group ([`grouped_rows_into`]); the K/V append and the attention
-/// reduction loop per session, because each session's cache is private
-/// and its position ragged.
+/// group ([`grouped_rows_into`]); the K/V append loops per session.
+/// Attention batches over **shared-prefix runs**: `active` is sorted so
+/// sessions borrowing identical trie spans are adjacent, and each run
+/// reads its shared K/V rows once per head for all members, private
+/// ragged tails per member — see the scan below.
 // lint: hot-path
+#[allow(clippy::too_many_arguments)]
 fn fused_block_rows(
     default_model: &InferenceModel,
     layer: usize,
@@ -1521,6 +1993,7 @@ fn fused_block_rows(
     s: &mut EngineScratch,
     n: usize,
     d: usize,
+    cap_rows: usize,
 ) {
     let EngineScratch {
         x,
@@ -1531,6 +2004,7 @@ fn fused_block_rows(
         v,
         ctx,
         scores,
+        denoms,
         attn_out,
         hmid,
         ffn_out,
@@ -1595,51 +2069,132 @@ fn fused_block_rows(
     }
 
     // Append each session's new K/V row to its own cache at its own
-    // position.
+    // position — the private cache holds only rows past the shared
+    // split, so position `pos` lands at private row `pos - shared_rows`.
     for (r, &i) in active.iter().enumerate() {
         let sess = &mut slots[i].as_mut().unwrap().sess;
-        let pos = sess.pos;
+        let pp = sess.pos - sess.shared_rows;
         let kvl = &mut sess.kv[layer];
-        kvl.k[pos * width..(pos + 1) * width].copy_from_slice(&k[r * width..(r + 1) * width]);
-        kvl.v[pos * width..(pos + 1) * width].copy_from_slice(&v[r * width..(r + 1) * width]);
+        kvl.k[pp * width..(pp + 1) * width].copy_from_slice(&k[r * width..(r + 1) * width]);
+        kvl.v[pp * width..(pp + 1) * width].copy_from_slice(&v[r * width..(r + 1) * width]);
     }
 
-    // Attention: the one per-session loop left — each session reduces
-    // over its private cache rows `0..=pos` (ragged lengths, prefix
-    // included). Identical inner arithmetic to the solo step. Head
-    // geometry is engine-wide (admit_task enforces it).
+    // Attention, batched over shared prefixes: `active` is sorted so
+    // sessions borrowing the *same* trie spans (equal sharing-group
+    // keys — byte-identical segment chains) are adjacent. Each run
+    // reduces with the members in the inner loop, so every shared K/V
+    // row is read **once per head for the whole run** instead of once
+    // per member. Per member the position order (shared rows ascending,
+    // then its private tail ascending) and the arithmetic are exactly
+    // the solo loop's, so grouping is bit-identical to solo attention —
+    // singleton runs and unshared sessions degenerate to the historical
+    // per-session loop through the same code path. Head geometry is
+    // engine-wide (admit_task enforces it).
     let rscale = 1.0 / (hd as f32).sqrt();
-    for (r, &i) in active.iter().enumerate() {
-        let sess = &slots[i].as_ref().unwrap().sess;
-        let kvl = &sess.kv[layer];
-        let rows = sess.pos + 1; // attend over everything cached, self included
-        let ctx_r = &mut ctx[r * width..(r + 1) * width];
-        ctx_r.fill(0.0);
-        let sc = &mut scores[..rows];
-        for hh in 0..blk0.attn.n_heads {
-            let qh = &q[r * width + hh * hd..r * width + hh * hd + hd];
-            for (j, sv) in sc.iter_mut().enumerate() {
-                let krow = &kvl.k[j * width + hh * hd..j * width + hh * hd + hd];
-                *sv = dot(qh, krow) * rscale;
-            }
-            let mx = sc.iter().fold(f32::NEG_INFINITY, |acc, &sv| acc.max(sv));
-            let mut denom = 0.0f32;
-            for sv in sc.iter_mut() {
-                *sv = (*sv - mx).exp();
-                denom += *sv;
-            }
-            let ctx_h = &mut ctx_r[hh * hd..(hh + 1) * hd];
-            for (j, &sv) in sc.iter().enumerate() {
-                let a = sv / denom;
-                if a == 0.0 {
-                    continue;
+    let n_heads = blk0.attn.n_heads;
+    let mut rlo = 0usize;
+    while rlo < n {
+        let key = (
+            slot_model_key(slots, active[rlo]),
+            slot_shared_group(slots, active[rlo]),
+        );
+        let mut rhi = rlo + 1;
+        while rhi < n
+            && (slot_model_key(slots, active[rhi]), slot_shared_group(slots, active[rhi])) == key
+        {
+            rhi += 1;
+        }
+        // All run members borrow the same spans, so the first member's
+        // segments stand in for everyone's; `shared_rows` is the
+        // group key's row count (0 for unshared runs, empty segs).
+        let sess0 = &slots[active[rlo]].as_ref().unwrap().sess;
+        let shared_rows = sess0.shared_rows;
+        let segs: &[SharedSeg] = sess0.shared.as_ref().map_or(&[], |sp| &sp.segs[..]);
+        for r in rlo..rhi {
+            ctx[r * width..(r + 1) * width].fill(0.0);
+        }
+        for hh in 0..n_heads {
+            // Phase 1: scores — shared rows j-outer / members inner
+            // (the one read of each shared K row for the run), then
+            // each member's private tail.
+            let mut j = 0usize;
+            for seg in segs {
+                let (sk, _, _) = seg.layer(layer);
+                for sr in 0..seg.rows() {
+                    let krow = &sk[sr * width + hh * hd..sr * width + hh * hd + hd];
+                    for r in rlo..rhi {
+                        let qh = &q[r * width + hh * hd..r * width + hh * hd + hd];
+                        scores[r * cap_rows + j] = dot(qh, krow) * rscale;
+                    }
+                    j += 1;
                 }
-                let vrow = &kvl.v[j * width + hh * hd..j * width + hh * hd + hd];
-                for (c, &vv) in ctx_h.iter_mut().zip(vrow) {
-                    *c += a * vv;
+            }
+            debug_assert_eq!(j, shared_rows, "run segments must cover exactly shared_rows");
+            for r in rlo..rhi {
+                let sess = &slots[active[r]].as_ref().unwrap().sess;
+                let kvl = &sess.kv[layer];
+                let priv_rows = sess.pos + 1 - shared_rows;
+                let qh = &q[r * width + hh * hd..r * width + hh * hd + hd];
+                let sc = &mut scores[r * cap_rows + j..r * cap_rows + j + priv_rows];
+                for (pr, sv) in sc.iter_mut().enumerate() {
+                    let krow = &kvl.k[pr * width + hh * hd..pr * width + hh * hd + hd];
+                    *sv = dot(qh, krow) * rscale;
+                }
+            }
+            // Phase 2: per-member softmax normalization over its full
+            // score row — same ascending-position fold as solo.
+            for r in rlo..rhi {
+                let sess = &slots[active[r]].as_ref().unwrap().sess;
+                let rows = sess.pos + 1; // attend over everything cached
+                let sc = &mut scores[r * cap_rows..r * cap_rows + rows];
+                let mx = sc.iter().fold(f32::NEG_INFINITY, |acc, &sv| acc.max(sv));
+                let mut denom = 0.0f32;
+                for sv in sc.iter_mut() {
+                    *sv = (*sv - mx).exp();
+                    denom += *sv;
+                }
+                denoms[r] = denom;
+            }
+            // Phase 3: context — shared V rows j-outer / members inner,
+            // then the private tails; per member the accumulation order
+            // over positions is exactly the solo loop's.
+            let mut j = 0usize;
+            for seg in segs {
+                let (_, sv_rows, _) = seg.layer(layer);
+                for sr in 0..seg.rows() {
+                    let vrow = &sv_rows[sr * width + hh * hd..sr * width + hh * hd + hd];
+                    for r in rlo..rhi {
+                        let a = scores[r * cap_rows + j] / denoms[r];
+                        if a == 0.0 {
+                            continue;
+                        }
+                        let ctx_h = &mut ctx[r * width + hh * hd..r * width + hh * hd + hd];
+                        for (c, &vv) in ctx_h.iter_mut().zip(vrow) {
+                            *c += a * vv;
+                        }
+                    }
+                    j += 1;
+                }
+            }
+            for r in rlo..rhi {
+                let sess = &slots[active[r]].as_ref().unwrap().sess;
+                let kvl = &sess.kv[layer];
+                let priv_rows = sess.pos + 1 - shared_rows;
+                let denom = denoms[r];
+                let ctx_h = &mut ctx[r * width + hh * hd..r * width + hh * hd + hd];
+                for pr in 0..priv_rows {
+                    let a = scores[r * cap_rows + j + pr] / denom;
+                    if a == 0.0 {
+                        continue;
+                    }
+                    let vrow = &kvl.v[pr * width + hh * hd..pr * width + hh * hd + hd];
+                    for (c, &vv) in ctx_h.iter_mut().zip(vrow) {
+                        *c += a * vv;
+                    }
                 }
             }
         }
+        rlo = rhi;
     }
 
     // Output projection (grouped) + optional adapter and residual, per
@@ -2147,6 +2702,253 @@ mod tests {
         cfg.n_classes = 2;
         let m = Transformer::new(&cfg, &mut rng);
         let _ = m.compile(MergePolicy::Merged).prefill(&[1, 2, 3]);
+    }
+
+    /// Drive a session to completion greedily — the [`super::GreedyStream::step`]
+    /// loop, for sessions (shared-prefill ones) a stream can't wrap.
+    fn rollout(
+        im: &crate::infer::InferenceModel,
+        mut sess: super::DecodeSession,
+        budget: usize,
+    ) -> Vec<u32> {
+        let mut out = Vec::new();
+        while out.len() < budget {
+            let tok = super::argmax(sess.last_logits());
+            if tok == crate::data::vocab::EOS {
+                break;
+            }
+            out.push(tok);
+            if out.len() >= budget {
+                break;
+            }
+            sess.decode_step(im, tok);
+        }
+        out
+    }
+
+    #[test]
+    fn shared_prefill_parity_and_token_exact_all_policies() {
+        // The tentpole invariant: a session that borrows its prefix
+        // rows from the radix store must produce last-logits within
+        // 1e-4 of a private prefill and a token-exact greedy rollout,
+        // for every compiled form.
+        let m = dsee_lm_model(0xE9);
+        let prompt: Vec<u32> = vec![7, 21, 3, 9, 2, 14];
+        for policy in [MergePolicy::Merged, MergePolicy::Csr, MergePolicy::Compact] {
+            let im = m.compile(policy);
+            let cap = im.cfg.max_seq;
+            let solo = im.generate_greedy(&prompt, 5, cap).unwrap();
+            let want = im.prefill(&prompt);
+            let mut store = super::KvStore::new(4096);
+            let cold = im.prefill_shared(&mut store, 0, 0, &prompt, 5).unwrap();
+            assert_eq!(cold.shared_rows(), 0, "{}: first lookup must miss", policy.label());
+            let warm = im.prefill_shared(&mut store, 0, 0, &prompt, 5).unwrap();
+            // Hits are capped before the last prompt token — its logits
+            // must be computed, so its K/V row is never borrowed alone.
+            assert_eq!(warm.shared_rows(), prompt.len() - 1, "{}", policy.label());
+            for (a, b) in warm.last_logits().iter().zip(want.last_logits()) {
+                assert!(
+                    (a - b).abs() < 1e-4 * (1.0 + b.abs()),
+                    "{}: {a} vs {b}",
+                    policy.label()
+                );
+            }
+            assert_eq!(rollout(&im, cold, 5), solo, "{}: cold path diverged", policy.label());
+            assert_eq!(rollout(&im, warm, 5), solo, "{}: warm path diverged", policy.label());
+            let kv = store.stats();
+            assert_eq!((kv.misses, kv.hits), (1, 1), "{}", policy.label());
+            assert_eq!(kv.rows_reused, (prompt.len() - 1) as u64, "{}", policy.label());
+        }
+    }
+
+    #[test]
+    fn copy_on_extend_divergence_matches_solo() {
+        // Two prompts sharing a 4-token prefix then diverging: the
+        // second must borrow exactly the common rows (the store splits
+        // the edge without copying), and both generate token-exactly.
+        let m = dsee_lm_model(0xEA);
+        let im = m.compile(MergePolicy::Merged);
+        let cap = im.cfg.max_seq;
+        let p1: Vec<u32> = vec![7, 21, 3, 9, 2, 14];
+        let p2: Vec<u32> = vec![7, 21, 3, 9, 33, 41];
+        let solo1 = im.generate_greedy(&p1, 4, cap).unwrap();
+        let solo2 = im.generate_greedy(&p2, 4, cap).unwrap();
+        let mut store = super::KvStore::new(4096);
+        let _seed = im.prefill_shared(&mut store, 0, 0, &p1, 4).unwrap();
+        let nodes_before = store.stats().nodes;
+        let s2 = im.prefill_shared(&mut store, 0, 0, &p2, 4).unwrap();
+        assert_eq!(s2.shared_rows(), 4, "p2 should borrow exactly the common prefix");
+        assert!(store.stats().nodes > nodes_before, "divergence must split the edge");
+        let s1 = im.prefill_shared(&mut store, 0, 0, &p1, 4).unwrap();
+        assert_eq!(s1.shared_rows(), p1.len() - 1, "split must keep p1's full path");
+        assert_eq!(rollout(&im, s1, 4), solo1, "shared p1 diverged from solo");
+        assert_eq!(rollout(&im, s2, 4), solo2, "shared p2 diverged from solo");
+    }
+
+    #[test]
+    fn borrower_drop_mid_generation_keeps_shared_rows_alive() {
+        // Satellite regression: a borrower dropping mid-generation must
+        // not recycle rows a sibling still attends over, and every pool
+        // buffer must come back exactly once — a second identical wave
+        // needs zero fresh allocations and still matches solo.
+        let m = dsee_lm_model(0xEB);
+        let im = m.compile(MergePolicy::Merged);
+        let cap = im.cfg.max_seq;
+        let prompt: Vec<u32> = vec![7, 21, 3, 9, 2, 14];
+        let solo = im.generate_greedy(&prompt, 5, cap).unwrap();
+        let wave = || {
+            let mut store = super::KvStore::new(4096);
+            let _seed = im.prefill_shared(&mut store, 0, 0, &prompt, 5).unwrap();
+            let mut b = im.prefill_shared(&mut store, 0, 0, &prompt, 5).unwrap();
+            let c = im.prefill_shared(&mut store, 0, 0, &prompt, 5).unwrap();
+            let tok = super::argmax(b.last_logits());
+            if tok != crate::data::vocab::EOS {
+                b.decode_step(&im, tok);
+            }
+            drop(b); // mid-generation: its borrowed rows must stay live
+            rollout(&im, c, 5)
+            // store drops here: node spans return to the pool once
+        };
+        let (_, fresh0) = super::kv_pool_counters();
+        assert_eq!(wave(), solo, "sibling diverged after a borrower dropped");
+        let (_, fresh1) = super::kv_pool_counters();
+        assert!(fresh1 > fresh0, "first wave must allocate fresh K/V");
+        assert_eq!(wave(), solo, "second wave diverged");
+        let (_, fresh2) = super::kv_pool_counters();
+        assert_eq!(fresh2, fresh1, "wave 1 leaked pool buffers (or returned some twice)");
+    }
+
+    #[test]
+    fn shared_engine_reuses_prefixes_and_joins_mid_flight() {
+        // Engine-level sharing: two warm slots on the same trie node
+        // sweep through the grouped shared-attention path, a retirement
+        // frees a slot, and a latecomer joins the shared node mid-
+        // flight — all token-exact vs solo.
+        let m = dsee_lm_model(0xE8);
+        let im = m.compile(MergePolicy::Merged);
+        let cap = im.cfg.max_seq;
+        let sys: Vec<u32> = vec![7, 21, 3, 9];
+        let mut long = sys.clone();
+        long.extend([2, 14]);
+        let want_sys6 = im.generate_greedy(&sys, 6, cap).unwrap();
+        let want_sys2 = im.generate_greedy(&sys, 2, cap).unwrap();
+        let want_long = im.generate_greedy(&long, 4, cap).unwrap();
+
+        let mut eng = super::DecodeEngine::new_shared(&im, 3, 4096);
+        let a = eng.admit(&sys, 6, cap).unwrap(); // cold: seeds the trie
+        let b1 = eng.admit(&sys, 2, cap).unwrap(); // warm, shared group
+        let b2 = eng.admit(&sys, 6, cap).unwrap(); // warm, same group
+        for _ in 0..3 {
+            eng.sweep();
+        }
+        assert!(eng.is_done(b1));
+        assert_eq!(eng.release(b1), want_sys2, "retired borrower diverged");
+        // Mid-flight join: borrows the system prompt while a and b2 are
+        // still decoding over it.
+        let c = eng.admit(&long, 4, cap).unwrap();
+        let mut rounds = 0;
+        while !eng.is_done(a) || !eng.is_done(b2) || !eng.is_done(c) {
+            eng.sweep();
+            rounds += 1;
+            assert!(rounds < 100, "shared engine never drained");
+        }
+        assert_eq!(eng.release(a), want_sys6, "cold slot diverged from solo");
+        assert_eq!(eng.release(b2), want_sys6, "grouped borrower diverged from solo");
+        assert_eq!(eng.release(c), want_long, "mid-flight joiner diverged from solo");
+        let kv = eng.kv_stats().unwrap();
+        assert_eq!(kv.misses, 1, "only the first admission should miss");
+        assert_eq!(kv.hits, 3);
+        // b1/b2 borrow sys minus its last token, c borrows all of sys.
+        assert_eq!(kv.rows_reused, (2 * (sys.len() - 1) + sys.len()) as u64);
+    }
+
+    #[test]
+    fn shared_engine_epoch_swap_never_aliases_stale_kv() {
+        // Prefix trees are keyed (task, epoch): sessions for the same
+        // task after an adapter swap must miss the old tree — borrowing
+        // epoch-0 K/V under epoch-1 weights would be silent corruption.
+        use std::sync::Arc;
+        let t = dsee_lm_model(0xEC);
+        let base = t.compile_base(MergePolicy::Csr);
+        let tune = |seed: u64| {
+            let mut v = t.clone();
+            let mut rng = Rng::new(seed);
+            for lin in v.attn_projections_mut() {
+                if let Some(a) = &mut lin.adapter {
+                    a.u = Tensor::randn(&[a.u.rows(), a.u.cols()], 0.2, &mut rng);
+                }
+                if let Some(r) = &mut lin.residual {
+                    r.values = Tensor::randn(&[r.nnz()], 0.3, &mut rng);
+                }
+            }
+            v.compile_adapter(MergePolicy::Csr)
+        };
+        let m1 = Arc::new(base.attach(&tune(0xB1)));
+        let m2 = Arc::new(base.attach(&tune(0xB2)));
+        let im0 = &**base.model();
+        let cap = im0.cfg.max_seq;
+        let prompt: Vec<u32> = vec![7, 21, 3, 9];
+        let want0 = im0.generate_greedy(&prompt, 4, cap).unwrap();
+        let want1 = m1.generate_greedy(&prompt, 4, cap).unwrap();
+        let want2 = m2.generate_greedy(&prompt, 4, cap).unwrap();
+
+        let mut eng = super::DecodeEngine::new_shared(im0, 3, 4096);
+        let s0 = eng.admit(&prompt, 4, cap).unwrap();
+        let s1 = eng.admit_task(Arc::clone(&m1), 1, 0, &prompt, 4, cap).unwrap();
+        let s2 = eng.admit_task(Arc::clone(&m1), 1, 0, &prompt, 4, cap).unwrap();
+        let mut rounds = 0;
+        while [s0, s1, s2].iter().any(|&s| !eng.is_done(s)) {
+            eng.sweep();
+            rounds += 1;
+            assert!(rounds < 100, "multi-adapter shared engine never drained");
+        }
+        assert_eq!(eng.release(s0), want0, "base slot diverged");
+        assert_eq!(eng.release(s1), want1, "task-1 cold slot diverged");
+        assert_eq!(eng.release(s2), want1, "task-1 warm slot diverged");
+        let kv = eng.kv_stats().unwrap();
+        // Base and task-1 prompts are identical tokens but key separate
+        // trees — the task-1 cold admission must not hit task 0's rows.
+        assert_eq!((kv.misses, kv.hits), (2, 1));
+        // Swap: same task, bumped epoch, different weights.
+        let s3 = eng.admit_task(Arc::clone(&m2), 1, 1, &prompt, 4, cap).unwrap();
+        let mut rounds = 0;
+        while !eng.is_done(s3) {
+            eng.sweep();
+            rounds += 1;
+            assert!(rounds < 100, "post-swap session never drained");
+        }
+        assert_eq!(eng.release(s3), want2, "post-swap slot reused stale K/V");
+        let kv = eng.kv_stats().unwrap();
+        assert_eq!(kv.misses, 3, "epoch swap must miss the old tree");
+        assert_eq!(kv.hits, 1);
+    }
+
+    #[test]
+    fn prefix_model_shared_prefill_matches_private() {
+        // Learned-prefix models share their prefix K/V through the
+        // (task, epoch) root node; a warm session borrows those rows
+        // plus the matched prompt rows.
+        let mut rng = Rng::new(0xED);
+        let mut m = Transformer::new(&lm_cfg(), &mut rng);
+        m.prefix = Some(crate::nn::Prefix {
+            vecs: Tensor::randn(&[3, 16], 0.5, &mut rng),
+            grad: Tensor::zeros(&[3, 16]),
+        });
+        let im = m.compile(MergePolicy::Merged);
+        assert_eq!(im.n_prefix(), 3);
+        let cap = im.cfg.max_seq;
+        let prompt: Vec<u32> = vec![7, 21, 3, 9];
+        let solo = im.generate_greedy(&prompt, 4, cap).unwrap();
+        let mut store = super::KvStore::new(4096);
+        let cold = im.prefill_shared(&mut store, 0, 0, &prompt, 4).unwrap();
+        let warm = im.prefill_shared(&mut store, 0, 0, &prompt, 4).unwrap();
+        assert_eq!(warm.shared_rows(), 3 + prompt.len() - 1);
+        let want = im.prefill(&prompt);
+        for (a, b) in warm.last_logits().iter().zip(want.last_logits()) {
+            assert!((a - b).abs() < 1e-4 * (1.0 + b.abs()), "{a} vs {b}");
+        }
+        assert_eq!(rollout(&im, cold, 4), solo, "cold prefix-model path diverged");
+        assert_eq!(rollout(&im, warm, 4), solo, "warm prefix-model path diverged");
     }
 
     #[test]

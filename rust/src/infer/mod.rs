@@ -40,8 +40,10 @@
 pub mod adapter;
 pub mod decode;
 pub mod kernels;
+pub mod radix;
 
 pub use adapter::{AdapterRegistry, AdapterStats, CompiledBase, TaskAdapter};
+pub use radix::{KvStore, KvStoreStats};
 
 use crate::config::ModelCfg;
 use crate::nn::{Head, Transformer};
@@ -593,35 +595,19 @@ pub struct InferAttention {
 use crate::nn::attention::{gather_head_slice, scatter_head_slice};
 
 impl InferAttention {
+    /// Batched attention. The decode-path prefill does *not* ride this
+    /// form — it uses the row kernels in [`super::decode`] directly
+    /// (same single-row arithmetic as `decode_step`, so trie-cached K/V
+    /// rows are bit-identical to privately recomputed ones).
     fn forward(&self, x: &Tensor, batch: usize, seq: usize) -> Tensor {
-        self.forward_capture(x, batch, seq, None)
-    }
-
-    /// Batched attention with optional K/V capture: when `capture` is
-    /// provided (decode-path prefill, batch = 1), the raw key/value
-    /// projections are copied into the caller's cache rows before the
-    /// context is formed. Same arithmetic as the plain forward — there
-    /// is only one copy of it — so prefill parity *is* batched parity.
-    fn forward_capture(
-        &self,
-        x: &Tensor,
-        batch: usize,
-        seq: usize,
-        capture: Option<(&mut [f32], &mut [f32])>,
-    ) -> Tensor {
         let width = self.n_heads * self.head_dim;
         let hd = self.head_dim;
         let q2 = self.wq.forward(x);
         let k2 = self.wk.forward(x);
         // Monolithic compile pre-folds gates into wv; attached models
-        // carry them and gate the value rows here (before capture).
+        // carry them and gate the value rows here.
         let mut v2 = self.wv.forward(x);
         self.gate_value_rows(&mut v2.data);
-        if let Some((kd, vd)) = capture {
-            debug_assert_eq!(batch, 1, "K/V capture is a single-sequence path");
-            kd.copy_from_slice(&k2.data);
-            vd.copy_from_slice(&v2.data);
-        }
         let rscale = 1.0 / (hd as f32).sqrt();
         let mut ctx = Tensor::zeros(&[batch * seq, width]);
         for b in 0..batch {
@@ -772,22 +758,7 @@ pub struct InferBlock {
 
 impl InferBlock {
     fn forward(&self, x: &Tensor, batch: usize, seq: usize) -> Tensor {
-        self.forward_capture(x, batch, seq, None)
-    }
-
-    /// Block forward with optional K/V capture (see
-    /// [`InferAttention::forward_capture`]) — the decode-path prefill
-    /// rides the batched implementation instead of duplicating it.
-    fn forward_capture(
-        &self,
-        x: &Tensor,
-        batch: usize,
-        seq: usize,
-        capture: Option<(&mut [f32], &mut [f32])>,
-    ) -> Tensor {
-        let mut a_out = self
-            .attn
-            .forward_capture(&self.ln1.apply(x), batch, seq, capture);
+        let mut a_out = self.attn.forward(&self.ln1.apply(x), batch, seq);
         if let Some(ad) = &self.adapter1 {
             a_out = ad.forward(&a_out);
         }

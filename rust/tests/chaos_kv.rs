@@ -1,0 +1,117 @@
+//! Deterministic fault injection against the prefix K/V radix store —
+//! `--features chaos` only.
+//!
+//! The `kv.radix_evict` failpoint simulates an eviction racing an
+//! admission's trie commit. The contract under test: the race costs at
+//! most the one request whose insert it interrupted — the store mutates
+//! nothing before the failpoint fires, so the very next admission seeds
+//! the trie cleanly, siblings borrow from it, and every generated token
+//! stays bit-identical to a private decode.
+//!
+//! The chaos registry is process-global and cargo runs a binary's tests
+//! on parallel threads, so these tests live in their own binary and
+//! serialize on a local gate mutex; each resets the registry before
+//! arming its own points.
+
+#![cfg(feature = "chaos")]
+
+use dsee::config::ModelCfg;
+use dsee::coordinator::serve::{start, Backend, ServeCfg};
+use dsee::infer::decode::DecodeEngine;
+use dsee::infer::MergePolicy;
+use dsee::nn::Transformer;
+use dsee::util::chaos::{self, FailAction};
+use dsee::util::Rng;
+use std::sync::{Arc, Mutex};
+
+/// Serialize tests in this binary: the chaos registry is process-global.
+fn gate() -> std::sync::MutexGuard<'static, ()> {
+    static GATE: Mutex<()> = Mutex::new(());
+    match GATE.lock() {
+        Ok(g) => g,
+        Err(p) => p.into_inner(),
+    }
+}
+
+#[test]
+fn radix_evict_race_fails_one_admission_and_store_recovers() {
+    let _g = gate();
+    chaos::reset();
+    let mut rng = Rng::new(0xC901);
+    let model = Transformer::new(&ModelCfg::sim_gpt_s(), &mut rng);
+    let im = model.compile(MergePolicy::Merged);
+    let cap = im.cfg.max_seq;
+    let prompt = vec![5u32, 9, 2, 44];
+    let want = im.generate_greedy(&prompt, 6, cap).unwrap();
+    let mut eng = DecodeEngine::new_shared(&im, 2, 4096);
+    // The first admission's trie commit sees the injected race and
+    // errors; the failed admission must hold no slot and leave the
+    // store untouched.
+    chaos::arm("kv.radix_evict", FailAction::Trip, 0, 1);
+    let err = eng.admit(&prompt, 6, cap).unwrap_err();
+    assert!(format!("{err}").contains("kv.radix_evict"), "{err}");
+    assert_eq!(eng.n_live(), 0, "a failed admission must not hold a slot");
+    assert_eq!(chaos::fired("kv.radix_evict"), 1);
+    // Recovery: the same prompt seeds the trie, a sibling borrows the
+    // seeded rows, and both decode token-exactly.
+    let a = eng.admit(&prompt, 6, cap).unwrap();
+    let b = eng.admit(&prompt, 6, cap).unwrap();
+    let mut rounds = 0;
+    while !eng.is_done(a) || !eng.is_done(b) {
+        eng.sweep();
+        rounds += 1;
+        assert!(rounds < 100, "engine never drained after the injected race");
+    }
+    assert_eq!(eng.release(a), want, "post-race admission diverged from solo");
+    assert_eq!(eng.release(b), want, "post-race borrower diverged from solo");
+    let kv = eng.kv_stats().unwrap();
+    assert_eq!(kv.misses, 2, "the tripped admission still counts its lookup miss");
+    assert_eq!(kv.hits, 1, "recovery admission must borrow the reseeded prefix");
+    assert_eq!(kv.evictions, 0);
+    chaos::reset();
+}
+
+#[test]
+fn radix_evict_race_fails_exactly_one_request_and_serving_recovers() {
+    let _g = gate();
+    chaos::reset();
+    let mut rng = Rng::new(0xC902);
+    let model = Transformer::new(&ModelCfg::sim_gpt_s(), &mut rng);
+    let compiled = Arc::new(model.compile(MergePolicy::Merged));
+    let direct = Arc::clone(&compiled);
+    let prompt = vec![5u32, 9, 2, 44];
+    let want = direct.generate_greedy(&prompt, 6, direct.cfg.max_seq).unwrap();
+    // The first generation's admission hits the race: per-request
+    // containment fails it (the error names the failpoint) and nothing
+    // else — the worker, its engine, and its store all serve on.
+    chaos::arm("kv.radix_evict", FailAction::Trip, 0, 1);
+    let (client, server) = start(
+        Arc::clone(&compiled) as Arc<dyn Backend>,
+        ServeCfg {
+            workers: 1,
+            ..ServeCfg::default()
+        },
+    );
+    let failed = client.try_generate(prompt.clone(), 6).unwrap();
+    let err = failed.error.expect("eviction race must fail the admission");
+    assert!(err.contains("kv.radix_evict"), "error should name the failpoint: {err}");
+    assert_eq!(chaos::fired("kv.radix_evict"), 1);
+    // Exactly that one request failed: the same prompt now seeds the
+    // trie and a follow-up borrows the seeded prefix — both exact.
+    let ok = client.generate(prompt.clone(), 6).unwrap();
+    assert_eq!(ok.tokens, want, "post-race generation diverged from direct decode");
+    let again = client.generate(prompt.clone(), 6).unwrap();
+    assert_eq!(again.tokens, want, "warm-path generation diverged from direct decode");
+    drop(client);
+    let stats = server.join();
+    assert_eq!(stats.failed, 1, "the race must cost exactly one request");
+    assert_eq!(stats.requests, 2);
+    assert_eq!(stats.prefix_misses, 2, "the tripped admission still counts its miss");
+    assert_eq!(stats.prefix_hits, 1, "the third request must borrow the seeded prefix");
+    assert!(
+        stats.shared_rows_reused >= (prompt.len() - 1) as u64,
+        "a warm admission reuses at least the prompt minus its last token"
+    );
+    assert_eq!(stats.radix_evictions, 0);
+    chaos::reset();
+}
