@@ -21,6 +21,14 @@
 //!   assert on steady-state engine sweeps, with the scenario's numbers
 //!   emitted as machine-readable JSON (`BENCH_decode.json`) so future
 //!   PRs have a perf trajectory to diff against;
+//! * Int8-quantized fused decode: Merged-f32 vs Merged-int8 vs Csr-int8
+//!   at 16 sessions — tokens/s plus structural bytes/sweep
+//!   (`sweep_weight_bytes`), hard asserts that the int8 base does not
+//!   decode slower than f32 at 16 sessions and (next to the RAM bar)
+//!   that its weight payload is < 0.35× the f32 base — with the
+//!   headline numbers mirrored into a small, commit-worthy
+//!   `BENCH_summary.json` (the full dump stays in gitignored
+//!   `BENCH_decode.json`, uploaded as a CI artifact);
 //! * Multi-tenant adapter decode: one resident base × {1, 4, 16} task
 //!   deltas swept by one engine — tokens/s as adapter diversity grows,
 //!   the tentpole's RAM bar (16 resident adapters < 1.5× the footprint
@@ -415,8 +423,14 @@ fn main() {
         // Zero-allocation step path: after a short warmup (scratch and
         // the low-rank buffer reach their steady sizes), decode_step
         // must never touch the heap — the continuous-batching scheduler
-        // pays this path sessions × tokens times per second.
-        for policy in [MergePolicy::Merged, MergePolicy::Csr] {
+        // pays this path sessions × tokens times per second. The int8
+        // reprs ride the same `_into` kernels, so they get the same bar.
+        for policy in [
+            MergePolicy::Merged,
+            MergePolicy::Csr,
+            MergePolicy::MergedInt8,
+            MergePolicy::CsrInt8,
+        ] {
             let im = gm.compile(policy);
             let mut sess = im.prefill(&prompt);
             let mut tok = argmax(sess.last_logits());
@@ -542,8 +556,14 @@ fn main() {
         // assert, extended to the fused path. Admission allocates (once
         // per request — prefill, session, slot); steady-state sweeps
         // must not, because the coordinator pays one sweep per
-        // scheduler iteration forever.
-        for policy in [MergePolicy::Merged, MergePolicy::Csr] {
+        // scheduler iteration forever. Includes the quantized reprs:
+        // scale folding happens in registers, never on the heap.
+        for policy in [
+            MergePolicy::Merged,
+            MergePolicy::Csr,
+            MergePolicy::MergedInt8,
+            MergePolicy::CsrInt8,
+        ] {
             let em = gm.compile(policy);
             let mut eng = DecodeEngine::new(&em, 4);
             for c in 0..4usize {
@@ -566,6 +586,96 @@ fn main() {
             println!(
                 "    → engine sweep steady-state heap allocations: {allocs} ({})",
                 policy.label()
+            );
+        }
+
+        println!("\n== int8-quantized fused decode (base bytes → tokens/s) ==");
+        // The fused sweep reads every surviving base weight exactly once
+        // per sweep, so decode is weight-bandwidth-bound at 16 sessions
+        // — shrinking the bytes is the lever. Row-scaled int8 codes cut
+        // the dense payload 4× while UV/S₂/gates stay f32; the
+        // acceptance bar is a hard assert that the quantized base does
+        // not decode slower than f32. bytes/sweep is structural
+        // (`sweep_weight_bytes`: base repr payload only), so the number
+        // is exact even under --smoke.
+        let mut quant_scenarios = Vec::new();
+        let mut summary_rows: Vec<(String, f64, f64)> = Vec::new();
+        {
+            let sessions = 16usize;
+            let prompts: Vec<Vec<u32>> = (0..sessions)
+                .map(|c| (0..6).map(|i| ((c * 31 + i * 13 + 7) % 256) as u32).collect())
+                .collect();
+            let mut tok_per_s = Vec::new();
+            for policy in [
+                MergePolicy::Merged,
+                MergePolicy::MergedInt8,
+                MergePolicy::CsrInt8,
+            ] {
+                let qim = gm.compile(policy);
+                let bytes = qim.sweep_weight_bytes();
+                let total_tokens: usize = prompts
+                    .iter()
+                    .map(|p| qim.generate_greedy(p, fused_new, gen_cap).unwrap().len())
+                    .sum();
+                let t = bench(
+                    &format!("decode 16 sessions fused ({})", policy.label()),
+                    2,
+                    10,
+                    || {
+                        let mut eng = DecodeEngine::new(&qim, sessions);
+                        let mut live: Vec<usize> = prompts
+                            .iter()
+                            .map(|p| eng.admit(p, fused_new, gen_cap).unwrap())
+                            .collect();
+                        while !live.is_empty() {
+                            eng.sweep();
+                            live.retain(|&slot| {
+                                if eng.is_done(slot) {
+                                    black_box(eng.release(slot).len());
+                                    false
+                                } else {
+                                    true
+                                }
+                            });
+                        }
+                    },
+                );
+                let tps = t.throughput(total_tokens as f64);
+                println!(
+                    "    → {:.0} tok/s, {:.1} KiB base weights/sweep ({})",
+                    tps,
+                    bytes as f64 / 1024.0,
+                    policy.label()
+                );
+                tok_per_s.push(tps);
+                quant_scenarios.push(Json::obj(vec![
+                    ("policy", Json::str(policy.label())),
+                    ("sessions", Json::num(sessions as f64)),
+                    ("tokens_emitted", Json::num(total_tokens as f64)),
+                    ("tok_per_s", Json::num(tps)),
+                    ("bytes_per_sweep", Json::num(bytes as f64)),
+                ]));
+                summary_rows.push((
+                    format!(
+                        "decode_fused_16_sessions_{}",
+                        policy.label().replace('-', "_")
+                    ),
+                    tps,
+                    bytes as f64,
+                ));
+            }
+            // The quant acceptance bar: reading a quarter of the base
+            // bytes must not cost tokens/s in the weight-bound regime.
+            assert!(
+                tok_per_s[1] >= tok_per_s[0],
+                "merged-int8 decoded slower than f32 at 16 sessions: \
+                 {:.0} vs {:.0} tok/s",
+                tok_per_s[1],
+                tok_per_s[0]
+            );
+            println!(
+                "    → int8/f32 tokens-per-second: {:.2}× (bar: ≥1.0× at 16 sessions)",
+                tok_per_s[1] / tok_per_s[0]
             );
         }
 
@@ -706,6 +816,32 @@ fn main() {
             println!(
                 "    → RAM 16 adapters / 1 adapter: {:.3}× (bar: <1.5×)",
                 ram_at[2] as f64 / ram_at[0] as f64
+            );
+            // The int8 face of the same bar: quantizing the resident
+            // base shrinks its sweep-weight payload to ~¼ (1-byte codes
+            // + one f32 scale per row). Asserted on the dense pair —
+            // CSR keeps f32-sized index arrays, so only its value
+            // payload shrinks (the mod.rs parity test pins that ratio
+            // at <0.75×).
+            let f32_base_w = gm
+                .compile_base(MergePolicy::Merged)
+                .model()
+                .sweep_weight_bytes();
+            let int8_base_w = gm
+                .compile_base(MergePolicy::MergedInt8)
+                .model()
+                .sweep_weight_bytes();
+            assert!(
+                (int8_base_w as f64) < 0.35 * f32_base_w as f64,
+                "int8 base is not <0.35× the f32 base weight footprint: \
+                 {int8_base_w} vs {f32_base_w} B"
+            );
+            println!(
+                "    → int8 resident base weights: {:.1} KiB vs f32 {:.1} KiB \
+                 ({:.3}×, bar <0.35×)",
+                int8_base_w as f64 / 1024.0,
+                f32_base_w as f64 / 1024.0,
+                int8_base_w as f64 / f32_base_w as f64
             );
 
             // Zero-allocation sweeps hold with *mixed-adapter* packing
@@ -1012,12 +1148,42 @@ fn main() {
             ("policy", Json::str("merged")),
             ("smoke", Json::Bool(smoke_mode())),
             ("scenarios", Json::Arr(decode_scenarios)),
+            ("quant_scenarios", Json::Arr(quant_scenarios)),
             ("adapter_scenarios", Json::Arr(adapter_scenarios)),
             ("prefix", prefix_json),
             ("overload", overload_json),
         ]);
         std::fs::write("BENCH_decode.json", doc.pretty()).expect("write BENCH_decode.json");
         println!("    → wrote BENCH_decode.json");
+
+        // Small, commit-worthy perf trajectory (scenario → tokens/s,
+        // bytes/sweep). BENCH_decode.json is gitignored — the full dump
+        // goes up as a CI artifact instead — but this summary is meant
+        // to be checked in when the headline numbers move, so the repo
+        // history carries a perf trajectory to diff against.
+        let summary_obj = Json::Obj(
+            summary_rows
+                .iter()
+                .map(|(name, tps, bytes)| {
+                    (
+                        name.clone(),
+                        Json::obj(vec![
+                            ("tok_per_s", Json::num(*tps)),
+                            ("bytes_per_sweep", Json::num(*bytes)),
+                        ]),
+                    )
+                })
+                .collect(),
+        );
+        let summary_doc = Json::obj(vec![
+            ("bench", Json::str("perf_hotpath")),
+            ("model", Json::str(fim.cfg.name.clone())),
+            ("smoke", Json::Bool(smoke_mode())),
+            ("scenarios", summary_obj),
+        ]);
+        std::fs::write("BENCH_summary.json", summary_doc.pretty())
+            .expect("write BENCH_summary.json");
+        println!("    → wrote BENCH_summary.json");
 
         println!("\n== continuous-batched decode serving ==");
         // Serial baseline vs session interleaving on ONE worker, same

@@ -55,6 +55,7 @@ use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, RwLock};
 
+use super::kernels::{QuantCsr, QuantDense};
 use super::{
     CooScatter, CsrMatrix, InferAttention, InferBlock, InferHead, InferLinear, InferenceModel,
     MergePolicy, Repr, CSR_MIN_SPARSITY,
@@ -75,6 +76,18 @@ fn freeze_linear(w: Tensor, bias: Vec<f32>, policy: MergePolicy) -> InferLinear 
             }
         }
         MergePolicy::Merged | MergePolicy::Compact => Repr::Dense(Arc::new(w)),
+        // The quantized resident base: one int8 copy of `W⊙S₁` serves
+        // every attached task — the deltas stay f32 and never touch
+        // the shared codes (see docs/QUANTIZATION.md).
+        MergePolicy::MergedInt8 => Repr::QuantDense(Arc::new(QuantDense::from_dense(&w))),
+        MergePolicy::CsrInt8 => {
+            let csr = CsrMatrix::from_dense(&w);
+            if csr.sparsity() >= CSR_MIN_SPARSITY {
+                Repr::QuantCsr(Arc::new(QuantCsr::from_csr(&csr)))
+            } else {
+                Repr::QuantDense(Arc::new(QuantDense::from_dense(&w)))
+            }
+        }
     };
     InferLinear {
         repr,
@@ -308,13 +321,16 @@ impl Transformer {
                     ln2: super::InferNorm::from_train(&blk.ln2),
                     fc1: freeze_base_linear(&blk.ffn.fc1, policy),
                     fc2: freeze_base_linear(&blk.ffn.fc2, policy),
+                    // Houlsby adapter projections are tuned task
+                    // signal — they stay f32 under the int8 policies,
+                    // mirroring the monolithic compile.
                     adapter1: blk.adapter1.as_ref().map(|ad| super::InferAdapter {
-                        down: freeze_base_linear(&ad.down, policy),
-                        up: freeze_base_linear(&ad.up, policy),
+                        down: freeze_base_linear(&ad.down, policy.dequantized()),
+                        up: freeze_base_linear(&ad.up, policy.dequantized()),
                     }),
                     adapter2: blk.adapter2.as_ref().map(|ad| super::InferAdapter {
-                        down: freeze_base_linear(&ad.down, policy),
-                        up: freeze_base_linear(&ad.up, policy),
+                        down: freeze_base_linear(&ad.down, policy.dequantized()),
+                        up: freeze_base_linear(&ad.up, policy.dequantized()),
                     }),
                 }
             })
@@ -639,6 +655,56 @@ mod tests {
         // Far below the naive cost of 8 monolithic models + the base.
         let naive = 9 * base_bytes;
         assert!(2 * total < naive, "8 tasks cost {total} bytes vs naive {naive}");
+    }
+
+    #[test]
+    fn quantized_base_serves_f32_adapters() {
+        // One int8 resident base, N f32 task deltas: the attach path
+        // must share the quantized repr Arc (not re-quantize), cost
+        // only the delta per task, and stay within the pinned 3e-2
+        // quant tolerance of the f32-attached model.
+        let base_t = dsee_base();
+        for policy in [MergePolicy::MergedInt8, MergePolicy::CsrInt8] {
+            let qcb = base_t.compile_base(policy);
+            let fcb = base_t.compile_base(policy.dequantized());
+            let mut seen = HashSet::new();
+            let q_bytes = qcb.model().resident_bytes(&mut seen);
+            let f_bytes = fcb.model().resident_bytes(&mut HashSet::new());
+            assert!(
+                q_bytes < f_bytes,
+                "{}: quantized base {q_bytes} not smaller than f32 {f_bytes}",
+                policy.label()
+            );
+
+            let task = tuned_task(&base_t, 31);
+            let q_att = qcb.attach(&task.compile_adapter(policy));
+            let added = q_att.resident_bytes(&mut seen);
+            assert!(
+                added <= task.compile_adapter(policy).delta_bytes(),
+                "{}: attach leaked base bytes ({added})",
+                policy.label()
+            );
+            // Same int8 buffer, by pointer, as the resident base.
+            assert_eq!(
+                q_att.blocks[0].attn.wq.base_ptr(),
+                qcb.model().blocks[0].attn.wq.base_ptr(),
+                "{}: attached model must share the quantized base Arc",
+                policy.label()
+            );
+
+            let f_att = fcb.attach(&task.compile_adapter(policy.dequantized()));
+            let ids: Vec<u32> = (0..8).map(|i| (i * 3 % 60) as u32).collect();
+            let want = f_att.forward(&ids, 1, 8);
+            let got = q_att.forward(&ids, 1, 8);
+            assert_eq!(got.shape, want.shape);
+            for (a, b) in got.data.iter().zip(&want.data) {
+                assert!(
+                    (a - b).abs() < 3e-2 * (1.0 + a.abs()),
+                    "{}: {a} vs {b}",
+                    policy.label()
+                );
+            }
+        }
     }
 
     #[test]

@@ -121,6 +121,17 @@ impl CsrMatrix {
                 prev = Some(c);
             }
         }
+        // Values-finite check, `validate` builds only: quantization
+        // ([`QuantCsr::from_csr`]) divides by per-row max|v|, so a NaN
+        // or infinity here would poison every scale downstream of it.
+        // (An *all-zero* row is fine — the scale rule maps it to 1.0.)
+        #[cfg(feature = "validate")]
+        for (e, &v) in self.vals.iter().enumerate() {
+            anyhow::ensure!(
+                v.is_finite(),
+                "csr validate: non-finite value {v} at entry {e}"
+            );
+        }
         Ok(())
     }
 
@@ -360,6 +371,296 @@ impl CooScatter {
     }
 }
 
+/// Per-row symmetric quantization scale: `max|row| / 127`, or `1.0`
+/// for an all-zero row — a zero row must quantize to all-zero codes
+/// with a harmless scale, not divide 0/0 into NaN (regression-pinned
+/// in `tests/props.rs` and guarded by [`CsrMatrix::validate`]'s
+/// values-finite check under the `validate` feature).
+fn row_scale(vals: &[f32]) -> f32 {
+    let amax = vals.iter().fold(0.0f32, |m, &v| m.max(v.abs()));
+    if amax == 0.0 {
+        1.0
+    } else {
+        amax / 127.0
+    }
+}
+
+/// Round-to-nearest symmetric code: `|v| ≤ 127·scale` by construction
+/// of [`row_scale`], so the result always fits i8 without clamping and
+/// the dequantization error is at most `scale / 2` per element.
+fn quantize(v: f32, scale: f32) -> i8 {
+    (v / scale).round() as i8
+}
+
+/// Row-scaled symmetric int8 quantization of a dense `[in, out]`
+/// weight matrix: `scale[r] = max|w[r,:]| / 127` per *input* row (the
+/// axis the i–k–j kernels stream), codes `q = round(w / scale)`, so
+/// `w[r, j] ≈ q[r, j] · scale[r]` within `scale[r] / 2` per element.
+///
+/// This is the compiled form of the `MergedInt8` policy's base weights
+/// (and the `CsrInt8` fallback for layers too dense for CSR): 1 byte
+/// per weight + 4 bytes per row instead of 4 bytes per weight, which
+/// is the entire win — the fused decode sweep is memory-bandwidth-
+/// bound on base weights, so bytes are tokens/s. Accumulation stays
+/// f32 throughout ([`crate::tensor::linalg::matmul_q8_into`]), and the
+/// task-specific carriers (UV side-path, S₂ scatter, gates, norms)
+/// are never quantized — see docs/QUANTIZATION.md.
+#[derive(Clone, Debug)]
+pub struct QuantDense {
+    pub rows: usize,
+    pub cols: usize,
+    /// Row-major int8 codes, `[rows, cols]`.
+    pub q: Vec<i8>,
+    /// Per input-row dequantization scale, `[rows]`.
+    pub scale: Vec<f32>,
+}
+
+impl QuantDense {
+    /// Quantize a dense `[rows, cols]` matrix. Under the `validate`
+    /// feature, non-finite inputs are rejected up front — the scale
+    /// computation divides by a row maximum, and a NaN row would
+    /// otherwise quantize into garbage codes silently.
+    pub fn from_dense(w: &Tensor) -> QuantDense {
+        #[cfg(feature = "validate")]
+        crate::util::validate::check_finite("QuantDense::from_dense", &w.data);
+        let (rows, cols) = (w.rows(), w.cols());
+        let mut q = Vec::with_capacity(rows * cols);
+        let mut scale = Vec::with_capacity(rows);
+        for r in 0..rows {
+            let row = &w.data[r * cols..(r + 1) * cols];
+            let s = row_scale(row);
+            scale.push(s);
+            for &v in row {
+                q.push(quantize(v, s));
+            }
+        }
+        QuantDense { rows, cols, q, scale }
+    }
+
+    /// y = x · dequant(Q) for x: [B, rows]; returns [B, cols].
+    /// Serial by design — the batched quant path exists for parity and
+    /// prefill, the hot path is the `_into` kernels below.
+    pub fn matmul(&self, x: &Tensor) -> Tensor {
+        let (bsz, k) = (x.rows(), x.cols());
+        assert_eq!(k, self.rows, "quant matmul: x {:?} vs rows {}", x.shape, self.rows);
+        let mut y = Tensor::zeros(&[bsz, self.cols]);
+        crate::tensor::linalg::matmul_q8_into(
+            &x.data,
+            &self.q,
+            &self.scale,
+            &mut y.data,
+            bsz,
+            k,
+            self.cols,
+        );
+        y
+    }
+
+    /// y += x · dequant(Q) for a single input row — the decode-path
+    /// kernel (seed-then-accumulate, zero allocation).
+    // lint: hot-path
+    #[inline]
+    pub fn matvec(&self, x: &[f32], y: &mut [f32]) {
+        assert_eq!(x.len(), self.rows, "quant matvec: x len {} vs rows {}", x.len(), self.rows);
+        assert_eq!(y.len(), self.cols, "quant matvec: y len {} vs cols {}", y.len(), self.cols);
+        crate::tensor::linalg::gemv_q8_into(x, &self.q, &self.scale, y, self.rows, self.cols);
+    }
+
+    /// ys += xs · dequant(Q) for `n` packed input rows — the fused
+    /// decode kernel. Rides [`crate::tensor::linalg::matmul_q8_into`],
+    /// whose outer loop runs [`Self::matvec`]'s exact per-row loops, so
+    /// row `r` is bit-identical to the single-row kernel — the same
+    /// fused-vs-solo structural parity the f32 kernels guarantee.
+    /// Allocates nothing.
+    // lint: hot-path
+    pub fn matvec_batch(&self, xs: &[f32], ys: &mut [f32], n: usize) {
+        assert_eq!(
+            xs.len(),
+            n * self.rows,
+            "quant matvec_batch: xs len {} vs n*rows {}",
+            xs.len(),
+            n * self.rows
+        );
+        assert_eq!(
+            ys.len(),
+            n * self.cols,
+            "quant matvec_batch: ys len {} vs n*cols {}",
+            ys.len(),
+            n * self.cols
+        );
+        crate::tensor::linalg::matmul_q8_into(
+            xs,
+            &self.q,
+            &self.scale,
+            ys,
+            n,
+            self.rows,
+            self.cols,
+        );
+    }
+
+    /// Dequantize (parity tests; also the error-bound property test).
+    pub fn to_dense(&self) -> Tensor {
+        let mut t = Tensor::zeros(&[self.rows, self.cols]);
+        for r in 0..self.rows {
+            for j in 0..self.cols {
+                t.data[r * self.cols + j] = (self.q[r * self.cols + j] as f32) * self.scale[r];
+            }
+        }
+        t
+    }
+}
+
+/// Row-scaled symmetric int8 quantization of a [`CsrMatrix`]: same
+/// structure (`row_ptr`/`col_idx` shared layout), but the stored
+/// values are i8 codes with one f32 scale per input row — 1 byte per
+/// surviving weight instead of 4, compounding S₁ pruning's skip-the-
+/// zeros win with quantization's shrink-the-bytes win. The compiled
+/// form of the `CsrInt8` policy when the base clears
+/// `CSR_MIN_SPARSITY`.
+#[derive(Clone, Debug)]
+pub struct QuantCsr {
+    pub rows: usize,
+    pub cols: usize,
+    /// `row_ptr[k]..row_ptr[k+1]` indexes the entries of input-row `k`.
+    pub row_ptr: Vec<usize>,
+    pub col_idx: Vec<u32>,
+    /// int8 codes, aligned with `col_idx`.
+    pub vals_q: Vec<i8>,
+    /// Per input-row dequantization scale, `[rows]` (1.0 for rows with
+    /// no stored entries).
+    pub scale: Vec<f32>,
+}
+
+impl QuantCsr {
+    /// Quantize a CSR base. The scale of row `r` is computed over that
+    /// row's *stored* values only (pruned weights are exactly zero and
+    /// stay exact). Under the `validate` feature the source layout is
+    /// re-validated first, which now includes the values-finite check —
+    /// a NaN value would poison its row's scale.
+    pub fn from_csr(csr: &CsrMatrix) -> QuantCsr {
+        #[cfg(feature = "validate")]
+        csr.validate()
+            .expect("CSR invariants must hold before quantization");
+        let mut vals_q = Vec::with_capacity(csr.nnz());
+        let mut scale = Vec::with_capacity(csr.rows);
+        for k in 0..csr.rows {
+            let row = &csr.vals[csr.row_ptr[k]..csr.row_ptr[k + 1]];
+            let s = row_scale(row);
+            scale.push(s);
+            for &v in row {
+                vals_q.push(quantize(v, s));
+            }
+        }
+        QuantCsr {
+            rows: csr.rows,
+            cols: csr.cols,
+            row_ptr: csr.row_ptr.clone(),
+            col_idx: csr.col_idx.clone(),
+            vals_q,
+            scale,
+        }
+    }
+
+    /// Stored entry count (codes, including values that rounded to 0 —
+    /// the support is structural, not value-dependent).
+    pub fn nnz(&self) -> usize {
+        self.vals_q.len()
+    }
+
+    /// y = x · dequant(W) for x: [B, rows]; returns [B, cols]. The
+    /// batched (prefill/classification) path; per row it runs exactly
+    /// [`Self::matvec`]'s loops.
+    pub fn matmul(&self, x: &Tensor) -> Tensor {
+        let (bsz, k) = (x.rows(), x.cols());
+        assert_eq!(k, self.rows, "quant csr matmul: x {:?} vs rows {}", x.shape, self.rows);
+        let mut y = Tensor::zeros(&[bsz, self.cols]);
+        for b in 0..bsz {
+            let xr = &x.data[b * k..(b + 1) * k];
+            self.matvec(xr, &mut y.data[b * self.cols..(b + 1) * self.cols]);
+        }
+        y
+    }
+
+    /// y += x · dequant(W) for a single input row — the decode-path
+    /// kernel. Row-gather like [`CsrMatrix::matvec`], with the scale
+    /// folded into the activation once per live input row
+    /// (`s = a · scale[kk]`), then one multiply-add per stored byte.
+    /// **Accumulates** (callers seed with the bias), allocates nothing.
+    // lint: hot-path
+    #[inline]
+    pub fn matvec(&self, x: &[f32], y: &mut [f32]) {
+        assert_eq!(x.len(), self.rows, "quant csr matvec: x len {} vs rows {}", x.len(), self.rows);
+        assert_eq!(y.len(), self.cols, "quant csr matvec: y len {} vs cols {}", y.len(), self.cols);
+        for (kk, &a) in x.iter().enumerate() {
+            if a == 0.0 {
+                continue;
+            }
+            let s = a * self.scale[kk];
+            for e in self.row_ptr[kk]..self.row_ptr[kk + 1] {
+                y[self.col_idx[e] as usize] += s * (self.vals_q[e] as f32);
+            }
+        }
+    }
+
+    /// ys += xs · dequant(W) for `n` packed input rows — the fused
+    /// sweep kernel, entry-major like [`CsrMatrix::matvec_batch`]: each
+    /// stored *byte* is read once per sweep and applied to every live
+    /// row. Per output element each contribution is computed as
+    /// `(a · scale[kk]) · f32(q)` — the same two multiplies in the same
+    /// association as [`Self::matvec`], arriving in the same (input-row
+    /// ascending, entry ascending) order — so the fused result is
+    /// bit-identical to per-row stepping. Allocates nothing.
+    // lint: hot-path
+    pub fn matvec_batch(&self, xs: &[f32], ys: &mut [f32], n: usize) {
+        assert_eq!(
+            xs.len(),
+            n * self.rows,
+            "quant csr matvec_batch: xs len {} vs n*rows {}",
+            xs.len(),
+            n * self.rows
+        );
+        assert_eq!(
+            ys.len(),
+            n * self.cols,
+            "quant csr matvec_batch: ys len {} vs n*cols {}",
+            ys.len(),
+            n * self.cols
+        );
+        for kk in 0..self.rows {
+            let lo = self.row_ptr[kk];
+            let hi = self.row_ptr[kk + 1];
+            if lo == hi {
+                continue;
+            }
+            let sc = self.scale[kk];
+            for e in lo..hi {
+                let col = self.col_idx[e] as usize;
+                let qf = self.vals_q[e] as f32;
+                for b in 0..n {
+                    let a = xs[b * self.rows + kk];
+                    if a == 0.0 {
+                        continue;
+                    }
+                    ys[b * self.cols + col] += (a * sc) * qf;
+                }
+            }
+        }
+    }
+
+    /// Dequantize (parity tests).
+    pub fn to_dense(&self) -> Tensor {
+        let mut t = Tensor::zeros(&[self.rows, self.cols]);
+        for k in 0..self.rows {
+            for e in self.row_ptr[k]..self.row_ptr[k + 1] {
+                t.data[k * self.cols + self.col_idx[e] as usize] =
+                    (self.vals_q[e] as f32) * self.scale[k];
+            }
+        }
+        t
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -571,5 +872,167 @@ mod tests {
         coo.matvec(&x, &mut y);
         assert_eq!(y[3], 2.5);
         assert_eq!(y[1], 0.0);
+    }
+
+    #[test]
+    fn quant_dense_roundtrip_error_within_half_scale() {
+        let mut rng = Rng::new(710);
+        let mut w = Tensor::randn(&[9, 13], 1.5, &mut rng);
+        // Row 0 all-zero: scale must default to 1.0, codes to 0.
+        for j in 0..13 {
+            w.data[j] = 0.0;
+        }
+        let qd = QuantDense::from_dense(&w);
+        assert_eq!(qd.scale[0], 1.0, "all-zero row scale must be 1.0");
+        let deq = qd.to_dense();
+        for r in 0..9 {
+            assert!(qd.scale[r].is_finite() && qd.scale[r] > 0.0);
+            for j in 0..13 {
+                let err = (w.data[r * 13 + j] - deq.data[r * 13 + j]).abs();
+                assert!(
+                    err <= 0.5001 * qd.scale[r],
+                    "({r},{j}): err {err} vs scale {}",
+                    qd.scale[r]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn quant_dense_matvec_matches_dequantized_matmul() {
+        let mut rng = Rng::new(711);
+        for &(k, n) in &[(8usize, 8usize), (32, 16), (7, 19)] {
+            let w = Tensor::randn(&[k, n], 1.0, &mut rng);
+            let qd = QuantDense::from_dense(&w);
+            let x = Tensor::randn(&[1, k], 0.7, &mut rng);
+            let bias: Vec<f32> = (0..n).map(|i| (i as f32) * 0.01).collect();
+            let mut y = bias.clone();
+            qd.matvec(&x.data, &mut y);
+            let want = matmul(&x, &qd.to_dense());
+            for (j, (a, b)) in y.iter().zip(&want.data).enumerate() {
+                let b = b + bias[j];
+                assert!((a - b).abs() < 1e-5 * (1.0 + a.abs()), "{a} vs {b}");
+            }
+        }
+    }
+
+    #[test]
+    fn quant_dense_batch_is_bit_identical_to_per_row_matvec() {
+        let mut rng = Rng::new(712);
+        for &(n, k, cols) in &[(1usize, 8usize, 8usize), (4, 32, 16), (7, 19, 23)] {
+            let w = sparse_matrix(k, cols, 2, &mut rng);
+            let qd = QuantDense::from_dense(&w);
+            let mut xs = Tensor::randn(&[n, k], 0.7, &mut rng);
+            for (i, v) in xs.data.iter_mut().enumerate() {
+                if i % 5 == 0 {
+                    *v = 0.0;
+                }
+            }
+            let bias: Vec<f32> = (0..cols).map(|i| (i as f32) * 0.01).collect();
+            let mut fused = vec![0.0f32; n * cols];
+            for r in 0..n {
+                fused[r * cols..(r + 1) * cols].copy_from_slice(&bias);
+            }
+            qd.matvec_batch(&xs.data, &mut fused, n);
+            for r in 0..n {
+                let mut want = bias.clone();
+                qd.matvec(&xs.data[r * k..(r + 1) * k], &mut want);
+                assert_eq!(
+                    &fused[r * cols..(r + 1) * cols],
+                    want.as_slice(),
+                    "row {r} diverged from per-row quant matvec"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn quant_csr_roundtrip_and_kernel_parity() {
+        let mut rng = Rng::new(713);
+        let shapes = [(1usize, 8usize, 8usize, 2usize), (4, 32, 16, 4), (7, 19, 23, 3)];
+        for &(n, k, cols, keep) in &shapes {
+            let w = sparse_matrix(k, cols, keep, &mut rng);
+            let csr = CsrMatrix::from_dense(&w);
+            let qc = QuantCsr::from_csr(&csr);
+            assert_eq!(qc.nnz(), csr.nnz(), "support must be preserved");
+            // Per-element error bound over stored values.
+            let deq = qc.to_dense();
+            for r in 0..k {
+                for j in 0..cols {
+                    let err = (w.data[r * cols + j] - deq.data[r * cols + j]).abs();
+                    assert!(err <= 0.5001 * qc.scale[r], "err {err} vs scale {}", qc.scale[r]);
+                }
+            }
+            // Fused vs per-row bit-identity, the decode-sweep contract.
+            let mut xs = Tensor::randn(&[n, k], 0.7, &mut rng);
+            for (i, v) in xs.data.iter_mut().enumerate() {
+                if i % 5 == 0 {
+                    *v = 0.0;
+                }
+            }
+            let bias: Vec<f32> = (0..cols).map(|i| (i as f32) * 0.01).collect();
+            let mut fused = vec![0.0f32; n * cols];
+            for r in 0..n {
+                fused[r * cols..(r + 1) * cols].copy_from_slice(&bias);
+            }
+            qc.matvec_batch(&xs.data, &mut fused, n);
+            for r in 0..n {
+                let mut want = bias.clone();
+                qc.matvec(&xs.data[r * k..(r + 1) * k], &mut want);
+                assert_eq!(
+                    &fused[r * cols..(r + 1) * cols],
+                    want.as_slice(),
+                    "row {r} diverged from per-row quant csr matvec"
+                );
+            }
+            // And the batched matmul is the same per-row kernel.
+            let got = qc.matmul(&xs);
+            for r in 0..n {
+                let mut want = vec![0.0f32; cols];
+                qc.matvec(&xs.data[r * k..(r + 1) * k], &mut want);
+                assert_eq!(&got.data[r * cols..(r + 1) * cols], want.as_slice());
+            }
+        }
+    }
+
+    #[test]
+    fn quant_zero_matrix_quantizes_to_zero_with_unit_scales() {
+        let w = Tensor::zeros(&[4, 6]);
+        let qd = QuantDense::from_dense(&w);
+        assert!(qd.scale.iter().all(|&s| s == 1.0));
+        assert!(qd.q.iter().all(|&c| c == 0));
+        let qc = QuantCsr::from_csr(&CsrMatrix::from_dense(&w));
+        assert_eq!(qc.nnz(), 0);
+        assert!(qc.scale.iter().all(|&s| s == 1.0));
+    }
+
+    /// Regression for the scale-poisoning hazard: a hand-assembled CSR
+    /// carrying a NaN value must fail [`CsrMatrix::validate`] under the
+    /// `validate` feature (quantization divides by max|v| per row).
+    #[cfg(feature = "validate")]
+    #[test]
+    fn validate_rejects_non_finite_values() {
+        let mut rng = Rng::new(714);
+        let w = sparse_matrix(6, 8, 2, &mut rng);
+        let good = CsrMatrix::from_dense(&w);
+        assert!(good.validate().is_ok());
+        let mut bad = good.clone();
+        bad.vals[0] = f32::NAN;
+        assert!(bad.validate().is_err(), "NaN value must fail validate");
+        let mut bad = good;
+        bad.vals[1] = f32::INFINITY;
+        assert!(bad.validate().is_err(), "inf value must fail validate");
+    }
+
+    /// Non-finite inputs are rejected at quantization time under
+    /// `validate` — a NaN would otherwise silently poison its row's
+    /// scale and every code in that row.
+    #[cfg(feature = "validate")]
+    #[test]
+    #[should_panic(expected = "non-finite")]
+    fn quant_dense_rejects_nan_input_under_validate() {
+        let mut w = Tensor::full(&[3, 4], 1.0);
+        w.data[5] = f32::NAN;
+        let _ = QuantDense::from_dense(&w);
     }
 }

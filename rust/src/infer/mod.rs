@@ -21,8 +21,18 @@
 //! * [`MergePolicy::Compact`] — structurally dead units are physically
 //!   removed: zero-gated attention heads and FFN units whose fan-in is
 //!   identically zero vanish from the matmul shapes.
+//! * [`MergePolicy::MergedInt8`] / [`MergePolicy::CsrInt8`] — the
+//!   *base* `W⊙S₁` stored as row-scaled int8 (dense codes, or int8 CSR
+//!   values when the sparsity clears [`CSR_MIN_SPARSITY`]) with f32
+//!   accumulate, while **every task-specific carrier stays f32**: the
+//!   low-rank UV side-path, the `S₂` scatter, head gates, and
+//!   layernorms all ride unquantized (they carry the fine-tuned signal
+//!   and are O(d·r) anyway). The fused decode sweep is memory-
+//!   bandwidth-bound on base weights, so the 4×-fewer bytes are the
+//!   speedup; parity vs the f32 policies is pinned at 3e-2 relative
+//!   (see docs/QUANTIZATION.md).
 //!
-//! All three produce bit-identical *semantics* (logits match the
+//! The f32 policies produce bit-identical *semantics* (logits match the
 //! training-path forward to float rounding; see the parity tests here
 //! and in `tests/infer_parity.rs`). The serving coordinator
 //! (`crate::coordinator::serve`) shares one `Arc<InferenceModel>`
@@ -49,7 +59,7 @@ use crate::config::ModelCfg;
 use crate::nn::{Head, Transformer};
 use crate::tensor::linalg::{gemv_into, matmul, matmul_bt, matmul_into, par_matmul};
 use crate::tensor::Tensor;
-use kernels::{CooScatter, CsrMatrix};
+use kernels::{CooScatter, CsrMatrix, QuantCsr, QuantDense};
 use std::collections::HashSet;
 use std::sync::Arc;
 
@@ -102,6 +112,13 @@ pub enum MergePolicy {
     /// Like `Merged`, plus physically remove zero-gated heads and dead
     /// FFN units, shrinking the matmul shapes.
     Compact,
+    /// Like `Merged`, but the *base* `W⊙S₁` is stored as row-scaled
+    /// int8 (`scale[r] = max|w[r,:]| / 127`, f32 accumulate) while the
+    /// UV side-path, `S₂` scatter, gates, and norms stay f32.
+    MergedInt8,
+    /// Like `Csr`, with the CSR values (or the dense fallback) stored
+    /// as row-scaled int8; all task-specific carriers stay f32.
+    CsrInt8,
 }
 
 impl MergePolicy {
@@ -110,6 +127,26 @@ impl MergePolicy {
             MergePolicy::Merged => "merged",
             MergePolicy::Csr => "csr",
             MergePolicy::Compact => "compact",
+            MergePolicy::MergedInt8 => "merged-int8",
+            MergePolicy::CsrInt8 => "csr-int8",
+        }
+    }
+
+    /// Does this policy quantize the base weights?
+    pub fn is_quantized(&self) -> bool {
+        matches!(self, MergePolicy::MergedInt8 | MergePolicy::CsrInt8)
+    }
+
+    /// The f32 policy whose representation choices this one mirrors.
+    /// Used for the small task-signal linears (Houlsby adapter
+    /// projections) that must stay unquantized under the int8 policies
+    /// — they are tuned signal, and at O(d·width) they are not where
+    /// the sweep's bytes go.
+    pub(crate) fn dequantized(&self) -> MergePolicy {
+        match self {
+            MergePolicy::MergedInt8 => MergePolicy::Merged,
+            MergePolicy::CsrInt8 => MergePolicy::Csr,
+            p => *p,
         }
     }
 }
@@ -142,36 +179,71 @@ fn arc_tensor_bytes(t: &Arc<Tensor>, seen: &mut HashSet<usize>) -> usize {
 struct LinParts {
     w: Tensor,
     low: Option<(Tensor, Tensor, f32)>, // (u [in,r], v [r,out], scale)
+    /// `S₂` kept apart from `w` — quantized policies only, where
+    /// folding it into the base would push task signal through int8.
+    sparse: Option<CooScatter>,
     bias: Vec<f32>,
 }
 
 impl LinParts {
     fn from_linear(lin: &crate::nn::linear::Linear, policy: MergePolicy) -> LinParts {
-        // Only the Csr policy benefits from keeping UV apart; everything
-        // else folds it into the dense merged weight up front.
-        if policy == MergePolicy::Csr {
-            if let Some(a) = &lin.adapter {
+        match policy {
+            // Csr keeps UV apart (folding it in would densify the
+            // base); S₂ shares the base's sparsity class and folds in.
+            MergePolicy::Csr if lin.adapter.is_some() => {
+                let a = lin.adapter.as_ref().unwrap();
                 let mut w = lin.effective_w();
                 if let Some(r) = &lin.residual {
                     w = w.add(&r.to_dense(lin.in_dim(), lin.out_dim()));
                 }
-                return LinParts {
+                LinParts {
                     w,
                     low: Some((a.u.clone(), a.v.clone(), a.scale)),
+                    sparse: None,
                     bias: lin.b.data.clone(),
-                };
+                }
             }
-        }
-        LinParts {
-            w: lin.effective_total(),
-            low: None,
-            bias: lin.b.data.clone(),
+            // Quantized policies keep *all* task signal f32: UV and S₂
+            // both ride as side-paths; only the frozen `W⊙S₁` base is
+            // quantized by `finalize`.
+            MergePolicy::MergedInt8 | MergePolicy::CsrInt8 => {
+                let low = lin
+                    .adapter
+                    .as_ref()
+                    .map(|a| (a.u.clone(), a.v.clone(), a.scale));
+                let sparse = lin.residual.as_ref().and_then(|r| {
+                    if r.idx.is_empty() {
+                        None
+                    } else {
+                        Some(CooScatter::from_entries(
+                            lin.in_dim(),
+                            lin.out_dim(),
+                            &r.idx,
+                            &r.values.data,
+                        ))
+                    }
+                });
+                LinParts {
+                    w: lin.effective_w(),
+                    low,
+                    sparse,
+                    bias: lin.b.data.clone(),
+                }
+            }
+            // Everything else folds the whole task into one dense
+            // merged weight up front.
+            _ => LinParts {
+                w: lin.effective_total(),
+                low: None,
+                sparse: None,
+                bias: lin.b.data.clone(),
+            },
         }
     }
 
     /// Scale output columns `lo..hi` by `g` across every carrier — the
-    /// gate-folding primitive (weights, V factor, and bias all feed the
-    /// same output column).
+    /// gate-folding primitive (weights, V factor, S₂ entries, and bias
+    /// all feed the same output column).
     fn scale_out_cols(&mut self, lo: usize, hi: usize, g: f32) {
         let cols = self.w.cols();
         for row in 0..self.w.rows() {
@@ -184,6 +256,14 @@ impl LinParts {
             for row in 0..v.rows() {
                 for j in lo..hi {
                     v.data[row * vc + j] *= g;
+                }
+            }
+        }
+        if let Some(s) = &mut self.sparse {
+            for e in 0..s.vals.len() {
+                let c = s.col_idx[e] as usize;
+                if c >= lo && c < hi {
+                    s.vals[e] *= g;
                 }
             }
         }
@@ -217,11 +297,21 @@ pub struct InferLinear {
 enum Repr {
     Dense(Arc<Tensor>),
     Csr(Arc<CsrMatrix>),
+    /// Row-scaled int8 dense base (`MergedInt8`, and the `CsrInt8`
+    /// fallback below [`CSR_MIN_SPARSITY`]).
+    QuantDense(Arc<QuantDense>),
+    /// Row-scaled int8 CSR base (`CsrInt8`).
+    QuantCsr(Arc<QuantCsr>),
 }
 
 impl InferLinear {
     fn finalize(parts: LinParts, policy: MergePolicy) -> InferLinear {
-        let LinParts { mut w, mut low, bias } = parts;
+        let LinParts {
+            mut w,
+            mut low,
+            sparse,
+            bias,
+        } = parts;
         let repr = match policy {
             MergePolicy::Csr => {
                 let csr = CsrMatrix::from_dense(&w);
@@ -237,15 +327,28 @@ impl InferLinear {
                 }
             }
             MergePolicy::Merged | MergePolicy::Compact => {
-                debug_assert!(low.is_none(), "UV must be pre-folded outside Csr");
+                debug_assert!(low.is_none(), "UV must be pre-folded outside Csr/quant");
                 Repr::Dense(Arc::new(w))
+            }
+            MergePolicy::MergedInt8 => Repr::QuantDense(Arc::new(QuantDense::from_dense(&w))),
+            MergePolicy::CsrInt8 => {
+                let csr = CsrMatrix::from_dense(&w);
+                if csr.sparsity() >= CSR_MIN_SPARSITY {
+                    Repr::QuantCsr(Arc::new(QuantCsr::from_csr(&csr)))
+                } else {
+                    // Dense int8 fallback. Unlike the f32 Csr fallback,
+                    // UV is *not* folded back in — quantizing it would
+                    // push task signal through int8, and the f32
+                    // side-path costs only O(d·r).
+                    Repr::QuantDense(Arc::new(QuantDense::from_dense(&w)))
+                }
             }
         };
         InferLinear {
             repr,
             low,
             bias: Arc::new(bias),
-            sparse: None,
+            sparse,
         }
     }
 
@@ -253,6 +356,8 @@ impl InferLinear {
         match &self.repr {
             Repr::Dense(w) => w.rows(),
             Repr::Csr(c) => c.rows,
+            Repr::QuantDense(q) => q.rows,
+            Repr::QuantCsr(q) => q.rows,
         }
     }
 
@@ -260,6 +365,8 @@ impl InferLinear {
         match &self.repr {
             Repr::Dense(w) => w.cols(),
             Repr::Csr(c) => c.cols,
+            Repr::QuantDense(q) => q.cols,
+            Repr::QuantCsr(q) => q.cols,
         }
     }
 
@@ -270,6 +377,8 @@ impl InferLinear {
         let base = match &self.repr {
             Repr::Dense(w) => w.numel(),
             Repr::Csr(c) => c.nnz(),
+            Repr::QuantDense(q) => q.q.len(),
+            Repr::QuantCsr(q) => q.nnz(),
         };
         let low = self
             .low
@@ -279,7 +388,27 @@ impl InferLinear {
     }
 
     pub fn is_csr(&self) -> bool {
-        matches!(self.repr, Repr::Csr(_))
+        matches!(self.repr, Repr::Csr(_) | Repr::QuantCsr(_))
+    }
+
+    /// Is the base stored as row-scaled int8?
+    pub fn is_quant(&self) -> bool {
+        matches!(self.repr, Repr::QuantDense(_) | Repr::QuantCsr(_))
+    }
+
+    /// Bytes of stored base-weight payload (codes/values + scales +
+    /// CSR index arrays; bias, UV, and `S₂` excluded) — what the fused
+    /// sweep streams for this layer once per sweep, and what the int8
+    /// policies shrink 4×.
+    pub(crate) fn base_repr_bytes(&self) -> usize {
+        match &self.repr {
+            Repr::Dense(w) => w.data.len() * 4,
+            Repr::Csr(c) => c.vals.len() * 4 + c.col_idx.len() * 4 + c.row_ptr.len() * 8,
+            Repr::QuantDense(q) => q.q.len() + q.scale.len() * 4,
+            Repr::QuantCsr(q) => {
+                q.vals_q.len() + q.scale.len() * 4 + q.col_idx.len() * 4 + q.row_ptr.len() * 8
+            }
+        }
     }
 
     /// Identity of the shared base weight buffer (the `Arc` data
@@ -290,6 +419,8 @@ impl InferLinear {
         match &self.repr {
             Repr::Dense(w) => Arc::as_ptr(w) as usize,
             Repr::Csr(c) => Arc::as_ptr(c) as usize,
+            Repr::QuantDense(q) => Arc::as_ptr(q) as usize,
+            Repr::QuantCsr(q) => Arc::as_ptr(q) as usize,
         }
     }
 
@@ -298,9 +429,13 @@ impl InferLinear {
         let mut y = match &self.repr {
             // Large prefill/classification batches clear par_matmul's
             // 64k-output crossover and spread over the thread pool;
-            // below it the call degrades to the serial kernel.
+            // below it the call degrades to the serial kernel. The
+            // quant paths stay serial: they exist for decode, where the
+            // fused sweep is single-threaded by contract anyway.
             Repr::Dense(w) => par_matmul(x, w, pool_threads()),
             Repr::Csr(c) => c.matmul(x),
+            Repr::QuantDense(q) => q.matmul(x),
+            Repr::QuantCsr(q) => q.matmul(x),
         };
         if let Some((u, v, scale)) = &self.low {
             let xu = matmul(x, u);
@@ -347,6 +482,8 @@ impl InferLinear {
         match &self.repr {
             Repr::Dense(w) => gemv_into(x, &w.data, y, w.rows(), w.cols()),
             Repr::Csr(c) => c.matvec(x, y),
+            Repr::QuantDense(q) => q.matvec(x, y),
+            Repr::QuantCsr(q) => q.matvec(x, y),
         }
         if let Some((u, v, scale)) = &self.low {
             let r = u.cols();
@@ -416,6 +553,8 @@ impl InferLinear {
         match &self.repr {
             Repr::Dense(w) => matmul_into(xs, &w.data, ys, n, kd, od),
             Repr::Csr(c) => c.matvec_batch(xs, ys, n),
+            Repr::QuantDense(q) => q.matvec_batch(xs, ys, n),
+            Repr::QuantCsr(q) => q.matvec_batch(xs, ys, n),
         }
     }
 
@@ -475,6 +614,21 @@ impl InferLinear {
             Repr::Csr(c) => {
                 if seen.insert(Arc::as_ptr(c) as usize) {
                     c.vals.len() * 4 + c.col_idx.len() * 4 + c.row_ptr.len() * 8
+                } else {
+                    0
+                }
+            }
+            // int8 codes are 1 byte each; scales add 4 per input row.
+            Repr::QuantDense(q) => {
+                if seen.insert(Arc::as_ptr(q) as usize) {
+                    q.q.len() + q.scale.len() * 4
+                } else {
+                    0
+                }
+            }
+            Repr::QuantCsr(q) => {
+                if seen.insert(Arc::as_ptr(q) as usize) {
+                    q.vals_q.len() + q.scale.len() * 4 + q.col_idx.len() * 4 + q.row_ptr.len() * 8
                 } else {
                     0
                 }
@@ -799,6 +953,8 @@ pub struct LayerStat {
     pub cols: usize,
     pub nnz: usize,
     pub csr: bool,
+    /// Base stored as row-scaled int8.
+    pub quant: bool,
 }
 
 /// Aggregate compile statistics (the measured counterpart of the
@@ -983,6 +1139,7 @@ impl InferenceModel {
                 cols: lin.out_dim(),
                 nnz: lin.nnz(),
                 csr: lin.is_csr(),
+                quant: lin.is_quant(),
             });
         };
         for (i, blk) in self.blocks.iter().enumerate() {
@@ -1012,6 +1169,31 @@ impl InferenceModel {
     /// footprint: the shared base buffers count once, each task's
     /// `UV`/`S₂`/gates/head delta counts per task — the quantity the
     /// "N adapters in ~1× RAM" acceptance bench asserts on.
+    /// Bytes of base-weight payload the fused decode sweep streams per
+    /// sweep: every projection/FFN/adapter/head layer's stored base
+    /// representation (dense f32, CSR values + indices, or int8 codes
+    /// + scales), each read exactly once per sweep by the layer-major
+    /// engine. Biases, UV factors, `S₂`, norms, and embeddings are
+    /// excluded — they are O(d) or O(d·r), not where the bytes go.
+    /// This is the denominator of the int8 policies' bandwidth
+    /// argument, reported as `bytes_per_sweep` in the perf bench.
+    pub fn sweep_weight_bytes(&self) -> usize {
+        let mut total = 0;
+        for blk in &self.blocks {
+            for lin in [&blk.attn.wq, &blk.attn.wk, &blk.attn.wv, &blk.attn.wo, &blk.fc1, &blk.fc2]
+            {
+                total += lin.base_repr_bytes();
+            }
+            for ad in [&blk.adapter1, &blk.adapter2].into_iter().flatten() {
+                total += ad.down.base_repr_bytes() + ad.up.base_repr_bytes();
+            }
+        }
+        let head = match &self.head {
+            InferHead::Classifier(l) | InferHead::Regressor(l) | InferHead::Lm(l) => l,
+        };
+        total + head.base_repr_bytes()
+    }
+
     pub fn resident_bytes(&self, seen: &mut HashSet<usize>) -> usize {
         let mut total = arc_tensor_bytes(&self.tok, seen) + arc_tensor_bytes(&self.pos, seen);
         if let Some(p) = &self.prefix {
@@ -1115,13 +1297,15 @@ fn compile_block(blk: &crate::nn::Block, policy: MergePolicy) -> InferBlock {
         ln2: InferNorm::from_train(&blk.ln2),
         fc1: InferLinear::finalize(fc1, policy),
         fc2: InferLinear::finalize(fc2, policy),
+        // Houlsby adapter projections are tuned task signal — under
+        // the int8 policies they compile with the f32 analog.
         adapter1: blk.adapter1.as_ref().map(|ad| InferAdapter {
-            down: compile_linear(&ad.down, policy),
-            up: compile_linear(&ad.up, policy),
+            down: compile_linear(&ad.down, policy.dequantized()),
+            up: compile_linear(&ad.up, policy.dequantized()),
         }),
         adapter2: blk.adapter2.as_ref().map(|ad| InferAdapter {
-            down: compile_linear(&ad.down, policy),
-            up: compile_linear(&ad.up, policy),
+            down: compile_linear(&ad.down, policy.dequantized()),
+            up: compile_linear(&ad.up, policy.dequantized()),
         }),
     }
 }
@@ -1317,7 +1501,12 @@ mod tests {
             let mut lins = m.all_linears_mut();
             magnitude_prune_global(&mut lins, 0.5);
         }
-        for policy in [MergePolicy::Merged, MergePolicy::Csr] {
+        for policy in [
+            MergePolicy::Merged,
+            MergePolicy::Csr,
+            MergePolicy::MergedInt8,
+            MergePolicy::CsrInt8,
+        ] {
             let im = m.compile(policy);
             let blk = &im.blocks[0];
             for lin in [&blk.attn.wq, &blk.fc1, &blk.fc2] {
@@ -1338,6 +1527,67 @@ mod tests {
                 }
             }
         }
+    }
+
+    #[test]
+    fn quant_policies_parity_within_pinned_tolerance() {
+        // The int8 policies trade exactness for bytes: forward logits
+        // must stay within the documented 3e-2 relative tolerance of
+        // the f32 training forward (docs/QUANTIZATION.md), with the
+        // base actually quantized and strictly smaller than f32.
+        let mut rng = Rng::new(909);
+        let cfg = tiny_cfg("classifier", false);
+        let mut m = Transformer::new(&cfg, &mut rng);
+        attach_dsee(
+            &mut m,
+            &DseeCfg {
+                rank: 4,
+                n_sparse: 16,
+                ..DseeCfg::default()
+            },
+            &mut rng,
+        );
+        randomize_dsee(&mut m, &mut rng);
+        {
+            let mut lins = m.all_linears_mut();
+            magnitude_prune_global(&mut lins, 0.5);
+        }
+        for blk in &mut m.blocks {
+            blk.attn.gates = Tensor::from_vec(&[4], vec![0.9, 1.1, 0.7, 1.0]);
+        }
+        let ids: Vec<u32> = (0..2 * 8).map(|i| (i * 7 % 60) as u32).collect();
+        let (want, _) = m.forward(&ids, 2, 8);
+        for policy in [MergePolicy::MergedInt8, MergePolicy::CsrInt8] {
+            let im = m.compile(policy);
+            let got = im.forward(&ids, 2, 8);
+            assert_close(&got, &want, 3e-2, policy.label());
+            let st = im.stats();
+            assert!(
+                st.layers.iter().all(|l| l.quant
+                    || l.name.contains("ad1")
+                    || l.name.contains("ad2")),
+                "{}: base layers must quantize",
+                policy.label()
+            );
+            // The int8 base streams fewer bytes than its f32 analog:
+            // < 0.35x for the dense pair (codes are 1/4 the weight
+            // bytes); the CSR pair keeps its f32-sized index arrays,
+            // so only the value payload shrinks (< 0.75x).
+            let f32_bytes = m.compile(policy.dequantized()).sweep_weight_bytes();
+            let q_bytes = im.sweep_weight_bytes();
+            let bar = if policy == MergePolicy::MergedInt8 { 0.35 } else { 0.75 };
+            assert!(
+                (q_bytes as f64) < bar * f32_bytes as f64,
+                "{}: {q_bytes} bytes vs f32 {f32_bytes} (bar {bar})",
+                policy.label()
+            );
+        }
+        // CsrInt8 actually picks the compressed form at 50% sparsity.
+        let im = m.compile(MergePolicy::CsrInt8);
+        assert!(
+            im.stats().layers.iter().any(|l| l.csr && l.quant),
+            "no layer chose quantized CSR at 50% sparsity"
+        );
     }
 
     #[test]

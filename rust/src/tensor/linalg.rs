@@ -79,6 +79,79 @@ pub fn gemv_into(x: &[f32], w: &[f32], y: &mut [f32], k: usize, n: usize) {
     matmul_into(x, w, y, 1, k, n);
 }
 
+/// C += A · (Q ⊙ scale) for a **row-scaled int8** weight matrix — the
+/// quantized companion of [`matmul_into`]: `Q` is `[k, n]` row-major
+/// int8 codes and `scale[kk]` the per-input-row dequantization factor
+/// (`w[kk, j] ≈ q[kk, j] · scale[kk]`, see
+/// `crate::infer::kernels::QuantDense`), with all accumulation in f32.
+///
+/// Same i–k–j loop order and 8-wide unrolled axpy as the f32 kernel,
+/// but the inner stream reads 1 byte per weight instead of 4 — the
+/// whole point: the fused decode sweep is memory-bandwidth-bound on
+/// base weights, so shrinking the bytes is the speedup. The scale is
+/// folded into the activation once per (row, input) pair
+/// (`s = a·scale[kk]`), so the inner loop is still one multiply-add
+/// per weight: `c += s · f32(q)`. Per output element the contribution
+/// order and arithmetic are identical for every `m`, which makes
+/// [`gemv_q8_into`] (m = 1) bit-identical per row to this kernel —
+/// the fused-vs-solo decode parity argument, quantized.
+// lint: hot-path
+pub fn matmul_q8_into(
+    a: &[f32],
+    q: &[i8],
+    scale: &[f32],
+    c: &mut [f32],
+    m: usize,
+    k: usize,
+    n: usize,
+) {
+    debug_assert_eq!(a.len(), m * k, "matmul_q8_into: a len");
+    debug_assert_eq!(q.len(), k * n, "matmul_q8_into: q len");
+    debug_assert_eq!(scale.len(), k, "matmul_q8_into: scale len");
+    debug_assert_eq!(c.len(), m * n, "matmul_q8_into: c len");
+    for i in 0..m {
+        let arow = &a[i * k..(i + 1) * k];
+        let crow = &mut c[i * n..(i + 1) * n];
+        for (kk, &aik) in arow.iter().enumerate() {
+            if aik == 0.0 {
+                continue; // sparse-friendly: dead activations skip work
+            }
+            let s = aik * scale[kk];
+            let qrow = &q[kk * n..(kk + 1) * n];
+            // 8-wide unrolled axpy: crow += s * f32(qrow).
+            let chunks = n / 8;
+            for c8 in 0..chunks {
+                let o = c8 * 8;
+                crow[o] += s * (qrow[o] as f32);
+                crow[o + 1] += s * (qrow[o + 1] as f32);
+                crow[o + 2] += s * (qrow[o + 2] as f32);
+                crow[o + 3] += s * (qrow[o + 3] as f32);
+                crow[o + 4] += s * (qrow[o + 4] as f32);
+                crow[o + 5] += s * (qrow[o + 5] as f32);
+                crow[o + 6] += s * (qrow[o + 6] as f32);
+                crow[o + 7] += s * (qrow[o + 7] as f32);
+            }
+            for o in chunks * 8..n {
+                crow[o] += s * (qrow[o] as f32);
+            }
+        }
+    }
+}
+
+/// y += x · (Q ⊙ scale) for a single input row — the quantized
+/// incremental-decode gemv, the int8 analog of [`gemv_into`].
+/// Commits to m = 1 over [`matmul_q8_into`]'s loops, so each row of a
+/// batched call is bit-identical to this kernel. **Accumulates** into
+/// `y` (callers seed it with the bias), allocates nothing.
+// lint: hot-path
+#[inline]
+pub fn gemv_q8_into(x: &[f32], q: &[i8], scale: &[f32], y: &mut [f32], k: usize, n: usize) {
+    debug_assert_eq!(x.len(), k, "gemv_q8_into: x len vs k");
+    debug_assert_eq!(q.len(), k * n, "gemv_q8_into: q len vs k*n");
+    debug_assert_eq!(y.len(), n, "gemv_q8_into: y len vs n");
+    matmul_q8_into(x, q, scale, y, 1, k, n);
+}
+
 /// C = A · (B ⊙ M), the masked-weight contraction, computed without
 /// materializing the O(k·n) masked copy of B. This is the
 /// `Linear::forward` hot path when an S₁ pruning mask is attached: the
@@ -295,6 +368,84 @@ mod tests {
             let want = matmul(&x, &w).add_bias(&bias);
             for (a, b) in y.iter().zip(&want.data) {
                 assert!((a - b).abs() < 1e-5 * (1.0 + a.abs()), "{a} vs {b}");
+            }
+        }
+    }
+
+    /// Row-scaled int8 quantization of a dense `[k, n]` matrix — the
+    /// same scheme `infer::kernels::QuantDense` uses, inlined so these
+    /// kernel tests stay layer-local.
+    fn quantize_rows(w: &Tensor) -> (Vec<i8>, Vec<f32>) {
+        let (k, n) = (w.rows(), w.cols());
+        let mut q = Vec::with_capacity(k * n);
+        let mut scale = Vec::with_capacity(k);
+        for r in 0..k {
+            let row = &w.data[r * n..(r + 1) * n];
+            let amax = row.iter().fold(0.0f32, |m, &v| m.max(v.abs()));
+            let s = if amax == 0.0 { 1.0 } else { amax / 127.0 };
+            scale.push(s);
+            for &v in row {
+                q.push((v / s).round() as i8);
+            }
+        }
+        (q, scale)
+    }
+
+    #[test]
+    fn matmul_q8_matches_dequantized_f32_matmul() {
+        let mut rng = Rng::new(10);
+        for &(m, k, n) in &[(1usize, 4usize, 4usize), (5, 16, 9), (8, 33, 17)] {
+            let a = Tensor::randn(&[m, k], 1.0, &mut rng);
+            let mut w = Tensor::randn(&[k, n], 1.0, &mut rng);
+            // Include a zero weight row (scale must default, not NaN).
+            for j in 0..n {
+                w.data[j] = 0.0;
+            }
+            let (q, scale) = quantize_rows(&w);
+            let mut deq = Tensor::zeros(&[k, n]);
+            for r in 0..k {
+                for j in 0..n {
+                    deq.data[r * n + j] = (q[r * n + j] as f32) * scale[r];
+                }
+            }
+            let mut c = vec![0.0f32; m * n];
+            matmul_q8_into(&a.data, &q, &scale, &mut c, m, k, n);
+            let want = matmul(&a, &deq);
+            for (x, y) in c.iter().zip(&want.data) {
+                assert!((x - y).abs() < 1e-4 * (1.0 + x.abs()), "{x} vs {y}");
+            }
+        }
+    }
+
+    #[test]
+    fn gemv_q8_accumulates_and_matches_batched_rows_bitwise() {
+        // The quantized fused sweep relies on per-row bit-identity
+        // between the m-row kernel and the single-row gemv, plus the
+        // seed-then-accumulate contract.
+        let mut rng = Rng::new(11);
+        for &(m, k, n) in &[(1usize, 7usize, 5usize), (4, 32, 17), (6, 19, 23)] {
+            let mut a = Tensor::randn(&[m, k], 0.8, &mut rng);
+            for (i, v) in a.data.iter_mut().enumerate() {
+                if i % 5 == 0 {
+                    *v = 0.0; // exercise the dead-activation skip
+                }
+            }
+            let w = Tensor::randn(&[k, n], 1.0, &mut rng);
+            let (q, scale) = quantize_rows(&w);
+            let bias: Vec<f32> = (0..n).map(|i| i as f32 * 0.01).collect();
+            let mut fused = vec![0.0f32; m * n];
+            for r in 0..m {
+                fused[r * n..(r + 1) * n].copy_from_slice(&bias);
+            }
+            matmul_q8_into(&a.data, &q, &scale, &mut fused, m, k, n);
+            for r in 0..m {
+                let mut want = bias.clone();
+                gemv_q8_into(&a.data[r * k..(r + 1) * k], &q, &scale, &mut want, k, n);
+                assert_eq!(
+                    &fused[r * n..(r + 1) * n],
+                    want.as_slice(),
+                    "row {r} diverged from per-row gemv_q8"
+                );
             }
         }
     }

@@ -2,9 +2,12 @@
 //!
 //! For a DSEE fine-tuned + pruned model, the compiled
 //! [`InferenceModel`] must reproduce the training-path
-//! `Transformer::forward` logits within 1e-4 under **every**
+//! `Transformer::forward` logits within 1e-4 under every **f32**
 //! [`MergePolicy`], including through the multi-worker serving
-//! coordinator. Wall-clock comparisons live in
+//! coordinator. The int8 policies (`MergedInt8`/`CsrInt8`) get the
+//! same treatment at the pinned [`QUANT_REL_TOL`] vs f32 plus a 1e-4
+//! bar vs their *own* full forward, and ride the same fused-engine
+//! self-consistency suites bit-exactly. Wall-clock comparisons live in
 //! `benches/perf_hotpath.rs` (never in tests — CI machines are noisy).
 
 use dsee::config::{DseeCfg, ModelCfg, TrainCfg};
@@ -24,6 +27,32 @@ use std::sync::Arc;
 use std::time::Duration;
 
 const POLICIES: [MergePolicy; 3] = [MergePolicy::Merged, MergePolicy::Csr, MergePolicy::Compact];
+
+/// Every policy including the int8-quantized ones. The f32 policies
+/// reproduce the training path at 1e-4; the quant policies are only
+/// *self*-consistent at bit level (fused vs solo, decode vs own
+/// forward) and track f32 at [`QUANT_REL_TOL`].
+const ALL_POLICIES: [MergePolicy; 5] = [
+    MergePolicy::Merged,
+    MergePolicy::Csr,
+    MergePolicy::Compact,
+    MergePolicy::MergedInt8,
+    MergePolicy::CsrInt8,
+];
+
+/// Int8 base + f32 side-path vs the all-f32 compiled model. Each
+/// quant policy pairs with the f32 policy of the same repr shape.
+const QUANT_PAIRS: [(MergePolicy, MergePolicy); 2] = [
+    (MergePolicy::MergedInt8, MergePolicy::Merged),
+    (MergePolicy::CsrInt8, MergePolicy::Csr),
+];
+
+/// Pinned quantization tolerance (see docs/QUANTIZATION.md): per-row
+/// symmetric int8 with f32 accumulate keeps every logit within 3e-2
+/// relative of the f32 compiled model on the tuned fixtures. Tightening
+/// this is a perf/accuracy trade recorded in the doc — don't loosen it
+/// without updating the doc.
+const QUANT_REL_TOL: f32 = 3e-2;
 
 /// A genuinely DSEE-*tuned* model: attach U/V/S₂, fine-tune briefly so
 /// every carrier is non-trivial, then prune S₁ at 50%.
@@ -196,7 +225,7 @@ fn interleaved_sessions_match_one_at_a_time_all_policies() {
     let ragged: Vec<Vec<u32>> = (0..5usize)
         .map(|r| (0..3 + r * 2).map(|i| ((r * 41 + i * 17 + 7) % 256) as u32).collect())
         .collect();
-    for policy in POLICIES {
+    for policy in ALL_POLICIES {
         let im = model.compile(policy);
         let solo: Vec<Vec<u32>> = ragged
             .iter()
@@ -242,7 +271,7 @@ fn fused_engine_matches_solo_generation_all_policies() {
     let ragged: Vec<Vec<u32>> = (0..6usize)
         .map(|r| (0..2 + r * 2).map(|i| ((r * 43 + i * 19 + 3) % 256) as u32).collect())
         .collect();
-    for policy in POLICIES {
+    for policy in ALL_POLICIES {
         let im = model.compile(policy);
         let solo: Vec<Vec<u32>> = ragged
             .iter()
@@ -278,7 +307,7 @@ fn fused_engine_join_retire_mid_flight_keeps_parity_all_policies() {
     // every continuation to its solo reference.
     let model = tuned_pruned_lm(false);
     let cap = model.cfg.max_seq;
-    for policy in POLICIES {
+    for policy in ALL_POLICIES {
         let im = model.compile(policy);
         let a: Vec<u32> = (0..5).map(|i| ((i * 17 + 2) % 256) as u32).collect();
         let b: Vec<u32> = (0..3).map(|i| ((i * 29 + 7) % 256) as u32).collect();
@@ -423,6 +452,138 @@ fn structurally_pruned_compiled_model_keeps_parity() {
                 );
             }
         }
+    }
+}
+
+#[test]
+fn quant_compiled_forward_matches_f32_within_pinned_tolerance() {
+    // The tentpole parity bar: int8-quantized base (dense or CSR) with
+    // f32 UV/S₂/gates must track the same-shaped f32 policy within
+    // QUANT_REL_TOL on every logit of a genuinely tuned + pruned model.
+    let model = tuned_pruned_model();
+    let seq = model.cfg.max_seq;
+    let ds = make_dataset(GlueTask::Sst2, 8, 36);
+    for (quant, f32_policy) in QUANT_PAIRS {
+        let cq = model.compile(quant);
+        let cf = model.compile(f32_policy);
+        for ex in &ds.examples {
+            let want = cf.forward(&ex.ids, 1, seq);
+            let got = cq.forward(&ex.ids, 1, seq);
+            assert_eq!(got.shape, want.shape);
+            for (a, b) in got.data.iter().zip(&want.data) {
+                assert!(
+                    (a - b).abs() < QUANT_REL_TOL * (1.0 + b.abs()),
+                    "{}: {a} vs f32 {b}",
+                    quant.label()
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn quant_kv_decode_matches_own_forward_and_tracks_f32() {
+    // Prefill + N×decode_step under the quant policies: the KV-cached
+    // logits must match the quant model's *own* full forward at 1e-4
+    // (projections go through the same int8 kernels in both paths, so
+    // only f32 attention accumulation order differs — the same slack
+    // the f32 suite pins), and track the training-path f32 forward at
+    // the pinned quant tolerance.
+    for with_prefix in [false, true] {
+        let model = tuned_pruned_lm(with_prefix);
+        let seq = 16.min(model.cfg.max_seq);
+        let ids: Vec<u32> = (0..seq).map(|i| ((i * 13 + 5) % 256) as u32).collect();
+        let (f32_want, _) = model.forward(&ids, 1, ids.len());
+        let p = model.n_prefix();
+        let v = model.cfg.vocab;
+        for (quant, _) in QUANT_PAIRS {
+            let compiled = model.compile(quant);
+            let own = compiled.forward(&ids, 1, ids.len());
+            assert_eq!(own.data.len(), f32_want.data.len());
+            let split = 5;
+            let mut sess = compiled.prefill(&ids[..split]);
+            let check = |logits: &[f32], token_idx: usize| {
+                let row = p + token_idx;
+                let seg_own = &own.data[row * v..(row + 1) * v];
+                let seg_f32 = &f32_want.data[row * v..(row + 1) * v];
+                for ((a, b), c) in logits.iter().zip(seg_own).zip(seg_f32) {
+                    assert!(
+                        (a - b).abs() < 1e-4 * (1.0 + b.abs()),
+                        "{} prefix={with_prefix} token {token_idx}: decode {a} vs own forward {b}",
+                        quant.label()
+                    );
+                    assert!(
+                        (a - c).abs() < QUANT_REL_TOL * (1.0 + c.abs()),
+                        "{} prefix={with_prefix} token {token_idx}: decode {a} vs f32 {c}",
+                        quant.label()
+                    );
+                }
+            };
+            check(sess.last_logits(), split - 1);
+            for (i, &tok) in ids.iter().enumerate().skip(split) {
+                sess.decode_step(&compiled, tok);
+                check(sess.last_logits(), i);
+            }
+        }
+    }
+}
+
+#[test]
+fn quant_generation_token_exact_on_well_separated_logits() {
+    // Tokens are discrete: wherever the f32 top-1 logit clears top-2 by
+    // more than the quant error budget, greedy decode must emit the
+    // *same* token under int8. Walk the f32 reference continuation and
+    // pin the prefix of steps whose margin dominates QUANT_REL_TOL;
+    // the tuned data-to-text fixture is near-deterministic, so the
+    // separated prefix must be non-trivial (fixture regression guard).
+    let model = tuned_pruned_lm(false);
+    let cap = model.cfg.max_seq;
+    let prompt: Vec<u32> = (0..6).map(|i| ((i * 29 + 3) % 256) as u32).collect();
+    let f32_im = model.compile(MergePolicy::Merged);
+    let want = f32_im.generate_greedy(&prompt, 12, cap).unwrap();
+    let p = model.n_prefix();
+    let v = model.cfg.vocab;
+    let mut sep_steps = 0;
+    let mut seqv = prompt.clone();
+    for &tok in &want {
+        let (logits, _) = model.forward(&seqv, 1, seqv.len());
+        let row = p + seqv.len() - 1;
+        let seg = &logits.data[row * v..(row + 1) * v];
+        let (mut top1, mut top2) = (f32::NEG_INFINITY, f32::NEG_INFINITY);
+        for &l in seg {
+            if l > top1 {
+                top2 = top1;
+                top1 = l;
+            } else if l > top2 {
+                top2 = l;
+            }
+        }
+        // Margin must dominate the worst-case quant perturbation of
+        // both contenders (2× the per-logit budget, with headroom).
+        if top1 - top2 < 8.0 * QUANT_REL_TOL * (1.0 + top1.abs()) {
+            break;
+        }
+        sep_steps += 1;
+        seqv.push(tok);
+    }
+    assert!(
+        sep_steps >= 2,
+        "fixture regression: only {sep_steps} well-separated greedy steps"
+    );
+    for (quant, _) in QUANT_PAIRS {
+        let got = model.compile(quant).generate_greedy(&prompt, 12, cap).unwrap();
+        assert!(
+            got.len() >= sep_steps,
+            "{}: ended after {} tokens, expected ≥ {sep_steps}",
+            quant.label(),
+            got.len()
+        );
+        assert_eq!(
+            &got[..sep_steps],
+            &want[..sep_steps],
+            "{}: diverged inside the well-separated prefix",
+            quant.label()
+        );
     }
 }
 

@@ -274,6 +274,93 @@ fn prop_grid_scheduler_returns_every_job_in_order() {
 }
 
 #[test]
+fn prop_quantization_roundtrip_error_bounded_by_half_scale() {
+    // For any matrix shape, per-row symmetric int8 quantization must
+    // reconstruct every element within scale/2 (round-to-nearest on a
+    // symmetric grid), every scale must be finite and positive, an
+    // all-zero row must quantize with scale exactly 1.0 (not NaN from
+    // 0/127), and — under `--features validate` — non-finite CSR
+    // values must be rejected before a scale is ever computed.
+    use dsee::infer::kernels::{CsrMatrix, QuantCsr, QuantDense};
+    check(
+        &Config {
+            cases: 30,
+            seed: 0x1A78,
+            max_shrink: 20,
+        },
+        &PairOf(UsizeIn(1, 8), UsizeIn(1, 9)),
+        |&(rows, cols)| {
+            let mut rng = Rng::new(0x1A78 ^ ((rows as u64) << 16) ^ cols as u64);
+            let mut w = Tensor::randn(&[rows, cols], 1.5, &mut rng);
+            // First row all zero: exercises the scale-1.0 fallback.
+            for j in 0..cols {
+                w.data[j] = 0.0;
+            }
+
+            let q = QuantDense::from_dense(&w);
+            if q.scale.len() != rows || q.q.len() != rows * cols {
+                return Err("quantized shape mismatch".into());
+            }
+            if q.scale[0] != 1.0 {
+                return Err(format!("all-zero row got scale {}", q.scale[0]));
+            }
+            for r in 0..rows {
+                let s = q.scale[r];
+                if !s.is_finite() || s <= 0.0 {
+                    return Err(format!("scale[{r}] = {s} not finite-positive"));
+                }
+                for c in 0..cols {
+                    let want = w.data[r * cols + c];
+                    let deq = q.q[r * cols + c] as f32 * s;
+                    if (deq - want).abs() > 0.5001 * s {
+                        return Err(format!(
+                            "dense ({r},{c}): |{deq} - {want}| > scale/2 = {}",
+                            0.5 * s
+                        ));
+                    }
+                }
+            }
+
+            let csr = CsrMatrix::from_dense(&w);
+            let qc = QuantCsr::from_csr(&csr);
+            if qc.scale.len() != rows {
+                return Err("csr scale length mismatch".into());
+            }
+            if qc.scale[0] != 1.0 {
+                return Err(format!("empty CSR row got scale {}", qc.scale[0]));
+            }
+            for r in 0..rows {
+                let s = qc.scale[r];
+                if !s.is_finite() || s <= 0.0 {
+                    return Err(format!("csr scale[{r}] = {s} not finite-positive"));
+                }
+                for e in qc.row_ptr[r]..qc.row_ptr[r + 1] {
+                    let want = csr.vals[e];
+                    let deq = qc.vals_q[e] as f32 * s;
+                    if (deq - want).abs() > 0.5001 * s {
+                        return Err(format!(
+                            "csr entry {e} (row {r}): |{deq} - {want}| > scale/2"
+                        ));
+                    }
+                }
+            }
+
+            #[cfg(feature = "validate")]
+            if !csr.vals.is_empty() {
+                for poison in [f32::NAN, f32::INFINITY, f32::NEG_INFINITY] {
+                    let mut bad = csr.clone();
+                    *bad.vals.last_mut().unwrap() = poison;
+                    if bad.validate().is_ok() {
+                        return Err(format!("non-finite value {poison} accepted"));
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
 fn prop_csr_validation_rejects_corruption() {
     // For any matrix shape, a CSR built by `from_dense` passes its own
     // structural validation, and each class of corruption — an
